@@ -1,0 +1,60 @@
+//! Green-AI scenario (paper §I, §VI-C): a campus IoT deployment where
+//! ENERGY is the key objective. Sets λ = 0.1 (energy-weighted objective)
+//! and compares scheduling 30% of devices (the paper's Green-AI
+//! recommendation) against scheduling everyone, reporting energy, time and
+//! message volume to the same target accuracy.
+//!
+//! Run: `cargo run --release --example green_ai_campus`
+
+use hfl::allocation::SolverOpts;
+use hfl::assignment::random::RoundRobin;
+use hfl::bench::Table;
+use hfl::experiments::common::{clusters_for, make_scheduler, SchedKind};
+use hfl::fl::{HflConfig, HflTrainer};
+use hfl::runtime::Engine;
+use hfl::scheduling::AuxModel;
+
+fn main() -> anyhow::Result<()> {
+    hfl::util::logging::init(1);
+    let engine = Engine::open(std::path::Path::new("artifacts"))?;
+    let target = 0.93;
+
+    let mut table = Table::new(&[
+        "H", "share", "iters", "final acc", "E (J)", "T (s)", "msgs (MB)",
+    ]);
+    for h in [30usize, 100] {
+        let cfg = HflConfig {
+            dataset: "fmnist".into(),
+            h,
+            lr: 0.05,
+            target_acc: target,
+            max_iters: 10,
+            test_size: 400,
+            frac_major: 0.8,
+            seed: 42,
+        };
+        let mut trainer = HflTrainer::with_default_topology(&engine, cfg)?;
+        trainer.topo.params.lambda = 0.1; // Green AI: energy-dominant
+        let clusters = clusters_for(
+            &engine, &trainer.topo, &trainer.templates, &trainer.device_data,
+            AuxModel::Mini, 10, 42,
+        )?;
+        let mut sched = make_scheduler(SchedKind::Ikc, Some(clusters), 100, h, 1)?;
+        let mut assigner = RoundRobin;
+        let res = trainer.run(&mut *sched, &mut assigner, &SolverOpts::default(), |r| {
+            println!("H={h} iter {} acc {:.3} E_i {:.1}J", r.iter, r.accuracy, r.e_i);
+        })?;
+        table.row(&[
+            h.to_string(),
+            format!("{}%", h),
+            res.converged_at.map_or("—".into(), |i| i.to_string()),
+            format!("{:.3}", res.final_accuracy()),
+            format!("{:.1}", res.total_e()),
+            format!("{:.1}", res.total_t()),
+            format!("{:.1}", res.total_msg_bytes() / 1e6),
+        ]);
+    }
+    println!("\nGreen-AI campus: 30% scheduling vs full participation (λ=0.1):");
+    table.print();
+    Ok(())
+}

@@ -1,0 +1,49 @@
+//! Quickstart: load the AOT artifacts, run one scheduled+assigned+allocated
+//! HFL global iteration, print accuracy and costs.
+//!
+//! Run: `cargo run --release --example quickstart` (after `make artifacts`)
+
+use std::time::Instant;
+
+use hfl::allocation::SolverOpts;
+use hfl::assignment::random::RoundRobin;
+use hfl::fl::{HflConfig, HflTrainer};
+use hfl::runtime::Engine;
+use hfl::scheduling::FedAvg;
+
+fn main() -> anyhow::Result<()> {
+    hfl::util::logging::init(1);
+    let t0 = Instant::now();
+    let engine = Engine::open(std::path::Path::new("artifacts"))?;
+    println!("engine open: {:.2}s", t0.elapsed().as_secs_f64());
+
+    let cfg = HflConfig {
+        dataset: "fmnist".into(),
+        h: 30,
+        lr: 0.05,
+        target_acc: 1.0,
+        max_iters: 10,
+        test_size: 300,
+        frac_major: 0.8,
+        seed: 7,
+    };
+    let mut trainer = HflTrainer::with_default_topology(&engine, cfg)?;
+    let mut sched = FedAvg::new(100, 30, 1);
+    let mut assigner = RoundRobin;
+    let res = trainer.run(&mut sched, &mut assigner, &SolverOpts::default(), |r| {
+        println!(
+            "iter {} acc {:.3} loss {:.3} T_i {:.1}s E_i {:.1}J ({} devices)",
+            r.iter, r.accuracy, r.train_loss, r.t_i, r.e_i, r.n_scheduled
+        );
+    })?;
+    let s = engine.stats();
+    println!(
+        "done: final acc {:.3}; engine {} calls, exec {:.2}s, compile {:.2}s, wall {:.2}s",
+        res.final_accuracy(),
+        s.calls,
+        s.exec_secs,
+        s.compile_secs,
+        t0.elapsed().as_secs_f64()
+    );
+    Ok(())
+}

@@ -1,0 +1,202 @@
+"""AOT compile path: lower every L2/L1 computation to HLO text + manifest.
+
+Run once via `make artifacts`:
+
+    cd python && python -m compile.aot --out ../artifacts
+
+Interchange format is HLO **text**, not a serialized HloModuleProto: jax
+≥0.5 emits protos with 64-bit instruction ids which the `xla` crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/load_hlo/).
+
+Emitted artifacts (all f32 unless noted):
+
+| name                  | signature |
+|-----------------------|-----------|
+| local_round_<ds>      | (params[DB,P], xs[DB,L,B,C,H,W], ys[DB,L,B,10], lr) -> (params'[DB,P], loss[DB]) |
+| eval_<ds>             | (params[P], x[EB,C,H,W]) -> logits[EB,10] |
+| mini_local_round      | (params[DB,Pm], xs[DB,L,B,1,10,10], ys[DB,L,B,10], lr) -> (params'[DB,Pm], loss[DB]) |
+| dqn_q_all_h<H>        | (theta[Pq], feats[H,F]) -> q[H,M] |
+| dqn_train             | (theta, theta_tgt, m, v, step, feats[O,H,F], t[O]i32, a[O]i32, r[O], done[O], gamma) -> (theta', m', v', loss) |
+
+plus `manifest.json` describing parameter layouts, shapes and constants so
+the Rust coordinator is fully self-describing at runtime.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import dqn, model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def lower_one(fn, specs, path: str, verbose: bool = True) -> dict:
+    t0 = time.time()
+    lowered = jax.jit(fn).lower(*specs)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    if verbose:
+        print(f"  wrote {os.path.basename(path):32s} "
+              f"{len(text) / 1e6:7.2f} MB  ({time.time() - t0:5.1f}s)")
+    return {
+        "file": os.path.basename(path),
+        "inputs": [{"shape": list(s.shape), "dtype": str(s.dtype)}
+                   for s in specs],
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--local-batch", type=int, default=8,
+                    help="B: minibatch per local SGD step (paper: full batch;"
+                         " see DESIGN.md §5)")
+    ap.add_argument("--local-iters", type=int, default=5, help="L (Table I)")
+    ap.add_argument("--device-slots", type=int, default=8,
+                    help="DB: vmapped device slots per local_round call")
+    ap.add_argument("--eval-batch", type=int, default=250)
+    ap.add_argument("--dqn-hid", type=int, default=32,
+                    help="LSTM hidden (paper: 256; default shrunk for CPU"
+                         " wall-clock, see DESIGN.md §5)")
+    ap.add_argument("--dqn-fc", type=int, default=32)
+    ap.add_argument("--dqn-batch", type=int, default=64,
+                    help="O: replay minibatch (paper: 128)")
+    ap.add_argument("--dqn-lr", type=float, default=1e-3)
+    ap.add_argument("--n-edges", type=int, default=5, help="M (Table I)")
+    ap.add_argument("--horizons", type=int, nargs="+",
+                    default=[10, 30, 50, 100],
+                    help="H values for which q_all inference is lowered")
+    ap.add_argument("--train-horizon", type=int, default=50,
+                    help="H used by Algorithm 5 (paper: 50)")
+    ap.add_argument("--skip-cifar", action="store_true")
+    args = ap.parse_args()
+
+    out = args.out
+    os.makedirs(out, exist_ok=True)
+    db, L, B, eb = (args.device_slots, args.local_iters, args.local_batch,
+                    args.eval_batch)
+
+    manifest = {
+        "consts": {
+            "db": db, "l": L, "b": B, "eb": eb,
+            "n_edges": args.n_edges,
+            "feat": args.n_edges + 3,
+            "o": args.dqn_batch,
+            "dqn_hid": args.dqn_hid,
+            "dqn_fc": args.dqn_fc,
+            "dqn_lr": args.dqn_lr,
+            "train_horizon": args.train_horizon,
+            "horizons": args.horizons,
+            "num_classes": model.NUM_CLASSES,
+        },
+        "models": {},
+        "artifacts": {},
+    }
+
+    datasets = [model.FMNIST] if args.skip_cifar else [model.FMNIST,
+                                                       model.CIFAR]
+
+    # --- CNN local rounds + eval -----------------------------------------
+    for cfg in datasets:
+        leaves = cfg.leaves()
+        p = model.param_count(leaves)
+        manifest["models"][cfg.name] = {
+            "params": p,
+            "leaves": model.leaf_layout(leaves),
+            "img": cfg.img, "in_ch": cfg.in_ch,
+            "bytes": 4 * p,
+        }
+        print(f"[{cfg.name}] params={p} ({4 * p / 1024:.0f} KB)")
+
+        lr_fn = model.make_local_round_batched(cfg, db)
+        specs = [
+            spec((db, p)),
+            spec((db, L, B, cfg.in_ch, cfg.img, cfg.img)),
+            spec((db, L, B, model.NUM_CLASSES)),
+            spec(()),
+        ]
+        manifest["artifacts"][f"local_round_{cfg.name}"] = lower_one(
+            lr_fn, specs, os.path.join(out, f"local_round_{cfg.name}.hlo.txt"))
+
+        ev_fn = model.make_eval(cfg)
+        specs = [spec((p,)), spec((eb, cfg.in_ch, cfg.img, cfg.img))]
+        manifest["artifacts"][f"eval_{cfg.name}"] = lower_one(
+            ev_fn, specs, os.path.join(out, f"eval_{cfg.name}.hlo.txt"))
+
+    # --- mini model (IKC clustering) --------------------------------------
+    mini_leaves = model.MINI.leaves()
+    pm = model.param_count(mini_leaves)
+    manifest["models"]["mini"] = {
+        "params": pm,
+        "leaves": model.leaf_layout(mini_leaves),
+        "img": model.MINI.img, "in_ch": model.MINI.in_ch,
+        "bytes": 4 * pm,
+    }
+    print(f"[mini] params={pm} ({4 * pm / 1024:.1f} KB)")
+    mini_fn = model.make_mini_local_round_batched(db)
+    specs = [
+        spec((db, pm)),
+        spec((db, L, B, 1, model.MINI.img, model.MINI.img)),
+        spec((db, L, B, model.NUM_CLASSES)),
+        spec(()),
+    ]
+    manifest["artifacts"]["mini_local_round"] = lower_one(
+        mini_fn, specs, os.path.join(out, "mini_local_round.hlo.txt"))
+
+    # --- D3QN --------------------------------------------------------------
+    qcfg = dqn.DqnConfig(args.n_edges, args.train_horizon,
+                         hid=args.dqn_hid, fc=args.dqn_fc)
+    pq = dqn.param_count(qcfg)
+    manifest["models"]["dqn"] = {
+        "params": pq,
+        "leaves": [{"name": n, "shape": list(s)} for n, s in qcfg.leaves()],
+        "bytes": 4 * pq,
+    }
+    print(f"[dqn] params={pq} ({4 * pq / 1024:.0f} KB)")
+
+    for h in args.horizons:
+        hcfg = dqn.DqnConfig(args.n_edges, h, hid=args.dqn_hid,
+                             fc=args.dqn_fc)
+        q_fn = dqn.make_qvalues_all(hcfg)
+        specs = [spec((pq,)), spec((h, hcfg.feat))]
+        manifest["artifacts"][f"dqn_q_all_h{h}"] = lower_one(
+            q_fn, specs, os.path.join(out, f"dqn_q_all_h{h}.hlo.txt"))
+
+    o = args.dqn_batch
+    train_fn = dqn.make_train_step(qcfg, lr=args.dqn_lr)
+    specs = [
+        spec((pq,)), spec((pq,)), spec((pq,)), spec((pq,)), spec(()),
+        spec((o, args.train_horizon, qcfg.feat)),
+        spec((o,), jnp.int32), spec((o,), jnp.int32),
+        spec((o,)), spec((o,)), spec(()),
+    ]
+    manifest["artifacts"]["dqn_train"] = lower_one(
+        train_fn, specs, os.path.join(out, "dqn_train.hlo.txt"))
+
+    with open(os.path.join(out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"manifest -> {os.path.join(out, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,181 @@
+"""L2 — Dueling Double Deep Q-Network (D³QN) with a BiLSTM agent (§V).
+
+State (eq. 25) is `((χ_1..χ_t), (χ_t..χ_H))`: the *fixed* per-episode device
+feature sequence split at position t. Since actions never enter the state,
+one forward LSTM scan produces the prefix hidden for every t, and one
+backward scan produces the suffix hidden for every t. `qvalues_all` exploits
+this: a single bidirectional scan + vmapped dueling heads yields Q[H, M] for
+the whole episode — the Rust request path performs device assignment for an
+entire global iteration with ONE PJRT call, and the train step needs two
+(online + target) net evaluations per minibatch instead of 3·H.
+
+Architecture per the paper (Fig. 2): one LSTM module with shared parameters
+φ for both directions, hidden size `hid`; a shared linear layer; a
+state-value head ρ (V) and an advantage head ζ (A); dueling combination
+eq. (20); double-DQN target eq. (22); Adam optimizer.
+
+The paper uses hid=256. The default AOT artifact uses hid=64 to keep the
+CPU-interpret wall-clock of Algorithm 5 practical; `aot.py --dqn-hid 256`
+lowers the paper-sized network (see DESIGN.md §5 substitutions).
+
+All dense math (LSTM gates, heads) routes through the L1 Pallas kernel.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.matmul import linear
+
+
+class DqnConfig:
+    def __init__(self, n_edges: int, horizon: int, hid: int = 64,
+                 fc: int = 64):
+        self.n_edges = n_edges      # M — action space size
+        self.horizon = horizon      # H — episode length (devices/iteration)
+        self.feat = n_edges + 3     # F — features per device (eq. 24)
+        self.hid = hid
+        self.fc = fc
+
+    def leaves(self) -> List[Tuple[str, Tuple[int, ...]]]:
+        f, h = self.feat, self.hid
+        return [
+            # φ — shared LSTM cell, gate order [i, f, g, o]
+            ("lstm_wi", (f, 4 * h)),
+            ("lstm_wh", (h, 4 * h)),
+            ("lstm_b", (4 * h,)),
+            # φ — shared trunk on [h_fwd ; h_bwd]
+            ("fc_w", (2 * h, self.fc)),
+            ("fc_b", (self.fc,)),
+            # ρ — state-value head
+            ("v_w", (self.fc, 1)),
+            ("v_b", (1,)),
+            # ζ — advantage head
+            ("a_w", (self.fc, self.n_edges)),
+            ("a_b", (self.n_edges,)),
+        ]
+
+
+def param_count(cfg: DqnConfig) -> int:
+    return sum(int(math.prod(s)) for _, s in cfg.leaves())
+
+
+def unflatten(flat, cfg: DqnConfig) -> Dict[str, jnp.ndarray]:
+    params, off = {}, 0
+    for name, shape in cfg.leaves():
+        size = int(math.prod(shape))
+        params[name] = flat[off:off + size].reshape(shape)
+        off += size
+    return params
+
+
+def _lstm_cell(p, x, h, c):
+    """One LSTM step on a (B, F) slice; gates via the Pallas kernel."""
+    xh = jnp.concatenate([x, h], axis=-1)
+    w = jnp.concatenate([p["lstm_wi"], p["lstm_wh"]], axis=0)
+    gates = linear(xh, w, p["lstm_b"], "none")
+    i, f, g, o = jnp.split(gates, 4, axis=-1)
+    i, f, o = jax.nn.sigmoid(i), jax.nn.sigmoid(f), jax.nn.sigmoid(o)
+    g = jnp.tanh(g)
+    c2 = f * c + i * g
+    h2 = o * jnp.tanh(c2)
+    return h2, c2
+
+
+def qvalues_all(flat, feats, cfg: DqnConfig):
+    """Q-values for every split position of one episode.
+
+    feats: (H, F) normalized device features (eq. 24, already min-max
+    normalized by the caller — the Rust coordinator).
+    Returns Q: (H, M) where row t is Q(s_t, ·) per eqs. (20)/(25).
+    """
+    p = unflatten(flat, cfg)
+    h0 = jnp.zeros((1, cfg.hid), jnp.float32)
+    c0 = jnp.zeros((1, cfg.hid), jnp.float32)
+
+    def fwd_step(carry, x):
+        h, c = carry
+        h2, c2 = _lstm_cell(p, x[None, :], h, c)
+        return (h2, c2), h2[0]
+
+    # prefix hiddens: hs_f[j] encodes χ_1..χ_{j+1}  (state t = j+1 1-based)
+    _, hs_f = jax.lax.scan(fwd_step, (h0, c0), feats)
+    # suffix hiddens: hs_b[j] encodes χ_{j+1}..χ_H
+    _, hs_b_rev = jax.lax.scan(fwd_step, (h0, c0), feats[::-1])
+    hs_b = hs_b_rev[::-1]
+
+    hcat = jnp.concatenate([hs_f, hs_b], axis=-1)        # (H, 2*hid)
+    trunk = linear(hcat, p["fc_w"], p["fc_b"], "relu")    # (H, fc)
+    v = linear(trunk, p["v_w"], p["v_b"], "none")         # (H, 1)
+    a = linear(trunk, p["a_w"], p["a_b"], "none")         # (H, M)
+    return v + a - a.mean(axis=-1, keepdims=True)         # eq. (20)
+
+
+def make_qvalues_all(cfg: DqnConfig):
+    def fn(flat, feats):
+        return qvalues_all(flat, feats, cfg)
+
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# Double-DQN + Adam train step (eqs. 21–22), whole-step lowered to one HLO.
+# ---------------------------------------------------------------------------
+
+
+def td_loss(flat, flat_tgt, feats_b, t_b, a_b, r_b, done_b, gamma, cfg):
+    """Minibatch TD loss. feats_b: (O,H,F); t_b, a_b: (O,) i32; r/done: (O,)."""
+    o = feats_b.shape[0]
+    rows = jnp.arange(o)
+
+    q_on = jax.vmap(lambda f: qvalues_all(flat, f, cfg))(feats_b)   # (O,H,M)
+    q_tg = jax.vmap(lambda f: qvalues_all(flat_tgt, f, cfg))(feats_b)
+
+    t_next = jnp.minimum(t_b + 1, cfg.horizon - 1)
+    # double DQN: argmax under the online net, value under the target net
+    a_star = jnp.argmax(q_on[rows, t_next], axis=-1)
+    q_next = q_tg[rows, t_next, a_star]
+    target = r_b + gamma * (1.0 - done_b) * q_next
+    target = jax.lax.stop_gradient(target)
+
+    q_sa = q_on[rows, t_b, a_b]
+    return jnp.mean((target - q_sa) ** 2)
+
+
+def make_train_step(cfg: DqnConfig, lr: float = 1e-3, beta1: float = 0.9,
+                    beta2: float = 0.999, eps: float = 1e-8):
+    """(θ, θ_tgt, m, v, step, feats, t, a, r, done, gamma)
+       -> (θ', m', v', loss).  Adam on the flat parameter vector."""
+
+    def fn(flat, flat_tgt, m, v, step, feats_b, t_b, a_b, r_b, done_b, gamma):
+        loss, g = jax.value_and_grad(td_loss)(
+            flat, flat_tgt, feats_b, t_b, a_b, r_b, done_b, gamma, cfg
+        )
+        step = step + 1.0
+        m2 = beta1 * m + (1.0 - beta1) * g
+        v2 = beta2 * v + (1.0 - beta2) * g * g
+        mhat = m2 / (1.0 - beta1 ** step)
+        vhat = v2 / (1.0 - beta2 ** step)
+        flat2 = flat - lr * mhat / (jnp.sqrt(vhat) + eps)
+        return flat2, m2, v2, loss
+
+    return fn
+
+
+def init_flat(key, cfg: DqnConfig):
+    """Glorot-uniform for weights, zeros for biases (oracle for Rust init)."""
+    chunks = []
+    for name, shape in cfg.leaves():
+        key, sub = jax.random.split(key)
+        if name.endswith("_b"):
+            chunks.append(jnp.zeros(shape, jnp.float32).reshape(-1))
+        else:
+            fan_in, fan_out = shape[0], shape[-1]
+            lim = math.sqrt(6.0 / (fan_in + fan_out))
+            chunks.append(jax.random.uniform(
+                sub, shape, jnp.float32, -lim, lim).reshape(-1))
+    return jnp.concatenate(chunks)

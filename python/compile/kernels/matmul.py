@@ -1,0 +1,157 @@
+"""L1 — Pallas fused matmul(+bias+activation) kernel.
+
+This is the compute hot-spot of the HFL reproduction: every dense layer and
+every convolution (via im2col) in the L2 jax models flows through this
+kernel, in both the forward and backward pass (the backward pass is two more
+invocations of the same kernel via a custom VJP).
+
+TPU-idiomatic structure (see DESIGN.md §Hardware-Adaptation):
+
+* 3-D grid ``(M/bm, N/bn, K/bk)`` — the K axis is the innermost, sequential
+  ("arbitrary") dimension so the (bm, bn) accumulator tile stays resident in
+  VMEM across K steps.
+* MXU-aligned default tiles of 128×128×128, shrunk per call so tiny layers
+  (e.g. the 25-row im2col K of a 5×5 conv) do not pad to absurdity.
+* fp32 accumulate (``preferred_element_type``), bias add + activation fused
+  into the final K step so the tile is written to HBM exactly once.
+
+``interpret=True`` is mandatory on this image: real-TPU lowering emits a
+Mosaic custom-call the CPU PJRT plugin cannot execute. Interpret mode lowers
+the kernel to plain HLO while preserving the block structure, so the
+artifact runs anywhere; real-TPU performance is *estimated* from the block
+shapes in DESIGN.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-aligned tile for real-TPU compilation. One 128x128 fp32 accumulator
+# tile (64 KiB) + two input tiles (64 KiB each) in VMEM — ~192 KiB/core,
+# far below the ~16 MiB budget, leaving room for double-buffering the
+# HBM->VMEM pipeline.
+TPU_BLOCK = 128
+
+# CPU-interpret tile: grid iterations lower to sequential dynamic-slice
+# loops that XLA:CPU cannot fuse or vectorize across (measured 10-30x
+# slowdown vs a single fused dot). On CPU we therefore tile only matrices
+# that exceed this edge, so almost every layer runs as one grid cell =
+# one fused XLA dot. The BlockSpec schedule is identical code — only the
+# tile size changes per backend (DESIGN.md §Perf / §Hardware-Adaptation).
+CPU_BLOCK = 2048
+
+DEFAULT_BLOCK = CPU_BLOCK
+
+_ACTIVATIONS = ("none", "relu")
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _pick_block(dim: int, preferred: int) -> int:
+    """Whole (8-aligned) dim if it fits in `preferred`, else `preferred`."""
+    if dim <= preferred:
+        return _ceil_to(dim, 8)
+    return preferred
+
+
+def _mm_kernel(x_ref, w_ref, b_ref, o_ref, *, nk: int, act: str):
+    """One (bm, bn) output tile; K accumulated across grid axis 2."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _finish():
+        r = o_ref[...] + b_ref[...][None, :]
+        if act == "relu":
+            r = jnp.maximum(r, 0.0)
+        o_ref[...] = r
+
+
+def matmul_padded(x, w, b, act: str, bm: int, bn: int, bk: int):
+    """Pallas call on block-aligned operands. Shapes must divide evenly."""
+    m, k = x.shape
+    _, n = w.shape
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        functools.partial(_mm_kernel, nk=grid[2], act=act),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, s: (i, s)),
+            pl.BlockSpec((bk, bn), lambda i, j, s: (s, j)),
+            pl.BlockSpec((bn,), lambda i, j, s: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, w, b)
+
+
+def matmul(x, w, b=None, act: str = "none", block: int = DEFAULT_BLOCK):
+    """act(x @ w + b) through the Pallas kernel, with automatic padding.
+
+    x: (M, K) f32, w: (K, N) f32, b: (N,) f32 or None.
+    """
+    if act not in _ACTIVATIONS:
+        raise ValueError(f"unknown activation {act!r}")
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    if b is None:
+        b = jnp.zeros((n,), jnp.float32)
+
+    bm = _pick_block(m, block)
+    bn = _pick_block(n, block)
+    bk = _pick_block(k, block)
+    mp, np_, kp = _ceil_to(m, bm), _ceil_to(n, bn), _ceil_to(k, bk)
+
+    xp = jnp.pad(x, ((0, mp - m), (0, kp - k))) if (mp, kp) != (m, k) else x
+    wp = jnp.pad(w, ((0, kp - k), (0, np_ - n))) if (kp, np_) != (k, n) else w
+    bp = jnp.pad(b, (0, np_ - n)) if np_ != n else b
+
+    out = matmul_padded(xp, wp, bp, act, bm, bn, bk)
+    if (mp, np_) != (m, n):
+        out = out[:m, :n]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Differentiable fused linear layer: forward AND backward run on the kernel.
+# relu gradient is recovered from the saved post-activation output
+# (out > 0 <=> pre-activation > 0), so no pre-activation tensor is kept.
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def linear(x, w, b, act: str = "none", block: int = DEFAULT_BLOCK):
+    """Differentiable act(x @ w + b); both passes on the Pallas kernel."""
+    return matmul(x, w, b, act, block)
+
+
+def _linear_fwd(x, w, b, act, block):
+    out = matmul(x, w, b, act, block)
+    return out, (x, w, out)
+
+
+def _linear_bwd(act, block, res, g):
+    x, w, out = res
+    if act == "relu":
+        g = g * (out > 0).astype(g.dtype)
+    dx = matmul(g, w.T, None, "none", block)
+    dw = matmul(x.T, g, None, "none", block)
+    db = g.sum(axis=0)
+    return dx, dw, db
+
+
+linear.defvjp(_linear_fwd, _linear_bwd)

@@ -1,0 +1,59 @@
+"""Pure-jnp oracle for the L1 Pallas kernel and the L2 model blocks.
+
+Everything here is deliberately the most boring possible jnp implementation;
+pytest asserts the Pallas kernel (and the model built on it) matches these
+within float tolerance.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(x, w, b=None, act: str = "none"):
+    out = x @ w
+    if b is not None:
+        out = out + b[None, :]
+    if act == "relu":
+        out = jnp.maximum(out, 0.0)
+    elif act != "none":
+        raise ValueError(act)
+    return out
+
+
+def conv2d_ref(x, w, b):
+    """Valid 2-D convolution, NCHW x OIHW -> NCHW, via lax.conv."""
+    out = jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(1, 1),
+        padding="VALID",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+    return out + b[None, :, None, None]
+
+
+def maxpool2_ref(x):
+    """2x2 max pool, NCHW, floor semantics."""
+    n, c, h, w = x.shape
+    h2, w2 = h // 2, w // 2
+    x = x[:, :, : h2 * 2, : w2 * 2]
+    x = x.reshape(n, c, h2, 2, w2, 2)
+    return x.max(axis=(3, 5))
+
+
+def softmax_xent_ref(logits, y_onehot):
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -(y_onehot * logp).sum(axis=-1).mean()
+
+
+def lstm_cell_ref(x, h, c, wi, wh, b):
+    """Standard LSTM cell; gate order [i, f, g, o]."""
+    gates = x @ wi + h @ wh + b
+    i, f, g, o = jnp.split(gates, 4, axis=-1)
+    i, f, o = jax.nn.sigmoid(i), jax.nn.sigmoid(f), jax.nn.sigmoid(o)
+    g = jnp.tanh(g)
+    c2 = f * c + i * g
+    h2 = o * jnp.tanh(c2)
+    return h2, c2

@@ -1,0 +1,310 @@
+"""L2 — the HFL models in JAX, built on the L1 Pallas kernel.
+
+Two models, per the paper §VI:
+
+* **HFL CNN** — two 5×5 conv layers (15, 28 output channels), each followed
+  by 2×2 max pooling, then two fully-connected layers. Hidden width is
+  chosen so the flat parameter vector matches the paper's model sizes
+  (z ≈ 448 KB FashionMNIST, ≈ 882 KB CIFAR-10).
+* **Mini model ξ** (IKC, §IV-B) — one 2×2 conv (16 ch) + 2×2 pool + one
+  linear layer on 1×10×10 crops; ≈10 KB of parameters, used only for
+  device clustering (Algorithm 2).
+
+All convolutions are im2col + the Pallas fused matmul; both FC layers are
+the Pallas kernel directly, so the entire fwd/bwd FLOP volume is on the L1
+hot path.
+
+Parameters cross the Rust↔HLO boundary as a single flat f32 vector; the
+leaf layout (name/shape/offset) is exported in artifacts/manifest.json so
+the Rust coordinator can He-initialize [41] and aggregate per eq. (2)/(3)
+without ever deserializing a pytree.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.matmul import linear
+
+# ---------------------------------------------------------------------------
+# Model configurations
+# ---------------------------------------------------------------------------
+
+NUM_CLASSES = 10
+
+
+class CnnConfig:
+    """Static architecture description for the HFL CNN."""
+
+    def __init__(self, name: str, in_ch: int, img: int, c1: int, c2: int,
+                 hidden: int, ksize: int = 5):
+        self.name = name
+        self.in_ch = in_ch
+        self.img = img
+        self.c1 = c1
+        self.c2 = c2
+        self.hidden = hidden
+        self.ksize = ksize
+        s1 = img - ksize + 1          # after conv1
+        p1 = s1 // 2                  # after pool1
+        s2 = p1 - ksize + 1           # after conv2
+        self.feat_hw = s2 // 2        # after pool2
+        self.feat = self.feat_hw * self.feat_hw * c2
+
+    def leaves(self) -> List[Tuple[str, Tuple[int, ...]]]:
+        k = self.ksize
+        return [
+            ("conv1_w", (self.c1, self.in_ch, k, k)),
+            ("conv1_b", (self.c1,)),
+            ("conv2_w", (self.c2, self.c1, k, k)),
+            ("conv2_b", (self.c2,)),
+            ("fc1_w", (self.feat, self.hidden)),
+            ("fc1_b", (self.hidden,)),
+            ("fc2_w", (self.hidden, NUM_CLASSES)),
+            ("fc2_b", (NUM_CLASSES,)),
+        ]
+
+
+# Hidden widths tuned so 4*n_params matches the paper's Table I model sizes
+# (448 KB / 882 KB); see DESIGN.md §5.
+FMNIST = CnnConfig("fmnist", in_ch=1, img=28, c1=15, c2=28, hidden=220)
+CIFAR = CnnConfig("cifar", in_ch=3, img=32, c1=15, c2=28, hidden=295)
+
+
+class MiniConfig:
+    """The IKC auxiliary mini model ξ: 2×2 conv(16) + pool + linear."""
+
+    name = "mini"
+    in_ch = 1
+    img = 10
+    ch = 16
+    ksize = 2
+
+    def __init__(self):
+        s1 = self.img - self.ksize + 1   # 9
+        self.feat_hw = s1 // 2           # 4
+        self.feat = self.feat_hw * self.feat_hw * self.ch  # 256
+
+    def leaves(self) -> List[Tuple[str, Tuple[int, ...]]]:
+        k = self.ksize
+        return [
+            ("conv1_w", (self.ch, self.in_ch, k, k)),
+            ("conv1_b", (self.ch,)),
+            ("fc_w", (self.feat, NUM_CLASSES)),
+            ("fc_b", (NUM_CLASSES,)),
+        ]
+
+
+MINI = MiniConfig()
+
+# ---------------------------------------------------------------------------
+# Flat-vector parameter handling
+# ---------------------------------------------------------------------------
+
+
+def leaf_layout(leaves) -> List[Dict]:
+    """[{name, shape, offset, size}] in flat-vector order."""
+    out, off = [], 0
+    for name, shape in leaves:
+        size = int(math.prod(shape))
+        out.append({"name": name, "shape": list(shape),
+                    "offset": off, "size": size})
+        off += size
+    return out
+
+
+def param_count(leaves) -> int:
+    return sum(int(math.prod(s)) for _, s in leaves)
+
+
+def unflatten(flat, leaves):
+    params, off = {}, 0
+    for name, shape in leaves:
+        size = int(math.prod(shape))
+        params[name] = flat[off:off + size].reshape(shape)
+        off += size
+    return params
+
+
+def flatten(params, leaves):
+    return jnp.concatenate([params[name].reshape(-1) for name, _ in leaves])
+
+
+# The classifier head is initialized 10× smaller than He: with full-scale
+# He the initial logits have std >> 1 (loss ≈ 4.6 instead of ln 10) and
+# plain SGD at the paper's learning rates stalls. Standard practice; the
+# Rust init (rust/src/model/mod.rs) applies the same rule.
+OUTPUT_SCALE = 0.1
+_OUTPUT_LEAVES = ("fc2_w", "fc_w")
+
+
+def init_flat(key, leaves):
+    """He-normal init [41] for weights, zeros for biases (oracle for Rust)."""
+    chunks = []
+    for name, shape in leaves:
+        key, sub = jax.random.split(key)
+        if name.endswith("_b"):
+            chunks.append(jnp.zeros(shape, jnp.float32).reshape(-1))
+        else:
+            if len(shape) == 4:           # OIHW conv
+                fan_in = shape[1] * shape[2] * shape[3]
+            else:                          # (in, out) dense
+                fan_in = shape[0]
+            std = math.sqrt(2.0 / fan_in)
+            if name in _OUTPUT_LEAVES:
+                std *= OUTPUT_SCALE
+            chunks.append(
+                (jax.random.normal(sub, shape, jnp.float32) * std).reshape(-1)
+            )
+    return jnp.concatenate(chunks)
+
+
+# ---------------------------------------------------------------------------
+# Building blocks (all matmuls on the Pallas kernel)
+# ---------------------------------------------------------------------------
+
+
+def im2col(x, k: int):
+    """NCHW -> (N*H'*W', C*k*k) patch matrix for a valid k×k conv.
+
+    The k×k static unroll of slices lowers to k² strided slices + one
+    concatenate — XLA fuses this with the downstream (Pallas) matmul's
+    HBM→VMEM staging.
+    """
+    n, c, h, w = x.shape
+    ho, wo = h - k + 1, w - k + 1
+    cols = []
+    for di in range(k):
+        for dj in range(k):
+            cols.append(x[:, :, di:di + ho, dj:dj + wo])
+    # (k*k, N, C, H', W') -> (N, H', W', C, k*k)
+    patches = jnp.stack(cols, axis=0).transpose(1, 3, 4, 2, 0)
+    return patches.reshape(n * ho * wo, c * k * k), (n, ho, wo)
+
+
+def conv2d(x, w_oihw, b, act: str):
+    """Valid conv as im2col + Pallas fused matmul. NCHW in, NCHW out."""
+    oc, ic, k, _ = w_oihw.shape
+    mat, (n, ho, wo) = im2col(x, k)
+    # OIHW -> (C*k*k, O), matching the im2col column order (C, k*k)
+    wmat = w_oihw.transpose(1, 2, 3, 0).reshape(ic * k * k, oc)
+    out = linear(mat, wmat, b, act)
+    return out.reshape(n, ho, wo, oc).transpose(0, 3, 1, 2)
+
+
+def maxpool2(x):
+    n, c, h, w = x.shape
+    h2, w2 = h // 2, w // 2
+    x = x[:, :, : h2 * 2, : w2 * 2].reshape(n, c, h2, 2, w2, 2)
+    return x.max(axis=(3, 5))
+
+
+def softmax_xent(logits, y_onehot):
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -(y_onehot * logp).sum(axis=-1).mean()
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+
+def cnn_forward(flat, x, cfg: CnnConfig):
+    """flat params + x[N, C, H, W] -> logits[N, 10]."""
+    p = unflatten(flat, cfg.leaves())
+    h = conv2d(x, p["conv1_w"], p["conv1_b"], "relu")
+    h = maxpool2(h)
+    h = conv2d(h, p["conv2_w"], p["conv2_b"], "relu")
+    h = maxpool2(h)
+    h = h.transpose(0, 2, 3, 1).reshape(x.shape[0], cfg.feat)
+    h = linear(h, p["fc1_w"], p["fc1_b"], "relu")
+    return linear(h, p["fc2_w"], p["fc2_b"], "none")
+
+
+def mini_forward(flat, x, cfg: MiniConfig = MINI):
+    p = unflatten(flat, cfg.leaves())
+    h = conv2d(x, p["conv1_w"], p["conv1_b"], "relu")
+    h = maxpool2(h)
+    h = h.transpose(0, 2, 3, 1).reshape(x.shape[0], cfg.feat)
+    return linear(h, p["fc_w"], p["fc_b"], "none")
+
+
+def cnn_loss(flat, x, y_onehot, cfg):
+    return softmax_xent(cnn_forward(flat, x, cfg), y_onehot)
+
+
+def mini_loss(flat, x, y_onehot, cfg: MiniConfig = MINI):
+    return softmax_xent(mini_forward(flat, x, cfg), y_onehot)
+
+
+# ---------------------------------------------------------------------------
+# Local training round (eq. 1): L SGD steps over per-step minibatches.
+# ---------------------------------------------------------------------------
+
+
+def local_round(flat, xs, ys, lr, loss_fn):
+    """lax.scan of L SGD steps. xs: [L, B, ...], ys: [L, B, 10].
+
+    Returns (updated flat params, mean loss over the L steps).
+    """
+
+    def step(p, xy):
+        x, y = xy
+        lval, g = jax.value_and_grad(loss_fn)(p, x, y)
+        return p - lr * g, lval
+
+    final, losses = jax.lax.scan(step, flat, (xs, ys))
+    return final, losses.mean()
+
+
+def make_local_round(cfg):
+    loss_fn = functools.partial(cnn_loss, cfg=cfg)
+
+    def fn(flat, xs, ys, lr):
+        return local_round(flat, xs, ys, lr, loss_fn)
+
+    return fn
+
+
+def make_mini_local_round():
+    def fn(flat, xs, ys, lr):
+        return local_round(flat, xs, ys, lr, mini_loss)
+
+    return fn
+
+
+def make_local_round_batched(cfg, db: int):
+    """vmap over `db` device slots — the L3 device-parallel hot path.
+
+    (params[db,P], xs[db,L,B,C,H,W], ys[db,L,B,10], lr) ->
+        (params'[db,P], loss[db])
+    """
+    single = make_local_round(cfg)
+
+    def fn(flat_b, xs_b, ys_b, lr):
+        return jax.vmap(lambda f, x, y: single(f, x, y, lr))(flat_b, xs_b, ys_b)
+
+    return fn
+
+
+def make_mini_local_round_batched(db: int):
+    single = make_mini_local_round()
+
+    def fn(flat_b, xs_b, ys_b, lr):
+        return jax.vmap(lambda f, x, y: single(f, x, y, lr))(flat_b, xs_b, ys_b)
+
+    return fn
+
+
+def make_eval(cfg):
+    """(params[P], x[EB, C, H, W]) -> logits[EB, 10]."""
+
+    def fn(flat, x):
+        return cnn_forward(flat, x, cfg)
+
+    return fn

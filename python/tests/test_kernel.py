@@ -1,0 +1,109 @@
+"""L1 correctness: the Pallas fused matmul kernel vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes (including awkward non-block-aligned ones) and both
+activations; explicit tests pin down gradients, padding edges and dtype.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.matmul import linear, matmul
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(key, *shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 130),
+    k=st.integers(1, 70),
+    n=st.integers(1, 70),
+    act=st.sampled_from(["none", "relu"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_matches_ref_shapes(m, k, n, act, seed):
+    kx, kw, kb = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x = jax.random.normal(kx, (m, k), jnp.float32)
+    w = jax.random.normal(kw, (k, n), jnp.float32)
+    b = jax.random.normal(kb, (n,), jnp.float32)
+    got = matmul(x, w, b, act)
+    want = ref.matmul_ref(x, w, b, act)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("m,k,n", [(128, 128, 128), (256, 64, 128),
+                                   (8, 8, 8), (1, 1, 1), (33, 17, 9)])
+def test_matmul_block_aligned_and_edges(m, k, n):
+    x, w, b = rand(0, m, k), rand(1, k, n), rand(2, n)
+    np.testing.assert_allclose(
+        matmul(x, w, b, "none"), ref.matmul_ref(x, w, b, "none"),
+        rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_no_bias():
+    x, w = rand(0, 16, 32), rand(1, 32, 8)
+    np.testing.assert_allclose(
+        matmul(x, w, None, "none"), x @ w, rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_rejects_bad_activation():
+    x, w = rand(0, 4, 4), rand(1, 4, 4)
+    with pytest.raises(ValueError):
+        matmul(x, w, None, "gelu")
+
+
+def test_linear_grad_matches_ref_grad():
+    x, w, b = rand(0, 24, 40), rand(1, 40, 12), rand(2, 12)
+
+    def f_pl(x, w, b):
+        return (linear(x, w, b, "relu") ** 2).sum()
+
+    def f_ref(x, w, b):
+        return (ref.matmul_ref(x, w, b, "relu") ** 2).sum()
+
+    g_pl = jax.grad(f_pl, argnums=(0, 1, 2))(x, w, b)
+    g_ref = jax.grad(f_ref, argnums=(0, 1, 2))(x, w, b)
+    for gp, gr in zip(g_pl, g_ref):
+        np.testing.assert_allclose(gp, gr, rtol=1e-3, atol=1e-3)
+
+
+def test_linear_grad_none_activation():
+    x, w, b = rand(3, 9, 21), rand(4, 21, 5), rand(5, 5)
+    g_pl = jax.grad(lambda w: linear(x, w, b, "none").sum())(w)
+    g_ref = jax.grad(lambda w: ref.matmul_ref(x, w, b, "none").sum())(w)
+    np.testing.assert_allclose(g_pl, g_ref, rtol=1e-3, atol=1e-3)
+
+
+def test_linear_under_jit_scan_vmap():
+    """The exact composition the AOT artifacts rely on."""
+    x = rand(0, 8, 16)
+    ws = jnp.stack([rand(i, 16, 16) * 0.1 for i in range(4)])
+    b = jnp.zeros(16)
+
+    def roll(w):
+        def step(wc, _):
+            y = linear(x, wc, b, "relu")
+            g = jax.grad(lambda ww: linear(x, ww, b, "relu").mean())(wc)
+            return wc - 0.1 * g, y.mean()
+
+        wf, ys = jax.lax.scan(step, w, None, length=3)
+        return ys
+
+    got = jax.jit(jax.vmap(roll))(ws)
+    assert got.shape == (4, 3)
+    assert bool(jnp.all(jnp.isfinite(got)))
+
+
+def test_relu_grad_zero_where_inactive():
+    x = jnp.array([[-5.0, 5.0]], jnp.float32)
+    w = jnp.eye(2, dtype=jnp.float32)
+    b = jnp.zeros(2)
+    g = jax.grad(lambda x: linear(x, w, b, "relu").sum())(x)
+    np.testing.assert_allclose(g, [[0.0, 1.0]])

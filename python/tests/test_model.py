@@ -1,0 +1,153 @@
+"""L2 correctness: CNN / mini model built on the Pallas kernel vs lax ops."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+SMALL = model.CnnConfig("small", in_ch=1, img=16, c1=4, c2=6, hidden=12)
+
+
+def params_for(cfg, seed=0):
+    return model.init_flat(jax.random.PRNGKey(seed), cfg.leaves())
+
+
+def batch_for(cfg, n=4, seed=1):
+    kx, ky = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.normal(kx, (n, cfg.in_ch, cfg.img, cfg.img), jnp.float32)
+    y = jax.nn.one_hot(
+        jax.random.randint(ky, (n,), 0, model.NUM_CLASSES), model.NUM_CLASSES)
+    return x, y
+
+
+# ---------------------------------------------------------------------------
+# building blocks vs oracle
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(1, 4), c=st.integers(1, 3), img=st.integers(6, 14),
+       oc=st.integers(1, 6), k=st.sampled_from([2, 3, 5]),
+       seed=st.integers(0, 1000))
+def test_conv2d_matches_lax(n, c, img, oc, k, seed):
+    if img <= k:
+        return
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x = jax.random.normal(k1, (n, c, img, img), jnp.float32)
+    w = jax.random.normal(k2, (oc, c, k, k), jnp.float32)
+    b = jax.random.normal(k3, (oc,), jnp.float32)
+    got = model.conv2d(x, w, b, "none")
+    want = ref.conv2d_ref(x, w, b)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+def test_maxpool_matches_ref():
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 3, 9, 9), jnp.float32)
+    np.testing.assert_allclose(model.maxpool2(x), ref.maxpool2_ref(x))
+
+
+def test_softmax_xent_matches_ref():
+    logits = jax.random.normal(jax.random.PRNGKey(0), (8, 10), jnp.float32)
+    y = jax.nn.one_hot(jnp.arange(8) % 10, 10)
+    np.testing.assert_allclose(
+        model.softmax_xent(logits, y), ref.softmax_xent_ref(logits, y),
+        rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# parameter plumbing
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("cfg", [model.FMNIST, model.CIFAR, SMALL])
+def test_flatten_unflatten_roundtrip(cfg):
+    flat = params_for(cfg)
+    p = model.unflatten(flat, cfg.leaves())
+    flat2 = model.flatten(p, cfg.leaves())
+    np.testing.assert_array_equal(flat, flat2)
+
+
+def test_param_counts_match_paper_model_sizes():
+    """Table I: z ≈ 448 KB (FashionMNIST), ≈ 882 KB (CIFAR-10)."""
+    zf = 4 * model.param_count(model.FMNIST.leaves())
+    zc = 4 * model.param_count(model.CIFAR.leaves())
+    assert abs(zf - 448 * 1024) / (448 * 1024) < 0.05, zf
+    assert abs(zc - 882 * 1024) / (882 * 1024) < 0.05, zc
+    zm = 4 * model.param_count(model.MINI.leaves())
+    assert abs(zm - 10 * 1024) / (10 * 1024) < 0.2, zm
+
+
+def test_leaf_layout_offsets_contiguous():
+    lay = model.leaf_layout(model.FMNIST.leaves())
+    off = 0
+    for leaf in lay:
+        assert leaf["offset"] == off
+        off += leaf["size"]
+    assert off == model.param_count(model.FMNIST.leaves())
+
+
+# ---------------------------------------------------------------------------
+# forward / training behaviour
+# ---------------------------------------------------------------------------
+
+
+def test_cnn_forward_shape_and_finite():
+    flat = params_for(SMALL)
+    x, _ = batch_for(SMALL, n=3)
+    logits = model.cnn_forward(flat, x, SMALL)
+    assert logits.shape == (3, 10)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_mini_forward_shape():
+    flat = model.init_flat(jax.random.PRNGKey(0), model.MINI.leaves())
+    x = jax.random.normal(jax.random.PRNGKey(1), (5, 1, 10, 10), jnp.float32)
+    assert model.mini_forward(flat, x).shape == (5, 10)
+
+
+def test_local_round_reduces_loss():
+    """5 SGD steps on a fixed batch must reduce the loss on that batch."""
+    flat = params_for(SMALL)
+    x, y = batch_for(SMALL, n=8)
+    loss0 = model.cnn_loss(flat, x, y, SMALL)
+    xs = jnp.stack([x] * 5)
+    ys = jnp.stack([y] * 5)
+    fn = model.make_local_round(SMALL)
+    flat2, _ = jax.jit(fn)(flat, xs, ys, jnp.float32(0.05))
+    loss1 = model.cnn_loss(flat2, x, y, SMALL)
+    assert float(loss1) < float(loss0)
+
+
+def test_local_round_batched_matches_single():
+    db = 3
+    fn_b = model.make_local_round_batched(SMALL, db)
+    fn_s = model.make_local_round(SMALL)
+    flats = jnp.stack([params_for(SMALL, seed=i) for i in range(db)])
+    xs, ys = [], []
+    for i in range(db):
+        x, y = batch_for(SMALL, n=4, seed=10 + i)
+        xs.append(jnp.stack([x] * 2))
+        ys.append(jnp.stack([y] * 2))
+    xs, ys = jnp.stack(xs), jnp.stack(ys)
+    outb, lossb = jax.jit(fn_b)(flats, xs, ys, jnp.float32(0.01))
+    for i in range(db):
+        outs, losss = fn_s(flats[i], xs[i], ys[i], jnp.float32(0.01))
+        np.testing.assert_allclose(outb[i], outs, rtol=2e-3, atol=2e-4)
+        np.testing.assert_allclose(lossb[i], losss, rtol=1e-4, atol=1e-5)
+
+
+def test_init_flat_he_statistics():
+    flat = model.init_flat(jax.random.PRNGKey(0), model.FMNIST.leaves())
+    p = model.unflatten(flat, model.FMNIST.leaves())
+    w = p["fc1_w"]
+    std = float(w.std())
+    expect = (2.0 / model.FMNIST.feat) ** 0.5
+    assert abs(std - expect) / expect < 0.1
+    assert float(jnp.abs(p["fc1_b"]).max()) == 0.0

@@ -1,0 +1,29 @@
+//! Bench for Fig. 3: scheduling-quality comparison at reduced scale
+//! (IKC vs VKC vs FedAvg accuracy after a fixed iteration budget on
+//! synth-fmnist). The full curves come from `hfl exp fig3`.
+
+use hfl::bench::bench_once;
+use hfl::config::Config;
+use hfl::experiments::fig_sched;
+use hfl::runtime::Engine;
+
+fn main() {
+    let engine = Engine::open(std::path::Path::new("artifacts")).expect("make artifacts");
+    let mut cfg = Config::default();
+    cfg.seeds = 1;
+    cfg.max_iters = 3;
+    cfg.test_size = 300;
+    cfg.h_values = vec![30];
+    cfg.out_dir = std::env::temp_dir().join("hfl_bench_f3").display().to_string();
+    let (curves, _) = bench_once("fig3/3_iters_h30_all_schedulers", || {
+        fig_sched::run(&engine, &cfg, "fmnist").unwrap()
+    });
+    for c in &curves {
+        println!(
+            "  {}: acc after {} iters = {:.3}",
+            c.scheduler,
+            c.mean.len(),
+            c.mean.last().unwrap_or(&0.0)
+        );
+    }
+}

@@ -1,0 +1,28 @@
+//! Bench for Fig. 4: same as fig3_scheduling but on the harder
+//! synth-cifar dataset (3×32×32, heavier noise + mixing + jitter).
+
+use hfl::bench::bench_once;
+use hfl::config::Config;
+use hfl::experiments::fig_sched;
+use hfl::runtime::Engine;
+
+fn main() {
+    let engine = Engine::open(std::path::Path::new("artifacts")).expect("make artifacts");
+    let mut cfg = Config::default();
+    cfg.seeds = 1;
+    cfg.max_iters = 2;
+    cfg.test_size = 300;
+    cfg.h_values = vec![30];
+    cfg.out_dir = std::env::temp_dir().join("hfl_bench_f4").display().to_string();
+    let (curves, _) = bench_once("fig4/2_iters_h30_all_schedulers_cifar", || {
+        fig_sched::run(&engine, &cfg, "cifar").unwrap()
+    });
+    for c in &curves {
+        println!(
+            "  {}: acc after {} iters = {:.3}",
+            c.scheduler,
+            c.mean.len(),
+            c.mean.last().unwrap_or(&0.0)
+        );
+    }
+}

@@ -1,0 +1,40 @@
+//! Bench for Fig. 6(d): assignment latency per strategy — the paper's
+//! headline D³QN-vs-HFEL speed claim.
+
+use hfl::assignment::drl::DrlAssigner;
+use hfl::assignment::geo::Geographic;
+use hfl::assignment::hfel::Hfel;
+use hfl::assignment::Assigner;
+use hfl::bench::bench;
+use hfl::runtime::Engine;
+use hfl::system::{SystemParams, Topology};
+use hfl::util::Rng;
+
+fn main() {
+    let engine = Engine::open(std::path::Path::new("artifacts")).expect("make artifacts");
+    let mut sys = SystemParams::default();
+    sys.n_devices = 50;
+    sys.model_bits = (engine.manifest.model("fmnist").unwrap().bytes * 8) as f64;
+    let topo = Topology::generate(&sys, &mut Rng::new(1));
+    let scheduled: Vec<usize> = (0..50).collect();
+
+    let drl = DrlAssigner::fresh(&engine, 1).unwrap();
+    // warm up the executable cache so we measure the request path
+    let _ = drl.assign_with_q(&topo, &scheduled).unwrap();
+    bench("assign/d3qn(H=50)", 2, 30, || {
+        let (a, _) = drl.assign_with_q(&topo, &scheduled).unwrap();
+        std::hint::black_box(a.num_devices());
+    });
+    bench("assign/geographic(H=50)", 2, 30, || {
+        let a = Geographic.assign(&topo, &scheduled);
+        std::hint::black_box(a.num_devices());
+    });
+    bench("assign/hfel-100(H=50)", 0, 3, || {
+        let a = Hfel::new(100, 7).run(&topo, &scheduled);
+        std::hint::black_box(a.num_devices());
+    });
+    bench("assign/hfel-300(H=50)", 0, 3, || {
+        let a = Hfel::new(300, 7).run(&topo, &scheduled);
+        std::hint::black_box(a.num_devices());
+    });
+}

@@ -1,0 +1,50 @@
+//! Bench for Fig. 7: one full-framework global iteration (IKC + D³QN +
+//! allocator + Algorithm 1 training) end to end — the system's composite
+//! latency unit.
+
+use hfl::allocation::SolverOpts;
+use hfl::assignment::drl::DrlAssigner;
+use hfl::bench::{bench, bench_once};
+use hfl::fl::{HflConfig, HflTrainer};
+use hfl::model::{init_params, Init};
+use hfl::runtime::Engine;
+use hfl::scheduling::{FedAvg, Scheduler};
+use hfl::assignment::Assigner;
+
+fn main() {
+    let engine = Engine::open(std::path::Path::new("artifacts")).expect("make artifacts");
+    let cfg = HflConfig {
+        dataset: "fmnist".into(),
+        h: 50,
+        lr: 0.05,
+        target_acc: 1.0,
+        max_iters: 1,
+        test_size: 300,
+        frac_major: 0.8,
+        seed: 3,
+    };
+    let mut trainer = HflTrainer::with_default_topology(&engine, cfg).unwrap();
+    let mut sched = FedAvg::new(100, 50, 1);
+    let mut drl = DrlAssigner::fresh(&engine, 1).unwrap();
+
+    // end-to-end global iteration (schedule→assign→allocate→train→eval)
+    let (_, dt) = bench_once("fig7/one_global_iteration_h50", || {
+        trainer
+            .run(&mut sched, &mut drl, &SolverOpts::default(), |_| {})
+            .unwrap()
+    });
+    println!("  -> {:.2}s per global iteration at H=50", dt);
+
+    // isolated pieces
+    let info = engine.manifest.model("fmnist").unwrap().clone();
+    let mut rng = hfl::util::Rng::new(9);
+    let global = init_params(&info, Init::HeNormal, &mut rng);
+    let scheduled = sched.schedule();
+    let assignment = drl.assign(&trainer.topo, &scheduled);
+    bench("fig7/algorithm1_training_only_h50", 0, 2, || {
+        let (p, _) = trainer
+            .train_global_iteration(&global, &assignment)
+            .unwrap();
+        std::hint::black_box(p.len());
+    });
+}

@@ -1,0 +1,22 @@
+//! Micro-bench: the convex resource allocator (problem 27) — the inner
+//! loop of HFEL and of every per-iteration cost evaluation.
+
+use hfl::allocation::{solve_edge, SolverOpts};
+use hfl::bench::bench;
+use hfl::system::{SystemParams, Topology};
+use hfl::util::Rng;
+
+fn main() {
+    let topo = Topology::generate(&SystemParams::default(), &mut Rng::new(1));
+    for n in [1usize, 5, 10, 20] {
+        let devices: Vec<usize> = (0..n).collect();
+        bench(&format!("alloc/default/n={n}"), 3, 20, || {
+            let s = solve_edge(&topo, 0, &devices, 1.0, &SolverOpts::default());
+            std::hint::black_box(s.objective);
+        });
+        bench(&format!("alloc/fast/n={n}"), 3, 20, || {
+            let s = solve_edge(&topo, 0, &devices, 1.0, &SolverOpts::fast());
+            std::hint::black_box(s.objective);
+        });
+    }
+}

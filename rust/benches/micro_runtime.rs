@@ -1,0 +1,66 @@
+//! Micro-bench: PJRT artifact dispatch — local_round (the L3→L1 hot path),
+//! eval, and D³QN q_all inference (the per-iteration assignment call).
+
+use hfl::bench::bench;
+use hfl::data::{partition, SynthSpec, Templates, NUM_CLASSES};
+use hfl::model::{init_params, Init};
+use hfl::runtime::{Arg, Engine};
+use hfl::util::Rng;
+
+fn main() {
+    let engine = Engine::open(std::path::Path::new("artifacts")).expect("make artifacts");
+    let c = engine.manifest.consts.clone();
+    let info = engine.manifest.model("fmnist").unwrap().clone();
+    let spec = SynthSpec::fmnist();
+    let templates = Templates::generate(&spec, 1);
+    let dd = partition(c.db, &vec![500; c.db], 0.8, 1);
+    let mut rng = Rng::new(2);
+
+    let (db, l, b, p) = (c.db, c.l, c.b, info.params);
+    let pixels = spec.pixels();
+    let base = init_params(&info, Init::HeNormal, &mut rng);
+    let mut params = vec![0.0f32; db * p];
+    for s in 0..db {
+        params[s * p..(s + 1) * p].copy_from_slice(&base);
+    }
+    let mut xs = vec![0.0f32; db * l * b * pixels];
+    let mut ys = vec![0.0f32; db * l * b * NUM_CLASSES];
+    for s in 0..db {
+        dd[s].fill_batch(&templates, &mut rng, l * b,
+            &mut xs[s * l * b * pixels..(s + 1) * l * b * pixels],
+            &mut ys[s * l * b * NUM_CLASSES..(s + 1) * l * b * NUM_CLASSES]);
+    }
+    let r = bench("runtime/local_round_fmnist(db=8,l=5,b=8)", 2, 10, || {
+        let out = engine.run("local_round_fmnist", &[
+            Arg::F32(&params, &[db as i64, p as i64]),
+            Arg::F32(&xs, &[db as i64, l as i64, b as i64, 1, 28, 28]),
+            Arg::F32(&ys, &[db as i64, l as i64, b as i64, NUM_CLASSES as i64]),
+            Arg::ScalarF32(0.01),
+        ]).unwrap();
+        std::hint::black_box(out[1][0]);
+    });
+    // device-rounds per second (each call trains DB devices for L steps)
+    println!("  -> {:.1} device-rounds/s", db as f64 * r.throughput_per_s());
+
+    let eb = c.eb;
+    let xe = vec![0.1f32; eb * pixels];
+    bench("runtime/eval_fmnist(eb)", 2, 10, || {
+        let out = engine.run("eval_fmnist", &[
+            Arg::F32(&base, &[p as i64]),
+            Arg::F32(&xe, &[eb as i64, 1, 28, 28]),
+        ]).unwrap();
+        std::hint::black_box(out[0][0]);
+    });
+
+    let qinfo = engine.manifest.model("dqn").unwrap().clone();
+    let theta = init_params(&qinfo, Init::GlorotUniform, &mut rng);
+    let h = c.train_horizon;
+    let feats = vec![0.5f32; h * c.feat];
+    bench("runtime/dqn_q_all_h50 (full-iteration assignment)", 2, 20, || {
+        let out = engine.run(&format!("dqn_q_all_h{h}"), &[
+            Arg::F32(&theta, &[theta.len() as i64]),
+            Arg::F32(&feats, &[h as i64, c.feat as i64]),
+        ]).unwrap();
+        std::hint::black_box(out[0][0]);
+    });
+}

@@ -1,0 +1,22 @@
+//! Bench for Table II: wall-clock of Algorithm 2 with the mini model ξ
+//! (IKC) vs the full model (VKC) — plus the simulated system costs.
+
+use hfl::bench::bench_once;
+use hfl::config::Config;
+use hfl::experiments::table2;
+use hfl::runtime::Engine;
+
+fn main() {
+    let engine = Engine::open(std::path::Path::new("artifacts")).expect("make artifacts");
+    let mut cfg = Config::default();
+    cfg.out_dir = std::env::temp_dir().join("hfl_bench_t2").display().to_string();
+    let (rows, _) = bench_once("table2/algorithm2_all_methods", || {
+        table2::run(&engine, &cfg).unwrap()
+    });
+    for r in &rows {
+        println!(
+            "  {}: simulated {:.1}s / {:.1}J, ARI {:.2}",
+            r.method, r.result.time_s, r.result.energy_j, r.result.ari
+        );
+    }
+}

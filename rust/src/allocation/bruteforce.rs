@@ -1,0 +1,201 @@
+//! Brute-force grid oracle for problem (27) — tests only.
+//!
+//! For ≤3 devices: grid over the bandwidth simplex; for each bandwidth
+//! vector the remaining problem is 1-D convex in the round time τ
+//! (frequencies are closed-form given τ), solved by fine golden-section.
+//! The solver in `solver.rs` must match this within a small relative gap.
+
+use crate::system::cost::{cloud_cost, edge_cost, DeviceAlloc};
+use crate::system::Topology;
+
+/// Evaluate the exact objective for a fixed bandwidth split by optimizing
+/// τ (and hence f) by golden-section.
+fn best_over_tau(
+    topo: &Topology,
+    m: usize,
+    devices: &[usize],
+    bw: &[f64],
+    lambda: f64,
+) -> (f64, Vec<DeviceAlloc>) {
+    let p = &topo.params;
+    let z = p.model_bits;
+
+    let t_com: Vec<f64> = devices
+        .iter()
+        .zip(bw)
+        .map(|(&n, &b)| {
+            let d = &topo.devices[n];
+            z / topo.channel.rate(b, d.gain_to_edge[m], d.tx_power_w)
+        })
+        .collect();
+    let c: Vec<f64> = devices
+        .iter()
+        .map(|&n| {
+            let d = &topo.devices[n];
+            p.local_iters as f64 * d.cycles_per_sample * d.num_samples as f64
+        })
+        .collect();
+
+    let eval = |tau: f64| -> Option<(f64, Vec<DeviceAlloc>)> {
+        let mut allocs = Vec::with_capacity(devices.len());
+        for i in 0..devices.len() {
+            let slack = tau - t_com[i];
+            if slack <= 0.0 {
+                return None;
+            }
+            let f = c[i] / slack;
+            if f > topo.devices[devices[i]].max_freq_hz {
+                return None;
+            }
+            allocs.push(DeviceAlloc { bandwidth_hz: bw[i], freq_hz: f });
+        }
+        let group: Vec<(usize, DeviceAlloc)> =
+            devices.iter().cloned().zip(allocs.iter().cloned()).collect();
+        let ec = edge_cost(topo, m, &group);
+        Some((ec.e + lambda * ec.t, allocs))
+    };
+
+    // bracket: τ_lo = max infeasible floor, τ_hi grows until objective rises
+    let tau_floor = (0..devices.len())
+        .map(|i| t_com[i] + c[i] / topo.devices[devices[i]].max_freq_hz)
+        .fold(0.0f64, f64::max)
+        * 1.000001;
+    let mut tau_hi = tau_floor * 2.0;
+    let mut best_hi = eval(tau_hi);
+    loop {
+        let cand = tau_hi * 1.5;
+        let e = eval(cand);
+        match (&best_hi, &e) {
+            (Some((a, _)), Some((b, _))) if b < a => {
+                tau_hi = cand;
+                best_hi = e;
+            }
+            (None, _) => {
+                tau_hi = cand;
+                best_hi = e;
+            }
+            _ => break,
+        }
+        if tau_hi > tau_floor * 1e7 {
+            break;
+        }
+    }
+    tau_hi *= 1.5;
+
+    let gr = (5f64.sqrt() - 1.0) / 2.0;
+    let (mut a, mut b) = (tau_floor, tau_hi);
+    for _ in 0..200 {
+        let x1 = b - gr * (b - a);
+        let x2 = a + gr * (b - a);
+        let f1 = eval(x1).map(|(v, _)| v).unwrap_or(f64::INFINITY);
+        let f2 = eval(x2).map(|(v, _)| v).unwrap_or(f64::INFINITY);
+        if f1 <= f2 {
+            b = x2;
+        } else {
+            a = x1;
+        }
+        if (b - a) < 1e-7 * b {
+            break;
+        }
+    }
+    let tau = 0.5 * (a + b);
+    eval(tau).map(|(v, al)| (v, al)).unwrap_or((f64::INFINITY, vec![]))
+}
+
+/// Brute-force solve for 1–3 devices with a bandwidth grid of `grid` points
+/// per dimension. Returns (objective, allocations).
+pub fn solve_bruteforce(
+    topo: &Topology,
+    m: usize,
+    devices: &[usize],
+    lambda: f64,
+    grid: usize,
+) -> (f64, Vec<DeviceAlloc>) {
+    let b_total = topo.edges[m].bandwidth_hz;
+    if devices.is_empty() {
+        return (0.0, vec![]);
+    }
+    let (_, e_cloud) = cloud_cost(topo, m);
+    let _ = e_cloud;
+    match devices.len() {
+        1 => best_over_tau(topo, m, devices, &[b_total], lambda),
+        2 => {
+            let mut best = (f64::INFINITY, vec![]);
+            for i in 1..grid {
+                let w = i as f64 / grid as f64;
+                let bw = [b_total * w, b_total * (1.0 - w)];
+                let r = best_over_tau(topo, m, devices, &bw, lambda);
+                if r.0 < best.0 {
+                    best = r;
+                }
+            }
+            best
+        }
+        3 => {
+            let mut best = (f64::INFINITY, vec![]);
+            for i in 1..grid {
+                for j in 1..grid - i {
+                    let w1 = i as f64 / grid as f64;
+                    let w2 = j as f64 / grid as f64;
+                    let w3 = 1.0 - w1 - w2;
+                    if w3 <= 0.0 {
+                        continue;
+                    }
+                    let bw = [b_total * w1, b_total * w2, b_total * w3];
+                    let r = best_over_tau(topo, m, devices, &bw, lambda);
+                    if r.0 < best.0 {
+                        best = r;
+                    }
+                }
+            }
+            best
+        }
+        _ => panic!("brute force supports ≤3 devices"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::allocation::solver::{solve_edge, SolverOpts};
+    use crate::system::{SystemParams, Topology};
+    use crate::util::Rng;
+
+    fn check_gap(seed: u64, devices: &[usize], lambda: f64, tol: f64) {
+        let topo = Topology::generate(&SystemParams::default(), &mut Rng::new(seed));
+        let (bf_obj, _) = solve_bruteforce(&topo, 0, devices, lambda, 60);
+        let s = solve_edge(&topo, 0, devices, lambda, &SolverOpts::default());
+        let gap = (s.objective - bf_obj) / bf_obj.abs();
+        // the solver must be no worse than the grid oracle + tolerance
+        // (it may be better: the grid is finite)
+        assert!(
+            gap < tol,
+            "seed {seed} devices {devices:?} λ={lambda}: solver {} vs brute {} (gap {gap:.4})",
+            s.objective,
+            bf_obj
+        );
+    }
+
+    #[test]
+    fn matches_oracle_single_device() {
+        check_gap(1, &[0], 1.0, 0.01);
+        check_gap(2, &[7], 1.0, 0.01);
+    }
+
+    #[test]
+    fn matches_oracle_two_devices() {
+        check_gap(3, &[1, 2], 1.0, 0.015);
+        check_gap(4, &[10, 40], 1.0, 0.015);
+    }
+
+    #[test]
+    fn matches_oracle_three_devices() {
+        check_gap(5, &[3, 14, 25], 1.0, 0.02);
+    }
+
+    #[test]
+    fn matches_oracle_extreme_lambda() {
+        check_gap(6, &[2, 9], 0.01, 0.02);
+        check_gap(7, &[2, 9], 100.0, 0.02);
+    }
+}

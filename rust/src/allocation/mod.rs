@@ -1,0 +1,10 @@
+//! Per-edge convex resource allocation (problem 27): bandwidth split `b_n`
+//! and CPU frequency `f_n` for the devices assigned to one edge server.
+//!
+//! `solver` is the production epigraph solver (replaces the paper's CVXPY,
+//! DESIGN.md §5); `bruteforce` is the grid oracle used by the test suite.
+
+pub mod bruteforce;
+pub mod solver;
+
+pub use solver::{solve_edge, AllocSolution, SolverOpts};

@@ -1,0 +1,518 @@
+//! Native convex solver for the per-edge resource allocation problem (27):
+//!
+//! ```text
+//!   min_{b, f}  E_m + λ·T_m
+//!   s.t.        Σ_n b_n ≤ B_m,   0 < f_n ≤ f_max
+//! ```
+//!
+//! The paper solves this with CVXPY; we solve the same convex program
+//! natively (DESIGN.md §5) with an epigraph decomposition:
+//!
+//! * For a fixed per-edge-iteration round time τ, the optimal CPU frequency
+//!   is closed-form: run exactly as slow as the deadline allows,
+//!   `f_n* = c_n / (τ − T_com(b_n))` (energy ∝ f², idling is free), which
+//!   is feasible iff `T_com(b_n) ≤ τ − c_n/f_max`.
+//! * The remaining bandwidth subproblem `min Σ_n E_n(b_n; τ)` over the
+//!   simplex `{Σ b = B_m, b ≥ b_min(τ)}` is smooth and convex; we solve it
+//!   with projected gradient descent + backtracking, warm-started across
+//!   τ evaluations.
+//! * The outer 1-D function g(τ) is convex (partial minimization of a
+//!   jointly convex program), minimized by golden-section search over a
+//!   bracket found by feasibility bisection + exponential expansion.
+//!
+//! Correctness is pinned against a brute-force grid oracle in
+//! `bruteforce.rs` (tests assert ≤1% relative objective gap).
+
+use crate::system::cost::{cloud_cost, DeviceAlloc, EdgeCost};
+use crate::system::Topology;
+
+const LN2: f64 = std::f64::consts::LN_2;
+
+/// Precomputed per-device link/compute constants for one (device, edge).
+#[derive(Clone, Copy, Debug)]
+struct Link {
+    /// γ = ḡ·p / N0, in Hz (SNR numerator per unit bandwidth).
+    gamma: f64,
+    /// Transmit power, W.
+    p: f64,
+    /// Total cycles per edge iteration: c = L·u_n·D_n.
+    c: f64,
+    f_max: f64,
+}
+
+impl Link {
+    /// Uplink rate (eq. 6) in bit/s.
+    fn rate(&self, b: f64) -> f64 {
+        if b <= 0.0 {
+            0.0
+        } else {
+            b * (1.0 + self.gamma / b).ln() / LN2
+        }
+    }
+
+    /// d rate / d b — positive, decreasing.
+    fn rate_deriv(&self, b: f64) -> f64 {
+        let x = self.gamma / b;
+        ((1.0 + x).ln() - x / (1.0 + x)) / LN2
+    }
+
+    /// Asymptotic rate cap as b → ∞: γ/ln2.
+    fn rate_cap(&self) -> f64 {
+        self.gamma / LN2
+    }
+}
+
+/// Tunables; defaults give ≤0.3% objective gap vs the brute-force oracle.
+#[derive(Clone, Debug)]
+pub struct SolverOpts {
+    pub tau_iters: usize,
+    pub pg_iters: usize,
+    pub pg_iters_warm: usize,
+}
+
+impl Default for SolverOpts {
+    fn default() -> Self {
+        SolverOpts { tau_iters: 40, pg_iters: 120, pg_iters_warm: 30 }
+    }
+}
+
+impl SolverOpts {
+    /// Low-precision preset for search-internal evaluations (HFEL tries
+    /// hundreds of candidate moves and only needs the objective ORDERING;
+    /// final reported costs always use the default precision).
+    pub fn fast() -> Self {
+        SolverOpts { tau_iters: 12, pg_iters: 30, pg_iters_warm: 8 }
+    }
+}
+
+/// Result of one per-edge solve.
+#[derive(Clone, Debug)]
+pub struct AllocSolution {
+    /// Device order matches the `devices` argument of [`solve_edge`].
+    pub allocs: Vec<DeviceAlloc>,
+    pub cost: EdgeCost,
+    /// Per-edge objective `E_m + λ·T_m` (problem 27).
+    pub objective: f64,
+}
+
+/// Minimum bandwidth for device `l` to meet round time τ (∞ if impossible).
+fn b_min(l: &Link, z_bits: f64, tau: f64) -> f64 {
+    let slack = tau - l.c / l.f_max;
+    if slack <= 0.0 {
+        return f64::INFINITY;
+    }
+    let need_rate = z_bits / slack;
+    if need_rate >= l.rate_cap() * 0.999_999 {
+        return f64::INFINITY; // Shannon cap: no bandwidth is enough
+    }
+    // rate(b) is increasing in b: bisect
+    let mut lo = 1e-3;
+    let mut hi = 1.0;
+    while l.rate(hi) < need_rate {
+        hi *= 2.0;
+        if hi > 1e15 {
+            return f64::INFINITY;
+        }
+    }
+    for _ in 0..80 {
+        let mid = 0.5 * (lo + hi);
+        if l.rate(mid) < need_rate {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    hi
+}
+
+/// Energy of device `l` at bandwidth b under deadline τ (optimal f).
+fn device_energy(l: &Link, z_bits: f64, alpha: f64, tau: f64, b: f64) -> f64 {
+    let t_com = z_bits / l.rate(b);
+    let slack = tau - t_com;
+    debug_assert!(slack > 0.0);
+    let f = (l.c / slack).min(l.f_max);
+    0.5 * alpha * l.c * f * f + l.p * t_com
+}
+
+/// dE/db at bandwidth b (negative: more bandwidth always helps).
+fn device_energy_deriv(l: &Link, z_bits: f64, alpha: f64, tau: f64, b: f64) -> f64 {
+    let r = l.rate(b);
+    let t_com = z_bits / r;
+    let slack = tau - t_com;
+    let dt_db = -z_bits * l.rate_deriv(b) / (r * r);
+    let f = l.c / slack;
+    let de_cmp_dt = if f < l.f_max {
+        // f* = c/slack ⇒ dE_cmp/dT_com = α·c³/slack³
+        alpha * l.c * l.c * l.c / (slack * slack * slack)
+    } else {
+        0.0 // f pinned at f_max: compute energy insensitive to b
+    };
+    dt_db * (l.p + de_cmp_dt)
+}
+
+/// Euclidean projection onto `{x : Σx = total, x ≥ lo}` (lo feasible).
+/// Standard O(n log n) water-filling.
+fn project_simplex_lb(x: &mut [f64], lo: &[f64], total: f64) {
+    let n = x.len();
+    // shift: y = x - lo, project y onto {Σy = s, y ≥ 0}
+    let s = total - lo.iter().sum::<f64>();
+    debug_assert!(s >= -1e-9);
+    let mut y: Vec<f64> = x.iter().zip(lo).map(|(&xi, &li)| xi - li).collect();
+    let mut sorted = y.clone();
+    sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    let mut cum = 0.0;
+    let mut theta = 0.0;
+    let mut k = 0;
+    for (i, &v) in sorted.iter().enumerate() {
+        cum += v;
+        let t = (cum - s) / (i + 1) as f64;
+        if v - t > 0.0 {
+            theta = t;
+            k = i + 1;
+        }
+    }
+    let _ = k;
+    for yi in y.iter_mut() {
+        *yi = (*yi - theta).max(0.0);
+    }
+    for i in 0..n {
+        x[i] = lo[i] + y[i];
+    }
+}
+
+/// Inner problem: minimize Σ E_n(b_n; τ) over the bandwidth simplex.
+/// `b` is the warm start (projected to feasibility first).
+fn solve_bandwidth(
+    links: &[Link],
+    z_bits: f64,
+    alpha: f64,
+    tau: f64,
+    b_total: f64,
+    b: &mut [f64],
+    iters: usize,
+) -> Option<f64> {
+    let n = links.len();
+    let lo: Vec<f64> = links.iter().map(|l| b_min(l, z_bits, tau)).collect();
+    if lo.iter().any(|v| !v.is_finite()) {
+        return None;
+    }
+    let lo_sum: f64 = lo.iter().sum();
+    if lo_sum > b_total {
+        return None; // τ infeasible: even minimal bandwidths overflow B_m
+    }
+    project_simplex_lb(b, &lo, b_total);
+
+    let energy = |b: &[f64]| -> f64 {
+        links
+            .iter()
+            .zip(b)
+            .map(|(l, &bi)| device_energy(l, z_bits, alpha, tau, bi))
+            .sum()
+    };
+
+    let mut e_cur = energy(b);
+    // normalized step: bandwidths are O(B_m); gradients O(1e-6..1e-3)
+    let mut step = b_total * 0.25;
+    let mut grad = vec![0.0f64; n];
+    for _ in 0..iters {
+        let gnorm = {
+            let mut s = 0.0;
+            for i in 0..n {
+                grad[i] = device_energy_deriv(&links[i], z_bits, alpha, tau, b[i]);
+                s += grad[i] * grad[i];
+            }
+            s.sqrt()
+        };
+        if gnorm < 1e-18 {
+            break;
+        }
+        let mut trial: Vec<f64> = (0..n)
+            .map(|i| b[i] - step * grad[i] / gnorm)
+            .collect();
+        project_simplex_lb(&mut trial, &lo, b_total);
+        let e_trial = energy(&trial);
+        if e_trial < e_cur {
+            b.copy_from_slice(&trial);
+            let improved = e_cur - e_trial;
+            e_cur = e_trial;
+            step *= 1.3;
+            if improved < e_cur.abs() * 1e-10 + 1e-18 {
+                break;
+            }
+        } else {
+            step *= 0.5;
+            if step < b_total * 1e-9 {
+                break;
+            }
+        }
+    }
+    Some(e_cur)
+}
+
+/// Solve problem (27) for edge `m` over `devices`. Empty device set yields
+/// a zero-cost solution (the edge sits out this iteration).
+pub fn solve_edge(
+    topo: &Topology,
+    m: usize,
+    devices: &[usize],
+    lambda: f64,
+    opts: &SolverOpts,
+) -> AllocSolution {
+    if devices.is_empty() {
+        return AllocSolution {
+            allocs: vec![],
+            cost: EdgeCost { t: 0.0, e: 0.0 },
+            objective: 0.0,
+        };
+    }
+    let p = &topo.params;
+    let z = p.model_bits;
+    let alpha = p.alpha;
+    let q = p.edge_iters as f64;
+    let b_total = topo.edges[m].bandwidth_hz;
+    let n0 = topo.channel.noise_w_per_hz;
+
+    let links: Vec<Link> = devices
+        .iter()
+        .map(|&n| {
+            let d = &topo.devices[n];
+            Link {
+                gamma: d.gain_to_edge[m] * d.tx_power_w / n0,
+                p: d.tx_power_w,
+                c: p.local_iters as f64 * d.cycles_per_sample * d.num_samples as f64,
+                f_max: d.max_freq_hz,
+            }
+        })
+        .collect();
+
+    // τ lower bound: every device with ALL the bandwidth at f_max.
+    let tau_floor = links
+        .iter()
+        .map(|l| l.c / l.f_max + z / l.rate(b_total))
+        .fold(0.0f64, f64::max);
+    // Feasible upper start: equal split at f_max.
+    let nb = b_total / links.len() as f64;
+    let tau_feas = links
+        .iter()
+        .map(|l| l.c / l.f_max + z / l.rate(nb))
+        .fold(0.0f64, f64::max)
+        * 1.0001;
+
+    // g(τ): minimized Σ E + λ·τ (Q factors out of the argmin; reapplied in
+    // the reported cost). Returns +∞ when τ is infeasible.
+    let mut warm: Vec<f64> = vec![nb; links.len()];
+    let g = |tau: f64, warm: &mut Vec<f64>, iters: usize| -> f64 {
+        match solve_bandwidth(&links, z, alpha, tau, b_total, warm, iters) {
+            Some(e) => e + lambda * tau,
+            None => f64::INFINITY,
+        }
+    };
+
+    // Bracket: find feasible lower edge by bisection on feasibility.
+    let mut lo = tau_floor;
+    let mut hi = tau_feas;
+    {
+        let mut trial = warm.clone();
+        for _ in 0..30 {
+            let mid = 0.5 * (lo + hi);
+            let mut w = trial.clone();
+            if g(mid, &mut w, opts.pg_iters_warm).is_finite() {
+                hi = mid;
+                trial = w;
+            } else {
+                lo = mid;
+            }
+        }
+    }
+    let tau_lo = hi; // smallest known-feasible τ
+
+    // Expand upward while g still decreases (energy savings from slower f).
+    let mut tau_hi = tau_lo.max(tau_feas);
+    {
+        let mut g_hi = g(tau_hi, &mut warm, opts.pg_iters);
+        loop {
+            let cand = tau_hi * 1.8;
+            let mut w = warm.clone();
+            let g_cand = g(cand, &mut w, opts.pg_iters_warm);
+            if g_cand < g_hi {
+                tau_hi = cand;
+                g_hi = g_cand;
+                warm = w;
+            } else {
+                break;
+            }
+            if tau_hi > tau_lo * 1e6 {
+                break;
+            }
+        }
+        tau_hi *= 1.8; // one margin step past the turn
+    }
+
+    // Golden-section on [tau_lo, tau_hi].
+    let gr = (5f64.sqrt() - 1.0) / 2.0;
+    let (mut a, mut bb) = (tau_lo, tau_hi);
+    let mut x1 = bb - gr * (bb - a);
+    let mut x2 = a + gr * (bb - a);
+    let mut f1 = g(x1, &mut warm, opts.pg_iters);
+    let mut f2 = g(x2, &mut warm, opts.pg_iters_warm);
+    for _ in 0..opts.tau_iters {
+        if f1 <= f2 {
+            bb = x2;
+            x2 = x1;
+            f2 = f1;
+            x1 = bb - gr * (bb - a);
+            f1 = g(x1, &mut warm, opts.pg_iters_warm);
+        } else {
+            a = x1;
+            x1 = x2;
+            f1 = f2;
+            x2 = a + gr * (bb - a);
+            f2 = g(x2, &mut warm, opts.pg_iters_warm);
+        }
+        if (bb - a) < 1e-4 * bb {
+            break;
+        }
+    }
+    let tau_star = if f1 <= f2 { x1 } else { x2 };
+    let _ = g(tau_star, &mut warm, opts.pg_iters);
+
+    // Materialize the final allocation.
+    let allocs: Vec<DeviceAlloc> = links
+        .iter()
+        .zip(&warm)
+        .map(|(l, &bi)| {
+            let t_com = z / l.rate(bi);
+            let f = (l.c / (tau_star - t_com)).clamp(0.0, l.f_max);
+            DeviceAlloc { bandwidth_hz: bi, freq_hz: f }
+        })
+        .collect();
+
+    let (t_cloud, e_cloud) = cloud_cost(topo, m);
+    let e_sum: f64 = links
+        .iter()
+        .zip(&warm)
+        .map(|(l, &bi)| device_energy(l, z, alpha, tau_star, bi))
+        .sum();
+    // actual max round time (≤ τ*, devices may beat the deadline at f_max)
+    let t_round = links
+        .iter()
+        .zip(&allocs)
+        .map(|(l, al)| l.c / al.freq_hz + z / l.rate(al.bandwidth_hz))
+        .fold(0.0f64, f64::max);
+    let cost = EdgeCost { t: q * t_round + t_cloud, e: q * e_sum + e_cloud };
+    AllocSolution { allocs, cost, objective: cost.e + lambda * cost.t }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::system::cost::edge_cost;
+    use crate::system::{SystemParams, Topology};
+    use crate::util::Rng;
+
+    fn topo() -> Topology {
+        Topology::generate(&SystemParams::default(), &mut Rng::new(3))
+    }
+
+    #[test]
+    fn empty_device_set_is_free() {
+        let t = topo();
+        let s = solve_edge(&t, 0, &[], 1.0, &SolverOpts::default());
+        assert_eq!(s.objective, 0.0);
+        assert!(s.allocs.is_empty());
+    }
+
+    #[test]
+    fn constraints_respected() {
+        let t = topo();
+        let devices = [0, 5, 11, 17, 23];
+        let s = solve_edge(&t, 1, &devices, 1.0, &SolverOpts::default());
+        let b_sum: f64 = s.allocs.iter().map(|a| a.bandwidth_hz).sum();
+        assert!(b_sum <= t.edges[1].bandwidth_hz * 1.000001, "{b_sum}");
+        for (a, &n) in s.allocs.iter().zip(&devices) {
+            assert!(a.bandwidth_hz > 0.0);
+            assert!(a.freq_hz > 0.0);
+            assert!(a.freq_hz <= t.devices[n].max_freq_hz * 1.000001);
+        }
+    }
+
+    #[test]
+    fn objective_consistent_with_cost_model() {
+        // The solver's reported cost must equal the cost model's evaluation
+        // of its own allocation.
+        let t = topo();
+        let devices = [2, 7, 31];
+        let s = solve_edge(&t, 0, &devices, 1.0, &SolverOpts::default());
+        let group: Vec<(usize, DeviceAlloc)> = devices
+            .iter()
+            .cloned()
+            .zip(s.allocs.iter().cloned())
+            .collect();
+        let ec = edge_cost(&t, 0, &group);
+        assert!((ec.t - s.cost.t).abs() / s.cost.t < 1e-6, "{} vs {}", ec.t, s.cost.t);
+        assert!((ec.e - s.cost.e).abs() / s.cost.e < 1e-6, "{} vs {}", ec.e, s.cost.e);
+    }
+
+    #[test]
+    fn beats_naive_equal_split() {
+        let t = topo();
+        let devices = [1, 4, 9, 16, 25, 36];
+        let s = solve_edge(&t, 2, &devices, 1.0, &SolverOpts::default());
+        // naive: equal bandwidth, f_max
+        let nb = t.edges[2].bandwidth_hz / devices.len() as f64;
+        let naive: Vec<(usize, DeviceAlloc)> = devices
+            .iter()
+            .map(|&n| {
+                (n, DeviceAlloc { bandwidth_hz: nb, freq_hz: t.devices[n].max_freq_hz })
+            })
+            .collect();
+        let ec = edge_cost(&t, 2, &naive);
+        let naive_obj = ec.e + ec.t;
+        assert!(
+            s.objective <= naive_obj * 1.0001,
+            "solver {} vs naive {}",
+            s.objective,
+            naive_obj
+        );
+    }
+
+    #[test]
+    fn more_lambda_means_less_time() {
+        let t = topo();
+        let devices = [3, 8, 13];
+        let s_lo = solve_edge(&t, 0, &devices, 0.1, &SolverOpts::default());
+        let s_hi = solve_edge(&t, 0, &devices, 100.0, &SolverOpts::default());
+        assert!(s_hi.cost.t <= s_lo.cost.t * 1.01, "{} vs {}", s_hi.cost.t, s_lo.cost.t);
+        assert!(s_lo.cost.e <= s_hi.cost.e * 1.01, "{} vs {}", s_lo.cost.e, s_hi.cost.e);
+    }
+
+    #[test]
+    fn single_device_gets_all_bandwidth() {
+        let t = topo();
+        let s = solve_edge(&t, 0, &[42], 1.0, &SolverOpts::default());
+        assert!(
+            (s.allocs[0].bandwidth_hz - t.edges[0].bandwidth_hz).abs()
+                / t.edges[0].bandwidth_hz
+                < 1e-3
+        );
+    }
+
+    #[test]
+    fn projection_respects_bounds_and_sum() {
+        let mut x = vec![0.5, 0.1, 0.9];
+        let lo = vec![0.2, 0.2, 0.2];
+        project_simplex_lb(&mut x, &lo, 1.0);
+        let s: f64 = x.iter().sum();
+        assert!((s - 1.0).abs() < 1e-9);
+        assert!(x.iter().zip(&lo).all(|(&xi, &li)| xi >= li - 1e-12));
+    }
+
+    #[test]
+    fn projection_identity_when_feasible() {
+        let mut x = vec![0.3, 0.3, 0.4];
+        let lo = vec![0.0, 0.0, 0.0];
+        project_simplex_lb(&mut x, &lo, 1.0);
+        assert!((x[0] - 0.3).abs() < 1e-9);
+        assert!((x[2] - 0.4).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,45 @@
+//! Geographic distribution baseline (§VI-B): each device goes to the
+//! nearest edge server.
+
+use super::{Assigner, Assignment};
+use crate::system::Topology;
+
+pub fn assign_geographic(topo: &Topology, scheduled: &[usize]) -> Assignment {
+    let pairs: Vec<(usize, usize)> = scheduled
+        .iter()
+        .map(|&n| (n, topo.nearest_edge(n)))
+        .collect();
+    Assignment::from_pairs(topo.edges.len(), &pairs)
+}
+
+#[derive(Default)]
+pub struct Geographic;
+
+impl Assigner for Geographic {
+    fn assign(&mut self, topo: &Topology, scheduled: &[usize]) -> Assignment {
+        assign_geographic(topo, scheduled)
+    }
+
+    fn name(&self) -> &'static str {
+        "geographic"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::system::SystemParams;
+    use crate::util::Rng;
+
+    #[test]
+    fn assigns_all_to_nearest() {
+        let t = Topology::generate(&SystemParams::default(), &mut Rng::new(4));
+        let sched: Vec<usize> = (0..20).collect();
+        let a = assign_geographic(&t, &sched);
+        assert!(a.is_partition());
+        assert_eq!(a.num_devices(), 20);
+        for &n in &sched {
+            assert_eq!(a.edge_of(n), Some(t.nearest_edge(n)));
+        }
+    }
+}

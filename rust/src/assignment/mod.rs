@@ -1,0 +1,116 @@
+//! Device assignment (§V): map each scheduled device to one edge server.
+//!
+//! * [`hfel`] — the search baseline from [15]: device transferring +
+//!   exchanging adjustments, each accepted only if it lowers the one-round
+//!   objective (17).
+//! * [`drl`] — the paper's contribution: D³QN inference through the AOT
+//!   `dqn_q_all_h<H>` artifact (one PJRT call assigns a whole iteration).
+//! * [`geo`] — geographic baseline (nearest edge server).
+//! * [`random`] / round-robin — sanity baselines.
+
+pub mod drl;
+pub mod geo;
+pub mod hfel;
+pub mod random;
+
+use crate::allocation::{solve_edge, AllocSolution, SolverOpts};
+use crate::system::{IterCost, Topology};
+
+/// An assignment pattern Ψ_i: `groups[m]` = devices of edge m.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Assignment {
+    pub groups: Vec<Vec<usize>>,
+}
+
+impl Assignment {
+    pub fn empty(n_edges: usize) -> Self {
+        Assignment { groups: vec![Vec::new(); n_edges] }
+    }
+
+    /// Build from a per-device edge choice list `[(device, edge)]`.
+    pub fn from_pairs(n_edges: usize, pairs: &[(usize, usize)]) -> Self {
+        let mut a = Self::empty(n_edges);
+        for &(n, m) in pairs {
+            a.groups[m].push(n);
+        }
+        a
+    }
+
+    /// Edge of device `n`, if assigned.
+    pub fn edge_of(&self, n: usize) -> Option<usize> {
+        self.groups.iter().position(|g| g.contains(&n))
+    }
+
+    pub fn num_devices(&self) -> usize {
+        self.groups.iter().map(|g| g.len()).sum()
+    }
+
+    /// Constraint (15f): no device appears in two groups.
+    pub fn is_partition(&self) -> bool {
+        let mut seen = std::collections::HashSet::new();
+        for g in &self.groups {
+            for &n in g {
+                if !seen.insert(n) {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+}
+
+/// Solve resource allocation for every edge group and aggregate the
+/// one-round cost (problem 17 objective evaluation).
+pub fn evaluate(
+    topo: &Topology,
+    assignment: &Assignment,
+    opts: &SolverOpts,
+) -> (IterCost, Vec<AllocSolution>) {
+    let lambda = topo.params.lambda;
+    let mut t_i = 0.0f64;
+    let mut e_i = 0.0f64;
+    let sols: Vec<AllocSolution> = assignment
+        .groups
+        .iter()
+        .enumerate()
+        .map(|(m, g)| {
+            let s = solve_edge(topo, m, g, lambda, opts);
+            if !g.is_empty() {
+                t_i = t_i.max(s.cost.t);
+                e_i += s.cost.e;
+            }
+            s
+        })
+        .collect();
+    (IterCost { t: t_i, e: e_i }, sols)
+}
+
+/// Interface every assignment strategy implements.
+pub trait Assigner {
+    /// Assign each of `scheduled` to an edge. Devices must appear exactly
+    /// once in the result.
+    fn assign(&mut self, topo: &Topology, scheduled: &[usize]) -> Assignment;
+
+    fn name(&self) -> &'static str;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_pairs_and_partition() {
+        let a = Assignment::from_pairs(3, &[(0, 1), (5, 1), (7, 2)]);
+        assert_eq!(a.groups[1], vec![0, 5]);
+        assert_eq!(a.num_devices(), 3);
+        assert!(a.is_partition());
+        assert_eq!(a.edge_of(7), Some(2));
+        assert_eq!(a.edge_of(9), None);
+    }
+
+    #[test]
+    fn detects_duplicates() {
+        let a = Assignment { groups: vec![vec![1, 2], vec![2]] };
+        assert!(!a.is_partition());
+    }
+}

@@ -1,0 +1,76 @@
+//! Random and round-robin assignment baselines (sanity floors).
+
+use super::{Assigner, Assignment};
+use crate::system::Topology;
+use crate::util::Rng;
+
+pub struct RandomAssign {
+    rng: Rng,
+}
+
+impl RandomAssign {
+    pub fn new(seed: u64) -> Self {
+        RandomAssign { rng: Rng::new(seed) }
+    }
+}
+
+impl Assigner for RandomAssign {
+    fn assign(&mut self, topo: &Topology, scheduled: &[usize]) -> Assignment {
+        let m = topo.edges.len();
+        let pairs: Vec<(usize, usize)> = scheduled
+            .iter()
+            .map(|&n| (n, self.rng.below(m)))
+            .collect();
+        Assignment::from_pairs(m, &pairs)
+    }
+
+    fn name(&self) -> &'static str {
+        "random"
+    }
+}
+
+/// Deterministic round-robin: balances group sizes exactly.
+#[derive(Default)]
+pub struct RoundRobin;
+
+impl Assigner for RoundRobin {
+    fn assign(&mut self, topo: &Topology, scheduled: &[usize]) -> Assignment {
+        let m = topo.edges.len();
+        let pairs: Vec<(usize, usize)> = scheduled
+            .iter()
+            .enumerate()
+            .map(|(i, &n)| (n, i % m))
+            .collect();
+        Assignment::from_pairs(m, &pairs)
+    }
+
+    fn name(&self) -> &'static str {
+        "round-robin"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::system::SystemParams;
+
+    #[test]
+    fn random_is_valid_partition() {
+        let t = Topology::generate(&SystemParams::default(), &mut Rng::new(5));
+        let sched: Vec<usize> = (10..60).collect();
+        let mut r = RandomAssign::new(1);
+        let a = r.assign(&t, &sched);
+        assert!(a.is_partition());
+        assert_eq!(a.num_devices(), 50);
+    }
+
+    #[test]
+    fn round_robin_balances() {
+        let t = Topology::generate(&SystemParams::default(), &mut Rng::new(5));
+        let sched: Vec<usize> = (0..50).collect();
+        let a = RoundRobin.assign(&t, &sched);
+        for g in &a.groups {
+            assert_eq!(g.len(), 10);
+        }
+    }
+}

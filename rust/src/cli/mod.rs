@@ -1,0 +1,142 @@
+//! Hand-rolled CLI argument parsing (no clap on this offline image).
+//!
+//! Grammar: `hfl <subcommand> [--key value]... [--flag]...`
+//! Values never start with `--`; unknown keys are an error so typos fail
+//! loudly instead of silently running the default experiment.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: String,
+    pub positional: Vec<String>,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    consumed: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> anyhow::Result<Args> {
+        let mut a = Args::default();
+        let mut it = argv.iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(key) = tok.strip_prefix("--") {
+                match it.peek() {
+                    Some(v) if !v.starts_with("--") => {
+                        a.opts.insert(key.to_string(), it.next().unwrap().clone());
+                    }
+                    _ => a.flags.push(key.to_string()),
+                }
+            } else if a.subcommand.is_empty() {
+                a.subcommand = tok.clone();
+            } else {
+                a.positional.push(tok.clone());
+            }
+        }
+        Ok(a)
+    }
+
+    fn mark(&self, key: &str) {
+        self.consumed.borrow_mut().push(key.to_string());
+    }
+
+    pub fn opt(&self, key: &str) -> Option<&str> {
+        self.mark(key);
+        self.opts.get(key).map(String::as_str)
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.mark(key);
+        self.flags.iter().any(|f| f == key)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> anyhow::Result<usize> {
+        match self.opt(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key}: expected integer, got {v:?}")),
+        }
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> anyhow::Result<u64> {
+        match self.opt(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key}: expected integer, got {v:?}")),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> anyhow::Result<f64> {
+        match self.opt(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key}: expected number, got {v:?}")),
+        }
+    }
+
+    pub fn get_str(&self, key: &str, default: &str) -> String {
+        self.opt(key).unwrap_or(default).to_string()
+    }
+
+    /// Comma-separated usize list, e.g. `--h-values 10,30,50`.
+    pub fn get_usize_list(&self, key: &str, default: &[usize]) -> anyhow::Result<Vec<usize>> {
+        match self.opt(key) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|p| {
+                    p.trim()
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("--{key}: bad list item {p:?}"))
+                })
+                .collect(),
+        }
+    }
+
+    /// Error on unrecognized options (call after all gets).
+    pub fn finish(&self) -> anyhow::Result<()> {
+        let seen = self.consumed.borrow();
+        for k in self.opts.keys() {
+            anyhow::ensure!(seen.contains(k), "unknown option --{k}");
+        }
+        for k in &self.flags {
+            anyhow::ensure!(seen.contains(k), "unknown flag --{k}");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(str::to_string).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_opts_flags() {
+        let a = Args::parse(&argv("exp fig3 --seeds 5 --fast --h-values 10,30")).unwrap();
+        assert_eq!(a.subcommand, "exp");
+        assert_eq!(a.positional, vec!["fig3"]);
+        assert_eq!(a.get_usize("seeds", 1).unwrap(), 5);
+        assert!(a.flag("fast"));
+        assert_eq!(a.get_usize_list("h-values", &[]).unwrap(), vec![10, 30]);
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn unknown_option_fails_finish() {
+        let a = Args::parse(&argv("train --oops 3")).unwrap();
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn bad_number_errors() {
+        let a = Args::parse(&argv("x --seeds five")).unwrap();
+        assert!(a.get_usize("seeds", 1).is_err());
+    }
+}

@@ -1,0 +1,168 @@
+//! Typed experiment configuration: defaults ← config file ← CLI overrides.
+
+pub mod toml;
+
+use std::path::Path;
+
+use crate::system::SystemParams;
+use toml::{parse, Table, Value};
+
+/// Everything an experiment run needs, resolvable from a profile file plus
+/// command-line overrides. Field names mirror the `key = value` names.
+#[derive(Clone, Debug)]
+pub struct Config {
+    pub system: SystemParams,
+    /// Datasets to run (`fmnist`, `cifar`).
+    pub datasets: Vec<String>,
+    /// H values swept by the experiments.
+    pub h_values: Vec<usize>,
+    pub k_clusters: usize,
+    pub lr: f32,
+    pub seeds: usize,
+    pub max_iters: usize,
+    pub test_size: usize,
+    pub frac_major: f64,
+    /// Target accuracies per dataset (recalibrated for synthetic data).
+    pub target_acc_fmnist: f64,
+    pub target_acc_cifar: f64,
+    /// DRL training episodes (Fig. 5).
+    pub drl_episodes: usize,
+    /// Fig. 6 evaluation iterations.
+    pub assign_eval_iters: usize,
+    /// Output directory for CSVs.
+    pub out_dir: String,
+    pub artifact_dir: String,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            system: SystemParams::default(),
+            datasets: vec!["fmnist".into(), "cifar".into()],
+            h_values: vec![10, 30, 50, 100],
+            k_clusters: 10,
+            lr: 0.01,
+            seeds: 2,
+            max_iters: 12,
+            test_size: 500,
+            frac_major: 0.8,
+            target_acc_fmnist: 0.95,
+            target_acc_cifar: 0.70,
+            drl_episodes: 250,
+            assign_eval_iters: 40,
+            out_dir: "results".into(),
+            artifact_dir: "artifacts".into(),
+            seed: 0,
+        }
+    }
+}
+
+fn get_usize(t: &Table, key: &str, dst: &mut usize) {
+    if let Some(v) = t.get(key).and_then(Value::as_usize) {
+        *dst = v;
+    }
+}
+
+fn get_f64(t: &Table, key: &str, dst: &mut f64) {
+    if let Some(v) = t.get(key).and_then(Value::as_f64) {
+        *dst = v;
+    }
+}
+
+impl Config {
+    /// Apply a parsed table on top of the current values.
+    pub fn apply(&mut self, t: &Table) {
+        if let Some(v) = t.get("datasets").and_then(Value::as_arr) {
+            self.datasets = v
+                .iter()
+                .filter_map(|x| x.as_str().map(str::to_string))
+                .collect();
+        }
+        if let Some(v) = t.get("h_values").and_then(Value::as_arr) {
+            self.h_values = v.iter().filter_map(Value::as_usize).collect();
+        }
+        get_usize(t, "k_clusters", &mut self.k_clusters);
+        if let Some(v) = t.get("lr").and_then(Value::as_f64) {
+            self.lr = v as f32;
+        }
+        get_usize(t, "seeds", &mut self.seeds);
+        get_usize(t, "max_iters", &mut self.max_iters);
+        get_usize(t, "test_size", &mut self.test_size);
+        get_f64(t, "frac_major", &mut self.frac_major);
+        get_f64(t, "target_acc_fmnist", &mut self.target_acc_fmnist);
+        get_f64(t, "target_acc_cifar", &mut self.target_acc_cifar);
+        get_usize(t, "drl_episodes", &mut self.drl_episodes);
+        get_usize(t, "assign_eval_iters", &mut self.assign_eval_iters);
+        if let Some(v) = t.get("out_dir").and_then(Value::as_str) {
+            self.out_dir = v.to_string();
+        }
+        if let Some(v) = t.get("artifact_dir").and_then(Value::as_str) {
+            self.artifact_dir = v.to_string();
+        }
+        if let Some(v) = t.get("seed").and_then(Value::as_f64) {
+            self.seed = v as u64;
+        }
+        // [system] section
+        get_usize(t, "system.n_devices", &mut self.system.n_devices);
+        get_usize(t, "system.n_edges", &mut self.system.n_edges);
+        get_f64(t, "system.lambda", &mut self.system.lambda);
+        get_f64(t, "system.alpha", &mut self.system.alpha);
+        get_f64(t, "system.area_side_m", &mut self.system.area_side_m);
+        get_f64(t, "system.cloud_bw_hz", &mut self.system.cloud_bw_hz);
+        get_usize(t, "system.local_iters", &mut self.system.local_iters);
+        get_usize(t, "system.edge_iters", &mut self.system.edge_iters);
+    }
+
+    pub fn load(path: &Path) -> anyhow::Result<Config> {
+        let text = std::fs::read_to_string(path)?;
+        let table = parse(&text)?;
+        let mut cfg = Config::default();
+        cfg.apply(&table);
+        Ok(cfg)
+    }
+
+    pub fn target_acc(&self, dataset: &str) -> f64 {
+        match dataset {
+            "cifar" => self.target_acc_cifar,
+            _ => self.target_acc_fmnist,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_table1() {
+        let c = Config::default();
+        assert_eq!(c.system.n_devices, 100);
+        assert_eq!(c.system.n_edges, 5);
+        assert_eq!(c.k_clusters, 10);
+        assert_eq!(c.h_values, vec![10, 30, 50, 100]);
+        assert!((c.lr - 0.01).abs() < 1e-9);
+    }
+
+    #[test]
+    fn apply_overrides() {
+        let t = parse(
+            r#"
+            seeds = 5
+            h_values = [30, 50]
+            datasets = ["fmnist"]
+            [system]
+            lambda = 2.0
+            n_devices = 60
+            "#,
+        )
+        .unwrap();
+        let mut c = Config::default();
+        c.apply(&t);
+        assert_eq!(c.seeds, 5);
+        assert_eq!(c.h_values, vec![30, 50]);
+        assert_eq!(c.datasets, vec!["fmnist".to_string()]);
+        assert_eq!(c.system.lambda, 2.0);
+        assert_eq!(c.system.n_devices, 60);
+    }
+}

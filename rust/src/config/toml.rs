@@ -1,0 +1,152 @@
+//! Minimal TOML-subset parser for experiment configuration files.
+//!
+//! Supported: `[section]` headers, `key = value` with strings, numbers,
+//! booleans and flat arrays, `#` comments. That covers every config this
+//! project ships; nested tables/dates are rejected loudly.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Num(f64),
+    Bool(bool),
+    Arr(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_f64().map(|x| x as usize)
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Value]> {
+        match self {
+            Value::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// `section.key -> value` (top-level keys use an empty section name).
+pub type Table = BTreeMap<String, Value>;
+
+fn parse_value(s: &str, line_no: usize) -> anyhow::Result<Value> {
+    let s = s.trim();
+    if s.starts_with('"') && s.ends_with('"') && s.len() >= 2 {
+        return Ok(Value::Str(s[1..s.len() - 1].to_string()));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if s.starts_with('[') && s.ends_with(']') {
+        let inner = &s[1..s.len() - 1];
+        let mut items = Vec::new();
+        if !inner.trim().is_empty() {
+            for part in inner.split(',') {
+                items.push(parse_value(part, line_no)?);
+            }
+        }
+        return Ok(Value::Arr(items));
+    }
+    s.parse::<f64>()
+        .map(Value::Num)
+        .map_err(|_| anyhow::anyhow!("line {line_no}: cannot parse value {s:?}"))
+}
+
+/// Parse a config document into a flat `section.key` table.
+pub fn parse(text: &str) -> anyhow::Result<Table> {
+    let mut out = Table::new();
+    let mut section = String::new();
+    for (i, raw) in text.lines().enumerate() {
+        let line_no = i + 1;
+        // strip comments (naive: '#' inside strings unsupported, rejected)
+        let line = match raw.find('#') {
+            Some(p) if !raw[..p].contains('"') || raw[..p].matches('"').count() % 2 == 0 => {
+                &raw[..p]
+            }
+            _ => raw,
+        };
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        if line.starts_with('[') {
+            anyhow::ensure!(
+                line.ends_with(']') && !line.contains('.'),
+                "line {line_no}: bad section {line:?} (nested tables unsupported)"
+            );
+            section = line[1..line.len() - 1].trim().to_string();
+            continue;
+        }
+        let eq = line
+            .find('=')
+            .ok_or_else(|| anyhow::anyhow!("line {line_no}: expected key = value"))?;
+        let key = line[..eq].trim();
+        anyhow::ensure!(!key.is_empty(), "line {line_no}: empty key");
+        let val = parse_value(&line[eq + 1..], line_no)?;
+        let full = if section.is_empty() {
+            key.to_string()
+        } else {
+            format!("{section}.{key}")
+        };
+        out.insert(full, val);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let t = parse(
+            r#"
+            # experiment profile
+            name = "fig3"
+            seeds = 3
+            [system]
+            lambda = 1.5
+            fast = true
+            hs = [10, 30, 50]
+            "#,
+        )
+        .unwrap();
+        assert_eq!(t["name"].as_str(), Some("fig3"));
+        assert_eq!(t["seeds"].as_usize(), Some(3));
+        assert_eq!(t["system.lambda"].as_f64(), Some(1.5));
+        assert_eq!(t["system.fast"].as_bool(), Some(true));
+        assert_eq!(t["system.hs"].as_arr().unwrap().len(), 3);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse("key").is_err());
+        assert!(parse("x = what").is_err());
+        assert!(parse("[a.b]\nx = 1").is_err());
+    }
+}

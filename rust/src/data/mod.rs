@@ -1,0 +1,8 @@
+//! Datasets: synthetic FashionMNIST/CIFAR-10 stand-ins (offline image —
+//! DESIGN.md §5) and the non-IID per-device partitioner (§IV-A).
+
+pub mod partition;
+pub mod synth;
+
+pub use partition::{partition, DeviceData};
+pub use synth::{SynthSpec, Templates, TestSet, NUM_CLASSES};

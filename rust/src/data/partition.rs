@@ -1,0 +1,187 @@
+//! Non-IID device data partitioning (§IV-A).
+//!
+//! Each device owns a finite, deterministic local dataset of `D_n` samples:
+//! a fraction `frac_major` belongs to the device's majority class, the rest
+//! is spread uniformly over the other classes. Sample `i` of device `n` is
+//! a pure function of `(dataset seed, n, i)` so minibatches can be generated
+//! lazily (see `synth.rs`).
+
+use super::synth::{Templates, NUM_CLASSES};
+use crate::util::Rng;
+
+/// One device's local dataset view.
+#[derive(Clone, Debug)]
+pub struct DeviceData {
+    pub device: usize,
+    /// Majority class of this device — the clustering ground truth for ARI.
+    pub majority: usize,
+    /// `D_n` — number of local samples.
+    pub n_samples: usize,
+    /// Fraction of samples drawn from the majority class.
+    pub frac_major: f64,
+    seed: u64,
+}
+
+impl DeviceData {
+    /// Class label of local sample `idx` (deterministic).
+    pub fn class_of(&self, idx: usize) -> usize {
+        assert!(idx < self.n_samples, "sample {idx} >= D_n {}", self.n_samples);
+        let n_major = (self.frac_major * self.n_samples as f64).round() as usize;
+        if idx < n_major {
+            self.majority
+        } else {
+            // spread remaining samples over the other 9 classes, determined
+            // by a per-index hash so classes interleave
+            let mut h = Rng::new(self.seed ^ (idx as u64).wrapping_mul(0x517c_c1b7));
+            let mut c = h.below(NUM_CLASSES - 1);
+            if c >= self.majority {
+                c += 1;
+            }
+            c
+        }
+    }
+
+    /// Unique generation key for local sample `idx`.
+    fn sample_key(&self, idx: usize) -> u64 {
+        self.seed
+            .wrapping_mul(0x2545_F491_4F6C_DD1D)
+            .wrapping_add((self.device as u64) << 32)
+            .wrapping_add(idx as u64)
+    }
+
+    /// Generate local sample `idx` into `x` and return its class.
+    pub fn gen(&self, templates: &Templates, idx: usize, x: &mut [f32]) -> usize {
+        let class = self.class_of(idx);
+        templates.gen_sample(class, self.sample_key(idx), x);
+        class
+    }
+
+    /// Fill a flat minibatch: `x` is `bsz*pixels`, `y_onehot` is `bsz*10`.
+    /// Sample indices are drawn uniformly with replacement from the local
+    /// dataset (minibatch SGD; see DESIGN.md §5).
+    pub fn fill_batch(
+        &self,
+        templates: &Templates,
+        rng: &mut Rng,
+        bsz: usize,
+        x: &mut [f32],
+        y_onehot: &mut [f32],
+    ) {
+        let pixels = templates.spec().pixels();
+        debug_assert_eq!(x.len(), bsz * pixels);
+        debug_assert_eq!(y_onehot.len(), bsz * NUM_CLASSES);
+        y_onehot.fill(0.0);
+        for b in 0..bsz {
+            let idx = rng.below(self.n_samples);
+            let class = self.gen(templates, idx, &mut x[b * pixels..(b + 1) * pixels]);
+            y_onehot[b * NUM_CLASSES + class] = 1.0;
+        }
+    }
+
+    /// Empirical class histogram of the full local dataset.
+    pub fn class_histogram(&self) -> [usize; NUM_CLASSES] {
+        let mut h = [0usize; NUM_CLASSES];
+        for i in 0..self.n_samples {
+            h[self.class_of(i)] += 1;
+        }
+        h
+    }
+}
+
+/// Build the per-device non-IID partition for a fleet of `n_devices`.
+/// Majority classes rotate (device n -> class n mod 10) then are shuffled,
+/// so each class has ~N/10 devices — matching K=10 recoverable clusters.
+pub fn partition(
+    n_devices: usize,
+    samples: &[usize],
+    frac_major: f64,
+    seed: u64,
+) -> Vec<DeviceData> {
+    assert_eq!(samples.len(), n_devices);
+    let mut majorities: Vec<usize> = (0..n_devices).map(|n| n % NUM_CLASSES).collect();
+    let mut rng = Rng::new(seed ^ 0x0bad_cafe_f00d_d00d);
+    rng.shuffle(&mut majorities);
+    (0..n_devices)
+        .map(|n| DeviceData {
+            device: n,
+            majority: majorities[n],
+            n_samples: samples[n],
+            frac_major,
+            seed: seed.wrapping_add(0x9E37_79B9).wrapping_mul(n as u64 | 1),
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::SynthSpec;
+
+    #[test]
+    fn majority_fraction_respected() {
+        let dd = &partition(10, &vec![500; 10], 0.8, 1)[3];
+        let h = dd.class_histogram();
+        let frac = h[dd.majority] as f64 / 500.0;
+        assert!((frac - 0.8).abs() < 0.02, "{frac}");
+        // all other classes present
+        let others = (0..NUM_CLASSES).filter(|&c| c != dd.majority);
+        for c in others {
+            assert!(h[c] > 0, "class {c} missing: {h:?}");
+        }
+    }
+
+    #[test]
+    fn majorities_cover_all_classes_evenly() {
+        let parts = partition(100, &vec![400; 100], 0.8, 2);
+        let mut per_class = [0usize; NUM_CLASSES];
+        for p in &parts {
+            per_class[p.majority] += 1;
+        }
+        assert!(per_class.iter().all(|&c| c == 10), "{per_class:?}");
+    }
+
+    #[test]
+    fn class_of_is_stable() {
+        let dd = &partition(5, &vec![100; 5], 0.7, 3)[0];
+        let first: Vec<usize> = (0..100).map(|i| dd.class_of(i)).collect();
+        let second: Vec<usize> = (0..100).map(|i| dd.class_of(i)).collect();
+        assert_eq!(first, second);
+    }
+
+    #[test]
+    fn batches_are_filled_with_onehot_labels() {
+        let spec = SynthSpec::fmnist();
+        let t = Templates::generate(&spec, 1);
+        let dd = &partition(4, &vec![300; 4], 0.8, 4)[1];
+        let mut rng = Rng::new(5);
+        let bsz = 16;
+        let mut x = vec![0.0f32; bsz * spec.pixels()];
+        let mut y = vec![0.0f32; bsz * NUM_CLASSES];
+        dd.fill_batch(&t, &mut rng, bsz, &mut x, &mut y);
+        for b in 0..bsz {
+            let row = &y[b * NUM_CLASSES..(b + 1) * NUM_CLASSES];
+            assert_eq!(row.iter().filter(|&&v| v == 1.0).count(), 1);
+            assert_eq!(row.iter().filter(|&&v| v == 0.0).count(), NUM_CLASSES - 1);
+        }
+        assert!(x.iter().any(|&v| v != 0.0));
+    }
+
+    #[test]
+    fn different_devices_get_different_data() {
+        let spec = SynthSpec::fmnist();
+        let t = Templates::generate(&spec, 1);
+        let parts = partition(2, &vec![100; 2], 0.8, 6);
+        let mut a = vec![0.0f32; spec.pixels()];
+        let mut b = vec![0.0f32; spec.pixels()];
+        parts[0].gen(&t, 0, &mut a);
+        parts[1].gen(&t, 0, &mut b);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    #[should_panic]
+    fn class_of_out_of_range_panics() {
+        let dd = &partition(1, &vec![10; 1], 0.8, 7)[0];
+        dd.class_of(10);
+    }
+}

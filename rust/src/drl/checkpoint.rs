@@ -1,0 +1,66 @@
+//! Tiny binary checkpoint format for flat f32 parameter vectors.
+//!
+//! Layout: magic `HFLTHET1` (8 bytes) | u64 LE element count | f32 LE data.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"HFLTHET1";
+
+pub fn save_params(path: &Path, params: &[f32]) -> anyhow::Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(MAGIC)?;
+    f.write_all(&(params.len() as u64).to_le_bytes())?;
+    let mut bytes = Vec::with_capacity(params.len() * 4);
+    for &x in params {
+        bytes.extend_from_slice(&x.to_le_bytes());
+    }
+    f.write_all(&bytes)?;
+    Ok(())
+}
+
+pub fn load_params(path: &Path) -> anyhow::Result<Vec<f32>> {
+    let mut f = std::fs::File::open(path)
+        .map_err(|e| anyhow::anyhow!("open {}: {e}", path.display()))?;
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    anyhow::ensure!(&magic == MAGIC, "{} is not a theta checkpoint", path.display());
+    let mut lenb = [0u8; 8];
+    f.read_exact(&mut lenb)?;
+    let len = u64::from_le_bytes(lenb) as usize;
+    let mut bytes = vec![0u8; len * 4];
+    f.read_exact(&mut bytes)?;
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("hfl_ckpt_test");
+        let path = dir.join("theta.bin");
+        let params: Vec<f32> = (0..1000).map(|i| (i as f32).sin()).collect();
+        save_params(&path, &params).unwrap();
+        let back = load_params(&path).unwrap();
+        assert_eq!(params, back);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let dir = std::env::temp_dir().join("hfl_ckpt_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.bin");
+        std::fs::write(&path, b"not a checkpoint").unwrap();
+        assert!(load_params(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,116 @@
+//! D³QN episode features (eqs. 24–25).
+//!
+//! The state of an assignment episode is the min–max-normalized feature
+//! sequence `χ_{n_1}..χ_{n_H}`, `χ_n = (g̃_n^1..g̃_n^M, ũ_n, D̃_n, p̃_n)`.
+//! Normalization is column-wise over the scheduled set, so features land in
+//! [0,1] regardless of the iteration's device draw.
+
+use crate::system::Topology;
+
+/// Row-major `(H, F)` feature matrix for one episode.
+#[derive(Clone, Debug)]
+pub struct EpisodeFeatures {
+    pub feats: Vec<f32>,
+    pub h: usize,
+    pub f: usize,
+}
+
+/// Build raw (unnormalized) features for one device.
+fn raw_features(topo: &Topology, n: usize, out: &mut [f64]) {
+    let d = &topo.devices[n];
+    let m = topo.edges.len();
+    for (j, &g) in d.gain_to_edge.iter().enumerate() {
+        // gains span orders of magnitude: normalize in log domain
+        out[j] = g.log10();
+    }
+    out[m] = d.cycles_per_sample;
+    out[m + 1] = d.num_samples as f64;
+    out[m + 2] = d.tx_power_w;
+}
+
+/// Eq. 24–25: features for `scheduled` (episode device order = slice order).
+pub fn build_features(topo: &Topology, scheduled: &[usize]) -> EpisodeFeatures {
+    let m = topo.edges.len();
+    let f = m + 3;
+    let h = scheduled.len();
+    let mut raw = vec![0.0f64; h * f];
+    for (t, &n) in scheduled.iter().enumerate() {
+        raw_features(topo, n, &mut raw[t * f..(t + 1) * f]);
+    }
+    // column-wise min–max normalization
+    let mut feats = vec![0.0f32; h * f];
+    for c in 0..f {
+        let mut lo = f64::INFINITY;
+        let mut hi = f64::NEG_INFINITY;
+        for t in 0..h {
+            lo = lo.min(raw[t * f + c]);
+            hi = hi.max(raw[t * f + c]);
+        }
+        let span = hi - lo;
+        for t in 0..h {
+            feats[t * f + c] = if span > 0.0 {
+                ((raw[t * f + c] - lo) / span) as f32
+            } else {
+                0.5
+            };
+        }
+    }
+    EpisodeFeatures { feats, h, f }
+}
+
+impl EpisodeFeatures {
+    /// Zero-pad (or truncate is forbidden) to a larger horizon.
+    pub fn pad_to(&self, horizon: usize) -> EpisodeFeatures {
+        assert!(horizon >= self.h, "cannot truncate an episode");
+        let mut feats = vec![0.0f32; horizon * self.f];
+        feats[..self.h * self.f].copy_from_slice(&self.feats);
+        EpisodeFeatures { feats, h: horizon, f: self.f }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::system::SystemParams;
+    use crate::util::Rng;
+
+    fn topo() -> Topology {
+        Topology::generate(&SystemParams::default(), &mut Rng::new(9))
+    }
+
+    #[test]
+    fn features_normalized_to_unit_range() {
+        let t = topo();
+        let sched: Vec<usize> = (0..50).collect();
+        let ef = build_features(&t, &sched);
+        assert_eq!(ef.h, 50);
+        assert_eq!(ef.f, 8);
+        assert!(ef.feats.iter().all(|&v| (0.0..=1.0).contains(&v)));
+        // every column must hit both 0 and 1 (true min-max)
+        for c in 0..ef.f {
+            let col: Vec<f32> = (0..50).map(|t| ef.feats[t * 8 + c]).collect();
+            let lo = col.iter().cloned().fold(f32::INFINITY, f32::min);
+            let hi = col.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            assert!(lo.abs() < 1e-6, "col {c} min {lo}");
+            assert!((hi - 1.0).abs() < 1e-6, "col {c} max {hi}");
+        }
+    }
+
+    #[test]
+    fn constant_column_maps_to_half() {
+        let t = topo();
+        // single device: all columns degenerate
+        let ef = build_features(&t, &[3]);
+        assert!(ef.feats.iter().all(|&v| (v - 0.5).abs() < 1e-6));
+    }
+
+    #[test]
+    fn pad_preserves_prefix() {
+        let t = topo();
+        let ef = build_features(&t, &[1, 2, 3]);
+        let padded = ef.pad_to(10);
+        assert_eq!(padded.h, 10);
+        assert_eq!(&padded.feats[..3 * 8], &ef.feats[..]);
+        assert!(padded.feats[3 * 8..].iter().all(|&v| v == 0.0));
+    }
+}

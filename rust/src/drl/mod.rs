@@ -1,0 +1,12 @@
+//! Deep reinforcement learning for device assignment (§V): episode feature
+//! construction (eqs. 24–25), the replay buffer Ω, the Algorithm 5 training
+//! loop and flat-parameter checkpoints.
+
+pub mod checkpoint;
+pub mod episode;
+pub mod replay;
+pub mod trainer;
+
+pub use episode::{build_features, EpisodeFeatures};
+pub use replay::{Batch, ReplayBuffer, Transition};
+pub use trainer::{DqnTrainConfig, DqnTrainer, TrainResult};

@@ -1,0 +1,134 @@
+//! Replay buffer Ω for D³QN training (§V-B).
+//!
+//! A transition references its episode's feature matrix via `Rc` — the
+//! state is `(episode features, t)`, so storing the matrix once per episode
+//! instead of twice per transition cuts memory ~100×.
+
+use std::rc::Rc;
+
+use crate::util::Rng;
+
+#[derive(Clone)]
+pub struct Transition {
+    /// Shared `(H, F)` episode feature matrix.
+    pub feats: Rc<Vec<f32>>,
+    pub t: i32,
+    pub action: i32,
+    pub reward: f32,
+    /// 1.0 when `t` is the last slot of the episode.
+    pub done: f32,
+}
+
+/// Fixed-capacity ring buffer with uniform sampling.
+pub struct ReplayBuffer {
+    buf: Vec<Transition>,
+    cap: usize,
+    next: usize,
+}
+
+/// A sampled minibatch in the flat layout the `dqn_train` artifact expects.
+pub struct Batch {
+    /// `(O, H, F)` flattened.
+    pub feats: Vec<f32>,
+    pub t: Vec<i32>,
+    pub action: Vec<i32>,
+    pub reward: Vec<f32>,
+    pub done: Vec<f32>,
+}
+
+impl ReplayBuffer {
+    pub fn new(cap: usize) -> Self {
+        assert!(cap > 0);
+        ReplayBuffer { buf: Vec::with_capacity(cap), cap, next: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn push(&mut self, tr: Transition) {
+        if self.buf.len() < self.cap {
+            self.buf.push(tr);
+        } else {
+            self.buf[self.next] = tr;
+        }
+        self.next = (self.next + 1) % self.cap;
+    }
+
+    /// Uniformly sample `o` transitions (with replacement) into the flat
+    /// batch layout. `hf` = H*F elements per episode matrix.
+    pub fn sample(&self, o: usize, hf: usize, rng: &mut Rng) -> Batch {
+        assert!(!self.buf.is_empty(), "sampling from empty replay buffer");
+        let mut b = Batch {
+            feats: Vec::with_capacity(o * hf),
+            t: Vec::with_capacity(o),
+            action: Vec::with_capacity(o),
+            reward: Vec::with_capacity(o),
+            done: Vec::with_capacity(o),
+        };
+        for _ in 0..o {
+            let tr = &self.buf[rng.below(self.buf.len())];
+            debug_assert_eq!(tr.feats.len(), hf);
+            b.feats.extend_from_slice(&tr.feats);
+            b.t.push(tr.t);
+            b.action.push(tr.action);
+            b.reward.push(tr.reward);
+            b.done.push(tr.done);
+        }
+        b
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tr(t: i32) -> Transition {
+        Transition {
+            feats: Rc::new(vec![t as f32; 6]),
+            t,
+            action: t % 3,
+            reward: 1.0,
+            done: 0.0,
+        }
+    }
+
+    #[test]
+    fn ring_overwrites_oldest() {
+        let mut rb = ReplayBuffer::new(3);
+        for i in 0..5 {
+            rb.push(tr(i));
+        }
+        assert_eq!(rb.len(), 3);
+        let ts: Vec<i32> = rb.buf.iter().map(|x| x.t).collect();
+        // slots: [3, 4, 2]
+        assert!(ts.contains(&2) && ts.contains(&3) && ts.contains(&4));
+        assert!(!ts.contains(&0) && !ts.contains(&1));
+    }
+
+    #[test]
+    fn sample_layout() {
+        let mut rb = ReplayBuffer::new(10);
+        for i in 0..4 {
+            rb.push(tr(i));
+        }
+        let b = rb.sample(8, 6, &mut Rng::new(1));
+        assert_eq!(b.feats.len(), 8 * 6);
+        assert_eq!(b.t.len(), 8);
+        // every sampled feats block matches its t marker
+        for i in 0..8 {
+            assert_eq!(b.feats[i * 6], b.t[i] as f32);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn sample_empty_panics() {
+        let rb = ReplayBuffer::new(2);
+        rb.sample(1, 6, &mut Rng::new(0));
+    }
+}

@@ -1,0 +1,149 @@
+//! Shared experiment plumbing: scheduler/assigner factories and CSV paths.
+
+use std::path::{Path, PathBuf};
+
+use crate::assignment::drl::DrlAssigner;
+use crate::assignment::geo::Geographic;
+use crate::assignment::hfel::Hfel;
+use crate::assignment::random::{RandomAssign, RoundRobin};
+use crate::assignment::Assigner;
+use crate::config::Config;
+use crate::data::{DeviceData, Templates};
+use crate::runtime::Engine;
+use crate::scheduling::{cluster_devices, AuxModel, FedAvg, Ikc, Scheduler, Vkc};
+use crate::system::Topology;
+use crate::util::Rng;
+
+/// Scheduling algorithm selector.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SchedKind {
+    FedAvg,
+    Vkc,
+    Ikc,
+}
+
+impl SchedKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SchedKind::FedAvg => "fedavg",
+            SchedKind::Vkc => "vkc",
+            SchedKind::Ikc => "ikc",
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "fedavg" => Ok(SchedKind::FedAvg),
+            "vkc" => Ok(SchedKind::Vkc),
+            "ikc" => Ok(SchedKind::Ikc),
+            _ => anyhow::bail!("unknown scheduler {s:?} (fedavg|vkc|ikc)"),
+        }
+    }
+}
+
+/// Assignment strategy selector.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum AssignKind {
+    Drl(Option<PathBuf>),
+    Hfel(usize),
+    Geo,
+    RoundRobin,
+    Random,
+}
+
+impl AssignKind {
+    pub fn parse(s: &str, ckpt: Option<PathBuf>) -> anyhow::Result<Self> {
+        Ok(match s {
+            "drl" | "d3qn" => AssignKind::Drl(ckpt),
+            "hfel" | "hfel-300" => AssignKind::Hfel(300),
+            "hfel-100" => AssignKind::Hfel(100),
+            "geo" | "geographic" => AssignKind::Geo,
+            "round-robin" | "rr" => AssignKind::RoundRobin,
+            "random" => AssignKind::Random,
+            _ => anyhow::bail!("unknown assigner {s:?} (drl|hfel|hfel-100|geo|rr|random)"),
+        })
+    }
+}
+
+/// Build the scheduler. VKC/IKC require clusters from Algorithm 2.
+pub fn make_scheduler(
+    kind: SchedKind,
+    clusters: Option<Vec<Vec<usize>>>,
+    n_devices: usize,
+    h: usize,
+    seed: u64,
+) -> anyhow::Result<Box<dyn Scheduler>> {
+    Ok(match kind {
+        SchedKind::FedAvg => Box::new(FedAvg::new(n_devices, h, seed)),
+        SchedKind::Vkc => Box::new(Vkc::new(
+            clusters.ok_or_else(|| anyhow::anyhow!("vkc needs clusters"))?,
+            n_devices,
+            h,
+            seed,
+        )),
+        SchedKind::Ikc => Box::new(Ikc::new(
+            clusters.ok_or_else(|| anyhow::anyhow!("ikc needs clusters"))?,
+            n_devices,
+            h,
+            seed,
+        )),
+    })
+}
+
+/// Build the assigner. `Drl(None)` tries `<out_dir>/dqn_theta.bin` then
+/// falls back to a fresh (untrained) agent with a warning.
+pub fn make_assigner<'e>(
+    kind: &AssignKind,
+    engine: &'e Engine,
+    cfg: &Config,
+    seed: u64,
+) -> anyhow::Result<Box<dyn Assigner + 'e>> {
+    Ok(match kind {
+        AssignKind::Drl(path) => {
+            let p = path
+                .clone()
+                .unwrap_or_else(|| default_checkpoint(cfg));
+            match DrlAssigner::from_checkpoint(engine, &p) {
+                Ok(a) => Box::new(a),
+                Err(e) => {
+                    log::warn!(
+                        "no DRL checkpoint at {} ({e}); using untrained agent — \
+                         run `hfl drl-train` first for paper-faithful results",
+                        p.display()
+                    );
+                    Box::new(DrlAssigner::fresh(engine, seed)?)
+                }
+            }
+        }
+        AssignKind::Hfel(k) => Box::new(Hfel::new(*k, seed)),
+        AssignKind::Geo => Box::new(Geographic),
+        AssignKind::RoundRobin => Box::new(RoundRobin),
+        AssignKind::Random => Box::new(RandomAssign::new(seed)),
+    })
+}
+
+pub fn default_checkpoint(cfg: &Config) -> PathBuf {
+    Path::new(&cfg.out_dir).join("dqn_theta.bin")
+}
+
+/// Run Algorithm 2 once for a deployment (used by VKC/IKC experiment arms).
+pub fn clusters_for(
+    engine: &Engine,
+    topo: &Topology,
+    templates: &Templates,
+    device_data: &[DeviceData],
+    aux: AuxModel,
+    k: usize,
+    seed: u64,
+) -> anyhow::Result<Vec<Vec<usize>>> {
+    let mut rng = Rng::new(seed ^ 0xC1u64);
+    let res = cluster_devices(
+        engine, topo, templates, device_data, aux, k, aux.cluster_lr(), &mut rng,
+    )?;
+    log::info!("algorithm 2: ARI {:.3}, {:.1}s, {:.1}J", res.ari, res.time_s, res.energy_j);
+    Ok(res.clusters)
+}
+
+pub fn csv_path(cfg: &Config, name: &str) -> PathBuf {
+    Path::new(&cfg.out_dir).join(name)
+}

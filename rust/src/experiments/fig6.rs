@@ -1,0 +1,123 @@
+//! Fig. 6 — device assignment strategy comparison over random deployments:
+//! (a) time delay T_i, (b) energy E_i, (c) objective E_i + λT_i,
+//! plus the assigning latency each strategy needs (the D³QN speed claim).
+//!
+//! Per §VI-B: H=50 scheduled devices, λ=1, 100 random iterations; baselines
+//! HFEL-100, HFEL-300 (100 transfers + 100/300 exchanges) and geographic.
+
+use std::time::Instant;
+
+use crate::allocation::SolverOpts;
+use crate::assignment::drl::DrlAssigner;
+use crate::assignment::geo::Geographic;
+use crate::assignment::hfel::Hfel;
+use crate::assignment::{evaluate, Assigner};
+use crate::bench::Table;
+use crate::config::Config;
+use crate::runtime::Engine;
+use crate::system::Topology;
+use crate::util::csv::CsvWriter;
+use crate::util::{stats, Rng};
+
+use super::common::{csv_path, default_checkpoint};
+
+#[derive(Clone, Debug)]
+pub struct StrategyStats {
+    pub name: String,
+    pub t_mean: f64,
+    pub e_mean: f64,
+    pub obj_mean: f64,
+    pub latency_mean_s: f64,
+}
+
+pub fn run(engine: &Engine, cfg: &Config) -> anyhow::Result<Vec<StrategyStats>> {
+    let h = engine.manifest.consts.train_horizon;
+    let info = engine.manifest.model("fmnist")?;
+    let mut sys = cfg.system.clone();
+    sys.n_devices = h;
+    sys.model_bits = (info.bytes * 8) as f64;
+    let lambda = sys.lambda;
+    let opts = SolverOpts::default();
+
+    // D³QN: trained checkpoint if available (fig5 produces it)
+    let ckpt = default_checkpoint(cfg);
+    let drl = match DrlAssigner::from_checkpoint(engine, &ckpt) {
+        Ok(a) => a,
+        Err(e) => {
+            log::warn!("fig6: {e}; using untrained θ (run `hfl exp fig5` first)");
+            DrlAssigner::fresh(engine, cfg.seed)?
+        }
+    };
+
+    let names = ["d3qn", "hfel-100", "hfel-300", "geographic"];
+    let mut t_vals: Vec<Vec<f64>> = vec![vec![]; names.len()];
+    let mut e_vals: Vec<Vec<f64>> = vec![vec![]; names.len()];
+    let mut o_vals: Vec<Vec<f64>> = vec![vec![]; names.len()];
+    let mut lat_vals: Vec<Vec<f64>> = vec![vec![]; names.len()];
+
+    let mut csv = CsvWriter::create(
+        csv_path(cfg, "fig6_assignment.csv"),
+        &["iter", "strategy", "t_i", "e_i", "objective", "assign_latency_s"],
+    )?;
+
+    let mut rng = Rng::new(cfg.seed ^ 0xF160);
+    let scheduled: Vec<usize> = (0..h).collect();
+    for iter in 0..cfg.assign_eval_iters {
+        let topo = Topology::generate(&sys, &mut rng.fork(iter as u64));
+        for (si, &name) in names.iter().enumerate() {
+            let t0 = Instant::now();
+            let assignment = match name {
+                "d3qn" => drl.assign_with_q(&topo, &scheduled)?.0,
+                "hfel-100" => Hfel::new(100, cfg.seed ^ iter as u64).run(&topo, &scheduled),
+                "hfel-300" => Hfel::new(300, cfg.seed ^ iter as u64).run(&topo, &scheduled),
+                "geographic" => Geographic.assign(&topo, &scheduled),
+                _ => unreachable!(),
+            };
+            let latency = t0.elapsed().as_secs_f64();
+            let (cost, _) = evaluate(&topo, &assignment, &opts);
+            t_vals[si].push(cost.t);
+            e_vals[si].push(cost.e);
+            o_vals[si].push(cost.objective(lambda));
+            lat_vals[si].push(latency);
+            csv.row(&[
+                iter.to_string(),
+                name.into(),
+                format!("{:.3}", cost.t),
+                format!("{:.3}", cost.e),
+                format!("{:.3}", cost.objective(lambda)),
+                format!("{:.6}", latency),
+            ])?;
+        }
+    }
+    csv.flush()?;
+
+    let mut table = Table::new(&[
+        "Strategy",
+        "T_i (s)",
+        "E_i (J)",
+        "E_i+λT_i",
+        "assign latency",
+    ]);
+    let mut out = Vec::new();
+    for (si, &name) in names.iter().enumerate() {
+        let s = StrategyStats {
+            name: name.into(),
+            t_mean: stats::mean(&t_vals[si]),
+            e_mean: stats::mean(&e_vals[si]),
+            obj_mean: stats::mean(&o_vals[si]),
+            latency_mean_s: stats::mean(&lat_vals[si]),
+        };
+        table.row(&[
+            s.name.clone(),
+            format!("{:.1}", s.t_mean),
+            format!("{:.1}", s.e_mean),
+            format!("{:.1}", s.obj_mean),
+            format!("{:.2}ms", s.latency_mean_s * 1e3),
+        ]);
+        out.push(s);
+    }
+    println!("\nFig. 6 — assignment strategies ({} iterations, H={h}, λ={lambda}):",
+             cfg.assign_eval_iters);
+    table.print();
+    Ok(out)
+}

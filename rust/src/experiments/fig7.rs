@@ -1,0 +1,181 @@
+//! Fig. 7 — the full proposed framework (Algorithm 6: IKC + D³QN +
+//! resource allocation) for varying H, reporting per dataset:
+//! (a/b) accuracy curves to target, (c) objective (15), (d) total time T,
+//! (e) total energy E, (f) message bytes per iteration, (g) total message
+//! bytes. H = N reproduces "traditional HFL" (everything scheduled).
+
+use crate::allocation::SolverOpts;
+use crate::assignment::drl::DrlAssigner;
+use crate::assignment::Assigner;
+use crate::bench::Table;
+use crate::config::Config;
+use crate::fl::{HflConfig, HflTrainer};
+use crate::runtime::Engine;
+use crate::scheduling::AuxModel;
+use crate::util::csv::CsvWriter;
+use crate::util::stats;
+
+use super::common::{clusters_for, csv_path, default_checkpoint, make_scheduler, SchedKind};
+
+#[derive(Clone, Debug)]
+pub struct FrameworkPoint {
+    pub dataset: String,
+    pub h: usize,
+    pub iters_to_target: f64,
+    pub reached_target: bool,
+    pub final_acc: f64,
+    pub total_t: f64,
+    pub total_e: f64,
+    pub objective: f64,
+    pub msg_per_iter: f64,
+    pub msg_total: f64,
+}
+
+pub fn run(engine: &Engine, cfg: &Config, dataset: &str) -> anyhow::Result<Vec<FrameworkPoint>> {
+    let mut points = Vec::new();
+    let mut curve_csv = CsvWriter::create(
+        csv_path(cfg, &format!("fig7_curves_{dataset}.csv")),
+        &["dataset", "h", "seed", "iter", "accuracy", "t_i", "e_i", "msg_bytes"],
+    )?;
+    let mut csv = CsvWriter::create(
+        csv_path(cfg, &format!("fig7_framework_{dataset}.csv")),
+        &[
+            "dataset", "h", "iters_to_target", "reached", "final_acc",
+            "total_t", "total_e", "objective", "msg_per_iter", "msg_total",
+        ],
+    )?;
+
+    let target = cfg.target_acc(dataset);
+    for &h in &cfg.h_values {
+        let mut iters_v = vec![];
+        let mut reached_all = true;
+        let mut acc_v = vec![];
+        let mut t_v = vec![];
+        let mut e_v = vec![];
+        let mut obj_v = vec![];
+        let mut mpi_v = vec![];
+        let mut mt_v = vec![];
+        for seed_i in 0..cfg.seeds {
+            let seed = cfg.seed + seed_i as u64 * 1000 + 31;
+            let hcfg = HflConfig {
+                dataset: dataset.into(),
+                h,
+                lr: cfg.lr,
+                target_acc: target,
+                max_iters: cfg.max_iters,
+                test_size: cfg.test_size,
+                frac_major: cfg.frac_major,
+                seed,
+            };
+            let mut trainer = HflTrainer::with_default_topology(engine, hcfg)?;
+            // the proposed framework: IKC scheduling (mini-model clusters)
+            let clusters = clusters_for(
+                engine,
+                &trainer.topo,
+                &trainer.templates,
+                &trainer.device_data,
+                AuxModel::Mini,
+                cfg.k_clusters,
+                    seed,
+            )?;
+            let mut sched = make_scheduler(
+                SchedKind::Ikc,
+                Some(clusters),
+                trainer.topo.devices.len(),
+                h,
+                seed ^ 0x5c4ed,
+            )?;
+            // + D³QN assignment (trained checkpoint when available)
+            let ckpt = default_checkpoint(cfg);
+            let mut assigner: Box<dyn Assigner> =
+                match DrlAssigner::from_checkpoint(engine, &ckpt) {
+                    Ok(a) => Box::new(a),
+                    Err(e) => {
+                        log::warn!("fig7: {e}; untrained θ (run `hfl exp fig5`)");
+                        Box::new(DrlAssigner::fresh(engine, seed)?)
+                    }
+                };
+            let res = trainer.run(
+                &mut *sched,
+                &mut *assigner,
+                &SolverOpts::default(),
+                |r| {
+                    log::info!(
+                        "fig7 {dataset} H={h} seed{seed_i} it{} acc {:.3}",
+                        r.iter,
+                        r.accuracy
+                    );
+                },
+            )?;
+            for r in &res.records {
+                curve_csv.row(&[
+                    dataset.into(),
+                    h.to_string(),
+                    seed_i.to_string(),
+                    r.iter.to_string(),
+                    format!("{:.4}", r.accuracy),
+                    format!("{:.3}", r.t_i),
+                    format!("{:.3}", r.e_i),
+                    format!("{:.0}", r.msg_bytes),
+                ])?;
+            }
+            let iters = res.converged_at.unwrap_or(res.records.len());
+            reached_all &= res.converged_at.is_some();
+            iters_v.push(iters as f64);
+            acc_v.push(res.final_accuracy());
+            t_v.push(res.total_t());
+            e_v.push(res.total_e());
+            obj_v.push(res.objective(cfg.system.lambda));
+            mpi_v.push(res.total_msg_bytes() / res.records.len() as f64);
+            mt_v.push(res.total_msg_bytes());
+        }
+        let p = FrameworkPoint {
+            dataset: dataset.into(),
+            h,
+            iters_to_target: stats::mean(&iters_v),
+            reached_target: reached_all,
+            final_acc: stats::mean(&acc_v),
+            total_t: stats::mean(&t_v),
+            total_e: stats::mean(&e_v),
+            objective: stats::mean(&obj_v),
+            msg_per_iter: stats::mean(&mpi_v),
+            msg_total: stats::mean(&mt_v),
+        };
+        csv.row(&[
+            p.dataset.clone(),
+            p.h.to_string(),
+            format!("{:.1}", p.iters_to_target),
+            p.reached_target.to_string(),
+            format!("{:.4}", p.final_acc),
+            format!("{:.1}", p.total_t),
+            format!("{:.1}", p.total_e),
+            format!("{:.1}", p.objective),
+            format!("{:.0}", p.msg_per_iter),
+            format!("{:.0}", p.msg_total),
+        ])?;
+        points.push(p);
+    }
+    csv.flush()?;
+    curve_csv.flush()?;
+
+    let mut table = Table::new(&[
+        "H", "iters→target", "reached", "final acc", "T (s)", "E (J)",
+        "E+λT", "MB/iter", "MB total",
+    ]);
+    for p in &points {
+        table.row(&[
+            p.h.to_string(),
+            format!("{:.1}", p.iters_to_target),
+            if p.reached_target { "yes".into() } else { "no".into() },
+            format!("{:.3}", p.final_acc),
+            format!("{:.0}", p.total_t),
+            format!("{:.0}", p.total_e),
+            format!("{:.0}", p.objective),
+            format!("{:.1}", p.msg_per_iter / 1e6),
+            format!("{:.1}", p.msg_total / 1e6),
+        ]);
+    }
+    println!("\nFig. 7 — full framework on {dataset} (target acc {target}):");
+    table.print();
+    Ok(points)
+}

@@ -1,0 +1,12 @@
+//! Experiment drivers — one per table/figure in the paper's §VI (see
+//! DESIGN.md §3 for the index). Each writes CSVs under `results/` and
+//! prints a paper-style summary table.
+
+pub mod common;
+pub mod fig5;
+pub mod fig6;
+pub mod fig7;
+pub mod fig_sched;
+pub mod table2;
+
+pub use common::{AssignKind, SchedKind};

@@ -1,0 +1,79 @@
+//! Table II — time delay, energy and ARI of Algorithm 2 (device
+//! clustering): IKC (mini model ξ) vs VKC on FashionMNIST and CIFAR-10
+//! (full model w⁰).
+
+use crate::bench::Table;
+use crate::config::Config;
+use crate::data::{partition, SynthSpec, Templates};
+use crate::runtime::Engine;
+use crate::scheduling::{cluster_devices, AuxModel, ClusteringResult};
+use crate::system::Topology;
+use crate::util::csv::CsvWriter;
+use crate::util::Rng;
+
+use super::common::{csv_path};
+
+pub struct Table2Row {
+    pub method: String,
+    pub result: ClusteringResult,
+}
+
+pub fn run(engine: &Engine, cfg: &Config) -> anyhow::Result<Vec<Table2Row>> {
+    let mut rows = Vec::new();
+    let cases: Vec<(&str, &str, AuxModel)> = vec![
+        ("IKC", "fmnist", AuxModel::Mini),
+        ("VKC (FashionMNIST)", "fmnist", AuxModel::Full),
+        ("VKC (CIFAR-10)", "cifar", AuxModel::Full),
+    ];
+
+    for (label, ds, aux) in cases {
+        let spec = SynthSpec::by_name(ds)?;
+        let info = engine.manifest.model(ds)?;
+        let mut params = cfg.system.clone();
+        params.model_bits = (info.bytes * 8) as f64;
+        let mut rng = Rng::new(cfg.seed ^ 0x7ab1e2);
+        let topo = Topology::generate(&params, &mut rng);
+        let templates = Templates::generate(&spec, cfg.seed);
+        let samples: Vec<usize> = topo.devices.iter().map(|d| d.num_samples).collect();
+        let dd = partition(topo.devices.len(), &samples, cfg.frac_major, cfg.seed);
+        let result = cluster_devices(
+            engine,
+            &topo,
+            &templates,
+            &dd,
+            aux,
+            cfg.k_clusters,
+            aux.cluster_lr(),
+            &mut rng,
+        )?;
+        rows.push(Table2Row { method: label.to_string(), result });
+    }
+
+    let mut table = Table::new(&["Method", "Time delay (s)", "Energy (J)", "ARI"]);
+    let mut csv = CsvWriter::create(
+        csv_path(cfg, "table2_clustering.csv"),
+        &["method", "time_s", "energy_j", "ari"],
+    )?;
+    for r in &rows {
+        table.row(&[
+            r.method.clone(),
+            format!("{:.1}", r.result.time_s),
+            format!("{:.1}", r.result.energy_j),
+            format!("{:.2}", r.result.ari),
+        ]);
+        csv.row(&[
+            r.method.clone(),
+            format!("{:.3}", r.result.time_s),
+            format!("{:.3}", r.result.energy_j),
+            format!("{:.4}", r.result.ari),
+        ])?;
+    }
+    csv.flush()?;
+    println!("\nTable II — clustering cost (Algorithm 2):");
+    table.print();
+    println!(
+        "(paper: IKC 3.1s/23.5J/1.0; VKC-FMNIST 128.0s/671.0J/1.0; \
+         VKC-CIFAR 252.6s/1317.0J/1.0)"
+    );
+    Ok(rows)
+}

@@ -1,0 +1,54 @@
+//! Global-model evaluation: run the AOT `eval_<ds>` artifact over the test
+//! set in fixed-size batches and compute top-1 accuracy.
+
+use crate::data::TestSet;
+use crate::runtime::{Arg, Engine};
+use crate::util::stats::argmax_f32;
+
+/// Accuracy of `params` on `test` using the `eval_<ds>` artifact.
+pub fn evaluate_accuracy(
+    engine: &Engine,
+    ds: &str,
+    params: &[f32],
+    test: &TestSet,
+    channels: usize,
+    img: usize,
+) -> anyhow::Result<f64> {
+    let eb = engine.manifest.consts.eb;
+    let nc = engine.manifest.consts.num_classes;
+    let pixels = test.pixels;
+    anyhow::ensure!(pixels == channels * img * img, "test set pixel mismatch");
+    let artifact = format!("eval_{ds}");
+    let mut correct = 0usize;
+    let mut xbuf = vec![0.0f32; eb * pixels];
+
+    let mut i = 0;
+    while i < test.n {
+        let take = (test.n - i).min(eb);
+        xbuf[..take * pixels]
+            .copy_from_slice(&test.x[i * pixels..(i + take) * pixels]);
+        // pad the tail with the last sample (outputs ignored)
+        for pad in take..eb {
+            xbuf.copy_within((take - 1) * pixels..take * pixels, pad * pixels);
+        }
+        let out = engine.run(
+            &artifact,
+            &[
+                Arg::F32(params, &[params.len() as i64]),
+                Arg::F32(
+                    &xbuf,
+                    &[eb as i64, channels as i64, img as i64, img as i64],
+                ),
+            ],
+        )?;
+        let logits = &out[0];
+        for b in 0..take {
+            let pred = argmax_f32(&logits[b * nc..(b + 1) * nc]).unwrap();
+            if pred == test.labels[i + b] {
+                correct += 1;
+            }
+        }
+        i += take;
+    }
+    Ok(correct as f64 / test.n as f64)
+}

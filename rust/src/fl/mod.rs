@@ -1,0 +1,8 @@
+//! Hierarchical federated learning core (Algorithms 1 & 6): the training
+//! loop over local/edge/cloud aggregation plus global-model evaluation.
+
+pub mod eval;
+pub mod trainer;
+
+pub use eval::evaluate_accuracy;
+pub use trainer::{HflConfig, HflTrainer};

@@ -1,0 +1,319 @@
+//! The HFL training loop — Algorithms 1 and 6.
+//!
+//! Per global iteration: schedule (IKC/VKC/FedAvg) → assign (D³QN/HFEL/geo)
+//! → allocate resources (problem 27) → Q edge iterations of [L local SGD
+//! steps on every scheduled device + edge aggregation (eq. 2)] → cloud
+//! aggregation (eq. 3) → evaluate.
+//!
+//! Local training is executed through the vmapped `local_round_<ds>`
+//! artifact: up to DB devices train per PJRT call, each slot carrying its
+//! own parameter vector (devices on different edge servers batch together;
+//! the slot's input params are its edge model). This is the L3 hot path.
+
+use std::time::Instant;
+
+use crate::assignment::{evaluate as eval_assignment, Assigner, Assignment};
+use crate::allocation::SolverOpts;
+use crate::data::{DeviceData, Templates, TestSet, NUM_CLASSES};
+use crate::fl::eval::evaluate_accuracy;
+use crate::metrics::{IterRecord, RunResult};
+use crate::model::{accumulate, finish, init_params, Init};
+use crate::runtime::{Arg, Engine};
+use crate::scheduling::Scheduler;
+use crate::system::Topology;
+use crate::util::Rng;
+
+/// Static configuration of one HFL run.
+#[derive(Clone, Debug)]
+pub struct HflConfig {
+    /// `fmnist` or `cifar`.
+    pub dataset: String,
+    /// Devices scheduled per global iteration, H.
+    pub h: usize,
+    /// Learning rate β (Table I: 0.01).
+    pub lr: f32,
+    /// Target accuracy A^target (constraint 15c/d). 1.0 disables early stop.
+    pub target_acc: f64,
+    /// Hard cap on global iterations I.
+    pub max_iters: usize,
+    pub test_size: usize,
+    /// Majority-class fraction of each device's local data.
+    pub frac_major: f64,
+    pub seed: u64,
+}
+
+impl Default for HflConfig {
+    fn default() -> Self {
+        HflConfig {
+            dataset: "fmnist".into(),
+            h: 50,
+            lr: 0.01,
+            target_acc: 1.0,
+            max_iters: 30,
+            test_size: 1000,
+            frac_major: 0.8,
+            seed: 0,
+        }
+    }
+}
+
+/// One HFL deployment wired to the PJRT engine.
+pub struct HflTrainer<'e> {
+    pub engine: &'e Engine,
+    pub cfg: HflConfig,
+    pub topo: Topology,
+    pub templates: Templates,
+    pub device_data: Vec<DeviceData>,
+    pub test: TestSet,
+    channels: usize,
+    img: usize,
+    params_len: usize,
+    model_bytes: f64,
+    rng: Rng,
+}
+
+impl<'e> HflTrainer<'e> {
+    /// Build the deployment: topology, non-IID partition, test set.
+    pub fn new(engine: &'e Engine, cfg: HflConfig, topo: Topology) -> anyhow::Result<Self> {
+        let spec = crate::data::SynthSpec::by_name(&cfg.dataset)?;
+        let info = engine.manifest.model(&cfg.dataset)?.clone();
+        anyhow::ensure!(
+            (topo.params.model_bits - (info.bytes * 8) as f64).abs() < 1.0,
+            "topology model_bits must match the {} artifact ({} bits)",
+            cfg.dataset,
+            info.bytes * 8
+        );
+        let rng = Rng::new(cfg.seed ^ 0xF1_00);
+        let templates = Templates::generate(&spec, cfg.seed);
+        let samples: Vec<usize> =
+            topo.devices.iter().map(|d| d.num_samples).collect();
+        let device_data =
+            crate::data::partition(topo.devices.len(), &samples, cfg.frac_major, cfg.seed);
+        let test = TestSet::generate(&templates, cfg.test_size, cfg.seed ^ 0x7e57);
+        Ok(HflTrainer {
+            engine,
+            channels: spec.channels,
+            img: spec.img,
+            params_len: info.params,
+            model_bytes: info.bytes as f64,
+            cfg,
+            topo,
+            templates,
+            device_data,
+            test,
+            rng,
+        })
+    }
+
+    /// Convenience: default topology for the dataset's model size.
+    pub fn with_default_topology(
+        engine: &'e Engine,
+        cfg: HflConfig,
+    ) -> anyhow::Result<Self> {
+        let info = engine.manifest.model(&cfg.dataset)?;
+        let mut params = crate::system::SystemParams::default();
+        params.model_bits = (info.bytes * 8) as f64;
+        let mut rng = Rng::new(cfg.seed);
+        let topo = Topology::generate(&params, &mut rng);
+        Self::new(engine, cfg, topo)
+    }
+
+    /// Run L local iterations for `devices`, each slot starting from its
+    /// edge's current model. Returns per-device updated params and the mean
+    /// training loss.
+    fn local_rounds(
+        &mut self,
+        devices: &[usize],
+        edge_of: &dyn Fn(usize) -> usize,
+        edge_params: &[Vec<f32>],
+    ) -> anyhow::Result<(Vec<Vec<f32>>, f64)> {
+        let c = self.engine.manifest.consts.clone();
+        let (db, l, bsz) = (c.db, c.l, c.b);
+        let p = self.params_len;
+        let pixels = self.channels * self.img * self.img;
+        let artifact = format!("local_round_{}", self.cfg.dataset);
+
+        let mut out_params: Vec<Vec<f32>> = Vec::with_capacity(devices.len());
+        let mut loss_sum = 0.0f64;
+
+        let mut params_buf = vec![0.0f32; db * p];
+        let mut xs = vec![0.0f32; db * l * bsz * pixels];
+        let mut ys = vec![0.0f32; db * l * bsz * NUM_CLASSES];
+
+        for chunk in devices.chunks(db) {
+            for slot in 0..db {
+                let dev = chunk.get(slot).cloned().unwrap_or(chunk[chunk.len() - 1]);
+                let dd = &self.device_data[dev];
+                params_buf[slot * p..(slot + 1) * p]
+                    .copy_from_slice(&edge_params[edge_of(dev)]);
+                let xoff = slot * l * bsz * pixels;
+                let yoff = slot * l * bsz * NUM_CLASSES;
+                dd.fill_batch(
+                    &self.templates,
+                    &mut self.rng,
+                    l * bsz,
+                    &mut xs[xoff..xoff + l * bsz * pixels],
+                    &mut ys[yoff..yoff + l * bsz * NUM_CLASSES],
+                );
+            }
+            let out = self.engine.run(
+                &artifact,
+                &[
+                    Arg::F32(&params_buf, &[db as i64, p as i64]),
+                    Arg::F32(
+                        &xs,
+                        &[
+                            db as i64,
+                            l as i64,
+                            bsz as i64,
+                            self.channels as i64,
+                            self.img as i64,
+                            self.img as i64,
+                        ],
+                    ),
+                    Arg::F32(&ys, &[db as i64, l as i64, bsz as i64, NUM_CLASSES as i64]),
+                    Arg::ScalarF32(self.cfg.lr),
+                ],
+            )?;
+            for (slot, _dev) in chunk.iter().enumerate() {
+                out_params.push(out[0][slot * p..(slot + 1) * p].to_vec());
+                loss_sum += out[1][slot] as f64;
+            }
+        }
+        Ok((out_params, loss_sum / devices.len() as f64))
+    }
+
+    /// Algorithm 1: one global iteration of HFL training given the
+    /// scheduled set and assignment. Returns the new global model + loss.
+    pub fn train_global_iteration(
+        &mut self,
+        global: &[f32],
+        assignment: &Assignment,
+    ) -> anyhow::Result<(Vec<f32>, f64)> {
+        let q_iters = self.topo.params.edge_iters;
+        let m_count = self.topo.edges.len();
+        let mut edge_params: Vec<Vec<f32>> =
+            (0..m_count).map(|_| global.to_vec()).collect();
+
+        // stable device order: group by edge so aggregation is direct
+        let scheduled: Vec<usize> =
+            assignment.groups.iter().flatten().cloned().collect();
+        let device_edge: Vec<usize> = scheduled
+            .iter()
+            .map(|&n| assignment.edge_of(n).expect("scheduled device unassigned"))
+            .collect();
+        let edge_lookup = {
+            let map: std::collections::HashMap<usize, usize> = scheduled
+                .iter()
+                .cloned()
+                .zip(device_edge.iter().cloned())
+                .collect();
+            move |n: usize| map[&n]
+        };
+
+        let mut last_loss = 0.0f64;
+        for _q in 0..q_iters {
+            let (updated, loss) =
+                self.local_rounds(&scheduled, &edge_lookup, &edge_params)?;
+            last_loss = loss;
+            // edge aggregation (eq. 2), weighted by D_n
+            for m in 0..m_count {
+                if assignment.groups[m].is_empty() {
+                    continue;
+                }
+                let mut acc = vec![0.0f64; self.params_len];
+                let mut total_w = 0.0f64;
+                for (i, &n) in scheduled.iter().enumerate() {
+                    if device_edge[i] == m {
+                        let w = self.device_data[n].n_samples as f64;
+                        accumulate(&mut acc, &updated[i], w);
+                        total_w += w;
+                    }
+                }
+                edge_params[m] = finish(&acc, total_w);
+            }
+        }
+
+        // cloud aggregation (eq. 3), weighted by D_{N_m}
+        let mut acc = vec![0.0f64; self.params_len];
+        let mut total_w = 0.0f64;
+        for m in 0..m_count {
+            if assignment.groups[m].is_empty() {
+                continue;
+            }
+            let w: f64 = assignment.groups[m]
+                .iter()
+                .map(|&n| self.device_data[n].n_samples as f64)
+                .sum();
+            accumulate(&mut acc, &edge_params[m], w);
+            total_w += w;
+        }
+        Ok((finish(&acc, total_w), last_loss))
+    }
+
+    /// Bytes transmitted in one global iteration: H·Q device uplinks plus
+    /// one edge→cloud upload per participating edge (downlinks are free per
+    /// the standard assumption, §III-B).
+    pub fn iter_msg_bytes(&self, assignment: &Assignment) -> f64 {
+        let q = self.topo.params.edge_iters as f64;
+        let h = assignment.num_devices() as f64;
+        let m_used = assignment.groups.iter().filter(|g| !g.is_empty()).count() as f64;
+        (h * q + m_used) * self.model_bytes
+    }
+
+    /// Algorithm 6: the full framework loop.
+    pub fn run(
+        &mut self,
+        scheduler: &mut dyn Scheduler,
+        assigner: &mut dyn Assigner,
+        alloc_opts: &SolverOpts,
+        mut progress: impl FnMut(&IterRecord),
+    ) -> anyhow::Result<RunResult> {
+        let t_start = Instant::now();
+        let info = self.engine.manifest.model(&self.cfg.dataset)?.clone();
+        let mut global = init_params(&info, Init::HeNormal, &mut self.rng);
+        let mut result = RunResult::default();
+
+        for i in 0..self.cfg.max_iters {
+            let scheduled = scheduler.schedule();
+            let t_assign = Instant::now();
+            let assignment = assigner.assign(&self.topo, &scheduled);
+            let assign_latency_s = t_assign.elapsed().as_secs_f64();
+            debug_assert!(assignment.is_partition());
+
+            let (iter_cost, _) = eval_assignment(&self.topo, &assignment, alloc_opts);
+            let (new_global, loss) =
+                self.train_global_iteration(&global, &assignment)?;
+            global = new_global;
+
+            let accuracy = evaluate_accuracy(
+                self.engine,
+                &self.cfg.dataset,
+                &global,
+                &self.test,
+                self.channels,
+                self.img,
+            )?;
+
+            let rec = IterRecord {
+                iter: i,
+                accuracy,
+                t_i: iter_cost.t,
+                e_i: iter_cost.e,
+                train_loss: loss,
+                msg_bytes: self.iter_msg_bytes(&assignment),
+                n_scheduled: scheduled.len(),
+                assign_latency_s,
+            };
+            progress(&rec);
+            result.records.push(rec);
+
+            if accuracy >= self.cfg.target_acc {
+                result.converged_at = Some(i + 1);
+                break;
+            }
+        }
+        result.wall_secs = t_start.elapsed().as_secs_f64();
+        Ok(result)
+    }
+}

@@ -1,0 +1,33 @@
+//! # hfl-edge
+//!
+//! Production-grade reproduction of *"Device Scheduling and Assignment in
+//! Hierarchical Federated Learning for Internet of Things"* (Zhang, Lam,
+//! Zhao, 2024) as a three-layer Rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — the HFL coordinator: device scheduling (IKC /
+//!   VKC / FedAvg), device assignment (D³QN / HFEL / geographic), per-edge
+//!   convex resource allocation, the wireless cost model, the D³QN training
+//!   loop, and all experiment drivers.
+//! * **L2/L1 (build-time Python)** — the CNN/mini/D³QN computations, with
+//!   every matmul on a Pallas kernel, AOT-lowered to HLO text.
+//! * **runtime** — PJRT CPU client executing the AOT artifacts; Python is
+//!   never on the request path.
+//!
+//! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for the
+//! paper-vs-measured results.
+
+pub mod allocation;
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod data;
+pub mod drl;
+pub mod experiments;
+pub mod fl;
+pub mod metrics;
+pub mod model;
+pub mod assignment;
+pub mod runtime;
+pub mod scheduling;
+pub mod system;
+pub mod util;

@@ -1,0 +1,241 @@
+//! `hfl` — leader entrypoint for the HFL reproduction.
+//!
+//! See `hfl help` (or the USAGE string below) for the full command set.
+
+use std::path::{Path, PathBuf};
+
+use hfl::allocation::SolverOpts;
+use hfl::assignment::Assigner;
+use hfl::cli::Args;
+use hfl::config::Config;
+use hfl::experiments::{self, AssignKind, SchedKind};
+use hfl::fl::{HflConfig, HflTrainer};
+use hfl::runtime::Engine;
+use hfl::scheduling::AuxModel;
+use hfl::util::logging;
+
+const USAGE: &str = "\
+usage: hfl <command> [options]
+
+commands:
+  info                      show manifest/artifact inventory
+  train                     single HFL run
+                            (--dataset --h --scheduler ikc|vkc|fedavg
+                             --assigner drl|hfel|hfel-100|geo|rr|random
+                             --max-iters --target-acc --lr --seed)
+  drl-train                 train the D3QN assigner (Algorithm 5; saves
+                            results/dqn_theta.bin) (--episodes --seed)
+  cluster                   run Algorithm 2 / Table II report
+  assign                    compare assignment strategies (Fig. 6)
+  exp <which>               paper experiments: fig3 fig4 fig5 fig6 fig7
+                            table2 all
+
+options (all commands):
+  --config FILE  --out DIR  --artifacts DIR  --seed N  -v / -vv
+experiment shaping:
+  --seeds N  --max-iters N  --h-values 10,30,50,100  --test-size N
+  --episodes N  --assign-iters N  --lambda X
+  --target-acc-fmnist X  --target-acc-cifar X  --dataset fmnist|cifar
+";
+
+fn load_config(args: &Args) -> anyhow::Result<Config> {
+    let mut cfg = match args.opt("config") {
+        Some(p) => Config::load(Path::new(p))?,
+        None => Config::default(),
+    };
+    cfg.seed = args.get_u64("seed", cfg.seed)?;
+    cfg.seeds = args.get_usize("seeds", cfg.seeds)?;
+    cfg.max_iters = args.get_usize("max-iters", cfg.max_iters)?;
+    cfg.test_size = args.get_usize("test-size", cfg.test_size)?;
+    cfg.h_values = args.get_usize_list("h-values", &cfg.h_values)?;
+    cfg.drl_episodes = args.get_usize("episodes", cfg.drl_episodes)?;
+    cfg.assign_eval_iters = args.get_usize("assign-iters", cfg.assign_eval_iters)?;
+    cfg.target_acc_fmnist = args.get_f64("target-acc-fmnist", cfg.target_acc_fmnist)?;
+    cfg.target_acc_cifar = args.get_f64("target-acc-cifar", cfg.target_acc_cifar)?;
+    cfg.system.lambda = args.get_f64("lambda", cfg.system.lambda)?;
+    cfg.lr = args.get_f64("lr", cfg.lr as f64)? as f32;
+    cfg.out_dir = args.get_str("out", &cfg.out_dir);
+    cfg.artifact_dir = args.get_str("artifacts", &cfg.artifact_dir);
+    if let Some(ds) = args.opt("dataset") {
+        cfg.datasets = vec![ds.to_string()];
+    }
+    Ok(cfg)
+}
+
+fn cmd_info(engine: &Engine) -> anyhow::Result<()> {
+    let m = &engine.manifest;
+    println!("artifact dir: {}", engine.artifact_dir().display());
+    println!(
+        "consts: DB={} L={} B={} EB={} M={} F={} O={} H_train={} horizons={:?}",
+        m.consts.db, m.consts.l, m.consts.b, m.consts.eb, m.consts.n_edges,
+        m.consts.feat, m.consts.o, m.consts.train_horizon, m.consts.horizons
+    );
+    for (name, info) in &m.models {
+        println!(
+            "model {name:8} {:>8} params ({:>7.1} KB), {} leaves",
+            info.params,
+            info.bytes as f64 / 1024.0,
+            info.leaves.len()
+        );
+    }
+    for (name, file) in &m.artifacts {
+        println!("artifact {name:24} -> {file}");
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &Args, cfg: &Config, engine: &Engine) -> anyhow::Result<()> {
+    let dataset = args.get_str("dataset", "fmnist");
+    let h = args.get_usize("h", 50)?;
+    let sched_kind = SchedKind::parse(&args.get_str("scheduler", "ikc"))?;
+    let assign_kind = AssignKind::parse(
+        &args.get_str("assigner", "drl"),
+        args.opt("checkpoint").map(PathBuf::from),
+    )?;
+    let hcfg = HflConfig {
+        dataset: dataset.clone(),
+        h,
+        lr: cfg.lr,
+        target_acc: args.get_f64("target-acc", cfg.target_acc(&dataset))?,
+        max_iters: cfg.max_iters,
+        test_size: cfg.test_size,
+        frac_major: cfg.frac_major,
+        seed: cfg.seed,
+    };
+    args.finish()?;
+
+    let mut trainer = HflTrainer::with_default_topology(engine, hcfg)?;
+    let clusters = match sched_kind {
+        SchedKind::FedAvg => None,
+        SchedKind::Ikc => Some(experiments::common::clusters_for(
+            engine, &trainer.topo, &trainer.templates, &trainer.device_data,
+            AuxModel::Mini, cfg.k_clusters, cfg.seed,
+        )?),
+        SchedKind::Vkc => Some(experiments::common::clusters_for(
+            engine, &trainer.topo, &trainer.templates, &trainer.device_data,
+            AuxModel::Full, cfg.k_clusters, cfg.seed,
+        )?),
+    };
+    let mut sched = experiments::common::make_scheduler(
+        sched_kind, clusters, trainer.topo.devices.len(), h, cfg.seed ^ 0x5c4ed,
+    )?;
+    let mut assigner: Box<dyn Assigner> =
+        experiments::common::make_assigner(&assign_kind, engine, cfg, cfg.seed)?;
+
+    println!(
+        "training {dataset} H={h} scheduler={} assigner={} target={}",
+        sched_kind.name(),
+        assigner.name(),
+        trainer.cfg.target_acc
+    );
+    let res = trainer.run(&mut *sched, &mut *assigner, &SolverOpts::default(), |r| {
+        println!(
+            "iter {:3}  acc {:.3}  loss {:.3}  T_i {:9.1}s  E_i {:8.1}J  msgs {:6.1}MB  assign {:7.2}ms",
+            r.iter, r.accuracy, r.train_loss, r.t_i, r.e_i,
+            r.msg_bytes / 1e6, r.assign_latency_s * 1e3
+        );
+    })?;
+    match res.converged_at {
+        Some(i) => println!("reached target in {i} global iterations"),
+        None => println!("target not reached in {} iterations", res.records.len()),
+    }
+    println!(
+        "totals: T {:.1}s  E {:.1}J  objective {:.1}  msgs {:.1}MB  (wall {:.1}s)",
+        res.total_t(),
+        res.total_e(),
+        res.objective(cfg.system.lambda),
+        res.total_msg_bytes() / 1e6,
+        res.wall_secs
+    );
+    let s = engine.stats();
+    log::info!(
+        "engine: {} calls, {:.2}s exec, {:.2}s compile",
+        s.calls, s.exec_secs, s.compile_secs
+    );
+    Ok(())
+}
+
+fn cmd_exp(args: &Args, cfg: &Config, engine: &Engine) -> anyhow::Result<()> {
+    let which = args
+        .positional
+        .first()
+        .cloned()
+        .unwrap_or_else(|| "all".to_string());
+    args.finish()?;
+    match which.as_str() {
+        "fig3" => {
+            experiments::fig_sched::run(engine, cfg, "fmnist")?;
+        }
+        "fig4" => {
+            experiments::fig_sched::run(engine, cfg, "cifar")?;
+        }
+        "fig5" => {
+            experiments::fig5::run(engine, cfg)?;
+        }
+        "fig6" => {
+            experiments::fig6::run(engine, cfg)?;
+        }
+        "fig7" => {
+            for ds in &cfg.datasets {
+                experiments::fig7::run(engine, cfg, ds)?;
+            }
+        }
+        "table2" => {
+            experiments::table2::run(engine, cfg)?;
+        }
+        "all" => {
+            experiments::table2::run(engine, cfg)?;
+            experiments::fig5::run(engine, cfg)?;
+            experiments::fig6::run(engine, cfg)?;
+            for ds in cfg.datasets.clone() {
+                experiments::fig_sched::run(engine, cfg, &ds)?;
+                experiments::fig7::run(engine, cfg, &ds)?;
+            }
+        }
+        other => anyhow::bail!("unknown experiment {other:?} (fig3..fig7, table2, all)"),
+    }
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv)?;
+    let verbosity = if args.flag("vv") { 2 } else { 1 };
+    logging::init(verbosity);
+
+    if args.subcommand.is_empty() || args.subcommand == "help" {
+        print!("{USAGE}");
+        return Ok(());
+    }
+    let cfg = load_config(&args)?;
+    std::fs::create_dir_all(&cfg.out_dir).ok();
+    let engine = Engine::open(Path::new(&cfg.artifact_dir))?;
+
+    match args.subcommand.as_str() {
+        "info" => {
+            args.finish()?;
+            cmd_info(&engine)
+        }
+        "train" => cmd_train(&args, &cfg, &engine),
+        "drl-train" => {
+            args.finish()?;
+            experiments::fig5::run(&engine, &cfg)?;
+            Ok(())
+        }
+        "cluster" => {
+            args.finish()?;
+            experiments::table2::run(&engine, &cfg)?;
+            Ok(())
+        }
+        "assign" => {
+            args.finish()?;
+            experiments::fig6::run(&engine, &cfg)?;
+            Ok(())
+        }
+        "exp" => cmd_exp(&args, &cfg, &engine),
+        other => {
+            eprintln!("unknown command {other:?}\n{USAGE}");
+            std::process::exit(2);
+        }
+    }
+}

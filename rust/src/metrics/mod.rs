@@ -1,0 +1,115 @@
+//! Experiment metrics: per-global-iteration records and run aggregation
+//! (accuracy curves, eq. 13/14 totals, message accounting for Fig. 7).
+
+/// One global iteration of an HFL run.
+#[derive(Clone, Debug)]
+pub struct IterRecord {
+    pub iter: usize,
+    /// Test accuracy A_i after cloud aggregation.
+    pub accuracy: f64,
+    /// T_i (eq. 13 inner).
+    pub t_i: f64,
+    /// E_i (eq. 14 inner).
+    pub e_i: f64,
+    /// Mean training loss over scheduled devices this iteration.
+    pub train_loss: f64,
+    /// Bytes transmitted this iteration (uplinks + edge→cloud).
+    pub msg_bytes: f64,
+    pub n_scheduled: usize,
+    /// Latency of the assignment decision itself (Fig. 6d), seconds.
+    pub assign_latency_s: f64,
+}
+
+/// A complete HFL run (one seed).
+#[derive(Clone, Debug, Default)]
+pub struct RunResult {
+    pub records: Vec<IterRecord>,
+    /// First iteration (1-based count) at which A_i ≥ A_target.
+    pub converged_at: Option<usize>,
+    pub wall_secs: f64,
+}
+
+impl RunResult {
+    /// Total time delay T = Σ T_i (eq. 13).
+    pub fn total_t(&self) -> f64 {
+        self.records.iter().map(|r| r.t_i).sum()
+    }
+
+    /// Total energy E = Σ E_i (eq. 14).
+    pub fn total_e(&self) -> f64 {
+        self.records.iter().map(|r| r.e_i).sum()
+    }
+
+    /// Objective (15): E + λT.
+    pub fn objective(&self, lambda: f64) -> f64 {
+        self.total_e() + lambda * self.total_t()
+    }
+
+    pub fn total_msg_bytes(&self) -> f64 {
+        self.records.iter().map(|r| r.msg_bytes).sum()
+    }
+
+    pub fn final_accuracy(&self) -> f64 {
+        self.records.last().map(|r| r.accuracy).unwrap_or(0.0)
+    }
+
+    pub fn accuracy_curve(&self) -> Vec<f64> {
+        self.records.iter().map(|r| r.accuracy).collect()
+    }
+}
+
+/// Mean ± std of aligned curves from several seeds (curves may have
+/// different lengths; output is truncated to the shortest).
+pub fn aggregate_curves(curves: &[Vec<f64>]) -> (Vec<f64>, Vec<f64>) {
+    if curves.is_empty() {
+        return (vec![], vec![]);
+    }
+    let len = curves.iter().map(|c| c.len()).min().unwrap();
+    let mut mean = Vec::with_capacity(len);
+    let mut std = Vec::with_capacity(len);
+    for i in 0..len {
+        let xs: Vec<f64> = curves.iter().map(|c| c[i]).collect();
+        mean.push(crate::util::stats::mean(&xs));
+        std.push(crate::util::stats::std(&xs));
+    }
+    (mean, std)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(t: f64, e: f64, acc: f64) -> IterRecord {
+        IterRecord {
+            iter: 0,
+            accuracy: acc,
+            t_i: t,
+            e_i: e,
+            train_loss: 0.0,
+            msg_bytes: 100.0,
+            n_scheduled: 10,
+            assign_latency_s: 0.0,
+        }
+    }
+
+    #[test]
+    fn totals_are_sums() {
+        let r = RunResult {
+            records: vec![rec(1.0, 2.0, 0.5), rec(3.0, 4.0, 0.7)],
+            converged_at: Some(2),
+            wall_secs: 0.0,
+        };
+        assert_eq!(r.total_t(), 4.0);
+        assert_eq!(r.total_e(), 6.0);
+        assert_eq!(r.objective(1.0), 10.0);
+        assert_eq!(r.total_msg_bytes(), 200.0);
+        assert_eq!(r.final_accuracy(), 0.7);
+    }
+
+    #[test]
+    fn aggregate_truncates_to_shortest() {
+        let (m, s) = aggregate_curves(&[vec![1.0, 2.0, 3.0], vec![3.0, 4.0]]);
+        assert_eq!(m, vec![2.0, 3.0]);
+        assert!((s[0] - std::f64::consts::SQRT_2).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,179 @@
+//! Flat-parameter-vector model handling on the Rust side.
+//!
+//! Models cross the Rust↔HLO boundary as flat f32 vectors whose leaf
+//! layout comes from `artifacts/manifest.json`. This module provides
+//! initialization (He-normal [41] for the CNNs, Glorot-uniform for the
+//! D³QN — matching `python/compile/{model,dqn}.py`) and the weighted
+//! parameter averaging used by edge aggregation (eq. 2) and cloud
+//! aggregation (eq. 3).
+
+use crate::runtime::ModelInfo;
+use crate::util::Rng;
+
+/// Initialization family.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Init {
+    /// He-normal on weights, zero biases — the CNN / mini models.
+    HeNormal,
+    /// Glorot-uniform on weights, zero biases — the D³QN.
+    GlorotUniform,
+}
+
+/// Output-head leaves are initialized 10× smaller: full-scale He gives
+/// initial logits with std ≫ 1 and plain SGD at the paper's learning rates
+/// stalls (mirrors `OUTPUT_SCALE` in python/compile/model.py).
+const OUTPUT_SCALE: f32 = 0.1;
+
+fn output_scale(name: &str) -> f32 {
+    match name {
+        "fc2_w" | "fc_w" | "v_w" | "a_w" => OUTPUT_SCALE,
+        _ => 1.0,
+    }
+}
+
+/// Initialize a flat parameter vector for `info`.
+pub fn init_params(info: &ModelInfo, init: Init, rng: &mut Rng) -> Vec<f32> {
+    let mut out = vec![0.0f32; info.params];
+    for leaf in &info.leaves {
+        let dst = &mut out[leaf.offset..leaf.offset + leaf.size];
+        if leaf.is_bias() {
+            continue; // zeros
+        }
+        let mut v = match init {
+            Init::HeNormal => rng.he_normal(leaf.size, leaf.fan_in()),
+            Init::GlorotUniform => {
+                rng.glorot_uniform(leaf.size, leaf.fan_in(), leaf.fan_out())
+            }
+        };
+        let s = output_scale(&leaf.name);
+        if s != 1.0 {
+            for x in v.iter_mut() {
+                *x *= s;
+            }
+        }
+        dst.copy_from_slice(&v);
+    }
+    out
+}
+
+/// Weighted average of parameter vectors: `Σ w_i·p_i / Σ w_i`
+/// (eq. 2 with w = D_n; eq. 3 with w = D_{N_m}).
+pub fn weighted_average(params: &[&[f32]], weights: &[f64]) -> Vec<f32> {
+    assert_eq!(params.len(), weights.len());
+    assert!(!params.is_empty(), "weighted_average of nothing");
+    let dim = params[0].len();
+    let total: f64 = weights.iter().sum();
+    assert!(total > 0.0, "zero total weight");
+    let mut out = vec![0.0f64; dim];
+    for (p, &w) in params.iter().zip(weights) {
+        assert_eq!(p.len(), dim, "parameter dim mismatch");
+        let scale = w / total;
+        for (o, &x) in out.iter_mut().zip(p.iter()) {
+            *o += scale * x as f64;
+        }
+    }
+    out.into_iter().map(|x| x as f32).collect()
+}
+
+/// In-place axpy-style accumulate used by streaming aggregation:
+/// `acc += w * p` (caller divides by total weight at the end).
+pub fn accumulate(acc: &mut [f64], p: &[f32], w: f64) {
+    assert_eq!(acc.len(), p.len());
+    for (a, &x) in acc.iter_mut().zip(p.iter()) {
+        *a += w * x as f64;
+    }
+}
+
+/// Finish a streaming aggregation.
+pub fn finish(acc: &[f64], total_weight: f64) -> Vec<f32> {
+    assert!(total_weight > 0.0);
+    acc.iter().map(|&x| (x / total_weight) as f32).collect()
+}
+
+/// L2 distance between two parameter vectors (clustering, tests).
+pub fn l2_distance(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b.iter())
+        .map(|(&x, &y)| {
+            let d = (x - y) as f64;
+            d * d
+        })
+        .sum::<f64>()
+        .sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Leaf;
+
+    fn info() -> ModelInfo {
+        ModelInfo {
+            name: "t".into(),
+            params: 16 * 4 + 4,
+            bytes: (16 * 4 + 4) * 4,
+            leaves: vec![
+                Leaf { name: "w".into(), shape: vec![16, 4], offset: 0, size: 64 },
+                Leaf { name: "w_b".into(), shape: vec![4], offset: 64, size: 4 },
+            ],
+        }
+    }
+
+    #[test]
+    fn init_he_bias_zero_weights_nonzero() {
+        let p = init_params(&info(), Init::HeNormal, &mut Rng::new(1));
+        assert_eq!(p.len(), 68);
+        assert!(p[..64].iter().any(|&x| x != 0.0));
+        assert!(p[64..].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn init_glorot_within_limit() {
+        let p = init_params(&info(), Init::GlorotUniform, &mut Rng::new(2));
+        let lim = (6.0f64 / (16.0 + 4.0)).sqrt() as f32;
+        assert!(p[..64].iter().all(|&x| x.abs() <= lim));
+    }
+
+    #[test]
+    fn weighted_average_matches_eq2() {
+        let a = vec![1.0f32, 2.0];
+        let b = vec![3.0f32, 6.0];
+        // D_a = 1, D_b = 3 -> (1*a + 3*b)/4 = [2.5, 5.0]
+        let avg = weighted_average(&[&a, &b], &[1.0, 3.0]);
+        assert_eq!(avg, vec![2.5, 5.0]);
+    }
+
+    #[test]
+    fn weighted_average_identity_for_single() {
+        let a = vec![1.5f32, -2.0];
+        assert_eq!(weighted_average(&[&a], &[7.0]), a);
+    }
+
+    #[test]
+    fn streaming_equals_batch() {
+        let a = vec![1.0f32, 2.0, 3.0];
+        let b = vec![-1.0f32, 0.5, 2.0];
+        let batch = weighted_average(&[&a, &b], &[2.0, 5.0]);
+        let mut acc = vec![0.0f64; 3];
+        accumulate(&mut acc, &a, 2.0);
+        accumulate(&mut acc, &b, 5.0);
+        let stream = finish(&acc, 7.0);
+        for (x, y) in batch.iter().zip(stream.iter()) {
+            assert!((x - y).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn mismatched_dims_panic() {
+        let a = vec![1.0f32];
+        let b = vec![1.0f32, 2.0];
+        weighted_average(&[&a, &b], &[1.0, 1.0]);
+    }
+
+    #[test]
+    fn l2_distance_basic() {
+        assert_eq!(l2_distance(&[0.0, 3.0], &[4.0, 0.0]), 5.0);
+    }
+}

@@ -1,0 +1,157 @@
+//! PJRT execution engine: load HLO-text artifacts, compile once, execute
+//! from the L3 hot path.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`. HLO *text* is the interchange format
+//! (xla_extension 0.5.1 rejects jax≥0.5 serialized protos).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use super::manifest::Manifest;
+
+/// A typed input argument for an artifact call.
+pub enum Arg<'a> {
+    /// f32 tensor with explicit dims (row-major).
+    F32(&'a [f32], &'a [i64]),
+    /// i32 tensor.
+    I32(&'a [i32], &'a [i64]),
+    /// f32 scalar.
+    ScalarF32(f32),
+}
+
+impl<'a> Arg<'a> {
+    fn to_literal(&self) -> anyhow::Result<xla::Literal> {
+        Ok(match self {
+            Arg::F32(data, dims) => {
+                let expect: i64 = dims.iter().product();
+                anyhow::ensure!(
+                    expect as usize == data.len(),
+                    "f32 arg: {} elements but dims {:?}",
+                    data.len(),
+                    dims
+                );
+                xla::Literal::vec1(data).reshape(dims)?
+            }
+            Arg::I32(data, dims) => {
+                let expect: i64 = dims.iter().product();
+                anyhow::ensure!(
+                    expect as usize == data.len(),
+                    "i32 arg: {} elements but dims {:?}",
+                    data.len(),
+                    dims
+                );
+                xla::Literal::vec1(data).reshape(dims)?
+            }
+            Arg::ScalarF32(x) => xla::Literal::scalar(*x),
+        })
+    }
+}
+
+/// Cumulative runtime counters (perf accounting for EXPERIMENTS.md §Perf).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EngineStats {
+    pub calls: u64,
+    pub exec_secs: f64,
+    pub compile_secs: f64,
+}
+
+/// Compiled-executable cache over one PJRT CPU client.
+///
+/// NOTE: the `xla` crate types are !Send/!Sync (raw PJRT pointers), so one
+/// `Engine` lives on one thread; device-level parallelism is achieved by
+/// vmapped artifacts instead (DESIGN.md §4).
+pub struct Engine {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub manifest: Manifest,
+    execs: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
+    stats: RefCell<EngineStats>,
+}
+
+impl Engine {
+    /// Open the artifact directory (must contain `manifest.json`).
+    pub fn open(dir: &Path) -> anyhow::Result<Engine> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        log::info!(
+            "pjrt client: platform={} devices={}",
+            client.platform_name(),
+            client.device_count()
+        );
+        Ok(Engine {
+            client,
+            dir: dir.to_path_buf(),
+            manifest,
+            execs: RefCell::new(HashMap::new()),
+            stats: RefCell::new(EngineStats::default()),
+        })
+    }
+
+    /// Compile (or fetch from cache) the named artifact.
+    fn ensure_compiled(&self, name: &str) -> anyhow::Result<()> {
+        if self.execs.borrow().contains_key(name) {
+            return Ok(());
+        }
+        let file = self.manifest.artifact_file(name)?;
+        let path = self.dir.join(file);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| anyhow::anyhow!("non-utf8 path {path:?}"))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        let dt = t0.elapsed().as_secs_f64();
+        self.stats.borrow_mut().compile_secs += dt;
+        log::info!("compiled artifact {name} in {dt:.2}s");
+        self.execs.borrow_mut().insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Eagerly compile a set of artifacts (e.g. at startup).
+    pub fn warmup(&self, names: &[&str]) -> anyhow::Result<()> {
+        for n in names {
+            self.ensure_compiled(n)?;
+        }
+        Ok(())
+    }
+
+    /// Execute artifact `name`. All our artifacts return a tuple of f32
+    /// tensors (return_tuple=True at lowering); each is returned flat.
+    pub fn run(&self, name: &str, args: &[Arg]) -> anyhow::Result<Vec<Vec<f32>>> {
+        self.ensure_compiled(name)?;
+        let literals: Vec<xla::Literal> = args
+            .iter()
+            .map(|a| a.to_literal())
+            .collect::<anyhow::Result<_>>()?;
+        let t0 = Instant::now();
+        let execs = self.execs.borrow();
+        let exe = execs.get(name).expect("ensured above");
+        let result = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        {
+            let mut s = self.stats.borrow_mut();
+            s.calls += 1;
+            s.exec_secs += t0.elapsed().as_secs_f64();
+        }
+        let parts = result.to_tuple()?;
+        parts
+            .into_iter()
+            .map(|lit| {
+                lit.to_vec::<f32>()
+                    .map_err(|e| anyhow::anyhow!("output not f32: {e}"))
+            })
+            .collect()
+    }
+
+    pub fn stats(&self) -> EngineStats {
+        *self.stats.borrow()
+    }
+
+    pub fn artifact_dir(&self) -> &Path {
+        &self.dir
+    }
+}

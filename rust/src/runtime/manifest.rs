@@ -1,0 +1,243 @@
+//! Parse `artifacts/manifest.json` (written by `python/compile/aot.py`).
+//!
+//! The manifest makes the Rust coordinator self-describing: parameter
+//! counts and leaf layouts for every model, AOT constants (batch shapes,
+//! DQN dimensions) and the artifact file names.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::util::Json;
+
+/// One flat-vector parameter leaf.
+#[derive(Clone, Debug)]
+pub struct Leaf {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub size: usize,
+}
+
+impl Leaf {
+    pub fn is_bias(&self) -> bool {
+        self.name.ends_with("_b")
+    }
+
+    /// fan-in for He/Glorot init: conv OIHW -> I*kh*kw, dense (in,out) -> in.
+    pub fn fan_in(&self) -> usize {
+        match self.shape.len() {
+            4 => self.shape[1] * self.shape[2] * self.shape[3],
+            2 => self.shape[0],
+            _ => self.size,
+        }
+    }
+
+    pub fn fan_out(&self) -> usize {
+        match self.shape.len() {
+            4 => self.shape[0] * self.shape[2] * self.shape[3],
+            2 => self.shape[1],
+            _ => self.size,
+        }
+    }
+}
+
+/// One model's parameter layout.
+#[derive(Clone, Debug)]
+pub struct ModelInfo {
+    pub name: String,
+    pub params: usize,
+    pub bytes: usize,
+    pub leaves: Vec<Leaf>,
+}
+
+/// AOT-time constants (shapes baked into the artifacts).
+#[derive(Clone, Debug)]
+pub struct Consts {
+    /// Device slots per `local_round` call (vmap width).
+    pub db: usize,
+    /// Local iterations L per round.
+    pub l: usize,
+    /// Minibatch per local iteration.
+    pub b: usize,
+    /// Eval batch.
+    pub eb: usize,
+    /// Number of edge servers M.
+    pub n_edges: usize,
+    /// D³QN feature dim F = M + 3.
+    pub feat: usize,
+    /// D³QN replay minibatch O.
+    pub o: usize,
+    /// D³QN training horizon H.
+    pub train_horizon: usize,
+    /// Horizons with a lowered `dqn_q_all_h<H>` artifact.
+    pub horizons: Vec<usize>,
+    pub num_classes: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub consts: Consts,
+    pub models: BTreeMap<String, ModelInfo>,
+    pub artifacts: BTreeMap<String, String>,
+}
+
+fn usize_field(j: &Json, key: &str) -> anyhow::Result<usize> {
+    j.req(key)?
+        .as_usize()
+        .ok_or_else(|| anyhow::anyhow!("key {key:?} is not a number"))
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            anyhow::anyhow!(
+                "cannot read {} — run `make artifacts` first ({e})",
+                path.display()
+            )
+        })?;
+        let j = Json::parse(&text)?;
+        Self::from_json(&j)
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<Manifest> {
+        let c = j.req("consts")?;
+        let consts = Consts {
+            db: usize_field(c, "db")?,
+            l: usize_field(c, "l")?,
+            b: usize_field(c, "b")?,
+            eb: usize_field(c, "eb")?,
+            n_edges: usize_field(c, "n_edges")?,
+            feat: usize_field(c, "feat")?,
+            o: usize_field(c, "o")?,
+            train_horizon: usize_field(c, "train_horizon")?,
+            horizons: c
+                .req("horizons")?
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("horizons not an array"))?
+                .iter()
+                .filter_map(|x| x.as_usize())
+                .collect(),
+            num_classes: usize_field(c, "num_classes")?,
+        };
+
+        let mut models = BTreeMap::new();
+        if let Json::Obj(m) = j.req("models")? {
+            for (name, mj) in m {
+                let mut leaves = Vec::new();
+                let mut offset = 0usize;
+                for lj in mj.req("leaves")?.as_arr().unwrap_or(&[]) {
+                    let shape: Vec<usize> = lj
+                        .req("shape")?
+                        .as_arr()
+                        .unwrap_or(&[])
+                        .iter()
+                        .filter_map(|x| x.as_usize())
+                        .collect();
+                    let size: usize = shape.iter().product();
+                    // python writes offsets for CNN models; recompute anyway
+                    leaves.push(Leaf {
+                        name: lj
+                            .req("name")?
+                            .as_str()
+                            .unwrap_or_default()
+                            .to_string(),
+                        shape,
+                        offset,
+                        size,
+                    });
+                    offset += size;
+                }
+                let params = usize_field(mj, "params")?;
+                anyhow::ensure!(
+                    offset == params,
+                    "model {name}: leaves sum to {offset}, manifest says {params}"
+                );
+                models.insert(
+                    name.clone(),
+                    ModelInfo {
+                        name: name.clone(),
+                        params,
+                        bytes: usize_field(mj, "bytes")?,
+                        leaves,
+                    },
+                );
+            }
+        }
+
+        let mut artifacts = BTreeMap::new();
+        if let Json::Obj(a) = j.req("artifacts")? {
+            for (name, aj) in a {
+                artifacts.insert(
+                    name.clone(),
+                    aj.req("file")?.as_str().unwrap_or_default().to_string(),
+                );
+            }
+        }
+
+        Ok(Manifest { consts, models, artifacts })
+    }
+
+    pub fn model(&self, name: &str) -> anyhow::Result<&ModelInfo> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("model {name:?} not in manifest"))
+    }
+
+    pub fn artifact_file(&self, name: &str) -> anyhow::Result<&str> {
+        self.artifacts
+            .get(name)
+            .map(|s| s.as_str())
+            .ok_or_else(|| anyhow::anyhow!("artifact {name:?} not in manifest"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "consts": {"db":8,"l":5,"b":8,"eb":250,"n_edges":5,"feat":8,"o":64,
+                 "train_horizon":50,"horizons":[10,30,50,100],
+                 "num_classes":10,"dqn_hid":32,"dqn_fc":32,"dqn_lr":0.001},
+      "models": {
+        "mini": {"params": 6, "bytes": 24,
+          "leaves": [{"name":"conv1_w","shape":[1,1,2,2]},
+                     {"name":"conv1_b","shape":[2]}]}
+      },
+      "artifacts": {"mini_local_round": {"file":"mini_local_round.hlo.txt",
+                                          "inputs": []}}
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let j = Json::parse(SAMPLE).unwrap();
+        let m = Manifest::from_json(&j).unwrap();
+        assert_eq!(m.consts.db, 8);
+        assert_eq!(m.consts.horizons, vec![10, 30, 50, 100]);
+        let mini = m.model("mini").unwrap();
+        assert_eq!(mini.leaves.len(), 2);
+        assert_eq!(mini.leaves[1].offset, 4);
+        assert!(mini.leaves[1].is_bias());
+        assert_eq!(
+            m.artifact_file("mini_local_round").unwrap(),
+            "mini_local_round.hlo.txt"
+        );
+    }
+
+    #[test]
+    fn leaf_fans() {
+        let l = Leaf { name: "w".into(), shape: vec![15, 3, 5, 5], offset: 0, size: 1125 };
+        assert_eq!(l.fan_in(), 75);
+        let d = Leaf { name: "w".into(), shape: vec![448, 220], offset: 0, size: 98560 };
+        assert_eq!(d.fan_in(), 448);
+        assert_eq!(d.fan_out(), 220);
+    }
+
+    #[test]
+    fn rejects_inconsistent_param_count() {
+        let bad = SAMPLE.replace("\"params\": 6", "\"params\": 7");
+        let j = Json::parse(&bad).unwrap();
+        assert!(Manifest::from_json(&j).is_err());
+    }
+}

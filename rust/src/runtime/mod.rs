@@ -1,0 +1,8 @@
+//! Runtime: the `xla` crate PJRT wrapper that loads `artifacts/*.hlo.txt`
+//! and executes them from the L3 hot path (no Python at runtime).
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::{Arg, Engine, EngineStats};
+pub use manifest::{Consts, Leaf, Manifest, ModelInfo};

@@ -1,0 +1,94 @@
+//! Adjusted Rand Index (eq. 28) — the clustering accuracy criterion of
+//! Table II.
+//!
+//! The paper states the pair-counting form
+//! `ARI = 2(σ00·σ11 − σ01·σ10) / [(σ00+σ01)(σ01+σ11) + (σ00+σ10)(σ10+σ11)]`
+//! over pairs that agree/disagree between prediction and ground truth.
+
+/// σ counts over all unordered pairs.
+#[derive(Debug, Default, Clone, Copy, PartialEq)]
+pub struct PairCounts {
+    /// same cluster in both.
+    pub s11: f64,
+    /// different clusters in both.
+    pub s00: f64,
+    /// same in prediction, different in truth.
+    pub s01: f64,
+    /// different in prediction, same in truth.
+    pub s10: f64,
+}
+
+pub fn pair_counts(pred: &[usize], truth: &[usize]) -> PairCounts {
+    assert_eq!(pred.len(), truth.len());
+    let n = pred.len();
+    let mut c = PairCounts::default();
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let same_p = pred[i] == pred[j];
+            let same_t = truth[i] == truth[j];
+            match (same_p, same_t) {
+                (true, true) => c.s11 += 1.0,
+                (false, false) => c.s00 += 1.0,
+                (true, false) => c.s01 += 1.0,
+                (false, true) => c.s10 += 1.0,
+            }
+        }
+    }
+    c
+}
+
+/// ARI per eq. 28. 1.0 = identical clusterings, ≈0 = chance agreement.
+pub fn ari(pred: &[usize], truth: &[usize]) -> f64 {
+    let c = pair_counts(pred, truth);
+    let num = 2.0 * (c.s00 * c.s11 - c.s01 * c.s10);
+    let den = (c.s00 + c.s01) * (c.s01 + c.s11) + (c.s00 + c.s10) * (c.s10 + c.s11);
+    if den == 0.0 {
+        1.0 // degenerate: a single cluster in both — perfect agreement
+    } else {
+        num / den
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identical_clusterings_score_one() {
+        let a = vec![0, 0, 1, 1, 2, 2];
+        assert!((ari(&a, &a) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn label_permutation_invariant() {
+        let truth = vec![0, 0, 1, 1, 2, 2];
+        let pred = vec![2, 2, 0, 0, 1, 1];
+        assert!((ari(&pred, &truth) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn random_assignment_near_zero() {
+        // deterministic pseudo-random labels vs structured truth
+        let truth: Vec<usize> = (0..200).map(|i| i / 20).collect();
+        let pred: Vec<usize> =
+            (0..200).map(|i| (i * 7919 + 13) % 10).collect();
+        let v = ari(&pred, &truth);
+        assert!(v.abs() < 0.1, "{v}");
+    }
+
+    #[test]
+    fn partial_agreement_between_zero_and_one() {
+        let truth = vec![0, 0, 0, 1, 1, 1];
+        let pred = vec![0, 0, 1, 1, 1, 1];
+        let v = ari(&pred, &truth);
+        assert!(v > 0.0 && v < 1.0, "{v}");
+    }
+
+    #[test]
+    fn pair_counts_sum_to_n_choose_2() {
+        let truth = vec![0, 1, 0, 2, 1];
+        let pred = vec![1, 1, 0, 0, 2];
+        let c = pair_counts(&pred, &truth);
+        assert_eq!(c.s00 + c.s01 + c.s10 + c.s11, 10.0);
+    }
+}

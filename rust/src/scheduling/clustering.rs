@@ -1,0 +1,345 @@
+//! Algorithm 2 — K-means-based device clustering.
+//!
+//! Every device trains an auxiliary model from a common initialization on
+//! its local data; the cloud clusters the trained weight vectors with
+//! K-means. Devices whose datasets share a majority class land in the same
+//! cluster (ARI = 1 in Table II).
+//!
+//! Two auxiliary-model choices:
+//! * **VKC**: the full HFL model `w⁰` (heavy — the Table II cost columns);
+//! * **IKC**: the mini model ξ on 1×10×10 single-channel crops (~10 KB).
+//!
+//! The auxiliary training itself runs through the AOT artifacts
+//! (`local_round_<ds>` / `mini_local_round`), so this module is also the
+//! Rust↔PJRT integration point for Algorithm 2.
+//!
+//! Cost accounting (Table II): all N devices train in parallel at `f_max`
+//! and upload over their geographically nearest edge with an equal B_m
+//! split; edges forward the N weight vectors to the cloud. Compute cycles
+//! scale with the auxiliary model's parameter count (cycles ∝ FLOPs ∝
+//! params — DESIGN.md §5).
+
+use super::ari::ari;
+use super::kmeans::{clusters_from_labels, kmeans_restarts};
+use crate::data::{DeviceData, Templates, NUM_CLASSES};
+use crate::model::{init_params, Init};
+use crate::runtime::{Arg, Engine};
+use crate::system::Topology;
+use crate::util::Rng;
+
+/// Which auxiliary model Algorithm 2 trains.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AuxModel {
+    /// IKC: the ~10 KB mini model ξ on 10×10 crops.
+    Mini,
+    /// VKC: the full HFL model.
+    Full,
+}
+
+impl AuxModel {
+    /// Auxiliary-training learning rate for Algorithm 2. Empirically the
+    /// majority-class direction dominates the weight delta from ≈0.5 on
+    /// the mini model (ARI = 1.0, Table II); the full CNN diverges there,
+    /// so VKC trains at a conventional rate.
+    pub fn cluster_lr(self) -> f32 {
+        match self {
+            AuxModel::Mini => 0.5,
+            AuxModel::Full => 0.05,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ClusteringResult {
+    pub clusters: Vec<Vec<usize>>,
+    pub labels: Vec<usize>,
+    /// Wall-clock of Algorithm 2 in the *simulated* system (Table II col 1).
+    pub time_s: f64,
+    /// Energy of Algorithm 2 in the simulated system (Table II col 2).
+    pub energy_j: f64,
+    /// ARI vs the ground-truth majority classes (Table II col 3).
+    pub ari: f64,
+}
+
+/// Crop a full image (C×img×img, channel 0) to a 1×10×10 mini-model input
+/// with a deterministic per-sample offset.
+pub fn crop_to_mini(full: &[f32], img: usize, key: u64, out: &mut [f32; 100]) {
+    let mut rng = Rng::new(key ^ 0xc0ffee);
+    let max_off = img - 10;
+    let oy = rng.below(max_off + 1);
+    let ox = rng.below(max_off + 1);
+    for y in 0..10 {
+        for x in 0..10 {
+            out[y * 10 + x] = full[(oy + y) * img + (ox + x)];
+        }
+    }
+}
+
+/// Simulated delay/energy of Algorithm 2 (see module docs).
+pub fn clustering_cost(topo: &Topology, aux_bits: f64, cycle_scale: f64) -> (f64, f64) {
+    let p = &topo.params;
+    // equal bandwidth split per nearest-edge population
+    let mut edge_pop = vec![0usize; topo.edges.len()];
+    let nearest: Vec<usize> =
+        (0..topo.devices.len()).map(|n| topo.nearest_edge(n)).collect();
+    for &m in &nearest {
+        edge_pop[m] += 1;
+    }
+
+    let mut t_max = 0.0f64;
+    let mut e_sum = 0.0f64;
+    for d in &topo.devices {
+        let m = nearest[d.id];
+        let b = topo.edges[m].bandwidth_hz / edge_pop[m] as f64;
+        let cycles = p.local_iters as f64
+            * d.cycles_per_sample
+            * cycle_scale
+            * d.num_samples as f64;
+        let t_cmp = cycles / d.max_freq_hz;
+        let e_cmp = 0.5 * p.alpha * cycles * d.max_freq_hz * d.max_freq_hz;
+        let rate = topo.channel.rate(b, d.gain_to_edge[m], d.tx_power_w);
+        let t_com = aux_bits / rate;
+        t_max = t_max.max(t_cmp + t_com);
+        e_sum += e_cmp + d.tx_power_w * t_com;
+    }
+    // edges forward all collected weight vectors to the cloud
+    let mut t_fwd_max = 0.0f64;
+    for e in &topo.edges {
+        if edge_pop[e.id] == 0 {
+            continue;
+        }
+        let rate = topo.channel.rate(p.cloud_bw_hz, e.gain_to_cloud, e.tx_power_w);
+        let t_fwd = aux_bits * edge_pop[e.id] as f64 / rate;
+        t_fwd_max = t_fwd_max.max(t_fwd);
+        e_sum += e.tx_power_w * t_fwd;
+    }
+    (t_max + t_fwd_max, e_sum)
+}
+
+/// Run Algorithm 2: train the auxiliary model on every device (through the
+/// PJRT artifacts) and K-means the trained weights into K clusters.
+#[allow(clippy::too_many_arguments)]
+pub fn cluster_devices(
+    engine: &Engine,
+    topo: &Topology,
+    templates: &Templates,
+    device_data: &[DeviceData],
+    aux: AuxModel,
+    k: usize,
+    lr: f32,
+    rng: &mut Rng,
+) -> anyhow::Result<ClusteringResult> {
+    // Chain several local rounds so the auxiliary weight deltas integrate
+    // enough local samples to be majority-class dominated (the paper's
+    // full-batch eq. 1 sees D_n samples per step; our minibatch artifacts
+    // see L·B — `rounds` closes that gap at negligible cost for ξ).
+    let rounds: usize = match aux {
+        AuxModel::Mini => 10,
+        AuxModel::Full => 2,
+    };
+    let consts = engine.manifest.consts.clone();
+    let (db, l, bsz) = (consts.db, consts.l, consts.b);
+    let spec = templates.spec();
+    let n = device_data.len();
+
+    let (model_name, artifact, in_ch, img): (&str, String, usize, usize) = match aux {
+        AuxModel::Mini => ("mini", "mini_local_round".into(), 1, 10),
+        AuxModel::Full => (
+            spec.name.as_str(),
+            format!("local_round_{}", spec.name),
+            spec.channels,
+            spec.img,
+        ),
+    };
+    let info = engine.manifest.model(model_name)?.clone();
+    let p = info.params;
+
+    // common initialization w_aux broadcast to every device (Alg.2 L2)
+    let w_aux = init_params(&info, Init::HeNormal, rng);
+
+    let pixels_in = in_ch * img * img;
+    let full_pixels = spec.pixels();
+    let mut weights: Vec<Vec<f32>> = Vec::with_capacity(n);
+
+    let mut params_buf = vec![0.0f32; db * p];
+    let mut xs = vec![0.0f32; db * l * bsz * pixels_in];
+    let mut ys = vec![0.0f32; db * l * bsz * NUM_CLASSES];
+    let mut full_buf = vec![0.0f32; full_pixels];
+
+    for chunk in (0..n).collect::<Vec<_>>().chunks(db) {
+        // build the device-slot batch (pad the tail with the last device)
+        for slot in 0..db {
+            let dev = chunk.get(slot).cloned().unwrap_or(chunk[chunk.len() - 1]);
+            let dd = &device_data[dev];
+            params_buf[slot * p..(slot + 1) * p].copy_from_slice(&w_aux);
+            for li in 0..l {
+                for bi in 0..bsz {
+                    let idx = rng.below(dd.n_samples);
+                    let class = dd.gen(templates, idx, &mut full_buf);
+                    let xoff =
+                        ((slot * l + li) * bsz + bi) * pixels_in;
+                    match aux {
+                        AuxModel::Mini => {
+                            let mut crop = [0.0f32; 100];
+                            crop_to_mini(
+                                &full_buf,
+                                spec.img,
+                                (dev as u64) << 32 | (li * bsz + bi) as u64,
+                                &mut crop,
+                            );
+                            xs[xoff..xoff + 100].copy_from_slice(&crop);
+                        }
+                        AuxModel::Full => {
+                            xs[xoff..xoff + pixels_in].copy_from_slice(&full_buf);
+                        }
+                    }
+                    let yoff = ((slot * l + li) * bsz + bi) * NUM_CLASSES;
+                    ys[yoff..yoff + NUM_CLASSES].fill(0.0);
+                    ys[yoff + class] = 1.0;
+                }
+            }
+        }
+        let mut trained = params_buf.clone();
+        for round in 0..rounds {
+            if round > 0 {
+                // fresh batches per round
+                for slot in 0..db {
+                    let dev =
+                        chunk.get(slot).cloned().unwrap_or(chunk[chunk.len() - 1]);
+                    let dd = &device_data[dev];
+                    for li in 0..l {
+                        for bi in 0..bsz {
+                            let idx = rng.below(dd.n_samples);
+                            let class = dd.gen(templates, idx, &mut full_buf);
+                            let xoff = ((slot * l + li) * bsz + bi) * pixels_in;
+                            match aux {
+                                AuxModel::Mini => {
+                                    let mut crop = [0.0f32; 100];
+                                    crop_to_mini(
+                                        &full_buf,
+                                        spec.img,
+                                        (dev as u64) << 32
+                                            | ((round * l + li) * bsz + bi) as u64,
+                                        &mut crop,
+                                    );
+                                    xs[xoff..xoff + 100].copy_from_slice(&crop);
+                                }
+                                AuxModel::Full => {
+                                    xs[xoff..xoff + pixels_in]
+                                        .copy_from_slice(&full_buf);
+                                }
+                            }
+                            let yoff = ((slot * l + li) * bsz + bi) * NUM_CLASSES;
+                            ys[yoff..yoff + NUM_CLASSES].fill(0.0);
+                            ys[yoff + class] = 1.0;
+                        }
+                    }
+                }
+            }
+            let out = engine.run(
+                &artifact,
+                &[
+                    Arg::F32(&trained, &[db as i64, p as i64]),
+                    Arg::F32(
+                        &xs,
+                        &[db as i64, l as i64, bsz as i64, in_ch as i64, img as i64, img as i64],
+                    ),
+                    Arg::F32(&ys, &[db as i64, l as i64, bsz as i64, NUM_CLASSES as i64]),
+                    Arg::ScalarF32(lr),
+                ],
+            )?;
+            trained = out[0].clone();
+        }
+        for (slot, &dev) in chunk.iter().enumerate() {
+            let _ = dev;
+            weights.push(trained[slot * p..(slot + 1) * p].to_vec());
+        }
+    }
+
+    // Cloud-side K-means over trained weight deltas, with three standard
+    // sharpenings of the raw-weights clustering: subtract the common init
+    // (pure gradient direction), restrict to the classifier-head leaves
+    // (the majority class manifests as "push my class logit up" — feature-
+    // extractor deltas mostly carry shared task signal + minibatch noise),
+    // and L2-normalize each delta (data volume scales step length, not
+    // direction).
+    let head: Vec<(usize, usize)> = info
+        .leaves
+        .iter()
+        .filter(|lf| lf.name.starts_with("fc"))
+        .map(|lf| (lf.offset, lf.size))
+        .collect();
+    let deltas: Vec<Vec<f32>> = weights
+        .iter()
+        .map(|w| {
+            let mut d: Vec<f32> = head
+                .iter()
+                .flat_map(|&(off, size)| {
+                    (off..off + size).map(|i| w[i] - w_aux[i])
+                })
+                .map(|x| if x.is_finite() { x } else { 0.0 })
+                .collect();
+            let norm = d.iter().map(|x| x * x).sum::<f32>().sqrt();
+            if norm > 0.0 {
+                for x in d.iter_mut() {
+                    *x /= norm;
+                }
+            }
+            d
+        })
+        .collect();
+    let km = kmeans_restarts(&deltas, k, 100, 20, rng);
+    let clusters = clusters_from_labels(&km.labels, k);
+
+    let truth: Vec<usize> = device_data.iter().map(|d| d.majority).collect();
+    let ari_v = ari(&km.labels, &truth);
+
+    let hfl_params = engine.manifest.model(spec.name.as_str())?.params;
+    let cycle_scale = p as f64 / hfl_params as f64;
+    let aux_bits = (info.bytes * 8) as f64;
+    let (time_s, energy_j) = match aux {
+        AuxModel::Mini => clustering_cost(topo, aux_bits, cycle_scale),
+        AuxModel::Full => clustering_cost(topo, aux_bits, 1.0),
+    };
+
+    Ok(ClusteringResult { clusters, labels: km.labels, time_s, energy_j, ari: ari_v })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::system::SystemParams;
+
+    #[test]
+    fn crop_is_deterministic_and_in_bounds() {
+        let img = 28;
+        let full: Vec<f32> = (0..img * img).map(|i| i as f32).collect();
+        let mut a = [0.0f32; 100];
+        let mut b = [0.0f32; 100];
+        crop_to_mini(&full, img, 7, &mut a);
+        crop_to_mini(&full, img, 7, &mut b);
+        assert_eq!(a, b);
+        // all values must come from the source image
+        assert!(a.iter().all(|&v| v >= 0.0 && v < (img * img) as f32));
+        // rows are contiguous runs from the source
+        assert_eq!(a[1] - a[0], 1.0);
+        assert_eq!(a[10] - a[0], img as f32);
+    }
+
+    #[test]
+    fn clustering_cost_scales_with_model_size() {
+        let topo = Topology::generate(&SystemParams::default(), &mut Rng::new(1));
+        let (t_small, e_small) = clustering_cost(&topo, 10.0 * 1024.0 * 8.0, 0.02);
+        let (t_big, e_big) = clustering_cost(&topo, 448.0 * 1024.0 * 8.0, 1.0);
+        assert!(t_big > 10.0 * t_small, "{t_big} vs {t_small}");
+        assert!(e_big > 10.0 * e_small, "{e_big} vs {e_small}");
+    }
+
+    #[test]
+    fn clustering_cost_positive_finite() {
+        let topo = Topology::generate(&SystemParams::default(), &mut Rng::new(2));
+        let (t, e) = clustering_cost(&topo, 1e5, 0.1);
+        assert!(t.is_finite() && t > 0.0);
+        assert!(e.is_finite() && e > 0.0);
+    }
+}

@@ -1,0 +1,216 @@
+//! K-means with k-means++ initialization, used by Algorithm 2 to cluster
+//! devices by their trained auxiliary-model weights.
+
+use crate::util::Rng;
+
+/// Result of a K-means run.
+#[derive(Clone, Debug)]
+pub struct KMeans {
+    pub centroids: Vec<Vec<f32>>,
+    pub labels: Vec<usize>,
+    pub inertia: f64,
+    pub iterations: usize,
+}
+
+fn sq_dist(a: &[f32], b: &[f32]) -> f64 {
+    a.iter()
+        .zip(b)
+        .map(|(&x, &y)| {
+            let d = (x - y) as f64;
+            d * d
+        })
+        .sum()
+}
+
+/// k-means++ seeding.
+fn init_pp(points: &[Vec<f32>], k: usize, rng: &mut Rng) -> Vec<Vec<f32>> {
+    let n = points.len();
+    let mut centroids: Vec<Vec<f32>> = Vec::with_capacity(k);
+    centroids.push(points[rng.below(n)].clone());
+    let mut d2: Vec<f64> = points.iter().map(|p| sq_dist(p, &centroids[0])).collect();
+    while centroids.len() < k {
+        let total: f64 = d2.iter().sum();
+        let next = if total <= 0.0 {
+            rng.below(n) // all points identical to some centroid
+        } else {
+            let mut r = rng.f64() * total;
+            let mut pick = n - 1;
+            for (i, &d) in d2.iter().enumerate() {
+                if r < d {
+                    pick = i;
+                    break;
+                }
+                r -= d;
+            }
+            pick
+        };
+        centroids.push(points[next].clone());
+        for (i, p) in points.iter().enumerate() {
+            d2[i] = d2[i].min(sq_dist(p, centroids.last().unwrap()));
+        }
+    }
+    centroids
+}
+
+/// Run K-means with `n_init` k-means++ restarts, keeping the best inertia.
+pub fn kmeans_restarts(
+    points: &[Vec<f32>],
+    k: usize,
+    max_iters: usize,
+    n_init: usize,
+    rng: &mut Rng,
+) -> KMeans {
+    let mut best: Option<KMeans> = None;
+    for _ in 0..n_init.max(1) {
+        let km = kmeans(points, k, max_iters, rng);
+        if best.as_ref().map_or(true, |b| km.inertia < b.inertia) {
+            best = Some(km);
+        }
+    }
+    best.unwrap()
+}
+
+/// Run K-means. `points` must be non-empty, all of equal dimension, and
+/// `k <= points.len()`.
+pub fn kmeans(points: &[Vec<f32>], k: usize, max_iters: usize, rng: &mut Rng) -> KMeans {
+    assert!(!points.is_empty() && k > 0 && k <= points.len());
+    let dim = points[0].len();
+    assert!(points.iter().all(|p| p.len() == dim));
+
+    let mut centroids = init_pp(points, k, rng);
+    let mut labels = vec![0usize; points.len()];
+    let mut iterations = 0;
+    for it in 0..max_iters {
+        iterations = it + 1;
+        // assign
+        let mut changed = false;
+        for (i, p) in points.iter().enumerate() {
+            let best = (0..k)
+                .min_by(|&a, &b| {
+                    sq_dist(p, &centroids[a]).total_cmp(&sq_dist(p, &centroids[b]))
+                })
+                .unwrap();
+            if labels[i] != best {
+                labels[i] = best;
+                changed = true;
+            }
+        }
+        // update
+        let mut sums = vec![vec![0.0f64; dim]; k];
+        let mut counts = vec![0usize; k];
+        for (i, p) in points.iter().enumerate() {
+            counts[labels[i]] += 1;
+            for (s, &x) in sums[labels[i]].iter_mut().zip(p.iter()) {
+                *s += x as f64;
+            }
+        }
+        for c in 0..k {
+            if counts[c] == 0 {
+                // re-seed an empty cluster at the farthest point
+                let far = (0..points.len())
+                    .max_by(|&a, &b| {
+                        sq_dist(&points[a], &centroids[labels[a]])
+                            .total_cmp(&sq_dist(&points[b], &centroids[labels[b]]))
+                    })
+                    .unwrap();
+                centroids[c] = points[far].clone();
+            } else {
+                for (j, s) in sums[c].iter().enumerate() {
+                    centroids[c][j] = (s / counts[c] as f64) as f32;
+                }
+            }
+        }
+        if !changed && it > 0 {
+            break;
+        }
+    }
+
+    let inertia = points
+        .iter()
+        .zip(&labels)
+        .map(|(p, &l)| sq_dist(p, &centroids[l]))
+        .sum();
+    KMeans { centroids, labels, inertia, iterations }
+}
+
+/// Group indices by label into `k` clusters.
+pub fn clusters_from_labels(labels: &[usize], k: usize) -> Vec<Vec<usize>> {
+    let mut out = vec![Vec::new(); k];
+    for (i, &l) in labels.iter().enumerate() {
+        out[l].push(i);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn blobs(k: usize, per: usize, dim: usize, sep: f32, rng: &mut Rng) -> (Vec<Vec<f32>>, Vec<usize>) {
+        let mut pts = Vec::new();
+        let mut truth = Vec::new();
+        for c in 0..k {
+            let center: Vec<f32> =
+                (0..dim).map(|j| if j % k == c { sep } else { 0.0 }).collect();
+            for _ in 0..per {
+                let p: Vec<f32> = center
+                    .iter()
+                    .map(|&v| v + rng.gaussian() as f32 * 0.1)
+                    .collect();
+                pts.push(p);
+                truth.push(c);
+            }
+        }
+        (pts, truth)
+    }
+
+    #[test]
+    fn recovers_well_separated_blobs() {
+        let mut rng = Rng::new(1);
+        let (pts, truth) = blobs(4, 20, 8, 5.0, &mut rng);
+        let km = kmeans(&pts, 4, 50, &mut rng);
+        // all points of a true blob share a predicted label
+        for c in 0..4 {
+            let labels: Vec<usize> = (0..pts.len())
+                .filter(|&i| truth[i] == c)
+                .map(|i| km.labels[i])
+                .collect();
+            assert!(labels.iter().all(|&l| l == labels[0]), "blob {c} split");
+        }
+    }
+
+    #[test]
+    fn inertia_decreases_with_more_clusters() {
+        let mut rng = Rng::new(2);
+        let (pts, _) = blobs(4, 25, 6, 3.0, &mut rng);
+        let k2 = kmeans(&pts, 2, 50, &mut Rng::new(3));
+        let k4 = kmeans(&pts, 4, 50, &mut Rng::new(3));
+        assert!(k4.inertia < k2.inertia);
+    }
+
+    #[test]
+    fn k_equals_n_gives_zero_inertia() {
+        let mut rng = Rng::new(4);
+        let pts: Vec<Vec<f32>> =
+            (0..5).map(|i| vec![i as f32 * 2.0, -(i as f32)]).collect();
+        let km = kmeans(&pts, 5, 20, &mut rng);
+        assert!(km.inertia < 1e-9);
+    }
+
+    #[test]
+    fn clusters_from_labels_partition() {
+        let labels = vec![0, 2, 1, 0, 2];
+        let cl = clusters_from_labels(&labels, 3);
+        assert_eq!(cl[0], vec![0, 3]);
+        assert_eq!(cl[1], vec![2]);
+        assert_eq!(cl[2], vec![1, 4]);
+    }
+
+    #[test]
+    fn handles_identical_points() {
+        let pts = vec![vec![1.0f32, 1.0]; 6];
+        let km = kmeans(&pts, 2, 10, &mut Rng::new(5));
+        assert_eq!(km.labels.len(), 6);
+        assert!(km.inertia < 1e-12);
+    }
+}

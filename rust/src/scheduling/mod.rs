@@ -1,0 +1,19 @@
+//! Device scheduling (§IV): select the subset `H_i` of devices that joins
+//! each global iteration.
+//!
+//! * [`schedulers::FedAvg`] — uniform random baseline [3].
+//! * [`schedulers::Vkc`] — vanilla K-Center (Algorithm 3).
+//! * [`schedulers::Ikc`] — improved K-Center (Algorithm 4), the paper's
+//!   scheduling contribution.
+//! * [`clustering`] — Algorithm 2 (auxiliary-model K-means clustering).
+//! * [`ari`] — the Adjusted Rand Index (eq. 28) used by Table II.
+
+pub mod ari;
+pub mod clustering;
+pub mod kmeans;
+pub mod schedulers;
+
+pub use ari::ari;
+pub use clustering::{cluster_devices, AuxModel, ClusteringResult};
+pub use kmeans::{clusters_from_labels, kmeans, kmeans_restarts, KMeans};
+pub use schedulers::{FedAvg, Ikc, Scheduler, Vkc};

@@ -1,0 +1,279 @@
+//! Device schedulers: FedAvg (random), VKC (Algorithm 3) and IKC
+//! (Algorithm 4).
+//!
+//! VKC/IKC operate on the K clusters produced by Algorithm 2
+//! (`clustering.rs`); per global iteration they draw `h = H/K` devices per
+//! cluster so the union dataset `D_H` approximates class balance (§IV).
+//! IKC additionally keeps per-cluster history sets `G_k` that prioritize
+//! not-recently-scheduled devices, fixing VKC's repetitive-scheduling flaw.
+
+use crate::util::Rng;
+
+/// A device scheduler: selects the subset `H_i ⊆ N` per global iteration.
+pub trait Scheduler {
+    fn schedule(&mut self) -> Vec<usize>;
+    fn name(&self) -> &'static str;
+}
+
+// ---------------------------------------------------------------------------
+// FedAvg: uniformly random H devices [3].
+// ---------------------------------------------------------------------------
+
+pub struct FedAvg {
+    n_devices: usize,
+    h: usize,
+    rng: Rng,
+}
+
+impl FedAvg {
+    pub fn new(n_devices: usize, h: usize, seed: u64) -> Self {
+        assert!(h <= n_devices);
+        FedAvg { n_devices, h, rng: Rng::new(seed) }
+    }
+}
+
+impl Scheduler for FedAvg {
+    fn schedule(&mut self) -> Vec<usize> {
+        let mut v = self.rng.sample_indices(self.n_devices, self.h);
+        v.sort_unstable();
+        v
+    }
+
+    fn name(&self) -> &'static str {
+        "fedavg"
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shared VKC/IKC helper: top-up from unscheduled devices (Alg. 3 L12-14).
+// ---------------------------------------------------------------------------
+
+fn top_up(selected: &mut Vec<usize>, n_devices: usize, target: usize, rng: &mut Rng) {
+    if selected.len() >= target {
+        return;
+    }
+    let chosen: std::collections::HashSet<usize> = selected.iter().cloned().collect();
+    let pool: Vec<usize> = (0..n_devices).filter(|n| !chosen.contains(n)).collect();
+    let extra = (target - selected.len()).min(pool.len());
+    selected.extend(rng.sample(&pool, extra));
+}
+
+// ---------------------------------------------------------------------------
+// VKC — Algorithm 3.
+// ---------------------------------------------------------------------------
+
+pub struct Vkc {
+    clusters: Vec<Vec<usize>>,
+    n_devices: usize,
+    /// devices per cluster per iteration, `h`.
+    h_per_cluster: usize,
+    rng: Rng,
+}
+
+impl Vkc {
+    pub fn new(clusters: Vec<Vec<usize>>, n_devices: usize, h_total: usize, seed: u64) -> Self {
+        let k = clusters.len();
+        assert!(k > 0 && h_total % k == 0, "H={h_total} must be a multiple of K={k}");
+        Vkc { clusters, n_devices, h_per_cluster: h_total / k, rng: Rng::new(seed) }
+    }
+}
+
+impl Scheduler for Vkc {
+    fn schedule(&mut self) -> Vec<usize> {
+        let h = self.h_per_cluster;
+        let target = h * self.clusters.len();
+        let mut selected = Vec::with_capacity(target);
+        for ck in &self.clusters {
+            if ck.len() >= h {
+                selected.extend(self.rng.sample(ck, h)); // Alg.3 L7
+            } else {
+                selected.extend(ck.iter().cloned()); // Alg.3 L9
+            }
+        }
+        top_up(&mut selected, self.n_devices, target, &mut self.rng);
+        selected.sort_unstable();
+        selected
+    }
+
+    fn name(&self) -> &'static str {
+        "vkc"
+    }
+}
+
+// ---------------------------------------------------------------------------
+// IKC — Algorithm 4.
+// ---------------------------------------------------------------------------
+
+pub struct Ikc {
+    /// Current unscheduled pools `C_k` (devices move out when scheduled).
+    pools: Vec<Vec<usize>>,
+    /// History sets `G_k` of recently scheduled devices.
+    history: Vec<Vec<usize>>,
+    n_devices: usize,
+    h_per_cluster: usize,
+    rng: Rng,
+}
+
+impl Ikc {
+    pub fn new(clusters: Vec<Vec<usize>>, n_devices: usize, h_total: usize, seed: u64) -> Self {
+        let k = clusters.len();
+        assert!(k > 0 && h_total % k == 0, "H={h_total} must be a multiple of K={k}");
+        Ikc {
+            history: vec![Vec::new(); k],
+            pools: clusters,
+            n_devices,
+            h_per_cluster: h_total / k,
+            rng: Rng::new(seed),
+        }
+    }
+
+    /// Number of distinct devices tracked for cluster k (C_k ∪ G_k).
+    #[cfg(test)]
+    fn cluster_size(&self, k: usize) -> usize {
+        self.pools[k].len() + self.history[k].len()
+    }
+}
+
+impl Scheduler for Ikc {
+    fn schedule(&mut self) -> Vec<usize> {
+        let h = self.h_per_cluster;
+        let k_count = self.pools.len();
+        let target = h * k_count;
+        let mut selected = Vec::with_capacity(target);
+
+        for k in 0..k_count {
+            let ck_len = self.pools[k].len();
+            let gk_len = self.history[k].len();
+            let mut hk: Vec<usize> = Vec::with_capacity(h);
+            if ck_len + gk_len >= h {
+                if ck_len >= h {
+                    // Alg.4 L9: draw h fresh devices from C_k; record in G_k
+                    let mut pool = std::mem::take(&mut self.pools[k]);
+                    for _ in 0..h {
+                        let i = self.rng.below(pool.len());
+                        hk.push(pool.swap_remove(i));
+                    }
+                    self.pools[k] = pool;
+                    self.history[k].extend(hk.iter().cloned());
+                } else {
+                    // Alg.4 L11-14: exhaust C_k, borrow the rest from G_k,
+                    // then recycle G_k into C_k and restart history with H_k
+                    hk.extend(self.pools[k].drain(..));
+                    let mut g = std::mem::take(&mut self.history[k]);
+                    for _ in 0..(h - hk.len()) {
+                        let i = self.rng.below(g.len());
+                        hk.push(g.swap_remove(i));
+                    }
+                    self.pools[k] = g; // remaining history becomes the pool
+                    self.history[k] = hk.clone();
+                }
+            } else {
+                // Alg.4 L17: cluster smaller than h — take everything
+                hk.extend(self.pools[k].iter().cloned());
+                hk.extend(self.history[k].iter().cloned());
+            }
+            selected.extend(hk);
+        }
+
+        top_up(&mut selected, self.n_devices, target, &mut self.rng);
+        selected.sort_unstable();
+        selected.dedup();
+        selected
+    }
+
+    fn name(&self) -> &'static str {
+        "ikc"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn clusters_10x10() -> Vec<Vec<usize>> {
+        (0..10).map(|k| (0..10).map(|i| k * 10 + i).collect()).collect()
+    }
+
+    #[test]
+    fn fedavg_selects_h_distinct() {
+        let mut s = FedAvg::new(100, 30, 1);
+        for _ in 0..5 {
+            let sel = s.schedule();
+            assert_eq!(sel.len(), 30);
+            let mut d = sel.clone();
+            d.dedup();
+            assert_eq!(d.len(), 30);
+        }
+    }
+
+    #[test]
+    fn vkc_draws_h_per_cluster() {
+        let mut s = Vkc::new(clusters_10x10(), 100, 50, 2);
+        let sel = s.schedule();
+        assert_eq!(sel.len(), 50);
+        for k in 0..10 {
+            let in_k = sel.iter().filter(|&&n| n / 10 == k).count();
+            assert_eq!(in_k, 5, "cluster {k}");
+        }
+    }
+
+    #[test]
+    fn vkc_small_cluster_tops_up() {
+        // one cluster has 2 devices < h=5: total still H via top-up
+        let mut clusters = clusters_10x10();
+        clusters[0] = vec![0, 1];
+        let mut s = Vkc::new(clusters, 100, 50, 3);
+        let sel = s.schedule();
+        assert_eq!(sel.len(), 50);
+    }
+
+    #[test]
+    fn ikc_avoids_repeats_until_pool_exhausted() {
+        // h=5, clusters of 10: two consecutive iterations must be disjoint
+        let mut s = Ikc::new(clusters_10x10(), 100, 50, 4);
+        let a = s.schedule();
+        let b = s.schedule();
+        let inter: Vec<usize> =
+            a.iter().filter(|n| b.contains(n)).cloned().collect();
+        assert!(inter.is_empty(), "repeat before exhaustion: {inter:?}");
+        // iteration 3 must reuse (pool exhausted after 2 rounds)
+        let c = s.schedule();
+        assert_eq!(c.len(), 50);
+    }
+
+    #[test]
+    fn ikc_covers_all_devices_over_two_rounds() {
+        let mut s = Ikc::new(clusters_10x10(), 100, 50, 5);
+        let mut seen: Vec<usize> = s.schedule();
+        seen.extend(s.schedule());
+        seen.sort_unstable();
+        seen.dedup();
+        assert_eq!(seen.len(), 100, "every device scheduled within N/H rounds");
+    }
+
+    #[test]
+    fn ikc_conserves_devices() {
+        let mut s = Ikc::new(clusters_10x10(), 100, 50, 6);
+        for _ in 0..7 {
+            s.schedule();
+            for k in 0..10 {
+                assert_eq!(s.cluster_size(k), 10, "cluster {k} leaked devices");
+            }
+        }
+    }
+
+    #[test]
+    fn ikc_h_equals_n_schedules_everyone() {
+        let mut s = Ikc::new(clusters_10x10(), 100, 100, 7);
+        let sel = s.schedule();
+        assert_eq!(sel, (0..100).collect::<Vec<_>>());
+        let sel2 = s.schedule();
+        assert_eq!(sel2.len(), 100);
+    }
+
+    #[test]
+    #[should_panic]
+    fn vkc_rejects_nondivisible_h() {
+        Vkc::new(clusters_10x10(), 100, 37, 8);
+    }
+}

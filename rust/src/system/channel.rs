@@ -1,0 +1,108 @@
+//! Wireless channel model (§VI): log-distance path loss with log-normal
+//! shadow fading, and the FDMA uplink rate (eq. 6).
+//!
+//! Path loss `128.1 + 37.6·log10(d_km)` dB, shadowing σ = 8 dB.
+
+use crate::util::{db_to_linear, Rng};
+
+/// Channel model parameters.
+#[derive(Clone, Debug)]
+pub struct ChannelModel {
+    /// Path loss intercept in dB at 1 km.
+    pub pl_intercept_db: f64,
+    /// Path loss exponent term (dB per decade of km).
+    pub pl_slope_db: f64,
+    /// Shadow fading standard deviation in dB.
+    pub shadow_std_db: f64,
+    /// Noise power spectral density `N0` in W/Hz.
+    pub noise_w_per_hz: f64,
+}
+
+impl Default for ChannelModel {
+    fn default() -> Self {
+        ChannelModel {
+            pl_intercept_db: 128.1,
+            pl_slope_db: 37.6,
+            shadow_std_db: 8.0,
+            // -174 dBm/Hz -> watts/Hz
+            noise_w_per_hz: 10f64.powf(-174.0 / 10.0) * 1e-3,
+        }
+    }
+}
+
+impl ChannelModel {
+    /// Mean linear channel gain over a link of `dist_m` meters, with one
+    /// shadow-fading draw (the paper's ḡ is averaged over the training
+    /// phase, so fading is drawn once per link, not per transmission).
+    pub fn mean_gain(&self, dist_m: f64, rng: &mut Rng) -> f64 {
+        let d_km = (dist_m / 1000.0).max(1e-3); // clamp below 1 m
+        let pl_db = self.pl_intercept_db
+            + self.pl_slope_db * d_km.log10()
+            + rng.normal(0.0, self.shadow_std_db);
+        db_to_linear(-pl_db)
+    }
+
+    /// FDMA uplink rate (eq. 6) in bit/s:
+    /// `η = b·log2(1 + ḡ·p / (N0·b))`.
+    pub fn rate(&self, bandwidth_hz: f64, gain: f64, tx_power_w: f64) -> f64 {
+        if bandwidth_hz <= 0.0 {
+            return 0.0;
+        }
+        let snr = gain * tx_power_w / (self.noise_w_per_hz * bandwidth_hz);
+        bandwidth_hz * (1.0 + snr).log2()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn path_loss_monotonic_in_distance() {
+        let ch = ChannelModel { shadow_std_db: 0.0, ..Default::default() };
+        let mut rng = Rng::new(0);
+        let g100 = ch.mean_gain(100.0, &mut rng);
+        let g500 = ch.mean_gain(500.0, &mut rng);
+        let g1000 = ch.mean_gain(1000.0, &mut rng);
+        assert!(g100 > g500 && g500 > g1000);
+    }
+
+    #[test]
+    fn path_loss_at_1km_matches_formula() {
+        let ch = ChannelModel { shadow_std_db: 0.0, ..Default::default() };
+        let mut rng = Rng::new(0);
+        let g = ch.mean_gain(1000.0, &mut rng);
+        // 128.1 dB -> 10^-12.81
+        assert!((g.log10() + 12.81).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rate_increases_with_bandwidth_and_power() {
+        let ch = ChannelModel::default();
+        let g = 1e-12;
+        let r1 = ch.rate(1e5, g, 0.1);
+        let r2 = ch.rate(2e5, g, 0.1);
+        let r3 = ch.rate(1e5, g, 0.2);
+        assert!(r2 > r1, "more bandwidth, more rate");
+        assert!(r3 > r1, "more power, more rate");
+        // Sub-linear in bandwidth (SNR dilution): doubling b < doubling rate
+        assert!(r2 < 2.0 * r1);
+    }
+
+    #[test]
+    fn rate_zero_bandwidth_is_zero() {
+        let ch = ChannelModel::default();
+        assert_eq!(ch.rate(0.0, 1e-12, 0.1), 0.0);
+    }
+
+    #[test]
+    fn shadowing_has_spread() {
+        let ch = ChannelModel::default();
+        let mut rng = Rng::new(1);
+        let gains: Vec<f64> =
+            (0..200).map(|_| ch.mean_gain(500.0, &mut rng).log10()).collect();
+        let spread = crate::util::stats::std(&gains);
+        // 8 dB std ≈ 0.8 decades
+        assert!((spread - 0.8).abs() < 0.15, "{spread}");
+    }
+}

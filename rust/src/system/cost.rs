@@ -1,0 +1,210 @@
+//! Energy/delay accounting for HFL training (§III-B, eqs. 4–14).
+//!
+//! The allocator (problem 27) optimizes `(b_n, f_n)` per edge; this module
+//! evaluates the resulting costs and aggregates them to edge (eqs. 9–10),
+//! global-iteration (eq. 13–14) and whole-training totals.
+
+use super::topology::Topology;
+
+/// Per-device operating point chosen by the resource allocator.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DeviceAlloc {
+    /// Allocated uplink bandwidth `b_n` in Hz.
+    pub bandwidth_hz: f64,
+    /// Chosen CPU frequency `f_n` in Hz.
+    pub freq_hz: f64,
+}
+
+/// Cost of one device finishing one edge iteration (compute + upload).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct DeviceCost {
+    pub t_cmp: f64,
+    pub t_com: f64,
+    pub e_cmp: f64,
+    pub e_com: f64,
+}
+
+impl DeviceCost {
+    pub fn t_total(&self) -> f64 {
+        self.t_cmp + self.t_com
+    }
+
+    pub fn e_total(&self) -> f64 {
+        self.e_cmp + self.e_com
+    }
+}
+
+/// Cost of one edge server completing a global iteration (eqs. 9–12).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EdgeCost {
+    /// `T_m = T_m^edge + T_m^cloud` (eq. 13 inner term).
+    pub t: f64,
+    /// `E_m = E_m^edge + E_m^cloud` (eq. 14 inner term).
+    pub e: f64,
+}
+
+/// Cost of one full global iteration (eqs. 13–14).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct IterCost {
+    /// `T_i = max_m T_{m,i}`.
+    pub t: f64,
+    /// `E_i = Σ_m E_{m,i}`.
+    pub e: f64,
+}
+
+impl IterCost {
+    /// One-round objective `E_i + λ·T_i` (problem 17).
+    pub fn objective(&self, lambda: f64) -> f64 {
+        self.e + lambda * self.t
+    }
+}
+
+/// Evaluate eqs. 4–8 for device `n` uploading to edge `m` at `alloc`.
+pub fn device_cost(
+    topo: &Topology,
+    n: usize,
+    m: usize,
+    alloc: DeviceAlloc,
+) -> DeviceCost {
+    let p = &topo.params;
+    let d = &topo.devices[n];
+    let t_cmp = d.t_cmp(p.local_iters, alloc.freq_hz);
+    let e_cmp = d.e_cmp(p.local_iters, alloc.freq_hz, p.alpha);
+    let rate = topo
+        .channel
+        .rate(alloc.bandwidth_hz, d.gain_to_edge[m], d.tx_power_w);
+    let t_com = if rate > 0.0 { p.model_bits / rate } else { f64::INFINITY };
+    let e_com = d.tx_power_w * t_com;
+    DeviceCost { t_cmp, t_com, e_cmp, e_com }
+}
+
+/// Edge→cloud upload delay/energy (eqs. 11–12) — constants per topology.
+pub fn cloud_cost(topo: &Topology, m: usize) -> (f64, f64) {
+    let p = &topo.params;
+    let e = &topo.edges[m];
+    let rate = topo.channel.rate(p.cloud_bw_hz, e.gain_to_cloud, e.tx_power_w);
+    let t = p.model_bits / rate;
+    (t, e.tx_power_w * t)
+}
+
+/// Eqs. 9–12: Q edge iterations for the devices of edge `m`.
+/// `group` pairs each assigned device with its allocation.
+pub fn edge_cost(
+    topo: &Topology,
+    m: usize,
+    group: &[(usize, DeviceAlloc)],
+) -> EdgeCost {
+    let q = topo.params.edge_iters as f64;
+    let mut t_max = 0.0f64;
+    let mut e_sum = 0.0f64;
+    for &(n, alloc) in group {
+        let c = device_cost(topo, n, m, alloc);
+        t_max = t_max.max(c.t_total());
+        e_sum += c.e_total();
+    }
+    let (t_cloud, e_cloud) = cloud_cost(topo, m);
+    EdgeCost { t: q * t_max + t_cloud, e: q * e_sum + e_cloud }
+}
+
+/// Eqs. 13–14 for one global iteration given all edge groups.
+pub fn iter_cost(topo: &Topology, groups: &[Vec<(usize, DeviceAlloc)>]) -> IterCost {
+    let mut t_i = 0.0f64;
+    let mut e_i = 0.0f64;
+    for (m, group) in groups.iter().enumerate() {
+        if group.is_empty() {
+            continue; // an idle edge server transmits nothing
+        }
+        let c = edge_cost(topo, m, group);
+        t_i = t_i.max(c.t);
+        e_i += c.e;
+    }
+    IterCost { t: t_i, e: e_i }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::system::SystemParams;
+    use crate::util::Rng;
+
+    fn topo() -> Topology {
+        Topology::generate(&SystemParams::default(), &mut Rng::new(1))
+    }
+
+    fn alloc() -> DeviceAlloc {
+        DeviceAlloc { bandwidth_hz: 2e5, freq_hz: 1e9 }
+    }
+
+    #[test]
+    fn device_cost_components_positive_finite() {
+        let t = topo();
+        let c = device_cost(&t, 0, 0, alloc());
+        for v in [c.t_cmp, c.t_com, c.e_cmp, c.e_com] {
+            assert!(v.is_finite() && v > 0.0, "{c:?}");
+        }
+    }
+
+    #[test]
+    fn zero_bandwidth_means_infinite_delay() {
+        let t = topo();
+        let c = device_cost(&t, 0, 0, DeviceAlloc { bandwidth_hz: 0.0, freq_hz: 1e9 });
+        assert!(c.t_com.is_infinite());
+    }
+
+    #[test]
+    fn edge_time_is_straggler_bound() {
+        // eq. 9: edge delay is Q × the SLOWEST device, not the average.
+        let t = topo();
+        let group = vec![(0, alloc()), (1, alloc()), (2, alloc())];
+        let ec = edge_cost(&t, 0, &group);
+        let (t_cloud, _) = cloud_cost(&t, 0);
+        let q = t.params.edge_iters as f64;
+        let worst = group
+            .iter()
+            .map(|&(n, a)| device_cost(&t, n, 0, a).t_total())
+            .fold(0.0f64, f64::max);
+        assert!((ec.t - (q * worst + t_cloud)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn edge_energy_is_sum_not_max() {
+        let t = topo();
+        let group = vec![(0, alloc()), (1, alloc())];
+        let e2 = edge_cost(&t, 0, &group).e;
+        let e1 = edge_cost(&t, 0, &group[..1]).e;
+        assert!(e2 > e1);
+    }
+
+    #[test]
+    fn iter_time_is_max_over_edges_energy_is_sum() {
+        let t = topo();
+        let groups = vec![
+            vec![(0, alloc())],
+            vec![(1, alloc()), (2, alloc())],
+            vec![],
+            vec![],
+            vec![],
+        ];
+        let ic = iter_cost(&t, &groups);
+        let c0 = edge_cost(&t, 0, &groups[0]);
+        let c1 = edge_cost(&t, 1, &groups[1]);
+        assert!((ic.t - c0.t.max(c1.t)).abs() < 1e-9);
+        assert!((ic.e - (c0.e + c1.e)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_iteration_costs_nothing() {
+        let t = topo();
+        let groups = vec![vec![]; 5];
+        let ic = iter_cost(&t, &groups);
+        assert_eq!(ic.t, 0.0);
+        assert_eq!(ic.e, 0.0);
+    }
+
+    #[test]
+    fn objective_weighted_sum() {
+        let ic = IterCost { t: 2.0, e: 3.0 };
+        assert_eq!(ic.objective(1.0), 5.0);
+        assert_eq!(ic.objective(0.5), 4.0);
+    }
+}

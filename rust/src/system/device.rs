@@ -1,0 +1,94 @@
+//! IoT device and edge server descriptors (§III, Table I).
+
+/// Static characteristics of one IoT device.
+///
+/// These are the quantities the D³QN state vector (eq. 24) is built from:
+/// per-edge channel gains plus (u_n, D_n, p_n).
+#[derive(Clone, Debug)]
+pub struct Device {
+    /// Index in the fleet (0-based; the paper's n ∈ {1..N}).
+    pub id: usize,
+    /// CPU cycles to process one data sample, `u_n` (Table I: [1,10]×10⁴).
+    pub cycles_per_sample: f64,
+    /// Number of local data samples, `D_n`.
+    pub num_samples: usize,
+    /// Average transmit power `p_n` in watts (Table I: [0,23] dBm).
+    pub tx_power_w: f64,
+    /// Maximum CPU frequency `f_n^max` in Hz (Table I: 2 GHz).
+    pub max_freq_hz: f64,
+    /// Position in meters within the deployment square.
+    pub pos: (f64, f64),
+    /// Mean channel gain to each edge server, `ḡ_n^m` (linear, not dB).
+    pub gain_to_edge: Vec<f64>,
+}
+
+/// Static characteristics of one edge server.
+#[derive(Clone, Debug)]
+pub struct EdgeServer {
+    pub id: usize,
+    /// Total uplink bandwidth `B_m` in Hz (Table I: [0.5,3] MHz).
+    pub bandwidth_hz: f64,
+    /// Transmit power `p^m` toward the cloud in watts (Table I: 23 dBm).
+    pub tx_power_w: f64,
+    /// Position in meters.
+    pub pos: (f64, f64),
+    /// Mean channel gain to the cloud, `ḡ_m^cloud` (linear).
+    pub gain_to_cloud: f64,
+}
+
+impl Device {
+    /// Computation time for one edge iteration (eq. 4): `L·u_n·D_n / f_n`.
+    pub fn t_cmp(&self, local_iters: usize, freq_hz: f64) -> f64 {
+        local_iters as f64 * self.cycles_per_sample * self.num_samples as f64 / freq_hz
+    }
+
+    /// Computation energy for one edge iteration (eq. 5):
+    /// `(α/2)·L·f_n²·u_n·D_n`.
+    pub fn e_cmp(&self, local_iters: usize, freq_hz: f64, alpha: f64) -> f64 {
+        0.5 * alpha
+            * local_iters as f64
+            * freq_hz
+            * freq_hz
+            * self.cycles_per_sample
+            * self.num_samples as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dev() -> Device {
+        Device {
+            id: 0,
+            cycles_per_sample: 5e4,
+            num_samples: 500,
+            tx_power_w: 0.1,
+            max_freq_hz: 2e9,
+            pos: (0.0, 0.0),
+            gain_to_edge: vec![1e-12],
+        }
+    }
+
+    #[test]
+    fn t_cmp_matches_eq4() {
+        let d = dev();
+        // L·u·D/f = 5 · 5e4 · 500 / 1e9 = 0.125 s
+        assert!((d.t_cmp(5, 1e9) - 0.125).abs() < 1e-12);
+    }
+
+    #[test]
+    fn e_cmp_matches_eq5() {
+        let d = dev();
+        // α/2·L·f²·u·D = 1e-28 · 5 · 1e18 · 2.5e7 = 12.5 mJ
+        let e = d.e_cmp(5, 1e9, 2e-28);
+        assert!((e - 12.5e-3).abs() < 1e-9, "{e}");
+    }
+
+    #[test]
+    fn faster_cpu_is_quicker_but_costlier() {
+        let d = dev();
+        assert!(d.t_cmp(5, 2e9) < d.t_cmp(5, 1e9));
+        assert!(d.e_cmp(5, 2e9, 2e-28) > d.e_cmp(5, 1e9, 2e-28));
+    }
+}

@@ -1,0 +1,77 @@
+//! The wireless HFL system substrate (§III + §VI of the paper): devices,
+//! edge servers, topology generation, channel model and the energy/delay
+//! cost model (eqs. 4–14).
+
+pub mod channel;
+pub mod cost;
+pub mod device;
+pub mod topology;
+
+pub use channel::ChannelModel;
+pub use cost::{DeviceAlloc, DeviceCost, EdgeCost, IterCost};
+pub use device::{Device, EdgeServer};
+pub use topology::Topology;
+
+/// Table I parameters (plus the constants the paper leaves implicit).
+#[derive(Clone, Debug)]
+pub struct SystemParams {
+    pub n_devices: usize,
+    pub n_edges: usize,
+    /// Deployment square side, meters (paper: 1 km).
+    pub area_side_m: f64,
+    /// `u_n` range, cycles/sample.
+    pub cycles_per_sample: (f64, f64),
+    /// `B_m` range, Hz.
+    pub edge_bw_hz: (f64, f64),
+    /// Edge→cloud bandwidth `B`, Hz (10 MHz, equally allocated).
+    pub cloud_bw_hz: f64,
+    /// Device transmit power range, dBm.
+    pub dev_tx_dbm: (f64, f64),
+    /// Edge transmit power, dBm.
+    pub edge_tx_dbm: f64,
+    /// `f^max`, Hz.
+    pub max_freq_hz: f64,
+    /// `D_n` range, samples.
+    pub samples: (usize, usize),
+    /// Model size `z` in BITS (4·8·params; from artifacts/manifest.json).
+    pub model_bits: f64,
+    /// Effective capacitance coefficient α (eq. 5). The paper leaves the
+    /// value unspecified; 2e-28 is the standard choice in this literature.
+    pub alpha: f64,
+    /// Maximum local iterations L (Table I: 5).
+    pub local_iters: usize,
+    /// Maximum edge iterations Q (Table I: 5).
+    pub edge_iters: usize,
+    /// Delay/energy trade-off weight λ (problem 15).
+    pub lambda: f64,
+}
+
+impl Default for SystemParams {
+    fn default() -> Self {
+        SystemParams {
+            n_devices: 100,
+            n_edges: 5,
+            area_side_m: 1000.0,
+            cycles_per_sample: (1e4, 1e5),
+            edge_bw_hz: (0.5e6, 3e6),
+            cloud_bw_hz: 10e6,
+            dev_tx_dbm: (0.0, 23.0),
+            edge_tx_dbm: 23.0,
+            max_freq_hz: 2e9,
+            samples: (300, 700),
+            // 448 KB FashionMNIST default; overwritten from the manifest.
+            model_bits: 448.0 * 1024.0 * 8.0,
+            alpha: 2e-28,
+            local_iters: 5,
+            edge_iters: 5,
+            lambda: 1.0,
+        }
+    }
+}
+
+impl SystemParams {
+    /// Cloud bandwidth share per edge (paper: equal allocation).
+    pub fn cloud_bw_per_edge(&self) -> f64 {
+        self.cloud_bw_hz / self.n_edges as f64
+    }
+}

@@ -1,0 +1,131 @@
+//! Fleet generation: N devices + M edge servers uniformly placed in a
+//! square deployment area with the cloud at the center (§VI).
+
+use super::channel::ChannelModel;
+use super::device::{Device, EdgeServer};
+use super::SystemParams;
+use crate::util::{dbm_to_watt, Rng};
+
+/// A fully materialized HFL deployment: the substrate every scheduler,
+/// assigner and allocator operates on.
+#[derive(Clone, Debug)]
+pub struct Topology {
+    pub devices: Vec<Device>,
+    pub edges: Vec<EdgeServer>,
+    pub params: SystemParams,
+    pub channel: ChannelModel,
+}
+
+fn dist(a: (f64, f64), b: (f64, f64)) -> f64 {
+    ((a.0 - b.0).powi(2) + (a.1 - b.1).powi(2)).sqrt()
+}
+
+impl Topology {
+    /// Generate a deployment per §VI + Table I ranges.
+    pub fn generate(params: &SystemParams, rng: &mut Rng) -> Topology {
+        let channel = ChannelModel::default();
+        let side = params.area_side_m;
+        let cloud_pos = (side / 2.0, side / 2.0);
+
+        let edges: Vec<EdgeServer> = (0..params.n_edges)
+            .map(|id| {
+                let pos = (rng.range(0.0, side), rng.range(0.0, side));
+                EdgeServer {
+                    id,
+                    bandwidth_hz: rng.range(params.edge_bw_hz.0, params.edge_bw_hz.1),
+                    tx_power_w: dbm_to_watt(params.edge_tx_dbm),
+                    pos,
+                    gain_to_cloud: channel.mean_gain(dist(pos, cloud_pos), rng),
+                }
+            })
+            .collect();
+
+        let devices: Vec<Device> = (0..params.n_devices)
+            .map(|id| {
+                let pos = (rng.range(0.0, side), rng.range(0.0, side));
+                let gain_to_edge = edges
+                    .iter()
+                    .map(|e| channel.mean_gain(dist(pos, e.pos), rng))
+                    .collect();
+                Device {
+                    id,
+                    cycles_per_sample: rng
+                        .range(params.cycles_per_sample.0, params.cycles_per_sample.1),
+                    num_samples: rng
+                        .range(params.samples.0 as f64, params.samples.1 as f64)
+                        as usize,
+                    tx_power_w: dbm_to_watt(
+                        rng.range(params.dev_tx_dbm.0, params.dev_tx_dbm.1),
+                    ),
+                    max_freq_hz: params.max_freq_hz,
+                    pos,
+                    gain_to_edge,
+                }
+            })
+            .collect();
+
+        Topology { devices, edges, params: params.clone(), channel }
+    }
+
+    /// Index of the geographically nearest edge server to device `n`.
+    pub fn nearest_edge(&self, n: usize) -> usize {
+        let d = &self.devices[n];
+        (0..self.edges.len())
+            .min_by(|&a, &b| {
+                dist(d.pos, self.edges[a].pos)
+                    .partial_cmp(&dist(d.pos, self.edges[b].pos))
+                    .unwrap()
+            })
+            .unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generate_respects_table1_ranges() {
+        let params = SystemParams::default();
+        let mut rng = Rng::new(42);
+        let topo = Topology::generate(&params, &mut rng);
+        assert_eq!(topo.devices.len(), 100);
+        assert_eq!(topo.edges.len(), 5);
+        for d in &topo.devices {
+            assert!(d.cycles_per_sample >= 1e4 && d.cycles_per_sample <= 1e5);
+            assert!(d.num_samples >= 300 && d.num_samples <= 700);
+            assert!(d.tx_power_w <= dbm_to_watt(23.0) + 1e-12);
+            assert!(d.tx_power_w >= dbm_to_watt(0.0) - 1e-12);
+            assert_eq!(d.gain_to_edge.len(), 5);
+            assert!(d.gain_to_edge.iter().all(|&g| g > 0.0));
+            assert!(d.pos.0 >= 0.0 && d.pos.0 <= 1000.0);
+        }
+        for e in &topo.edges {
+            assert!(e.bandwidth_hz >= 0.5e6 && e.bandwidth_hz <= 3e6);
+            assert!(e.gain_to_cloud > 0.0);
+        }
+    }
+
+    #[test]
+    fn nearest_edge_is_truly_nearest() {
+        let params = SystemParams::default();
+        let mut rng = Rng::new(7);
+        let topo = Topology::generate(&params, &mut rng);
+        for n in 0..topo.devices.len() {
+            let m = topo.nearest_edge(n);
+            let dm = dist(topo.devices[n].pos, topo.edges[m].pos);
+            for e in &topo.edges {
+                assert!(dm <= dist(topo.devices[n].pos, e.pos) + 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let params = SystemParams::default();
+        let t1 = Topology::generate(&params, &mut Rng::new(5));
+        let t2 = Topology::generate(&params, &mut Rng::new(5));
+        assert_eq!(t1.devices[3].pos, t2.devices[3].pos);
+        assert_eq!(t1.edges[1].bandwidth_hz, t2.edges[1].bandwidth_hz);
+    }
+}

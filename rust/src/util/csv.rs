@@ -1,0 +1,90 @@
+//! Tiny CSV writer for experiment outputs (`results/*.csv`).
+//!
+//! Fields containing commas/quotes/newlines are quoted per RFC 4180 so the
+//! files load cleanly in pandas/gnuplot.
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+pub struct CsvWriter {
+    w: BufWriter<File>,
+    cols: usize,
+}
+
+fn quote(field: &str) -> String {
+    if field.contains(',') || field.contains('"') || field.contains('\n') {
+        format!("\"{}\"", field.replace('"', "\"\""))
+    } else {
+        field.to_string()
+    }
+}
+
+impl CsvWriter {
+    /// Create the file (and parent dirs) and write the header row.
+    pub fn create<P: AsRef<Path>>(path: P, header: &[&str]) -> anyhow::Result<Self> {
+        if let Some(dir) = path.as_ref().parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut w = BufWriter::new(File::create(path)?);
+        writeln!(
+            w,
+            "{}",
+            header.iter().map(|h| quote(h)).collect::<Vec<_>>().join(",")
+        )?;
+        Ok(CsvWriter { w, cols: header.len() })
+    }
+
+    pub fn row(&mut self, fields: &[String]) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            fields.len() == self.cols,
+            "csv row has {} fields, header has {}",
+            fields.len(),
+            self.cols
+        );
+        writeln!(
+            self.w,
+            "{}",
+            fields.iter().map(|f| quote(f)).collect::<Vec<_>>().join(",")
+        )?;
+        Ok(())
+    }
+
+    /// Convenience: all-numeric row.
+    pub fn row_f64(&mut self, fields: &[f64]) -> anyhow::Result<()> {
+        self.row(&fields.iter().map(|x| format!("{x}")).collect::<Vec<_>>())
+    }
+
+    pub fn flush(&mut self) -> anyhow::Result<()> {
+        self.w.flush()?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_and_quotes() {
+        let dir = std::env::temp_dir().join("hfl_csv_test");
+        let path = dir.join("t.csv");
+        {
+            let mut w = CsvWriter::create(&path, &["a", "b"]).unwrap();
+            w.row(&["1".into(), "x,\"y\"".into()]).unwrap();
+            w.flush().unwrap();
+        }
+        let s = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(s, "a,b\n1,\"x,\"\"y\"\"\"\n");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_wrong_arity() {
+        let dir = std::env::temp_dir().join("hfl_csv_test2");
+        let path = dir.join("t.csv");
+        let mut w = CsvWriter::create(&path, &["a", "b"]).unwrap();
+        assert!(w.row(&["only-one".into()]).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

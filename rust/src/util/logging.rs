@@ -1,0 +1,41 @@
+//! Minimal `log` façade backend: stderr with level + elapsed-time prefix.
+
+use std::sync::OnceLock;
+use std::time::Instant;
+
+struct StderrLogger {
+    start: Instant,
+    level: log::LevelFilter,
+}
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, meta: &log::Metadata) -> bool {
+        meta.level() <= self.level
+    }
+
+    fn log(&self, record: &log::Record) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        let t = self.start.elapsed().as_secs_f64();
+        eprintln!("[{:9.3}s {:5}] {}", t, record.level(), record.args());
+    }
+
+    fn flush(&self) {}
+}
+
+static LOGGER: OnceLock<StderrLogger> = OnceLock::new();
+
+/// Install the logger. `verbosity`: 0 = warn, 1 = info, 2 = debug, 3+ = trace.
+/// Idempotent (later calls are ignored, as `log` allows one global logger).
+pub fn init(verbosity: u8) {
+    let level = match verbosity {
+        0 => log::LevelFilter::Warn,
+        1 => log::LevelFilter::Info,
+        2 => log::LevelFilter::Debug,
+        _ => log::LevelFilter::Trace,
+    };
+    let logger = LOGGER.get_or_init(|| StderrLogger { start: Instant::now(), level });
+    let _ = log::set_logger(logger);
+    log::set_max_level(level);
+}

@@ -1,0 +1,36 @@
+//! Infrastructure utilities: PRNG, statistics, JSON, CSV, logging.
+//!
+//! Everything here is dependency-free (this image has no network access for
+//! cargo, so serde/rand/criterion are unavailable — see DESIGN.md §6).
+
+pub mod csv;
+pub mod json;
+pub mod logging;
+pub mod rng;
+pub mod stats;
+
+pub use json::Json;
+pub use rng::Rng;
+
+/// Convert dBm to watts.
+pub fn dbm_to_watt(dbm: f64) -> f64 {
+    10f64.powf(dbm / 10.0) * 1e-3
+}
+
+/// Convert dB to a linear power ratio.
+pub fn db_to_linear(db: f64) -> f64 {
+    10f64.powf(db / 10.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dbm_conversions() {
+        assert!((dbm_to_watt(0.0) - 1e-3).abs() < 1e-12);
+        assert!((dbm_to_watt(30.0) - 1.0).abs() < 1e-9);
+        assert!((dbm_to_watt(23.0) - 0.1995).abs() < 1e-3);
+        assert!((db_to_linear(10.0) - 10.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,326 @@
+//! Property-based invariant tests (hand-rolled: proptest is unavailable on
+//! this offline image). Each test sweeps many seeded random instances and
+//! asserts structural invariants — the Rust analogue of the hypothesis
+//! sweeps on the Python side.
+
+use hfl::allocation::bruteforce::solve_bruteforce;
+use hfl::allocation::{solve_edge, SolverOpts};
+use hfl::assignment::geo::assign_geographic;
+use hfl::assignment::hfel::Hfel;
+use hfl::assignment::random::{RandomAssign, RoundRobin};
+use hfl::assignment::{evaluate, Assigner};
+use hfl::data::{partition, SynthSpec, Templates, NUM_CLASSES};
+use hfl::drl::episode::build_features;
+use hfl::model::weighted_average;
+use hfl::scheduling::{ari::ari, kmeans, FedAvg, Ikc, Scheduler, Vkc};
+use hfl::system::{SystemParams, Topology};
+use hfl::util::{Json, Rng};
+
+fn topo(seed: u64) -> Topology {
+    Topology::generate(&SystemParams::default(), &mut Rng::new(seed))
+}
+
+// ---------------------------------------------------------------------------
+// Allocation (problem 27)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_allocator_always_feasible_and_consistent() {
+    // 25 random instances: constraints hold and the reported objective is
+    // reproducible from the returned allocation through the cost model.
+    for seed in 0..25u64 {
+        let t = topo(seed);
+        let mut rng = Rng::new(seed ^ 0xA110);
+        let m = rng.below(t.edges.len());
+        let n = 1 + rng.below(12);
+        let devices = rng.sample_indices(t.devices.len(), n);
+        let s = solve_edge(&t, m, &devices, t.params.lambda, &SolverOpts::fast());
+        let b_sum: f64 = s.allocs.iter().map(|a| a.bandwidth_hz).sum();
+        assert!(
+            b_sum <= t.edges[m].bandwidth_hz * 1.0001,
+            "seed {seed}: bandwidth overflow {b_sum}"
+        );
+        for (a, &d) in s.allocs.iter().zip(&devices) {
+            assert!(a.bandwidth_hz > 0.0 && a.bandwidth_hz.is_finite());
+            assert!(a.freq_hz > 0.0);
+            assert!(a.freq_hz <= t.devices[d].max_freq_hz * 1.0001, "seed {seed}");
+        }
+        assert!(s.objective.is_finite() && s.objective > 0.0);
+    }
+}
+
+#[test]
+fn prop_allocator_close_to_bruteforce_on_small_instances() {
+    for seed in 20..30u64 {
+        let t = topo(seed);
+        let devices = [seed as usize % 50, (seed as usize * 7 + 3) % 50];
+        let (bf, _) = solve_bruteforce(&t, 0, &devices, 1.0, 50);
+        let s = solve_edge(&t, 0, &devices, 1.0, &SolverOpts::default());
+        let gap = (s.objective - bf) / bf;
+        assert!(gap < 0.03, "seed {seed}: gap {gap:.4} ({} vs {bf})", s.objective);
+    }
+}
+
+#[test]
+fn prop_adding_a_device_never_cheapens_the_edge() {
+    // energy is additive and time is a max: a superset of devices cannot
+    // have a smaller per-edge objective
+    for seed in 0..10u64 {
+        let t = topo(seed);
+        let mut rng = Rng::new(seed ^ 0xADD);
+        let base = rng.sample_indices(t.devices.len(), 4);
+        let mut extended = base.clone();
+        extended.push(
+            (0..t.devices.len())
+                .find(|d| !base.contains(d))
+                .unwrap(),
+        );
+        let s1 = solve_edge(&t, 1, &base, 1.0, &SolverOpts::default());
+        let s2 = solve_edge(&t, 1, &extended, 1.0, &SolverOpts::default());
+        assert!(
+            s2.objective >= s1.objective * 0.999,
+            "seed {seed}: {} -> {}",
+            s1.objective,
+            s2.objective
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Assignment
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_all_assigners_produce_exact_partitions() {
+    for seed in 0..10u64 {
+        let t = topo(seed);
+        let mut rng = Rng::new(seed ^ 0xA551);
+        let h = 5 + rng.below(45);
+        let scheduled = rng.sample_indices(t.devices.len(), h);
+        let assignments = vec![
+            assign_geographic(&t, &scheduled),
+            RandomAssign::new(seed).assign(&t, &scheduled),
+            RoundRobin.assign(&t, &scheduled),
+            Hfel::new(20, seed).run(&t, &scheduled),
+        ];
+        for a in assignments {
+            assert!(a.is_partition(), "seed {seed}");
+            assert_eq!(a.num_devices(), h, "seed {seed}");
+            let mut all: Vec<usize> = a.groups.iter().flatten().cloned().collect();
+            all.sort_unstable();
+            let mut want = scheduled.clone();
+            want.sort_unstable();
+            assert_eq!(all, want, "seed {seed}: devices lost or invented");
+        }
+    }
+}
+
+#[test]
+fn prop_hfel_no_worse_than_geographic() {
+    for seed in 0..5u64 {
+        let t = topo(seed + 100);
+        let scheduled: Vec<usize> = (0..20).collect();
+        let geo = assign_geographic(&t, &scheduled);
+        let hf = Hfel::new(60, seed).run(&t, &scheduled);
+        let (cg, _) = evaluate(&t, &geo, &SolverOpts::fast());
+        let (ch, _) = evaluate(&t, &hf, &SolverOpts::fast());
+        // HFEL optimizes the separable surrogate; allow 5% slack on the
+        // true objective
+        assert!(
+            ch.objective(1.0) <= cg.objective(1.0) * 1.05,
+            "seed {seed}: hfel {} vs geo {}",
+            ch.objective(1.0),
+            cg.objective(1.0)
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scheduling
+// ---------------------------------------------------------------------------
+
+fn random_clusters(rng: &mut Rng, n: usize, k: usize) -> Vec<Vec<usize>> {
+    let mut clusters = vec![Vec::new(); k];
+    for d in 0..n {
+        clusters[rng.below(k)].push(d);
+    }
+    clusters
+}
+
+#[test]
+fn prop_schedulers_yield_distinct_valid_subsets() {
+    for seed in 0..10u64 {
+        let mut rng = Rng::new(seed);
+        let clusters = random_clusters(&mut rng, 100, 10);
+        let mut scheds: Vec<Box<dyn Scheduler>> = vec![
+            Box::new(FedAvg::new(100, 50, seed)),
+            Box::new(Vkc::new(clusters.clone(), 100, 50, seed)),
+            Box::new(Ikc::new(clusters, 100, 50, seed)),
+        ];
+        for s in scheds.iter_mut() {
+            for _ in 0..6 {
+                let sel = s.schedule();
+                assert_eq!(sel.len(), 50, "{} seed {seed}", s.name());
+                let mut d = sel.clone();
+                d.dedup();
+                assert_eq!(d.len(), 50, "{} seed {seed}: duplicates", s.name());
+                assert!(sel.iter().all(|&n| n < 100), "{}", s.name());
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_ikc_cycles_through_every_device() {
+    // within ceil(N/H) iterations every device must appear at least once
+    // when clusters are balanced
+    for seed in 0..5u64 {
+        let clusters: Vec<Vec<usize>> =
+            (0..10).map(|k| (0..10).map(|i| k * 10 + i).collect()).collect();
+        let mut s = Ikc::new(clusters, 100, 20, seed);
+        let mut seen = vec![false; 100];
+        for _ in 0..5 {
+            for n in s.schedule() {
+                seen[n] = true;
+            }
+        }
+        let missing: Vec<usize> =
+            (0..100).filter(|&n| !seen[n]).collect();
+        assert!(missing.is_empty(), "seed {seed}: never scheduled {missing:?}");
+    }
+}
+
+#[test]
+fn prop_ari_bounds_and_permutation_invariance() {
+    for seed in 0..20u64 {
+        let mut rng = Rng::new(seed);
+        let n = 20 + rng.below(50);
+        let truth: Vec<usize> = (0..n).map(|_| rng.below(6)).collect();
+        let pred: Vec<usize> = (0..n).map(|_| rng.below(6)).collect();
+        let v = ari(&pred, &truth);
+        assert!((-1.0..=1.0).contains(&v), "seed {seed}: ari {v}");
+        // relabeling prediction clusters must not change ARI
+        let perm = [3usize, 5, 0, 1, 4, 2];
+        let relabeled: Vec<usize> = pred.iter().map(|&c| perm[c]).collect();
+        let v2 = ari(&relabeled, &truth);
+        assert!((v - v2).abs() < 1e-12, "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_kmeans_labels_are_nearest_centroid() {
+    for seed in 0..10u64 {
+        let mut rng = Rng::new(seed);
+        let pts: Vec<Vec<f32>> = (0..30)
+            .map(|_| (0..5).map(|_| rng.f32() * 4.0).collect())
+            .collect();
+        let km = kmeans(&pts, 4, 50, &mut rng);
+        for (i, p) in pts.iter().enumerate() {
+            let d = |c: &Vec<f32>| -> f64 {
+                p.iter().zip(c).map(|(&a, &b)| ((a - b) as f64).powi(2)).sum()
+            };
+            let own = d(&km.centroids[km.labels[i]]);
+            for c in &km.centroids {
+                assert!(own <= d(c) + 1e-6, "seed {seed}: non-nearest label");
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Data + model + features
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_partition_histograms_match_frac() {
+    for seed in 0..8u64 {
+        let parts = partition(20, &vec![400; 20], 0.7, seed);
+        for p in &parts {
+            let h = p.class_histogram();
+            let total: usize = h.iter().sum();
+            assert_eq!(total, 400);
+            let frac = h[p.majority] as f64 / 400.0;
+            assert!((frac - 0.7).abs() < 0.05, "seed {seed}: {frac}");
+        }
+    }
+}
+
+#[test]
+fn prop_weighted_average_bounds() {
+    // the average must lie within [min, max] componentwise
+    for seed in 0..10u64 {
+        let mut rng = Rng::new(seed);
+        let vecs: Vec<Vec<f32>> = (0..4)
+            .map(|_| (0..16).map(|_| rng.f32() * 2.0 - 1.0).collect())
+            .collect();
+        let refs: Vec<&[f32]> = vecs.iter().map(|v| v.as_slice()).collect();
+        let w: Vec<f64> = (0..4).map(|_| 0.1 + rng.f64()).collect();
+        let avg = weighted_average(&refs, &w);
+        for j in 0..16 {
+            let lo = vecs.iter().map(|v| v[j]).fold(f32::INFINITY, f32::min);
+            let hi = vecs.iter().map(|v| v[j]).fold(f32::NEG_INFINITY, f32::max);
+            assert!(avg[j] >= lo - 1e-5 && avg[j] <= hi + 1e-5, "seed {seed}");
+        }
+    }
+}
+
+#[test]
+fn prop_episode_features_always_unit_interval() {
+    for seed in 0..10u64 {
+        let t = topo(seed);
+        let mut rng = Rng::new(seed ^ 0xFEA7);
+        let h = 2 + rng.below(60);
+        let scheduled = rng.sample_indices(t.devices.len(), h);
+        let ef = build_features(&t, &scheduled);
+        assert_eq!(ef.feats.len(), h * (t.edges.len() + 3));
+        assert!(ef.feats.iter().all(|&v| (0.0..=1.0).contains(&v)), "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_sample_generation_stable_across_calls() {
+    let spec = SynthSpec::cifar();
+    let t = Templates::generate(&spec, 9);
+    let mut a = vec![0.0f32; spec.pixels()];
+    let mut b = vec![0.0f32; spec.pixels()];
+    for class in 0..NUM_CLASSES {
+        for key in [1u64, 99, 12345] {
+            t.gen_sample(class, key, &mut a);
+            t.gen_sample(class, key, &mut b);
+            assert_eq!(a, b, "class {class} key {key}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// JSON round-trip fuzz
+// ---------------------------------------------------------------------------
+
+fn random_json(rng: &mut Rng, depth: usize) -> Json {
+    match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+        0 => Json::Null,
+        1 => Json::Bool(rng.f64() < 0.5),
+        2 => Json::Num((rng.f64() * 2000.0 - 1000.0).round() / 8.0),
+        3 => Json::Str(format!("s{}-\"quoted\"\n", rng.below(1000))),
+        4 => Json::Arr((0..rng.below(5)).map(|_| random_json(rng, depth - 1)).collect()),
+        _ => Json::obj(
+            (0..rng.below(5))
+                .map(|i| (format!("k{i}"), random_json(rng, depth - 1)))
+                .collect::<Vec<_>>()
+                .iter()
+                .map(|(k, v)| (k.as_str(), v.clone()))
+                .collect(),
+        ),
+    }
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    for seed in 0..50u64 {
+        let mut rng = Rng::new(seed);
+        let v = random_json(&mut rng, 3);
+        let s = v.to_string();
+        let back = Json::parse(&s).unwrap_or_else(|e| panic!("seed {seed}: {e}\n{s}"));
+        assert_eq!(v, back, "seed {seed}");
+    }
+}
