@@ -2,57 +2,51 @@
 //!
 //! Inference exploits the position-indexed state (python/compile/dqn.py):
 //! the Q-values of every time slot of an episode come from ONE
-//! `dqn_q_all_h<H>` PJRT call, so assigning an entire global iteration is a
-//! single artifact execution + H argmaxes — the source of the ~10³×
-//! assignment-latency win over HFEL measured in Fig. 6(d).
+//! [`Backend::dqn_q_all`] call, so assigning an entire global iteration is
+//! a single backend dispatch + H argmaxes — the source of the ~10³×
+//! assignment-latency win over HFEL measured in Fig. 6(d). The call runs
+//! on the PJRT `dqn_q_all_h<H>` artifact or on the native BiLSTM port
+//! interchangeably.
 
 use super::{Assigner, Assignment};
 use crate::drl::checkpoint::load_params;
 use crate::drl::episode::build_features;
 use crate::model::{init_params, Init};
-use crate::runtime::{Arg, Engine};
+use crate::runtime::Backend;
 use crate::system::Topology;
 use crate::util::stats::argmax_f32;
 use crate::util::Rng;
 
 pub struct DrlAssigner<'e> {
-    engine: &'e Engine,
+    backend: &'e dyn Backend,
     pub theta: Vec<f32>,
 }
 
 impl<'e> DrlAssigner<'e> {
-    pub fn new(engine: &'e Engine, theta: Vec<f32>) -> Self {
-        DrlAssigner { engine, theta }
+    pub fn new(backend: &'e dyn Backend, theta: Vec<f32>) -> Self {
+        DrlAssigner { backend, theta }
     }
 
     /// Load a trained checkpoint (produced by `hfl drl-train`).
-    pub fn from_checkpoint(engine: &'e Engine, path: &std::path::Path) -> anyhow::Result<Self> {
+    pub fn from_checkpoint(
+        backend: &'e dyn Backend,
+        path: &std::path::Path,
+    ) -> anyhow::Result<Self> {
         let theta = load_params(path)?;
-        let expect = engine.manifest.model("dqn")?.params;
+        let expect = backend.manifest().model("dqn")?.params;
         anyhow::ensure!(
             theta.len() == expect,
             "checkpoint has {} params, manifest expects {expect}",
             theta.len()
         );
-        Ok(DrlAssigner { engine, theta })
+        Ok(DrlAssigner { backend, theta })
     }
 
     /// Untrained agent (useful as a baseline / for tests).
-    pub fn fresh(engine: &'e Engine, seed: u64) -> anyhow::Result<Self> {
-        let info = engine.manifest.model("dqn")?.clone();
+    pub fn fresh(backend: &'e dyn Backend, seed: u64) -> anyhow::Result<Self> {
+        let info = backend.manifest().model("dqn")?.clone();
         let theta = init_params(&info, Init::GlorotUniform, &mut Rng::new(seed));
-        Ok(DrlAssigner { engine, theta })
-    }
-
-    /// Smallest lowered horizon that fits `h` devices.
-    fn pick_horizon(&self, h: usize) -> anyhow::Result<usize> {
-        let mut hs = self.engine.manifest.consts.horizons.clone();
-        hs.sort_unstable();
-        hs.into_iter().find(|&x| x >= h).ok_or_else(|| {
-            anyhow::anyhow!(
-                "no dqn_q_all artifact for H≥{h}; re-run aot.py with --horizons"
-            )
-        })
+        Ok(DrlAssigner { backend, theta })
     }
 
     /// Assign and also return the raw Q-matrix (used by experiments).
@@ -62,19 +56,12 @@ impl<'e> DrlAssigner<'e> {
         scheduled: &[usize],
     ) -> anyhow::Result<(Assignment, Vec<f32>)> {
         let m = topo.edges.len();
-        let c = &self.engine.manifest.consts;
-        anyhow::ensure!(m == c.n_edges, "topology has {m} edges, artifact {}", c.n_edges);
+        let c = &self.backend.manifest().consts;
+        anyhow::ensure!(m == c.n_edges, "topology has {m} edges, D³QN expects {}", c.n_edges);
         let h = scheduled.len();
-        let ha = self.pick_horizon(h)?;
+        let ha = self.backend.pick_horizon(h)?;
         let ef = build_features(topo, scheduled).pad_to(ha);
-        let q = self.engine.run(
-            &format!("dqn_q_all_h{ha}"),
-            &[
-                Arg::F32(&self.theta, &[self.theta.len() as i64]),
-                Arg::F32(&ef.feats, &[ha as i64, c.feat as i64]),
-            ],
-        )?[0]
-            .clone();
+        let q = self.backend.dqn_q_all(&self.theta, &ef.feats, ha)?;
         let pairs: Vec<(usize, usize)> = scheduled
             .iter()
             .enumerate()

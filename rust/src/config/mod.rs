@@ -12,6 +12,8 @@ use toml::{parse, Table, Value};
 #[derive(Clone, Debug)]
 pub struct Config {
     pub system: SystemParams,
+    /// Model-execution backend: `native` (default) or `pjrt`.
+    pub backend: String,
     /// Datasets to run (`fmnist`, `cifar`).
     pub datasets: Vec<String>,
     /// H values swept by the experiments.
@@ -39,6 +41,7 @@ impl Default for Config {
     fn default() -> Self {
         Config {
             system: SystemParams::default(),
+            backend: "native".into(),
             datasets: vec!["fmnist".into(), "cifar".into()],
             h_values: vec![10, 30, 50, 100],
             k_clusters: 10,
@@ -68,6 +71,20 @@ fn get_f64(t: &Table, key: &str, dst: &mut f64) {
     if let Some(v) = t.get(key).and_then(Value::as_f64) {
         *dst = v;
     }
+}
+
+/// Apply a parsed `[system]` section onto [`SystemParams`] — shared by the
+/// experiment [`Config`] and scenario specs (`scenario::ScenarioSpec`).
+pub fn apply_system(t: &Table, sys: &mut SystemParams) {
+    get_usize(t, "system.n_devices", &mut sys.n_devices);
+    get_usize(t, "system.n_edges", &mut sys.n_edges);
+    get_f64(t, "system.lambda", &mut sys.lambda);
+    get_f64(t, "system.alpha", &mut sys.alpha);
+    get_f64(t, "system.area_side_m", &mut sys.area_side_m);
+    get_f64(t, "system.cloud_bw_hz", &mut sys.cloud_bw_hz);
+    get_f64(t, "system.model_bits", &mut sys.model_bits);
+    get_usize(t, "system.local_iters", &mut sys.local_iters);
+    get_usize(t, "system.edge_iters", &mut sys.edge_iters);
 }
 
 impl Config {
@@ -100,18 +117,13 @@ impl Config {
         if let Some(v) = t.get("artifact_dir").and_then(Value::as_str) {
             self.artifact_dir = v.to_string();
         }
+        if let Some(v) = t.get("backend").and_then(Value::as_str) {
+            self.backend = v.to_string();
+        }
         if let Some(v) = t.get("seed").and_then(Value::as_f64) {
             self.seed = v as u64;
         }
-        // [system] section
-        get_usize(t, "system.n_devices", &mut self.system.n_devices);
-        get_usize(t, "system.n_edges", &mut self.system.n_edges);
-        get_f64(t, "system.lambda", &mut self.system.lambda);
-        get_f64(t, "system.alpha", &mut self.system.alpha);
-        get_f64(t, "system.area_side_m", &mut self.system.area_side_m);
-        get_f64(t, "system.cloud_bw_hz", &mut self.system.cloud_bw_hz);
-        get_usize(t, "system.local_iters", &mut self.system.local_iters);
-        get_usize(t, "system.edge_iters", &mut self.system.edge_iters);
+        apply_system(t, &mut self.system);
     }
 
     pub fn load(path: &Path) -> anyhow::Result<Config> {

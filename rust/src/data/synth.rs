@@ -71,11 +71,29 @@ impl SynthSpec {
         }
     }
 
+    /// A 1×10×10 smoke-test dataset for the ~700-parameter `tiny` model:
+    /// same generator as fmnist at mini-model geometry, low noise so a few
+    /// SGD steps already separate classes. Used by fast end-to-end tests
+    /// and `hfl train --dataset tiny` on the native backend.
+    pub fn tiny() -> Self {
+        SynthSpec {
+            name: "tiny".into(),
+            channels: 1,
+            img: 10,
+            noise_std: 0.5,
+            jitter: 0,
+            mix: 1.0,
+            grid: 5,
+            class_sep: 1.0,
+        }
+    }
+
     pub fn by_name(name: &str) -> anyhow::Result<Self> {
         match name {
             "fmnist" => Ok(Self::fmnist()),
             "cifar" => Ok(Self::cifar()),
-            _ => anyhow::bail!("unknown dataset {name:?} (fmnist|cifar)"),
+            "tiny" => Ok(Self::tiny()),
+            _ => anyhow::bail!("unknown dataset {name:?} (fmnist|cifar|tiny)"),
         }
     }
 

@@ -1,12 +1,19 @@
 //! Deep reinforcement learning for device assignment (§V): episode feature
 //! construction (eqs. 24–25), the replay buffer Ω, the Algorithm 5 training
 //! loop and flat-parameter checkpoints.
+//!
+//! Inference is backend-portable (see `assignment::drl`); the Algorithm 5
+//! *training* loop still drives the `dqn_train` AOT artifact directly and
+//! therefore requires the `pjrt` feature (porting it to the native backend
+//! is a ROADMAP open item).
 
 pub mod checkpoint;
 pub mod episode;
 pub mod replay;
+#[cfg(feature = "pjrt")]
 pub mod trainer;
 
 pub use episode::{build_features, EpisodeFeatures};
 pub use replay::{Batch, ReplayBuffer, Transition};
+#[cfg(feature = "pjrt")]
 pub use trainer::{DqnTrainConfig, DqnTrainer, TrainResult};

@@ -9,7 +9,7 @@ use crate::assignment::random::{RandomAssign, RoundRobin};
 use crate::assignment::Assigner;
 use crate::config::Config;
 use crate::data::{DeviceData, Templates};
-use crate::runtime::Engine;
+use crate::runtime::Backend;
 use crate::scheduling::{cluster_devices, AuxModel, FedAvg, Ikc, Scheduler, Vkc};
 use crate::system::Topology;
 use crate::util::Rng;
@@ -63,6 +63,17 @@ impl AssignKind {
             _ => anyhow::bail!("unknown assigner {s:?} (drl|hfel|hfel-100|geo|rr|random)"),
         })
     }
+
+    /// Stable label used in CSVs and summary tables.
+    pub fn tag(&self) -> String {
+        match self {
+            AssignKind::Drl(_) => "d3qn".into(),
+            AssignKind::Hfel(k) => format!("hfel-{k}"),
+            AssignKind::Geo => "geographic".into(),
+            AssignKind::RoundRobin => "round-robin".into(),
+            AssignKind::Random => "random".into(),
+        }
+    }
 }
 
 /// Build the scheduler. VKC/IKC require clusters from Algorithm 2.
@@ -90,29 +101,33 @@ pub fn make_scheduler(
     })
 }
 
-/// Build the assigner. `Drl(None)` tries `<out_dir>/dqn_theta.bin` then
+/// Single source of the assigner-construction policy, shared by the CLI
+/// (`make_assigner`) and the scenario sweep runner. For `Drl`, the
+/// explicit path wins over `default_ckpt`; a missing/unloadable checkpoint
 /// falls back to a fresh (untrained) agent with a warning.
-pub fn make_assigner<'e>(
+pub fn assigner_with_fallback<'e>(
     kind: &AssignKind,
-    engine: &'e Engine,
-    cfg: &Config,
+    backend: Option<&'e dyn Backend>,
+    default_ckpt: Option<PathBuf>,
     seed: u64,
 ) -> anyhow::Result<Box<dyn Assigner + 'e>> {
     Ok(match kind {
         AssignKind::Drl(path) => {
-            let p = path
-                .clone()
-                .unwrap_or_else(|| default_checkpoint(cfg));
-            match DrlAssigner::from_checkpoint(engine, &p) {
-                Ok(a) => Box::new(a),
-                Err(e) => {
-                    log::warn!(
-                        "no DRL checkpoint at {} ({e}); using untrained agent — \
-                         run `hfl drl-train` first for paper-faithful results",
-                        p.display()
-                    );
-                    Box::new(DrlAssigner::fresh(engine, seed)?)
-                }
+            let b = backend
+                .ok_or_else(|| anyhow::anyhow!("the d3qn assigner needs a model backend"))?;
+            match path.clone().or(default_ckpt) {
+                Some(p) => match DrlAssigner::from_checkpoint(b, &p) {
+                    Ok(a) => Box::new(a),
+                    Err(e) => {
+                        log::warn!(
+                            "no DRL checkpoint at {} ({e}); using untrained agent — \
+                             run `hfl drl-train` first for paper-faithful results",
+                            p.display()
+                        );
+                        Box::new(DrlAssigner::fresh(b, seed)?)
+                    }
+                },
+                None => Box::new(DrlAssigner::fresh(b, seed)?),
             }
         }
         AssignKind::Hfel(k) => Box::new(Hfel::new(*k, seed)),
@@ -122,13 +137,24 @@ pub fn make_assigner<'e>(
     })
 }
 
+/// Build the assigner for the CLI config. `Drl(None)` tries
+/// `<out_dir>/dqn_theta.bin` then falls back to a fresh agent.
+pub fn make_assigner<'e>(
+    kind: &AssignKind,
+    backend: &'e dyn Backend,
+    cfg: &Config,
+    seed: u64,
+) -> anyhow::Result<Box<dyn Assigner + 'e>> {
+    assigner_with_fallback(kind, Some(backend), Some(default_checkpoint(cfg)), seed)
+}
+
 pub fn default_checkpoint(cfg: &Config) -> PathBuf {
     Path::new(&cfg.out_dir).join("dqn_theta.bin")
 }
 
 /// Run Algorithm 2 once for a deployment (used by VKC/IKC experiment arms).
 pub fn clusters_for(
-    engine: &Engine,
+    backend: &dyn Backend,
     topo: &Topology,
     templates: &Templates,
     device_data: &[DeviceData],
@@ -138,7 +164,7 @@ pub fn clusters_for(
 ) -> anyhow::Result<Vec<Vec<usize>>> {
     let mut rng = Rng::new(seed ^ 0xC1u64);
     let res = cluster_devices(
-        engine, topo, templates, device_data, aux, k, aux.cluster_lr(), &mut rng,
+        backend, topo, templates, device_data, aux, k, aux.cluster_lr(), &mut rng,
     )?;
     log::info!("algorithm 2: ARI {:.3}, {:.1}s, {:.1}J", res.ari, res.time_s, res.energy_j);
     Ok(res.clusters)

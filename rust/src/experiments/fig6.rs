@@ -2,22 +2,17 @@
 //! (a) time delay T_i, (b) energy E_i, (c) objective E_i + λT_i,
 //! plus the assigning latency each strategy needs (the D³QN speed claim).
 //!
-//! Per §VI-B: H=50 scheduled devices, λ=1, 100 random iterations; baselines
+//! Per §VI-B: H=50 scheduled devices, λ=1, random deployments; baselines
 //! HFEL-100, HFEL-300 (100 transfers + 100/300 exchanges) and geographic.
+//! Since the backend refactor this is a cost-mode scenario sweep — each
+//! random deployment is one seed cell of the `fig6` preset spec.
 
-use std::time::Instant;
-
-use crate::allocation::SolverOpts;
-use crate::assignment::drl::DrlAssigner;
-use crate::assignment::geo::Geographic;
-use crate::assignment::hfel::Hfel;
-use crate::assignment::{evaluate, Assigner};
 use crate::bench::Table;
 use crate::config::Config;
-use crate::runtime::Engine;
-use crate::system::Topology;
+use crate::runtime::Backend;
+use crate::scenario::{presets, run_sweep_serial};
 use crate::util::csv::CsvWriter;
-use crate::util::{stats, Rng};
+use crate::util::stats;
 
 use super::common::{csv_path, default_checkpoint};
 
@@ -30,62 +25,29 @@ pub struct StrategyStats {
     pub latency_mean_s: f64,
 }
 
-pub fn run(engine: &Engine, cfg: &Config) -> anyhow::Result<Vec<StrategyStats>> {
-    let h = engine.manifest.consts.train_horizon;
-    let info = engine.manifest.model("fmnist")?;
-    let mut sys = cfg.system.clone();
-    sys.n_devices = h;
-    sys.model_bits = (info.bytes * 8) as f64;
-    let lambda = sys.lambda;
-    let opts = SolverOpts::default();
+pub fn run(backend: &dyn Backend, cfg: &Config) -> anyhow::Result<Vec<StrategyStats>> {
+    let h = backend.manifest().consts.train_horizon;
+    let info = backend.manifest().model("fmnist")?;
+    let mut spec = presets::fig6(cfg, h);
+    spec.system.model_bits = (info.bytes * 8) as f64;
+    spec.drl_checkpoint = Some(default_checkpoint(cfg));
+    let lambda = spec.system.lambda;
 
-    // D³QN: trained checkpoint if available (fig5 produces it)
-    let ckpt = default_checkpoint(cfg);
-    let drl = match DrlAssigner::from_checkpoint(engine, &ckpt) {
-        Ok(a) => a,
-        Err(e) => {
-            log::warn!("fig6: {e}; using untrained θ (run `hfl exp fig5` first)");
-            DrlAssigner::fresh(engine, cfg.seed)?
-        }
-    };
-
-    let names = ["d3qn", "hfel-100", "hfel-300", "geographic"];
-    let mut t_vals: Vec<Vec<f64>> = vec![vec![]; names.len()];
-    let mut e_vals: Vec<Vec<f64>> = vec![vec![]; names.len()];
-    let mut o_vals: Vec<Vec<f64>> = vec![vec![]; names.len()];
-    let mut lat_vals: Vec<Vec<f64>> = vec![vec![]; names.len()];
+    let result = run_sweep_serial(&spec, Some(backend))?;
 
     let mut csv = CsvWriter::create(
         csv_path(cfg, "fig6_assignment.csv"),
         &["iter", "strategy", "t_i", "e_i", "objective", "assign_latency_s"],
     )?;
-
-    let mut rng = Rng::new(cfg.seed ^ 0xF160);
-    let scheduled: Vec<usize> = (0..h).collect();
-    for iter in 0..cfg.assign_eval_iters {
-        let topo = Topology::generate(&sys, &mut rng.fork(iter as u64));
-        for (si, &name) in names.iter().enumerate() {
-            let t0 = Instant::now();
-            let assignment = match name {
-                "d3qn" => drl.assign_with_q(&topo, &scheduled)?.0,
-                "hfel-100" => Hfel::new(100, cfg.seed ^ iter as u64).run(&topo, &scheduled),
-                "hfel-300" => Hfel::new(300, cfg.seed ^ iter as u64).run(&topo, &scheduled),
-                "geographic" => Geographic.assign(&topo, &scheduled),
-                _ => unreachable!(),
-            };
-            let latency = t0.elapsed().as_secs_f64();
-            let (cost, _) = evaluate(&topo, &assignment, &opts);
-            t_vals[si].push(cost.t);
-            e_vals[si].push(cost.e);
-            o_vals[si].push(cost.objective(lambda));
-            lat_vals[si].push(latency);
+    for c in &result.cells {
+        for r in &c.rows {
             csv.row(&[
-                iter.to_string(),
-                name.into(),
-                format!("{:.3}", cost.t),
-                format!("{:.3}", cost.e),
-                format!("{:.3}", cost.objective(lambda)),
-                format!("{:.6}", latency),
+                c.cell.seed_i.to_string(),
+                c.cell.assigner.tag(),
+                format!("{:.3}", r.t_i),
+                format!("{:.3}", r.e_i),
+                format!("{:.3}", r.objective),
+                format!("{:.6}", c.assign_latency_mean_s),
             ])?;
         }
     }
@@ -99,13 +61,18 @@ pub fn run(engine: &Engine, cfg: &Config) -> anyhow::Result<Vec<StrategyStats>> 
         "assign latency",
     ]);
     let mut out = Vec::new();
-    for (si, &name) in names.iter().enumerate() {
+    for ((_, strategy, _), cells) in result.grouped() {
+        let t: Vec<f64> = cells.iter().flat_map(|c| c.rows.iter().map(|r| r.t_i)).collect();
+        let e: Vec<f64> = cells.iter().flat_map(|c| c.rows.iter().map(|r| r.e_i)).collect();
+        let o: Vec<f64> =
+            cells.iter().flat_map(|c| c.rows.iter().map(|r| r.objective)).collect();
+        let lat: Vec<f64> = cells.iter().map(|c| c.assign_latency_mean_s).collect();
         let s = StrategyStats {
-            name: name.into(),
-            t_mean: stats::mean(&t_vals[si]),
-            e_mean: stats::mean(&e_vals[si]),
-            obj_mean: stats::mean(&o_vals[si]),
-            latency_mean_s: stats::mean(&lat_vals[si]),
+            name: strategy,
+            t_mean: stats::mean(&t),
+            e_mean: stats::mean(&e),
+            obj_mean: stats::mean(&o),
+            latency_mean_s: stats::mean(&lat),
         };
         table.row(&[
             s.name.clone(),
@@ -116,8 +83,10 @@ pub fn run(engine: &Engine, cfg: &Config) -> anyhow::Result<Vec<StrategyStats>> 
         ]);
         out.push(s);
     }
-    println!("\nFig. 6 — assignment strategies ({} iterations, H={h}, λ={lambda}):",
-             cfg.assign_eval_iters);
+    println!(
+        "\nFig. 6 — assignment strategies ({} deployments, H={h}, λ={lambda}):",
+        cfg.assign_eval_iters
+    );
     table.print();
     Ok(out)
 }

@@ -3,19 +3,18 @@
 //! (a/b) accuracy curves to target, (c) objective (15), (d) total time T,
 //! (e) total energy E, (f) message bytes per iteration, (g) total message
 //! bytes. H = N reproduces "traditional HFL" (everything scheduled).
+//!
+//! Since the backend refactor this is the `fig7` preset spec (train mode,
+//! IKC × D³QN × H grid) run through the scenario engine.
 
-use crate::allocation::SolverOpts;
-use crate::assignment::drl::DrlAssigner;
-use crate::assignment::Assigner;
 use crate::bench::Table;
 use crate::config::Config;
-use crate::fl::{HflConfig, HflTrainer};
-use crate::runtime::Engine;
-use crate::scheduling::AuxModel;
+use crate::runtime::Backend;
+use crate::scenario::{presets, run_sweep_serial};
 use crate::util::csv::CsvWriter;
 use crate::util::stats;
 
-use super::common::{clusters_for, csv_path, default_checkpoint, make_scheduler, SchedKind};
+use super::common::csv_path;
 
 #[derive(Clone, Debug)]
 pub struct FrameworkPoint {
@@ -31,8 +30,12 @@ pub struct FrameworkPoint {
     pub msg_total: f64,
 }
 
-pub fn run(engine: &Engine, cfg: &Config, dataset: &str) -> anyhow::Result<Vec<FrameworkPoint>> {
-    let mut points = Vec::new();
+pub fn run(backend: &dyn Backend, cfg: &Config, dataset: &str) -> anyhow::Result<Vec<FrameworkPoint>> {
+    let spec = presets::fig7(cfg, dataset);
+    let target = spec.target_acc;
+    let lambda = spec.system.lambda;
+    let result = run_sweep_serial(&spec, Some(backend))?;
+
     let mut curve_csv = CsvWriter::create(
         csv_path(cfg, &format!("fig7_curves_{dataset}.csv")),
         &["dataset", "h", "seed", "iter", "accuracy", "t_i", "e_i", "msg_bytes"],
@@ -45,8 +48,8 @@ pub fn run(engine: &Engine, cfg: &Config, dataset: &str) -> anyhow::Result<Vec<F
         ],
     )?;
 
-    let target = cfg.target_acc(dataset);
-    for &h in &cfg.h_values {
+    let mut points = Vec::new();
+    for ((_, _, h), cells) in result.grouped() {
         let mut iters_v = vec![];
         let mut reached_all = true;
         let mut acc_v = vec![];
@@ -55,79 +58,29 @@ pub fn run(engine: &Engine, cfg: &Config, dataset: &str) -> anyhow::Result<Vec<F
         let mut obj_v = vec![];
         let mut mpi_v = vec![];
         let mut mt_v = vec![];
-        for seed_i in 0..cfg.seeds {
-            let seed = cfg.seed + seed_i as u64 * 1000 + 31;
-            let hcfg = HflConfig {
-                dataset: dataset.into(),
-                h,
-                lr: cfg.lr,
-                target_acc: target,
-                max_iters: cfg.max_iters,
-                test_size: cfg.test_size,
-                frac_major: cfg.frac_major,
-                seed,
-            };
-            let mut trainer = HflTrainer::with_default_topology(engine, hcfg)?;
-            // the proposed framework: IKC scheduling (mini-model clusters)
-            let clusters = clusters_for(
-                engine,
-                &trainer.topo,
-                &trainer.templates,
-                &trainer.device_data,
-                AuxModel::Mini,
-                cfg.k_clusters,
-                    seed,
-            )?;
-            let mut sched = make_scheduler(
-                SchedKind::Ikc,
-                Some(clusters),
-                trainer.topo.devices.len(),
-                h,
-                seed ^ 0x5c4ed,
-            )?;
-            // + D³QN assignment (trained checkpoint when available)
-            let ckpt = default_checkpoint(cfg);
-            let mut assigner: Box<dyn Assigner> =
-                match DrlAssigner::from_checkpoint(engine, &ckpt) {
-                    Ok(a) => Box::new(a),
-                    Err(e) => {
-                        log::warn!("fig7: {e}; untrained θ (run `hfl exp fig5`)");
-                        Box::new(DrlAssigner::fresh(engine, seed)?)
-                    }
-                };
-            let res = trainer.run(
-                &mut *sched,
-                &mut *assigner,
-                &SolverOpts::default(),
-                |r| {
-                    log::info!(
-                        "fig7 {dataset} H={h} seed{seed_i} it{} acc {:.3}",
-                        r.iter,
-                        r.accuracy
-                    );
-                },
-            )?;
-            for r in &res.records {
+        for c in &cells {
+            for r in &c.rows {
                 curve_csv.row(&[
                     dataset.into(),
                     h.to_string(),
-                    seed_i.to_string(),
+                    c.cell.seed_i.to_string(),
                     r.iter.to_string(),
-                    format!("{:.4}", r.accuracy),
+                    format!("{:.4}", r.accuracy.unwrap_or(0.0)),
                     format!("{:.3}", r.t_i),
                     format!("{:.3}", r.e_i),
-                    format!("{:.0}", r.msg_bytes),
+                    format!("{:.0}", r.msg_bytes.unwrap_or(0.0)),
                 ])?;
             }
-            let iters = res.converged_at.unwrap_or(res.records.len());
-            reached_all &= res.converged_at.is_some();
+            let iters = c.converged_at.unwrap_or(c.rows.len());
+            reached_all &= c.converged_at.is_some();
             iters_v.push(iters as f64);
-            acc_v.push(res.final_accuracy());
-            t_v.push(res.total_t());
-            e_v.push(res.total_e());
-            obj_v.push(res.objective(cfg.system.lambda));
-            mpi_v.push(res.total_msg_bytes() / res.records.len() as f64);
-            mt_v.push(res.total_msg_bytes());
+            acc_v.push(c.final_accuracy().unwrap_or(0.0));
+            t_v.push(c.total_t());
+            e_v.push(c.total_e());
+            obj_v.push(c.objective(lambda));
+            let msg_total: f64 = c.rows.iter().filter_map(|r| r.msg_bytes).sum();
+            mpi_v.push(msg_total / c.rows.len().max(1) as f64);
+            mt_v.push(msg_total);
         }
         let p = FrameworkPoint {
             dataset: dataset.into(),

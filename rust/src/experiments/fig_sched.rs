@@ -1,17 +1,18 @@
 //! Figures 3 & 4 — testing accuracy of HFL vs global iteration for
 //! H ∈ h_values under IKC / VKC / FedAvg scheduling (mean ± std over
 //! seeds). Fig. 3 = fmnist, Fig. 4 = cifar.
+//!
+//! Since the backend refactor this driver is a thin view over the scenario
+//! engine: it runs the `fig_sched` preset spec and aggregates the per-cell
+//! accuracy curves.
 
-use crate::allocation::SolverOpts;
-use crate::assignment::random::RoundRobin;
 use crate::config::Config;
-use crate::fl::{HflConfig, HflTrainer};
 use crate::metrics::aggregate_curves;
-use crate::runtime::Engine;
-use crate::scheduling::AuxModel;
+use crate::runtime::Backend;
+use crate::scenario::{presets, run_sweep_serial};
 use crate::util::csv::CsvWriter;
 
-use super::common::{clusters_for, csv_path, make_scheduler, SchedKind};
+use super::common::csv_path;
 
 /// One (dataset, H, scheduler) arm's aggregated accuracy curve.
 pub struct SchedCurve {
@@ -22,105 +23,46 @@ pub struct SchedCurve {
     pub std: Vec<f64>,
 }
 
-pub fn run(engine: &Engine, cfg: &Config, dataset: &str) -> anyhow::Result<Vec<SchedCurve>> {
+pub fn run(backend: &dyn Backend, cfg: &Config, dataset: &str) -> anyhow::Result<Vec<SchedCurve>> {
     let fig = if dataset == "cifar" { "fig4" } else { "fig3" };
+    let spec = presets::fig_sched(cfg, dataset);
+    let result = run_sweep_serial(&spec, Some(backend))?;
+
     let mut csv = CsvWriter::create(
         csv_path(cfg, &format!("{fig}_{dataset}_scheduling.csv")),
         &["dataset", "scheduler", "h", "iter", "acc_mean", "acc_std"],
     )?;
-    let kinds = [SchedKind::Ikc, SchedKind::Vkc, SchedKind::FedAvg];
     let mut curves = Vec::new();
-
-    for &h in &cfg.h_values {
-        for kind in kinds {
-            let mut runs = Vec::new();
-            for seed_i in 0..cfg.seeds {
-                let seed = cfg.seed + seed_i as u64 * 1000 + 17;
-                let hcfg = HflConfig {
-                    dataset: dataset.into(),
-                    h,
-                    lr: cfg.lr,
-                    target_acc: 1.0, // full curves: no early stop
-                    max_iters: cfg.max_iters,
-                    test_size: cfg.test_size,
-                    frac_major: cfg.frac_major,
-                    seed,
-                };
-                let mut trainer = HflTrainer::with_default_topology(engine, hcfg)?;
-                // Algorithm 2 once per run (the paper clusters at i=0):
-                // IKC uses the mini model ξ, VKC the full model w⁰
-                let clusters = match kind {
-                    SchedKind::FedAvg => None,
-                    SchedKind::Ikc => Some(clusters_for(
-                        engine,
-                        &trainer.topo,
-                        &trainer.templates,
-                        &trainer.device_data,
-                        AuxModel::Mini,
-                        cfg.k_clusters,
-                        seed,
-                    )?),
-                    SchedKind::Vkc => Some(clusters_for(
-                        engine,
-                        &trainer.topo,
-                        &trainer.templates,
-                        &trainer.device_data,
-                        AuxModel::Full,
-                        cfg.k_clusters,
-                        seed,
-                    )?),
-                };
-                let mut sched = make_scheduler(
-                    kind,
-                    clusters,
-                    trainer.topo.devices.len(),
-                    h,
-                    seed ^ 0x5c4ed,
-                )?;
-                // assignment is not under test here: fixed round-robin keeps
-                // the training side identical across scheduler arms
-                let mut assigner = RoundRobin;
-                let res = trainer.run(
-                    &mut *sched,
-                    &mut assigner,
-                    &SolverOpts::default(),
-                    |r| {
-                        log::info!(
-                            "{fig} {dataset} {} H={h} seed{seed_i} it{} acc {:.3}",
-                            kind.name(),
-                            r.iter,
-                            r.accuracy
-                        );
-                    },
-                )?;
-                runs.push(res.accuracy_curve());
-            }
-            let (mean, std) = aggregate_curves(&runs);
-            for (i, (m, s)) in mean.iter().zip(&std).enumerate() {
-                csv.row(&[
-                    dataset.into(),
-                    kind.name().into(),
-                    h.to_string(),
-                    i.to_string(),
-                    format!("{m:.4}"),
-                    format!("{s:.4}"),
-                ])?;
-            }
-            println!(
-                "{fig} [{dataset}] H={h:<3} {:7}: final acc {:.3} ± {:.3} ({} iters)",
-                kind.name(),
-                mean.last().cloned().unwrap_or(0.0),
-                std.last().cloned().unwrap_or(0.0),
-                mean.len()
-            );
-            curves.push(SchedCurve {
-                dataset: dataset.into(),
-                scheduler: kind.name(),
-                h,
-                mean,
-                std,
-            });
+    for ((kind, _assigner, h), cells) in result.grouped() {
+        let runs: Vec<Vec<f64>> = cells
+            .iter()
+            .map(|c| c.rows.iter().filter_map(|r| r.accuracy).collect())
+            .collect();
+        let (mean, std) = aggregate_curves(&runs);
+        for (i, (m, s)) in mean.iter().zip(&std).enumerate() {
+            csv.row(&[
+                dataset.into(),
+                kind.name().into(),
+                h.to_string(),
+                i.to_string(),
+                format!("{m:.4}"),
+                format!("{s:.4}"),
+            ])?;
         }
+        println!(
+            "{fig} [{dataset}] H={h:<3} {:7}: final acc {:.3} ± {:.3} ({} iters)",
+            kind.name(),
+            mean.last().cloned().unwrap_or(0.0),
+            std.last().cloned().unwrap_or(0.0),
+            mean.len()
+        );
+        curves.push(SchedCurve {
+            dataset: dataset.into(),
+            scheduler: kind.name(),
+            h,
+            mean,
+            std,
+        });
     }
     csv.flush()?;
     Ok(curves)

@@ -1,8 +1,14 @@
 //! Experiment drivers — one per table/figure in the paper's §VI (see
 //! DESIGN.md §3 for the index). Each writes CSVs under `results/` and
 //! prints a paper-style summary table.
+//!
+//! The figure drivers are thin views over the scenario engine
+//! (`crate::scenario`): they run a preset [`crate::scenario::ScenarioSpec`]
+//! and aggregate/format the results. `fig5` (D³QN training) drives the
+//! `dqn_train` artifact directly and needs the `pjrt` feature.
 
 pub mod common;
+#[cfg(feature = "pjrt")]
 pub mod fig5;
 pub mod fig6;
 pub mod fig7;

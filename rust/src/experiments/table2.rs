@@ -5,20 +5,20 @@
 use crate::bench::Table;
 use crate::config::Config;
 use crate::data::{partition, SynthSpec, Templates};
-use crate::runtime::Engine;
+use crate::runtime::Backend;
 use crate::scheduling::{cluster_devices, AuxModel, ClusteringResult};
 use crate::system::Topology;
 use crate::util::csv::CsvWriter;
 use crate::util::Rng;
 
-use super::common::{csv_path};
+use super::common::csv_path;
 
 pub struct Table2Row {
     pub method: String,
     pub result: ClusteringResult,
 }
 
-pub fn run(engine: &Engine, cfg: &Config) -> anyhow::Result<Vec<Table2Row>> {
+pub fn run(backend: &dyn Backend, cfg: &Config) -> anyhow::Result<Vec<Table2Row>> {
     let mut rows = Vec::new();
     let cases: Vec<(&str, &str, AuxModel)> = vec![
         ("IKC", "fmnist", AuxModel::Mini),
@@ -28,7 +28,7 @@ pub fn run(engine: &Engine, cfg: &Config) -> anyhow::Result<Vec<Table2Row>> {
 
     for (label, ds, aux) in cases {
         let spec = SynthSpec::by_name(ds)?;
-        let info = engine.manifest.model(ds)?;
+        let info = backend.manifest().model(ds)?;
         let mut params = cfg.system.clone();
         params.model_bits = (info.bytes * 8) as f64;
         let mut rng = Rng::new(cfg.seed ^ 0x7ab1e2);
@@ -37,7 +37,7 @@ pub fn run(engine: &Engine, cfg: &Config) -> anyhow::Result<Vec<Table2Row>> {
         let samples: Vec<usize> = topo.devices.iter().map(|d| d.num_samples).collect();
         let dd = partition(topo.devices.len(), &samples, cfg.frac_major, cfg.seed);
         let result = cluster_devices(
-            engine,
+            backend,
             &topo,
             &templates,
             &dd,

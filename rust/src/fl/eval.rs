@@ -1,47 +1,42 @@
-//! Global-model evaluation: run the AOT `eval_<ds>` artifact over the test
+//! Global-model evaluation: run the backend's forward pass over the test
 //! set in fixed-size batches and compute top-1 accuracy.
 
 use crate::data::TestSet;
-use crate::runtime::{Arg, Engine};
+use crate::runtime::Backend;
 use crate::util::stats::argmax_f32;
 
-/// Accuracy of `params` on `test` using the `eval_<ds>` artifact.
+/// Accuracy of `params` on `test` via `backend.forward(ds, ...)`.
 pub fn evaluate_accuracy(
-    engine: &Engine,
+    backend: &dyn Backend,
     ds: &str,
     params: &[f32],
     test: &TestSet,
     channels: usize,
     img: usize,
 ) -> anyhow::Result<f64> {
-    let eb = engine.manifest.consts.eb;
-    let nc = engine.manifest.consts.num_classes;
+    let eb = backend.manifest().consts.eb;
+    let nc = backend.manifest().consts.num_classes;
+    let flexible = backend.supports_partial_batch();
     let pixels = test.pixels;
     anyhow::ensure!(pixels == channels * img * img, "test set pixel mismatch");
-    let artifact = format!("eval_{ds}");
     let mut correct = 0usize;
-    let mut xbuf = vec![0.0f32; eb * pixels];
+    let mut xbuf = vec![0.0f32; if flexible { 0 } else { eb * pixels }];
 
     let mut i = 0;
     while i < test.n {
         let take = (test.n - i).min(eb);
-        xbuf[..take * pixels]
-            .copy_from_slice(&test.x[i * pixels..(i + take) * pixels]);
-        // pad the tail with the last sample (outputs ignored)
-        for pad in take..eb {
-            xbuf.copy_within((take - 1) * pixels..take * pixels, pad * pixels);
-        }
-        let out = engine.run(
-            &artifact,
-            &[
-                Arg::F32(params, &[params.len() as i64]),
-                Arg::F32(
-                    &xbuf,
-                    &[eb as i64, channels as i64, img as i64, img as i64],
-                ),
-            ],
-        )?;
-        let logits = &out[0];
+        let logits = if flexible {
+            // flexible backends take the tail as-is, no padded compute
+            backend.forward(ds, params, &test.x[i * pixels..(i + take) * pixels], take)?
+        } else {
+            xbuf[..take * pixels]
+                .copy_from_slice(&test.x[i * pixels..(i + take) * pixels]);
+            // pad the tail with the last sample (outputs ignored)
+            for pad in take..eb {
+                xbuf.copy_within((take - 1) * pixels..take * pixels, pad * pixels);
+            }
+            backend.forward(ds, params, &xbuf, eb)?
+        };
         for b in 0..take {
             let pred = argmax_f32(&logits[b * nc..(b + 1) * nc]).unwrap();
             if pred == test.labels[i + b] {

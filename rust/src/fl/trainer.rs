@@ -5,20 +5,22 @@
 //! steps on every scheduled device + edge aggregation (eq. 2)] → cloud
 //! aggregation (eq. 3) → evaluate.
 //!
-//! Local training is executed through the vmapped `local_round_<ds>`
-//! artifact: up to DB devices train per PJRT call, each slot carrying its
-//! own parameter vector (devices on different edge servers batch together;
-//! the slot's input params are its edge model). This is the L3 hot path.
+//! Local training dispatches through [`Backend::local_round`]: up to DB
+//! devices train per call, each slot carrying its own parameter vector
+//! (devices on different edge servers batch together; the slot's input
+//! params are its edge model). On PJRT this is the vmapped
+//! `local_round_<ds>` artifact; on the native backend it is the pure-Rust
+//! kernel port — the trainer is identical either way.
 
 use std::time::Instant;
 
-use crate::assignment::{evaluate as eval_assignment, Assigner, Assignment};
 use crate::allocation::SolverOpts;
+use crate::assignment::{evaluate as eval_assignment, Assigner, Assignment};
 use crate::data::{DeviceData, Templates, TestSet, NUM_CLASSES};
 use crate::fl::eval::evaluate_accuracy;
 use crate::metrics::{IterRecord, RunResult};
 use crate::model::{accumulate, finish, init_params, Init};
-use crate::runtime::{Arg, Engine};
+use crate::runtime::Backend;
 use crate::scheduling::Scheduler;
 use crate::system::Topology;
 use crate::util::Rng;
@@ -26,7 +28,7 @@ use crate::util::Rng;
 /// Static configuration of one HFL run.
 #[derive(Clone, Debug)]
 pub struct HflConfig {
-    /// `fmnist` or `cifar`.
+    /// `fmnist`, `cifar` (or `tiny` on the native backend).
     pub dataset: String,
     /// Devices scheduled per global iteration, H.
     pub h: usize,
@@ -57,9 +59,9 @@ impl Default for HflConfig {
     }
 }
 
-/// One HFL deployment wired to the PJRT engine.
+/// One HFL deployment wired to a model-execution backend.
 pub struct HflTrainer<'e> {
-    pub engine: &'e Engine,
+    pub backend: &'e dyn Backend,
     pub cfg: HflConfig,
     pub topo: Topology,
     pub templates: Templates,
@@ -74,12 +76,12 @@ pub struct HflTrainer<'e> {
 
 impl<'e> HflTrainer<'e> {
     /// Build the deployment: topology, non-IID partition, test set.
-    pub fn new(engine: &'e Engine, cfg: HflConfig, topo: Topology) -> anyhow::Result<Self> {
+    pub fn new(backend: &'e dyn Backend, cfg: HflConfig, topo: Topology) -> anyhow::Result<Self> {
         let spec = crate::data::SynthSpec::by_name(&cfg.dataset)?;
-        let info = engine.manifest.model(&cfg.dataset)?.clone();
+        let info = backend.manifest().model(&cfg.dataset)?.clone();
         anyhow::ensure!(
             (topo.params.model_bits - (info.bytes * 8) as f64).abs() < 1.0,
-            "topology model_bits must match the {} artifact ({} bits)",
+            "topology model_bits must match the {} model ({} bits)",
             cfg.dataset,
             info.bytes * 8
         );
@@ -91,7 +93,7 @@ impl<'e> HflTrainer<'e> {
             crate::data::partition(topo.devices.len(), &samples, cfg.frac_major, cfg.seed);
         let test = TestSet::generate(&templates, cfg.test_size, cfg.seed ^ 0x7e57);
         Ok(HflTrainer {
-            engine,
+            backend,
             channels: spec.channels,
             img: spec.img,
             params_len: info.params,
@@ -107,15 +109,15 @@ impl<'e> HflTrainer<'e> {
 
     /// Convenience: default topology for the dataset's model size.
     pub fn with_default_topology(
-        engine: &'e Engine,
+        backend: &'e dyn Backend,
         cfg: HflConfig,
     ) -> anyhow::Result<Self> {
-        let info = engine.manifest.model(&cfg.dataset)?;
+        let info = backend.manifest().model(&cfg.dataset)?;
         let mut params = crate::system::SystemParams::default();
         params.model_bits = (info.bytes * 8) as f64;
         let mut rng = Rng::new(cfg.seed);
         let topo = Topology::generate(&params, &mut rng);
-        Self::new(engine, cfg, topo)
+        Self::new(backend, cfg, topo)
     }
 
     /// Run L local iterations for `devices`, each slot starting from its
@@ -127,11 +129,10 @@ impl<'e> HflTrainer<'e> {
         edge_of: &dyn Fn(usize) -> usize,
         edge_params: &[Vec<f32>],
     ) -> anyhow::Result<(Vec<Vec<f32>>, f64)> {
-        let c = self.engine.manifest.consts.clone();
+        let c = self.backend.manifest().consts.clone();
         let (db, l, bsz) = (c.db, c.l, c.b);
         let p = self.params_len;
         let pixels = self.channels * self.img * self.img;
-        let artifact = format!("local_round_{}", self.cfg.dataset);
 
         let mut out_params: Vec<Vec<f32>> = Vec::with_capacity(devices.len());
         let mut loss_sum = 0.0f64;
@@ -141,7 +142,15 @@ impl<'e> HflTrainer<'e> {
         let mut ys = vec![0.0f32; db * l * bsz * NUM_CLASSES];
 
         for chunk in devices.chunks(db) {
-            for slot in 0..db {
+            // PJRT shapes are baked at lowering time, so the tail chunk is
+            // padded with duplicate slots; flexible backends skip the
+            // padded work entirely.
+            let slots = if self.backend.supports_partial_batch() {
+                chunk.len()
+            } else {
+                db
+            };
+            for slot in 0..slots {
                 let dev = chunk.get(slot).cloned().unwrap_or(chunk[chunk.len() - 1]);
                 let dd = &self.device_data[dev];
                 params_buf[slot * p..(slot + 1) * p]
@@ -156,28 +165,16 @@ impl<'e> HflTrainer<'e> {
                     &mut ys[yoff..yoff + l * bsz * NUM_CLASSES],
                 );
             }
-            let out = self.engine.run(
-                &artifact,
-                &[
-                    Arg::F32(&params_buf, &[db as i64, p as i64]),
-                    Arg::F32(
-                        &xs,
-                        &[
-                            db as i64,
-                            l as i64,
-                            bsz as i64,
-                            self.channels as i64,
-                            self.img as i64,
-                            self.img as i64,
-                        ],
-                    ),
-                    Arg::F32(&ys, &[db as i64, l as i64, bsz as i64, NUM_CLASSES as i64]),
-                    Arg::ScalarF32(self.cfg.lr),
-                ],
+            let (updated, losses) = self.backend.local_round(
+                &self.cfg.dataset,
+                &params_buf[..slots * p],
+                &xs[..slots * l * bsz * pixels],
+                &ys[..slots * l * bsz * NUM_CLASSES],
+                self.cfg.lr,
             )?;
             for (slot, _dev) in chunk.iter().enumerate() {
-                out_params.push(out[0][slot * p..(slot + 1) * p].to_vec());
-                loss_sum += out[1][slot] as f64;
+                out_params.push(updated[slot * p..(slot + 1) * p].to_vec());
+                loss_sum += losses[slot] as f64;
             }
         }
         Ok((out_params, loss_sum / devices.len() as f64))
@@ -270,7 +267,7 @@ impl<'e> HflTrainer<'e> {
         mut progress: impl FnMut(&IterRecord),
     ) -> anyhow::Result<RunResult> {
         let t_start = Instant::now();
-        let info = self.engine.manifest.model(&self.cfg.dataset)?.clone();
+        let info = self.backend.manifest().model(&self.cfg.dataset)?.clone();
         let mut global = init_params(&info, Init::HeNormal, &mut self.rng);
         let mut result = RunResult::default();
 
@@ -287,7 +284,7 @@ impl<'e> HflTrainer<'e> {
             global = new_global;
 
             let accuracy = evaluate_accuracy(
-                self.engine,
+                self.backend,
                 &self.cfg.dataset,
                 &global,
                 &self.test,

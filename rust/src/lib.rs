@@ -10,11 +10,15 @@
 //!   loop, and all experiment drivers.
 //! * **L2/L1 (build-time Python)** — the CNN/mini/D³QN computations, with
 //!   every matmul on a Pallas kernel, AOT-lowered to HLO text.
-//! * **runtime** — PJRT CPU client executing the AOT artifacts; Python is
-//!   never on the request path.
+//! * **runtime** — the [`runtime::Backend`] abstraction with two
+//!   implementations: the pure-Rust, thread-safe [`runtime::NativeBackend`]
+//!   (default, artifact-free) and the PJRT engine executing the AOT
+//!   artifacts (feature `pjrt`); Python is never on the request path.
+//! * **scenario** — declarative experiment grids ([`scenario::ScenarioSpec`])
+//!   and the rayon-parallel sweep runner behind `hfl sweep`.
 //!
-//! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for the
-//! paper-vs-measured results.
+//! See `DESIGN.md` at the repository root for the system inventory, the
+//! backend/scenario split and the substitution log.
 
 pub mod allocation;
 pub mod bench;
@@ -28,6 +32,7 @@ pub mod metrics;
 pub mod model;
 pub mod assignment;
 pub mod runtime;
+pub mod scenario;
 pub mod scheduling;
 pub mod system;
 pub mod util;

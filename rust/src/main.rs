@@ -2,7 +2,7 @@
 //!
 //! See `hfl help` (or the USAGE string below) for the full command set.
 
-use std::path::{Path, PathBuf};
+use std::path::PathBuf;
 
 use hfl::allocation::SolverOpts;
 use hfl::assignment::Assigner;
@@ -10,7 +10,8 @@ use hfl::cli::Args;
 use hfl::config::Config;
 use hfl::experiments::{self, AssignKind, SchedKind};
 use hfl::fl::{HflConfig, HflTrainer};
-use hfl::runtime::Engine;
+use hfl::runtime::{Backend, NativeBackend};
+use hfl::scenario::{self, ScenarioSpec};
 use hfl::scheduling::AuxModel;
 use hfl::util::logging;
 
@@ -18,13 +19,19 @@ const USAGE: &str = "\
 usage: hfl <command> [options]
 
 commands:
-  info                      show manifest/artifact inventory
+  info                      show backend model/constant inventory
   train                     single HFL run
                             (--dataset --h --scheduler ikc|vkc|fedavg
                              --assigner drl|hfel|hfel-100|geo|rr|random
                              --max-iters --target-acc --lr --seed)
+  sweep [preset|spec.toml]  scenario sweep: run a scheduler × assigner × H
+                            grid, rayon-parallel on the native backend
+                            (presets: grid fig3 fig4 fig6 fig7;
+                             --threads N  --iters N  --mode cost|train
+                             --schedulers a,b  --assigners a,b)
   drl-train                 train the D3QN assigner (Algorithm 5; saves
                             results/dqn_theta.bin) (--episodes --seed)
+                            [requires the pjrt feature]
   cluster                   run Algorithm 2 / Table II report
   assign                    compare assignment strategies (Fig. 6)
   exp <which>               paper experiments: fig3 fig4 fig5 fig6 fig7
@@ -32,6 +39,8 @@ commands:
 
 options (all commands):
   --config FILE  --out DIR  --artifacts DIR  --seed N  -v / -vv
+  --backend native|pjrt     model-execution runtime (default: native;
+                            pjrt needs AOT artifacts + the pjrt feature)
 experiment shaping:
   --seeds N  --max-iters N  --h-values 10,30,50,100  --test-size N
   --episodes N  --assign-iters N  --lambda X
@@ -40,7 +49,7 @@ experiment shaping:
 
 fn load_config(args: &Args) -> anyhow::Result<Config> {
     let mut cfg = match args.opt("config") {
-        Some(p) => Config::load(Path::new(p))?,
+        Some(p) => Config::load(std::path::Path::new(p))?,
         None => Config::default(),
     };
     cfg.seed = args.get_u64("seed", cfg.seed)?;
@@ -56,15 +65,39 @@ fn load_config(args: &Args) -> anyhow::Result<Config> {
     cfg.lr = args.get_f64("lr", cfg.lr as f64)? as f32;
     cfg.out_dir = args.get_str("out", &cfg.out_dir);
     cfg.artifact_dir = args.get_str("artifacts", &cfg.artifact_dir);
+    cfg.backend = args.get_str("backend", &cfg.backend);
     if let Some(ds) = args.opt("dataset") {
         cfg.datasets = vec![ds.to_string()];
     }
     Ok(cfg)
 }
 
-fn cmd_info(engine: &Engine) -> anyhow::Result<()> {
-    let m = &engine.manifest;
-    println!("artifact dir: {}", engine.artifact_dir().display());
+/// Open the configured model-execution backend.
+fn open_backend(cfg: &Config) -> anyhow::Result<Box<dyn Backend>> {
+    match cfg.backend.as_str() {
+        "native" => Ok(Box::new(NativeBackend::new())),
+        "pjrt" => {
+            #[cfg(feature = "pjrt")]
+            {
+                Ok(Box::new(hfl::runtime::Engine::open(std::path::Path::new(
+                    &cfg.artifact_dir,
+                ))?))
+            }
+            #[cfg(not(feature = "pjrt"))]
+            {
+                anyhow::bail!(
+                    "this binary was built without the pjrt feature; \
+                     rebuild with `--features pjrt` or use --backend native"
+                )
+            }
+        }
+        other => anyhow::bail!("unknown backend {other:?} (native|pjrt)"),
+    }
+}
+
+fn cmd_info(backend: &dyn Backend) -> anyhow::Result<()> {
+    let m = backend.manifest();
+    println!("backend: {}", backend.name());
     println!(
         "consts: DB={} L={} B={} EB={} M={} F={} O={} H_train={} horizons={:?}",
         m.consts.db, m.consts.l, m.consts.b, m.consts.eb, m.consts.n_edges,
@@ -84,7 +117,7 @@ fn cmd_info(engine: &Engine) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_train(args: &Args, cfg: &Config, engine: &Engine) -> anyhow::Result<()> {
+fn cmd_train(args: &Args, cfg: &Config, backend: &dyn Backend) -> anyhow::Result<()> {
     let dataset = args.get_str("dataset", "fmnist");
     let h = args.get_usize("h", 50)?;
     let sched_kind = SchedKind::parse(&args.get_str("scheduler", "ikc"))?;
@@ -104,15 +137,15 @@ fn cmd_train(args: &Args, cfg: &Config, engine: &Engine) -> anyhow::Result<()> {
     };
     args.finish()?;
 
-    let mut trainer = HflTrainer::with_default_topology(engine, hcfg)?;
+    let mut trainer = HflTrainer::with_default_topology(backend, hcfg)?;
     let clusters = match sched_kind {
         SchedKind::FedAvg => None,
         SchedKind::Ikc => Some(experiments::common::clusters_for(
-            engine, &trainer.topo, &trainer.templates, &trainer.device_data,
+            backend, &trainer.topo, &trainer.templates, &trainer.device_data,
             AuxModel::Mini, cfg.k_clusters, cfg.seed,
         )?),
         SchedKind::Vkc => Some(experiments::common::clusters_for(
-            engine, &trainer.topo, &trainer.templates, &trainer.device_data,
+            backend, &trainer.topo, &trainer.templates, &trainer.device_data,
             AuxModel::Full, cfg.k_clusters, cfg.seed,
         )?),
     };
@@ -120,12 +153,13 @@ fn cmd_train(args: &Args, cfg: &Config, engine: &Engine) -> anyhow::Result<()> {
         sched_kind, clusters, trainer.topo.devices.len(), h, cfg.seed ^ 0x5c4ed,
     )?;
     let mut assigner: Box<dyn Assigner> =
-        experiments::common::make_assigner(&assign_kind, engine, cfg, cfg.seed)?;
+        experiments::common::make_assigner(&assign_kind, backend, cfg, cfg.seed)?;
 
     println!(
-        "training {dataset} H={h} scheduler={} assigner={} target={}",
+        "training {dataset} H={h} scheduler={} assigner={} backend={} target={}",
         sched_kind.name(),
         assigner.name(),
+        backend.name(),
         trainer.cfg.target_acc
     );
     let res = trainer.run(&mut *sched, &mut *assigner, &SolverOpts::default(), |r| {
@@ -147,15 +181,92 @@ fn cmd_train(args: &Args, cfg: &Config, engine: &Engine) -> anyhow::Result<()> {
         res.total_msg_bytes() / 1e6,
         res.wall_secs
     );
-    let s = engine.stats();
+    let s = backend.stats();
     log::info!(
-        "engine: {} calls, {:.2}s exec, {:.2}s compile",
+        "backend: {} calls, {:.2}s exec, {:.2}s compile",
         s.calls, s.exec_secs, s.compile_secs
     );
     Ok(())
 }
 
-fn cmd_exp(args: &Args, cfg: &Config, engine: &Engine) -> anyhow::Result<()> {
+/// `hfl sweep` — the parallel scenario engine on the native backend.
+fn cmd_sweep(args: &Args, cfg: &Config) -> anyhow::Result<()> {
+    let which = args
+        .positional
+        .first()
+        .cloned()
+        .unwrap_or_else(|| "grid".to_string());
+    let mut spec = if which.ends_with(".toml") {
+        ScenarioSpec::load(std::path::Path::new(&which), cfg)?
+    } else {
+        scenario::presets::preset(&which, cfg)?
+    };
+    if let Some(m) = args.opt("mode") {
+        spec.mode = scenario::SweepMode::parse(m)?;
+    }
+    if let Some(s) = args.opt("schedulers") {
+        spec.schedulers = s
+            .split(',')
+            .map(|x| SchedKind::parse(x.trim()))
+            .collect::<anyhow::Result<_>>()?;
+    }
+    if let Some(a) = args.opt("assigners") {
+        spec.assigners = a
+            .split(',')
+            .map(|x| AssignKind::parse(x.trim(), None))
+            .collect::<anyhow::Result<_>>()?;
+    }
+    spec.iters = args.get_usize("iters", spec.iters)?;
+    let threads = args.get_usize("threads", 0)?;
+    args.finish()?;
+    spec.validate()?;
+
+    anyhow::ensure!(
+        cfg.backend == "native",
+        "hfl sweep fans cells across threads and needs the thread-safe \
+         native backend (the PJRT engine is single-threaded); \
+         run experiments on pjrt via `hfl exp` instead"
+    );
+    let backend = NativeBackend::new();
+    println!(
+        "sweep {} [{}]: {} cells (schedulers×assigners×H×seeds = {}×{}×{}×{})",
+        spec.name,
+        spec.mode.name(),
+        spec.cells().len(),
+        spec.schedulers.len(),
+        spec.assigners.len(),
+        spec.h_values.len(),
+        spec.seeds
+    );
+    let result = scenario::run_sweep(&spec, Some(&backend), threads)?;
+    let out_dir = std::path::Path::new(&cfg.out_dir);
+    let (rows_path, summary_path) = result.write_csvs(out_dir)?;
+
+    let mut table = hfl::bench::Table::new(&["scheduler", "assigner", "H", "E+λT (mean)", "assign lat"]);
+    for ((sched, assigner, h), cells) in result.grouped() {
+        let objs: Vec<f64> = cells.iter().map(|c| c.objective(result.lambda)).collect();
+        let lats: Vec<f64> = cells.iter().map(|c| c.assign_latency_mean_s).collect();
+        table.row(&[
+            sched.name().to_string(),
+            assigner,
+            h.to_string(),
+            format!("{:.1}", hfl::util::stats::mean(&objs)),
+            format!("{:.2}ms", hfl::util::stats::mean(&lats) * 1e3),
+        ]);
+    }
+    table.print();
+    println!(
+        "{} cells on {} threads in {:.2}s -> {} + {}",
+        result.cells.len(),
+        result.threads,
+        result.wall_secs,
+        rows_path.display(),
+        summary_path.display()
+    );
+    Ok(())
+}
+
+fn cmd_exp(args: &Args, cfg: &Config, backend: &dyn Backend) -> anyhow::Result<()> {
     let which = args
         .positional
         .first()
@@ -164,37 +275,57 @@ fn cmd_exp(args: &Args, cfg: &Config, engine: &Engine) -> anyhow::Result<()> {
     args.finish()?;
     match which.as_str() {
         "fig3" => {
-            experiments::fig_sched::run(engine, cfg, "fmnist")?;
+            experiments::fig_sched::run(backend, cfg, "fmnist")?;
         }
         "fig4" => {
-            experiments::fig_sched::run(engine, cfg, "cifar")?;
+            experiments::fig_sched::run(backend, cfg, "cifar")?;
         }
         "fig5" => {
-            experiments::fig5::run(engine, cfg)?;
+            run_fig5(cfg)?;
         }
         "fig6" => {
-            experiments::fig6::run(engine, cfg)?;
+            experiments::fig6::run(backend, cfg)?;
         }
         "fig7" => {
             for ds in &cfg.datasets {
-                experiments::fig7::run(engine, cfg, ds)?;
+                experiments::fig7::run(backend, cfg, ds)?;
             }
         }
         "table2" => {
-            experiments::table2::run(engine, cfg)?;
+            experiments::table2::run(backend, cfg)?;
         }
         "all" => {
-            experiments::table2::run(engine, cfg)?;
-            experiments::fig5::run(engine, cfg)?;
-            experiments::fig6::run(engine, cfg)?;
+            experiments::table2::run(backend, cfg)?;
+            if cfg!(feature = "pjrt") && cfg.backend == "pjrt" {
+                run_fig5(cfg)?;
+            }
+            experiments::fig6::run(backend, cfg)?;
             for ds in cfg.datasets.clone() {
-                experiments::fig_sched::run(engine, cfg, &ds)?;
-                experiments::fig7::run(engine, cfg, &ds)?;
+                experiments::fig_sched::run(backend, cfg, &ds)?;
+                experiments::fig7::run(backend, cfg, &ds)?;
             }
         }
         other => anyhow::bail!("unknown experiment {other:?} (fig3..fig7, table2, all)"),
     }
     Ok(())
+}
+
+/// Fig. 5 (Algorithm 5 D³QN training) drives the `dqn_train` artifact and
+/// exists only in pjrt builds.
+#[cfg(feature = "pjrt")]
+fn run_fig5(cfg: &Config) -> anyhow::Result<()> {
+    let engine = hfl::runtime::Engine::open(std::path::Path::new(&cfg.artifact_dir))?;
+    experiments::fig5::run(&engine, cfg)?;
+    Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn run_fig5(_cfg: &Config) -> anyhow::Result<()> {
+    anyhow::bail!(
+        "fig5 / drl-train need the dqn_train AOT artifact; \
+         rebuild with `--features pjrt` (DRL training on the native \
+         backend is a ROADMAP open item)"
+    )
 }
 
 fn main() -> anyhow::Result<()> {
@@ -209,30 +340,38 @@ fn main() -> anyhow::Result<()> {
     }
     let cfg = load_config(&args)?;
     std::fs::create_dir_all(&cfg.out_dir).ok();
-    let engine = Engine::open(Path::new(&cfg.artifact_dir))?;
+
+    // `sweep` builds its own (concrete, Sync) backend for the thread pool;
+    // `drl-train` opens the PJRT engine itself (run_fig5) — don't open a
+    // second backend for either.
+    if args.subcommand == "sweep" {
+        return cmd_sweep(&args, &cfg);
+    }
+    if args.subcommand == "drl-train" {
+        args.finish()?;
+        return run_fig5(&cfg);
+    }
+
+    let backend = open_backend(&cfg)?;
+    let backend: &dyn Backend = backend.as_ref();
 
     match args.subcommand.as_str() {
         "info" => {
             args.finish()?;
-            cmd_info(&engine)
+            cmd_info(backend)
         }
-        "train" => cmd_train(&args, &cfg, &engine),
-        "drl-train" => {
-            args.finish()?;
-            experiments::fig5::run(&engine, &cfg)?;
-            Ok(())
-        }
+        "train" => cmd_train(&args, &cfg, backend),
         "cluster" => {
             args.finish()?;
-            experiments::table2::run(&engine, &cfg)?;
+            experiments::table2::run(backend, &cfg)?;
             Ok(())
         }
         "assign" => {
             args.finish()?;
-            experiments::fig6::run(&engine, &cfg)?;
+            experiments::fig6::run(backend, &cfg)?;
             Ok(())
         }
-        "exp" => cmd_exp(&args, &cfg, &engine),
+        "exp" => cmd_exp(&args, &cfg, backend),
         other => {
             eprintln!("unknown command {other:?}\n{USAGE}");
             std::process::exit(2);

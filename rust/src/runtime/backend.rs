@@ -1,0 +1,101 @@
+//! The model-execution [`Backend`] abstraction.
+//!
+//! Every workload the coordinator dispatches to "the learning runtime" is
+//! one of three calls: a batched local training round (Algorithms 1/2), a
+//! forward pass for evaluation, or D³QN Q-value inference (§V). This trait
+//! captures exactly that surface so the FL trainer, Algorithm 2 clustering
+//! and the D³QN assigner are portable across runtimes:
+//!
+//! * [`crate::runtime::NativeBackend`] — pure Rust, `Send + Sync`, needs no
+//!   HLO artifacts; powers the parallel scenario sweeps (`hfl sweep`).
+//! * [`crate::runtime::Engine`] (feature `pjrt`) — the PJRT executor over
+//!   AOT-lowered HLO artifacts; `!Send`/`!Sync` because the `xla` crate
+//!   holds raw PJRT pointers, so it stays single-threaded.
+//!
+//! The trait deliberately does NOT require `Send`/`Sync` (the PJRT engine
+//! can't provide them); parallel callers bound a concrete `B: Backend +
+//! Sync` instead.
+
+use super::manifest::Manifest;
+
+/// Cumulative dispatch counters (perf accounting).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BackendStats {
+    pub calls: u64,
+    pub exec_secs: f64,
+    /// Artifact-compilation time (0 for the native backend).
+    pub compile_secs: f64,
+}
+
+/// Input geometry `(channels, img)` of a model's samples, derived from the
+/// dataset registry (`data::SynthSpec`) so it cannot drift from the data
+/// plumbing; the IKC auxiliary model ξ is the one model without a dataset
+/// of its own (it trains on crops, `scheduling::clustering::crop_to_mini`).
+pub fn model_geometry(model: &str) -> anyhow::Result<(usize, usize)> {
+    if model == "mini" {
+        return Ok((1, 10));
+    }
+    let spec = crate::data::SynthSpec::by_name(model)?;
+    Ok((spec.channels, spec.img))
+}
+
+/// A model-execution runtime for the HFL coordinator.
+///
+/// All tensors cross the boundary as flat row-major `f32` buffers; batch
+/// shape constants (`db`, `l`, `b`, `eb`) come from [`Manifest::consts`].
+pub trait Backend {
+    fn name(&self) -> &'static str;
+
+    /// Model inventory + batch-shape constants of this runtime.
+    fn manifest(&self) -> &Manifest;
+
+    /// One batched local training round (eq. 1): for each of the `db`
+    /// device slots, run `l` SGD steps of minibatch size `b`.
+    ///
+    /// * `params`: `db × P` per-slot parameter vectors,
+    /// * `xs`: `db × l × b × C × img × img` samples,
+    /// * `ys`: `db × l × b × 10` one-hot labels.
+    ///
+    /// Returns `(params', losses)`: updated `db × P` parameters and the
+    /// per-slot mean training loss over the `l` steps.
+    fn local_round(
+        &self,
+        model: &str,
+        params: &[f32],
+        xs: &[f32],
+        ys: &[f32],
+        lr: f32,
+    ) -> anyhow::Result<(Vec<f32>, Vec<f32>)>;
+
+    /// Forward pass: `params` (`P`) + `x` (`batch × C × img × img`) →
+    /// logits (`batch × 10`). PJRT requires `batch == consts.eb` (the AOT
+    /// shape); the native backend accepts any batch.
+    fn forward(
+        &self,
+        model: &str,
+        params: &[f32],
+        x: &[f32],
+        batch: usize,
+    ) -> anyhow::Result<Vec<f32>>;
+
+    /// D³QN inference (eqs. 20/25): `theta` + episode features (`h × F`) →
+    /// Q-matrix (`h × M`). `h` must be a value returned by
+    /// [`Backend::pick_horizon`].
+    fn dqn_q_all(&self, theta: &[f32], feats: &[f32], h: usize) -> anyhow::Result<Vec<f32>>;
+
+    /// Episode horizon the Q-inference call supports for `h` scheduled
+    /// devices (callers zero-pad features up to it). PJRT returns the
+    /// smallest AOT-lowered horizon ≥ `h`; the native backend returns `h`.
+    fn pick_horizon(&self, h: usize) -> anyhow::Result<usize>;
+
+    /// Whether [`Backend::local_round`] accepts fewer than `consts.db`
+    /// device slots and [`Backend::forward`] fewer than `consts.eb`
+    /// samples. PJRT artifacts bake batch shapes into the lowered HLO
+    /// (callers must pad tail chunks); the native kernels accept any
+    /// count, letting callers skip the padded duplicate work.
+    fn supports_partial_batch(&self) -> bool {
+        false
+    }
+
+    fn stats(&self) -> BackendStats;
+}

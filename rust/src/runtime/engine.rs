@@ -11,6 +11,7 @@ use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::time::Instant;
 
+use super::backend::{model_geometry, Backend, BackendStats};
 use super::manifest::Manifest;
 
 /// A typed input argument for an artifact call.
@@ -153,5 +154,120 @@ impl Engine {
 
     pub fn artifact_dir(&self) -> &Path {
         &self.dir
+    }
+}
+
+/// The PJRT engine as a [`Backend`]: each trait call dispatches the
+/// matching AOT artifact. Batch shapes are fixed at lowering time, so the
+/// buffers must match `manifest.consts` exactly (the native backend is the
+/// flexible one).
+impl Backend for Engine {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn local_round(
+        &self,
+        model: &str,
+        params: &[f32],
+        xs: &[f32],
+        ys: &[f32],
+        lr: f32,
+    ) -> anyhow::Result<(Vec<f32>, Vec<f32>)> {
+        let c = &self.manifest.consts;
+        let info = self.manifest.model(model)?;
+        let p = info.params;
+        anyhow::ensure!(
+            params.len() == c.db * p,
+            "local_round {model}: params length {} != db({})×{p}",
+            params.len(),
+            c.db
+        );
+        let (channels, img) = model_geometry(model)?;
+        let artifact = if model == "mini" {
+            "mini_local_round".to_string()
+        } else {
+            format!("local_round_{model}")
+        };
+        let out = self.run(
+            &artifact,
+            &[
+                Arg::F32(params, &[c.db as i64, p as i64]),
+                Arg::F32(
+                    xs,
+                    &[
+                        c.db as i64,
+                        c.l as i64,
+                        c.b as i64,
+                        channels as i64,
+                        img as i64,
+                        img as i64,
+                    ],
+                ),
+                Arg::F32(ys, &[c.db as i64, c.l as i64, c.b as i64, c.num_classes as i64]),
+                Arg::ScalarF32(lr),
+            ],
+        )?;
+        let mut it = out.into_iter();
+        let new_params = it.next().ok_or_else(|| anyhow::anyhow!("missing params output"))?;
+        let losses = it.next().ok_or_else(|| anyhow::anyhow!("missing loss output"))?;
+        Ok((new_params, losses))
+    }
+
+    fn forward(
+        &self,
+        model: &str,
+        params: &[f32],
+        x: &[f32],
+        batch: usize,
+    ) -> anyhow::Result<Vec<f32>> {
+        let c = &self.manifest.consts;
+        anyhow::ensure!(
+            batch == c.eb,
+            "pjrt eval_{model} is lowered for batch {}, got {batch}",
+            c.eb
+        );
+        let (channels, img) = model_geometry(model)?;
+        let out = self.run(
+            &format!("eval_{model}"),
+            &[
+                Arg::F32(params, &[params.len() as i64]),
+                Arg::F32(x, &[batch as i64, channels as i64, img as i64, img as i64]),
+            ],
+        )?;
+        out.into_iter()
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("eval_{model} returned nothing"))
+    }
+
+    fn dqn_q_all(&self, theta: &[f32], feats: &[f32], h: usize) -> anyhow::Result<Vec<f32>> {
+        let c = &self.manifest.consts;
+        let out = self.run(
+            &format!("dqn_q_all_h{h}"),
+            &[
+                Arg::F32(theta, &[theta.len() as i64]),
+                Arg::F32(feats, &[h as i64, c.feat as i64]),
+            ],
+        )?;
+        out.into_iter()
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("dqn_q_all_h{h} returned nothing"))
+    }
+
+    fn pick_horizon(&self, h: usize) -> anyhow::Result<usize> {
+        let mut hs = self.manifest.consts.horizons.clone();
+        hs.sort_unstable();
+        hs.into_iter().find(|&x| x >= h).ok_or_else(|| {
+            anyhow::anyhow!("no dqn_q_all artifact for H≥{h}; re-run aot.py with --horizons")
+        })
+    }
+
+    fn stats(&self) -> BackendStats {
+        let s = *self.stats.borrow();
+        BackendStats { calls: s.calls, exec_secs: s.exec_secs, compile_secs: s.compile_secs }
     }
 }

@@ -1,8 +1,18 @@
-//! Runtime: the `xla` crate PJRT wrapper that loads `artifacts/*.hlo.txt`
-//! and executes them from the L3 hot path (no Python at runtime).
+//! Runtime layer: the [`Backend`] execution abstraction and its two
+//! implementations.
+//!
+//! * [`native`] — pure Rust, `Send + Sync`, artifact-free (the default).
+//! * [`engine`] (feature `pjrt`) — the `xla` crate PJRT wrapper that loads
+//!   `artifacts/*.hlo.txt` and executes them from the L3 hot path.
 
+pub mod backend;
+#[cfg(feature = "pjrt")]
 pub mod engine;
 pub mod manifest;
+pub mod native;
 
+pub use backend::{model_geometry, Backend, BackendStats};
+#[cfg(feature = "pjrt")]
 pub use engine::{Arg, Engine, EngineStats};
 pub use manifest::{Consts, Leaf, Manifest, ModelInfo};
+pub use native::NativeBackend;

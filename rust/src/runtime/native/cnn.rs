@@ -1,0 +1,416 @@
+//! Native CNN models — the Rust port of `python/compile/model.py`.
+//!
+//! A model is a chain of conv→ReLU→2×2-maxpool blocks, an HWC flatten, and
+//! a dense stack whose last layer emits the 10 class logits. Parameters
+//! live in one flat f32 vector whose leaf layout (names, shapes, offsets)
+//! is identical to the Python/manifest layout, so checkpoints, He init and
+//! the Algorithm 2 classifier-head clustering work unchanged across
+//! backends.
+
+use super::ops;
+use super::push_leaf;
+use crate::data::NUM_CLASSES;
+use crate::runtime::manifest::ModelInfo;
+
+#[derive(Clone, Debug)]
+struct ConvBlock {
+    in_ch: usize,
+    out_ch: usize,
+    k: usize,
+    /// Input spatial side.
+    in_hw: usize,
+    /// After the valid conv.
+    conv_hw: usize,
+    /// After the 2×2 pool.
+    pool_hw: usize,
+    w_off: usize,
+    b_off: usize,
+}
+
+#[derive(Clone, Debug)]
+struct DenseLayer {
+    n_in: usize,
+    n_out: usize,
+    relu: bool,
+    w_off: usize,
+    b_off: usize,
+}
+
+/// One CNN family instance (fmnist / cifar / mini / tiny).
+#[derive(Clone, Debug)]
+pub struct NativeCnn {
+    pub in_ch: usize,
+    pub img: usize,
+    /// Flattened feature size feeding the dense stack.
+    pub feat: usize,
+    convs: Vec<ConvBlock>,
+    denses: Vec<DenseLayer>,
+    pub info: ModelInfo,
+}
+
+impl NativeCnn {
+    /// Two conv blocks + two dense layers — `CnnConfig` in model.py.
+    pub fn cnn(name: &str, in_ch: usize, img: usize, c1: usize, c2: usize, hidden: usize, k: usize) -> NativeCnn {
+        let s1 = img - k + 1;
+        let p1 = s1 / 2;
+        let s2 = p1 - k + 1;
+        let feat_hw = s2 / 2;
+        let feat = feat_hw * feat_hw * c2;
+
+        let mut leaves = Vec::new();
+        let mut off = 0usize;
+        let c1w = push_leaf(&mut leaves, "conv1_w", vec![c1, in_ch, k, k], &mut off);
+        let c1b = push_leaf(&mut leaves, "conv1_b", vec![c1], &mut off);
+        let c2w = push_leaf(&mut leaves, "conv2_w", vec![c2, c1, k, k], &mut off);
+        let c2b = push_leaf(&mut leaves, "conv2_b", vec![c2], &mut off);
+        let f1w = push_leaf(&mut leaves, "fc1_w", vec![feat, hidden], &mut off);
+        let f1b = push_leaf(&mut leaves, "fc1_b", vec![hidden], &mut off);
+        let f2w = push_leaf(&mut leaves, "fc2_w", vec![hidden, NUM_CLASSES], &mut off);
+        let f2b = push_leaf(&mut leaves, "fc2_b", vec![NUM_CLASSES], &mut off);
+
+        NativeCnn {
+            in_ch,
+            img,
+            feat,
+            convs: vec![
+                ConvBlock { in_ch, out_ch: c1, k, in_hw: img, conv_hw: s1, pool_hw: p1, w_off: c1w, b_off: c1b },
+                ConvBlock { in_ch: c1, out_ch: c2, k, in_hw: p1, conv_hw: s2, pool_hw: feat_hw, w_off: c2w, b_off: c2b },
+            ],
+            denses: vec![
+                DenseLayer { n_in: feat, n_out: hidden, relu: true, w_off: f1w, b_off: f1b },
+                DenseLayer { n_in: hidden, n_out: NUM_CLASSES, relu: false, w_off: f2w, b_off: f2b },
+            ],
+            info: ModelInfo { name: name.to_string(), params: off, bytes: off * 4, leaves },
+        }
+    }
+
+    /// One conv block + one dense layer — `MiniConfig` (ξ) in model.py.
+    pub fn single_conv(name: &str, in_ch: usize, img: usize, ch: usize, k: usize) -> NativeCnn {
+        let s1 = img - k + 1;
+        let feat_hw = s1 / 2;
+        let feat = feat_hw * feat_hw * ch;
+
+        let mut leaves = Vec::new();
+        let mut off = 0usize;
+        let cw = push_leaf(&mut leaves, "conv1_w", vec![ch, in_ch, k, k], &mut off);
+        let cb = push_leaf(&mut leaves, "conv1_b", vec![ch], &mut off);
+        let fw = push_leaf(&mut leaves, "fc_w", vec![feat, NUM_CLASSES], &mut off);
+        let fb = push_leaf(&mut leaves, "fc_b", vec![NUM_CLASSES], &mut off);
+
+        NativeCnn {
+            in_ch,
+            img,
+            feat,
+            convs: vec![ConvBlock { in_ch, out_ch: ch, k, in_hw: img, conv_hw: s1, pool_hw: feat_hw, w_off: cw, b_off: cb }],
+            denses: vec![DenseLayer { n_in: feat, n_out: NUM_CLASSES, relu: false, w_off: fw, b_off: fb }],
+            info: ModelInfo { name: name.to_string(), params: off, bytes: off * 4, leaves },
+        }
+    }
+
+    pub fn pixels(&self) -> usize {
+        self.in_ch * self.img * self.img
+    }
+
+    /// Forward pass: `params` + `x[bsz × C × img × img]` → logits
+    /// (`bsz × 10`).
+    pub fn forward(&self, params: &[f32], x: &[f32], bsz: usize) -> Vec<f32> {
+        assert_eq!(params.len(), self.info.params, "{}: bad param length", self.info.name);
+        assert_eq!(x.len(), bsz * self.pixels(), "{}: bad input length", self.info.name);
+        let mut cur = x.to_vec();
+        for cs in &self.convs {
+            let mut conv = vec![0.0f32; bsz * cs.out_ch * cs.conv_hw * cs.conv_hw];
+            ops::conv2d_fwd(
+                &cur,
+                &params[cs.w_off..cs.w_off + cs.out_ch * cs.in_ch * cs.k * cs.k],
+                &params[cs.b_off..cs.b_off + cs.out_ch],
+                bsz, cs.in_ch, cs.in_hw, cs.in_hw, cs.out_ch, cs.k, true, &mut conv,
+            );
+            let mut pool = vec![0.0f32; bsz * cs.out_ch * cs.pool_hw * cs.pool_hw];
+            let mut am = vec![0u32; pool.len()];
+            ops::maxpool2_fwd(&conv, bsz, cs.out_ch, cs.conv_hw, cs.conv_hw, &mut pool, &mut am);
+            cur = pool;
+        }
+        let last = self.convs.last().expect("at least one conv block");
+        let mut flat = vec![0.0f32; bsz * self.feat];
+        ops::nchw_to_nhwc(&cur, bsz, last.out_ch, last.pool_hw, last.pool_hw, &mut flat);
+        let mut cur = flat;
+        for ds in &self.denses {
+            let mut out = vec![0.0f32; bsz * ds.n_out];
+            ops::dense_fwd(
+                &cur,
+                &params[ds.w_off..ds.w_off + ds.n_in * ds.n_out],
+                &params[ds.b_off..ds.b_off + ds.n_out],
+                bsz, ds.n_in, ds.n_out, ds.relu, &mut out,
+            );
+            cur = out;
+        }
+        cur
+    }
+
+    /// Mean softmax-xent loss over the batch plus its gradient w.r.t. every
+    /// parameter (written into `grad`, length `info.params`).
+    pub fn loss_and_grad(
+        &self,
+        params: &[f32],
+        x: &[f32],
+        y_onehot: &[f32],
+        bsz: usize,
+        grad: &mut [f32],
+    ) -> f32 {
+        assert_eq!(params.len(), self.info.params);
+        assert_eq!(grad.len(), self.info.params);
+        assert_eq!(x.len(), bsz * self.pixels());
+        assert_eq!(y_onehot.len(), bsz * NUM_CLASSES);
+
+        // ---- forward with caches --------------------------------------
+        let mut conv_acts: Vec<Vec<f32>> = Vec::with_capacity(self.convs.len());
+        let mut pool_outs: Vec<Vec<f32>> = Vec::with_capacity(self.convs.len());
+        let mut argmaxes: Vec<Vec<u32>> = Vec::with_capacity(self.convs.len());
+        for (ci, cs) in self.convs.iter().enumerate() {
+            let input: &[f32] = if ci == 0 { x } else { &pool_outs[ci - 1] };
+            let mut conv = vec![0.0f32; bsz * cs.out_ch * cs.conv_hw * cs.conv_hw];
+            ops::conv2d_fwd(
+                input,
+                &params[cs.w_off..cs.w_off + cs.out_ch * cs.in_ch * cs.k * cs.k],
+                &params[cs.b_off..cs.b_off + cs.out_ch],
+                bsz, cs.in_ch, cs.in_hw, cs.in_hw, cs.out_ch, cs.k, true, &mut conv,
+            );
+            let mut pool = vec![0.0f32; bsz * cs.out_ch * cs.pool_hw * cs.pool_hw];
+            let mut am = vec![0u32; pool.len()];
+            ops::maxpool2_fwd(&conv, bsz, cs.out_ch, cs.conv_hw, cs.conv_hw, &mut pool, &mut am);
+            conv_acts.push(conv);
+            argmaxes.push(am);
+            pool_outs.push(pool);
+        }
+        let last = self.convs.last().expect("at least one conv block");
+        let last_pool = pool_outs.last().expect("pool output present");
+        let mut flat = vec![0.0f32; bsz * self.feat];
+        ops::nchw_to_nhwc(last_pool, bsz, last.out_ch, last.pool_hw, last.pool_hw, &mut flat);
+        // dense_ins[i] is the input of dense layer i; logits is the output
+        let mut dense_ins: Vec<Vec<f32>> = vec![flat];
+        for ds in &self.denses {
+            let prev = dense_ins.last().expect("flatten output present");
+            let mut out = vec![0.0f32; bsz * ds.n_out];
+            ops::dense_fwd(
+                prev,
+                &params[ds.w_off..ds.w_off + ds.n_in * ds.n_out],
+                &params[ds.b_off..ds.b_off + ds.n_out],
+                bsz, ds.n_in, ds.n_out, ds.relu, &mut out,
+            );
+            dense_ins.push(out);
+        }
+        let logits = dense_ins.last().expect("logits present");
+        let mut dy = vec![0.0f32; bsz * NUM_CLASSES];
+        let loss = ops::softmax_xent(logits, y_onehot, bsz, NUM_CLASSES, &mut dy);
+
+        // ---- backward -------------------------------------------------
+        grad.fill(0.0);
+        for (di, ds) in self.denses.iter().enumerate().rev() {
+            if ds.relu {
+                ops::relu_bwd_mask(&dense_ins[di + 1], &mut dy);
+            }
+            let input = &dense_ins[di];
+            let mut dx = vec![0.0f32; bsz * ds.n_in];
+            {
+                let (dw, db): (&mut [f32], &mut [f32]) = {
+                    // the two leaf ranges never overlap
+                    let (wo, bo) = (ds.w_off, ds.b_off);
+                    let wlen = ds.n_in * ds.n_out;
+                    debug_assert_eq!(bo, wo + wlen);
+                    let (head, tail) = grad.split_at_mut(bo);
+                    (&mut head[wo..wo + wlen], &mut tail[..ds.n_out])
+                };
+                ops::dense_bwd(
+                    input,
+                    &params[ds.w_off..ds.w_off + ds.n_in * ds.n_out],
+                    &dy, bsz, ds.n_in, ds.n_out, dw, db, Some(&mut dx),
+                );
+            }
+            dy = dx;
+        }
+        // un-flatten back to NCHW
+        let mut dpool = vec![0.0f32; bsz * last.out_ch * last.pool_hw * last.pool_hw];
+        ops::nhwc_to_nchw(&dy, bsz, last.out_ch, last.pool_hw, last.pool_hw, &mut dpool);
+
+        for (ci, cs) in self.convs.iter().enumerate().rev() {
+            // pool backward, then the ReLU mask of the conv activation
+            let mut dconv = vec![0.0f32; bsz * cs.out_ch * cs.conv_hw * cs.conv_hw];
+            ops::maxpool2_bwd(&dpool, &argmaxes[ci], &mut dconv);
+            ops::relu_bwd_mask(&conv_acts[ci], &mut dconv);
+            let input: &[f32] = if ci == 0 { x } else { &pool_outs[ci - 1] };
+            let need_dx = ci > 0;
+            let mut dx = if need_dx {
+                vec![0.0f32; bsz * cs.in_ch * cs.in_hw * cs.in_hw]
+            } else {
+                Vec::new()
+            };
+            {
+                let (dw, db): (&mut [f32], &mut [f32]) = {
+                    let (wo, bo) = (cs.w_off, cs.b_off);
+                    let wlen = cs.out_ch * cs.in_ch * cs.k * cs.k;
+                    debug_assert_eq!(bo, wo + wlen);
+                    let (head, tail) = grad.split_at_mut(bo);
+                    (&mut head[wo..wo + wlen], &mut tail[..cs.out_ch])
+                };
+                ops::conv2d_bwd(
+                    input,
+                    &params[cs.w_off..cs.w_off + cs.out_ch * cs.in_ch * cs.k * cs.k],
+                    &dconv, bsz, cs.in_ch, cs.in_hw, cs.in_hw, cs.out_ch, cs.k,
+                    dw, db,
+                    if need_dx { Some(&mut dx) } else { None },
+                );
+            }
+            dpool = dx;
+        }
+        loss
+    }
+
+    /// `l` SGD steps (eq. 1) on one device slot, mutating `params` in
+    /// place. `xs` is `l × bsz × pixels`, `ys` is `l × bsz × 10`. Returns
+    /// the mean pre-update loss over the `l` steps, matching the
+    /// `lax.scan` semantics of `model.local_round`.
+    pub fn local_round(
+        &self,
+        params: &mut [f32],
+        xs: &[f32],
+        ys: &[f32],
+        l: usize,
+        bsz: usize,
+        lr: f32,
+    ) -> f32 {
+        let px = self.pixels();
+        assert_eq!(xs.len(), l * bsz * px);
+        assert_eq!(ys.len(), l * bsz * NUM_CLASSES);
+        let mut grad = vec![0.0f32; self.info.params];
+        let mut loss_sum = 0.0f64;
+        for li in 0..l {
+            let x = &xs[li * bsz * px..(li + 1) * bsz * px];
+            let y = &ys[li * bsz * NUM_CLASSES..(li + 1) * bsz * NUM_CLASSES];
+            let loss = self.loss_and_grad(params, x, y, bsz, &mut grad);
+            for (p, &g) in params.iter_mut().zip(grad.iter()) {
+                *p -= lr * g;
+            }
+            loss_sum += loss as f64;
+        }
+        (loss_sum / l as f64) as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{init_params, Init};
+    use crate::util::Rng;
+
+    fn tiny() -> NativeCnn {
+        NativeCnn::single_conv("tiny", 1, 10, 4, 3)
+    }
+
+    #[test]
+    fn leaf_layout_matches_python() {
+        let m = NativeCnn::cnn("fmnist", 1, 28, 15, 28, 220, 5);
+        assert_eq!(m.feat, 448);
+        assert_eq!(m.info.params, 375 + 15 + 10500 + 28 + 448 * 220 + 220 + 2200 + 10);
+        assert_eq!(m.info.leaves[4].name, "fc1_w");
+        assert_eq!(m.info.leaves[4].shape, vec![448, 220]);
+        let c = NativeCnn::cnn("cifar", 3, 32, 15, 28, 295, 5);
+        assert_eq!(c.feat, 700);
+        let mini = NativeCnn::single_conv("mini", 1, 10, 16, 2);
+        assert_eq!(mini.feat, 256);
+        assert_eq!(mini.info.params, 64 + 16 + 2560 + 10);
+        assert_eq!(mini.info.leaves[2].name, "fc_w");
+    }
+
+    #[test]
+    fn forward_shapes_and_finite() {
+        let m = tiny();
+        let params = init_params(&m.info, Init::HeNormal, &mut Rng::new(1));
+        let x: Vec<f32> = (0..3 * m.pixels()).map(|i| ((i as f32) * 0.01).sin()).collect();
+        let logits = m.forward(&params, &x, 3);
+        assert_eq!(logits.len(), 30);
+        assert!(logits.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn gradient_matches_finite_difference() {
+        let m = tiny();
+        let mut params = init_params(&m.info, Init::HeNormal, &mut Rng::new(2));
+        let mut rng = Rng::new(3);
+        let bsz = 4;
+        let x: Vec<f32> = (0..bsz * m.pixels()).map(|_| rng.f32() * 2.0 - 1.0).collect();
+        let mut y = vec![0.0f32; bsz * NUM_CLASSES];
+        for b in 0..bsz {
+            y[b * NUM_CLASSES + rng.below(NUM_CLASSES)] = 1.0;
+        }
+        let mut grad = vec![0.0f32; m.info.params];
+        m.loss_and_grad(&params, &x, &y, bsz, &mut grad);
+
+        // probe a few parameters from every leaf (conv w/b, fc w/b)
+        let probes: Vec<usize> = m
+            .info
+            .leaves
+            .iter()
+            .flat_map(|lf| [lf.offset, lf.offset + lf.size / 2, lf.offset + lf.size - 1])
+            .collect();
+        let eps = 2e-3f32;
+        let mut scratch = vec![0.0f32; m.info.params];
+        for &i in &probes {
+            let orig = params[i];
+            params[i] = orig + eps;
+            let lp = m.loss_and_grad(&params, &x, &y, bsz, &mut scratch);
+            params[i] = orig - eps;
+            let lm = m.loss_and_grad(&params, &x, &y, bsz, &mut scratch);
+            params[i] = orig;
+            let fd = (lp - lm) / (2.0 * eps);
+            let tol = 2e-2f32.max(0.2 * fd.abs());
+            assert!(
+                (fd - grad[i]).abs() <= tol,
+                "param {i}: finite-diff {fd} vs analytic {}",
+                grad[i]
+            );
+        }
+    }
+
+    #[test]
+    fn sgd_reduces_loss_on_fixed_batch() {
+        let m = tiny();
+        let mut params = init_params(&m.info, Init::HeNormal, &mut Rng::new(5));
+        let mut rng = Rng::new(6);
+        let bsz = 8;
+        let x: Vec<f32> = (0..bsz * m.pixels()).map(|_| rng.f32() * 2.0 - 1.0).collect();
+        let mut y = vec![0.0f32; bsz * NUM_CLASSES];
+        for b in 0..bsz {
+            y[b * NUM_CLASSES + b % NUM_CLASSES] = 1.0;
+        }
+        let mut grad = vec![0.0f32; m.info.params];
+        let first = m.loss_and_grad(&params, &x, &y, bsz, &mut grad);
+        let mut last = first;
+        for _ in 0..30 {
+            last = m.loss_and_grad(&params, &x, &y, bsz, &mut grad);
+            for (p, &g) in params.iter_mut().zip(&grad) {
+                *p -= 0.5 * g;
+            }
+        }
+        assert!(last < first * 0.8, "loss did not fall: {first} -> {last}");
+    }
+
+    #[test]
+    fn local_round_is_deterministic() {
+        let m = tiny();
+        let base = init_params(&m.info, Init::HeNormal, &mut Rng::new(7));
+        let mut rng = Rng::new(8);
+        let (l, bsz) = (3, 4);
+        let xs: Vec<f32> = (0..l * bsz * m.pixels()).map(|_| rng.f32()).collect();
+        let mut ys = vec![0.0f32; l * bsz * NUM_CLASSES];
+        for s in 0..l * bsz {
+            ys[s * NUM_CLASSES + s % NUM_CLASSES] = 1.0;
+        }
+        let mut p1 = base.clone();
+        let mut p2 = base.clone();
+        let l1 = m.local_round(&mut p1, &xs, &ys, l, bsz, 0.1);
+        let l2 = m.local_round(&mut p2, &xs, &ys, l, bsz, 0.1);
+        assert_eq!(l1, l2);
+        assert_eq!(p1, p2);
+        assert_ne!(p1, base, "params must move");
+    }
+}

@@ -1,0 +1,237 @@
+//! Native D³QN inference — the Rust port of `qvalues_all` in
+//! `python/compile/dqn.py` (forward only; training the agent still runs on
+//! the PJRT artifacts, see ROADMAP "Open items").
+//!
+//! The state (eq. 25) is position-indexed: one forward LSTM scan yields the
+//! prefix hidden for every split t, one scan over the reversed sequence
+//! yields the suffix hidden, and the dueling heads (eq. 20) combine them
+//! into Q[H, M] for the whole episode in a single call.
+
+use super::ops::sigmoid;
+use super::push_leaf;
+use crate::runtime::manifest::ModelInfo;
+
+#[derive(Clone, Debug)]
+pub struct NativeDqn {
+    pub n_edges: usize,
+    /// F = M + 3 (eq. 24).
+    pub feat: usize,
+    pub hid: usize,
+    pub fc: usize,
+    pub info: ModelInfo,
+    // flat-vector leaf offsets
+    wi: usize,
+    wh: usize,
+    b: usize,
+    fc_w: usize,
+    fc_b: usize,
+    v_w: usize,
+    v_b: usize,
+    a_w: usize,
+    a_b: usize,
+}
+
+impl NativeDqn {
+    pub fn new(n_edges: usize, hid: usize, fc: usize) -> NativeDqn {
+        let feat = n_edges + 3;
+        let mut leaves = Vec::new();
+        let mut off = 0usize;
+        let wi = push_leaf(&mut leaves, "lstm_wi", vec![feat, 4 * hid], &mut off);
+        let wh = push_leaf(&mut leaves, "lstm_wh", vec![hid, 4 * hid], &mut off);
+        let b = push_leaf(&mut leaves, "lstm_b", vec![4 * hid], &mut off);
+        let fc_w = push_leaf(&mut leaves, "fc_w", vec![2 * hid, fc], &mut off);
+        let fc_b = push_leaf(&mut leaves, "fc_b", vec![fc], &mut off);
+        let v_w = push_leaf(&mut leaves, "v_w", vec![fc, 1], &mut off);
+        let v_b = push_leaf(&mut leaves, "v_b", vec![1], &mut off);
+        let a_w = push_leaf(&mut leaves, "a_w", vec![fc, n_edges], &mut off);
+        let a_b = push_leaf(&mut leaves, "a_b", vec![n_edges], &mut off);
+        let params = off;
+        NativeDqn {
+            n_edges,
+            feat,
+            hid,
+            fc,
+            info: ModelInfo { name: "dqn".into(), params, bytes: params * 4, leaves },
+            wi, wh, b, fc_w, fc_b, v_w, v_b, a_w, a_b,
+        }
+    }
+
+    /// One shared-parameter LSTM step (gate order [i, f, g, o]).
+    fn lstm_step(&self, theta: &[f32], x: &[f32], h: &mut [f32], c: &mut [f32], gates: &mut [f32]) {
+        let hid = self.hid;
+        let wi = &theta[self.wi..self.wi + self.feat * 4 * hid];
+        let wh = &theta[self.wh..self.wh + hid * 4 * hid];
+        let b = &theta[self.b..self.b + 4 * hid];
+        gates.copy_from_slice(b);
+        for (j, &xv) in x.iter().enumerate() {
+            if xv == 0.0 {
+                continue;
+            }
+            let row = &wi[j * 4 * hid..(j + 1) * 4 * hid];
+            for (g, &wv) in gates.iter_mut().zip(row) {
+                *g += xv * wv;
+            }
+        }
+        for (j, &hv) in h.iter().enumerate() {
+            if hv == 0.0 {
+                continue;
+            }
+            let row = &wh[j * 4 * hid..(j + 1) * 4 * hid];
+            for (g, &wv) in gates.iter_mut().zip(row) {
+                *g += hv * wv;
+            }
+        }
+        for u in 0..hid {
+            let i = sigmoid(gates[u]);
+            let f = sigmoid(gates[hid + u]);
+            let g = gates[2 * hid + u].tanh();
+            let o = sigmoid(gates[3 * hid + u]);
+            c[u] = f * c[u] + i * g;
+            h[u] = o * c[u].tanh();
+        }
+    }
+
+    /// Q-values for every split position of one episode: `feats` is a
+    /// row-major `(h, F)` matrix, the result a row-major `(h, M)` matrix.
+    pub fn qvalues_all(&self, theta: &[f32], feats: &[f32], h: usize) -> anyhow::Result<Vec<f32>> {
+        anyhow::ensure!(
+            theta.len() == self.info.params,
+            "dqn theta has {} params, expected {}",
+            theta.len(),
+            self.info.params
+        );
+        anyhow::ensure!(
+            feats.len() == h * self.feat,
+            "episode features have {} values, expected {}x{}",
+            feats.len(),
+            h,
+            self.feat
+        );
+        let hid = self.hid;
+        let mut gates = vec![0.0f32; 4 * hid];
+
+        // prefix hiddens: hs_f[t] encodes χ_1..χ_{t+1}
+        let mut hs_f = vec![0.0f32; h * hid];
+        {
+            let mut hh = vec![0.0f32; hid];
+            let mut cc = vec![0.0f32; hid];
+            for t in 0..h {
+                self.lstm_step(theta, &feats[t * self.feat..(t + 1) * self.feat], &mut hh, &mut cc, &mut gates);
+                hs_f[t * hid..(t + 1) * hid].copy_from_slice(&hh);
+            }
+        }
+        // suffix hiddens: hs_b[t] encodes χ_{t+1}..χ_H (same shared cell φ)
+        let mut hs_b = vec![0.0f32; h * hid];
+        {
+            let mut hh = vec![0.0f32; hid];
+            let mut cc = vec![0.0f32; hid];
+            for t in (0..h).rev() {
+                self.lstm_step(theta, &feats[t * self.feat..(t + 1) * self.feat], &mut hh, &mut cc, &mut gates);
+                hs_b[t * hid..(t + 1) * hid].copy_from_slice(&hh);
+            }
+        }
+
+        let fc_w = &theta[self.fc_w..self.fc_w + 2 * hid * self.fc];
+        let fc_b = &theta[self.fc_b..self.fc_b + self.fc];
+        let v_w = &theta[self.v_w..self.v_w + self.fc];
+        let v_b = theta[self.v_b];
+        let a_w = &theta[self.a_w..self.a_w + self.fc * self.n_edges];
+        let a_b = &theta[self.a_b..self.a_b + self.n_edges];
+
+        let m = self.n_edges;
+        let mut q = vec![0.0f32; h * m];
+        let mut trunk = vec![0.0f32; self.fc];
+        for t in 0..h {
+            // trunk = relu([h_f ; h_b] @ fc_w + fc_b)
+            trunk.copy_from_slice(fc_b);
+            for (j, &hv) in hs_f[t * hid..(t + 1) * hid].iter().enumerate() {
+                let row = &fc_w[j * self.fc..(j + 1) * self.fc];
+                for (tv, &wv) in trunk.iter_mut().zip(row) {
+                    *tv += hv * wv;
+                }
+            }
+            for (j, &hv) in hs_b[t * hid..(t + 1) * hid].iter().enumerate() {
+                let row = &fc_w[(hid + j) * self.fc..(hid + j + 1) * self.fc];
+                for (tv, &wv) in trunk.iter_mut().zip(row) {
+                    *tv += hv * wv;
+                }
+            }
+            for tv in trunk.iter_mut() {
+                if *tv < 0.0 {
+                    *tv = 0.0;
+                }
+            }
+            // dueling combination (eq. 20)
+            let mut v = v_b;
+            for (tv, &wv) in trunk.iter().zip(v_w) {
+                v += tv * wv;
+            }
+            let qrow = &mut q[t * m..(t + 1) * m];
+            qrow.copy_from_slice(a_b);
+            for (j, &tv) in trunk.iter().enumerate() {
+                let row = &a_w[j * m..(j + 1) * m];
+                for (qv, &wv) in qrow.iter_mut().zip(row) {
+                    *qv += tv * wv;
+                }
+            }
+            let a_mean: f32 = qrow.iter().sum::<f32>() / m as f32;
+            for qv in qrow.iter_mut() {
+                *qv = v + *qv - a_mean;
+            }
+        }
+        Ok(q)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{init_params, Init};
+    use crate::util::Rng;
+
+    #[test]
+    fn param_count_matches_python_layout() {
+        // hid=32, fc=32, M=5, F=8 per aot.py defaults
+        let d = NativeDqn::new(5, 32, 32);
+        let expect = 8 * 128 + 32 * 128 + 128 + 64 * 32 + 32 + 32 + 1 + 32 * 5 + 5;
+        assert_eq!(d.info.params, expect);
+    }
+
+    #[test]
+    fn q_shape_finite_and_deterministic() {
+        let d = NativeDqn::new(5, 16, 16);
+        let theta = init_params(&d.info, Init::GlorotUniform, &mut Rng::new(1));
+        let mut rng = Rng::new(2);
+        let h = 12;
+        let feats: Vec<f32> = (0..h * d.feat).map(|_| rng.f32()).collect();
+        let q1 = d.qvalues_all(&theta, &feats, h).unwrap();
+        let q2 = d.qvalues_all(&theta, &feats, h).unwrap();
+        assert_eq!(q1.len(), h * 5);
+        assert!(q1.iter().all(|v| v.is_finite()));
+        assert_eq!(q1, q2);
+    }
+
+    #[test]
+    fn q_depends_on_position_and_features() {
+        let d = NativeDqn::new(5, 16, 16);
+        let theta = init_params(&d.info, Init::GlorotUniform, &mut Rng::new(3));
+        let mut rng = Rng::new(4);
+        let h = 8;
+        let feats: Vec<f32> = (0..h * d.feat).map(|_| rng.f32()).collect();
+        let q = d.qvalues_all(&theta, &feats, h).unwrap();
+        // different split positions must (generically) score differently
+        assert_ne!(&q[..5], &q[5..10]);
+        let mut feats2 = feats.clone();
+        feats2[0] += 0.5;
+        let q2 = d.qvalues_all(&theta, &feats2, h).unwrap();
+        assert_ne!(q, q2);
+    }
+
+    #[test]
+    fn rejects_bad_lengths() {
+        let d = NativeDqn::new(5, 8, 8);
+        let theta = vec![0.0f32; d.info.params];
+        assert!(d.qvalues_all(&theta, &[0.0; 7], 1).is_err());
+        assert!(d.qvalues_all(&theta[1..], &[0.0; 8], 1).is_err());
+    }
+}

@@ -1,0 +1,266 @@
+//! `NativeBackend` — a pure-Rust, `Send + Sync` implementation of
+//! [`Backend`] that ports the reference kernels
+//! (`python/compile/kernels/ref.py`) and model blocks to Rust.
+//!
+//! It needs no HLO artifacts, no PJRT client and no Python toolchain, which
+//! makes it the default runtime: `hfl train` / `hfl sweep` work on a bare
+//! checkout, and because the backend is thread-safe the scenario engine
+//! fans whole experiment cells across cores (one backend shared by all
+//! rayon workers). Numerics follow the same architectures and leaf layouts
+//! as the AOT path, so checkpoints and topology `model_bits` are
+//! interchangeable; bit-exactness with XLA is not a goal.
+
+pub mod cnn;
+pub mod dqn;
+pub mod ops;
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use super::backend::{Backend, BackendStats};
+use super::manifest::{Consts, Leaf, Manifest, ModelInfo};
+use crate::data::NUM_CLASSES;
+use cnn::NativeCnn;
+use dqn::NativeDqn;
+
+/// Append one parameter leaf to a flat-vector layout, returning its offset.
+/// Shared by the CNN and DQN ports so both stay byte-identical to the
+/// Python/manifest layout.
+pub(crate) fn push_leaf(
+    leaves: &mut Vec<Leaf>,
+    name: &str,
+    shape: Vec<usize>,
+    off: &mut usize,
+) -> usize {
+    let size: usize = shape.iter().product();
+    let this = *off;
+    leaves.push(Leaf { name: name.to_string(), shape, offset: this, size });
+    *off += size;
+    this
+}
+
+/// Batch-shape constants of the native runtime, mirroring the `aot.py`
+/// defaults so native and PJRT deployments are drop-in interchangeable.
+fn native_consts(n_edges: usize, dqn_horizon: usize) -> Consts {
+    Consts {
+        db: 8,
+        l: 5,
+        b: 8,
+        eb: 250,
+        n_edges,
+        feat: n_edges + 3,
+        o: 64,
+        train_horizon: dqn_horizon,
+        // the native backend supports any horizon; these mirror the AOT
+        // list for `hfl info` parity
+        horizons: vec![10, 30, 50, 100],
+        num_classes: NUM_CLASSES,
+    }
+}
+
+pub struct NativeBackend {
+    manifest: Manifest,
+    models: BTreeMap<String, NativeCnn>,
+    dqn: NativeDqn,
+    stats: Mutex<BackendStats>,
+}
+
+impl NativeBackend {
+    /// Default deployment: paper Table I edge count, aot.py DQN size.
+    pub fn new() -> NativeBackend {
+        Self::with_dqn(5, 32, 32)
+    }
+
+    /// Custom edge count / D³QN width (checkpoint layouts must match).
+    pub fn with_dqn(n_edges: usize, hid: usize, fc: usize) -> NativeBackend {
+        let mut models = BTreeMap::new();
+        // the two paper models (python/compile/model.py FMNIST / CIFAR)
+        models.insert("fmnist".to_string(), NativeCnn::cnn("fmnist", 1, 28, 15, 28, 220, 5));
+        models.insert("cifar".to_string(), NativeCnn::cnn("cifar", 3, 32, 15, 28, 295, 5));
+        // the IKC auxiliary mini model ξ
+        models.insert("mini".to_string(), NativeCnn::single_conv("mini", 1, 10, 16, 2));
+        // a ~700-parameter model for fast end-to-end tests and smoke runs
+        models.insert("tiny".to_string(), NativeCnn::single_conv("tiny", 1, 10, 4, 3));
+        let dqn = NativeDqn::new(n_edges, hid, fc);
+
+        let mut infos: BTreeMap<String, ModelInfo> =
+            models.iter().map(|(k, v)| (k.clone(), v.info.clone())).collect();
+        infos.insert("dqn".to_string(), dqn.info.clone());
+
+        NativeBackend {
+            manifest: Manifest {
+                consts: native_consts(n_edges, 50),
+                models: infos,
+                artifacts: BTreeMap::new(),
+            },
+            models,
+            dqn,
+            stats: Mutex::new(BackendStats::default()),
+        }
+    }
+
+    fn model_impl(&self, name: &str) -> anyhow::Result<&NativeCnn> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("native backend has no model {name:?}"))
+    }
+
+    fn record(&self, t0: Instant) {
+        let mut s = self.stats.lock().expect("stats lock poisoned");
+        s.calls += 1;
+        s.exec_secs += t0.elapsed().as_secs_f64();
+    }
+}
+
+impl Default for NativeBackend {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Backend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn local_round(
+        &self,
+        model: &str,
+        params: &[f32],
+        xs: &[f32],
+        ys: &[f32],
+        lr: f32,
+    ) -> anyhow::Result<(Vec<f32>, Vec<f32>)> {
+        let t0 = Instant::now();
+        let m = self.model_impl(model)?;
+        let p = m.info.params;
+        let (l, bsz) = (self.manifest.consts.l, self.manifest.consts.b);
+        anyhow::ensure!(
+            !params.is_empty() && params.len() % p == 0,
+            "local_round {model}: params length {} not a multiple of {p}",
+            params.len()
+        );
+        let db = params.len() / p;
+        let px = m.pixels();
+        anyhow::ensure!(
+            xs.len() == db * l * bsz * px,
+            "local_round {model}: xs length {} != {db}x{l}x{bsz}x{px}",
+            xs.len()
+        );
+        anyhow::ensure!(
+            ys.len() == db * l * bsz * NUM_CLASSES,
+            "local_round {model}: ys length {} != {db}x{l}x{bsz}x{NUM_CLASSES}",
+            ys.len()
+        );
+        let mut out = params.to_vec();
+        let mut losses = vec![0.0f32; db];
+        for slot in 0..db {
+            let sp = &mut out[slot * p..(slot + 1) * p];
+            let sx = &xs[slot * l * bsz * px..(slot + 1) * l * bsz * px];
+            let sy = &ys[slot * l * bsz * NUM_CLASSES..(slot + 1) * l * bsz * NUM_CLASSES];
+            losses[slot] = m.local_round(sp, sx, sy, l, bsz, lr);
+        }
+        self.record(t0);
+        Ok((out, losses))
+    }
+
+    fn forward(
+        &self,
+        model: &str,
+        params: &[f32],
+        x: &[f32],
+        batch: usize,
+    ) -> anyhow::Result<Vec<f32>> {
+        let t0 = Instant::now();
+        let m = self.model_impl(model)?;
+        anyhow::ensure!(
+            params.len() == m.info.params,
+            "forward {model}: {} params, expected {}",
+            params.len(),
+            m.info.params
+        );
+        anyhow::ensure!(
+            x.len() == batch * m.pixels(),
+            "forward {model}: x length {} != {batch}x{}",
+            x.len(),
+            m.pixels()
+        );
+        let out = m.forward(params, x, batch);
+        self.record(t0);
+        Ok(out)
+    }
+
+    fn dqn_q_all(&self, theta: &[f32], feats: &[f32], h: usize) -> anyhow::Result<Vec<f32>> {
+        let t0 = Instant::now();
+        let q = self.dqn.qvalues_all(theta, feats, h)?;
+        self.record(t0);
+        Ok(q)
+    }
+
+    fn pick_horizon(&self, h: usize) -> anyhow::Result<usize> {
+        anyhow::ensure!(h > 0, "empty episode");
+        Ok(h)
+    }
+
+    fn supports_partial_batch(&self) -> bool {
+        true
+    }
+
+    fn stats(&self) -> BackendStats {
+        *self.stats.lock().expect("stats lock poisoned")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn is_send_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<NativeBackend>();
+    }
+
+    #[test]
+    fn manifest_lists_all_models() {
+        let b = NativeBackend::new();
+        for name in ["fmnist", "cifar", "mini", "tiny", "dqn"] {
+            assert!(b.manifest().models.contains_key(name), "{name} missing");
+        }
+        // model sizes match the paper targets (448 KB / ~865 KB)
+        let f = b.manifest().model("fmnist").unwrap();
+        assert_eq!(f.bytes, 4 * (375 + 15 + 10500 + 28 + 98560 + 220 + 2200 + 10));
+    }
+
+    #[test]
+    fn local_round_moves_params_and_counts_calls() {
+        let b = NativeBackend::new();
+        let m = b.manifest().model("tiny").unwrap().clone();
+        let c = b.manifest().consts.clone();
+        let p = m.params;
+        let params = vec![0.01f32; 2 * p];
+        let geom = crate::runtime::backend::model_geometry("tiny").unwrap();
+        let px = geom.0 * geom.1 * geom.1;
+        let xs = vec![0.1f32; 2 * c.l * c.b * px];
+        let mut ys = vec![0.0f32; 2 * c.l * c.b * NUM_CLASSES];
+        for s in 0..2 * c.l * c.b {
+            ys[s * NUM_CLASSES] = 1.0;
+        }
+        let (out, losses) = b.local_round("tiny", &params, &xs, &ys, 0.1).unwrap();
+        assert_eq!(out.len(), 2 * p);
+        assert_eq!(losses.len(), 2);
+        assert!(losses.iter().all(|l| l.is_finite() && *l > 0.0));
+        assert_eq!(b.stats().calls, 1);
+    }
+
+    #[test]
+    fn rejects_unknown_model() {
+        let b = NativeBackend::new();
+        assert!(b.forward("nope", &[], &[], 0).is_err());
+    }
+}

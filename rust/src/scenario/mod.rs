@@ -1,0 +1,29 @@
+//! The scenario engine — declarative experiment grids and a parallel sweep
+//! runner, decoupled from any particular model runtime.
+//!
+//! The paper's headline results are sweeps over scheduler × assigner ×
+//! scheduling-ratio combinations (Figs. 3–7). Edge association and
+//! cost-model evaluation are cheap analytical computations that must not be
+//! gated on the learning runtime (HFEL, arXiv:2002.11343; Kaur & Jadhav,
+//! arXiv:2308.13157), so this module splits them out:
+//!
+//! * [`spec::ScenarioSpec`] — a declarative, TOML-loadable grid of
+//!   (scheduler, assigner, H, seed) cells;
+//! * [`sweep`] — runs every cell, serially or rayon-parallel, with
+//!   per-cell RNG streams so results are independent of thread count;
+//! * [`presets`] — the paper figures expressed as specs, plus the default
+//!   `hfl sweep` grid.
+//!
+//! Cost-mode sweeps never touch a [`crate::runtime::Backend`] unless the
+//! D³QN assigner is in the grid; train-mode sweeps run full HFL training
+//! through any backend (in parallel when the backend is `Sync`, i.e. the
+//! native one).
+
+pub mod presets;
+pub mod spec;
+pub mod sweep;
+
+pub use spec::{ScenarioSpec, SweepCell, SweepMode};
+pub use sweep::{
+    oracle_clusters, run_cell, run_sweep, run_sweep_serial, CellResult, SweepResult, SweepRow,
+};

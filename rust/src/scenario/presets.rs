@@ -1,0 +1,142 @@
+//! Built-in scenario specs: the paper figures re-expressed as declarative
+//! grids, plus the default `hfl sweep` cost grid.
+
+use crate::config::Config;
+use crate::experiments::{AssignKind, SchedKind};
+
+use super::spec::{ScenarioSpec, SweepMode};
+
+/// Figures 3/4: scheduler comparison curves (IKC/VKC/FedAvg × H), full HFL
+/// training with fixed round-robin assignment so only scheduling varies.
+pub fn fig_sched(cfg: &Config, dataset: &str) -> ScenarioSpec {
+    ScenarioSpec {
+        name: format!("fig_sched_{dataset}"),
+        mode: SweepMode::Train,
+        dataset: dataset.to_string(),
+        schedulers: vec![SchedKind::Ikc, SchedKind::Vkc, SchedKind::FedAvg],
+        assigners: vec![AssignKind::RoundRobin],
+        h_values: cfg.h_values.clone(),
+        seeds: cfg.seeds,
+        iters: cfg.max_iters,
+        seed: cfg.seed,
+        // the paper's pipeline: clusters come from Algorithm 2, not oracle
+        oracle_clusters: false,
+        k_clusters: cfg.k_clusters,
+        lr: cfg.lr,
+        target_acc: 1.0, // full curves: no early stop
+        test_size: cfg.test_size,
+        frac_major: cfg.frac_major,
+        drl_checkpoint: None,
+        system: cfg.system.clone(),
+    }
+}
+
+/// Figure 6: assignment-strategy comparison over random deployments of
+/// exactly H devices (everyone scheduled), cost model only.
+pub fn fig6(cfg: &Config, h: usize) -> ScenarioSpec {
+    let mut system = cfg.system.clone();
+    system.n_devices = h;
+    ScenarioSpec {
+        name: "fig6_assignment".into(),
+        mode: SweepMode::Cost,
+        schedulers: vec![SchedKind::FedAvg], // H = N ⇒ schedules everyone
+        assigners: vec![
+            AssignKind::Drl(None),
+            AssignKind::Hfel(100),
+            AssignKind::Hfel(300),
+            AssignKind::Geo,
+        ],
+        h_values: vec![h],
+        seeds: cfg.assign_eval_iters, // one random deployment per seed
+        iters: 1,
+        seed: cfg.seed ^ 0xF160,
+        k_clusters: cfg.k_clusters,
+        frac_major: cfg.frac_major,
+        system,
+        ..ScenarioSpec::default()
+    }
+}
+
+/// Figure 7: the full proposed framework (IKC + D³QN) for varying H.
+pub fn fig7(cfg: &Config, dataset: &str) -> ScenarioSpec {
+    ScenarioSpec {
+        name: format!("fig7_{dataset}"),
+        mode: SweepMode::Train,
+        dataset: dataset.to_string(),
+        schedulers: vec![SchedKind::Ikc],
+        assigners: vec![AssignKind::Drl(None)],
+        h_values: cfg.h_values.clone(),
+        seeds: cfg.seeds,
+        iters: cfg.max_iters,
+        seed: cfg.seed,
+        oracle_clusters: false,
+        k_clusters: cfg.k_clusters,
+        lr: cfg.lr,
+        target_acc: cfg.target_acc(dataset),
+        test_size: cfg.test_size,
+        frac_major: cfg.frac_major,
+        drl_checkpoint: Some(crate::experiments::common::default_checkpoint(cfg)),
+        system: cfg.system.clone(),
+    }
+}
+
+/// The default `hfl sweep` grid: a fig7-style scheduler × assigner cost
+/// sweep across every H — the many-scenario workload the ROADMAP targets.
+pub fn grid(cfg: &Config) -> ScenarioSpec {
+    ScenarioSpec {
+        name: "grid".into(),
+        mode: SweepMode::Cost,
+        schedulers: vec![SchedKind::Ikc, SchedKind::Vkc, SchedKind::FedAvg],
+        assigners: vec![
+            AssignKind::Drl(None),
+            AssignKind::Geo,
+            AssignKind::RoundRobin,
+            AssignKind::Random,
+        ],
+        h_values: cfg.h_values.clone(),
+        seeds: cfg.seeds,
+        iters: 10,
+        seed: cfg.seed,
+        k_clusters: cfg.k_clusters,
+        frac_major: cfg.frac_major,
+        system: cfg.system.clone(),
+        ..ScenarioSpec::default()
+    }
+}
+
+/// Resolve a preset by name (`grid`, `fig3`, `fig4`, `fig6`, `fig7`).
+pub fn preset(name: &str, cfg: &Config) -> anyhow::Result<ScenarioSpec> {
+    match name {
+        "grid" => Ok(grid(cfg)),
+        "fig3" => Ok(fig_sched(cfg, "fmnist")),
+        "fig4" => Ok(fig_sched(cfg, "cifar")),
+        "fig6" => Ok(fig6(cfg, 50)),
+        "fig7" => Ok(fig7(cfg, cfg.datasets.first().map(String::as_str).unwrap_or("fmnist"))),
+        other => anyhow::bail!("unknown scenario preset {other:?} (grid|fig3|fig4|fig6|fig7)"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_validate() {
+        let cfg = Config::default();
+        for name in ["grid", "fig3", "fig4", "fig6", "fig7"] {
+            let s = preset(name, &cfg).unwrap();
+            s.validate().unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert!(!s.cells().is_empty(), "{name} has no cells");
+        }
+    }
+
+    #[test]
+    fn fig6_schedules_everyone() {
+        let cfg = Config::default();
+        let s = fig6(&cfg, 50);
+        assert_eq!(s.system.n_devices, 50);
+        assert_eq!(s.h_values, vec![50]);
+        assert_eq!(s.iters, 1);
+        assert_eq!(s.seeds, cfg.assign_eval_iters);
+    }
+}

@@ -1,0 +1,334 @@
+//! Declarative experiment scenarios.
+//!
+//! A [`ScenarioSpec`] names a grid of (scheduler × assigner × H × seed)
+//! cells plus the deployment parameters they share. Specs are built in
+//! code (`scenario::presets`) or loaded from TOML profiles via the same
+//! minimal parser the [`crate::config`] layer uses:
+//!
+//! ```toml
+//! name = "fig7_cost"
+//! mode = "cost"                 # cost | train
+//! schedulers = ["ikc", "fedavg"]
+//! assigners = ["d3qn", "geo", "rr"]
+//! h_values = [10, 30, 50, 100]
+//! seeds = 3
+//! iters = 20
+//! [system]
+//! n_devices = 100
+//! lambda = 1.0
+//! ```
+
+use std::path::{Path, PathBuf};
+
+use crate::config::toml::{parse, Table, Value};
+use crate::config::{apply_system, Config};
+use crate::experiments::{AssignKind, SchedKind};
+use crate::system::SystemParams;
+
+/// What each cell simulates.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SweepMode {
+    /// System + allocation + assignment only (eqs. 4–17) — no learning, no
+    /// model state; each "iteration" is one schedule→assign→allocate round.
+    Cost,
+    /// Full HFL training (Algorithms 1/2/6) through a [`crate::runtime::Backend`].
+    Train,
+}
+
+impl SweepMode {
+    pub fn parse(s: &str) -> anyhow::Result<SweepMode> {
+        match s {
+            "cost" => Ok(SweepMode::Cost),
+            "train" => Ok(SweepMode::Train),
+            _ => anyhow::bail!("unknown sweep mode {s:?} (cost|train)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SweepMode::Cost => "cost",
+            SweepMode::Train => "train",
+        }
+    }
+}
+
+/// One point of the sweep grid.
+#[derive(Clone, Debug)]
+pub struct SweepCell {
+    /// Position in deterministic grid order (also the RNG stream tag).
+    pub idx: usize,
+    pub scheduler: SchedKind,
+    pub assigner: AssignKind,
+    pub h: usize,
+    pub seed_i: usize,
+}
+
+/// A declarative scheduler × assigner × H × seed experiment grid.
+#[derive(Clone, Debug)]
+pub struct ScenarioSpec {
+    pub name: String,
+    pub mode: SweepMode,
+    /// Dataset for train mode (`fmnist`, `cifar`, `tiny`).
+    pub dataset: String,
+    pub schedulers: Vec<SchedKind>,
+    pub assigners: Vec<AssignKind>,
+    pub h_values: Vec<usize>,
+    /// Independent repetitions per grid point.
+    pub seeds: usize,
+    /// Iterations per cell (global iterations in train mode, evaluation
+    /// rounds in cost mode).
+    pub iters: usize,
+    pub seed: u64,
+    /// Use the partition ground truth as clusters for IKC/VKC instead of
+    /// running Algorithm 2 (always true in cost mode, where there is no
+    /// model to train — equivalent to the measured ARI = 1.0 regime).
+    pub oracle_clusters: bool,
+    pub k_clusters: usize,
+    pub lr: f32,
+    pub target_acc: f64,
+    pub test_size: usize,
+    pub frac_major: f64,
+    /// D³QN checkpoint for the `d3qn` assigner (falls back to a fresh θ).
+    pub drl_checkpoint: Option<PathBuf>,
+    pub system: SystemParams,
+}
+
+impl Default for ScenarioSpec {
+    fn default() -> Self {
+        ScenarioSpec {
+            name: "sweep".into(),
+            mode: SweepMode::Cost,
+            dataset: "fmnist".into(),
+            schedulers: vec![SchedKind::Ikc, SchedKind::Vkc, SchedKind::FedAvg],
+            assigners: vec![
+                AssignKind::Drl(None),
+                AssignKind::Geo,
+                AssignKind::RoundRobin,
+                AssignKind::Random,
+            ],
+            h_values: vec![10, 30, 50, 100],
+            seeds: 2,
+            iters: 10,
+            seed: 0,
+            oracle_clusters: true,
+            k_clusters: 10,
+            lr: 0.01,
+            target_acc: 1.0,
+            test_size: 500,
+            frac_major: 0.8,
+            drl_checkpoint: None,
+            system: SystemParams::default(),
+        }
+    }
+}
+
+impl ScenarioSpec {
+    /// Parse a spec from a TOML table, starting from `Config`-aligned
+    /// defaults so CLI profiles compose with experiment profiles.
+    pub fn from_table(t: &Table, cfg: &Config) -> anyhow::Result<ScenarioSpec> {
+        let mut s = ScenarioSpec {
+            seeds: cfg.seeds,
+            seed: cfg.seed,
+            k_clusters: cfg.k_clusters,
+            lr: cfg.lr,
+            test_size: cfg.test_size,
+            frac_major: cfg.frac_major,
+            h_values: cfg.h_values.clone(),
+            system: cfg.system.clone(),
+            ..ScenarioSpec::default()
+        };
+        if let Some(v) = t.get("name").and_then(Value::as_str) {
+            s.name = v.to_string();
+        }
+        if let Some(v) = t.get("mode").and_then(Value::as_str) {
+            s.mode = SweepMode::parse(v)?;
+        }
+        if let Some(v) = t.get("dataset").and_then(Value::as_str) {
+            s.dataset = v.to_string();
+        }
+        // grid axes error on malformed entries — silently dropping one
+        // would shrink the experiment matrix without a diagnostic
+        if let Some(arr) = t.get("schedulers").and_then(Value::as_arr) {
+            s.schedulers = arr
+                .iter()
+                .map(|v| {
+                    let name = v
+                        .as_str()
+                        .ok_or_else(|| anyhow::anyhow!("schedulers entries must be strings"))?;
+                    SchedKind::parse(name)
+                })
+                .collect::<anyhow::Result<_>>()?;
+        }
+        if let Some(arr) = t.get("assigners").and_then(Value::as_arr) {
+            s.assigners = arr
+                .iter()
+                .map(|v| {
+                    let name = v
+                        .as_str()
+                        .ok_or_else(|| anyhow::anyhow!("assigners entries must be strings"))?;
+                    AssignKind::parse(name, None)
+                })
+                .collect::<anyhow::Result<_>>()?;
+        }
+        if let Some(arr) = t.get("h_values").and_then(Value::as_arr) {
+            s.h_values = arr
+                .iter()
+                .map(|v| {
+                    v.as_usize()
+                        .ok_or_else(|| anyhow::anyhow!("h_values entries must be integers"))
+                })
+                .collect::<anyhow::Result<_>>()?;
+        }
+        if let Some(v) = t.get("seeds").and_then(Value::as_usize) {
+            s.seeds = v;
+        }
+        if let Some(v) = t.get("iters").and_then(Value::as_usize) {
+            s.iters = v;
+        }
+        if let Some(v) = t.get("seed").and_then(Value::as_f64) {
+            s.seed = v as u64;
+        }
+        if let Some(v) = t.get("oracle_clusters").and_then(Value::as_bool) {
+            s.oracle_clusters = v;
+        }
+        if let Some(v) = t.get("k_clusters").and_then(Value::as_usize) {
+            s.k_clusters = v;
+        }
+        if let Some(v) = t.get("lr").and_then(Value::as_f64) {
+            s.lr = v as f32;
+        }
+        if let Some(v) = t.get("target_acc").and_then(Value::as_f64) {
+            s.target_acc = v;
+        }
+        if let Some(v) = t.get("test_size").and_then(Value::as_usize) {
+            s.test_size = v;
+        }
+        if let Some(v) = t.get("frac_major").and_then(Value::as_f64) {
+            s.frac_major = v;
+        }
+        if let Some(v) = t.get("drl_checkpoint").and_then(Value::as_str) {
+            s.drl_checkpoint = Some(PathBuf::from(v));
+        }
+        apply_system(t, &mut s.system);
+        s.validate()?;
+        Ok(s)
+    }
+
+    /// Load a spec from a TOML profile file.
+    pub fn load(path: &Path, cfg: &Config) -> anyhow::Result<ScenarioSpec> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("cannot read scenario {}: {e}", path.display()))?;
+        Self::from_table(&parse(&text)?, cfg)
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(!self.schedulers.is_empty(), "scenario has no schedulers");
+        anyhow::ensure!(!self.assigners.is_empty(), "scenario has no assigners");
+        anyhow::ensure!(!self.h_values.is_empty(), "scenario has no h_values");
+        anyhow::ensure!(self.seeds > 0 && self.iters > 0, "seeds and iters must be > 0");
+        for &h in &self.h_values {
+            anyhow::ensure!(h >= 1, "H must be at least 1");
+            anyhow::ensure!(
+                h <= self.system.n_devices,
+                "H={h} exceeds n_devices={}",
+                self.system.n_devices
+            );
+        }
+        Ok(())
+    }
+
+    /// Expand the grid in deterministic nested order (scheduler, assigner,
+    /// H, seed). The cell index both orders the CSV output and tags each
+    /// cell's independent RNG stream, so results are identical no matter
+    /// how cells are distributed across threads.
+    pub fn cells(&self) -> Vec<SweepCell> {
+        let mut out = Vec::new();
+        let mut idx = 0usize;
+        for sched in &self.schedulers {
+            for assigner in &self.assigners {
+                for &h in &self.h_values {
+                    for seed_i in 0..self.seeds {
+                        out.push(SweepCell {
+                            idx,
+                            scheduler: *sched,
+                            assigner: assigner.clone(),
+                            h,
+                            seed_i,
+                        });
+                        idx += 1;
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_size_is_product() {
+        let spec = ScenarioSpec {
+            schedulers: vec![SchedKind::Ikc, SchedKind::FedAvg],
+            assigners: vec![AssignKind::Geo, AssignKind::RoundRobin, AssignKind::Random],
+            h_values: vec![10, 50],
+            seeds: 4,
+            ..ScenarioSpec::default()
+        };
+        let cells = spec.cells();
+        assert_eq!(cells.len(), 2 * 3 * 2 * 4);
+        // indices are dense and ordered
+        for (i, c) in cells.iter().enumerate() {
+            assert_eq!(c.idx, i);
+        }
+    }
+
+    #[test]
+    fn toml_roundtrip() {
+        let cfg = Config::default();
+        let t = parse(
+            r#"
+            name = "mini_grid"
+            mode = "cost"
+            schedulers = ["fedavg", "ikc"]
+            assigners = ["geo", "rr", "hfel-100"]
+            h_values = [10, 20]
+            seeds = 3
+            iters = 7
+            oracle_clusters = true
+            [system]
+            n_devices = 40
+            lambda = 2.0
+            "#,
+        )
+        .unwrap();
+        let s = ScenarioSpec::from_table(&t, &cfg).unwrap();
+        assert_eq!(s.name, "mini_grid");
+        assert_eq!(s.mode, SweepMode::Cost);
+        assert_eq!(s.schedulers, vec![SchedKind::FedAvg, SchedKind::Ikc]);
+        assert_eq!(s.assigners.len(), 3);
+        assert_eq!(s.assigners[2], AssignKind::Hfel(100));
+        assert_eq!(s.h_values, vec![10, 20]);
+        assert_eq!(s.seeds, 3);
+        assert_eq!(s.iters, 7);
+        assert_eq!(s.system.n_devices, 40);
+        assert_eq!(s.system.lambda, 2.0);
+        assert_eq!(s.cells().len(), 2 * 3 * 2 * 3);
+    }
+
+    #[test]
+    fn rejects_oversized_h() {
+        let cfg = Config::default();
+        let t = parse("h_values = [500]").unwrap();
+        assert!(ScenarioSpec::from_table(&t, &cfg).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_mode() {
+        let cfg = Config::default();
+        let t = parse("mode = \"quantum\"").unwrap();
+        assert!(ScenarioSpec::from_table(&t, &cfg).is_err());
+    }
+}

@@ -1,0 +1,479 @@
+//! The sweep runner: execute every cell of a [`ScenarioSpec`], serially or
+//! fanned across cores with rayon.
+//!
+//! Determinism contract: every RNG stream a cell uses is a pure function
+//! of the spec and the cell's grid coordinates — the random *deployment*
+//! (topology, partition, data, init) comes from `(spec.seed, H, seed_i)`
+//! so all strategy arms are compared on identical draws, while per-arm
+//! randomness (scheduler sampling, exploration, fresh θ) comes from
+//! `(spec.seed, cell.idx)`. No mutable state is shared between cells, so a
+//! sweep's results — and the CSV bytes written from them — are identical
+//! for any thread count (`RAYON_NUM_THREADS=1` vs `-j N`). Wall-clock
+//! measurements (assignment latency, cell runtimes) are kept out of the
+//! deterministic CSVs and only surfaced in the printed summary.
+
+use std::path::Path;
+use std::time::Instant;
+
+use rayon::prelude::*;
+
+use crate::allocation::SolverOpts;
+use crate::assignment::{evaluate, Assigner};
+use crate::data::{partition, DeviceData};
+use crate::experiments::common::{
+    assigner_with_fallback, clusters_for, make_scheduler, AssignKind, SchedKind,
+};
+use crate::fl::{HflConfig, HflTrainer};
+use crate::runtime::Backend;
+use crate::scheduling::AuxModel;
+use crate::system::Topology;
+use crate::util::csv::CsvWriter;
+use crate::util::{stats, Rng};
+
+use super::spec::{ScenarioSpec, SweepCell, SweepMode};
+
+/// One simulated iteration of one cell. Train-only fields are `None` in
+/// cost mode (written as empty CSV fields).
+#[derive(Clone, Debug)]
+pub struct SweepRow {
+    pub iter: usize,
+    pub t_i: f64,
+    pub e_i: f64,
+    pub objective: f64,
+    pub accuracy: Option<f64>,
+    pub train_loss: Option<f64>,
+    pub msg_bytes: Option<f64>,
+    pub n_scheduled: usize,
+}
+
+/// The complete result of one grid cell.
+#[derive(Clone, Debug)]
+pub struct CellResult {
+    pub cell: SweepCell,
+    pub rows: Vec<SweepRow>,
+    pub converged_at: Option<usize>,
+    /// Mean wall-clock of the assignment decision (not in the CSVs).
+    pub assign_latency_mean_s: f64,
+    pub wall_secs: f64,
+}
+
+impl CellResult {
+    pub fn total_t(&self) -> f64 {
+        self.rows.iter().map(|r| r.t_i).sum()
+    }
+
+    pub fn total_e(&self) -> f64 {
+        self.rows.iter().map(|r| r.e_i).sum()
+    }
+
+    pub fn objective(&self, lambda: f64) -> f64 {
+        self.total_e() + lambda * self.total_t()
+    }
+
+    pub fn final_accuracy(&self) -> Option<f64> {
+        self.rows.last().and_then(|r| r.accuracy)
+    }
+}
+
+/// A finished sweep.
+#[derive(Debug)]
+pub struct SweepResult {
+    pub name: String,
+    pub mode: SweepMode,
+    pub lambda: f64,
+    pub cells: Vec<CellResult>,
+    /// Worker threads the parallel fan-out used (1 for serial runs).
+    pub threads: usize,
+    pub wall_secs: f64,
+}
+
+/// Per-cell RNG stream: independent of execution order and thread count.
+/// Used for the parts that may legitimately differ per grid cell
+/// (scheduler draws, assigner exploration, fresh D³QN θ).
+fn cell_seed(spec: &ScenarioSpec, cell: &SweepCell) -> u64 {
+    spec.seed ^ (cell.idx as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+}
+
+/// Deployment RNG stream: a function of `(spec.seed, H, seed_i)` ONLY —
+/// deliberately NOT of the scheduler/assigner position — so every strategy
+/// being compared runs on the *same* random topology and data partition
+/// (the paired comparison Figs. 3–7 rest on). Still execution-order- and
+/// thread-count-independent.
+fn deployment_seed(spec: &ScenarioSpec, cell: &SweepCell) -> u64 {
+    spec.seed
+        ^ (cell.h as u64 + 1).wrapping_mul(0xA076_1D64_78BD_642F)
+        ^ (cell.seed_i as u64 + 1).wrapping_mul(0xE703_7ED1_A0B4_28DB)
+}
+
+/// Clusters from the partition ground truth (devices grouped by majority
+/// class) — Algorithm 2's ARI = 1.0 fixed point, available without any
+/// model training.
+pub fn oracle_clusters(device_data: &[DeviceData]) -> Vec<Vec<usize>> {
+    let k = crate::data::NUM_CLASSES;
+    let mut clusters = vec![Vec::new(); k];
+    for d in device_data {
+        clusters[d.majority].push(d.device);
+    }
+    clusters
+}
+
+fn build_assigner<'b>(
+    kind: &AssignKind,
+    spec: &ScenarioSpec,
+    backend: Option<&'b dyn Backend>,
+    seed: u64,
+) -> anyhow::Result<Box<dyn Assigner + 'b>> {
+    if matches!(kind, AssignKind::Drl(_)) {
+        let b = backend.ok_or_else(|| {
+            anyhow::anyhow!("the d3qn assigner needs a backend (cost sweeps: pass one, or drop d3qn)")
+        })?;
+        anyhow::ensure!(
+            b.manifest().consts.n_edges == spec.system.n_edges,
+            "backend D³QN expects {} edges, scenario deploys {}",
+            b.manifest().consts.n_edges,
+            spec.system.n_edges
+        );
+    }
+    assigner_with_fallback(kind, backend, spec.drl_checkpoint.clone(), seed)
+}
+
+/// Clusters for a cell's scheduler, if it needs any.
+fn cell_clusters(
+    spec: &ScenarioSpec,
+    cell: &SweepCell,
+    backend: Option<&dyn Backend>,
+    trainer: Option<&HflTrainer>,
+    device_data: &[DeviceData],
+    seed: u64,
+) -> anyhow::Result<Option<Vec<Vec<usize>>>> {
+    let aux = match cell.scheduler {
+        SchedKind::FedAvg => return Ok(None),
+        SchedKind::Ikc => AuxModel::Mini,
+        SchedKind::Vkc => AuxModel::Full,
+    };
+    if spec.oracle_clusters || spec.mode == SweepMode::Cost {
+        return Ok(Some(oracle_clusters(device_data)));
+    }
+    let (b, t) = match (backend, trainer) {
+        (Some(b), Some(t)) => (b, t),
+        _ => anyhow::bail!("Algorithm 2 clustering needs a backend (or set oracle_clusters)"),
+    };
+    Ok(Some(clusters_for(
+        b,
+        &t.topo,
+        &t.templates,
+        &t.device_data,
+        aux,
+        spec.k_clusters,
+        seed,
+    )?))
+}
+
+/// Execute one grid cell. Pure function of `(spec, cell, backend)`.
+pub fn run_cell(
+    spec: &ScenarioSpec,
+    cell: &SweepCell,
+    backend: Option<&dyn Backend>,
+) -> anyhow::Result<CellResult> {
+    let t_start = Instant::now();
+    let dep = deployment_seed(spec, cell);
+    // per-arm stream (scheduler draws, exploration, fresh θ)
+    let mut rng = Rng::new(cell_seed(spec, cell));
+    match spec.mode {
+        SweepMode::Cost => {
+            let sys = spec.system.clone();
+            // shared across all strategy arms of the same (H, seed_i)
+            let topo = Topology::generate(&sys, &mut Rng::new(dep));
+            let samples: Vec<usize> = topo.devices.iter().map(|d| d.num_samples).collect();
+            let dd = partition(topo.devices.len(), &samples, spec.frac_major, dep ^ 0xDA7A);
+            let clusters = cell_clusters(spec, cell, backend, None, &dd, dep)?;
+            if let Some(cl) = &clusters {
+                anyhow::ensure!(
+                    cell.h % cl.len() == 0,
+                    "{}: H={} must divide into {} clusters",
+                    cell.scheduler.name(),
+                    cell.h,
+                    cl.len()
+                );
+            }
+            let mut sched = make_scheduler(
+                cell.scheduler,
+                clusters,
+                topo.devices.len(),
+                cell.h,
+                rng.next_u64(),
+            )?;
+            let mut assigner = build_assigner(&cell.assigner, spec, backend, rng.next_u64())?;
+            let opts = SolverOpts::default();
+            let mut rows = Vec::with_capacity(spec.iters);
+            let mut latencies = Vec::with_capacity(spec.iters);
+            for iter in 0..spec.iters {
+                let scheduled = sched.schedule();
+                let t0 = Instant::now();
+                let assignment = assigner.assign(&topo, &scheduled);
+                latencies.push(t0.elapsed().as_secs_f64());
+                debug_assert!(assignment.is_partition());
+                let (cost, _) = evaluate(&topo, &assignment, &opts);
+                rows.push(SweepRow {
+                    iter,
+                    t_i: cost.t,
+                    e_i: cost.e,
+                    objective: cost.objective(sys.lambda),
+                    accuracy: None,
+                    train_loss: None,
+                    msg_bytes: None,
+                    n_scheduled: scheduled.len(),
+                });
+            }
+            Ok(CellResult {
+                cell: cell.clone(),
+                rows,
+                converged_at: None,
+                assign_latency_mean_s: stats::mean(&latencies),
+                wall_secs: t_start.elapsed().as_secs_f64(),
+            })
+        }
+        SweepMode::Train => {
+            let b = backend
+                .ok_or_else(|| anyhow::anyhow!("train-mode sweeps need a backend"))?;
+            let mut sys = spec.system.clone();
+            let info = b.manifest().model(&spec.dataset)?.clone();
+            sys.model_bits = (info.bytes * 8) as f64;
+            // deployment + data + init are shared across strategy arms of
+            // the same (H, seed_i): only scheduling/assignment may differ
+            let topo = Topology::generate(&sys, &mut Rng::new(dep));
+            let hcfg = HflConfig {
+                dataset: spec.dataset.clone(),
+                h: cell.h,
+                lr: spec.lr,
+                target_acc: spec.target_acc,
+                max_iters: spec.iters,
+                test_size: spec.test_size,
+                frac_major: spec.frac_major,
+                seed: dep,
+            };
+            let mut trainer = HflTrainer::new(b, hcfg, topo)?;
+            let clusters =
+                cell_clusters(spec, cell, backend, Some(&trainer), &trainer.device_data, dep)?;
+            if let Some(cl) = &clusters {
+                anyhow::ensure!(
+                    cell.h % cl.len() == 0,
+                    "{}: H={} must divide into {} clusters",
+                    cell.scheduler.name(),
+                    cell.h,
+                    cl.len()
+                );
+            }
+            let mut sched = make_scheduler(
+                cell.scheduler,
+                clusters,
+                trainer.topo.devices.len(),
+                cell.h,
+                rng.next_u64(),
+            )?;
+            let mut assigner = build_assigner(&cell.assigner, spec, backend, rng.next_u64())?;
+            let sched_name = cell.scheduler.name();
+            let assigner_tag = cell.assigner.tag();
+            let res = trainer.run(&mut *sched, &mut *assigner, &SolverOpts::default(), |r| {
+                log::info!(
+                    "sweep {} {sched_name}×{assigner_tag} H={} seed{} it{} acc {:.3} loss {:.3}",
+                    spec.name,
+                    cell.h,
+                    cell.seed_i,
+                    r.iter,
+                    r.accuracy,
+                    r.train_loss
+                );
+            })?;
+            let lambda = spec.system.lambda;
+            let rows: Vec<SweepRow> = res
+                .records
+                .iter()
+                .map(|r| SweepRow {
+                    iter: r.iter,
+                    t_i: r.t_i,
+                    e_i: r.e_i,
+                    objective: r.e_i + lambda * r.t_i,
+                    accuracy: Some(r.accuracy),
+                    train_loss: Some(r.train_loss),
+                    msg_bytes: Some(r.msg_bytes),
+                    n_scheduled: r.n_scheduled,
+                })
+                .collect();
+            let latencies: Vec<f64> =
+                res.records.iter().map(|r| r.assign_latency_s).collect();
+            Ok(CellResult {
+                cell: cell.clone(),
+                rows,
+                converged_at: res.converged_at,
+                assign_latency_mean_s: stats::mean(&latencies),
+                wall_secs: t_start.elapsed().as_secs_f64(),
+            })
+        }
+    }
+}
+
+/// Resolve the sweep-level DRL checkpoint once up front: a missing file is
+/// warned about a single time and dropped, so d3qn cells quietly fall back
+/// to a fresh θ instead of re-warning from every parallel worker.
+fn resolve_checkpoint(spec: &ScenarioSpec) -> ScenarioSpec {
+    let mut s = spec.clone();
+    if let Some(p) = &s.drl_checkpoint {
+        if !p.exists() {
+            log::warn!(
+                "no DRL checkpoint at {} — d3qn cells use fresh untrained θ \
+                 (run `hfl drl-train` for paper-faithful results)",
+                p.display()
+            );
+            s.drl_checkpoint = None;
+        }
+    }
+    s
+}
+
+fn collect_results(
+    spec: &ScenarioSpec,
+    results: Vec<anyhow::Result<CellResult>>,
+    threads: usize,
+    t0: Instant,
+) -> anyhow::Result<SweepResult> {
+    let mut cells = Vec::with_capacity(results.len());
+    for r in results {
+        cells.push(r?);
+    }
+    Ok(SweepResult {
+        name: spec.name.clone(),
+        mode: spec.mode,
+        lambda: spec.system.lambda,
+        cells,
+        threads,
+        wall_secs: t0.elapsed().as_secs_f64(),
+    })
+}
+
+/// Run the sweep with rayon, fanning independent cells across cores.
+///
+/// `threads == 0` uses the ambient default (`RAYON_NUM_THREADS` or the
+/// core count). The backend is shared by all workers, hence `B: Sync` —
+/// which the native backend satisfies and the PJRT engine deliberately
+/// does not (use [`run_sweep_serial`] there).
+pub fn run_sweep<B: Backend + Sync>(
+    spec: &ScenarioSpec,
+    backend: Option<&B>,
+    threads: usize,
+) -> anyhow::Result<SweepResult> {
+    spec.validate()?;
+    let spec = resolve_checkpoint(spec);
+    let spec = &spec;
+    let cells = spec.cells();
+    let pool = rayon::ThreadPoolBuilder::new().num_threads(threads).build()?;
+    let effective = pool.current_num_threads().min(cells.len().max(1));
+    let t0 = Instant::now();
+    let results: Vec<anyhow::Result<CellResult>> = pool.install(|| {
+        cells
+            .par_iter()
+            .map(|cell| run_cell(spec, cell, backend.map(|b| b as &dyn Backend)))
+            .collect()
+    });
+    collect_results(spec, results, effective, t0)
+}
+
+/// Run the sweep on the current thread — works with any backend including
+/// the single-threaded PJRT engine. Produces byte-identical results to
+/// [`run_sweep`] on the same spec.
+pub fn run_sweep_serial(
+    spec: &ScenarioSpec,
+    backend: Option<&dyn Backend>,
+) -> anyhow::Result<SweepResult> {
+    spec.validate()?;
+    let spec = resolve_checkpoint(spec);
+    let t0 = Instant::now();
+    let results: Vec<anyhow::Result<CellResult>> = spec
+        .cells()
+        .iter()
+        .map(|cell| run_cell(&spec, cell, backend))
+        .collect();
+    collect_results(&spec, results, 1, t0)
+}
+
+fn opt_fmt(v: Option<f64>, prec: usize) -> String {
+    match v {
+        Some(x) => format!("{x:.prec$}"),
+        None => String::new(),
+    }
+}
+
+impl SweepResult {
+    /// Write the per-iteration and per-cell CSVs under `out_dir`. Output is
+    /// a pure function of the spec (no wall-clock columns), so serial and
+    /// parallel sweeps of the same spec produce byte-identical files.
+    pub fn write_csvs(&self, out_dir: &Path) -> anyhow::Result<(std::path::PathBuf, std::path::PathBuf)> {
+        let rows_path = out_dir.join(format!("sweep_{}.csv", self.name));
+        let summary_path = out_dir.join(format!("sweep_{}_summary.csv", self.name));
+        let mut rows_csv = CsvWriter::create(
+            &rows_path,
+            &[
+                "cell", "scheduler", "assigner", "h", "seed", "iter", "t_i", "e_i",
+                "objective", "accuracy", "train_loss", "msg_bytes", "n_scheduled",
+            ],
+        )?;
+        let mut sum_csv = CsvWriter::create(
+            &summary_path,
+            &[
+                "cell", "scheduler", "assigner", "h", "seed", "iters", "total_t",
+                "total_e", "objective", "final_acc", "converged_at",
+            ],
+        )?;
+        for c in &self.cells {
+            let sched = c.cell.scheduler.name().to_string();
+            let assigner = c.cell.assigner.tag();
+            for r in &c.rows {
+                rows_csv.row(&[
+                    c.cell.idx.to_string(),
+                    sched.clone(),
+                    assigner.clone(),
+                    c.cell.h.to_string(),
+                    c.cell.seed_i.to_string(),
+                    r.iter.to_string(),
+                    format!("{:.6}", r.t_i),
+                    format!("{:.6}", r.e_i),
+                    format!("{:.6}", r.objective),
+                    opt_fmt(r.accuracy, 4),
+                    opt_fmt(r.train_loss, 4),
+                    opt_fmt(r.msg_bytes, 0),
+                    r.n_scheduled.to_string(),
+                ])?;
+            }
+            sum_csv.row(&[
+                c.cell.idx.to_string(),
+                sched,
+                assigner,
+                c.cell.h.to_string(),
+                c.cell.seed_i.to_string(),
+                c.rows.len().to_string(),
+                format!("{:.6}", c.total_t()),
+                format!("{:.6}", c.total_e()),
+                format!("{:.6}", c.objective(self.lambda)),
+                opt_fmt(c.final_accuracy(), 4),
+                c.converged_at.map(|i| i.to_string()).unwrap_or_default(),
+            ])?;
+        }
+        rows_csv.flush()?;
+        sum_csv.flush()?;
+        Ok((rows_path, summary_path))
+    }
+
+    /// Cells grouped by (scheduler, assigner, h), preserving grid order —
+    /// the shape the figure drivers aggregate over seeds.
+    pub fn grouped(&self) -> Vec<((SchedKind, String, usize), Vec<&CellResult>)> {
+        let mut out: Vec<((SchedKind, String, usize), Vec<&CellResult>)> = Vec::new();
+        for c in &self.cells {
+            let key = (c.cell.scheduler, c.cell.assigner.tag(), c.cell.h);
+            match out.iter().position(|(k, _)| *k == key) {
+                Some(i) => out[i].1.push(c),
+                None => out.push((key, vec![c])),
+            }
+        }
+        out
+    }
+}

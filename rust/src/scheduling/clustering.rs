@@ -9,9 +9,10 @@
 //! * **VKC**: the full HFL model `w⁰` (heavy — the Table II cost columns);
 //! * **IKC**: the mini model ξ on 1×10×10 single-channel crops (~10 KB).
 //!
-//! The auxiliary training itself runs through the AOT artifacts
-//! (`local_round_<ds>` / `mini_local_round`), so this module is also the
-//! Rust↔PJRT integration point for Algorithm 2.
+//! The auxiliary training itself runs through [`Backend::local_round`]
+//! (the AOT `local_round_<ds>` / `mini_local_round` artifacts on PJRT, the
+//! pure-Rust kernels on the native backend), so this module is also the
+//! Rust↔runtime integration point for Algorithm 2.
 //!
 //! Cost accounting (Table II): all N devices train in parallel at `f_max`
 //! and upload over their geographically nearest edge with an equal B_m
@@ -23,7 +24,7 @@ use super::ari::ari;
 use super::kmeans::{clusters_from_labels, kmeans_restarts};
 use crate::data::{DeviceData, Templates, NUM_CLASSES};
 use crate::model::{init_params, Init};
-use crate::runtime::{Arg, Engine};
+use crate::runtime::Backend;
 use crate::system::Topology;
 use crate::util::Rng;
 
@@ -117,10 +118,11 @@ pub fn clustering_cost(topo: &Topology, aux_bits: f64, cycle_scale: f64) -> (f64
 }
 
 /// Run Algorithm 2: train the auxiliary model on every device (through the
-/// PJRT artifacts) and K-means the trained weights into K clusters.
+/// backend's local-round kernel) and K-means the trained weights into K
+/// clusters.
 #[allow(clippy::too_many_arguments)]
 pub fn cluster_devices(
-    engine: &Engine,
+    backend: &dyn Backend,
     topo: &Topology,
     templates: &Templates,
     device_data: &[DeviceData],
@@ -137,21 +139,16 @@ pub fn cluster_devices(
         AuxModel::Mini => 10,
         AuxModel::Full => 2,
     };
-    let consts = engine.manifest.consts.clone();
+    let consts = backend.manifest().consts.clone();
     let (db, l, bsz) = (consts.db, consts.l, consts.b);
     let spec = templates.spec();
     let n = device_data.len();
 
-    let (model_name, artifact, in_ch, img): (&str, String, usize, usize) = match aux {
-        AuxModel::Mini => ("mini", "mini_local_round".into(), 1, 10),
-        AuxModel::Full => (
-            spec.name.as_str(),
-            format!("local_round_{}", spec.name),
-            spec.channels,
-            spec.img,
-        ),
+    let (model_name, in_ch, img): (&str, usize, usize) = match aux {
+        AuxModel::Mini => ("mini", 1, 10),
+        AuxModel::Full => (spec.name.as_str(), spec.channels, spec.img),
     };
-    let info = engine.manifest.model(model_name)?.clone();
+    let info = backend.manifest().model(model_name)?.clone();
     let p = info.params;
 
     // common initialization w_aux broadcast to every device (Alg.2 L2)
@@ -166,9 +163,12 @@ pub fn cluster_devices(
     let mut ys = vec![0.0f32; db * l * bsz * NUM_CLASSES];
     let mut full_buf = vec![0.0f32; full_pixels];
 
+    let partial = backend.supports_partial_batch();
     for chunk in (0..n).collect::<Vec<_>>().chunks(db) {
-        // build the device-slot batch (pad the tail with the last device)
-        for slot in 0..db {
+        // build the device-slot batch (pad the tail with the last device
+        // on fixed-shape backends; flexible ones take a short batch)
+        let slots = if partial { chunk.len() } else { db };
+        for slot in 0..slots {
             let dev = chunk.get(slot).cloned().unwrap_or(chunk[chunk.len() - 1]);
             let dd = &device_data[dev];
             params_buf[slot * p..(slot + 1) * p].copy_from_slice(&w_aux);
@@ -199,11 +199,11 @@ pub fn cluster_devices(
                 }
             }
         }
-        let mut trained = params_buf.clone();
+        let mut trained = params_buf[..slots * p].to_vec();
         for round in 0..rounds {
             if round > 0 {
                 // fresh batches per round
-                for slot in 0..db {
+                for slot in 0..slots {
                     let dev =
                         chunk.get(slot).cloned().unwrap_or(chunk[chunk.len() - 1]);
                     let dd = &device_data[dev];
@@ -236,19 +236,14 @@ pub fn cluster_devices(
                     }
                 }
             }
-            let out = engine.run(
-                &artifact,
-                &[
-                    Arg::F32(&trained, &[db as i64, p as i64]),
-                    Arg::F32(
-                        &xs,
-                        &[db as i64, l as i64, bsz as i64, in_ch as i64, img as i64, img as i64],
-                    ),
-                    Arg::F32(&ys, &[db as i64, l as i64, bsz as i64, NUM_CLASSES as i64]),
-                    Arg::ScalarF32(lr),
-                ],
+            let (updated, _losses) = backend.local_round(
+                model_name,
+                &trained,
+                &xs[..slots * l * bsz * pixels_in],
+                &ys[..slots * l * bsz * NUM_CLASSES],
+                lr,
             )?;
-            trained = out[0].clone();
+            trained = updated;
         }
         for (slot, &dev) in chunk.iter().enumerate() {
             let _ = dev;
@@ -294,7 +289,7 @@ pub fn cluster_devices(
     let truth: Vec<usize> = device_data.iter().map(|d| d.majority).collect();
     let ari_v = ari(&km.labels, &truth);
 
-    let hfl_params = engine.manifest.model(spec.name.as_str())?.params;
+    let hfl_params = backend.manifest().model(spec.name.as_str())?.params;
     let cycle_scale = p as f64 / hfl_params as f64;
     let aux_bits = (info.bytes * 8) as f64;
     let (time_s, energy_j) = match aux {

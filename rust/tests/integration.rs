@@ -1,8 +1,11 @@
-//! Integration tests over the real AOT artifacts (requires `make artifacts`).
+//! Integration tests over the real AOT artifacts (requires `make artifacts`
+//! and a pjrt-feature build; backend-agnostic end-to-end coverage lives in
+//! `native_backend.rs`).
 //!
 //! These exercise the full L3→runtime→HLO path: local training rounds,
 //! evaluation, Algorithm 2 clustering, D³QN inference + training, and a
 //! short end-to-end HFL run.
+#![cfg(feature = "pjrt")]
 
 use std::path::Path;
 

@@ -5,6 +5,7 @@
 
 use hfl::allocation::bruteforce::solve_bruteforce;
 use hfl::allocation::{solve_edge, SolverOpts};
+use hfl::assignment::drl::DrlAssigner;
 use hfl::assignment::geo::assign_geographic;
 use hfl::assignment::hfel::Hfel;
 use hfl::assignment::random::{RandomAssign, RoundRobin};
@@ -12,7 +13,9 @@ use hfl::assignment::{evaluate, Assigner};
 use hfl::data::{partition, SynthSpec, Templates, NUM_CLASSES};
 use hfl::drl::episode::build_features;
 use hfl::model::weighted_average;
+use hfl::runtime::NativeBackend;
 use hfl::scheduling::{ari::ari, kmeans, FedAvg, Ikc, Scheduler, Vkc};
+use hfl::system::cost::{device_cost, edge_cost, DeviceAlloc};
 use hfl::system::{SystemParams, Topology};
 use hfl::util::{Json, Rng};
 
@@ -311,6 +314,121 @@ fn random_json(rng: &mut Rng, depth: usize) -> Json {
                 .map(|(k, v)| (k.as_str(), v.clone()))
                 .collect(),
         ),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Schedulers: exactly H distinct device ids, across H values and clusterings
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_every_scheduler_returns_exactly_h_distinct_ids() {
+    for seed in 0..6u64 {
+        for h in [10usize, 20, 50, 100] {
+            // balanced clusters so h divides k evenly (VKC/IKC contract)
+            let clusters: Vec<Vec<usize>> =
+                (0..10).map(|k| (0..10).map(|i| k * 10 + i).collect()).collect();
+            let mut scheds: Vec<Box<dyn Scheduler>> = vec![
+                Box::new(FedAvg::new(100, h, seed)),
+                Box::new(Vkc::new(clusters.clone(), 100, h, seed)),
+                Box::new(Ikc::new(clusters, 100, h, seed)),
+            ];
+            for s in scheds.iter_mut() {
+                for round in 0..4 {
+                    let sel = s.schedule();
+                    assert_eq!(sel.len(), h, "{} seed {seed} h {h} round {round}", s.name());
+                    let mut d = sel.clone();
+                    d.sort_unstable();
+                    d.dedup();
+                    assert_eq!(d.len(), h, "{} seed {seed}: duplicate ids", s.name());
+                    assert!(sel.iter().all(|&n| n < 100), "{}: id out of range", s.name());
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Assignment: every assigner (incl. D³QN on the native backend) partitions
+// the scheduled set across edges
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_drl_assignment_is_partition_of_scheduled_set() {
+    let backend = NativeBackend::new();
+    for seed in 0..6u64 {
+        let t = topo(seed ^ 0xD3);
+        let mut rng = Rng::new(seed ^ 0x5EED);
+        let h = 5 + rng.below(45);
+        let scheduled = rng.sample_indices(t.devices.len(), h);
+        let mut drl = DrlAssigner::fresh(&backend, seed).unwrap();
+        let a = drl.assign(&t, &scheduled);
+        assert!(a.is_partition(), "seed {seed}");
+        assert_eq!(a.groups.len(), t.edges.len(), "one group per edge");
+        let mut all: Vec<usize> = a.groups.iter().flatten().cloned().collect();
+        all.sort_unstable();
+        let mut want = scheduled.clone();
+        want.sort_unstable();
+        assert_eq!(all, want, "seed {seed}: devices lost or invented");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Cost model (eqs. 4–12): non-negativity and bandwidth monotonicity
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_device_cost_nonnegative_and_monotone_in_bandwidth() {
+    for seed in 0..10u64 {
+        let t = topo(seed ^ 0xC057);
+        let mut rng = Rng::new(seed);
+        let n = rng.below(t.devices.len());
+        let m = rng.below(t.edges.len());
+        let freq = 0.5e9 + rng.f64() * 1.5e9;
+        let mut prev_t_com = f64::INFINITY;
+        for bw in [1e4f64, 1e5, 5e5, 2e6] {
+            let c = device_cost(&t, n, m, DeviceAlloc { bandwidth_hz: bw, freq_hz: freq });
+            for v in [c.t_cmp, c.t_com, c.e_cmp, c.e_com] {
+                assert!(v >= 0.0 && v.is_finite(), "seed {seed}: negative/NaN cost {c:?}");
+            }
+            assert!(c.t_total() >= c.t_cmp && c.e_total() >= c.e_cmp);
+            // rate (eq. 6) grows with bandwidth ⇒ upload delay shrinks
+            assert!(
+                c.t_com <= prev_t_com * (1.0 + 1e-12),
+                "seed {seed}: t_com not monotone in bandwidth ({prev_t_com} -> {})",
+                c.t_com
+            );
+            prev_t_com = c.t_com;
+        }
+    }
+}
+
+#[test]
+fn prop_edge_cost_nonnegative_and_monotone_in_bandwidth() {
+    for seed in 0..10u64 {
+        let t = topo(seed ^ 0xED6E);
+        let mut rng = Rng::new(seed);
+        let m = rng.below(t.edges.len());
+        let devices = rng.sample_indices(t.devices.len(), 1 + rng.below(8));
+        let freq = 1e9;
+        let mut prev_t = f64::INFINITY;
+        for bw in [2e4f64, 1e5, 1e6] {
+            let group: Vec<(usize, DeviceAlloc)> = devices
+                .iter()
+                .map(|&n| (n, DeviceAlloc { bandwidth_hz: bw, freq_hz: freq }))
+                .collect();
+            let ec = edge_cost(&t, m, &group);
+            assert!(ec.t > 0.0 && ec.t.is_finite(), "seed {seed}: edge T {ec:?}");
+            assert!(ec.e > 0.0 && ec.e.is_finite(), "seed {seed}: edge E {ec:?}");
+            // more uplink bandwidth per device can only shrink the
+            // straggler-bound edge delay (eq. 9)
+            assert!(
+                ec.t <= prev_t * (1.0 + 1e-12),
+                "seed {seed}: edge delay not monotone ({prev_t} -> {})",
+                ec.t
+            );
+            prev_t = ec.t;
+        }
     }
 }
 

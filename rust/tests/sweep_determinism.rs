@@ -1,0 +1,163 @@
+//! Determinism contract of the scenario engine: the same spec + seed must
+//! produce byte-identical CSV output whether cells run serially
+//! (`RAYON_NUM_THREADS=1` equivalent) or fanned across threads — per-cell
+//! child RNG streams, no shared-state ordering dependence.
+
+use hfl::config::Config;
+use hfl::experiments::{AssignKind, SchedKind};
+use hfl::runtime::NativeBackend;
+use hfl::scenario::{run_sweep, run_sweep_serial, ScenarioSpec, SweepMode};
+
+fn small_cost_spec(name: &str) -> ScenarioSpec {
+    let mut system = hfl::system::SystemParams::default();
+    system.n_devices = 30;
+    ScenarioSpec {
+        name: name.into(),
+        mode: SweepMode::Cost,
+        schedulers: vec![SchedKind::FedAvg, SchedKind::Ikc],
+        assigners: vec![
+            AssignKind::Drl(None),
+            AssignKind::Geo,
+            AssignKind::RoundRobin,
+            AssignKind::Random,
+        ],
+        h_values: vec![10, 20],
+        seeds: 2,
+        iters: 2,
+        seed: 42,
+        system,
+        ..ScenarioSpec::default()
+    }
+}
+
+fn read(dir: &std::path::Path, name: &str) -> String {
+    std::fs::read_to_string(dir.join(name))
+        .unwrap_or_else(|e| panic!("missing {name}: {e}"))
+}
+
+#[test]
+fn parallel_and_serial_sweeps_write_identical_csvs() {
+    let backend = NativeBackend::new();
+    let tmp = std::env::temp_dir().join(format!("hfl_sweep_det_{}", std::process::id()));
+    let dir_serial = tmp.join("serial");
+    let dir_par = tmp.join("parallel");
+    std::fs::create_dir_all(&dir_serial).unwrap();
+    std::fs::create_dir_all(&dir_par).unwrap();
+
+    let spec = small_cost_spec("det");
+    // serial: explicit 1-thread pool (what RAYON_NUM_THREADS=1 yields)
+    let r1 = run_sweep(&spec, Some(&backend), 1).unwrap();
+    r1.write_csvs(&dir_serial).unwrap();
+    // parallel: more threads than cells exist on most CI machines
+    let r2 = run_sweep(&spec, Some(&backend), 4).unwrap();
+    r2.write_csvs(&dir_par).unwrap();
+
+    assert_eq!(r1.cells.len(), spec.cells().len());
+    assert_eq!(r1.cells.len(), r2.cells.len());
+    for name in ["sweep_det.csv", "sweep_det_summary.csv"] {
+        let a = read(&dir_serial, name);
+        let b = read(&dir_par, name);
+        assert!(!a.is_empty());
+        assert_eq!(a, b, "{name} differs between serial and parallel runs");
+    }
+    // rows exist for every cell × iteration
+    let rows = read(&dir_serial, "sweep_det.csv");
+    assert_eq!(rows.lines().count(), 1 + r1.cells.len() * spec.iters);
+    std::fs::remove_dir_all(&tmp).ok();
+}
+
+#[test]
+fn dyn_serial_runner_matches_generic_parallel_runner() {
+    let backend = NativeBackend::new();
+    let spec = small_cost_spec("dyn");
+    let a = run_sweep_serial(&spec, Some(&backend)).unwrap();
+    let b = run_sweep(&spec, Some(&backend), 3).unwrap();
+    assert_eq!(a.cells.len(), b.cells.len());
+    for (ca, cb) in a.cells.iter().zip(&b.cells) {
+        assert_eq!(ca.cell.idx, cb.cell.idx);
+        for (ra, rb) in ca.rows.iter().zip(&cb.rows) {
+            // bit-identical floats, not approximately equal
+            assert_eq!(ra.t_i.to_bits(), rb.t_i.to_bits(), "cell {}", ca.cell.idx);
+            assert_eq!(ra.e_i.to_bits(), rb.e_i.to_bits(), "cell {}", ca.cell.idx);
+            assert_eq!(ra.objective.to_bits(), rb.objective.to_bits());
+        }
+    }
+}
+
+#[test]
+fn strategy_arms_share_the_same_deployments() {
+    // The deployment (topology/partition) stream depends only on
+    // (spec.seed, H, seed_i) — not on which other strategies are in the
+    // grid — so paired comparisons stay paired. With H = n_devices the
+    // FedAvg schedule is the full (deterministic) set and `geo` assignment
+    // is a pure function of the topology, so the geo cells must be
+    // identical whether or not other assigners run alongside.
+    let mut small = small_cost_spec("pair_a");
+    small.schedulers = vec![SchedKind::FedAvg];
+    small.h_values = vec![small.system.n_devices];
+    small.assigners = vec![AssignKind::Geo];
+    let mut wide = small.clone();
+    wide.name = "pair_b".into();
+    wide.assigners = vec![AssignKind::Random, AssignKind::Geo, AssignKind::RoundRobin];
+
+    let a = run_sweep(&small, None::<&NativeBackend>, 2).unwrap();
+    let b = run_sweep(&wide, None::<&NativeBackend>, 2).unwrap();
+    let geo_a: Vec<_> = a.cells.iter().collect();
+    let geo_b: Vec<_> = b
+        .cells
+        .iter()
+        .filter(|c| c.cell.assigner == AssignKind::Geo)
+        .collect();
+    assert_eq!(geo_a.len(), geo_b.len());
+    for (ca, cb) in geo_a.iter().zip(&geo_b) {
+        assert_eq!(ca.cell.seed_i, cb.cell.seed_i);
+        for (ra, rb) in ca.rows.iter().zip(&cb.rows) {
+            assert_eq!(ra.t_i.to_bits(), rb.t_i.to_bits(), "deployments diverged");
+            assert_eq!(ra.e_i.to_bits(), rb.e_i.to_bits());
+        }
+    }
+}
+
+#[test]
+fn backendless_cost_sweep_runs_without_d3qn() {
+    // a spec without the d3qn assigner needs no backend at all
+    let mut spec = small_cost_spec("nobackend");
+    spec.assigners = vec![AssignKind::Geo, AssignKind::RoundRobin, AssignKind::Random];
+    let r = run_sweep(&spec, None::<&NativeBackend>, 2).unwrap();
+    assert_eq!(r.cells.len(), spec.cells().len());
+    assert!(r.cells.iter().all(|c| c.rows.len() == spec.iters));
+}
+
+#[test]
+fn d3qn_without_backend_is_a_clean_error() {
+    let spec = small_cost_spec("err");
+    let err = run_sweep(&spec, None::<&NativeBackend>, 1).unwrap_err();
+    assert!(err.to_string().contains("backend"), "unexpected error: {err}");
+}
+
+#[test]
+fn toml_spec_round_trips_through_the_runner() {
+    let tmp = std::env::temp_dir().join(format!("hfl_sweep_toml_{}", std::process::id()));
+    std::fs::create_dir_all(&tmp).unwrap();
+    let path = tmp.join("spec.toml");
+    std::fs::write(
+        &path,
+        r#"
+        name = "toml_grid"
+        mode = "cost"
+        schedulers = ["fedavg"]
+        assigners = ["geo", "rr"]
+        h_values = [10]
+        seeds = 2
+        iters = 3
+        seed = 7
+        [system]
+        n_devices = 20
+        "#,
+    )
+    .unwrap();
+    let spec = ScenarioSpec::load(&path, &Config::default()).unwrap();
+    let r = run_sweep(&spec, None::<&NativeBackend>, 2).unwrap();
+    assert_eq!(r.cells.len(), 4); // 1 scheduler × 2 assigners × 1 H × 2 seeds
+    std::fs::remove_dir_all(&tmp).ok();
+}

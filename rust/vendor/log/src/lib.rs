@@ -1,0 +1,199 @@
+//! Minimal, API-compatible subset of the `log` facade for offline builds.
+//!
+//! Supports the pieces this workspace uses: the five level macros, the
+//! [`Log`] trait, [`set_logger`] / [`set_max_level`], and level/filter
+//! comparisons. Records carry level + preformatted args only (no targets,
+//! no module paths, no key-values).
+
+use std::fmt;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+/// Verbosity of a single log record.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 1,
+    Warn,
+    Info,
+    Debug,
+    Trace,
+}
+
+impl fmt::Display for Level {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN",
+            Level::Info => "INFO",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        };
+        // honor width/alignment, e.g. "{:5}"
+        f.pad(s)
+    }
+}
+
+/// Maximum-verbosity filter installed via [`set_max_level`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum LevelFilter {
+    Off = 0,
+    Error,
+    Warn,
+    Info,
+    Debug,
+    Trace,
+}
+
+impl PartialEq<LevelFilter> for Level {
+    fn eq(&self, other: &LevelFilter) -> bool {
+        *self as usize == *other as usize
+    }
+}
+
+impl PartialOrd<LevelFilter> for Level {
+    fn partial_cmp(&self, other: &LevelFilter) -> Option<std::cmp::Ordering> {
+        (*self as usize).partial_cmp(&(*other as usize))
+    }
+}
+
+impl PartialEq<Level> for LevelFilter {
+    fn eq(&self, other: &Level) -> bool {
+        *self as usize == *other as usize
+    }
+}
+
+impl PartialOrd<Level> for LevelFilter {
+    fn partial_cmp(&self, other: &Level) -> Option<std::cmp::Ordering> {
+        (*self as usize).partial_cmp(&(*other as usize))
+    }
+}
+
+/// Metadata of a record (level only in this subset).
+#[derive(Clone, Copy, Debug)]
+pub struct Metadata {
+    level: Level,
+}
+
+impl Metadata {
+    pub fn level(&self) -> Level {
+        self.level
+    }
+}
+
+/// One log record: level + preformatted message arguments.
+pub struct Record<'a> {
+    metadata: Metadata,
+    args: fmt::Arguments<'a>,
+}
+
+impl<'a> Record<'a> {
+    pub fn level(&self) -> Level {
+        self.metadata.level
+    }
+
+    pub fn metadata(&self) -> &Metadata {
+        &self.metadata
+    }
+
+    pub fn args(&self) -> &fmt::Arguments<'a> {
+        &self.args
+    }
+}
+
+/// Backend trait implemented by the application's logger.
+pub trait Log: Sync + Send {
+    fn enabled(&self, metadata: &Metadata) -> bool;
+    fn log(&self, record: &Record);
+    fn flush(&self);
+}
+
+#[derive(Debug)]
+pub struct SetLoggerError(());
+
+impl fmt::Display for SetLoggerError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str("a logger is already installed")
+    }
+}
+
+impl std::error::Error for SetLoggerError {}
+
+static LOGGER: OnceLock<&'static dyn Log> = OnceLock::new();
+static MAX_LEVEL: AtomicUsize = AtomicUsize::new(LevelFilter::Off as usize);
+
+/// Install the global logger (first call wins).
+pub fn set_logger(logger: &'static dyn Log) -> Result<(), SetLoggerError> {
+    LOGGER.set(logger).map_err(|_| SetLoggerError(()))
+}
+
+pub fn set_max_level(filter: LevelFilter) {
+    MAX_LEVEL.store(filter as usize, Ordering::Relaxed);
+}
+
+pub fn max_level() -> LevelFilter {
+    match MAX_LEVEL.load(Ordering::Relaxed) {
+        1 => LevelFilter::Error,
+        2 => LevelFilter::Warn,
+        3 => LevelFilter::Info,
+        4 => LevelFilter::Debug,
+        5 => LevelFilter::Trace,
+        _ => LevelFilter::Off,
+    }
+}
+
+/// Macro plumbing — not part of the public API.
+#[doc(hidden)]
+pub fn __log(level: Level, args: fmt::Arguments) {
+    if (level as usize) <= MAX_LEVEL.load(Ordering::Relaxed) {
+        if let Some(logger) = LOGGER.get() {
+            let metadata = Metadata { level };
+            if logger.enabled(&metadata) {
+                logger.log(&Record { metadata, args });
+            }
+        }
+    }
+}
+
+#[macro_export]
+macro_rules! error {
+    ($($arg:tt)+) => ($crate::__log($crate::Level::Error, ::std::format_args!($($arg)+)))
+}
+
+#[macro_export]
+macro_rules! warn {
+    ($($arg:tt)+) => ($crate::__log($crate::Level::Warn, ::std::format_args!($($arg)+)))
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)+) => ($crate::__log($crate::Level::Info, ::std::format_args!($($arg)+)))
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)+) => ($crate::__log($crate::Level::Debug, ::std::format_args!($($arg)+)))
+}
+
+#[macro_export]
+macro_rules! trace {
+    ($($arg:tt)+) => ($crate::__log($crate::Level::Trace, ::std::format_args!($($arg)+)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_filter_comparisons() {
+        assert!(Level::Info <= LevelFilter::Info);
+        assert!(Level::Debug > LevelFilter::Info);
+        assert!(Level::Error <= LevelFilter::Warn);
+        assert!(!(Level::Info <= LevelFilter::Off));
+    }
+
+    #[test]
+    fn display_pads() {
+        assert_eq!(format!("{:5}", Level::Warn), "WARN ");
+        assert_eq!(format!("{}", Level::Error), "ERROR");
+    }
+}

@@ -1,0 +1,255 @@
+//! Minimal, API-compatible subset of `rayon` for offline builds.
+//!
+//! Implements the slice-parallel surface this workspace uses —
+//! `par_iter().map(f).collect::<Vec<_>>()`, [`ThreadPoolBuilder`] /
+//! [`ThreadPool::install`] and [`current_num_threads`] — on top of
+//! `std::thread::scope` with a shared atomic work queue. Results are
+//! returned in input order regardless of which worker produced them, so a
+//! parallel map is bit-identical to its serial equivalent. Thread count
+//! comes from `ThreadPoolBuilder::num_threads`, else the `RAYON_NUM_THREADS`
+//! environment variable, else `available_parallelism()`.
+
+use std::cell::Cell;
+use std::fmt;
+use std::marker::PhantomData;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+pub mod prelude {
+    pub use crate::IntoParallelRefIterator;
+}
+
+thread_local! {
+    /// Thread-count override installed by `ThreadPool::install` (0 = unset).
+    static POOL_THREADS: Cell<usize> = const { Cell::new(0) };
+}
+
+/// Number of worker threads a parallel operation started here would use.
+pub fn current_num_threads() -> usize {
+    let installed = POOL_THREADS.with(|c| c.get());
+    if installed > 0 {
+        return installed;
+    }
+    if let Ok(v) = std::env::var("RAYON_NUM_THREADS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            if n > 0 {
+                return n;
+            }
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+#[derive(Debug)]
+pub struct ThreadPoolBuildError(());
+
+impl fmt::Display for ThreadPoolBuildError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str("could not build thread pool")
+    }
+}
+
+impl std::error::Error for ThreadPoolBuildError {}
+
+/// Builder mirroring `rayon::ThreadPoolBuilder` (thread count only).
+#[derive(Default)]
+pub struct ThreadPoolBuilder {
+    num_threads: usize,
+}
+
+impl ThreadPoolBuilder {
+    pub fn new() -> Self {
+        ThreadPoolBuilder { num_threads: 0 }
+    }
+
+    /// 0 means "use the default" (env var / core count), like real rayon.
+    pub fn num_threads(mut self, n: usize) -> Self {
+        self.num_threads = n;
+        self
+    }
+
+    pub fn build(self) -> Result<ThreadPool, ThreadPoolBuildError> {
+        Ok(ThreadPool { num_threads: self.num_threads })
+    }
+}
+
+/// A logical pool: workers are spawned per operation (scoped threads), the
+/// pool only pins the thread count for operations run under `install`.
+pub struct ThreadPool {
+    num_threads: usize,
+}
+
+impl ThreadPool {
+    pub fn current_num_threads(&self) -> usize {
+        if self.num_threads > 0 {
+            self.num_threads
+        } else {
+            current_num_threads()
+        }
+    }
+
+    /// Run `op` with this pool's thread count as the ambient default.
+    pub fn install<R>(&self, op: impl FnOnce() -> R) -> R {
+        let prev = POOL_THREADS.with(|c| c.replace(self.current_num_threads()));
+        let out = op();
+        POOL_THREADS.with(|c| c.set(prev));
+        out
+    }
+}
+
+/// Order-preserving parallel map over a slice.
+fn par_map<'d, T, R, F>(items: &'d [T], f: &F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&'d T) -> R + Sync,
+{
+    let n = items.len();
+    let threads = current_num_threads().max(1).min(n.max(1));
+    if threads <= 1 || n <= 1 {
+        return items.iter().map(f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let mut parts: Vec<Vec<(usize, R)>> = Vec::with_capacity(threads);
+    std::thread::scope(|s| {
+        let mut handles = Vec::with_capacity(threads);
+        for _ in 0..threads {
+            let next = &next;
+            handles.push(s.spawn(move || {
+                let mut local: Vec<(usize, R)> = Vec::new();
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    local.push((i, f(&items[i])));
+                }
+                local
+            }));
+        }
+        for h in handles {
+            parts.push(h.join().expect("parallel map worker panicked"));
+        }
+    });
+    let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    for part in parts {
+        for (i, r) in part {
+            slots[i] = Some(r);
+        }
+    }
+    slots.into_iter().map(|o| o.expect("work item lost")).collect()
+}
+
+/// `collect()` target for [`ParMap`].
+pub trait FromParallelIterator<A> {
+    fn from_par(items: Vec<A>) -> Self;
+}
+
+impl<A> FromParallelIterator<A> for Vec<A> {
+    fn from_par(items: Vec<A>) -> Self {
+        items
+    }
+}
+
+/// Entry point: `.par_iter()` on slices and vectors.
+pub trait IntoParallelRefIterator<'data> {
+    type Item: 'data;
+    fn par_iter(&'data self) -> ParIter<'data, Self::Item>;
+}
+
+impl<'data, T: Sync + 'data> IntoParallelRefIterator<'data> for [T] {
+    type Item = T;
+    fn par_iter(&'data self) -> ParIter<'data, T> {
+        ParIter { items: self }
+    }
+}
+
+impl<'data, T: Sync + 'data> IntoParallelRefIterator<'data> for Vec<T> {
+    type Item = T;
+    fn par_iter(&'data self) -> ParIter<'data, T> {
+        ParIter { items: self }
+    }
+}
+
+pub struct ParIter<'data, T> {
+    items: &'data [T],
+}
+
+impl<'data, T: Sync> ParIter<'data, T> {
+    pub fn map<R, F>(self, f: F) -> ParMap<'data, T, R, F>
+    where
+        R: Send,
+        F: Fn(&'data T) -> R + Sync,
+    {
+        ParMap { items: self.items, f, _out: PhantomData }
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+}
+
+pub struct ParMap<'data, T, R, F> {
+    items: &'data [T],
+    f: F,
+    _out: PhantomData<R>,
+}
+
+impl<'data, T, R, F> ParMap<'data, T, R, F>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&'data T) -> R + Sync,
+{
+    pub fn collect<C: FromParallelIterator<R>>(self) -> C {
+        C::from_par(par_map(self.items, &self.f))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prelude::*;
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let xs: Vec<usize> = (0..1000).collect();
+        let pool = ThreadPoolBuilder::new().num_threads(4).build().unwrap();
+        let doubled: Vec<usize> =
+            pool.install(|| xs.par_iter().map(|&x| x * 2).collect());
+        assert_eq!(doubled, (0..1000).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_thread_matches_parallel() {
+        let xs: Vec<u64> = (0..257).collect();
+        let f = |&x: &u64| x.wrapping_mul(0x9E37_79B9).rotate_left(7);
+        let serial: Vec<u64> = ThreadPoolBuilder::new()
+            .num_threads(1)
+            .build()
+            .unwrap()
+            .install(|| xs.par_iter().map(f).collect());
+        let parallel: Vec<u64> = ThreadPoolBuilder::new()
+            .num_threads(8)
+            .build()
+            .unwrap()
+            .install(|| xs.par_iter().map(f).collect());
+        assert_eq!(serial, parallel);
+    }
+
+    #[test]
+    fn install_scopes_thread_count() {
+        let pool = ThreadPoolBuilder::new().num_threads(3).build().unwrap();
+        pool.install(|| assert_eq!(current_num_threads(), 3));
+    }
+
+    #[test]
+    fn empty_input() {
+        let xs: Vec<u8> = vec![];
+        let out: Vec<u8> = xs.par_iter().map(|&x| x).collect();
+        assert!(out.is_empty());
+    }
+}
