@@ -1,0 +1,329 @@
+"""Toolchain-less oracle for the Rust blocked kernels (PR 2).
+
+This is a literal, loop-for-loop Python transcription of
+`rust/src/runtime/native/{gemm,ops}.rs` — same packing, same microtile
+driver, same index formulas — validated against numpy einsum and finite
+differences. When no Rust toolchain is available (see
+.claude/skills/verify/SKILL.md), a change to the Rust kernel index math
+should be mirrored here first: a bug in the tiling/im2col arithmetic
+fails these tests without ever compiling the Rust.
+
+Needs numpy only (no jax).
+"""
+import numpy as np
+import pytest
+
+MR, NR, KC = 4, 8, 256  # keep in sync with rust/src/runtime/native/gemm.rs
+
+
+# ---------------- gemm.rs transcription ----------------
+
+def pack_b(bsrc, k0, klen, j0, jlen, panel):
+    kind, b, ldb = bsrc
+    if kind == "row":
+        for kk in range(klen):
+            src = b[(k0 + kk) * ldb + j0:(k0 + kk) * ldb + j0 + jlen]
+            panel[kk * NR:kk * NR + jlen] = src
+            panel[kk * NR + jlen:kk * NR + NR] = 0.0
+    else:  # transposed (NT)
+        for kk in range(klen):
+            for j in range(jlen):
+                panel[kk * NR + j] = b[(j0 + j) * ldb + k0 + kk]
+            panel[kk * NR + jlen:kk * NR + NR] = 0.0
+
+
+def pack_a(asrc, i0, mr, k0, klen, apack):
+    kind, a, lda = asrc
+    if kind == "row":
+        for r in range(mr):
+            row = a[(i0 + r) * lda + k0:(i0 + r) * lda + k0 + klen]
+            for kk, v in enumerate(row):
+                apack[kk * MR + r] = v
+    else:  # col-major (TN)
+        for kk in range(klen):
+            src = a[(k0 + kk) * lda + i0:(k0 + kk) * lda + i0 + mr]
+            apack[kk * MR:kk * MR + mr] = src
+    if mr < MR:
+        for kk in range(klen):
+            for r in range(mr, MR):
+                apack[kk * MR + r] = 0.0
+
+
+def microkernel(M, apack, panel, klen):
+    acc = np.zeros((M, NR))
+    for kk in range(klen):
+        arow = apack[kk * MR:kk * MR + MR]
+        brow = panel[kk * NR:kk * NR + NR]
+        for r in range(M):
+            acc[r] += arow[r] * brow
+    return acc
+
+
+def store_tile(M, acc, out, ldc, i0, j0, jlen, beta_one, apply_epi, epi):
+    for r in range(M):
+        base = (i0 + r) * ldc + j0
+        for j in range(jlen):
+            v = out[base + j] + acc[r][j] if beta_one else acc[r][j]
+            if apply_epi and epi is not None:
+                kind, bias, relu = epi
+                if kind == "col":
+                    v += bias[j0 + j]
+                elif kind == "row":
+                    v += bias[i0 + r]
+                if relu and v < 0.0:
+                    v = 0.0
+            out[base + j] = v
+
+
+def gemm_driver(asrc, bsrc, m, k, n, accumulate, epi, out):
+    assert len(out) == m * n
+    assert not accumulate or epi is None
+    if m == 0 or n == 0:
+        return
+    if k == 0:
+        # empty sum, but the epilogue still applies (matches gemm.rs)
+        if not accumulate:
+            for i in range(m):
+                for j in range(n):
+                    v = 0.0
+                    if epi is not None:
+                        kind, bias, relu = epi
+                        if kind == "col":
+                            v += bias[j]
+                        elif kind == "row":
+                            v += bias[i]
+                        if relu and v < 0.0:
+                            v = 0.0
+                    out[i * n + j] = v
+        return
+    panel = np.zeros(KC * NR)
+    apack = np.zeros(KC * MR)
+    j0 = 0
+    while j0 < n:
+        jlen = min(NR, n - j0)
+        k0 = 0
+        while k0 < k:
+            klen = min(KC, k - k0)
+            pack_b(bsrc, k0, klen, j0, jlen, panel)
+            beta_one = accumulate or k0 > 0
+            apply_epi = k0 + klen == k
+            i0 = 0
+            while i0 < m:
+                mr = min(MR, m - i0)
+                pack_a(asrc, i0, mr, k0, klen, apack)
+                acc = microkernel(mr, apack, panel, klen)
+                store_tile(mr, acc, out, n, i0, j0, jlen, beta_one, apply_epi, epi)
+                i0 += mr
+            k0 += klen
+        j0 += jlen
+
+
+def gemm_nn(a, b, m, k, n, epi, out):
+    gemm_driver(("row", a, k), ("row", b, n), m, k, n, False, epi, out)
+
+
+def gemm_tn(a, b, k, m, n, accumulate, out):
+    gemm_driver(("col", a, m), ("row", b, n), m, k, n, accumulate, None, out)
+
+
+def gemm_nt(a, b, m, k, n, accumulate, out):
+    gemm_driver(("row", a, k), ("trans", b, k), m, k, n, accumulate, None, out)
+
+
+# ---------------- ops.rs transcription ----------------
+
+def im2col(x, ic, ih, iw, k, col):
+    oh, ow = ih - k + 1, iw - k + 1
+    ohw = oh * ow
+    for i in range(ic):
+        xbase = i * ih * iw
+        for ky in range(k):
+            for kx in range(k):
+                row = (i * k + ky) * k + kx
+                cbase = row * ohw
+                for yy in range(oh):
+                    src = xbase + (yy + ky) * iw + kx
+                    dst = cbase + yy * ow
+                    col[dst:dst + ow] = x[src:src + ow]
+
+
+def col2im(col, ic, ih, iw, k, dx):
+    oh, ow = ih - k + 1, iw - k + 1
+    ohw = oh * ow
+    for i in range(ic):
+        xbase = i * ih * iw
+        for ky in range(k):
+            for kx in range(k):
+                row = (i * k + ky) * k + kx
+                cbase = row * ohw
+                for yy in range(oh):
+                    dst = xbase + (yy + ky) * iw + kx
+                    src = cbase + yy * ow
+                    dx[dst:dst + ow] += col[src:src + ow]
+
+
+def conv2d_fwd_cols(x, w, b, bsz, ic, ih, iw, oc, k, relu, cols, y):
+    oh, ow = ih - k + 1, iw - k + 1
+    kk, ohw = ic * k * k, oh * ow
+    for bi in range(bsz):
+        col = cols[bi * kk * ohw:(bi + 1) * kk * ohw]
+        im2col(x[bi * ic * ih * iw:(bi + 1) * ic * ih * iw], ic, ih, iw, k, col)
+        yb = y[bi * oc * ohw:(bi + 1) * oc * ohw]
+        gemm_nn(w, col, oc, kk, ohw, ("row", b, relu), yb)
+
+
+def conv2d_bwd_cols(cols, w, dy, bsz, ic, ih, iw, oc, k, dw, db, dx, dcol):
+    oh, ow = ih - k + 1, iw - k + 1
+    kk, ohw = ic * k * k, oh * ow
+    dw[:] = 0.0
+    db[:] = 0.0
+    if dx is not None:
+        dx[:] = 0.0
+    for bi in range(bsz):
+        dyb = dy[bi * oc * ohw:(bi + 1) * oc * ohw]
+        for o in range(oc):
+            db[o] += dyb[o * ohw:(o + 1) * ohw].sum()
+        col = cols[bi * kk * ohw:(bi + 1) * kk * ohw]
+        gemm_nt(dyb, col, oc, ohw, kk, True, dw)
+        if dx is not None:
+            gemm_tn(w, dyb, oc, kk, ohw, False, dcol)
+            col2im(dcol, ic, ih, iw, k, dx[bi * ic * ih * iw:(bi + 1) * ic * ih * iw])
+
+
+# ---------------- tests ----------------
+
+GEMM_SHAPES = [(1, 1, 1), (3, 5, 7), (4, 8, 8), (5, 9, 17), (13, 300, 21),
+               (8, 448, 220), (2, KC * 2 + 5, 11), (7, 13, 3)]
+
+
+@pytest.mark.parametrize("m,k,n", GEMM_SHAPES)
+def test_gemm_variants_match_einsum(m, k, n):
+    rng = np.random.default_rng(m * 1000 + k * 10 + n)
+    A = rng.standard_normal(m * k)
+    B = rng.standard_normal(k * n)
+    want = (A.reshape(m, k) @ B.reshape(k, n)).ravel()
+    tol = 1e-9 * max(1.0, np.abs(want).max())
+
+    out = np.zeros(m * n)
+    gemm_nn(A, B, m, k, n, None, out)
+    assert np.abs(out - want).max() <= tol
+
+    At = A.reshape(m, k).T.copy().ravel()
+    out2 = np.zeros(m * n)
+    gemm_tn(At, B, k, m, n, False, out2)
+    assert np.abs(out2 - want).max() <= tol
+
+    Bt = B.reshape(k, n).T.copy().ravel()
+    out3 = np.zeros(m * n)
+    gemm_nt(A, Bt, m, k, n, False, out3)
+    assert np.abs(out3 - want).max() <= tol
+
+    out4 = want.copy()
+    gemm_nt(A, Bt, m, k, n, True, out4)
+    assert np.abs(out4 - 2 * want).max() <= 2 * tol
+
+
+def test_empty_k_still_applies_epilogue():
+    m, n = 3, 5
+    bias = np.arange(n, dtype=float) - 2.0
+    out = np.full(m * n, 7.0)
+    gemm_nn(np.zeros(0), np.zeros(0), m, 0, n, ("col", bias, True), out)
+    want = np.tile(np.maximum(bias, 0.0), m)
+    assert np.allclose(out, want)
+    plain = np.full(m * n, 7.0)
+    gemm_nn(np.zeros(0), np.zeros(0), m, 0, n, None, plain)
+    assert np.all(plain == 0.0)
+
+
+def test_fused_epilogues():
+    rng = np.random.default_rng(42)
+    m, k, n = 5, 6, 13
+    A = rng.standard_normal(m * k)
+    B = rng.standard_normal(k * n)
+    bias_c = rng.standard_normal(n)
+    bias_r = rng.standard_normal(m)
+    plain = A.reshape(m, k) @ B.reshape(k, n)
+    out = np.zeros(m * n)
+    gemm_nn(A, B, m, k, n, ("col", bias_c, True), out)
+    assert np.allclose(out, np.maximum(plain + bias_c[None, :], 0.0).ravel())
+    out = np.zeros(m * n)
+    gemm_nn(A, B, m, k, n, ("row", bias_r, False), out)
+    assert np.allclose(out, (plain + bias_r[:, None]).ravel())
+
+
+CONV_SHAPES = [(1, 1, 5, 5, 1, 2), (3, 2, 7, 6, 5, 3), (5, 3, 9, 9, 4, 4),
+               (8, 15, 12, 12, 28, 5), (2, 1, 10, 10, 4, 3)]
+
+
+@pytest.mark.parametrize("bsz,ic,ih,iw,oc,k", CONV_SHAPES)
+def test_conv_fwd_bwd_match_einsum(bsz, ic, ih, iw, oc, k):
+    rng = np.random.default_rng(bsz * 100 + ic * 10 + k)
+    oh, ow = ih - k + 1, iw - k + 1
+    kkn, ohw = ic * k * k, oh * ow
+    x = rng.standard_normal(bsz * ic * ih * iw)
+    w = rng.standard_normal(oc * kkn)
+    b = rng.standard_normal(oc)
+    cols = np.zeros(bsz * kkn * ohw)
+    y = np.zeros(bsz * oc * ohw)
+    conv2d_fwd_cols(x, w, b, bsz, ic, ih, iw, oc, k, False, cols, y)
+    X = x.reshape(bsz, ic, ih, iw)
+    W = w.reshape(oc, ic, k, k)
+    want = np.zeros((bsz, oc, oh, ow))
+    for ky in range(k):
+        for kx in range(k):
+            want += np.einsum("bihw,oi->bohw", X[:, :, ky:ky + oh, kx:kx + ow], W[:, :, ky, kx])
+    want += b[None, :, None, None]
+    assert np.abs(y - want.ravel()).max() < 1e-9 * max(1.0, np.abs(want).max())
+
+    dy = rng.standard_normal(bsz * oc * ohw)
+    dw = np.zeros(oc * kkn)
+    db = np.zeros(oc)
+    dx = np.zeros(bsz * ic * ih * iw)
+    dcol = np.zeros(kkn * ohw)
+    conv2d_bwd_cols(cols, w, dy, bsz, ic, ih, iw, oc, k, dw, db, dx, dcol)
+    DY = dy.reshape(bsz, oc, oh, ow)
+    assert np.allclose(db, DY.sum(axis=(0, 2, 3)))
+    want_dw = np.zeros((oc, ic, k, k))
+    for ky in range(k):
+        for kx in range(k):
+            want_dw[:, :, ky, kx] = np.einsum("bohw,bihw->oi", DY, X[:, :, ky:ky + oh, kx:kx + ow])
+    assert np.abs(dw - want_dw.ravel()).max() < 1e-9 * max(1.0, np.abs(want_dw).max())
+    want_dx = np.zeros((bsz, ic, ih, iw))
+    for ky in range(k):
+        for kx in range(k):
+            want_dx[:, :, ky:ky + oh, kx:kx + ow] += np.einsum("bohw,oi->bihw", DY, W[:, :, ky, kx])
+    assert np.abs(dx - want_dx.ravel()).max() < 1e-9 * max(1.0, np.abs(want_dx).max())
+
+
+def test_conv_bwd_dw_finite_differences():
+    rng = np.random.default_rng(7)
+    bsz, ic, ih, iw, oc, k = 3, 2, 6, 6, 3, 3  # bsz not a tile multiple
+    oh = ow = ih - k + 1
+    kkn, ohw = ic * k * k, oh * ow
+    x = rng.standard_normal(bsz * ic * ih * iw)
+    w = rng.standard_normal(oc * kkn) * 0.5
+    b = rng.standard_normal(oc) * 0.1
+    gvec = rng.standard_normal(bsz * oc * ohw)
+
+    def loss_of(wv):
+        cols = np.zeros(bsz * kkn * ohw)
+        y = np.zeros(bsz * oc * ohw)
+        conv2d_fwd_cols(x, wv, b, bsz, ic, ih, iw, oc, k, False, cols, y)
+        return float((y * gvec).sum())
+
+    cols = np.zeros(bsz * kkn * ohw)
+    y = np.zeros(bsz * oc * ohw)
+    conv2d_fwd_cols(x, w, b, bsz, ic, ih, iw, oc, k, False, cols, y)
+    dw = np.zeros(oc * kkn)
+    db = np.zeros(oc)
+    dx = np.zeros_like(x)
+    dcol = np.zeros(kkn * ohw)
+    conv2d_bwd_cols(cols, w, gvec, bsz, ic, ih, iw, oc, k, dw, db, dx, dcol)
+    eps = 1e-6
+    for idx in [0, 7, len(w) // 2, len(w) - 1]:
+        wp = w.copy()
+        wp[idx] += eps
+        wm = w.copy()
+        wm[idx] -= eps
+        fd = (loss_of(wp) - loss_of(wm)) / (2 * eps)
+        assert abs(fd - dw[idx]) < 1e-4 * max(1.0, abs(fd))

@@ -1,0 +1,340 @@
+//! `hfl bench` — the kernel micro/e2e benchmark harness behind the perf
+//! trajectory file `BENCH_kernels.json`.
+//!
+//! Every case times the blocked kernels (`runtime::native::ops`) against
+//! the scalar oracles (`ops::reference`) on the same buffers, so the
+//! reported speedup is machine-independent enough to regress against: CI
+//! runs `hfl bench --smoke --baseline BENCH_kernels.json` and fails when
+//! the end-to-end local-round speedup drops more than 25% below the
+//! checked-in baseline's (absolute wall-clock is never compared across
+//! machines, only the blocked/reference ratio measured on one machine at
+//! one moment).
+//!
+//! `--smoke` restricts to the tiny model and small shapes (seconds, CI
+//! friendly); the full run also benches the fmnist-sized shapes the paper
+//! sweeps train (448 KB model — the ≥4× acceptance target of PR 2).
+
+use std::path::{Path, PathBuf};
+
+use crate::bench::{bench, BenchResult, Table};
+use crate::model::{init_params, Init};
+use crate::runtime::native::cnn::NativeCnn;
+use crate::runtime::native::ops;
+use crate::runtime::native::scratch::ScratchArena;
+use crate::util::{Json, Rng};
+
+/// How far the e2e speedup may fall below the baseline's before the
+/// regression check fails (the ISSUE's ">25% regression" gate).
+const REGRESSION_SLACK: f64 = 0.75;
+/// Absolute floor: blocked kernels catastrophically slower than the
+/// scalar oracle always fail, baseline or not.
+const HARD_FLOOR: f64 = 0.5;
+
+pub struct KernelBenchOpts {
+    /// Tiny-model-only quick run (CI).
+    pub smoke: bool,
+    /// Baseline JSON to regress the e2e speedups against.
+    pub baseline: Option<PathBuf>,
+    /// Where to write the fresh results JSON.
+    pub out: PathBuf,
+}
+
+struct Cmp {
+    name: String,
+    shape: String,
+    blocked: BenchResult,
+    reference: BenchResult,
+}
+
+impl Cmp {
+    fn speedup(&self) -> f64 {
+        self.reference.mean_s / self.blocked.mean_s.max(1e-12)
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(&self.name)),
+            ("shape", Json::str(&self.shape)),
+            ("blocked_ms", Json::num(self.blocked.mean_s * 1e3)),
+            ("reference_ms", Json::num(self.reference.mean_s * 1e3)),
+            ("speedup", Json::num(self.speedup())),
+        ])
+    }
+}
+
+fn fill(rng: &mut Rng, len: usize) -> Vec<f32> {
+    (0..len).map(|_| rng.f32() * 2.0 - 1.0).collect()
+}
+
+fn matmul_cases(smoke: bool, out: &mut Vec<Cmp>) {
+    let mut rng = Rng::new(0xBE7C);
+    // fmnist fc1 shapes (fwd / dW / dX); smoke shrinks to tiny-fc scale
+    let (bsz, n_in, n_out) = if smoke { (8usize, 64usize, 32usize) } else { (8usize, 448usize, 220usize) };
+    let iters = if smoke { 40 } else { 30 };
+
+    let x = fill(&mut rng, bsz * n_in);
+    let w = fill(&mut rng, n_in * n_out);
+    let dy = fill(&mut rng, bsz * n_out);
+    let mut y = vec![0.0f32; bsz * n_out];
+
+    let name = format!("matmul_nn_{bsz}x{n_in}x{n_out}");
+    let blocked = bench(&format!("{name} blocked"), 3, iters, || {
+        ops::matmul(&x, &w, bsz, n_in, n_out, &mut y);
+    });
+    let reference = bench(&format!("{name} reference"), 3, iters, || {
+        ops::reference::matmul(&x, &w, bsz, n_in, n_out, &mut y);
+    });
+    out.push(Cmp { name, shape: format!("{bsz}x{n_in}x{n_out}"), blocked, reference });
+
+    let mut dw = vec![0.0f32; n_in * n_out];
+    let name = format!("matmul_tn_dw_{n_in}x{n_out}_k{bsz}");
+    let blocked = bench(&format!("{name} blocked"), 3, iters, || {
+        ops::matmul_tn(&x, &dy, bsz, n_in, n_out, &mut dw);
+    });
+    let reference = bench(&format!("{name} reference"), 3, iters, || {
+        ops::reference::matmul_tn(&x, &dy, bsz, n_in, n_out, &mut dw);
+    });
+    out.push(Cmp { name, shape: format!("k{bsz} {n_in}x{n_out}"), blocked, reference });
+
+    let mut dx = vec![0.0f32; bsz * n_in];
+    let name = format!("matmul_nt_dx_{bsz}x{n_out}x{n_in}");
+    let blocked = bench(&format!("{name} blocked"), 3, iters, || {
+        ops::matmul_nt(&dy, &w, bsz, n_out, n_in, &mut dx);
+    });
+    let reference = bench(&format!("{name} reference"), 3, iters, || {
+        ops::reference::matmul_nt(&dy, &w, bsz, n_out, n_in, &mut dx);
+    });
+    out.push(Cmp { name, shape: format!("{bsz}x{n_out}x{n_in}"), blocked, reference });
+}
+
+fn conv_cases(smoke: bool, out: &mut Vec<Cmp>) {
+    let mut rng = Rng::new(0xC0Fb);
+    // fmnist conv2 (the dominant GEMM of the 448 KB model); smoke = tiny conv
+    let (bsz, ic, ih, oc, k) =
+        if smoke { (8usize, 1usize, 10usize, 4usize, 3usize) } else { (8usize, 15usize, 12usize, 28usize, 5usize) };
+    let iters = if smoke { 30 } else { 15 };
+    let oh = ih - k + 1;
+    let (kk, ohw) = (ic * k * k, oh * oh);
+
+    let x = fill(&mut rng, bsz * ic * ih * ih);
+    let w = fill(&mut rng, oc * kk);
+    let b = fill(&mut rng, oc);
+    let dy = fill(&mut rng, bsz * oc * ohw);
+    let mut y = vec![0.0f32; bsz * oc * ohw];
+    let mut cols = vec![0.0f32; bsz * kk * ohw];
+
+    let name = format!("conv2d_fwd_b{bsz}_{ic}x{ih}x{ih}_oc{oc}_k{k}");
+    let blocked = bench(&format!("{name} blocked"), 2, iters, || {
+        ops::conv2d_fwd_cols(&x, &w, &b, bsz, ic, ih, ih, oc, k, true, &mut cols, &mut y);
+    });
+    let reference = bench(&format!("{name} reference"), 2, iters, || {
+        ops::reference::conv2d_fwd(&x, &w, &b, bsz, ic, ih, ih, oc, k, true, &mut y);
+    });
+    out.push(Cmp {
+        name,
+        shape: format!("b{bsz} {ic}x{ih}x{ih} -> {oc}x{oh}x{oh} k{k}"),
+        blocked,
+        reference,
+    });
+
+    // backward reuses the forward's im2col cache — that is the hot path
+    ops::conv2d_fwd_cols(&x, &w, &b, bsz, ic, ih, ih, oc, k, true, &mut cols, &mut y);
+    let mut dw = vec![0.0f32; oc * kk];
+    let mut db = vec![0.0f32; oc];
+    let mut dx = vec![0.0f32; bsz * ic * ih * ih];
+    let mut dcol = vec![0.0f32; kk * ohw];
+    let name = format!("conv2d_bwd_b{bsz}_{ic}x{ih}x{ih}_oc{oc}_k{k}");
+    let blocked = bench(&format!("{name} blocked"), 2, iters, || {
+        ops::conv2d_bwd_cols(
+            &cols, &w, &dy, bsz, ic, ih, ih, oc, k, &mut dw, &mut db, Some(&mut dx), &mut dcol,
+        );
+    });
+    let reference = bench(&format!("{name} reference"), 2, iters, || {
+        ops::reference::conv2d_bwd(
+            &x, &w, &dy, bsz, ic, ih, ih, oc, k, &mut dw, &mut db, Some(&mut dx),
+        );
+    });
+    out.push(Cmp {
+        name,
+        shape: format!("b{bsz} {ic}x{ih}x{ih} -> {oc}x{oh}x{oh} k{k}"),
+        blocked,
+        reference,
+    });
+}
+
+fn model_for(name: &str) -> NativeCnn {
+    // same registry the backend trains with — the bench can never
+    // measure a geometry the sweeps don't run
+    crate::runtime::native::builtin_model(name)
+        .unwrap_or_else(|| panic!("no bench model {name:?}"))
+}
+
+/// End-to-end local round (L SGD steps of minibatch B, the
+/// `Backend::local_round` per-slot unit): blocked kernels + warm arena
+/// vs. the PR 1 scalar kernels.
+fn e2e_case(model: &str, iters: usize, out: &mut Vec<Cmp>) {
+    let m = model_for(model);
+    let (l, bsz) = (5usize, 8usize);
+    let mut rng = Rng::new(0xE2E0);
+    let base = init_params(&m.info, Init::HeNormal, &mut rng);
+    let xs = fill(&mut rng, l * bsz * m.pixels());
+    let mut ys = vec![0.0f32; l * bsz * crate::data::NUM_CLASSES];
+    for s in 0..l * bsz {
+        ys[s * crate::data::NUM_CLASSES + s % crate::data::NUM_CLASSES] = 1.0;
+    }
+    let mut params = base.clone();
+    let mut arena = ScratchArena::new();
+    // warm the arena outside the timed region (steady-state sweep behavior)
+    params.copy_from_slice(&base);
+    m.local_round_arena(&mut params, &xs, &ys, l, bsz, 0.01, &mut arena);
+
+    let name = format!("local_round_{model}");
+    let blocked = bench(&format!("{name} blocked"), 1, iters, || {
+        params.copy_from_slice(&base);
+        m.local_round_arena(&mut params, &xs, &ys, l, bsz, 0.01, &mut arena);
+    });
+    let reference = bench(&format!("{name} reference"), 1, iters, || {
+        params.copy_from_slice(&base);
+        m.local_round_reference(&mut params, &xs, &ys, l, bsz, 0.01);
+    });
+    out.push(Cmp {
+        name,
+        shape: format!("{model} L{l} B{bsz} ({} params)", m.info.params),
+        blocked,
+        reference,
+    });
+}
+
+fn check_against_baseline(e2e: &[Cmp], path: &Path) -> anyhow::Result<()> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("cannot read baseline {}: {e}", path.display()))?;
+    let base = Json::parse(&text).map_err(|e| anyhow::anyhow!("baseline {}: {e}", path.display()))?;
+    let entries = match base.get("e2e").and_then(Json::as_arr) {
+        Some(a) => a,
+        None => {
+            log::warn!(
+                "baseline {} has no e2e entries (bootstrap file?) — skipping regression check",
+                path.display()
+            );
+            return Ok(());
+        }
+    };
+    for cur in e2e {
+        let prev = entries.iter().find(|e| {
+            e.get("name").and_then(Json::as_str) == Some(cur.name.as_str())
+        });
+        let prev_speedup = match prev.and_then(|e| e.get("speedup")).and_then(Json::as_f64) {
+            Some(s) => s,
+            None => {
+                log::warn!("baseline has no speedup for {} — not regressed-checked", cur.name);
+                continue;
+            }
+        };
+        let cur_speedup = cur.speedup();
+        anyhow::ensure!(
+            cur_speedup >= prev_speedup * REGRESSION_SLACK,
+            "{}: e2e speedup regressed >25%: {cur_speedup:.2}x now vs {prev_speedup:.2}x in {}",
+            cur.name,
+            path.display()
+        );
+        println!(
+            "baseline check {:24} ok: {cur_speedup:.2}x vs baseline {prev_speedup:.2}x",
+            cur.name
+        );
+    }
+    Ok(())
+}
+
+fn results_json(mode: &str, kernels: &[Cmp], e2e: &[Cmp]) -> Json {
+    Json::obj(vec![
+        ("schema", Json::num(1.0)),
+        ("mode", Json::str(mode)),
+        (
+            "generated_by",
+            Json::str("hfl bench (blocked runtime::native kernels vs ops::reference scalar oracle)"),
+        ),
+        ("kernels", Json::Arr(kernels.iter().map(Cmp::to_json).collect())),
+        ("e2e", Json::Arr(e2e.iter().map(Cmp::to_json).collect())),
+    ])
+}
+
+/// Run the harness; returns the e2e speedup of the largest benched model
+/// (tiny in smoke mode, fmnist otherwise).
+pub fn run(opts: &KernelBenchOpts) -> anyhow::Result<f64> {
+    let mode = if opts.smoke { "smoke" } else { "full" };
+    println!("hfl bench [{mode}]: blocked kernels vs scalar reference oracle");
+
+    let mut kernels: Vec<Cmp> = Vec::new();
+    matmul_cases(opts.smoke, &mut kernels);
+    conv_cases(opts.smoke, &mut kernels);
+
+    let mut e2e: Vec<Cmp> = Vec::new();
+    e2e_case("tiny", if opts.smoke { 10 } else { 8 }, &mut e2e);
+    if !opts.smoke {
+        e2e_case("fmnist", 3, &mut e2e);
+    }
+
+    let mut table = Table::new(&["case", "shape", "blocked", "reference", "speedup"]);
+    for c in kernels.iter().chain(e2e.iter()) {
+        table.row(&[
+            c.name.clone(),
+            c.shape.clone(),
+            format!("{:.3}ms", c.blocked.mean_s * 1e3),
+            format!("{:.3}ms", c.reference.mean_s * 1e3),
+            format!("{:.2}x", c.speedup()),
+        ]);
+    }
+    table.print();
+
+    let json = results_json(mode, &kernels, &e2e);
+    let mut text = String::new();
+    json.write(&mut text);
+    text.push('\n');
+    if let Some(dir) = opts.out.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir).ok();
+        }
+    }
+    std::fs::write(&opts.out, &text)
+        .map_err(|e| anyhow::anyhow!("cannot write {}: {e}", opts.out.display()))?;
+    println!("wrote {}", opts.out.display());
+
+    let headline = e2e.last().expect("at least one e2e case");
+    let headline_speedup = headline.speedup();
+    println!(
+        "e2e {}: {:.2}x vs scalar reference (blocked {:.2}ms, reference {:.2}ms)",
+        headline.name,
+        headline_speedup,
+        headline.blocked.mean_s * 1e3,
+        headline.reference.mean_s * 1e3,
+    );
+    // only meaningful on optimized builds: the test profile (opt-level 1,
+    // debug assertions) deliberately skips the absolute floor
+    anyhow::ensure!(
+        cfg!(debug_assertions) || headline_speedup >= HARD_FLOOR,
+        "blocked kernels are >2x slower than the scalar reference ({headline_speedup:.2}x) — \
+         something is badly wrong with the blocked path on this host"
+    );
+    if let Some(baseline) = &opts.baseline {
+        check_against_baseline(&e2e, baseline)?;
+    }
+    Ok(headline_speedup)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn smoke_bench_runs_and_writes_parseable_json() {
+        let out = std::env::temp_dir().join(format!("hfl_bench_{}.json", std::process::id()));
+        let opts = KernelBenchOpts { smoke: true, baseline: None, out: out.clone() };
+        let speedup = run(&opts).unwrap();
+        assert!(speedup.is_finite() && speedup > 0.0);
+        let text = std::fs::read_to_string(&out).unwrap();
+        let j = Json::parse(&text).unwrap();
+        assert_eq!(j.get("mode").and_then(Json::as_str), Some("smoke"));
+        assert!(j.get("e2e").and_then(Json::as_arr).map(|a| !a.is_empty()).unwrap_or(false));
+        std::fs::remove_file(&out).ok();
+    }
+}

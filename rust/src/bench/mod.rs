@@ -1,6 +1,10 @@
 //! Hand-rolled bench harness (criterion is unavailable offline): warmup +
 //! timed iterations with mean/p50/p95 reporting, and fixed-width table
-//! printing for the paper-figure benches.
+//! printing for the paper-figure benches. The [`kernels`] submodule is
+//! the `hfl bench` subcommand (blocked vs reference kernel speedups +
+//! `BENCH_kernels.json`).
+
+pub mod kernels;
 
 use std::time::Instant;
 

@@ -19,6 +19,7 @@
 //!
 //! See `DESIGN.md` at the repository root for the system inventory, the
 //! backend/scenario split and the substitution log.
+#![cfg_attr(feature = "portable-simd", feature(portable_simd))]
 
 pub mod allocation;
 pub mod bench;

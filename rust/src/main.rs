@@ -28,7 +28,16 @@ commands:
                             grid, rayon-parallel on the native backend
                             (presets: grid fig3 fig4 fig6 fig7;
                              --threads N  --iters N  --mode cost|train
-                             --schedulers a,b  --assigners a,b)
+                             --schedulers a,b  --assigners a,b
+                             --dataset fmnist|cifar|tiny overrides the
+                             preset's dataset for train mode)
+  bench                     kernel benchmarks: blocked native kernels vs
+                            the scalar reference oracle, micro + e2e
+                            local round; writes BENCH_kernels.json
+                            (--smoke    tiny-model quick run for CI
+                             --baseline FILE  fail if the e2e speedup
+                             regresses >25% vs the checked-in baseline
+                             --out FILE  output path)
   drl-train                 train the D3QN assigner (Algorithm 5; saves
                             results/dqn_theta.bin) (--episodes --seed)
                             [requires the pjrt feature]
@@ -216,6 +225,15 @@ fn cmd_sweep(args: &Args, cfg: &Config) -> anyhow::Result<()> {
             .map(|x| AssignKind::parse(x.trim(), None))
             .collect::<anyhow::Result<_>>()?;
     }
+    // run a train-mode preset on a different model family (e.g. the
+    // fig3 grid on `tiny` for fast deterministic smoke runs); the CSV
+    // name gains the dataset suffix so outputs never collide
+    if let Some(ds) = args.opt("dataset") {
+        if spec.dataset != ds {
+            spec.name = format!("{}_{ds}", spec.name);
+            spec.dataset = ds.to_string();
+        }
+    }
     spec.iters = args.get_usize("iters", spec.iters)?;
     let threads = args.get_usize("threads", 0)?;
     args.finish()?;
@@ -263,6 +281,19 @@ fn cmd_sweep(args: &Args, cfg: &Config) -> anyhow::Result<()> {
         rows_path.display(),
         summary_path.display()
     );
+    Ok(())
+}
+
+/// `hfl bench` — kernel micro-benchmarks + end-to-end local round,
+/// blocked kernels vs the scalar reference oracle.
+fn cmd_bench(args: &Args) -> anyhow::Result<()> {
+    let smoke = args.flag("smoke");
+    let baseline = args.opt("baseline").map(PathBuf::from);
+    let out = PathBuf::from(args.get_str("out", "BENCH_kernels.json"));
+    args.finish()?;
+    let opts = hfl::bench::kernels::KernelBenchOpts { smoke, baseline, out };
+    let speedup = hfl::bench::kernels::run(&opts)?;
+    println!("headline e2e speedup: {speedup:.2}x");
     Ok(())
 }
 
@@ -337,6 +368,11 @@ fn main() -> anyhow::Result<()> {
     if args.subcommand.is_empty() || args.subcommand == "help" {
         print!("{USAGE}");
         return Ok(());
+    }
+    // bench takes no Config and interprets --out as a file path, not the
+    // results directory — route it before the config layer touches --out
+    if args.subcommand == "bench" {
+        return cmd_bench(&args);
     }
     let cfg = load_config(&args)?;
     std::fs::create_dir_all(&cfg.out_dir).ok();

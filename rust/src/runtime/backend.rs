@@ -25,6 +25,10 @@ pub struct BackendStats {
     pub exec_secs: f64,
     /// Artifact-compilation time (0 for the native backend).
     pub compile_secs: f64,
+    /// Bytes parked in the backend's scratch-arena pool (the native
+    /// kernels' reusable intermediate buffers; 0 for PJRT, which manages
+    /// device buffers itself).
+    pub scratch_bytes: u64,
 }
 
 /// Input geometry `(channels, img)` of a model's samples, derived from the

@@ -268,6 +268,11 @@ impl Backend for Engine {
 
     fn stats(&self) -> BackendStats {
         let s = *self.stats.borrow();
-        BackendStats { calls: s.calls, exec_secs: s.exec_secs, compile_secs: s.compile_secs }
+        BackendStats {
+            calls: s.calls,
+            exec_secs: s.exec_secs,
+            compile_secs: s.compile_secs,
+            scratch_bytes: 0,
+        }
     }
 }

@@ -6,9 +6,18 @@
 //! is identical to the Python/manifest layout, so checkpoints, He init and
 //! the Algorithm 2 classifier-head clustering work unchanged across
 //! backends.
+//!
+//! Compute runs on the blocked kernels in [`super::ops`] (im2col conv +
+//! register-tiled GEMM, fused bias/ReLU). Every intermediate tensor is
+//! borrowed from a [`ScratchArena`]: the `*_arena` methods allocate no
+//! buffers once the arena is warm, which is what keeps `hfl sweep --mode
+//! train` local rounds allocation-free. The `_reference` variants run the
+//! pre-blocking scalar kernels and exist as the parity oracle and the
+//! `hfl bench` baseline.
 
 use super::ops;
 use super::push_leaf;
+use super::scratch::ScratchArena;
 use crate::data::NUM_CLASSES;
 use crate::runtime::manifest::ModelInfo;
 
@@ -25,6 +34,22 @@ struct ConvBlock {
     pool_hw: usize,
     w_off: usize,
     b_off: usize,
+}
+
+impl ConvBlock {
+    /// im2col patch-matrix row count `ic·k·k`.
+    fn patch_k(&self) -> usize {
+        self.in_ch * self.k * self.k
+    }
+
+    /// Spatial output size `oh·ow` of the valid conv.
+    fn out_hw(&self) -> usize {
+        self.conv_hw * self.conv_hw
+    }
+
+    fn w_len(&self) -> usize {
+        self.out_ch * self.patch_k()
+    }
 }
 
 #[derive(Clone, Debug)]
@@ -112,43 +137,78 @@ impl NativeCnn {
     }
 
     /// Forward pass: `params` + `x[bsz × C × img × img]` → logits
-    /// (`bsz × 10`).
+    /// (`bsz × 10`). Convenience wrapper over [`NativeCnn::forward_arena`]
+    /// with a throwaway arena.
     pub fn forward(&self, params: &[f32], x: &[f32], bsz: usize) -> Vec<f32> {
+        let mut arena = ScratchArena::new();
+        self.forward_arena(params, x, bsz, &mut arena)
+    }
+
+    /// Forward pass with caller-owned scratch. Only the returned logits
+    /// vector is freshly allocated; every intermediate comes from (and
+    /// returns to) `arena`.
+    pub fn forward_arena(
+        &self,
+        params: &[f32],
+        x: &[f32],
+        bsz: usize,
+        arena: &mut ScratchArena,
+    ) -> Vec<f32> {
         assert_eq!(params.len(), self.info.params, "{}: bad param length", self.info.name);
         assert_eq!(x.len(), bsz * self.pixels(), "{}: bad input length", self.info.name);
-        let mut cur = x.to_vec();
+        // the first conv reads `x` directly; later convs read the previous
+        // pool output (no copy of the input batch)
+        let mut cur: Option<Vec<f32>> = None;
         for cs in &self.convs {
-            let mut conv = vec![0.0f32; bsz * cs.out_ch * cs.conv_hw * cs.conv_hw];
-            ops::conv2d_fwd(
-                &cur,
-                &params[cs.w_off..cs.w_off + cs.out_ch * cs.in_ch * cs.k * cs.k],
+            let mut cols = arena.take_f32(bsz * cs.patch_k() * cs.out_hw());
+            let mut conv = arena.take_f32(bsz * cs.out_ch * cs.out_hw());
+            let input: &[f32] = cur.as_deref().unwrap_or(x);
+            ops::conv2d_fwd_cols(
+                input,
+                &params[cs.w_off..cs.w_off + cs.w_len()],
                 &params[cs.b_off..cs.b_off + cs.out_ch],
-                bsz, cs.in_ch, cs.in_hw, cs.in_hw, cs.out_ch, cs.k, true, &mut conv,
+                bsz, cs.in_ch, cs.in_hw, cs.in_hw, cs.out_ch, cs.k, true, &mut cols, &mut conv,
             );
-            let mut pool = vec![0.0f32; bsz * cs.out_ch * cs.pool_hw * cs.pool_hw];
-            let mut am = vec![0u32; pool.len()];
+            arena.put_f32(cols);
+            let mut pool = arena.take_f32(bsz * cs.out_ch * cs.pool_hw * cs.pool_hw);
+            let mut am = arena.take_u32(pool.len());
             ops::maxpool2_fwd(&conv, bsz, cs.out_ch, cs.conv_hw, cs.conv_hw, &mut pool, &mut am);
-            cur = pool;
+            arena.put_u32(am);
+            arena.put_f32(conv);
+            if let Some(prev) = cur.take() {
+                arena.put_f32(prev);
+            }
+            cur = Some(pool);
         }
         let last = self.convs.last().expect("at least one conv block");
-        let mut flat = vec![0.0f32; bsz * self.feat];
+        let cur = cur.expect("at least one conv block");
+        let mut flat = arena.take_f32(bsz * self.feat);
         ops::nchw_to_nhwc(&cur, bsz, last.out_ch, last.pool_hw, last.pool_hw, &mut flat);
+        arena.put_f32(cur);
         let mut cur = flat;
-        for ds in &self.denses {
-            let mut out = vec![0.0f32; bsz * ds.n_out];
+        let n_dense = self.denses.len();
+        for (di, ds) in self.denses.iter().enumerate() {
+            // the logits escape to the caller; everything else is scratch
+            let mut out = if di + 1 == n_dense {
+                vec![0.0f32; bsz * ds.n_out]
+            } else {
+                arena.take_f32(bsz * ds.n_out)
+            };
             ops::dense_fwd(
                 &cur,
                 &params[ds.w_off..ds.w_off + ds.n_in * ds.n_out],
                 &params[ds.b_off..ds.b_off + ds.n_out],
                 bsz, ds.n_in, ds.n_out, ds.relu, &mut out,
             );
+            arena.put_f32(cur);
             cur = out;
         }
         cur
     }
 
     /// Mean softmax-xent loss over the batch plus its gradient w.r.t. every
-    /// parameter (written into `grad`, length `info.params`).
+    /// parameter (written into `grad`, length `info.params`). Wrapper over
+    /// [`NativeCnn::loss_and_grad_arena`] with a throwaway arena.
     pub fn loss_and_grad(
         &self,
         params: &[f32],
@@ -157,40 +217,60 @@ impl NativeCnn {
         bsz: usize,
         grad: &mut [f32],
     ) -> f32 {
+        let mut arena = ScratchArena::new();
+        self.loss_and_grad_arena(params, x, y_onehot, bsz, grad, &mut arena)
+    }
+
+    /// Loss + full gradient with caller-owned scratch: the im2col patch
+    /// matrices built in the forward pass are kept and reused by the conv
+    /// backward, and with a warm arena the whole pass allocates nothing.
+    pub fn loss_and_grad_arena(
+        &self,
+        params: &[f32],
+        x: &[f32],
+        y_onehot: &[f32],
+        bsz: usize,
+        grad: &mut [f32],
+        arena: &mut ScratchArena,
+    ) -> f32 {
         assert_eq!(params.len(), self.info.params);
         assert_eq!(grad.len(), self.info.params);
         assert_eq!(x.len(), bsz * self.pixels());
         assert_eq!(y_onehot.len(), bsz * NUM_CLASSES);
 
         // ---- forward with caches --------------------------------------
-        let mut conv_acts: Vec<Vec<f32>> = Vec::with_capacity(self.convs.len());
-        let mut pool_outs: Vec<Vec<f32>> = Vec::with_capacity(self.convs.len());
-        let mut argmaxes: Vec<Vec<u32>> = Vec::with_capacity(self.convs.len());
+        let nconv = self.convs.len();
+        let mut cols_cache: Vec<Vec<f32>> = Vec::with_capacity(nconv);
+        let mut conv_acts: Vec<Vec<f32>> = Vec::with_capacity(nconv);
+        let mut pool_outs: Vec<Vec<f32>> = Vec::with_capacity(nconv);
+        let mut argmaxes: Vec<Vec<u32>> = Vec::with_capacity(nconv);
         for (ci, cs) in self.convs.iter().enumerate() {
+            let mut cols = arena.take_f32(bsz * cs.patch_k() * cs.out_hw());
+            let mut conv = arena.take_f32(bsz * cs.out_ch * cs.out_hw());
             let input: &[f32] = if ci == 0 { x } else { &pool_outs[ci - 1] };
-            let mut conv = vec![0.0f32; bsz * cs.out_ch * cs.conv_hw * cs.conv_hw];
-            ops::conv2d_fwd(
+            ops::conv2d_fwd_cols(
                 input,
-                &params[cs.w_off..cs.w_off + cs.out_ch * cs.in_ch * cs.k * cs.k],
+                &params[cs.w_off..cs.w_off + cs.w_len()],
                 &params[cs.b_off..cs.b_off + cs.out_ch],
-                bsz, cs.in_ch, cs.in_hw, cs.in_hw, cs.out_ch, cs.k, true, &mut conv,
+                bsz, cs.in_ch, cs.in_hw, cs.in_hw, cs.out_ch, cs.k, true, &mut cols, &mut conv,
             );
-            let mut pool = vec![0.0f32; bsz * cs.out_ch * cs.pool_hw * cs.pool_hw];
-            let mut am = vec![0u32; pool.len()];
+            let mut pool = arena.take_f32(bsz * cs.out_ch * cs.pool_hw * cs.pool_hw);
+            let mut am = arena.take_u32(pool.len());
             ops::maxpool2_fwd(&conv, bsz, cs.out_ch, cs.conv_hw, cs.conv_hw, &mut pool, &mut am);
+            cols_cache.push(cols);
             conv_acts.push(conv);
             argmaxes.push(am);
             pool_outs.push(pool);
         }
         let last = self.convs.last().expect("at least one conv block");
         let last_pool = pool_outs.last().expect("pool output present");
-        let mut flat = vec![0.0f32; bsz * self.feat];
+        let mut flat = arena.take_f32(bsz * self.feat);
         ops::nchw_to_nhwc(last_pool, bsz, last.out_ch, last.pool_hw, last.pool_hw, &mut flat);
         // dense_ins[i] is the input of dense layer i; logits is the output
         let mut dense_ins: Vec<Vec<f32>> = vec![flat];
         for ds in &self.denses {
+            let mut out = arena.take_f32(bsz * ds.n_out);
             let prev = dense_ins.last().expect("flatten output present");
-            let mut out = vec![0.0f32; bsz * ds.n_out];
             ops::dense_fwd(
                 prev,
                 &params[ds.w_off..ds.w_off + ds.n_in * ds.n_out],
@@ -200,7 +280,7 @@ impl NativeCnn {
             dense_ins.push(out);
         }
         let logits = dense_ins.last().expect("logits present");
-        let mut dy = vec![0.0f32; bsz * NUM_CLASSES];
+        let mut dy = arena.take_f32(bsz * NUM_CLASSES);
         let loss = ops::softmax_xent(logits, y_onehot, bsz, NUM_CLASSES, &mut dy);
 
         // ---- backward -------------------------------------------------
@@ -209,9 +289,9 @@ impl NativeCnn {
             if ds.relu {
                 ops::relu_bwd_mask(&dense_ins[di + 1], &mut dy);
             }
-            let input = &dense_ins[di];
-            let mut dx = vec![0.0f32; bsz * ds.n_in];
+            let mut dx = arena.take_f32(bsz * ds.n_in);
             {
+                let input = &dense_ins[di];
                 let (dw, db): (&mut [f32], &mut [f32]) = {
                     // the two leaf ranges never overlap
                     let (wo, bo) = (ds.w_off, ds.b_off);
@@ -226,41 +306,64 @@ impl NativeCnn {
                     &dy, bsz, ds.n_in, ds.n_out, dw, db, Some(&mut dx),
                 );
             }
+            arena.put_f32(dy);
             dy = dx;
         }
         // un-flatten back to NCHW
-        let mut dpool = vec![0.0f32; bsz * last.out_ch * last.pool_hw * last.pool_hw];
+        let mut dpool = arena.take_f32(bsz * last.out_ch * last.pool_hw * last.pool_hw);
         ops::nhwc_to_nchw(&dy, bsz, last.out_ch, last.pool_hw, last.pool_hw, &mut dpool);
+        arena.put_f32(dy);
 
         for (ci, cs) in self.convs.iter().enumerate().rev() {
             // pool backward, then the ReLU mask of the conv activation
-            let mut dconv = vec![0.0f32; bsz * cs.out_ch * cs.conv_hw * cs.conv_hw];
+            let mut dconv = arena.take_f32(bsz * cs.out_ch * cs.out_hw());
             ops::maxpool2_bwd(&dpool, &argmaxes[ci], &mut dconv);
             ops::relu_bwd_mask(&conv_acts[ci], &mut dconv);
-            let input: &[f32] = if ci == 0 { x } else { &pool_outs[ci - 1] };
             let need_dx = ci > 0;
             let mut dx = if need_dx {
-                vec![0.0f32; bsz * cs.in_ch * cs.in_hw * cs.in_hw]
+                arena.take_f32(bsz * cs.in_ch * cs.in_hw * cs.in_hw)
             } else {
                 Vec::new()
             };
+            let mut dcol = arena.take_f32(cs.patch_k() * cs.out_hw());
             {
                 let (dw, db): (&mut [f32], &mut [f32]) = {
                     let (wo, bo) = (cs.w_off, cs.b_off);
-                    let wlen = cs.out_ch * cs.in_ch * cs.k * cs.k;
+                    let wlen = cs.w_len();
                     debug_assert_eq!(bo, wo + wlen);
                     let (head, tail) = grad.split_at_mut(bo);
                     (&mut head[wo..wo + wlen], &mut tail[..cs.out_ch])
                 };
-                ops::conv2d_bwd(
-                    input,
-                    &params[cs.w_off..cs.w_off + cs.out_ch * cs.in_ch * cs.k * cs.k],
+                ops::conv2d_bwd_cols(
+                    &cols_cache[ci],
+                    &params[cs.w_off..cs.w_off + cs.w_len()],
                     &dconv, bsz, cs.in_ch, cs.in_hw, cs.in_hw, cs.out_ch, cs.k,
                     dw, db,
                     if need_dx { Some(&mut dx) } else { None },
+                    &mut dcol,
                 );
             }
+            arena.put_f32(dcol);
+            arena.put_f32(dconv);
+            arena.put_f32(dpool);
             dpool = dx;
+        }
+        arena.put_f32(dpool);
+
+        for v in cols_cache {
+            arena.put_f32(v);
+        }
+        for v in conv_acts {
+            arena.put_f32(v);
+        }
+        for v in pool_outs {
+            arena.put_f32(v);
+        }
+        for v in argmaxes {
+            arena.put_u32(v);
+        }
+        for v in dense_ins {
+            arena.put_f32(v);
         }
         loss
     }
@@ -278,6 +381,55 @@ impl NativeCnn {
         bsz: usize,
         lr: f32,
     ) -> f32 {
+        let mut arena = ScratchArena::new();
+        self.local_round_arena(params, xs, ys, l, bsz, lr, &mut arena)
+    }
+
+    /// [`NativeCnn::local_round`] with caller-owned scratch — the sweep
+    /// hot path. With a warm arena a full round allocates no tensor
+    /// buffers at all.
+    #[allow(clippy::too_many_arguments)]
+    pub fn local_round_arena(
+        &self,
+        params: &mut [f32],
+        xs: &[f32],
+        ys: &[f32],
+        l: usize,
+        bsz: usize,
+        lr: f32,
+        arena: &mut ScratchArena,
+    ) -> f32 {
+        let px = self.pixels();
+        assert_eq!(xs.len(), l * bsz * px);
+        assert_eq!(ys.len(), l * bsz * NUM_CLASSES);
+        let mut grad = arena.take_f32(self.info.params);
+        let mut loss_sum = 0.0f64;
+        for li in 0..l {
+            let x = &xs[li * bsz * px..(li + 1) * bsz * px];
+            let y = &ys[li * bsz * NUM_CLASSES..(li + 1) * bsz * NUM_CLASSES];
+            let loss = self.loss_and_grad_arena(params, x, y, bsz, &mut grad, arena);
+            for (p, &g) in params.iter_mut().zip(grad.iter()) {
+                *p -= lr * g;
+            }
+            loss_sum += loss as f64;
+        }
+        arena.put_f32(grad);
+        (loss_sum / l as f64) as f32
+    }
+
+    /// The pre-blocking scalar local round (PR 1 kernels, allocation-happy)
+    /// — the oracle the parity tests compare against and the baseline
+    /// `hfl bench` measures the blocked-kernel speedup from. Semantics
+    /// match [`NativeCnn::local_round`] to float tolerance.
+    pub fn local_round_reference(
+        &self,
+        params: &mut [f32],
+        xs: &[f32],
+        ys: &[f32],
+        l: usize,
+        bsz: usize,
+        lr: f32,
+    ) -> f32 {
         let px = self.pixels();
         assert_eq!(xs.len(), l * bsz * px);
         assert_eq!(ys.len(), l * bsz * NUM_CLASSES);
@@ -286,13 +438,125 @@ impl NativeCnn {
         for li in 0..l {
             let x = &xs[li * bsz * px..(li + 1) * bsz * px];
             let y = &ys[li * bsz * NUM_CLASSES..(li + 1) * bsz * NUM_CLASSES];
-            let loss = self.loss_and_grad(params, x, y, bsz, &mut grad);
+            let loss = self.loss_and_grad_reference(params, x, y, bsz, &mut grad);
             for (p, &g) in params.iter_mut().zip(grad.iter()) {
                 *p -= lr * g;
             }
             loss_sum += loss as f64;
         }
         (loss_sum / l as f64) as f32
+    }
+
+    /// Scalar-kernel loss + gradient (see [`NativeCnn::local_round_reference`]).
+    pub fn loss_and_grad_reference(
+        &self,
+        params: &[f32],
+        x: &[f32],
+        y_onehot: &[f32],
+        bsz: usize,
+        grad: &mut [f32],
+    ) -> f32 {
+        use ops::reference as r;
+        assert_eq!(params.len(), self.info.params);
+        assert_eq!(grad.len(), self.info.params);
+        assert_eq!(x.len(), bsz * self.pixels());
+        assert_eq!(y_onehot.len(), bsz * NUM_CLASSES);
+
+        let mut conv_acts: Vec<Vec<f32>> = Vec::with_capacity(self.convs.len());
+        let mut pool_outs: Vec<Vec<f32>> = Vec::with_capacity(self.convs.len());
+        let mut argmaxes: Vec<Vec<u32>> = Vec::with_capacity(self.convs.len());
+        for (ci, cs) in self.convs.iter().enumerate() {
+            let input: &[f32] = if ci == 0 { x } else { &pool_outs[ci - 1] };
+            let mut conv = vec![0.0f32; bsz * cs.out_ch * cs.out_hw()];
+            r::conv2d_fwd(
+                input,
+                &params[cs.w_off..cs.w_off + cs.w_len()],
+                &params[cs.b_off..cs.b_off + cs.out_ch],
+                bsz, cs.in_ch, cs.in_hw, cs.in_hw, cs.out_ch, cs.k, true, &mut conv,
+            );
+            let mut pool = vec![0.0f32; bsz * cs.out_ch * cs.pool_hw * cs.pool_hw];
+            let mut am = vec![0u32; pool.len()];
+            r::maxpool2_fwd(&conv, bsz, cs.out_ch, cs.conv_hw, cs.conv_hw, &mut pool, &mut am);
+            conv_acts.push(conv);
+            argmaxes.push(am);
+            pool_outs.push(pool);
+        }
+        let last = self.convs.last().expect("at least one conv block");
+        let last_pool = pool_outs.last().expect("pool output present");
+        let mut flat = vec![0.0f32; bsz * self.feat];
+        ops::nchw_to_nhwc(last_pool, bsz, last.out_ch, last.pool_hw, last.pool_hw, &mut flat);
+        let mut dense_ins: Vec<Vec<f32>> = vec![flat];
+        for ds in &self.denses {
+            let prev = dense_ins.last().expect("flatten output present");
+            let mut out = vec![0.0f32; bsz * ds.n_out];
+            r::dense_fwd(
+                prev,
+                &params[ds.w_off..ds.w_off + ds.n_in * ds.n_out],
+                &params[ds.b_off..ds.b_off + ds.n_out],
+                bsz, ds.n_in, ds.n_out, ds.relu, &mut out,
+            );
+            dense_ins.push(out);
+        }
+        let logits = dense_ins.last().expect("logits present");
+        let mut dy = vec![0.0f32; bsz * NUM_CLASSES];
+        let loss = ops::softmax_xent(logits, y_onehot, bsz, NUM_CLASSES, &mut dy);
+
+        grad.fill(0.0);
+        for (di, ds) in self.denses.iter().enumerate().rev() {
+            if ds.relu {
+                ops::relu_bwd_mask(&dense_ins[di + 1], &mut dy);
+            }
+            let input = &dense_ins[di];
+            let mut dx = vec![0.0f32; bsz * ds.n_in];
+            {
+                let (dw, db): (&mut [f32], &mut [f32]) = {
+                    let (wo, bo) = (ds.w_off, ds.b_off);
+                    let wlen = ds.n_in * ds.n_out;
+                    debug_assert_eq!(bo, wo + wlen);
+                    let (head, tail) = grad.split_at_mut(bo);
+                    (&mut head[wo..wo + wlen], &mut tail[..ds.n_out])
+                };
+                r::dense_bwd(
+                    input,
+                    &params[ds.w_off..ds.w_off + ds.n_in * ds.n_out],
+                    &dy, bsz, ds.n_in, ds.n_out, dw, db, Some(&mut dx),
+                );
+            }
+            dy = dx;
+        }
+        let mut dpool = vec![0.0f32; bsz * last.out_ch * last.pool_hw * last.pool_hw];
+        ops::nhwc_to_nchw(&dy, bsz, last.out_ch, last.pool_hw, last.pool_hw, &mut dpool);
+
+        for (ci, cs) in self.convs.iter().enumerate().rev() {
+            let mut dconv = vec![0.0f32; bsz * cs.out_ch * cs.out_hw()];
+            r::maxpool2_bwd(&dpool, &argmaxes[ci], &mut dconv);
+            ops::relu_bwd_mask(&conv_acts[ci], &mut dconv);
+            let input: &[f32] = if ci == 0 { x } else { &pool_outs[ci - 1] };
+            let need_dx = ci > 0;
+            let mut dx = if need_dx {
+                vec![0.0f32; bsz * cs.in_ch * cs.in_hw * cs.in_hw]
+            } else {
+                Vec::new()
+            };
+            {
+                let (dw, db): (&mut [f32], &mut [f32]) = {
+                    let (wo, bo) = (cs.w_off, cs.b_off);
+                    let wlen = cs.w_len();
+                    debug_assert_eq!(bo, wo + wlen);
+                    let (head, tail) = grad.split_at_mut(bo);
+                    (&mut head[wo..wo + wlen], &mut tail[..cs.out_ch])
+                };
+                r::conv2d_bwd(
+                    input,
+                    &params[cs.w_off..cs.w_off + cs.w_len()],
+                    &dconv, bsz, cs.in_ch, cs.in_hw, cs.in_hw, cs.out_ch, cs.k,
+                    dw, db,
+                    if need_dx { Some(&mut dx) } else { None },
+                );
+            }
+            dpool = dx;
+        }
+        loss
     }
 }
 
@@ -412,5 +676,48 @@ mod tests {
         assert_eq!(l1, l2);
         assert_eq!(p1, p2);
         assert_ne!(p1, base, "params must move");
+    }
+
+    #[test]
+    fn warm_arena_local_round_matches_and_stops_allocating() {
+        let m = tiny();
+        let base = init_params(&m.info, Init::HeNormal, &mut Rng::new(11));
+        let mut rng = Rng::new(12);
+        let (l, bsz) = (2, 4);
+        let xs: Vec<f32> = (0..l * bsz * m.pixels()).map(|_| rng.f32()).collect();
+        let mut ys = vec![0.0f32; l * bsz * NUM_CLASSES];
+        for s in 0..l * bsz {
+            ys[s * NUM_CLASSES + s % NUM_CLASSES] = 1.0;
+        }
+        let mut arena = ScratchArena::new();
+        let mut p1 = base.clone();
+        let l1 = m.local_round_arena(&mut p1, &xs, &ys, l, bsz, 0.1, &mut arena);
+        let warm = arena.misses();
+        let mut p2 = base.clone();
+        let l2 = m.local_round_arena(&mut p2, &xs, &ys, l, bsz, 0.1, &mut arena);
+        assert_eq!(l1, l2, "arena reuse must not change results");
+        assert_eq!(p1, p2);
+        assert_eq!(arena.misses(), warm, "warm arena must not allocate");
+    }
+
+    #[test]
+    fn blocked_round_matches_reference_round() {
+        let m = tiny();
+        let base = init_params(&m.info, Init::HeNormal, &mut Rng::new(21));
+        let mut rng = Rng::new(22);
+        let (l, bsz) = (2, 3); // bsz deliberately not a tile multiple
+        let xs: Vec<f32> = (0..l * bsz * m.pixels()).map(|_| rng.f32() * 2.0 - 1.0).collect();
+        let mut ys = vec![0.0f32; l * bsz * NUM_CLASSES];
+        for s in 0..l * bsz {
+            ys[s * NUM_CLASSES + s % NUM_CLASSES] = 1.0;
+        }
+        let mut pb = base.clone();
+        let mut pr = base.clone();
+        let lb = m.local_round(&mut pb, &xs, &ys, l, bsz, 0.05);
+        let lref = m.local_round_reference(&mut pr, &xs, &ys, l, bsz, 0.05);
+        assert!((lb - lref).abs() < 1e-4, "loss {lb} vs reference {lref}");
+        for (i, (a, b)) in pb.iter().zip(&pr).enumerate() {
+            assert!((a - b).abs() < 1e-4, "param {i}: {a} vs {b}");
+        }
     }
 }

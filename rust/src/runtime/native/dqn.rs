@@ -6,9 +6,16 @@
 //! prefix hidden for every split t, one scan over the reversed sequence
 //! yields the suffix hidden, and the dueling heads (eq. 20) combine them
 //! into Q[H, M] for the whole episode in a single call.
+//!
+//! The input projection (`feats @ Wi + b`, all timesteps) and the dueling
+//! heads (`[h_f;h_b] @ fc_w`, advantage/value heads) are batched through
+//! the blocked GEMM in [`super::gemm`]; only the recurrent `h @ Wh` matvec
+//! stays per-step. Scratch comes from a [`ScratchArena`].
 
+use super::gemm::{self, Epilogue};
 use super::ops::sigmoid;
 use super::push_leaf;
+use super::scratch::ScratchArena;
 use crate::runtime::manifest::ModelInfo;
 
 #[derive(Clone, Debug)]
@@ -56,22 +63,12 @@ impl NativeDqn {
         }
     }
 
-    /// One shared-parameter LSTM step (gate order [i, f, g, o]).
-    fn lstm_step(&self, theta: &[f32], x: &[f32], h: &mut [f32], c: &mut [f32], gates: &mut [f32]) {
+    /// One shared-parameter LSTM step (gate order [i, f, g, o]) with the
+    /// input projection `x@Wi + b` already precomputed into `xw_t`.
+    fn lstm_step_pre(&self, theta: &[f32], xw_t: &[f32], h: &mut [f32], c: &mut [f32], gates: &mut [f32]) {
         let hid = self.hid;
-        let wi = &theta[self.wi..self.wi + self.feat * 4 * hid];
         let wh = &theta[self.wh..self.wh + hid * 4 * hid];
-        let b = &theta[self.b..self.b + 4 * hid];
-        gates.copy_from_slice(b);
-        for (j, &xv) in x.iter().enumerate() {
-            if xv == 0.0 {
-                continue;
-            }
-            let row = &wi[j * 4 * hid..(j + 1) * 4 * hid];
-            for (g, &wv) in gates.iter_mut().zip(row) {
-                *g += xv * wv;
-            }
-        }
+        gates.copy_from_slice(xw_t);
         for (j, &hv) in h.iter().enumerate() {
             if hv == 0.0 {
                 continue;
@@ -94,6 +91,18 @@ impl NativeDqn {
     /// Q-values for every split position of one episode: `feats` is a
     /// row-major `(h, F)` matrix, the result a row-major `(h, M)` matrix.
     pub fn qvalues_all(&self, theta: &[f32], feats: &[f32], h: usize) -> anyhow::Result<Vec<f32>> {
+        let mut arena = ScratchArena::new();
+        self.qvalues_all_arena(theta, feats, h, &mut arena)
+    }
+
+    /// [`NativeDqn::qvalues_all`] with caller-owned scratch.
+    pub fn qvalues_all_arena(
+        &self,
+        theta: &[f32],
+        feats: &[f32],
+        h: usize,
+        arena: &mut ScratchArena,
+    ) -> anyhow::Result<Vec<f32>> {
         anyhow::ensure!(
             theta.len() == self.info.params,
             "dqn theta has {} params, expected {}",
@@ -108,28 +117,43 @@ impl NativeDqn {
             self.feat
         );
         let hid = self.hid;
-        let mut gates = vec![0.0f32; 4 * hid];
+
+        // input projection for every timestep in one blocked GEMM
+        let wi = &theta[self.wi..self.wi + self.feat * 4 * hid];
+        let bias = &theta[self.b..self.b + 4 * hid];
+        let mut xw = arena.take_f32(h * 4 * hid);
+        gemm::gemm_nn(
+            feats,
+            wi,
+            h,
+            self.feat,
+            4 * hid,
+            &Epilogue::BiasCol { bias, relu: false },
+            &mut xw,
+        );
+
+        let mut gates = arena.take_f32(4 * hid);
+        let mut hh = arena.take_f32(hid);
+        let mut cc = arena.take_f32(hid);
 
         // prefix hiddens: hs_f[t] encodes χ_1..χ_{t+1}
-        let mut hs_f = vec![0.0f32; h * hid];
-        {
-            let mut hh = vec![0.0f32; hid];
-            let mut cc = vec![0.0f32; hid];
-            for t in 0..h {
-                self.lstm_step(theta, &feats[t * self.feat..(t + 1) * self.feat], &mut hh, &mut cc, &mut gates);
-                hs_f[t * hid..(t + 1) * hid].copy_from_slice(&hh);
-            }
+        let mut hs_f = arena.take_f32(h * hid);
+        for t in 0..h {
+            self.lstm_step_pre(theta, &xw[t * 4 * hid..(t + 1) * 4 * hid], &mut hh, &mut cc, &mut gates);
+            hs_f[t * hid..(t + 1) * hid].copy_from_slice(&hh);
         }
         // suffix hiddens: hs_b[t] encodes χ_{t+1}..χ_H (same shared cell φ)
-        let mut hs_b = vec![0.0f32; h * hid];
-        {
-            let mut hh = vec![0.0f32; hid];
-            let mut cc = vec![0.0f32; hid];
-            for t in (0..h).rev() {
-                self.lstm_step(theta, &feats[t * self.feat..(t + 1) * self.feat], &mut hh, &mut cc, &mut gates);
-                hs_b[t * hid..(t + 1) * hid].copy_from_slice(&hh);
-            }
+        let mut hs_b = arena.take_f32(h * hid);
+        hh.fill(0.0);
+        cc.fill(0.0);
+        for t in (0..h).rev() {
+            self.lstm_step_pre(theta, &xw[t * 4 * hid..(t + 1) * 4 * hid], &mut hh, &mut cc, &mut gates);
+            hs_b[t * hid..(t + 1) * hid].copy_from_slice(&hh);
         }
+        arena.put_f32(gates);
+        arena.put_f32(hh);
+        arena.put_f32(cc);
+        arena.put_f32(xw);
 
         let fc_w = &theta[self.fc_w..self.fc_w + 2 * hid * self.fc];
         let fc_b = &theta[self.fc_b..self.fc_b + self.fc];
@@ -138,47 +162,52 @@ impl NativeDqn {
         let a_w = &theta[self.a_w..self.a_w + self.fc * self.n_edges];
         let a_b = &theta[self.a_b..self.a_b + self.n_edges];
 
+        // trunk = relu([h_f ; h_b] @ fc_w + fc_b) for all t at once
+        let mut hcat = arena.take_f32(h * 2 * hid);
+        for t in 0..h {
+            hcat[t * 2 * hid..t * 2 * hid + hid].copy_from_slice(&hs_f[t * hid..(t + 1) * hid]);
+            hcat[t * 2 * hid + hid..(t + 1) * 2 * hid]
+                .copy_from_slice(&hs_b[t * hid..(t + 1) * hid]);
+        }
+        arena.put_f32(hs_f);
+        arena.put_f32(hs_b);
+        let mut trunks = arena.take_f32(h * self.fc);
+        gemm::gemm_nn(
+            &hcat,
+            fc_w,
+            h,
+            2 * hid,
+            self.fc,
+            &Epilogue::BiasCol { bias: fc_b, relu: true },
+            &mut trunks,
+        );
+        arena.put_f32(hcat);
+
+        // dueling combination (eq. 20): advantages via GEMM, value per t
         let m = self.n_edges;
         let mut q = vec![0.0f32; h * m];
-        let mut trunk = vec![0.0f32; self.fc];
+        gemm::gemm_nn(
+            &trunks,
+            a_w,
+            h,
+            self.fc,
+            m,
+            &Epilogue::BiasCol { bias: a_b, relu: false },
+            &mut q,
+        );
         for t in 0..h {
-            // trunk = relu([h_f ; h_b] @ fc_w + fc_b)
-            trunk.copy_from_slice(fc_b);
-            for (j, &hv) in hs_f[t * hid..(t + 1) * hid].iter().enumerate() {
-                let row = &fc_w[j * self.fc..(j + 1) * self.fc];
-                for (tv, &wv) in trunk.iter_mut().zip(row) {
-                    *tv += hv * wv;
-                }
-            }
-            for (j, &hv) in hs_b[t * hid..(t + 1) * hid].iter().enumerate() {
-                let row = &fc_w[(hid + j) * self.fc..(hid + j + 1) * self.fc];
-                for (tv, &wv) in trunk.iter_mut().zip(row) {
-                    *tv += hv * wv;
-                }
-            }
-            for tv in trunk.iter_mut() {
-                if *tv < 0.0 {
-                    *tv = 0.0;
-                }
-            }
-            // dueling combination (eq. 20)
+            let trunk = &trunks[t * self.fc..(t + 1) * self.fc];
             let mut v = v_b;
             for (tv, &wv) in trunk.iter().zip(v_w) {
                 v += tv * wv;
             }
             let qrow = &mut q[t * m..(t + 1) * m];
-            qrow.copy_from_slice(a_b);
-            for (j, &tv) in trunk.iter().enumerate() {
-                let row = &a_w[j * m..(j + 1) * m];
-                for (qv, &wv) in qrow.iter_mut().zip(row) {
-                    *qv += tv * wv;
-                }
-            }
             let a_mean: f32 = qrow.iter().sum::<f32>() / m as f32;
             for qv in qrow.iter_mut() {
                 *qv = v + *qv - a_mean;
             }
         }
+        arena.put_f32(trunks);
         Ok(q)
     }
 }
@@ -209,6 +238,21 @@ mod tests {
         assert_eq!(q1.len(), h * 5);
         assert!(q1.iter().all(|v| v.is_finite()));
         assert_eq!(q1, q2);
+    }
+
+    #[test]
+    fn arena_reuse_is_bit_stable() {
+        let d = NativeDqn::new(5, 16, 16);
+        let theta = init_params(&d.info, Init::GlorotUniform, &mut Rng::new(9));
+        let mut rng = Rng::new(10);
+        let h = 9;
+        let feats: Vec<f32> = (0..h * d.feat).map(|_| rng.f32()).collect();
+        let mut arena = ScratchArena::new();
+        let q1 = d.qvalues_all_arena(&theta, &feats, h, &mut arena).unwrap();
+        let warm = arena.misses();
+        let q2 = d.qvalues_all_arena(&theta, &feats, h, &mut arena).unwrap();
+        assert_eq!(q1, q2);
+        assert_eq!(arena.misses(), warm, "warm arena must not allocate");
     }
 
     #[test]

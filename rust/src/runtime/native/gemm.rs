@@ -1,0 +1,540 @@
+//! Cache-blocked, register-tiled GEMM — the single compute core behind
+//! every dense and (via im2col) convolution kernel of the native backend.
+//!
+//! Layout and blocking
+//! -------------------
+//! All matrices are row-major `f32`. The driver walks the output in
+//! `MR × NR` microtiles: for each `NR`-column strip it packs the B panel
+//! (`klen × NR`, zero-padded on the column tail) and, per row tile, packs
+//! the A tile (`klen × MR`, zero-padded on the row tail) so the
+//! microkernel streams two small contiguous L1-resident buffers. The
+//! K dimension is split into `KC`-sized blocks; blocks after the first
+//! accumulate into the output, so register pressure stays constant for
+//! any K.
+//!
+//! The microkernel keeps an `MR × NR` accumulator tile in registers and
+//! performs `2·MR·NR` flops per packed K step. On stable Rust the inner
+//! `NR`-wide loops auto-vectorize; the optional `portable-simd` feature
+//! swaps in an explicit `std::simd::f32x8` version (nightly only) with
+//! identical semantics and results.
+//!
+//! Numerics: every output element accumulates its K terms in ascending-K
+//! order — the order of the scalar reference kernels
+//! (`super::ops::reference`). For `K ≤ KC` that makes NN/TN/NT results
+//! bit-identical to the reference (modulo the reference's skip of
+//! exact-zero A elements, which only affects signed zeros); for `K > KC`
+//! the partial sum round-trips through `out` as `f32` at each block
+//! boundary, which rounds intermediate values the reference keeps exact,
+//! so results agree to float tolerance (~1e-4 on paper-scale shapes),
+//! not bitwise. Fused epilogues add the bias *after* the K sum, matching
+//! the reference order.
+//!
+//! Known headroom: the A tile is re-packed once per `NR`-column strip
+//! (`n/NR` times per K block). Of the two simple loop nests this is the
+//! cheaper one (repacking B per row tile would copy `NR/MR = 2×` more),
+//! but a BLIS-style buffered A pack (pack all row tiles of a K block
+//! once, reuse across strips) would shave the remaining ~5% copy
+//! overhead at the cost of an `m×klen` staging buffer.
+//!
+//! Zero-padding invariant: panel columns beyond the strip width and A
+//! rows beyond the row tail are packed as zeros, so padded lanes
+//! contribute exact zeros to the accumulator and are never stored —
+//! shapes that are not multiples of `MR`/`NR`/`KC` are first-class (see
+//! the parity tests for batch sizes that are not a multiple of the pad
+//! width).
+
+/// Rows per microtile.
+pub const MR: usize = 4;
+/// Columns per microtile (one vector strip).
+pub const NR: usize = 8;
+/// K-dimension block size (panel height).
+pub const KC: usize = 256;
+
+/// Fused write-back applied to the K-summed tile (after the last K block).
+pub enum Epilogue<'a> {
+    /// Plain store (or accumulate) of the GEMM result.
+    None,
+    /// `out[i][j] += bias[j]`, then optional ReLU — dense layers, where
+    /// columns are output features.
+    BiasCol { bias: &'a [f32], relu: bool },
+    /// `out[i][j] += bias[i]`, then optional ReLU — conv-as-GEMM, where
+    /// rows are output channels.
+    BiasRow { bias: &'a [f32], relu: bool },
+}
+
+/// How the driver reads A: `RowMajor` is the NN/NT shape (`a[i*lda + kk]`),
+/// `ColMajor` the TN shape (`a[kk*lda + i]`).
+enum ASrc<'a> {
+    RowMajor { a: &'a [f32], lda: usize },
+    ColMajor { a: &'a [f32], lda: usize },
+}
+
+/// How the driver reads B: `RowMajor` is the NN/TN shape (`b[kk*ldb + j]`),
+/// `Transposed` the NT shape (`b[j*ldb + kk]`, i.e. B stored as `n × k`).
+enum BSrc<'a> {
+    RowMajor { b: &'a [f32], ldb: usize },
+    Transposed { b: &'a [f32], ldb: usize },
+}
+
+/// Pack the `klen × NR` B panel for column strip `j0..j0+jlen`,
+/// zero-padding columns `jlen..NR`.
+fn pack_b(bsrc: &BSrc, k0: usize, klen: usize, j0: usize, jlen: usize, panel: &mut [f32]) {
+    match *bsrc {
+        BSrc::RowMajor { b, ldb } => {
+            for kk in 0..klen {
+                let src = &b[(k0 + kk) * ldb + j0..(k0 + kk) * ldb + j0 + jlen];
+                let dst = &mut panel[kk * NR..kk * NR + NR];
+                dst[..jlen].copy_from_slice(src);
+                for v in dst[jlen..].iter_mut() {
+                    *v = 0.0;
+                }
+            }
+        }
+        BSrc::Transposed { b, ldb } => {
+            for kk in 0..klen {
+                let dst = &mut panel[kk * NR..kk * NR + NR];
+                for j in 0..jlen {
+                    dst[j] = b[(j0 + j) * ldb + k0 + kk];
+                }
+                for v in dst[jlen..].iter_mut() {
+                    *v = 0.0;
+                }
+            }
+        }
+    }
+}
+
+/// Pack the `klen × MR` A tile for row tile `i0..i0+mr`, zero-padding rows
+/// `mr..MR`. Layout is K-interleaved: `apack[kk*MR + r]`.
+fn pack_a(asrc: &ASrc, i0: usize, mr: usize, k0: usize, klen: usize, apack: &mut [f32]) {
+    match *asrc {
+        ASrc::RowMajor { a, lda } => {
+            for r in 0..mr {
+                let row = &a[(i0 + r) * lda + k0..(i0 + r) * lda + k0 + klen];
+                for (kk, &v) in row.iter().enumerate() {
+                    apack[kk * MR + r] = v;
+                }
+            }
+        }
+        ASrc::ColMajor { a, lda } => {
+            for kk in 0..klen {
+                let src = &a[(k0 + kk) * lda + i0..(k0 + kk) * lda + i0 + mr];
+                let dst = &mut apack[kk * MR..kk * MR + mr];
+                dst.copy_from_slice(src);
+            }
+        }
+    }
+    if mr < MR {
+        for kk in 0..klen {
+            for r in mr..MR {
+                apack[kk * MR + r] = 0.0;
+            }
+        }
+    }
+}
+
+/// The register-tiled inner loop: `acc[r][j] += apack[kk][r] * panel[kk][j]`
+/// over `klen` packed K steps. Accumulation per output element is in
+/// ascending-K order (see module docs).
+#[cfg(not(feature = "portable-simd"))]
+#[inline(always)]
+fn microkernel<const M: usize>(apack: &[f32], panel: &[f32], klen: usize) -> [[f32; NR]; M] {
+    let mut acc = [[0.0f32; NR]; M];
+    for kk in 0..klen {
+        let arow = &apack[kk * MR..kk * MR + MR];
+        let brow = &panel[kk * NR..kk * NR + NR];
+        for r in 0..M {
+            let av = arow[r];
+            let accr = &mut acc[r];
+            for j in 0..NR {
+                accr[j] += av * brow[j];
+            }
+        }
+    }
+    acc
+}
+
+/// `std::simd` microkernel (nightly, `--features portable-simd`): same
+/// element order, explicitly 8-wide.
+#[cfg(feature = "portable-simd")]
+#[inline(always)]
+fn microkernel<const M: usize>(apack: &[f32], panel: &[f32], klen: usize) -> [[f32; NR]; M] {
+    use std::simd::f32x8;
+    let mut acc = [f32x8::splat(0.0); M];
+    for kk in 0..klen {
+        let arow = &apack[kk * MR..kk * MR + MR];
+        let bv = f32x8::from_slice(&panel[kk * NR..kk * NR + NR]);
+        for r in 0..M {
+            acc[r] += f32x8::splat(arow[r]) * bv;
+        }
+    }
+    let mut out = [[0.0f32; NR]; M];
+    for r in 0..M {
+        out[r] = acc[r].to_array();
+    }
+    out
+}
+
+/// Write one microtile back to `out`, honoring accumulation and the fused
+/// epilogue. Only the `jlen` valid columns are touched.
+#[allow(clippy::too_many_arguments)]
+#[inline(always)]
+fn store_tile<const M: usize>(
+    acc: &[[f32; NR]; M],
+    out: &mut [f32],
+    ldc: usize,
+    i0: usize,
+    j0: usize,
+    jlen: usize,
+    beta_one: bool,
+    apply_epi: bool,
+    epi: &Epilogue,
+) {
+    for r in 0..M {
+        let row = &mut out[(i0 + r) * ldc + j0..(i0 + r) * ldc + j0 + jlen];
+        for j in 0..jlen {
+            let mut v = if beta_one { row[j] + acc[r][j] } else { acc[r][j] };
+            if apply_epi {
+                match *epi {
+                    Epilogue::None => {}
+                    Epilogue::BiasCol { bias, relu } => {
+                        v += bias[j0 + j];
+                        if relu && v < 0.0 {
+                            v = 0.0;
+                        }
+                    }
+                    Epilogue::BiasRow { bias, relu } => {
+                        v += bias[i0 + r];
+                        if relu && v < 0.0 {
+                            v = 0.0;
+                        }
+                    }
+                }
+            }
+            row[j] = v;
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+#[inline(always)]
+fn process_tile<const M: usize>(
+    apack: &[f32],
+    panel: &[f32],
+    klen: usize,
+    out: &mut [f32],
+    ldc: usize,
+    i0: usize,
+    j0: usize,
+    jlen: usize,
+    beta_one: bool,
+    apply_epi: bool,
+    epi: &Epilogue,
+) {
+    let acc = microkernel::<M>(apack, panel, klen);
+    store_tile::<M>(&acc, out, ldc, i0, j0, jlen, beta_one, apply_epi, epi);
+}
+
+/// The blocked driver. `accumulate` adds into `out` instead of overwriting
+/// it (only valid with `Epilogue::None`).
+fn gemm_driver(
+    asrc: ASrc,
+    bsrc: BSrc,
+    m: usize,
+    k: usize,
+    n: usize,
+    accumulate: bool,
+    epi: &Epilogue,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(out.len(), m * n);
+    debug_assert!(!accumulate || matches!(epi, Epilogue::None));
+    if m == 0 || n == 0 {
+        return;
+    }
+    if k == 0 {
+        // the sum is empty but the epilogue still applies (matches the
+        // reference: matmul yields zeros, then bias/ReLU run over them)
+        if !accumulate {
+            for i in 0..m {
+                for j in 0..n {
+                    let mut v = 0.0f32;
+                    match *epi {
+                        Epilogue::None => {}
+                        Epilogue::BiasCol { bias, relu } => {
+                            v += bias[j];
+                            if relu && v < 0.0 {
+                                v = 0.0;
+                            }
+                        }
+                        Epilogue::BiasRow { bias, relu } => {
+                            v += bias[i];
+                            if relu && v < 0.0 {
+                                v = 0.0;
+                            }
+                        }
+                    }
+                    out[i * n + j] = v;
+                }
+            }
+        }
+        return;
+    }
+    let mut panel = [0.0f32; KC * NR];
+    let mut apack = [0.0f32; KC * MR];
+    let mut j0 = 0usize;
+    while j0 < n {
+        let jlen = NR.min(n - j0);
+        let mut k0 = 0usize;
+        while k0 < k {
+            let klen = KC.min(k - k0);
+            pack_b(&bsrc, k0, klen, j0, jlen, &mut panel[..klen * NR]);
+            // blocks after the first accumulate into the partial sums
+            // already stored in `out`; the epilogue fires on the last
+            let beta_one = accumulate || k0 > 0;
+            let apply_epi = k0 + klen == k;
+            let mut i0 = 0usize;
+            while i0 < m {
+                let mr = MR.min(m - i0);
+                pack_a(&asrc, i0, mr, k0, klen, &mut apack[..klen * MR]);
+                let ap = &apack[..klen * MR];
+                let bp = &panel[..klen * NR];
+                match mr {
+                    4 => process_tile::<4>(ap, bp, klen, out, n, i0, j0, jlen, beta_one, apply_epi, epi),
+                    3 => process_tile::<3>(ap, bp, klen, out, n, i0, j0, jlen, beta_one, apply_epi, epi),
+                    2 => process_tile::<2>(ap, bp, klen, out, n, i0, j0, jlen, beta_one, apply_epi, epi),
+                    _ => process_tile::<1>(ap, bp, klen, out, n, i0, j0, jlen, beta_one, apply_epi, epi),
+                }
+                i0 += mr;
+            }
+            k0 += klen;
+        }
+        j0 += jlen;
+    }
+}
+
+/// `out[m×n] = a[m×k] @ b[k×n]`, with an optional fused epilogue.
+pub fn gemm_nn(
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    epi: &Epilogue,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    gemm_driver(
+        ASrc::RowMajor { a, lda: k },
+        BSrc::RowMajor { b, ldb: n },
+        m,
+        k,
+        n,
+        false,
+        epi,
+        out,
+    );
+}
+
+/// `out[m×n] (+)= aᵀ[k×m] @ b[k×n]` — the dW = Xᵀ·dY shape.
+pub fn gemm_tn(
+    a: &[f32],
+    b: &[f32],
+    k: usize,
+    m: usize,
+    n: usize,
+    accumulate: bool,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(a.len(), k * m);
+    debug_assert_eq!(b.len(), k * n);
+    gemm_driver(
+        ASrc::ColMajor { a, lda: m },
+        BSrc::RowMajor { b, ldb: n },
+        m,
+        k,
+        n,
+        accumulate,
+        &Epilogue::None,
+        out,
+    );
+}
+
+/// `out[m×n] (+)= a[m×k] @ bᵀ[n×k]` — the dX = dY·Wᵀ shape.
+pub fn gemm_nt(
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    accumulate: bool,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    gemm_driver(
+        ASrc::RowMajor { a, lda: k },
+        BSrc::Transposed { b, ldb: k },
+        m,
+        k,
+        n,
+        accumulate,
+        &Epilogue::None,
+        out,
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn naive_nn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        let mut out = vec![0.0f64; m * n];
+        for i in 0..m {
+            for kk in 0..k {
+                for j in 0..n {
+                    out[i * n + j] += a[i * k + kk] as f64 * b[kk * n + j] as f64;
+                }
+            }
+        }
+        out.iter().map(|&v| v as f32).collect()
+    }
+
+    fn fill(seed: usize, len: usize) -> Vec<f32> {
+        (0..len).map(|i| ((i * 7 + seed * 13) as f32 * 0.37).sin()).collect()
+    }
+
+    #[test]
+    fn nn_matches_naive_across_tail_shapes() {
+        // shapes straddling the MR/NR/KC boundaries, incl. non-multiples
+        for &(m, k, n) in &[
+            (1usize, 1usize, 1usize),
+            (3, 5, 7),
+            (4, 8, 8),
+            (5, 9, 17),
+            (13, 300, 21),
+            (8, 448, 220),
+        ] {
+            let a = fill(m, m * k);
+            let b = fill(n, k * n);
+            let mut out = vec![0.0f32; m * n];
+            gemm_nn(&a, &b, m, k, n, &Epilogue::None, &mut out);
+            let want = naive_nn(&a, &b, m, k, n);
+            for (u, v) in out.iter().zip(&want) {
+                assert!((u - v).abs() < 1e-3 * (1.0 + v.abs()), "{m}x{k}x{n}: {u} vs {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn tn_and_nt_match_nn() {
+        let (m, k, n) = (6usize, 11usize, 13usize);
+        let a = fill(1, m * k);
+        let b = fill(2, k * n);
+        let mut want = vec![0.0f32; m * n];
+        gemm_nn(&a, &b, m, k, n, &Epilogue::None, &mut want);
+
+        let mut at = vec![0.0f32; k * m];
+        for i in 0..m {
+            for kk in 0..k {
+                at[kk * m + i] = a[i * k + kk];
+            }
+        }
+        let mut out = vec![0.0f32; m * n];
+        gemm_tn(&at, &b, k, m, n, false, &mut out);
+        assert_eq!(out, want, "TN must be bit-identical to NN");
+
+        let mut bt = vec![0.0f32; n * k];
+        for kk in 0..k {
+            for j in 0..n {
+                bt[j * k + kk] = b[kk * n + j];
+            }
+        }
+        let mut out2 = vec![0.0f32; m * n];
+        gemm_nt(&a, &bt, m, k, n, false, &mut out2);
+        assert_eq!(out2, want, "NT must be bit-identical to NN");
+    }
+
+    #[test]
+    fn accumulate_adds_on_top() {
+        let (m, k, n) = (5usize, 7usize, 9usize);
+        let a = fill(3, m * k);
+        let b = fill(4, k * n);
+        let mut once = vec![0.0f32; m * n];
+        gemm_nn(&a, &b, m, k, n, &Epilogue::None, &mut once);
+
+        let mut bt = vec![0.0f32; n * k];
+        for kk in 0..k {
+            for j in 0..n {
+                bt[j * k + kk] = b[kk * n + j];
+            }
+        }
+        let mut acc = once.clone();
+        gemm_nt(&a, &bt, m, k, n, true, &mut acc);
+        for (u, &v) in acc.iter().zip(&once) {
+            assert!((u - 2.0 * v).abs() < 1e-5, "{u} vs 2*{v}");
+        }
+    }
+
+    #[test]
+    fn epilogues_fuse_bias_and_relu() {
+        let (m, k, n) = (3usize, 4usize, 10usize);
+        let a = fill(5, m * k);
+        let b = fill(6, k * n);
+        let bias_col: Vec<f32> = (0..n).map(|j| j as f32 * 0.3 - 1.0).collect();
+        let bias_row: Vec<f32> = (0..m).map(|i| i as f32 * 0.5 - 0.4).collect();
+        let mut plain = vec![0.0f32; m * n];
+        gemm_nn(&a, &b, m, k, n, &Epilogue::None, &mut plain);
+
+        let mut fused = vec![0.0f32; m * n];
+        gemm_nn(&a, &b, m, k, n, &Epilogue::BiasCol { bias: &bias_col, relu: true }, &mut fused);
+        for i in 0..m {
+            for j in 0..n {
+                let want = (plain[i * n + j] + bias_col[j]).max(0.0);
+                assert!((fused[i * n + j] - want).abs() < 1e-6);
+            }
+        }
+
+        let mut fused_r = vec![0.0f32; m * n];
+        gemm_nn(&a, &b, m, k, n, &Epilogue::BiasRow { bias: &bias_row, relu: false }, &mut fused_r);
+        for i in 0..m {
+            for j in 0..n {
+                let want = plain[i * n + j] + bias_row[i];
+                assert!((fused_r[i * n + j] - want).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn empty_k_still_applies_epilogue() {
+        // n_in == 0 dense layer: zeros + bias + relu, same as the scalar
+        // reference (matmul of an empty sum, then the bias pass)
+        let (m, n) = (3usize, 5usize);
+        let bias: Vec<f32> = (0..n).map(|j| j as f32 - 2.0).collect();
+        let mut out = vec![7.0f32; m * n];
+        gemm_nn(&[], &[], m, 0, n, &Epilogue::BiasCol { bias: &bias, relu: true }, &mut out);
+        for i in 0..m {
+            for j in 0..n {
+                assert_eq!(out[i * n + j], bias[j].max(0.0));
+            }
+        }
+        let mut plain = vec![7.0f32; m * n];
+        gemm_nn(&[], &[], m, 0, n, &Epilogue::None, &mut plain);
+        assert!(plain.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn k_blocking_is_transparent() {
+        // k > KC forces multi-block accumulation through memory
+        let (m, k, n) = (3usize, KC * 2 + 5, 6usize);
+        let a = fill(7, m * k);
+        let b = fill(8, k * n);
+        let mut out = vec![0.0f32; m * n];
+        gemm_nn(&a, &b, m, k, n, &Epilogue::None, &mut out);
+        let want = naive_nn(&a, &b, m, k, n);
+        for (u, v) in out.iter().zip(&want) {
+            assert!((u - v).abs() < 2e-2 * (1.0 + v.abs()), "{u} vs {v}");
+        }
+    }
+}

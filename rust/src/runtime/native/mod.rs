@@ -12,7 +12,9 @@
 
 pub mod cnn;
 pub mod dqn;
+pub mod gemm;
 pub mod ops;
+pub mod scratch;
 
 use std::collections::BTreeMap;
 use std::sync::Mutex;
@@ -23,6 +25,7 @@ use super::manifest::{Consts, Leaf, Manifest, ModelInfo};
 use crate::data::NUM_CLASSES;
 use cnn::NativeCnn;
 use dqn::NativeDqn;
+use scratch::ScratchArena;
 
 /// Append one parameter leaf to a flat-vector layout, returning its offset.
 /// Shared by the CNN and DQN ports so both stay byte-identical to the
@@ -38,6 +41,23 @@ pub(crate) fn push_leaf(
     leaves.push(Leaf { name: name.to_string(), shape, offset: this, size });
     *off += size;
     this
+}
+
+/// The built-in CNN registry — the single source of the model shape
+/// literals (mirroring `python/compile/model.py`), shared by
+/// [`NativeBackend`] and the `hfl bench` harness so they can never
+/// measure different geometries.
+pub fn builtin_model(name: &str) -> Option<NativeCnn> {
+    match name {
+        // the two paper models (python/compile/model.py FMNIST / CIFAR)
+        "fmnist" => Some(NativeCnn::cnn("fmnist", 1, 28, 15, 28, 220, 5)),
+        "cifar" => Some(NativeCnn::cnn("cifar", 3, 32, 15, 28, 295, 5)),
+        // the IKC auxiliary mini model ξ
+        "mini" => Some(NativeCnn::single_conv("mini", 1, 10, 16, 2)),
+        // a ~700-parameter model for fast end-to-end tests and smoke runs
+        "tiny" => Some(NativeCnn::single_conv("tiny", 1, 10, 4, 3)),
+        _ => None,
+    }
 }
 
 /// Batch-shape constants of the native runtime, mirroring the `aot.py`
@@ -64,6 +84,9 @@ pub struct NativeBackend {
     models: BTreeMap<String, NativeCnn>,
     dqn: NativeDqn,
     stats: Mutex<BackendStats>,
+    /// Pool of scratch arenas: each dispatch checks one out, so parallel
+    /// sweep workers reuse warm buffers without contending on them.
+    scratch: Mutex<Vec<ScratchArena>>,
 }
 
 impl NativeBackend {
@@ -75,13 +98,9 @@ impl NativeBackend {
     /// Custom edge count / D³QN width (checkpoint layouts must match).
     pub fn with_dqn(n_edges: usize, hid: usize, fc: usize) -> NativeBackend {
         let mut models = BTreeMap::new();
-        // the two paper models (python/compile/model.py FMNIST / CIFAR)
-        models.insert("fmnist".to_string(), NativeCnn::cnn("fmnist", 1, 28, 15, 28, 220, 5));
-        models.insert("cifar".to_string(), NativeCnn::cnn("cifar", 3, 32, 15, 28, 295, 5));
-        // the IKC auxiliary mini model ξ
-        models.insert("mini".to_string(), NativeCnn::single_conv("mini", 1, 10, 16, 2));
-        // a ~700-parameter model for fast end-to-end tests and smoke runs
-        models.insert("tiny".to_string(), NativeCnn::single_conv("tiny", 1, 10, 4, 3));
+        for name in ["fmnist", "cifar", "mini", "tiny"] {
+            models.insert(name.to_string(), builtin_model(name).expect("registry model"));
+        }
         let dqn = NativeDqn::new(n_edges, hid, fc);
 
         let mut infos: BTreeMap<String, ModelInfo> =
@@ -97,6 +116,7 @@ impl NativeBackend {
             models,
             dqn,
             stats: Mutex::new(BackendStats::default()),
+            scratch: Mutex::new(Vec::new()),
         }
     }
 
@@ -104,6 +124,25 @@ impl NativeBackend {
         self.models
             .get(name)
             .ok_or_else(|| anyhow::anyhow!("native backend has no model {name:?}"))
+    }
+
+    /// Check an arena out of the pool for the duration of one dispatch.
+    /// Warm arenas make steady-state local rounds allocation-free; the
+    /// pool grows to at most one arena per concurrently dispatching
+    /// thread.
+    fn with_arena<T>(&self, f: impl FnOnce(&mut ScratchArena) -> T) -> T {
+        let mut arena = self
+            .scratch
+            .lock()
+            .expect("scratch pool lock poisoned")
+            .pop()
+            .unwrap_or_default();
+        let out = f(&mut arena);
+        self.scratch
+            .lock()
+            .expect("scratch pool lock poisoned")
+            .push(arena);
+        out
     }
 
     fn record(&self, t0: Instant) {
@@ -159,12 +198,14 @@ impl Backend for NativeBackend {
         );
         let mut out = params.to_vec();
         let mut losses = vec![0.0f32; db];
-        for slot in 0..db {
-            let sp = &mut out[slot * p..(slot + 1) * p];
-            let sx = &xs[slot * l * bsz * px..(slot + 1) * l * bsz * px];
-            let sy = &ys[slot * l * bsz * NUM_CLASSES..(slot + 1) * l * bsz * NUM_CLASSES];
-            losses[slot] = m.local_round(sp, sx, sy, l, bsz, lr);
-        }
+        self.with_arena(|arena| {
+            for slot in 0..db {
+                let sp = &mut out[slot * p..(slot + 1) * p];
+                let sx = &xs[slot * l * bsz * px..(slot + 1) * l * bsz * px];
+                let sy = &ys[slot * l * bsz * NUM_CLASSES..(slot + 1) * l * bsz * NUM_CLASSES];
+                losses[slot] = m.local_round_arena(sp, sx, sy, l, bsz, lr, arena);
+            }
+        });
         self.record(t0);
         Ok((out, losses))
     }
@@ -190,14 +231,14 @@ impl Backend for NativeBackend {
             x.len(),
             m.pixels()
         );
-        let out = m.forward(params, x, batch);
+        let out = self.with_arena(|arena| m.forward_arena(params, x, batch, arena));
         self.record(t0);
         Ok(out)
     }
 
     fn dqn_q_all(&self, theta: &[f32], feats: &[f32], h: usize) -> anyhow::Result<Vec<f32>> {
         let t0 = Instant::now();
-        let q = self.dqn.qvalues_all(theta, feats, h)?;
+        let q = self.with_arena(|arena| self.dqn.qvalues_all_arena(theta, feats, h, arena))?;
         self.record(t0);
         Ok(q)
     }
@@ -212,7 +253,10 @@ impl Backend for NativeBackend {
     }
 
     fn stats(&self) -> BackendStats {
-        *self.stats.lock().expect("stats lock poisoned")
+        let mut s = *self.stats.lock().expect("stats lock poisoned");
+        let pool = self.scratch.lock().expect("scratch pool lock poisoned");
+        s.scratch_bytes = pool.iter().map(|a| a.pooled_bytes() as u64).sum();
+        s
     }
 }
 
@@ -256,6 +300,10 @@ mod tests {
         assert_eq!(losses.len(), 2);
         assert!(losses.iter().all(|l| l.is_finite() && *l > 0.0));
         assert_eq!(b.stats().calls, 1);
+        // the dispatch returned its warm arena to the pool
+        assert!(b.stats().scratch_bytes > 0);
+        let (out2, _) = b.local_round("tiny", &params, &xs, &ys, 0.1).unwrap();
+        assert_eq!(out, out2, "arena reuse must not change results");
     }
 
     #[test]

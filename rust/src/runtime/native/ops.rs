@@ -1,30 +1,31 @@
-//! Scalar tensor primitives for the native backend — a Rust port of the
-//! jnp oracle in `python/compile/kernels/ref.py` plus the backward passes
-//! the AOT path gets from `jax.grad`.
+//! Tensor primitives for the native backend.
 //!
 //! Layouts match the Python side: activations NCHW, conv weights OIHW,
-//! dense weights `(in, out)` row-major. Loops are ordered so the innermost
-//! dimension is contiguous in both operands wherever possible.
+//! dense weights `(in, out)` row-major. Since PR 2 the hot path runs on
+//! the cache-blocked, register-tiled GEMM in [`super::gemm`]:
+//!
+//! * `matmul` / `matmul_tn` / `matmul_nt` are thin wrappers over the
+//!   blocked driver (same per-element accumulation order as the scalar
+//!   loops they replaced; bit-identical for `K ≤ KC`, float-tolerance
+//!   beyond — see the [`super::gemm`] numerics notes),
+//! * `dense_fwd` fuses bias + ReLU into the GEMM write-back (one less
+//!   pass over the activations),
+//! * `conv2d_fwd` / `conv2d_bwd` lower to im2col + GEMM; the `_cols`
+//!   variants let callers keep the im2col matrices from the forward
+//!   pass and reuse them in the backward pass.
+//!
+//! The pre-blocking scalar kernels live on verbatim in [`reference`];
+//! they are the parity oracles for the randomized kernel tests and the
+//! baseline the `hfl bench` speedup is measured against.
+
+use super::gemm::{self, Epilogue};
 
 /// `out[m×n] = a[m×k] @ b[k×n]`.
 pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), k * n);
     debug_assert_eq!(out.len(), m * n);
-    out.fill(0.0);
-    for i in 0..m {
-        let orow = &mut out[i * n..(i + 1) * n];
-        for kk in 0..k {
-            let aik = a[i * k + kk];
-            if aik == 0.0 {
-                continue;
-            }
-            let brow = &b[kk * n..(kk + 1) * n];
-            for (o, &bv) in orow.iter_mut().zip(brow) {
-                *o += aik * bv;
-            }
-        }
-    }
+    gemm::gemm_nn(a, b, m, k, n, &Epilogue::None, out);
 }
 
 /// `out[m×n] = aᵀ[k×m] @ b[k×n]` — the dW = Xᵀ·dY shape.
@@ -32,21 +33,7 @@ pub fn matmul_tn(a: &[f32], b: &[f32], k: usize, m: usize, n: usize, out: &mut [
     debug_assert_eq!(a.len(), k * m);
     debug_assert_eq!(b.len(), k * n);
     debug_assert_eq!(out.len(), m * n);
-    out.fill(0.0);
-    for kk in 0..k {
-        let arow = &a[kk * m..(kk + 1) * m];
-        let brow = &b[kk * n..(kk + 1) * n];
-        for i in 0..m {
-            let av = arow[i];
-            if av == 0.0 {
-                continue;
-            }
-            let orow = &mut out[i * n..(i + 1) * n];
-            for (o, &bv) in orow.iter_mut().zip(brow) {
-                *o += av * bv;
-            }
-        }
-    }
+    gemm::gemm_tn(a, b, k, m, n, false, out);
 }
 
 /// `out[m×n] = a[m×k] @ bᵀ[n×k]` — the dX = dY·Wᵀ shape.
@@ -54,21 +41,11 @@ pub fn matmul_nt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), n * k);
     debug_assert_eq!(out.len(), m * n);
-    for i in 0..m {
-        let arow = &a[i * k..(i + 1) * k];
-        let orow = &mut out[i * n..(i + 1) * n];
-        for j in 0..n {
-            let brow = &b[j * k..(j + 1) * k];
-            let mut acc = 0.0f32;
-            for (av, bv) in arow.iter().zip(brow) {
-                acc += av * bv;
-            }
-            orow[j] = acc;
-        }
-    }
+    gemm::gemm_nt(a, b, m, k, n, false, out);
 }
 
-/// Dense layer forward: `y[bsz×n] = x[bsz×i] @ w[i×n] + b`, optional ReLU.
+/// Dense layer forward: `y[bsz×n] = x[bsz×i] @ w[i×n] + b`, optional ReLU,
+/// all fused into the GEMM write-back.
 pub fn dense_fwd(
     x: &[f32],
     w: &[f32],
@@ -79,16 +56,8 @@ pub fn dense_fwd(
     relu: bool,
     y: &mut [f32],
 ) {
-    matmul(x, w, bsz, n_in, n_out, y);
-    for r in 0..bsz {
-        let row = &mut y[r * n_out..(r + 1) * n_out];
-        for (v, &bias) in row.iter_mut().zip(b) {
-            *v += bias;
-            if relu && *v < 0.0 {
-                *v = 0.0;
-            }
-        }
-    }
+    debug_assert_eq!(b.len(), n_out);
+    gemm::gemm_nn(x, w, bsz, n_in, n_out, &Epilogue::BiasCol { bias: b, relu }, y);
 }
 
 /// Dense backward. `dy` must already be masked by the ReLU derivative if
@@ -104,7 +73,7 @@ pub fn dense_bwd(
     db: &mut [f32],
     dx: Option<&mut [f32]>,
 ) {
-    matmul_tn(x, dy, bsz, n_in, n_out, dw);
+    gemm::gemm_tn(x, dy, bsz, n_in, n_out, false, dw);
     db.fill(0.0);
     for r in 0..bsz {
         let row = &dy[r * n_out..(r + 1) * n_out];
@@ -113,7 +82,7 @@ pub fn dense_bwd(
         }
     }
     if let Some(dx) = dx {
-        matmul_nt(dy, w, bsz, n_out, n_in, dx);
+        gemm::gemm_nt(dy, w, bsz, n_out, n_in, false, dx);
     }
 }
 
@@ -127,7 +96,101 @@ pub fn relu_bwd_mask(act: &[f32], dy: &mut [f32]) {
     }
 }
 
-/// Valid 2-D convolution, NCHW × OIHW → NCHW, optional fused ReLU.
+/// im2col for one image: `x` is `ic × ih × iw`, `col` is the
+/// `(ic·k·k) × (oh·ow)` patch matrix with row index `(i·k + ky)·k + kx`
+/// and column index `yy·ow + xx` — so `y = W[oc × ic·k·k] @ col` is the
+/// valid convolution. Rows are built from contiguous `ow`-length copies.
+pub fn im2col(x: &[f32], ic: usize, ih: usize, iw: usize, k: usize, col: &mut [f32]) {
+    let (oh, ow) = (ih - k + 1, iw - k + 1);
+    let ohw = oh * ow;
+    debug_assert_eq!(x.len(), ic * ih * iw);
+    debug_assert_eq!(col.len(), ic * k * k * ohw);
+    for i in 0..ic {
+        let xbase = i * ih * iw;
+        for ky in 0..k {
+            for kx in 0..k {
+                let row = (i * k + ky) * k + kx;
+                let cbase = row * ohw;
+                for yy in 0..oh {
+                    let src = xbase + (yy + ky) * iw + kx;
+                    let dst = cbase + yy * ow;
+                    col[dst..dst + ow].copy_from_slice(&x[src..src + ow]);
+                }
+            }
+        }
+    }
+}
+
+/// Inverse scatter of [`im2col`]: accumulate the patch-gradient matrix
+/// back into the (pre-zeroed by the caller) image gradient.
+pub fn col2im(col: &[f32], ic: usize, ih: usize, iw: usize, k: usize, dx: &mut [f32]) {
+    let (oh, ow) = (ih - k + 1, iw - k + 1);
+    let ohw = oh * ow;
+    debug_assert_eq!(dx.len(), ic * ih * iw);
+    debug_assert_eq!(col.len(), ic * k * k * ohw);
+    for i in 0..ic {
+        let xbase = i * ih * iw;
+        for ky in 0..k {
+            for kx in 0..k {
+                let row = (i * k + ky) * k + kx;
+                let cbase = row * ohw;
+                for yy in 0..oh {
+                    let dst = xbase + (yy + ky) * iw + kx;
+                    let src = cbase + yy * ow;
+                    let drow = &mut dx[dst..dst + ow];
+                    let srow = &col[src..src + ow];
+                    for (d, &s) in drow.iter_mut().zip(srow) {
+                        *d += s;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Valid 2-D convolution, NCHW × OIHW → NCHW, optional fused ReLU, via
+/// im2col + blocked GEMM. `cols` must hold `bsz · ic·k·k · oh·ow` values
+/// and receives the per-image im2col matrices — keep it around and hand
+/// it to [`conv2d_bwd_cols`] to skip rebuilding the patches.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_fwd_cols(
+    x: &[f32],
+    w: &[f32],
+    b: &[f32],
+    bsz: usize,
+    ic: usize,
+    ih: usize,
+    iw: usize,
+    oc: usize,
+    k: usize,
+    relu: bool,
+    cols: &mut [f32],
+    y: &mut [f32],
+) {
+    let (oh, ow) = (ih - k + 1, iw - k + 1);
+    let (kk, ohw) = (ic * k * k, oh * ow);
+    debug_assert_eq!(x.len(), bsz * ic * ih * iw);
+    debug_assert_eq!(w.len(), oc * kk);
+    debug_assert_eq!(b.len(), oc);
+    debug_assert_eq!(cols.len(), bsz * kk * ohw);
+    debug_assert_eq!(y.len(), bsz * oc * ohw);
+    for bi in 0..bsz {
+        let col = &mut cols[bi * kk * ohw..(bi + 1) * kk * ohw];
+        im2col(&x[bi * ic * ih * iw..(bi + 1) * ic * ih * iw], ic, ih, iw, k, col);
+        gemm::gemm_nn(
+            w,
+            col,
+            oc,
+            kk,
+            ohw,
+            &Epilogue::BiasRow { bias: b, relu },
+            &mut y[bi * oc * ohw..(bi + 1) * oc * ohw],
+        );
+    }
+}
+
+/// [`conv2d_fwd_cols`] with a self-managed scratch buffer (compat shim;
+/// the model code routes its arena-backed buffer instead).
 #[allow(clippy::too_many_arguments)]
 pub fn conv2d_fwd(
     x: &[f32],
@@ -143,44 +206,69 @@ pub fn conv2d_fwd(
     y: &mut [f32],
 ) {
     let (oh, ow) = (ih - k + 1, iw - k + 1);
-    debug_assert_eq!(x.len(), bsz * ic * ih * iw);
-    debug_assert_eq!(w.len(), oc * ic * k * k);
-    debug_assert_eq!(y.len(), bsz * oc * oh * ow);
+    let mut cols = vec![0.0f32; bsz * ic * k * k * oh * ow];
+    conv2d_fwd_cols(x, w, b, bsz, ic, ih, iw, oc, k, relu, &mut cols, y);
+}
+
+/// Conv backward from cached im2col patches: accumulates `dw`/`db` and
+/// (optionally) the input grad. `dy` must already carry the ReLU mask;
+/// `cols` is the buffer filled by [`conv2d_fwd_cols`] on the same input;
+/// `dcol` is per-image scratch of `ic·k·k · oh·ow` values.
+///
+/// Shapes that are not multiples of the GEMM microtile (any `bsz`, odd
+/// spatial dims) are handled exactly: the packed tile padding contributes
+/// zeros and is never stored, so no padded duplicate slot ever leaks into
+/// the gradients.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_bwd_cols(
+    cols: &[f32],
+    w: &[f32],
+    dy: &[f32],
+    bsz: usize,
+    ic: usize,
+    ih: usize,
+    iw: usize,
+    oc: usize,
+    k: usize,
+    dw: &mut [f32],
+    db: &mut [f32],
+    mut dx: Option<&mut [f32]>,
+    dcol: &mut [f32],
+) {
+    let (oh, ow) = (ih - k + 1, iw - k + 1);
+    let (kk, ohw) = (ic * k * k, oh * ow);
+    debug_assert_eq!(cols.len(), bsz * kk * ohw);
+    debug_assert_eq!(w.len(), oc * kk);
+    debug_assert_eq!(dy.len(), bsz * oc * ohw);
+    debug_assert_eq!(dw.len(), oc * kk);
+    debug_assert_eq!(db.len(), oc);
+    debug_assert_eq!(dcol.len(), kk * ohw);
+    dw.fill(0.0);
+    db.fill(0.0);
+    if let Some(dx) = dx.as_deref_mut() {
+        dx.fill(0.0);
+    }
     for bi in 0..bsz {
+        let dyb = &dy[bi * oc * ohw..(bi + 1) * oc * ohw];
         for o in 0..oc {
-            let ybase = ((bi * oc) + o) * oh * ow;
-            y[ybase..ybase + oh * ow].fill(b[o]);
-            for i in 0..ic {
-                let xbase = ((bi * ic) + i) * ih * iw;
-                for ky in 0..k {
-                    for kx in 0..k {
-                        let wv = w[((o * ic + i) * k + ky) * k + kx];
-                        if wv == 0.0 {
-                            continue;
-                        }
-                        for yy in 0..oh {
-                            let xrow = xbase + (yy + ky) * iw + kx;
-                            let yrow = ybase + yy * ow;
-                            for xx in 0..ow {
-                                y[yrow + xx] += wv * x[xrow + xx];
-                            }
-                        }
-                    }
-                }
+            let mut s = 0.0f32;
+            for &g in &dyb[o * ohw..(o + 1) * ohw] {
+                s += g;
             }
-            if relu {
-                for v in y[ybase..ybase + oh * ow].iter_mut() {
-                    if *v < 0.0 {
-                        *v = 0.0;
-                    }
-                }
-            }
+            db[o] += s;
+        }
+        let col = &cols[bi * kk * ohw..(bi + 1) * kk * ohw];
+        // dW += dY_b · colᵀ (accumulated across the batch)
+        gemm::gemm_nt(dyb, col, oc, ohw, kk, true, dw);
+        if let Some(dx) = dx.as_deref_mut() {
+            // dcol = Wᵀ · dY_b, scattered back through col2im
+            gemm::gemm_tn(w, dyb, oc, kk, ohw, false, dcol);
+            col2im(dcol, ic, ih, iw, k, &mut dx[bi * ic * ih * iw..(bi + 1) * ic * ih * iw]);
         }
     }
 }
 
-/// Conv backward: accumulates `dw`/`db` and (optionally) the input grad.
-/// `dy` must already carry the ReLU mask.
+/// Conv backward (compat shim): rebuilds the im2col patches from `x`.
 #[allow(clippy::too_many_arguments)]
 pub fn conv2d_bwd(
     x: &[f32],
@@ -194,50 +282,23 @@ pub fn conv2d_bwd(
     k: usize,
     dw: &mut [f32],
     db: &mut [f32],
-    mut dx: Option<&mut [f32]>,
+    dx: Option<&mut [f32]>,
 ) {
     let (oh, ow) = (ih - k + 1, iw - k + 1);
-    dw.fill(0.0);
-    db.fill(0.0);
-    if let Some(dx) = dx.as_deref_mut() {
-        dx.fill(0.0);
-    }
+    let (kk, ohw) = (ic * k * k, oh * ow);
+    let mut cols = vec![0.0f32; bsz * kk * ohw];
     for bi in 0..bsz {
-        for o in 0..oc {
-            let ybase = ((bi * oc) + o) * oh * ow;
-            let mut bsum = 0.0f32;
-            for &g in &dy[ybase..ybase + oh * ow] {
-                bsum += g;
-            }
-            db[o] += bsum;
-            for i in 0..ic {
-                let xbase = ((bi * ic) + i) * ih * iw;
-                for ky in 0..k {
-                    for kx in 0..k {
-                        let widx = ((o * ic + i) * k + ky) * k + kx;
-                        let wv = w[widx];
-                        let mut wsum = 0.0f32;
-                        for yy in 0..oh {
-                            let xrow = xbase + (yy + ky) * iw + kx;
-                            let yrow = ybase + yy * ow;
-                            if let Some(dx) = dx.as_deref_mut() {
-                                for xx in 0..ow {
-                                    let g = dy[yrow + xx];
-                                    wsum += g * x[xrow + xx];
-                                    dx[xrow + xx] += wv * g;
-                                }
-                            } else {
-                                for xx in 0..ow {
-                                    wsum += dy[yrow + xx] * x[xrow + xx];
-                                }
-                            }
-                        }
-                        dw[widx] += wsum;
-                    }
-                }
-            }
-        }
+        im2col(
+            &x[bi * ic * ih * iw..(bi + 1) * ic * ih * iw],
+            ic,
+            ih,
+            iw,
+            k,
+            &mut cols[bi * kk * ohw..(bi + 1) * kk * ohw],
+        );
     }
+    let mut dcol = vec![0.0f32; kk * ohw];
+    conv2d_bwd_cols(&cols, w, dy, bsz, ic, ih, iw, oc, k, dw, db, dx, &mut dcol);
 }
 
 /// 2×2 max pool with floor semantics, recording the flat input index of
@@ -354,6 +415,281 @@ pub fn sigmoid(x: f32) -> f32 {
     }
 }
 
+/// The pre-blocking scalar kernels, kept verbatim as the parity oracle
+/// for the randomized kernel tests and as the baseline `hfl bench`
+/// measures the blocked-kernel speedup against. Correctness-first: no
+/// tiling, no packing, no fusion. Do not "optimize" these — their entire
+/// value is staying boring.
+pub mod reference {
+    /// `out[m×n] = a[m×k] @ b[k×n]` (scalar oracle).
+    pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+        debug_assert_eq!(a.len(), m * k);
+        debug_assert_eq!(b.len(), k * n);
+        debug_assert_eq!(out.len(), m * n);
+        out.fill(0.0);
+        for i in 0..m {
+            let orow = &mut out[i * n..(i + 1) * n];
+            for kk in 0..k {
+                let aik = a[i * k + kk];
+                if aik == 0.0 {
+                    continue;
+                }
+                let brow = &b[kk * n..(kk + 1) * n];
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += aik * bv;
+                }
+            }
+        }
+    }
+
+    /// `out[m×n] = aᵀ[k×m] @ b[k×n]` (scalar oracle).
+    pub fn matmul_tn(a: &[f32], b: &[f32], k: usize, m: usize, n: usize, out: &mut [f32]) {
+        debug_assert_eq!(a.len(), k * m);
+        debug_assert_eq!(b.len(), k * n);
+        debug_assert_eq!(out.len(), m * n);
+        out.fill(0.0);
+        for kk in 0..k {
+            let arow = &a[kk * m..(kk + 1) * m];
+            let brow = &b[kk * n..(kk + 1) * n];
+            for i in 0..m {
+                let av = arow[i];
+                if av == 0.0 {
+                    continue;
+                }
+                let orow = &mut out[i * n..(i + 1) * n];
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += av * bv;
+                }
+            }
+        }
+    }
+
+    /// `out[m×n] = a[m×k] @ bᵀ[n×k]` (scalar oracle).
+    pub fn matmul_nt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+        debug_assert_eq!(a.len(), m * k);
+        debug_assert_eq!(b.len(), n * k);
+        debug_assert_eq!(out.len(), m * n);
+        for i in 0..m {
+            let arow = &a[i * k..(i + 1) * k];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for j in 0..n {
+                let brow = &b[j * k..(j + 1) * k];
+                let mut acc = 0.0f32;
+                for (av, bv) in arow.iter().zip(brow) {
+                    acc += av * bv;
+                }
+                orow[j] = acc;
+            }
+        }
+    }
+
+    /// Dense forward (scalar oracle): matmul, then bias, then ReLU.
+    #[allow(clippy::too_many_arguments)]
+    pub fn dense_fwd(
+        x: &[f32],
+        w: &[f32],
+        b: &[f32],
+        bsz: usize,
+        n_in: usize,
+        n_out: usize,
+        relu: bool,
+        y: &mut [f32],
+    ) {
+        matmul(x, w, bsz, n_in, n_out, y);
+        for r in 0..bsz {
+            let row = &mut y[r * n_out..(r + 1) * n_out];
+            for (v, &bias) in row.iter_mut().zip(b) {
+                *v += bias;
+                if relu && *v < 0.0 {
+                    *v = 0.0;
+                }
+            }
+        }
+    }
+
+    /// Dense backward (scalar oracle).
+    #[allow(clippy::too_many_arguments)]
+    pub fn dense_bwd(
+        x: &[f32],
+        w: &[f32],
+        dy: &[f32],
+        bsz: usize,
+        n_in: usize,
+        n_out: usize,
+        dw: &mut [f32],
+        db: &mut [f32],
+        dx: Option<&mut [f32]>,
+    ) {
+        matmul_tn(x, dy, bsz, n_in, n_out, dw);
+        db.fill(0.0);
+        for r in 0..bsz {
+            let row = &dy[r * n_out..(r + 1) * n_out];
+            for (d, &g) in db.iter_mut().zip(row) {
+                *d += g;
+            }
+        }
+        if let Some(dx) = dx {
+            matmul_nt(dy, w, bsz, n_out, n_in, dx);
+        }
+    }
+
+    /// Direct (non-im2col) valid convolution (scalar oracle).
+    #[allow(clippy::too_many_arguments)]
+    pub fn conv2d_fwd(
+        x: &[f32],
+        w: &[f32],
+        b: &[f32],
+        bsz: usize,
+        ic: usize,
+        ih: usize,
+        iw: usize,
+        oc: usize,
+        k: usize,
+        relu: bool,
+        y: &mut [f32],
+    ) {
+        let (oh, ow) = (ih - k + 1, iw - k + 1);
+        debug_assert_eq!(x.len(), bsz * ic * ih * iw);
+        debug_assert_eq!(w.len(), oc * ic * k * k);
+        debug_assert_eq!(y.len(), bsz * oc * oh * ow);
+        for bi in 0..bsz {
+            for o in 0..oc {
+                let ybase = ((bi * oc) + o) * oh * ow;
+                y[ybase..ybase + oh * ow].fill(b[o]);
+                for i in 0..ic {
+                    let xbase = ((bi * ic) + i) * ih * iw;
+                    for ky in 0..k {
+                        for kx in 0..k {
+                            let wv = w[((o * ic + i) * k + ky) * k + kx];
+                            if wv == 0.0 {
+                                continue;
+                            }
+                            for yy in 0..oh {
+                                let xrow = xbase + (yy + ky) * iw + kx;
+                                let yrow = ybase + yy * ow;
+                                for xx in 0..ow {
+                                    y[yrow + xx] += wv * x[xrow + xx];
+                                }
+                            }
+                        }
+                    }
+                }
+                if relu {
+                    for v in y[ybase..ybase + oh * ow].iter_mut() {
+                        if *v < 0.0 {
+                            *v = 0.0;
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Direct conv backward (scalar oracle).
+    #[allow(clippy::too_many_arguments)]
+    pub fn conv2d_bwd(
+        x: &[f32],
+        w: &[f32],
+        dy: &[f32],
+        bsz: usize,
+        ic: usize,
+        ih: usize,
+        iw: usize,
+        oc: usize,
+        k: usize,
+        dw: &mut [f32],
+        db: &mut [f32],
+        mut dx: Option<&mut [f32]>,
+    ) {
+        let (oh, ow) = (ih - k + 1, iw - k + 1);
+        dw.fill(0.0);
+        db.fill(0.0);
+        if let Some(dx) = dx.as_deref_mut() {
+            dx.fill(0.0);
+        }
+        for bi in 0..bsz {
+            for o in 0..oc {
+                let ybase = ((bi * oc) + o) * oh * ow;
+                let mut bsum = 0.0f32;
+                for &g in &dy[ybase..ybase + oh * ow] {
+                    bsum += g;
+                }
+                db[o] += bsum;
+                for i in 0..ic {
+                    let xbase = ((bi * ic) + i) * ih * iw;
+                    for ky in 0..k {
+                        for kx in 0..k {
+                            let widx = ((o * ic + i) * k + ky) * k + kx;
+                            let wv = w[widx];
+                            let mut wsum = 0.0f32;
+                            for yy in 0..oh {
+                                let xrow = xbase + (yy + ky) * iw + kx;
+                                let yrow = ybase + yy * ow;
+                                if let Some(dx) = dx.as_deref_mut() {
+                                    for xx in 0..ow {
+                                        let g = dy[yrow + xx];
+                                        wsum += g * x[xrow + xx];
+                                        dx[xrow + xx] += wv * g;
+                                    }
+                                } else {
+                                    for xx in 0..ow {
+                                        wsum += dy[yrow + xx] * x[xrow + xx];
+                                    }
+                                }
+                            }
+                            dw[widx] += wsum;
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// 2×2 max pool (scalar oracle).
+    pub fn maxpool2_fwd(
+        x: &[f32],
+        bsz: usize,
+        c: usize,
+        h: usize,
+        w: usize,
+        y: &mut [f32],
+        argmax: &mut [u32],
+    ) {
+        let (h2, w2) = (h / 2, w / 2);
+        debug_assert_eq!(y.len(), bsz * c * h2 * w2);
+        debug_assert_eq!(argmax.len(), y.len());
+        for bc in 0..bsz * c {
+            let xbase = bc * h * w;
+            let ybase = bc * h2 * w2;
+            for py in 0..h2 {
+                for px in 0..w2 {
+                    let mut best = f32::NEG_INFINITY;
+                    let mut besti = 0usize;
+                    for dy in 0..2 {
+                        for dx in 0..2 {
+                            let idx = xbase + (py * 2 + dy) * w + px * 2 + dx;
+                            if x[idx] > best {
+                                best = x[idx];
+                                besti = idx;
+                            }
+                        }
+                    }
+                    y[ybase + py * w2 + px] = best;
+                    argmax[ybase + py * w2 + px] = besti as u32;
+                }
+            }
+        }
+    }
+
+    /// Max-pool backward (scalar oracle).
+    pub fn maxpool2_bwd(dy: &[f32], argmax: &[u32], dx: &mut [f32]) {
+        dx.fill(0.0);
+        for (&g, &i) in dy.iter().zip(argmax) {
+            dx[i as usize] += g;
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -423,6 +759,34 @@ mod tests {
         let mut y = vec![0.0f32; 4];
         conv2d_fwd(&x, &w, &b, 1, 1, 3, 3, 1, 2, false, &mut y);
         assert_eq!(y, vec![1.0 + 5.0 + 0.5, 2.0 + 6.0 + 0.5, 4.0 + 8.0 + 0.5, 5.0 + 9.0 + 0.5]);
+    }
+
+    #[test]
+    fn im2col_col2im_counts() {
+        // col2im(im2col(x)) multiplies each pixel by its patch coverage
+        let (ic, ih, iw, k) = (2usize, 5usize, 4usize, 2usize);
+        let (oh, ow) = (ih - k + 1, iw - k + 1);
+        let x: Vec<f32> = (0..ic * ih * iw).map(|i| (i as f32 * 0.11).sin() + 1.5).collect();
+        let mut col = vec![0.0f32; ic * k * k * oh * ow];
+        im2col(&x, ic, ih, iw, k, &mut col);
+        let mut back = vec![0.0f32; x.len()];
+        col2im(&col, ic, ih, iw, k, &mut back);
+        for ch in 0..ic {
+            for yy in 0..ih {
+                for xx in 0..iw {
+                    // coverage: how many valid (ky, yy-ky) patch rows hit
+                    let cy = (0..k).filter(|&ky| yy >= ky && yy - ky < oh).count();
+                    let cx = (0..k).filter(|&kx| xx >= kx && xx - kx < ow).count();
+                    let idx = (ch * ih + yy) * iw + xx;
+                    let want = x[idx] * (cy * cx) as f32;
+                    assert!(
+                        (back[idx] - want).abs() < 1e-5,
+                        "({ch},{yy},{xx}): {} vs {want}",
+                        back[idx]
+                    );
+                }
+            }
+        }
     }
 
     #[test]

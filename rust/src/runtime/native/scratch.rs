@@ -1,0 +1,157 @@
+//! Reusable scratch buffers for the native kernels.
+//!
+//! The blocked kernels need a handful of intermediate tensors per call
+//! (im2col patch matrices, activation caches, gradient staging). Instead
+//! of allocating fresh `Vec`s every local round, callers borrow buffers
+//! from a [`ScratchArena`]: `take_f32` hands out a zeroed buffer (reusing
+//! pooled capacity), `put_f32` returns it. After the first call on a
+//! given workload shape the arena's pool covers every request and the
+//! steady state allocates nothing.
+//!
+//! Lifetime rules (also in DESIGN.md "Native kernel design"):
+//! * a taken buffer is owned by the caller until `put` — the arena never
+//!   aliases it;
+//! * buffers come back zero-filled on the next `take`, so results cannot
+//!   depend on what a previous call left behind (reuse is bit-for-bit
+//!   reproducible — see `prop_scratch_arena_reuse_identical_results`);
+//! * arenas are not `Sync`; share-nothing — `NativeBackend` keeps a pool
+//!   of arenas and checks one out per dispatch, so parallel sweep workers
+//!   never contend on buffer internals.
+
+/// A recycling pool of `f32`/`u32` scratch buffers.
+#[derive(Debug, Default)]
+pub struct ScratchArena {
+    free_f32: Vec<Vec<f32>>,
+    free_u32: Vec<Vec<u32>>,
+    misses: u64,
+}
+
+/// Shared reuse policy: the smallest pooled buffer that already fits,
+/// else the largest one (which will grow in place and keep its larger
+/// capacity for next time).
+fn pick_index<T>(pool: &[Vec<T>], len: usize) -> Option<usize> {
+    let mut fit: Option<usize> = None;
+    let mut largest: Option<usize> = None;
+    for (i, b) in pool.iter().enumerate() {
+        if largest.map_or(true, |j| b.capacity() > pool[j].capacity()) {
+            largest = Some(i);
+        }
+        if b.capacity() >= len && fit.map_or(true, |j| b.capacity() < pool[j].capacity()) {
+            fit = Some(i);
+        }
+    }
+    fit.or(largest)
+}
+
+impl ScratchArena {
+    pub fn new() -> ScratchArena {
+        ScratchArena::default()
+    }
+
+    /// Borrow a zeroed `f32` buffer of exactly `len` elements. Reuse
+    /// follows [`pick_index`]; a fresh allocation (empty pool) or an
+    /// in-place growth (nothing fit) counts as a "miss".
+    pub fn take_f32(&mut self, len: usize) -> Vec<f32> {
+        let mut v = match pick_index(&self.free_f32, len) {
+            Some(i) => self.free_f32.swap_remove(i),
+            None => Vec::new(),
+        };
+        if v.capacity() < len {
+            self.misses += 1;
+        }
+        v.clear();
+        v.resize(len, 0.0);
+        v
+    }
+
+    /// Return a buffer taken with [`ScratchArena::take_f32`].
+    pub fn put_f32(&mut self, v: Vec<f32>) {
+        if v.capacity() > 0 {
+            self.free_f32.push(v);
+        }
+    }
+
+    /// Borrow a zeroed `u32` buffer of exactly `len` elements (same
+    /// policy and miss accounting as [`ScratchArena::take_f32`]).
+    pub fn take_u32(&mut self, len: usize) -> Vec<u32> {
+        let mut v = match pick_index(&self.free_u32, len) {
+            Some(i) => self.free_u32.swap_remove(i),
+            None => Vec::new(),
+        };
+        if v.capacity() < len {
+            self.misses += 1;
+        }
+        v.clear();
+        v.resize(len, 0);
+        v
+    }
+
+    /// Return a buffer taken with [`ScratchArena::take_u32`].
+    pub fn put_u32(&mut self, v: Vec<u32>) {
+        if v.capacity() > 0 {
+            self.free_u32.push(v);
+        }
+    }
+
+    /// Times a request could not be served from pooled capacity. Stable
+    /// across repeated identical workloads once warm.
+    pub fn misses(&self) -> u64 {
+        self.misses
+    }
+
+    /// Bytes currently parked in the pool (the arena's high-water set).
+    pub fn pooled_bytes(&self) -> usize {
+        let f: usize = self.free_f32.iter().map(|b| b.capacity() * 4).sum();
+        let u: usize = self.free_u32.iter().map(|b| b.capacity() * 4).sum();
+        f + u
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buffers_come_back_zeroed() {
+        let mut a = ScratchArena::new();
+        let mut v = a.take_f32(16);
+        v.iter_mut().for_each(|x| *x = 7.0);
+        a.put_f32(v);
+        let v2 = a.take_f32(16);
+        assert!(v2.iter().all(|&x| x == 0.0));
+        assert_eq!(v2.len(), 16);
+    }
+
+    #[test]
+    fn warm_arena_stops_missing() {
+        let mut a = ScratchArena::new();
+        let sizes = [100usize, 30, 70, 100];
+        for _ in 0..3 {
+            let bufs: Vec<Vec<f32>> = sizes.iter().map(|&s| a.take_f32(s)).collect();
+            for b in bufs {
+                a.put_f32(b);
+            }
+        }
+        let warm = a.misses();
+        for _round in 0..5 {
+            let bufs: Vec<Vec<f32>> = sizes.iter().map(|&s| a.take_f32(s)).collect();
+            for b in bufs {
+                a.put_f32(b);
+            }
+        }
+        assert_eq!(a.misses(), warm, "warm arena must not allocate");
+        assert!(a.pooled_bytes() >= 300 * 4);
+    }
+
+    #[test]
+    fn smallest_fit_is_preferred() {
+        let mut a = ScratchArena::new();
+        let big = a.take_f32(1000);
+        let small = a.take_f32(10);
+        a.put_f32(big);
+        a.put_f32(small);
+        let v = a.take_f32(8);
+        assert!(v.capacity() < 1000, "small request must not consume the big buffer");
+        a.put_f32(v);
+    }
+}

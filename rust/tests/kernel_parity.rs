@@ -1,0 +1,247 @@
+//! Parity of the blocked kernels (`runtime::native::ops`, PR 2) against
+//! the scalar reference oracles (`ops::reference`, the PR 1 kernels) on
+//! randomized shapes — including shapes that are NOT multiples of the
+//! GEMM microtile/pad widths (MR=4 rows, NR=8 columns), the class of bug
+//! where a padded duplicate slot leaks into results.
+//!
+//! Tolerances: the matmul variants and conv dw/db keep the reference's
+//! per-element accumulation order and agree to float roundoff; conv dx
+//! and fused-bias outputs are reassociated (GEMM-over-channels + post-sum
+//! bias) and are held to 1e-4-scale agreement, per the PR acceptance.
+
+use hfl::model::{init_params, Init};
+use hfl::runtime::native::cnn::NativeCnn;
+use hfl::runtime::native::ops;
+use hfl::util::Rng;
+
+fn fill(rng: &mut Rng, len: usize) -> Vec<f32> {
+    (0..len).map(|_| rng.f32() * 2.0 - 1.0).collect()
+}
+
+fn assert_close(name: &str, got: &[f32], want: &[f32], tol: f32) {
+    assert_eq!(got.len(), want.len(), "{name}: length mismatch");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert!(
+            (g - w).abs() <= tol * (1.0 + w.abs()),
+            "{name}[{i}]: blocked {g} vs reference {w}"
+        );
+    }
+}
+
+#[test]
+fn parity_matmul_variants_randomized_shapes() {
+    for seed in 0..12u64 {
+        let mut rng = Rng::new(seed ^ 0x6E44);
+        // deliberately straddle the MR=4 / NR=8 tile edges
+        let m = 1 + rng.below(21);
+        let k = 1 + rng.below(40);
+        let n = 1 + rng.below(21);
+        let a = fill(&mut rng, m * k);
+        let b = fill(&mut rng, k * n);
+
+        let mut got = vec![0.0f32; m * n];
+        let mut want = vec![0.0f32; m * n];
+        ops::matmul(&a, &b, m, k, n, &mut got);
+        ops::reference::matmul(&a, &b, m, k, n, &mut want);
+        assert_close(&format!("matmul {m}x{k}x{n}"), &got, &want, 1e-5);
+
+        let mut at = vec![0.0f32; k * m];
+        for i in 0..m {
+            for kk in 0..k {
+                at[kk * m + i] = a[i * k + kk];
+            }
+        }
+        ops::matmul_tn(&at, &b, k, m, n, &mut got);
+        ops::reference::matmul_tn(&at, &b, k, m, n, &mut want);
+        assert_close(&format!("matmul_tn {m}x{k}x{n}"), &got, &want, 1e-5);
+
+        let mut bt = vec![0.0f32; n * k];
+        for kk in 0..k {
+            for j in 0..n {
+                bt[j * k + kk] = b[kk * n + j];
+            }
+        }
+        ops::matmul_nt(&a, &bt, m, k, n, &mut got);
+        ops::reference::matmul_nt(&a, &bt, m, k, n, &mut want);
+        assert_close(&format!("matmul_nt {m}x{k}x{n}"), &got, &want, 1e-5);
+    }
+}
+
+#[test]
+fn parity_dense_fused_bias_relu() {
+    for seed in 0..8u64 {
+        let mut rng = Rng::new(seed ^ 0xDE45);
+        let bsz = 1 + rng.below(9);
+        let n_in = 1 + rng.below(50);
+        let n_out = 1 + rng.below(30);
+        let relu = seed % 2 == 0;
+        let x = fill(&mut rng, bsz * n_in);
+        let w = fill(&mut rng, n_in * n_out);
+        let b = fill(&mut rng, n_out);
+        let mut got = vec![0.0f32; bsz * n_out];
+        let mut want = vec![0.0f32; bsz * n_out];
+        ops::dense_fwd(&x, &w, &b, bsz, n_in, n_out, relu, &mut got);
+        ops::reference::dense_fwd(&x, &w, &b, bsz, n_in, n_out, relu, &mut want);
+        assert_close(&format!("dense_fwd b{bsz} {n_in}->{n_out}"), &got, &want, 1e-5);
+
+        let dy = fill(&mut rng, bsz * n_out);
+        let mut dwg = vec![0.0f32; n_in * n_out];
+        let mut dbg = vec![0.0f32; n_out];
+        let mut dxg = vec![0.0f32; bsz * n_in];
+        let mut dwr = vec![0.0f32; n_in * n_out];
+        let mut dbr = vec![0.0f32; n_out];
+        let mut dxr = vec![0.0f32; bsz * n_in];
+        ops::dense_bwd(&x, &w, &dy, bsz, n_in, n_out, &mut dwg, &mut dbg, Some(&mut dxg));
+        ops::reference::dense_bwd(&x, &w, &dy, bsz, n_in, n_out, &mut dwr, &mut dbr, Some(&mut dxr));
+        assert_close("dense_bwd dw", &dwg, &dwr, 1e-5);
+        assert_close("dense_bwd db", &dbg, &dbr, 1e-6);
+        assert_close("dense_bwd dx", &dxg, &dxr, 1e-5);
+    }
+}
+
+#[test]
+fn parity_conv_fwd_bwd_randomized_shapes() {
+    for seed in 0..10u64 {
+        let mut rng = Rng::new(seed ^ 0xC04F);
+        let bsz = 1 + rng.below(9);
+        let ic = 1 + rng.below(4);
+        let oc = 1 + rng.below(6);
+        let k = 2 + rng.below(3);
+        let ih = k + 1 + rng.below(8);
+        let iw = k + 1 + rng.below(8);
+        let (oh, ow) = (ih - k + 1, iw - k + 1);
+        let relu = seed % 2 == 1;
+
+        let x = fill(&mut rng, bsz * ic * ih * iw);
+        let w = fill(&mut rng, oc * ic * k * k);
+        let b = fill(&mut rng, oc);
+        let mut got = vec![0.0f32; bsz * oc * oh * ow];
+        let mut want = vec![0.0f32; bsz * oc * oh * ow];
+        ops::conv2d_fwd(&x, &w, &b, bsz, ic, ih, iw, oc, k, relu, &mut got);
+        ops::reference::conv2d_fwd(&x, &w, &b, bsz, ic, ih, iw, oc, k, relu, &mut want);
+        let tag = format!("conv_fwd b{bsz} {ic}x{ih}x{iw} oc{oc} k{k}");
+        assert_close(&tag, &got, &want, 1e-4);
+
+        let dy = fill(&mut rng, bsz * oc * oh * ow);
+        let mut dwg = vec![0.0f32; w.len()];
+        let mut dbg = vec![0.0f32; oc];
+        let mut dxg = vec![0.0f32; x.len()];
+        let mut dwr = vec![0.0f32; w.len()];
+        let mut dbr = vec![0.0f32; oc];
+        let mut dxr = vec![0.0f32; x.len()];
+        ops::conv2d_bwd(&x, &w, &dy, bsz, ic, ih, iw, oc, k, &mut dwg, &mut dbg, Some(&mut dxg));
+        ops::reference::conv2d_bwd(&x, &w, &dy, bsz, ic, ih, iw, oc, k, &mut dwr, &mut dbr, Some(&mut dxr));
+        assert_close(&format!("{tag} dw"), &dwg, &dwr, 1e-4);
+        assert_close(&format!("{tag} db"), &dbg, &dbr, 1e-5);
+        assert_close(&format!("{tag} dx"), &dxg, &dxr, 1e-4);
+    }
+}
+
+/// Regression (PR 2 satellite): conv backward must stay exact for batch
+/// sizes that are not a multiple of the microtile/pad width — the GEMM
+/// padding lanes are zero-filled and never stored, so no padded duplicate
+/// slot may contribute to dw/db/dx. Verified against the scalar oracle
+/// and against finite differences of a scalar probe loss.
+#[test]
+fn regression_conv_bwd_batch_not_multiple_of_pad_width() {
+    let (ic, ih, iw, oc, k) = (2usize, 7usize, 7usize, 3usize, 3usize);
+    let (oh, ow) = (ih - k + 1, iw - k + 1);
+    for &bsz in &[1usize, 2, 3, 5, 6, 7] {
+        let mut rng = Rng::new(0xBAD5 + bsz as u64);
+        let x = fill(&mut rng, bsz * ic * ih * iw);
+        let w = fill(&mut rng, oc * ic * k * k);
+        let dy = fill(&mut rng, bsz * oc * oh * ow);
+
+        let mut dwg = vec![0.0f32; w.len()];
+        let mut dbg = vec![0.0f32; oc];
+        let mut dxg = vec![0.0f32; x.len()];
+        let mut dwr = vec![0.0f32; w.len()];
+        let mut dbr = vec![0.0f32; oc];
+        let mut dxr = vec![0.0f32; x.len()];
+        ops::conv2d_bwd(&x, &w, &dy, bsz, ic, ih, iw, oc, k, &mut dwg, &mut dbg, Some(&mut dxg));
+        ops::reference::conv2d_bwd(&x, &w, &dy, bsz, ic, ih, iw, oc, k, &mut dwr, &mut dbr, Some(&mut dxr));
+        assert_close(&format!("bwd dw bsz={bsz}"), &dwg, &dwr, 1e-4);
+        assert_close(&format!("bwd db bsz={bsz}"), &dbg, &dbr, 1e-5);
+        assert_close(&format!("bwd dx bsz={bsz}"), &dxg, &dxr, 1e-4);
+
+        // finite differences through L = <conv(x; w), dy>
+        let b0 = vec![0.0f32; oc];
+        let loss = |wv: &[f32]| -> f32 {
+            let mut y = vec![0.0f32; bsz * oc * oh * ow];
+            ops::conv2d_fwd(&x, wv, &b0, bsz, ic, ih, iw, oc, k, false, &mut y);
+            y.iter().zip(&dy).map(|(a, g)| a * g).sum()
+        };
+        let eps = 1e-3f32;
+        let mut wp = w.clone();
+        for &i in &[0usize, w.len() / 2, w.len() - 1] {
+            let orig = wp[i];
+            wp[i] = orig + eps;
+            let lp = loss(&wp);
+            wp[i] = orig - eps;
+            let lm = loss(&wp);
+            wp[i] = orig;
+            let fd = (lp - lm) / (2.0 * eps);
+            assert!(
+                (fd - dwg[i]).abs() <= 2e-2f32.max(0.05 * fd.abs()),
+                "bsz={bsz} dw[{i}]: finite-diff {fd} vs analytic {}",
+                dwg[i]
+            );
+        }
+    }
+}
+
+#[test]
+fn parity_maxpool_randomized_shapes() {
+    for seed in 0..8u64 {
+        let mut rng = Rng::new(seed ^ 0x9001);
+        let bsz = 1 + rng.below(5);
+        let c = 1 + rng.below(5);
+        // odd sides exercise the floor semantics
+        let h = 2 + rng.below(9);
+        let w = 2 + rng.below(9);
+        let (h2, w2) = (h / 2, w / 2);
+        if h2 == 0 || w2 == 0 {
+            continue;
+        }
+        let x = fill(&mut rng, bsz * c * h * w);
+        let mut yg = vec![0.0f32; bsz * c * h2 * w2];
+        let mut ag = vec![0u32; yg.len()];
+        let mut yr = vec![0.0f32; yg.len()];
+        let mut ar = vec![0u32; yg.len()];
+        ops::maxpool2_fwd(&x, bsz, c, h, w, &mut yg, &mut ag);
+        ops::reference::maxpool2_fwd(&x, bsz, c, h, w, &mut yr, &mut ar);
+        assert_eq!(yg, yr, "maxpool fwd seed {seed}");
+        assert_eq!(ag, ar, "maxpool argmax seed {seed}");
+
+        let dy = fill(&mut rng, yg.len());
+        let mut dxg = vec![0.0f32; x.len()];
+        let mut dxr = vec![0.0f32; x.len()];
+        ops::maxpool2_bwd(&dy, &ag, &mut dxg);
+        ops::reference::maxpool2_bwd(&dy, &ar, &mut dxr);
+        assert_eq!(dxg, dxr, "maxpool bwd seed {seed}");
+    }
+}
+
+/// Model-level parity: a full local round (fwd + bwd + SGD, L steps) on
+/// the tiny model through the blocked kernels vs the scalar reference,
+/// for batch sizes on and off the tile boundary.
+#[test]
+fn parity_local_round_blocked_vs_reference() {
+    let m = NativeCnn::single_conv("tiny", 1, 10, 4, 3);
+    for &bsz in &[3usize, 8] {
+        let mut rng = Rng::new(100 + bsz as u64);
+        let base = init_params(&m.info, Init::HeNormal, &mut Rng::new(55));
+        let l = 3usize;
+        let xs = fill(&mut rng, l * bsz * m.pixels());
+        let mut ys = vec![0.0f32; l * bsz * 10];
+        for s in 0..l * bsz {
+            ys[s * 10 + s % 10] = 1.0;
+        }
+        let mut pb = base.clone();
+        let mut pr = base.clone();
+        let lb = m.local_round(&mut pb, &xs, &ys, l, bsz, 0.05);
+        let lref = m.local_round_reference(&mut pr, &xs, &ys, l, bsz, 0.05);
+        assert!((lb - lref).abs() < 1e-4, "bsz={bsz}: loss {lb} vs {lref}");
+        assert_close(&format!("local_round params bsz={bsz}"), &pb, &pr, 1e-4);
+    }
+}

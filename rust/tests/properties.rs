@@ -432,6 +432,109 @@ fn prop_edge_cost_nonnegative_and_monotone_in_bandwidth() {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Blocked kernels (PR 2): GEMM error bound, im2col/col2im structure, and
+// scratch-arena reuse reproducibility
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_gemm_error_within_associativity_bound() {
+    // The blocked GEMM reassociates at most at KC block boundaries; for
+    // inputs in [-1, 1] the f32 error of a length-k accumulation chain is
+    // bounded by ~k·eps·max|partial|. Check against an f64 oracle.
+    use hfl::runtime::native::ops::matmul;
+    for seed in 0..8u64 {
+        let mut rng = Rng::new(seed ^ 0x6E99);
+        let m = 1 + rng.below(9);
+        let k = 1 + rng.below(600); // crosses the KC=256 block boundary
+        let n = 1 + rng.below(17);
+        let a: Vec<f32> = (0..m * k).map(|_| rng.f32() * 2.0 - 1.0).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.f32() * 2.0 - 1.0).collect();
+        let mut got = vec![0.0f32; m * n];
+        matmul(&a, &b, m, k, n, &mut got);
+        // the theoretical bound: eps ≈ 1.2e-7, partials bounded by k
+        let bound = 1.2e-7 * (k as f64) * (k as f64).sqrt().max(4.0) + 1e-6;
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0.0f64;
+                for kk in 0..k {
+                    acc += a[i * k + kk] as f64 * b[kk * n + j] as f64;
+                }
+                let diff = (got[i * n + j] as f64 - acc).abs();
+                assert!(
+                    diff <= bound,
+                    "seed {seed} ({m}x{k}x{n}) [{i},{j}]: |{}-{acc}| = {diff} > {bound}",
+                    got[i * n + j]
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_im2col_col2im_roundtrip_is_coverage_weighted() {
+    // col2im(im2col(x)) multiplies each pixel by the number of sliding
+    // windows covering it — structural proof the two index maps agree.
+    use hfl::runtime::native::ops::{col2im, im2col};
+    for seed in 0..8u64 {
+        let mut rng = Rng::new(seed ^ 0x1c01);
+        let ic = 1 + rng.below(3);
+        let k = 1 + rng.below(4);
+        let ih = k + rng.below(8);
+        let iw = k + rng.below(8);
+        let (oh, ow) = (ih - k + 1, iw - k + 1);
+        let x: Vec<f32> = (0..ic * ih * iw).map(|_| rng.f32() + 0.5).collect();
+        let mut col = vec![0.0f32; ic * k * k * oh * ow];
+        im2col(&x, ic, ih, iw, k, &mut col);
+        let mut back = vec![0.0f32; x.len()];
+        col2im(&col, ic, ih, iw, k, &mut back);
+        for ch in 0..ic {
+            for yy in 0..ih {
+                for xx in 0..iw {
+                    let cy = (0..k).filter(|&ky| yy >= ky && yy - ky < oh).count();
+                    let cx = (0..k).filter(|&kx| xx >= kx && xx - kx < ow).count();
+                    let idx = (ch * ih + yy) * iw + xx;
+                    let want = x[idx] * (cy * cx) as f32;
+                    assert!(
+                        (back[idx] - want).abs() < 1e-4 * (1.0 + want.abs()),
+                        "seed {seed} ({ic},{ih},{iw},k{k}) [{ch},{yy},{xx}]: {} vs {want}",
+                        back[idx]
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_scratch_arena_reuse_identical_results() {
+    // Repeated identical workloads through one arena: bit-identical
+    // gradients every time, and no allocations once warm.
+    use hfl::model::{init_params, Init};
+    use hfl::runtime::native::cnn::NativeCnn;
+    use hfl::runtime::native::scratch::ScratchArena;
+    let m = NativeCnn::single_conv("tiny", 1, 10, 4, 3);
+    let params = init_params(&m.info, Init::HeNormal, &mut Rng::new(31));
+    let mut rng = Rng::new(32);
+    let bsz = 5; // off the tile boundary on purpose
+    let x: Vec<f32> = (0..bsz * m.pixels()).map(|_| rng.f32() * 2.0 - 1.0).collect();
+    let mut y = vec![0.0f32; bsz * 10];
+    for b in 0..bsz {
+        y[b * 10 + b % 10] = 1.0;
+    }
+    let mut arena = ScratchArena::new();
+    let mut first = vec![0.0f32; m.info.params];
+    let l0 = m.loss_and_grad_arena(&params, &x, &y, bsz, &mut first, &mut arena);
+    let warm_misses = arena.misses();
+    for round in 0..4 {
+        let mut grad = vec![0.0f32; m.info.params];
+        let l = m.loss_and_grad_arena(&params, &x, &y, bsz, &mut grad, &mut arena);
+        assert_eq!(l, l0, "round {round}: loss drifted under arena reuse");
+        assert_eq!(grad, first, "round {round}: grads drifted under arena reuse");
+    }
+    assert_eq!(arena.misses(), warm_misses, "warm arena allocated");
+}
+
 #[test]
 fn prop_json_roundtrip() {
     for seed in 0..50u64 {

@@ -119,6 +119,53 @@ fn strategy_arms_share_the_same_deployments() {
 }
 
 #[test]
+fn train_mode_fig3_style_sweep_is_thread_count_invariant() {
+    // PR 2 wires the fig3/fig4/fig7 train-mode presets through `hfl sweep`
+    // on the blocked kernels; the determinism contract must hold for full
+    // HFL training cells too. This is the in-tree mirror of the CI step
+    // `hfl sweep fig3 --mode train --dataset tiny` (oracle clusters keep
+    // the test-profile runtime sane; CI runs the real Algorithm 2 path in
+    // release mode).
+    let mut system = hfl::system::SystemParams::default();
+    system.n_devices = 40;
+    let spec = ScenarioSpec {
+        name: "train_det".into(),
+        mode: SweepMode::Train,
+        dataset: "tiny".into(),
+        schedulers: vec![SchedKind::Ikc, SchedKind::FedAvg],
+        assigners: vec![AssignKind::RoundRobin],
+        h_values: vec![10],
+        seeds: 1,
+        iters: 2,
+        seed: 9,
+        oracle_clusters: true,
+        k_clusters: 10,
+        lr: 0.05,
+        target_acc: 1.0,
+        test_size: 100,
+        frac_major: 0.8,
+        drl_checkpoint: None,
+        system,
+    };
+    let backend = NativeBackend::new();
+    let a = run_sweep(&spec, Some(&backend), 1).unwrap();
+    let b = run_sweep(&spec, Some(&backend), 4).unwrap();
+    assert_eq!(a.cells.len(), spec.cells().len());
+    assert_eq!(a.cells.len(), b.cells.len());
+    for (ca, cb) in a.cells.iter().zip(&b.cells) {
+        assert_eq!(ca.cell.idx, cb.cell.idx);
+        assert_eq!(ca.rows.len(), spec.iters);
+        for (ra, rb) in ca.rows.iter().zip(&cb.rows) {
+            assert_eq!(ra.accuracy, rb.accuracy, "cell {}", ca.cell.idx);
+            assert_eq!(ra.train_loss, rb.train_loss, "cell {}", ca.cell.idx);
+            assert_eq!(ra.t_i.to_bits(), rb.t_i.to_bits(), "cell {}", ca.cell.idx);
+        }
+        // training actually happened: losses are finite and positive
+        assert!(ca.rows.iter().all(|r| r.train_loss.unwrap() > 0.0));
+    }
+}
+
+#[test]
 fn backendless_cost_sweep_runs_without_d3qn() {
     // a spec without the d3qn assigner needs no backend at all
     let mut spec = small_cost_spec("nobackend");
