@@ -36,9 +36,24 @@ impl Assignment {
         a
     }
 
-    /// Edge of device `n`, if assigned.
+    /// Edge of device `n`, if assigned. Linear in the assignment size —
+    /// fine for one-off queries; hot loops that look up many devices
+    /// should build an [`EdgeIndex`] once via [`Assignment::edge_index`].
     pub fn edge_of(&self, n: usize) -> Option<usize> {
         self.groups.iter().position(|g| g.contains(&n))
+    }
+
+    /// Precompute the device→edge map for O(1) lookups. Snapshot
+    /// semantics: the index reflects the groups at build time and does not
+    /// track later mutation.
+    pub fn edge_index(&self) -> EdgeIndex {
+        let mut map = std::collections::HashMap::with_capacity(self.num_devices());
+        for (m, g) in self.groups.iter().enumerate() {
+            for &n in g {
+                map.insert(n, m);
+            }
+        }
+        EdgeIndex { map }
     }
 
     pub fn num_devices(&self) -> usize {
@@ -56,6 +71,37 @@ impl Assignment {
             }
         }
         true
+    }
+}
+
+/// A precomputed device→edge lookup (see [`Assignment::edge_index`]):
+/// replaces the O(edges·group) scan of [`Assignment::edge_of`] in loops
+/// that resolve every scheduled device per iteration.
+#[derive(Clone, Debug)]
+pub struct EdgeIndex {
+    map: std::collections::HashMap<usize, usize>,
+}
+
+impl EdgeIndex {
+    /// Edge of device `n`, if assigned (O(1)).
+    pub fn edge_of(&self, n: usize) -> Option<usize> {
+        self.map.get(&n).copied()
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// `(device, edge)` pairs sorted by device — a canonical form for
+    /// comparisons in tests.
+    pub fn to_vec_sorted(&self) -> Vec<(usize, usize)> {
+        let mut v: Vec<(usize, usize)> = self.map.iter().map(|(&n, &m)| (n, m)).collect();
+        v.sort_unstable();
+        v
     }
 }
 
@@ -112,5 +158,16 @@ mod tests {
     fn detects_duplicates() {
         let a = Assignment { groups: vec![vec![1, 2], vec![2]] };
         assert!(!a.is_partition());
+    }
+
+    #[test]
+    fn edge_index_matches_linear_scan() {
+        let a = Assignment::from_pairs(4, &[(0, 1), (5, 1), (7, 2), (3, 0), (9, 3)]);
+        let idx = a.edge_index();
+        assert_eq!(idx.len(), 5);
+        for n in 0..12 {
+            assert_eq!(idx.edge_of(n), a.edge_of(n), "device {n}");
+        }
+        assert_eq!(idx.to_vec_sorted(), vec![(0, 1), (3, 0), (5, 1), (7, 2), (9, 3)]);
     }
 }

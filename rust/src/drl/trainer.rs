@@ -191,9 +191,10 @@ impl<'e> DqnTrainer<'e> {
             // Alg.5 L5: expert labels via HFEL
             let mut hfel = Hfel::new(self.cfg.hfel_exchange, self.cfg.seed ^ ep as u64);
             let labels = hfel.run(&topo, &scheduled);
+            let label_index = labels.edge_index();
             let label_of: Vec<usize> = scheduled
                 .iter()
-                .map(|&n| labels.edge_of(n).expect("hfel assigns everyone"))
+                .map(|&n| label_index.edge_of(n).expect("hfel assigns everyone"))
                 .collect();
 
             let ef = build_features(&topo, &scheduled);

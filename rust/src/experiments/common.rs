@@ -1,20 +1,28 @@
-//! Shared experiment plumbing: scheduler/assigner factories and CSV paths.
+//! Shared experiment plumbing: Algorithm-2 clustering, checkpoint/CSV
+//! paths, and the deprecated `SchedKind`/`AssignKind` back-compat parsers.
+//!
+//! Policy construction lives in [`crate::policy`]: drivers resolve
+//! string keys through [`crate::policy::PolicyRegistry`] instead of
+//! matching closed enums here.
 
 use std::path::{Path, PathBuf};
 
-use crate::assignment::drl::DrlAssigner;
-use crate::assignment::geo::Geographic;
-use crate::assignment::hfel::Hfel;
-use crate::assignment::random::{RandomAssign, RoundRobin};
-use crate::assignment::Assigner;
 use crate::config::Config;
 use crate::data::{DeviceData, Templates};
+use crate::policy::PolicyKey;
 use crate::runtime::Backend;
-use crate::scheduling::{cluster_devices, AuxModel, FedAvg, Ikc, Scheduler, Vkc};
+use crate::scheduling::{cluster_devices, AuxModel};
 use crate::system::Topology;
 use crate::util::Rng;
 
-/// Scheduling algorithm selector.
+/// Scheduling algorithm selector — the closed pre-registry enum, kept only
+/// so old call sites and configs keep parsing. New code should resolve
+/// string keys via [`crate::policy::PolicyRegistry::sched_key`] (which also
+/// accepts every spelling this parser does).
+#[deprecated(
+    note = "closed policy enum kept as a back-compat parser; \
+            use hfl::policy::PolicyRegistry / `hfl policies` instead"
+)]
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum SchedKind {
     FedAvg,
@@ -22,6 +30,7 @@ pub enum SchedKind {
     Ikc,
 }
 
+#[allow(deprecated)]
 impl SchedKind {
     pub fn name(&self) -> &'static str {
         match self {
@@ -39,9 +48,21 @@ impl SchedKind {
             _ => anyhow::bail!("unknown scheduler {s:?} (fedavg|vkc|ikc)"),
         }
     }
+
+    /// The registry key this legacy selector names.
+    pub fn key(&self) -> PolicyKey {
+        PolicyKey::bare(self.name())
+    }
 }
 
-/// Assignment strategy selector.
+/// Assignment strategy selector — the closed pre-registry enum, kept only
+/// as a back-compat parser. New code should resolve string keys via
+/// [`crate::policy::PolicyRegistry::assign_key`] (`"hfel?budget=100"`
+/// subsumes the old `Hfel(100)` magic-number variants).
+#[deprecated(
+    note = "closed policy enum kept as a back-compat parser; \
+            use hfl::policy::PolicyRegistry / `hfl policies` instead"
+)]
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum AssignKind {
     Drl(Option<PathBuf>),
@@ -51,6 +72,7 @@ pub enum AssignKind {
     Random,
 }
 
+#[allow(deprecated)]
 impl AssignKind {
     pub fn parse(s: &str, ckpt: Option<PathBuf>) -> anyhow::Result<Self> {
         Ok(match s {
@@ -64,95 +86,41 @@ impl AssignKind {
         })
     }
 
-    /// Stable label used in CSVs and summary tables.
-    pub fn tag(&self) -> String {
+    /// The registry key this legacy selector names.
+    pub fn key(&self) -> PolicyKey {
         match self {
-            AssignKind::Drl(_) => "d3qn".into(),
-            AssignKind::Hfel(k) => format!("hfel-{k}"),
-            AssignKind::Geo => "geographic".into(),
-            AssignKind::RoundRobin => "round-robin".into(),
-            AssignKind::Random => "random".into(),
+            AssignKind::Drl(path) => {
+                let mut k = PolicyKey::bare("d3qn");
+                if let Some(p) = path {
+                    k.params.insert("ckpt".into(), p.display().to_string());
+                }
+                k
+            }
+            AssignKind::Hfel(budget) => {
+                let mut k = PolicyKey::bare("hfel");
+                k.params.insert("budget".into(), budget.to_string());
+                k
+            }
+            AssignKind::Geo => PolicyKey::bare("geographic"),
+            AssignKind::RoundRobin => PolicyKey::bare("round-robin"),
+            AssignKind::Random => PolicyKey::bare("random"),
         }
     }
-}
 
-/// Build the scheduler. VKC/IKC require clusters from Algorithm 2.
-pub fn make_scheduler(
-    kind: SchedKind,
-    clusters: Option<Vec<Vec<usize>>>,
-    n_devices: usize,
-    h: usize,
-    seed: u64,
-) -> anyhow::Result<Box<dyn Scheduler>> {
-    Ok(match kind {
-        SchedKind::FedAvg => Box::new(FedAvg::new(n_devices, h, seed)),
-        SchedKind::Vkc => Box::new(Vkc::new(
-            clusters.ok_or_else(|| anyhow::anyhow!("vkc needs clusters"))?,
-            n_devices,
-            h,
-            seed,
-        )),
-        SchedKind::Ikc => Box::new(Ikc::new(
-            clusters.ok_or_else(|| anyhow::anyhow!("ikc needs clusters"))?,
-            n_devices,
-            h,
-            seed,
-        )),
-    })
-}
-
-/// Single source of the assigner-construction policy, shared by the CLI
-/// (`make_assigner`) and the scenario sweep runner. For `Drl`, the
-/// explicit path wins over `default_ckpt`; a missing/unloadable checkpoint
-/// falls back to a fresh (untrained) agent with a warning.
-pub fn assigner_with_fallback<'e>(
-    kind: &AssignKind,
-    backend: Option<&'e dyn Backend>,
-    default_ckpt: Option<PathBuf>,
-    seed: u64,
-) -> anyhow::Result<Box<dyn Assigner + 'e>> {
-    Ok(match kind {
-        AssignKind::Drl(path) => {
-            let b = backend
-                .ok_or_else(|| anyhow::anyhow!("the d3qn assigner needs a model backend"))?;
-            match path.clone().or(default_ckpt) {
-                Some(p) => match DrlAssigner::from_checkpoint(b, &p) {
-                    Ok(a) => Box::new(a),
-                    Err(e) => {
-                        log::warn!(
-                            "no DRL checkpoint at {} ({e}); using untrained agent — \
-                             run `hfl drl-train` first for paper-faithful results",
-                            p.display()
-                        );
-                        Box::new(DrlAssigner::fresh(b, seed)?)
-                    }
-                },
-                None => Box::new(DrlAssigner::fresh(b, seed)?),
-            }
-        }
-        AssignKind::Hfel(k) => Box::new(Hfel::new(*k, seed)),
-        AssignKind::Geo => Box::new(Geographic),
-        AssignKind::RoundRobin => Box::new(RoundRobin),
-        AssignKind::Random => Box::new(RandomAssign::new(seed)),
-    })
-}
-
-/// Build the assigner for the CLI config. `Drl(None)` tries
-/// `<out_dir>/dqn_theta.bin` then falls back to a fresh agent.
-pub fn make_assigner<'e>(
-    kind: &AssignKind,
-    backend: &'e dyn Backend,
-    cfg: &Config,
-    seed: u64,
-) -> anyhow::Result<Box<dyn Assigner + 'e>> {
-    assigner_with_fallback(kind, Some(backend), Some(default_checkpoint(cfg)), seed)
+    /// Stable label used in CSVs and summary tables (the canonical
+    /// registry key string).
+    pub fn tag(&self) -> String {
+        self.key().to_string()
+    }
 }
 
 pub fn default_checkpoint(cfg: &Config) -> PathBuf {
     Path::new(&cfg.out_dir).join("dqn_theta.bin")
 }
 
-/// Run Algorithm 2 once for a deployment (used by VKC/IKC experiment arms).
+/// Run Algorithm 2 once for a deployment (used by cluster-based scheduler
+/// arms; which aux model a scheduler needs comes from its registry entry's
+/// [`crate::policy::ClusterNeed`]).
 pub fn clusters_for(
     backend: &dyn Backend,
     topo: &Topology,
@@ -172,4 +140,31 @@ pub fn clusters_for(
 
 pub fn csv_path(cfg: &Config, name: &str) -> PathBuf {
     Path::new(&cfg.out_dir).join(name)
+}
+
+#[cfg(test)]
+#[allow(deprecated)]
+mod tests {
+    use super::*;
+    use crate::policy::PolicyRegistry;
+
+    #[test]
+    fn legacy_parsers_resolve_to_registry_keys() {
+        let reg = PolicyRegistry::global();
+        for s in ["fedavg", "vkc", "ikc"] {
+            let kind = SchedKind::parse(s).unwrap();
+            assert_eq!(kind.key(), reg.sched_key(s).unwrap(), "{s}");
+        }
+        for s in ["drl", "d3qn", "hfel", "hfel-100", "hfel-300", "geo", "rr", "random"] {
+            let kind = AssignKind::parse(s, None).unwrap();
+            assert_eq!(kind.key(), reg.assign_key(s).unwrap(), "{s}");
+        }
+    }
+
+    #[test]
+    fn legacy_tags_are_canonical_key_strings() {
+        assert_eq!(AssignKind::Hfel(100).tag(), "hfel?budget=100");
+        assert_eq!(AssignKind::Drl(None).tag(), "d3qn");
+        assert_eq!(AssignKind::Geo.tag(), "geographic");
+    }
 }

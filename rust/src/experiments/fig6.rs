@@ -43,7 +43,7 @@ pub fn run(backend: &dyn Backend, cfg: &Config) -> anyhow::Result<Vec<StrategySt
         for r in &c.rows {
             csv.row(&[
                 c.cell.seed_i.to_string(),
-                c.cell.assigner.tag(),
+                c.cell.assigner.to_string(),
                 format!("{:.3}", r.t_i),
                 format!("{:.3}", r.e_i),
                 format!("{:.3}", r.objective),

@@ -17,7 +17,8 @@ use super::common::csv_path;
 /// One (dataset, H, scheduler) arm's aggregated accuracy curve.
 pub struct SchedCurve {
     pub dataset: String,
-    pub scheduler: &'static str,
+    /// Canonical scheduler policy key of the arm.
+    pub scheduler: String,
     pub h: usize,
     pub mean: Vec<f64>,
     pub std: Vec<f64>,
@@ -33,7 +34,7 @@ pub fn run(backend: &dyn Backend, cfg: &Config, dataset: &str) -> anyhow::Result
         &["dataset", "scheduler", "h", "iter", "acc_mean", "acc_std"],
     )?;
     let mut curves = Vec::new();
-    for ((kind, _assigner, h), cells) in result.grouped() {
+    for ((scheduler, _assigner, h), cells) in result.grouped() {
         let runs: Vec<Vec<f64>> = cells
             .iter()
             .map(|c| c.rows.iter().filter_map(|r| r.accuracy).collect())
@@ -42,7 +43,7 @@ pub fn run(backend: &dyn Backend, cfg: &Config, dataset: &str) -> anyhow::Result
         for (i, (m, s)) in mean.iter().zip(&std).enumerate() {
             csv.row(&[
                 dataset.into(),
-                kind.name().into(),
+                scheduler.clone(),
                 h.to_string(),
                 i.to_string(),
                 format!("{m:.4}"),
@@ -50,15 +51,14 @@ pub fn run(backend: &dyn Backend, cfg: &Config, dataset: &str) -> anyhow::Result
             ])?;
         }
         println!(
-            "{fig} [{dataset}] H={h:<3} {:7}: final acc {:.3} ± {:.3} ({} iters)",
-            kind.name(),
+            "{fig} [{dataset}] H={h:<3} {scheduler:7}: final acc {:.3} ± {:.3} ({} iters)",
             mean.last().cloned().unwrap_or(0.0),
             std.last().cloned().unwrap_or(0.0),
             mean.len()
         );
         curves.push(SchedCurve {
             dataset: dataset.into(),
-            scheduler: kind.name(),
+            scheduler,
             h,
             mean,
             std,

@@ -15,4 +15,5 @@ pub mod fig7;
 pub mod fig_sched;
 pub mod table2;
 
+#[allow(deprecated)]
 pub use common::{AssignKind, SchedKind};

@@ -20,6 +20,7 @@ use crate::data::{DeviceData, Templates, TestSet, NUM_CLASSES};
 use crate::fl::eval::evaluate_accuracy;
 use crate::metrics::{IterRecord, RunResult};
 use crate::model::{accumulate, finish, init_params, Init};
+use crate::policy::{AssignPolicy, PolicyCtx, RoundHistory, SchedulePolicy};
 use crate::runtime::Backend;
 use crate::scheduling::Scheduler;
 use crate::system::Topology;
@@ -195,18 +196,13 @@ impl<'e> HflTrainer<'e> {
         // stable device order: group by edge so aggregation is direct
         let scheduled: Vec<usize> =
             assignment.groups.iter().flatten().cloned().collect();
+        let edge_index = assignment.edge_index();
         let device_edge: Vec<usize> = scheduled
             .iter()
-            .map(|&n| assignment.edge_of(n).expect("scheduled device unassigned"))
+            .map(|&n| edge_index.edge_of(n).expect("scheduled device unassigned"))
             .collect();
-        let edge_lookup = {
-            let map: std::collections::HashMap<usize, usize> = scheduled
-                .iter()
-                .cloned()
-                .zip(device_edge.iter().cloned())
-                .collect();
-            move |n: usize| map[&n]
-        };
+        let edge_lookup =
+            |n: usize| edge_index.edge_of(n).expect("scheduled device unassigned");
 
         let mut last_loss = 0.0f64;
         for _q in 0..q_iters {
@@ -258,11 +254,37 @@ impl<'e> HflTrainer<'e> {
         (h * q + m_used) * self.model_bytes
     }
 
-    /// Algorithm 6: the full framework loop.
+    /// Algorithm 6 through the legacy trait pair — a thin bridge onto
+    /// [`HflTrainer::run_policies`] kept for callers (examples, tests)
+    /// that construct concrete schedulers/assigners directly.
     pub fn run(
         &mut self,
         scheduler: &mut dyn Scheduler,
         assigner: &mut dyn Assigner,
+        alloc_opts: &SolverOpts,
+        progress: impl FnMut(&IterRecord),
+    ) -> anyhow::Result<RunResult> {
+        let seed = self.cfg.seed;
+        self.run_policies(
+            &mut BorrowedScheduler(scheduler),
+            &mut BorrowedAssigner(assigner),
+            None,
+            seed,
+            alloc_opts,
+            progress,
+        )
+    }
+
+    /// Algorithm 6: the full framework loop through the policy API. Each
+    /// global iteration builds a [`PolicyCtx`] (topology, clusters, H,
+    /// round index, history) for the scheduler and assigner; `policy_seed`
+    /// is the ctx's constant RNG stream tag (per sweep cell).
+    pub fn run_policies(
+        &mut self,
+        scheduler: &mut dyn SchedulePolicy,
+        assigner: &mut dyn AssignPolicy,
+        clusters: Option<&[Vec<usize>]>,
+        policy_seed: u64,
         alloc_opts: &SolverOpts,
         mut progress: impl FnMut(&IterRecord),
     ) -> anyhow::Result<RunResult> {
@@ -270,12 +292,23 @@ impl<'e> HflTrainer<'e> {
         let info = self.backend.manifest().model(&self.cfg.dataset)?.clone();
         let mut global = init_params(&info, Init::HeNormal, &mut self.rng);
         let mut result = RunResult::default();
+        let mut history = RoundHistory::default();
 
         for i in 0..self.cfg.max_iters {
-            let scheduled = scheduler.schedule();
-            let t_assign = Instant::now();
-            let assignment = assigner.assign(&self.topo, &scheduled);
-            let assign_latency_s = t_assign.elapsed().as_secs_f64();
+            let (scheduled, assignment, assign_latency_s) = {
+                let ctx = PolicyCtx {
+                    topo: &self.topo,
+                    clusters,
+                    h: self.cfg.h,
+                    round: i,
+                    history: &history,
+                    seed: policy_seed,
+                };
+                let scheduled = scheduler.schedule(&ctx)?;
+                let t_assign = Instant::now();
+                let assignment = assigner.assign(&ctx, &scheduled)?;
+                (scheduled, assignment, t_assign.elapsed().as_secs_f64())
+            };
             debug_assert!(assignment.is_partition());
 
             let (iter_cost, _) = eval_assignment(&self.topo, &assignment, alloc_opts);
@@ -304,6 +337,7 @@ impl<'e> HflTrainer<'e> {
             };
             progress(&rec);
             result.records.push(rec);
+            history.push(scheduled, assignment);
 
             if accuracy >= self.cfg.target_acc {
                 result.converged_at = Some(i + 1);
@@ -312,5 +346,31 @@ impl<'e> HflTrainer<'e> {
         }
         result.wall_secs = t_start.elapsed().as_secs_f64();
         Ok(result)
+    }
+}
+
+/// Legacy-trait adapters for [`HflTrainer::run`]: old-style schedulers and
+/// assigners ignore the [`PolicyCtx`] entirely.
+struct BorrowedScheduler<'a>(&'a mut dyn Scheduler);
+
+impl SchedulePolicy for BorrowedScheduler<'_> {
+    fn schedule(&mut self, _ctx: &PolicyCtx) -> anyhow::Result<Vec<usize>> {
+        Ok(self.0.schedule())
+    }
+
+    fn name(&self) -> String {
+        self.0.name().to_string()
+    }
+}
+
+struct BorrowedAssigner<'a>(&'a mut dyn Assigner);
+
+impl AssignPolicy for BorrowedAssigner<'_> {
+    fn assign(&mut self, ctx: &PolicyCtx, scheduled: &[usize]) -> anyhow::Result<Assignment> {
+        Ok(self.0.assign(ctx.topo, scheduled))
+    }
+
+    fn name(&self) -> String {
+        self.0.name().to_string()
     }
 }

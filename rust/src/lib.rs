@@ -14,6 +14,10 @@
 //!   implementations: the pure-Rust, thread-safe [`runtime::NativeBackend`]
 //!   (default, artifact-free) and the PJRT engine executing the AOT
 //!   artifacts (feature `pjrt`); Python is never on the request path.
+//! * **policy** — the open, string-keyed scheduler/assigner surface
+//!   ([`policy::PolicyRegistry`]): TOML profiles and CLI flags name
+//!   policies as `name?param=value` keys (`"hfel?budget=300"`,
+//!   `"static?base=greedy"`); `hfl policies` lists the registry.
 //! * **scenario** — declarative experiment grids ([`scenario::ScenarioSpec`])
 //!   and the rayon-parallel sweep runner behind `hfl sweep`.
 //!
@@ -32,6 +36,7 @@ pub mod fl;
 pub mod metrics;
 pub mod model;
 pub mod assignment;
+pub mod policy;
 pub mod runtime;
 pub mod scenario;
 pub mod scheduling;

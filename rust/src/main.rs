@@ -5,14 +5,13 @@
 use std::path::PathBuf;
 
 use hfl::allocation::SolverOpts;
-use hfl::assignment::Assigner;
 use hfl::cli::Args;
 use hfl::config::Config;
-use hfl::experiments::{self, AssignKind, SchedKind};
+use hfl::experiments;
 use hfl::fl::{HflConfig, HflTrainer};
+use hfl::policy::{AssignEnv, AssignPolicy, ClusterNeed, PolicyRegistry, SchedEnv};
 use hfl::runtime::{Backend, NativeBackend};
 use hfl::scenario::{self, ScenarioSpec};
-use hfl::scheduling::AuxModel;
 use hfl::util::logging;
 
 const USAGE: &str = "\
@@ -20,15 +19,21 @@ usage: hfl <command> [options]
 
 commands:
   info                      show backend model/constant inventory
+  policies                  list the registered scheduler/assigner policy
+                            keys (the --scheduler/--assigner/--schedulers/
+                            --assigners vocabulary)
   train                     single HFL run
-                            (--dataset --h --scheduler ikc|vkc|fedavg
-                             --assigner drl|hfel|hfel-100|geo|rr|random
-                             --max-iters --target-acc --lr --seed)
+                            (--dataset --h --scheduler KEY --assigner KEY
+                             --max-iters --target-acc --lr --seed;
+                             policy KEYs take inline params, e.g.
+                             hfel?budget=100 or static?base=greedy —
+                             see `hfl policies`)
   sweep [preset|spec.toml]  scenario sweep: run a scheduler × assigner × H
                             grid, rayon-parallel on the native backend
                             (presets: grid fig3 fig4 fig6 fig7;
-                             --threads N  --iters N  --mode cost|train
-                             --schedulers a,b  --assigners a,b
+                             --threads N  --iters N  --seeds N
+                             --h-values 10,30  --mode cost|train
+                             --schedulers k1,k2  --assigners k1,k2
                              --dataset fmnist|cifar|tiny overrides the
                              preset's dataset for train mode)
   bench                     kernel benchmarks: blocked native kernels vs
@@ -127,13 +132,19 @@ fn cmd_info(backend: &dyn Backend) -> anyhow::Result<()> {
 }
 
 fn cmd_train(args: &Args, cfg: &Config, backend: &dyn Backend) -> anyhow::Result<()> {
+    let reg = PolicyRegistry::global();
     let dataset = args.get_str("dataset", "fmnist");
     let h = args.get_usize("h", 50)?;
-    let sched_kind = SchedKind::parse(&args.get_str("scheduler", "ikc"))?;
-    let assign_kind = AssignKind::parse(
-        &args.get_str("assigner", "drl"),
-        args.opt("checkpoint").map(PathBuf::from),
-    )?;
+    let sched_key = reg.sched_key(&args.get_str("scheduler", "ikc"))?;
+    let assign_key = reg.assign_key(&args.get_str("assigner", "d3qn"))?;
+    // --checkpoint is CLI sugar for the D³QN checkpoint fallback: routing
+    // it through AssignEnv::default_ckpt (instead of injecting a `ckpt`
+    // key param) lets composite keys like `static?base=d3qn` see it too;
+    // an explicit `?ckpt=` param on the key still wins
+    let ckpt = args
+        .opt("checkpoint")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| experiments::common::default_checkpoint(cfg));
     let hcfg = HflConfig {
         dataset: dataset.clone(),
         h,
@@ -147,37 +158,45 @@ fn cmd_train(args: &Args, cfg: &Config, backend: &dyn Backend) -> anyhow::Result
     args.finish()?;
 
     let mut trainer = HflTrainer::with_default_topology(backend, hcfg)?;
-    let clusters = match sched_kind {
-        SchedKind::FedAvg => None,
-        SchedKind::Ikc => Some(experiments::common::clusters_for(
+    let entry = reg
+        .sched_entry(&sched_key.name)
+        .expect("resolved scheduler key is registered");
+    let clusters = match entry.clusters {
+        ClusterNeed::None => None,
+        ClusterNeed::Aux(aux) => Some(experiments::common::clusters_for(
             backend, &trainer.topo, &trainer.templates, &trainer.device_data,
-            AuxModel::Mini, cfg.k_clusters, cfg.seed,
-        )?),
-        SchedKind::Vkc => Some(experiments::common::clusters_for(
-            backend, &trainer.topo, &trainer.templates, &trainer.device_data,
-            AuxModel::Full, cfg.k_clusters, cfg.seed,
+            aux, cfg.k_clusters, cfg.seed,
         )?),
     };
-    let mut sched = experiments::common::make_scheduler(
-        sched_kind, clusters, trainer.topo.devices.len(), h, cfg.seed ^ 0x5c4ed,
-    )?;
-    let mut assigner: Box<dyn Assigner> =
-        experiments::common::make_assigner(&assign_kind, backend, cfg, cfg.seed)?;
+    let mut sched = reg.scheduler(&sched_key, &SchedEnv { seed: cfg.seed ^ 0x5c4ed })?;
+    let env = AssignEnv {
+        backend: Some(backend),
+        default_ckpt: Some(ckpt),
+        expect_edges: Some(trainer.topo.edges.len()),
+        seed: cfg.seed,
+    };
+    let mut assigner = reg.assigner(&assign_key, &env)?;
 
     println!(
-        "training {dataset} H={h} scheduler={} assigner={} backend={} target={}",
-        sched_kind.name(),
+        "training {dataset} H={h} scheduler={sched_key} assigner={} backend={} target={}",
         assigner.name(),
         backend.name(),
         trainer.cfg.target_acc
     );
-    let res = trainer.run(&mut *sched, &mut *assigner, &SolverOpts::default(), |r| {
-        println!(
-            "iter {:3}  acc {:.3}  loss {:.3}  T_i {:9.1}s  E_i {:8.1}J  msgs {:6.1}MB  assign {:7.2}ms",
-            r.iter, r.accuracy, r.train_loss, r.t_i, r.e_i,
-            r.msg_bytes / 1e6, r.assign_latency_s * 1e3
-        );
-    })?;
+    let res = trainer.run_policies(
+        &mut *sched,
+        &mut *assigner,
+        clusters.as_deref(),
+        cfg.seed,
+        &SolverOpts::default(),
+        |r| {
+            println!(
+                "iter {:3}  acc {:.3}  loss {:.3}  T_i {:9.1}s  E_i {:8.1}J  msgs {:6.1}MB  assign {:7.2}ms",
+                r.iter, r.accuracy, r.train_loss, r.t_i, r.e_i,
+                r.msg_bytes / 1e6, r.assign_latency_s * 1e3
+            );
+        },
+    )?;
     match res.converged_at {
         Some(i) => println!("reached target in {i} global iterations"),
         None => println!("target not reached in {} iterations", res.records.len()),
@@ -200,6 +219,7 @@ fn cmd_train(args: &Args, cfg: &Config, backend: &dyn Backend) -> anyhow::Result
 
 /// `hfl sweep` — the parallel scenario engine on the native backend.
 fn cmd_sweep(args: &Args, cfg: &Config) -> anyhow::Result<()> {
+    let reg = PolicyRegistry::global();
     let which = args
         .positional
         .first()
@@ -216,13 +236,13 @@ fn cmd_sweep(args: &Args, cfg: &Config) -> anyhow::Result<()> {
     if let Some(s) = args.opt("schedulers") {
         spec.schedulers = s
             .split(',')
-            .map(|x| SchedKind::parse(x.trim()))
+            .map(|x| reg.sched_key(x.trim()))
             .collect::<anyhow::Result<_>>()?;
     }
     if let Some(a) = args.opt("assigners") {
         spec.assigners = a
             .split(',')
-            .map(|x| AssignKind::parse(x.trim(), None))
+            .map(|x| reg.assign_key(x.trim()))
             .collect::<anyhow::Result<_>>()?;
     }
     // run a train-mode preset on a different model family (e.g. the
@@ -235,6 +255,10 @@ fn cmd_sweep(args: &Args, cfg: &Config) -> anyhow::Result<()> {
         }
     }
     spec.iters = args.get_usize("iters", spec.iters)?;
+    // explicit CLI shaping wins over TOML profile values (a TOML spec
+    // otherwise re-overrides what load_config read into cfg)
+    spec.seeds = args.get_usize("seeds", spec.seeds)?;
+    spec.h_values = args.get_usize_list("h-values", &spec.h_values)?;
     let threads = args.get_usize("threads", 0)?;
     args.finish()?;
     spec.validate()?;
@@ -265,7 +289,7 @@ fn cmd_sweep(args: &Args, cfg: &Config) -> anyhow::Result<()> {
         let objs: Vec<f64> = cells.iter().map(|c| c.objective(result.lambda)).collect();
         let lats: Vec<f64> = cells.iter().map(|c| c.assign_latency_mean_s).collect();
         table.row(&[
-            sched.name().to_string(),
+            sched,
             assigner,
             h.to_string(),
             format!("{:.1}", hfl::util::stats::mean(&objs)),
@@ -369,8 +393,14 @@ fn main() -> anyhow::Result<()> {
         print!("{USAGE}");
         return Ok(());
     }
-    // bench takes no Config and interprets --out as a file path, not the
-    // results directory — route it before the config layer touches --out
+    // `policies` and `bench` take no Config: `policies` only reads the
+    // static registry; bench interprets --out as a file path, not the
+    // results directory — route both before the config layer touches --out
+    if args.subcommand == "policies" {
+        args.finish()?;
+        print!("{}", PolicyRegistry::global().listing());
+        return Ok(());
+    }
     if args.subcommand == "bench" {
         return cmd_bench(&args);
     }

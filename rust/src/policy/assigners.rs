@@ -1,0 +1,238 @@
+//! Assignment policies: adapters over the paper's concrete assigners
+//! (D³QN / HFEL / geographic / round-robin / random) plus the two new
+//! strategies shipped through the open policy API — the cost-aware greedy
+//! assigner and the sticky/static assigner.
+
+use std::collections::HashMap;
+
+use super::{AssignPolicy, PolicyCtx};
+use crate::allocation::{solve_edge, SolverOpts};
+use crate::assignment::drl::DrlAssigner;
+use crate::assignment::{Assigner, Assignment};
+
+/// Adapter: any legacy [`Assigner`] as an [`AssignPolicy`].
+pub struct FromAssigner<A> {
+    inner: A,
+    label: String,
+}
+
+impl<A: Assigner> FromAssigner<A> {
+    pub fn new(inner: A, label: impl Into<String>) -> Self {
+        FromAssigner { inner, label: label.into() }
+    }
+}
+
+impl<A: Assigner> AssignPolicy for FromAssigner<A> {
+    fn assign(&mut self, ctx: &PolicyCtx, scheduled: &[usize]) -> anyhow::Result<Assignment> {
+        Ok(self.inner.assign(ctx.topo, scheduled))
+    }
+
+    fn name(&self) -> String {
+        self.label.clone()
+    }
+}
+
+/// D³QN through the policy API. Unlike the legacy [`Assigner`] impl (which
+/// panics on backend errors), this propagates them as `Result`.
+pub struct D3qnPolicy<'e> {
+    inner: DrlAssigner<'e>,
+    label: String,
+}
+
+impl<'e> D3qnPolicy<'e> {
+    pub fn new(inner: DrlAssigner<'e>, label: impl Into<String>) -> Self {
+        D3qnPolicy { inner, label: label.into() }
+    }
+}
+
+impl AssignPolicy for D3qnPolicy<'_> {
+    fn assign(&mut self, ctx: &PolicyCtx, scheduled: &[usize]) -> anyhow::Result<Assignment> {
+        Ok(self.inner.assign_with_q(ctx.topo, scheduled)?.0)
+    }
+
+    fn name(&self) -> String {
+        self.label.clone()
+    }
+}
+
+/// Cost-aware greedy assigner: devices are placed one at a time on the edge
+/// with the smallest *marginal* increase of the separable objective-(17)
+/// surrogate Σ_m (E_m + λ·T_m) — each candidate evaluated by re-solving the
+/// affected edge's resource allocation (27), exactly like one HFEL
+/// transferring step but in a single constructive pass (O(H·M) solves, no
+/// search iterations).
+pub struct GreedyCost {
+    opts: SolverOpts,
+}
+
+impl GreedyCost {
+    pub fn new() -> Self {
+        GreedyCost { opts: SolverOpts::fast() }
+    }
+}
+
+impl Default for GreedyCost {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl AssignPolicy for GreedyCost {
+    fn assign(&mut self, ctx: &PolicyCtx, scheduled: &[usize]) -> anyhow::Result<Assignment> {
+        let topo = ctx.topo;
+        let lambda = topo.params.lambda;
+        let m_count = topo.edges.len();
+        anyhow::ensure!(m_count > 0, "greedy: topology has no edge servers");
+        let mut groups: Vec<Vec<usize>> = vec![Vec::new(); m_count];
+        let mut obj = vec![0.0f64; m_count];
+        for &n in scheduled {
+            let mut best: Option<(usize, f64, f64)> = None; // (edge, delta, new_obj)
+            for (m, group) in groups.iter_mut().enumerate() {
+                group.push(n);
+                let new_obj = solve_edge(topo, m, group, lambda, &self.opts).objective;
+                group.pop();
+                let delta = new_obj - obj[m];
+                if best.map_or(true, |(_, bd, _)| delta < bd) {
+                    best = Some((m, delta, new_obj));
+                }
+            }
+            let (m, _, new_obj) = best.expect("at least one edge");
+            groups[m].push(n);
+            obj[m] = new_obj;
+        }
+        Ok(Assignment { groups })
+    }
+
+    fn name(&self) -> String {
+        "greedy".into()
+    }
+}
+
+/// Sticky/static assigner: the first round delegates to `base` and freezes
+/// the resulting device→edge map; later rounds replay it. Devices that were
+/// never seen before (the scheduler rotated new ones in) stick to their
+/// nearest edge on first appearance. Isolates how much of a strategy's win
+/// comes from *re*-assigning every round vs. one good initial placement.
+pub struct StickyAssign<'e> {
+    base: Box<dyn AssignPolicy + 'e>,
+    frozen: HashMap<usize, usize>,
+    initialized: bool,
+    label: String,
+}
+
+impl<'e> StickyAssign<'e> {
+    pub fn new(base: Box<dyn AssignPolicy + 'e>, label: impl Into<String>) -> Self {
+        StickyAssign { base, frozen: HashMap::new(), initialized: false, label: label.into() }
+    }
+}
+
+impl AssignPolicy for StickyAssign<'_> {
+    fn assign(&mut self, ctx: &PolicyCtx, scheduled: &[usize]) -> anyhow::Result<Assignment> {
+        if !self.initialized {
+            let a = self.base.assign(ctx, scheduled)?;
+            let idx = a.edge_index();
+            for &n in scheduled {
+                if let Some(e) = idx.edge_of(n) {
+                    self.frozen.insert(n, e);
+                }
+            }
+            self.initialized = true;
+            return Ok(a);
+        }
+        let pairs: Vec<(usize, usize)> = scheduled
+            .iter()
+            .map(|&n| {
+                let e = *self.frozen.entry(n).or_insert_with(|| ctx.topo.nearest_edge(n));
+                (n, e)
+            })
+            .collect();
+        Ok(Assignment::from_pairs(ctx.topo.edges.len(), &pairs))
+    }
+
+    fn name(&self) -> String {
+        self.label.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::assignment::evaluate;
+    use crate::assignment::geo::Geographic;
+    use crate::policy::RoundHistory;
+    use crate::system::{SystemParams, Topology};
+    use crate::util::Rng;
+
+    fn topo(seed: u64) -> Topology {
+        Topology::generate(&SystemParams::default(), &mut Rng::new(seed))
+    }
+
+    fn ctx<'a>(
+        topo: &'a Topology,
+        history: &'a RoundHistory,
+        h: usize,
+        round: usize,
+    ) -> PolicyCtx<'a> {
+        PolicyCtx { topo, clusters: None, h, round, history, seed: 1 }
+    }
+
+    #[test]
+    fn greedy_is_a_valid_partition_and_beats_random_on_average() {
+        let t = topo(1);
+        let hist = RoundHistory::default();
+        let sched: Vec<usize> = (0..30).collect();
+        let mut g = GreedyCost::new();
+        let a = g.assign(&ctx(&t, &hist, 30, 0), &sched).unwrap();
+        assert!(a.is_partition());
+        assert_eq!(a.num_devices(), 30);
+        let mut all: Vec<usize> = a.groups.iter().flatten().cloned().collect();
+        all.sort_unstable();
+        assert_eq!(all, sched);
+
+        // marginal-cost placement should not lose to uniform random
+        let mut r = crate::assignment::random::RandomAssign::new(7);
+        let ar = r.assign(&t, &sched);
+        let lambda = t.params.lambda;
+        let (cg, _) = evaluate(&t, &a, &SolverOpts::default());
+        let (cr, _) = evaluate(&t, &ar, &SolverOpts::default());
+        assert!(
+            cg.objective(lambda) <= cr.objective(lambda) * 1.05,
+            "greedy {} vs random {}",
+            cg.objective(lambda),
+            cr.objective(lambda)
+        );
+    }
+
+    #[test]
+    fn sticky_replays_the_first_assignment() {
+        let t = topo(2);
+        let hist = RoundHistory::default();
+        let sched: Vec<usize> = (0..20).collect();
+        let mut s = StickyAssign::new(
+            Box::new(FromAssigner::new(Geographic, "geographic")),
+            "static?base=geographic",
+        );
+        let a0 = s.assign(&ctx(&t, &hist, 20, 0), &sched).unwrap();
+        let a1 = s.assign(&ctx(&t, &hist, 20, 1), &sched).unwrap();
+        assert_eq!(a0.edge_index().to_vec_sorted(), a1.edge_index().to_vec_sorted());
+    }
+
+    #[test]
+    fn sticky_pins_unseen_devices_to_nearest_edge() {
+        let t = topo(3);
+        let hist = RoundHistory::default();
+        let mut s = StickyAssign::new(
+            Box::new(FromAssigner::new(Geographic, "geographic")),
+            "static?base=geographic",
+        );
+        let first: Vec<usize> = (0..10).collect();
+        s.assign(&ctx(&t, &hist, 10, 0), &first).unwrap();
+        let second: Vec<usize> = (5..15).collect();
+        let a = s.assign(&ctx(&t, &hist, 10, 1), &second).unwrap();
+        assert!(a.is_partition());
+        assert_eq!(a.num_devices(), 10);
+        for n in 10..15 {
+            assert_eq!(a.edge_of(n), Some(t.nearest_edge(n)), "new device {n}");
+        }
+    }
+}

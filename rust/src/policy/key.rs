@@ -1,0 +1,152 @@
+//! Policy key grammar: `name` or `name?param=value&param2=value2`.
+//!
+//! Keys are how TOML scenario profiles, CLI flags and presets name
+//! scheduling/assignment policies without recompiling any dispatch logic:
+//! `"ikc"`, `"hfel?budget=300"`, `"d3qn?ckpt=results/dqn_theta.bin"`,
+//! `"static?base=greedy"`. Parameter values run to the next `&` (or the end
+//! of the string), so a value may itself contain `?`/`=` — which is what
+//! lets composite policies nest a full key, e.g.
+//! `"static?base=hfel?budget=100"`.
+//!
+//! Parameters live in a [`std::collections::BTreeMap`], so the canonical
+//! rendering ([`std::fmt::Display`]) is order-insensitive: two spellings of
+//! the same key compare equal and print identically. The rendered form is
+//! also the CSV / summary-table label of a sweep arm.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A parsed, order-canonical `name?k=v&…` policy key.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PolicyKey {
+    /// Registered policy name (or an alias, until registry resolution).
+    pub name: String,
+    /// Inline parameters, canonically ordered by key.
+    pub params: BTreeMap<String, String>,
+}
+
+impl PolicyKey {
+    /// A key with no parameters.
+    pub fn bare(name: &str) -> PolicyKey {
+        PolicyKey { name: name.to_string(), params: BTreeMap::new() }
+    }
+
+    /// Parse `name` / `name?k=v&k2=v2`. Rejects empty names, empty
+    /// parameter keys/values, duplicate parameter keys and whitespace-only
+    /// input; anything after the first `?` is parameters.
+    pub fn parse(s: &str) -> anyhow::Result<PolicyKey> {
+        let s = s.trim();
+        let (name, rest) = match s.split_once('?') {
+            Some((n, r)) => (n, Some(r)),
+            None => (s, None),
+        };
+        anyhow::ensure!(!name.is_empty(), "policy key {s:?} has an empty name");
+        anyhow::ensure!(
+            name.chars().all(|c| c.is_ascii_alphanumeric() || c == '-' || c == '_'),
+            "policy name {name:?} may only contain [a-zA-Z0-9_-]"
+        );
+        let mut params = BTreeMap::new();
+        if let Some(rest) = rest {
+            anyhow::ensure!(!rest.is_empty(), "policy key {s:?}: empty parameter list after '?'");
+            for part in rest.split('&') {
+                let (k, v) = part.split_once('=').ok_or_else(|| {
+                    anyhow::anyhow!("policy key {s:?}: parameter {part:?} is not key=value")
+                })?;
+                anyhow::ensure!(!k.is_empty() && !v.is_empty(), "policy key {s:?}: empty parameter key or value in {part:?}");
+                anyhow::ensure!(
+                    params.insert(k.to_string(), v.to_string()).is_none(),
+                    "policy key {s:?}: duplicate parameter {k:?}"
+                );
+            }
+        }
+        Ok(PolicyKey { name: name.to_string(), params })
+    }
+
+    pub fn get_str(&self, key: &str) -> Option<&str> {
+        self.params.get(key).map(String::as_str)
+    }
+
+    pub fn get_f64(&self, key: &str) -> anyhow::Result<Option<f64>> {
+        match self.params.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<f64>()
+                .map(Some)
+                .map_err(|_| anyhow::anyhow!("{self}: param {key}={v:?} is not a number")),
+        }
+    }
+
+    pub fn get_usize(&self, key: &str) -> anyhow::Result<Option<usize>> {
+        match self.params.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<usize>()
+                .map(Some)
+                .map_err(|_| anyhow::anyhow!("{self}: param {key}={v:?} is not an integer")),
+        }
+    }
+
+    /// Parameter with a default (the registry injects declared defaults at
+    /// resolution time, so this is a belt-and-braces fallback for keys
+    /// constructed via [`PolicyKey::bare`]).
+    pub fn usize_or(&self, key: &str, default: usize) -> anyhow::Result<usize> {
+        Ok(self.get_usize(key)?.unwrap_or(default))
+    }
+}
+
+impl fmt::Display for PolicyKey {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.name)?;
+        for (i, (k, v)) in self.params.iter().enumerate() {
+            write!(f, "{}{k}={v}", if i == 0 { '?' } else { '&' })?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bare_and_parameterized_round_trip() {
+        for s in ["ikc", "hfel?budget=300", "d3qn?ckpt=results/dqn_theta.bin"] {
+            let k = PolicyKey::parse(s).unwrap();
+            assert_eq!(k.to_string(), s, "canonical form differs");
+            assert_eq!(PolicyKey::parse(&k.to_string()).unwrap(), k);
+        }
+    }
+
+    #[test]
+    fn params_are_order_canonical() {
+        let a = PolicyKey::parse("x?b=2&a=1").unwrap();
+        let b = PolicyKey::parse("x?a=1&b=2").unwrap();
+        assert_eq!(a, b);
+        assert_eq!(a.to_string(), "x?a=1&b=2");
+    }
+
+    #[test]
+    fn values_may_contain_nested_keys() {
+        let k = PolicyKey::parse("static?base=hfel?budget=100").unwrap();
+        assert_eq!(k.name, "static");
+        assert_eq!(k.get_str("base"), Some("hfel?budget=100"));
+        assert_eq!(k.to_string(), "static?base=hfel?budget=100");
+    }
+
+    #[test]
+    fn typed_getters() {
+        let k = PolicyKey::parse("hfel?budget=42").unwrap();
+        assert_eq!(k.get_usize("budget").unwrap(), Some(42));
+        assert_eq!(k.usize_or("budget", 300).unwrap(), 42);
+        assert_eq!(k.usize_or("missing", 300).unwrap(), 300);
+        let bad = PolicyKey::parse("hfel?budget=lots").unwrap();
+        assert!(bad.get_usize("budget").is_err());
+    }
+
+    #[test]
+    fn rejects_malformed_keys() {
+        for s in ["", "?x=1", "hfel?", "hfel?budget", "hfel?=3", "hfel?b=", "a b", "x?k=1&k=2"] {
+            assert!(PolicyKey::parse(s).is_err(), "accepted {s:?}");
+        }
+    }
+}

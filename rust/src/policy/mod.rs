@@ -1,0 +1,122 @@
+//! The pluggable policy layer: §IV scheduling and §V assignment behind one
+//! open, string-keyed API.
+//!
+//! The paper's contribution is swapping *policies* — IKC vs. VKC vs. FedAvg
+//! for scheduling, D³QN vs. HFEL-search vs. geographic/random for
+//! assignment — so the policy space must be open, not a closed enum matched
+//! at every dispatch site. This module provides:
+//!
+//! * [`SchedulePolicy`] / [`AssignPolicy`] — object-safe traits every
+//!   policy implements. Decisions read a per-round [`PolicyCtx`] (topology,
+//!   Algorithm-2 clusters, H, round index, [`RoundHistory`], RNG stream
+//!   seed), so a policy needs no bespoke constructor plumbing.
+//! * [`PolicyKey`] — the `name?param=value` key grammar TOML profiles,
+//!   presets and `--schedulers`/`--assigners` strings use to name policies
+//!   (`"hfel?budget=300"`, `"static?base=greedy"`).
+//! * [`PolicyRegistry`] — the global string-key → factory table. Adding a
+//!   policy is one `impl` + one registry entry in this module; every
+//!   driver (`hfl train`, `hfl sweep`, presets, TOML profiles) picks it up
+//!   without further changes. `hfl policies` lists the registry.
+//!
+//! The legacy [`crate::scheduling::Scheduler`] / [`crate::assignment::Assigner`]
+//! traits remain as implementation details: concrete algorithms keep their
+//! paper-faithful shapes and are adapted into policies by
+//! [`schedulers`]/[`assigners`].
+
+pub mod assigners;
+pub mod key;
+pub mod registry;
+pub mod schedulers;
+
+pub use key::PolicyKey;
+pub use registry::{
+    AssignEntry, AssignEnv, ClusterNeed, PolicyRegistry, SchedEntry, SchedEnv,
+};
+
+use crate::assignment::Assignment;
+use crate::system::Topology;
+
+/// Everything a policy may consult when making a per-round decision.
+///
+/// Built fresh each global iteration by the runner (sweep cell or
+/// [`crate::fl::HflTrainer::run_policies`]); borrows are immutable, so the
+/// same ctx serves the scheduler and the assigner of one round.
+pub struct PolicyCtx<'a> {
+    pub topo: &'a Topology,
+    /// Algorithm-2 clusters (oracle or trained); `None` when the driver
+    /// provides none — cluster-based policies must error, not panic.
+    pub clusters: Option<&'a [Vec<usize>]>,
+    /// Devices to schedule this iteration, H.
+    pub h: usize,
+    /// Current global iteration, 0-based.
+    pub round: usize,
+    /// Decisions of the rounds before this one.
+    pub history: &'a RoundHistory,
+    /// The cell's policy RNG stream seed — constant across rounds, so a
+    /// policy that seeds from it stays deterministic per (spec, cell).
+    pub seed: u64,
+}
+
+/// Past rounds' decisions, appended by the runner after each iteration.
+///
+/// Growth is O(iters × H) per cell and lives only for that cell's run —
+/// bounded by (worker threads × iterations) across a sweep. If a future
+/// policy only ever needs the last round, prefer
+/// [`RoundHistory::last_assignment`] over deep indexing so the runner can
+/// later cap retention without breaking it.
+#[derive(Clone, Debug, Default)]
+pub struct RoundHistory {
+    pub scheduled: Vec<Vec<usize>>,
+    pub assignments: Vec<Assignment>,
+}
+
+impl RoundHistory {
+    pub fn push(&mut self, scheduled: Vec<usize>, assignment: Assignment) {
+        self.scheduled.push(scheduled);
+        self.assignments.push(assignment);
+    }
+
+    pub fn rounds(&self) -> usize {
+        self.scheduled.len()
+    }
+
+    pub fn last_assignment(&self) -> Option<&Assignment> {
+        self.assignments.last()
+    }
+}
+
+/// A device scheduler (§IV): select the subset `H_i ⊆ N` for one round.
+pub trait SchedulePolicy {
+    fn schedule(&mut self, ctx: &PolicyCtx) -> anyhow::Result<Vec<usize>>;
+
+    /// Canonical policy key this instance was built from (the CSV label).
+    fn name(&self) -> String;
+}
+
+/// A device→edge assignment strategy (§V).
+pub trait AssignPolicy {
+    /// Assign each of `scheduled` to an edge; every scheduled device must
+    /// appear exactly once in the result.
+    fn assign(&mut self, ctx: &PolicyCtx, scheduled: &[usize]) -> anyhow::Result<Assignment>;
+
+    /// Canonical policy key this instance was built from (the CSV label).
+    fn name(&self) -> String;
+}
+
+/// Resolve a scheduler key that is known to be registered (presets,
+/// defaults, tests). Panics on unknown keys — use
+/// [`PolicyRegistry::sched_key`] for user input.
+pub fn sched(s: &str) -> PolicyKey {
+    PolicyRegistry::global()
+        .sched_key(s)
+        .unwrap_or_else(|e| panic!("built-in scheduler key {s:?}: {e}"))
+}
+
+/// Resolve an assigner key that is known to be registered (presets,
+/// defaults, tests). Panics on unknown keys — use
+/// [`PolicyRegistry::assign_key`] for user input.
+pub fn assign(s: &str) -> PolicyKey {
+    PolicyRegistry::global()
+        .assign_key(s)
+        .unwrap_or_else(|e| panic!("built-in assigner key {s:?}: {e}"))
+}

@@ -1,0 +1,565 @@
+//! The global policy registry: string keys with inline parameters mapped
+//! to policy factories.
+//!
+//! Key resolution (`sched_key` / `assign_key`) canonicalizes user input:
+//! aliases are rewritten to their primary key (`"rr"` → `"round-robin"`,
+//! `"hfel-100"` → `"hfel?budget=100"`), declared parameter defaults are
+//! injected (`"hfel"` → `"hfel?budget=300"`), and unknown names or
+//! parameters fail loudly with the registered vocabulary in the message.
+//! The canonical [`PolicyKey`] is what scenario specs store and what CSVs
+//! print, so every spelling of a policy groups identically.
+//!
+//! ## Adding a policy (one file)
+//!
+//! 1. implement [`SchedulePolicy`](super::SchedulePolicy) or
+//!    [`AssignPolicy`] (in `policy/schedulers.rs` / `policy/assigners.rs`
+//!    or your own module);
+//! 2. write a factory `fn(&PolicyKey, &SchedEnv) -> Result<Box<dyn …>>`;
+//! 3. append a [`SchedEntry`]/[`AssignEntry`] in
+//!    [`PolicyRegistry::builtin`].
+//!
+//! Every driver — `hfl train`, `hfl sweep` grids, presets, TOML profiles,
+//! `hfl policies` — picks the new key up with no further changes.
+
+use std::path::PathBuf;
+use std::sync::OnceLock;
+
+use super::assigners::{D3qnPolicy, FromAssigner, GreedyCost, StickyAssign};
+use super::key::PolicyKey;
+use super::schedulers::{ChannelTopH, FedAvgPolicy, IkcPolicy, VkcPolicy};
+use super::{AssignPolicy, SchedulePolicy};
+use crate::assignment::drl::DrlAssigner;
+use crate::assignment::geo::Geographic;
+use crate::assignment::hfel::Hfel;
+use crate::assignment::random::{RandomAssign, RoundRobin};
+use crate::runtime::Backend;
+use crate::scheduling::AuxModel;
+
+/// What a scheduler expects in `PolicyCtx::clusters` — drivers consult
+/// this to decide whether (and with which auxiliary model) to run
+/// Algorithm 2 before the loop starts.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ClusterNeed {
+    None,
+    Aux(AuxModel),
+}
+
+/// Construction-time environment for schedulers.
+pub struct SchedEnv {
+    /// Seed of the policy's private RNG stream (per sweep cell).
+    pub seed: u64,
+}
+
+/// Construction-time environment for assigners.
+pub struct AssignEnv<'e> {
+    /// Model-execution backend; `None` in backend-less cost sweeps.
+    pub backend: Option<&'e dyn Backend>,
+    /// Fallback D³QN checkpoint when the key carries no `ckpt` param.
+    pub default_ckpt: Option<PathBuf>,
+    /// Edge count of the deployment the assigner will see, checked by
+    /// backend-bound factories at construction time (here rather than at
+    /// the call site so composite keys like `static?base=d3qn` are
+    /// guarded too). `None` skips the early check; the D³QN assigner
+    /// still re-validates per assignment.
+    pub expect_edges: Option<usize>,
+    /// Seed of the policy's private RNG stream (per sweep cell).
+    pub seed: u64,
+}
+
+pub type SchedFactory = fn(&PolicyKey, &SchedEnv) -> anyhow::Result<Box<dyn SchedulePolicy>>;
+pub type AssignFactory =
+    for<'e> fn(&PolicyKey, &AssignEnv<'e>) -> anyhow::Result<Box<dyn AssignPolicy + 'e>>;
+
+/// A declared key parameter (`name?key=…`).
+pub struct ParamSpec {
+    pub key: &'static str,
+    pub help: &'static str,
+}
+
+/// One registered scheduling policy.
+pub struct SchedEntry {
+    pub name: &'static str,
+    /// `(spelling, canonical key)` back-compat aliases.
+    pub aliases: &'static [(&'static str, &'static str)],
+    pub summary: &'static str,
+    pub params: &'static [ParamSpec],
+    /// Defaults injected into the canonical key at resolution time.
+    pub defaults: &'static [(&'static str, &'static str)],
+    pub clusters: ClusterNeed,
+    pub factory: SchedFactory,
+}
+
+/// One registered assignment policy.
+pub struct AssignEntry {
+    pub name: &'static str,
+    pub aliases: &'static [(&'static str, &'static str)],
+    pub summary: &'static str,
+    pub params: &'static [ParamSpec],
+    pub defaults: &'static [(&'static str, &'static str)],
+    /// Whether instantiation requires `AssignEnv::backend`.
+    pub needs_backend: bool,
+    pub factory: AssignFactory,
+}
+
+pub struct PolicyRegistry {
+    scheds: Vec<SchedEntry>,
+    assigns: Vec<AssignEntry>,
+}
+
+/// Shared canonicalization: resolve `raw` against (names, aliases), merge
+/// alias-implied params and defaults, validate the param vocabulary.
+fn canonicalize(
+    raw: PolicyKey,
+    kind: &str,
+    name: &'static str,
+    alias_target: Option<&'static str>,
+    params: &[ParamSpec],
+    defaults: &[(&'static str, &'static str)],
+) -> anyhow::Result<PolicyKey> {
+    let mut key = match alias_target {
+        None => PolicyKey { name: name.to_string(), params: raw.params },
+        Some(target) => {
+            let mut base = PolicyKey::parse(target)
+                .map_err(|e| anyhow::anyhow!("registry alias target {target:?}: {e}"))?;
+            for (k, v) in raw.params {
+                anyhow::ensure!(
+                    base.params.insert(k.clone(), v).is_none(),
+                    "{kind} {}: param {k:?} is already implied by the alias {:?}",
+                    raw.name,
+                    raw.name
+                );
+            }
+            base
+        }
+    };
+    for (k, _) in &key.params {
+        anyhow::ensure!(
+            params.iter().any(|p| p.key == k),
+            "{kind} {name}: unknown param {k:?} (allowed: {})",
+            if params.is_empty() {
+                "none".to_string()
+            } else {
+                params.iter().map(|p| p.key).collect::<Vec<_>>().join(", ")
+            }
+        );
+    }
+    for &(k, v) in defaults {
+        key.params.entry(k.to_string()).or_insert_with(|| v.to_string());
+    }
+    Ok(key)
+}
+
+impl PolicyRegistry {
+    /// The process-wide registry of built-in policies.
+    pub fn global() -> &'static PolicyRegistry {
+        static REG: OnceLock<PolicyRegistry> = OnceLock::new();
+        REG.get_or_init(PolicyRegistry::builtin)
+    }
+
+    /// Resolve a scheduler key string to its canonical [`PolicyKey`].
+    pub fn sched_key(&self, s: &str) -> anyhow::Result<PolicyKey> {
+        let raw = PolicyKey::parse(s)?;
+        for e in &self.scheds {
+            if e.name == raw.name {
+                return canonicalize(raw, "scheduler", e.name, None, e.params, e.defaults);
+            }
+            for &(spelling, target) in e.aliases {
+                if spelling == raw.name {
+                    return canonicalize(raw, "scheduler", e.name, Some(target), e.params, e.defaults);
+                }
+            }
+        }
+        anyhow::bail!(
+            "unknown scheduler {:?} (registered: {}; see `hfl policies`)",
+            raw.name,
+            self.sched_vocabulary().join(", ")
+        )
+    }
+
+    /// Resolve an assigner key string to its canonical [`PolicyKey`].
+    pub fn assign_key(&self, s: &str) -> anyhow::Result<PolicyKey> {
+        let raw = PolicyKey::parse(s)?;
+        for e in &self.assigns {
+            if e.name == raw.name {
+                return canonicalize(raw, "assigner", e.name, None, e.params, e.defaults);
+            }
+            for &(spelling, target) in e.aliases {
+                if spelling == raw.name {
+                    return canonicalize(raw, "assigner", e.name, Some(target), e.params, e.defaults);
+                }
+            }
+        }
+        anyhow::bail!(
+            "unknown assigner {:?} (registered: {}; see `hfl policies`)",
+            raw.name,
+            self.assign_vocabulary().join(", ")
+        )
+    }
+
+    pub fn sched_entry(&self, name: &str) -> Option<&SchedEntry> {
+        self.scheds.iter().find(|e| e.name == name)
+    }
+
+    pub fn assign_entry(&self, name: &str) -> Option<&AssignEntry> {
+        self.assigns.iter().find(|e| e.name == name)
+    }
+
+    /// Instantiate a scheduler from a canonical key.
+    pub fn scheduler(
+        &self,
+        key: &PolicyKey,
+        env: &SchedEnv,
+    ) -> anyhow::Result<Box<dyn SchedulePolicy>> {
+        let e = self
+            .sched_entry(&key.name)
+            .ok_or_else(|| anyhow::anyhow!("unregistered scheduler policy {key} (parse it with sched_key first)"))?;
+        (e.factory)(key, env)
+    }
+
+    /// Instantiate an assigner from a canonical key.
+    pub fn assigner<'e>(
+        &self,
+        key: &PolicyKey,
+        env: &AssignEnv<'e>,
+    ) -> anyhow::Result<Box<dyn AssignPolicy + 'e>> {
+        let e = self
+            .assign_entry(&key.name)
+            .ok_or_else(|| anyhow::anyhow!("unregistered assigner policy {key} (parse it with assign_key first)"))?;
+        (e.factory)(key, env)
+    }
+
+    /// Primary names of every registered scheduler, in registration order.
+    pub fn sched_names(&self) -> Vec<&'static str> {
+        self.scheds.iter().map(|e| e.name).collect()
+    }
+
+    /// Primary names of every registered assigner, in registration order.
+    pub fn assign_names(&self) -> Vec<&'static str> {
+        self.assigns.iter().map(|e| e.name).collect()
+    }
+
+    fn sched_vocabulary(&self) -> Vec<&'static str> {
+        let mut v = Vec::new();
+        for e in &self.scheds {
+            v.push(e.name);
+            v.extend(e.aliases.iter().map(|&(a, _)| a));
+        }
+        v
+    }
+
+    fn assign_vocabulary(&self) -> Vec<&'static str> {
+        let mut v = Vec::new();
+        for e in &self.assigns {
+            v.push(e.name);
+            v.extend(e.aliases.iter().map(|&(a, _)| a));
+        }
+        v
+    }
+
+    /// The `hfl policies` listing — also pinned by the golden test
+    /// `rust/tests/golden/policies.txt` and diffed in CI.
+    pub fn listing(&self) -> String {
+        fn line(
+            name: &str,
+            summary: &str,
+            aliases: &[(&str, &str)],
+            params: &[ParamSpec],
+        ) -> String {
+            let mut l = format!("  {name:<12} {summary}");
+            if !aliases.is_empty() {
+                let names: Vec<&str> = aliases.iter().map(|&(a, _)| a).collect();
+                l.push_str(&format!(" [aliases: {}]", names.join(", ")));
+            }
+            if !params.is_empty() {
+                let names: Vec<&str> = params.iter().map(|p| p.key).collect();
+                l.push_str(&format!(" [params: {}]", names.join(", ")));
+            }
+            l.push('\n');
+            l
+        }
+        let mut out = String::from("schedulers:\n");
+        for e in &self.scheds {
+            out.push_str(&line(e.name, e.summary, e.aliases, e.params));
+        }
+        out.push_str("\nassigners:\n");
+        for e in &self.assigns {
+            out.push_str(&line(e.name, e.summary, e.aliases, e.params));
+        }
+        out
+    }
+
+    /// The built-in policy set (the paper's §IV/§V strategies plus the
+    /// channel-aware / greedy / static extensions).
+    pub fn builtin() -> PolicyRegistry {
+        PolicyRegistry {
+            scheds: vec![
+                SchedEntry {
+                    name: "fedavg",
+                    aliases: &[],
+                    summary: "uniform random H devices per iteration (FedAvg [3])",
+                    params: &[],
+                    defaults: &[],
+                    clusters: ClusterNeed::None,
+                    factory: sched_fedavg,
+                },
+                SchedEntry {
+                    name: "vkc",
+                    aliases: &[],
+                    summary: "vanilla K-Center over Algorithm-2 clusters (Algorithm 3)",
+                    params: &[],
+                    defaults: &[],
+                    clusters: ClusterNeed::Aux(AuxModel::Full),
+                    factory: sched_vkc,
+                },
+                SchedEntry {
+                    name: "ikc",
+                    aliases: &[],
+                    summary: "improved K-Center with per-cluster history (Algorithm 4)",
+                    params: &[],
+                    defaults: &[],
+                    clusters: ClusterNeed::Aux(AuxModel::Mini),
+                    factory: sched_ikc,
+                },
+                SchedEntry {
+                    name: "channel",
+                    aliases: &[],
+                    summary: "top-H devices by best-edge uplink rate (eqs. 4-6)",
+                    params: &[ParamSpec {
+                        key: "share_hz",
+                        help: "fixed per-device bandwidth share for scoring (default: edge bandwidth / ceil(H/M))",
+                    }],
+                    defaults: &[],
+                    clusters: ClusterNeed::None,
+                    factory: sched_channel,
+                },
+            ],
+            assigns: vec![
+                AssignEntry {
+                    name: "d3qn",
+                    aliases: &[("drl", "d3qn")],
+                    summary: "one-shot D3QN inference, the paper's assigner (Fig. 6 latency win)",
+                    params: &[ParamSpec {
+                        key: "ckpt",
+                        help: "path to a dqn_theta.bin checkpoint (default: the sweep/config fallback, else a fresh untrained agent)",
+                    }],
+                    defaults: &[],
+                    needs_backend: true,
+                    factory: assign_d3qn,
+                },
+                AssignEntry {
+                    name: "hfel",
+                    aliases: &[("hfel-100", "hfel?budget=100"), ("hfel-300", "hfel?budget=300")],
+                    summary: "HFEL search [15]: 100 transfers + `budget` exchanging adjustments",
+                    params: &[ParamSpec {
+                        key: "budget",
+                        help: "exchanging-iteration budget k of HFEL-k (default 300)",
+                    }],
+                    defaults: &[("budget", "300")],
+                    needs_backend: false,
+                    factory: assign_hfel,
+                },
+                AssignEntry {
+                    name: "geographic",
+                    aliases: &[("geo", "geographic")],
+                    summary: "nearest edge server for every device",
+                    params: &[],
+                    defaults: &[],
+                    needs_backend: false,
+                    factory: assign_geo,
+                },
+                AssignEntry {
+                    name: "round-robin",
+                    aliases: &[("rr", "round-robin")],
+                    summary: "deterministic size-balanced round-robin",
+                    params: &[],
+                    defaults: &[],
+                    needs_backend: false,
+                    factory: assign_rr,
+                },
+                AssignEntry {
+                    name: "random",
+                    aliases: &[],
+                    summary: "uniform random edge per device",
+                    params: &[],
+                    defaults: &[],
+                    needs_backend: false,
+                    factory: assign_random,
+                },
+                AssignEntry {
+                    name: "greedy",
+                    aliases: &[],
+                    summary: "cost-aware greedy: argmin marginal objective-(17) edge per device",
+                    params: &[],
+                    defaults: &[],
+                    needs_backend: false,
+                    factory: assign_greedy,
+                },
+                AssignEntry {
+                    name: "static",
+                    aliases: &[],
+                    summary: "freeze the first assignment of `base`; later rounds reuse it",
+                    params: &[ParamSpec {
+                        key: "base",
+                        help: "assigner key computing the frozen round-0 assignment (default geographic)",
+                    }],
+                    defaults: &[("base", "geographic")],
+                    needs_backend: false,
+                    factory: assign_static,
+                },
+            ],
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Factories.
+// ---------------------------------------------------------------------------
+
+fn sched_fedavg(_key: &PolicyKey, env: &SchedEnv) -> anyhow::Result<Box<dyn SchedulePolicy>> {
+    Ok(Box::new(FedAvgPolicy::new(env.seed)))
+}
+
+fn sched_vkc(_key: &PolicyKey, env: &SchedEnv) -> anyhow::Result<Box<dyn SchedulePolicy>> {
+    Ok(Box::new(VkcPolicy::new(env.seed)))
+}
+
+fn sched_ikc(_key: &PolicyKey, env: &SchedEnv) -> anyhow::Result<Box<dyn SchedulePolicy>> {
+    Ok(Box::new(IkcPolicy::new(env.seed)))
+}
+
+fn sched_channel(key: &PolicyKey, _env: &SchedEnv) -> anyhow::Result<Box<dyn SchedulePolicy>> {
+    let share = key.get_f64("share_hz")?;
+    if let Some(s) = share {
+        anyhow::ensure!(s > 0.0, "{key}: share_hz must be positive");
+    }
+    Ok(Box::new(ChannelTopH::new(share, key.clone())))
+}
+
+fn assign_d3qn<'e>(
+    key: &PolicyKey,
+    env: &AssignEnv<'e>,
+) -> anyhow::Result<Box<dyn AssignPolicy + 'e>> {
+    let b = env.backend.ok_or_else(|| {
+        anyhow::anyhow!("the d3qn assigner needs a model backend (cost sweeps: pass one, or drop d3qn)")
+    })?;
+    if let Some(m) = env.expect_edges {
+        anyhow::ensure!(
+            b.manifest().consts.n_edges == m,
+            "backend D³QN expects {} edges, deployment has {m}",
+            b.manifest().consts.n_edges
+        );
+    }
+    let path = key.get_str("ckpt").map(PathBuf::from).or_else(|| env.default_ckpt.clone());
+    let inner = match path {
+        Some(p) => match DrlAssigner::from_checkpoint(b, &p) {
+            Ok(a) => a,
+            Err(e) => {
+                log::warn!(
+                    "no DRL checkpoint at {} ({e}); using untrained agent — \
+                     run `hfl drl-train` first for paper-faithful results",
+                    p.display()
+                );
+                DrlAssigner::fresh(b, env.seed)?
+            }
+        },
+        None => DrlAssigner::fresh(b, env.seed)?,
+    };
+    Ok(Box::new(D3qnPolicy::new(inner, key.to_string())))
+}
+
+fn assign_hfel<'e>(
+    key: &PolicyKey,
+    env: &AssignEnv<'e>,
+) -> anyhow::Result<Box<dyn AssignPolicy + 'e>> {
+    let budget = key.usize_or("budget", 300)?;
+    Ok(Box::new(FromAssigner::new(
+        Hfel::new(budget, env.seed),
+        format!("hfel?budget={budget}"),
+    )))
+}
+
+fn assign_geo<'e>(
+    _key: &PolicyKey,
+    _env: &AssignEnv<'e>,
+) -> anyhow::Result<Box<dyn AssignPolicy + 'e>> {
+    Ok(Box::new(FromAssigner::new(Geographic, "geographic")))
+}
+
+fn assign_rr<'e>(
+    _key: &PolicyKey,
+    _env: &AssignEnv<'e>,
+) -> anyhow::Result<Box<dyn AssignPolicy + 'e>> {
+    Ok(Box::new(FromAssigner::new(RoundRobin, "round-robin")))
+}
+
+fn assign_random<'e>(
+    _key: &PolicyKey,
+    env: &AssignEnv<'e>,
+) -> anyhow::Result<Box<dyn AssignPolicy + 'e>> {
+    Ok(Box::new(FromAssigner::new(RandomAssign::new(env.seed), "random")))
+}
+
+fn assign_greedy<'e>(
+    _key: &PolicyKey,
+    _env: &AssignEnv<'e>,
+) -> anyhow::Result<Box<dyn AssignPolicy + 'e>> {
+    Ok(Box::new(GreedyCost::new()))
+}
+
+fn assign_static<'e>(
+    key: &PolicyKey,
+    env: &AssignEnv<'e>,
+) -> anyhow::Result<Box<dyn AssignPolicy + 'e>> {
+    let base = key.get_str("base").unwrap_or("geographic");
+    let base_key = PolicyRegistry::global().assign_key(base)?;
+    anyhow::ensure!(
+        base_key.name != "static",
+        "{key}: the static assigner cannot nest itself"
+    );
+    let inner = PolicyRegistry::global().assigner(&base_key, env)?;
+    Ok(Box::new(StickyAssign::new(inner, key.to_string())))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aliases_resolve_to_canonical_keys() {
+        let r = PolicyRegistry::global();
+        assert_eq!(r.assign_key("rr").unwrap().to_string(), "round-robin");
+        assert_eq!(r.assign_key("drl").unwrap().to_string(), "d3qn");
+        assert_eq!(r.assign_key("geo").unwrap().to_string(), "geographic");
+        assert_eq!(r.assign_key("hfel-100").unwrap().to_string(), "hfel?budget=100");
+        assert_eq!(r.assign_key("hfel-300").unwrap(), r.assign_key("hfel").unwrap());
+        assert_eq!(r.assign_key("hfel").unwrap().to_string(), "hfel?budget=300");
+    }
+
+    #[test]
+    fn unknown_names_and_params_fail_loudly() {
+        let r = PolicyRegistry::global();
+        let e = r.sched_key("quantum").unwrap_err().to_string();
+        assert!(e.contains("ikc"), "vocabulary missing from error: {e}");
+        assert!(r.assign_key("hfel?depth=2").is_err());
+        assert!(r.sched_key("fedavg?h=3").is_err());
+        assert!(r.assign_key("hfel-100?budget=5").is_err(), "alias param conflict accepted");
+    }
+
+    #[test]
+    fn static_refuses_to_nest_itself() {
+        let r = PolicyRegistry::global();
+        let key = r.assign_key("static?base=static").unwrap();
+        let env = AssignEnv { backend: None, default_ckpt: None, expect_edges: None, seed: 0 };
+        assert!(r.assigner(&key, &env).is_err());
+    }
+
+    #[test]
+    fn defaults_are_injected_at_resolution() {
+        let r = PolicyRegistry::global();
+        assert_eq!(r.assign_key("static").unwrap().to_string(), "static?base=geographic");
+        assert_eq!(
+            r.assign_key("static?base=greedy").unwrap().to_string(),
+            "static?base=greedy"
+        );
+    }
+}

@@ -1,0 +1,244 @@
+//! Scheduling policies: adapters over the paper's concrete schedulers
+//! (FedAvg / VKC / IKC, `crate::scheduling`) plus the channel-aware
+//! top-H scheduler shipped through the open policy API.
+//!
+//! The legacy [`Scheduler`] implementations take clusters/N/H at
+//! construction; policies receive them per round via [`PolicyCtx`], so the
+//! adapters initialize lazily on the first `schedule` call (the ctx is
+//! identical every round of a cell, per the sweep determinism contract).
+
+use super::{PolicyCtx, PolicyKey, SchedulePolicy};
+use crate::scheduling::{FedAvg, Ikc, Scheduler, Vkc};
+use crate::system::Topology;
+
+fn check_h(ctx: &PolicyCtx, who: &str) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        ctx.h >= 1 && ctx.h <= ctx.topo.devices.len(),
+        "{who}: H={} out of range for {} devices",
+        ctx.h,
+        ctx.topo.devices.len()
+    );
+    Ok(())
+}
+
+fn ctx_clusters(ctx: &PolicyCtx, who: &str) -> anyhow::Result<Vec<Vec<usize>>> {
+    let cl = ctx
+        .clusters
+        .ok_or_else(|| anyhow::anyhow!("{who} needs Algorithm-2 clusters in the PolicyCtx"))?;
+    anyhow::ensure!(!cl.is_empty(), "{who}: empty cluster set");
+    anyhow::ensure!(
+        ctx.h % cl.len() == 0,
+        "{who}: H={} must be a multiple of K={} clusters",
+        ctx.h,
+        cl.len()
+    );
+    Ok(cl.to_vec())
+}
+
+/// FedAvg (uniform random H devices) through the policy API.
+pub struct FedAvgPolicy {
+    seed: u64,
+    inner: Option<FedAvg>,
+}
+
+impl FedAvgPolicy {
+    pub fn new(seed: u64) -> Self {
+        FedAvgPolicy { seed, inner: None }
+    }
+}
+
+impl SchedulePolicy for FedAvgPolicy {
+    fn schedule(&mut self, ctx: &PolicyCtx) -> anyhow::Result<Vec<usize>> {
+        if self.inner.is_none() {
+            check_h(ctx, "fedavg")?;
+            self.inner = Some(FedAvg::new(ctx.topo.devices.len(), ctx.h, self.seed));
+        }
+        Ok(self.inner.as_mut().unwrap().schedule())
+    }
+
+    fn name(&self) -> String {
+        "fedavg".into()
+    }
+}
+
+/// Vanilla K-Center (Algorithm 3) through the policy API.
+pub struct VkcPolicy {
+    seed: u64,
+    inner: Option<Vkc>,
+}
+
+impl VkcPolicy {
+    pub fn new(seed: u64) -> Self {
+        VkcPolicy { seed, inner: None }
+    }
+}
+
+impl SchedulePolicy for VkcPolicy {
+    fn schedule(&mut self, ctx: &PolicyCtx) -> anyhow::Result<Vec<usize>> {
+        if self.inner.is_none() {
+            check_h(ctx, "vkc")?;
+            let clusters = ctx_clusters(ctx, "vkc")?;
+            self.inner = Some(Vkc::new(clusters, ctx.topo.devices.len(), ctx.h, self.seed));
+        }
+        Ok(self.inner.as_mut().unwrap().schedule())
+    }
+
+    fn name(&self) -> String {
+        "vkc".into()
+    }
+}
+
+/// Improved K-Center (Algorithm 4) through the policy API.
+pub struct IkcPolicy {
+    seed: u64,
+    inner: Option<Ikc>,
+}
+
+impl IkcPolicy {
+    pub fn new(seed: u64) -> Self {
+        IkcPolicy { seed, inner: None }
+    }
+}
+
+impl SchedulePolicy for IkcPolicy {
+    fn schedule(&mut self, ctx: &PolicyCtx) -> anyhow::Result<Vec<usize>> {
+        if self.inner.is_none() {
+            check_h(ctx, "ikc")?;
+            let clusters = ctx_clusters(ctx, "ikc")?;
+            self.inner = Some(Ikc::new(clusters, ctx.topo.devices.len(), ctx.h, self.seed));
+        }
+        Ok(self.inner.as_mut().unwrap().schedule())
+    }
+
+    fn name(&self) -> String {
+        "ikc".into()
+    }
+}
+
+/// Channel-aware scheduler: the H devices with the best achievable FDMA
+/// uplink rate (eq. 6) to their best edge, under an equal per-edge
+/// bandwidth share — good channels upload the eq. 4 payload fastest, which
+/// bounds the straggler term of the edge delay (eq. 9).
+///
+/// The per-device score assumes balanced groups: each edge splits its
+/// bandwidth across `ceil(H / M)` devices (override the share with
+/// `channel?share_hz=...`). Fully deterministic — ties break on device id —
+/// so every round schedules the same top-H set for a fixed topology.
+pub struct ChannelTopH {
+    share_hz: Option<f64>,
+    key: PolicyKey,
+    /// Cached (h, selection): the ranking is a pure function of the
+    /// topology, which is fixed for a cell's lifetime.
+    cache: Option<(usize, Vec<usize>)>,
+}
+
+impl ChannelTopH {
+    pub fn new(share_hz: Option<f64>, key: PolicyKey) -> Self {
+        ChannelTopH { share_hz, key, cache: None }
+    }
+
+    fn rank(&self, topo: &Topology, h: usize) -> Vec<usize> {
+        let m_count = topo.edges.len();
+        let per_edge = ((h + m_count - 1) / m_count).max(1);
+        let mut scored: Vec<(f64, usize)> = (0..topo.devices.len())
+            .map(|n| {
+                let d = &topo.devices[n];
+                let best = (0..m_count)
+                    .map(|m| {
+                        let share = self
+                            .share_hz
+                            .unwrap_or(topo.edges[m].bandwidth_hz / per_edge as f64);
+                        topo.channel.rate(share, d.gain_to_edge[m], d.tx_power_w)
+                    })
+                    .fold(0.0f64, f64::max);
+                (best, n)
+            })
+            .collect();
+        scored.sort_by(|a, b| {
+            b.0.partial_cmp(&a.0)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.1.cmp(&b.1))
+        });
+        let mut sel: Vec<usize> = scored.iter().take(h).map(|&(_, n)| n).collect();
+        sel.sort_unstable();
+        sel
+    }
+}
+
+impl SchedulePolicy for ChannelTopH {
+    fn schedule(&mut self, ctx: &PolicyCtx) -> anyhow::Result<Vec<usize>> {
+        check_h(ctx, "channel")?;
+        if self.cache.as_ref().map(|(h, _)| *h) != Some(ctx.h) {
+            self.cache = Some((ctx.h, self.rank(ctx.topo, ctx.h)));
+        }
+        Ok(self.cache.as_ref().unwrap().1.clone())
+    }
+
+    fn name(&self) -> String {
+        self.key.to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::policy::RoundHistory;
+    use crate::system::SystemParams;
+    use crate::util::Rng;
+
+    fn topo(seed: u64) -> Topology {
+        Topology::generate(&SystemParams::default(), &mut Rng::new(seed))
+    }
+
+    fn ctx<'a>(topo: &'a Topology, history: &'a RoundHistory, h: usize) -> PolicyCtx<'a> {
+        PolicyCtx { topo, clusters: None, h, round: 0, history, seed: 1 }
+    }
+
+    #[test]
+    fn channel_selects_h_distinct_and_is_deterministic() {
+        let t = topo(3);
+        let hist = RoundHistory::default();
+        let mut s = ChannelTopH::new(None, PolicyKey::bare("channel"));
+        let a = s.schedule(&ctx(&t, &hist, 30)).unwrap();
+        let b = s.schedule(&ctx(&t, &hist, 30)).unwrap();
+        assert_eq!(a.len(), 30);
+        let mut d = a.clone();
+        d.dedup();
+        assert_eq!(d.len(), 30, "duplicate devices scheduled");
+        assert_eq!(a, b, "channel scheduling must be deterministic");
+    }
+
+    #[test]
+    fn channel_prefers_higher_rate_devices() {
+        // every selected device's best-edge rate >= every rejected one's
+        let t = topo(4);
+        let hist = RoundHistory::default();
+        let mut s = ChannelTopH::new(None, PolicyKey::bare("channel"));
+        let sel = s.schedule(&ctx(&t, &hist, 20)).unwrap();
+        let rate = |n: usize| {
+            let d = &t.devices[n];
+            (0..t.edges.len())
+                .map(|m| {
+                    t.channel
+                        .rate(t.edges[m].bandwidth_hz / 4.0, d.gain_to_edge[m], d.tx_power_w)
+                })
+                .fold(0.0f64, f64::max)
+        };
+        let worst_in = sel.iter().map(|&n| rate(n)).fold(f64::INFINITY, f64::min);
+        for n in 0..t.devices.len() {
+            if !sel.contains(&n) {
+                assert!(rate(n) <= worst_in + 1e-9, "device {n} outranks a selected one");
+            }
+        }
+    }
+
+    #[test]
+    fn clustered_policies_error_without_clusters() {
+        let t = topo(5);
+        let hist = RoundHistory::default();
+        let c = ctx(&t, &hist, 20);
+        assert!(IkcPolicy::new(0).schedule(&c).is_err());
+        assert!(VkcPolicy::new(0).schedule(&c).is_err());
+        assert!(FedAvgPolicy::new(0).schedule(&c).is_ok());
+    }
+}

@@ -1,8 +1,10 @@
 //! Built-in scenario specs: the paper figures re-expressed as declarative
-//! grids, plus the default `hfl sweep` cost grid.
+//! grids, plus the default `hfl sweep` cost grid. Grid axes are policy
+//! registry keys (`crate::policy`), so the presets compose with any
+//! registered policy via `--schedulers`/`--assigners` overrides.
 
 use crate::config::Config;
-use crate::experiments::{AssignKind, SchedKind};
+use crate::policy::{assign, sched};
 
 use super::spec::{ScenarioSpec, SweepMode};
 
@@ -13,8 +15,8 @@ pub fn fig_sched(cfg: &Config, dataset: &str) -> ScenarioSpec {
         name: format!("fig_sched_{dataset}"),
         mode: SweepMode::Train,
         dataset: dataset.to_string(),
-        schedulers: vec![SchedKind::Ikc, SchedKind::Vkc, SchedKind::FedAvg],
-        assigners: vec![AssignKind::RoundRobin],
+        schedulers: vec![sched("ikc"), sched("vkc"), sched("fedavg")],
+        assigners: vec![assign("round-robin")],
         h_values: cfg.h_values.clone(),
         seeds: cfg.seeds,
         iters: cfg.max_iters,
@@ -39,12 +41,12 @@ pub fn fig6(cfg: &Config, h: usize) -> ScenarioSpec {
     ScenarioSpec {
         name: "fig6_assignment".into(),
         mode: SweepMode::Cost,
-        schedulers: vec![SchedKind::FedAvg], // H = N ⇒ schedules everyone
+        schedulers: vec![sched("fedavg")], // H = N ⇒ schedules everyone
         assigners: vec![
-            AssignKind::Drl(None),
-            AssignKind::Hfel(100),
-            AssignKind::Hfel(300),
-            AssignKind::Geo,
+            assign("d3qn"),
+            assign("hfel?budget=100"),
+            assign("hfel?budget=300"),
+            assign("geographic"),
         ],
         h_values: vec![h],
         seeds: cfg.assign_eval_iters, // one random deployment per seed
@@ -63,8 +65,8 @@ pub fn fig7(cfg: &Config, dataset: &str) -> ScenarioSpec {
         name: format!("fig7_{dataset}"),
         mode: SweepMode::Train,
         dataset: dataset.to_string(),
-        schedulers: vec![SchedKind::Ikc],
-        assigners: vec![AssignKind::Drl(None)],
+        schedulers: vec![sched("ikc")],
+        assigners: vec![assign("d3qn")],
         h_values: cfg.h_values.clone(),
         seeds: cfg.seeds,
         iters: cfg.max_iters,
@@ -80,18 +82,22 @@ pub fn fig7(cfg: &Config, dataset: &str) -> ScenarioSpec {
     }
 }
 
-/// The default `hfl sweep` grid: a fig7-style scheduler × assigner cost
-/// sweep across every H — the many-scenario workload the ROADMAP targets.
+/// The default `hfl sweep` grid: scheduler × assigner cost sweep across
+/// every H — the many-scenario workload the ROADMAP targets. Includes the
+/// registry extensions (channel scheduling, greedy and static assignment)
+/// alongside the paper's strategies.
 pub fn grid(cfg: &Config) -> ScenarioSpec {
     ScenarioSpec {
         name: "grid".into(),
         mode: SweepMode::Cost,
-        schedulers: vec![SchedKind::Ikc, SchedKind::Vkc, SchedKind::FedAvg],
+        schedulers: vec![sched("ikc"), sched("vkc"), sched("fedavg"), sched("channel")],
         assigners: vec![
-            AssignKind::Drl(None),
-            AssignKind::Geo,
-            AssignKind::RoundRobin,
-            AssignKind::Random,
+            assign("d3qn"),
+            assign("geographic"),
+            assign("round-robin"),
+            assign("random"),
+            assign("greedy"),
+            assign("static?base=greedy"),
         ],
         h_values: cfg.h_values.clone(),
         seeds: cfg.seeds,
@@ -138,5 +144,16 @@ mod tests {
         assert_eq!(s.h_values, vec![50]);
         assert_eq!(s.iters, 1);
         assert_eq!(s.seeds, cfg.assign_eval_iters);
+    }
+
+    #[test]
+    fn grid_includes_registry_extensions() {
+        let cfg = Config::default();
+        let s = grid(&cfg);
+        let scheds: Vec<String> = s.schedulers.iter().map(|k| k.to_string()).collect();
+        let assigns: Vec<String> = s.assigners.iter().map(|k| k.to_string()).collect();
+        assert!(scheds.contains(&"channel".to_string()));
+        assert!(assigns.contains(&"greedy".to_string()));
+        assert!(assigns.contains(&"static?base=greedy".to_string()));
     }
 }

@@ -1,15 +1,20 @@
 //! Declarative experiment scenarios.
 //!
 //! A [`ScenarioSpec`] names a grid of (scheduler × assigner × H × seed)
-//! cells plus the deployment parameters they share. Specs are built in
-//! code (`scenario::presets`) or loaded from TOML profiles via the same
-//! minimal parser the [`crate::config`] layer uses:
+//! cells plus the deployment parameters they share. The grid axes are
+//! [`crate::policy::PolicyKey`]s resolved through the global
+//! [`crate::policy::PolicyRegistry`], so a TOML profile can name *any*
+//! registered policy — including parameterized ones — without a recompile
+//! (`hfl policies` lists the vocabulary; see DESIGN.md §7 for the key
+//! grammar). Specs are built in code (`scenario::presets`) or loaded from
+//! TOML profiles via the same minimal parser the [`crate::config`] layer
+//! uses:
 //!
 //! ```toml
-//! name = "fig7_cost"
+//! name = "policy_ablation"
 //! mode = "cost"                 # cost | train
-//! schedulers = ["ikc", "fedavg"]
-//! assigners = ["d3qn", "geo", "rr"]
+//! schedulers = ["ikc", "channel", "fedavg"]
+//! assigners = ["d3qn", "hfel?budget=300", "greedy", "static?base=greedy"]
 //! h_values = [10, 30, 50, 100]
 //! seeds = 3
 //! iters = 20
@@ -17,12 +22,16 @@
 //! n_devices = 100
 //! lambda = 1.0
 //! ```
+//!
+//! Old enum spellings (`"drl"`, `"hfel-100"`, `"rr"`, `"geo"`) remain
+//! valid as registry aliases and canonicalize to the same keys, so
+//! pre-registry profiles keep working unchanged.
 
 use std::path::{Path, PathBuf};
 
 use crate::config::toml::{parse, Table, Value};
 use crate::config::{apply_system, Config};
-use crate::experiments::{AssignKind, SchedKind};
+use crate::policy::{assign, sched, PolicyKey, PolicyRegistry};
 use crate::system::SystemParams;
 
 /// What each cell simulates.
@@ -57,8 +66,10 @@ impl SweepMode {
 pub struct SweepCell {
     /// Position in deterministic grid order (also the RNG stream tag).
     pub idx: usize,
-    pub scheduler: SchedKind,
-    pub assigner: AssignKind,
+    /// Canonical scheduler policy key (see [`crate::policy`]).
+    pub scheduler: PolicyKey,
+    /// Canonical assigner policy key.
+    pub assigner: PolicyKey,
     pub h: usize,
     pub seed_i: usize,
 }
@@ -70,8 +81,8 @@ pub struct ScenarioSpec {
     pub mode: SweepMode,
     /// Dataset for train mode (`fmnist`, `cifar`, `tiny`).
     pub dataset: String,
-    pub schedulers: Vec<SchedKind>,
-    pub assigners: Vec<AssignKind>,
+    pub schedulers: Vec<PolicyKey>,
+    pub assigners: Vec<PolicyKey>,
     pub h_values: Vec<usize>,
     /// Independent repetitions per grid point.
     pub seeds: usize,
@@ -99,12 +110,12 @@ impl Default for ScenarioSpec {
             name: "sweep".into(),
             mode: SweepMode::Cost,
             dataset: "fmnist".into(),
-            schedulers: vec![SchedKind::Ikc, SchedKind::Vkc, SchedKind::FedAvg],
+            schedulers: vec![sched("ikc"), sched("vkc"), sched("fedavg")],
             assigners: vec![
-                AssignKind::Drl(None),
-                AssignKind::Geo,
-                AssignKind::RoundRobin,
-                AssignKind::Random,
+                assign("d3qn"),
+                assign("geographic"),
+                assign("round-robin"),
+                assign("random"),
             ],
             h_values: vec![10, 30, 50, 100],
             seeds: 2,
@@ -126,6 +137,7 @@ impl ScenarioSpec {
     /// Parse a spec from a TOML table, starting from `Config`-aligned
     /// defaults so CLI profiles compose with experiment profiles.
     pub fn from_table(t: &Table, cfg: &Config) -> anyhow::Result<ScenarioSpec> {
+        let reg = PolicyRegistry::global();
         let mut s = ScenarioSpec {
             seeds: cfg.seeds,
             seed: cfg.seed,
@@ -152,10 +164,10 @@ impl ScenarioSpec {
             s.schedulers = arr
                 .iter()
                 .map(|v| {
-                    let name = v
+                    let key = v
                         .as_str()
                         .ok_or_else(|| anyhow::anyhow!("schedulers entries must be strings"))?;
-                    SchedKind::parse(name)
+                    reg.sched_key(key)
                 })
                 .collect::<anyhow::Result<_>>()?;
         }
@@ -163,10 +175,10 @@ impl ScenarioSpec {
             s.assigners = arr
                 .iter()
                 .map(|v| {
-                    let name = v
+                    let key = v
                         .as_str()
                         .ok_or_else(|| anyhow::anyhow!("assigners entries must be strings"))?;
-                    AssignKind::parse(name, None)
+                    reg.assign_key(key)
                 })
                 .collect::<anyhow::Result<_>>()?;
         }
@@ -226,6 +238,19 @@ impl ScenarioSpec {
         anyhow::ensure!(!self.assigners.is_empty(), "scenario has no assigners");
         anyhow::ensure!(!self.h_values.is_empty(), "scenario has no h_values");
         anyhow::ensure!(self.seeds > 0 && self.iters > 0, "seeds and iters must be > 0");
+        let reg = PolicyRegistry::global();
+        for k in &self.schedulers {
+            anyhow::ensure!(
+                reg.sched_entry(&k.name).is_some(),
+                "unknown scheduler policy {k} (see `hfl policies`)"
+            );
+        }
+        for k in &self.assigners {
+            anyhow::ensure!(
+                reg.assign_entry(&k.name).is_some(),
+                "unknown assigner policy {k} (see `hfl policies`)"
+            );
+        }
         for &h in &self.h_values {
             anyhow::ensure!(h >= 1, "H must be at least 1");
             anyhow::ensure!(
@@ -250,7 +275,7 @@ impl ScenarioSpec {
                     for seed_i in 0..self.seeds {
                         out.push(SweepCell {
                             idx,
-                            scheduler: *sched,
+                            scheduler: sched.clone(),
                             assigner: assigner.clone(),
                             h,
                             seed_i,
@@ -271,8 +296,8 @@ mod tests {
     #[test]
     fn grid_size_is_product() {
         let spec = ScenarioSpec {
-            schedulers: vec![SchedKind::Ikc, SchedKind::FedAvg],
-            assigners: vec![AssignKind::Geo, AssignKind::RoundRobin, AssignKind::Random],
+            schedulers: vec![sched("ikc"), sched("fedavg")],
+            assigners: vec![assign("geographic"), assign("round-robin"), assign("random")],
             h_values: vec![10, 50],
             seeds: 4,
             ..ScenarioSpec::default()
@@ -307,15 +332,48 @@ mod tests {
         let s = ScenarioSpec::from_table(&t, &cfg).unwrap();
         assert_eq!(s.name, "mini_grid");
         assert_eq!(s.mode, SweepMode::Cost);
-        assert_eq!(s.schedulers, vec![SchedKind::FedAvg, SchedKind::Ikc]);
+        assert_eq!(s.schedulers, vec![sched("fedavg"), sched("ikc")]);
         assert_eq!(s.assigners.len(), 3);
-        assert_eq!(s.assigners[2], AssignKind::Hfel(100));
+        // old spellings canonicalize through the registry aliases
+        assert_eq!(s.assigners[0], assign("geographic"));
+        assert_eq!(s.assigners[1], assign("round-robin"));
+        assert_eq!(s.assigners[2], assign("hfel?budget=100"));
         assert_eq!(s.h_values, vec![10, 20]);
         assert_eq!(s.seeds, 3);
         assert_eq!(s.iters, 7);
         assert_eq!(s.system.n_devices, 40);
         assert_eq!(s.system.lambda, 2.0);
         assert_eq!(s.cells().len(), 2 * 3 * 2 * 3);
+    }
+
+    #[test]
+    fn toml_accepts_parameterized_and_new_policy_keys() {
+        let cfg = Config::default();
+        let t = parse(
+            r#"
+            schedulers = ["channel", "fedavg"]
+            assigners = ["greedy", "static?base=greedy", "hfel?budget=42"]
+            h_values = [10]
+            "#,
+        )
+        .unwrap();
+        let s = ScenarioSpec::from_table(&t, &cfg).unwrap();
+        assert_eq!(s.schedulers[0].to_string(), "channel");
+        assert_eq!(s.assigners[1].to_string(), "static?base=greedy");
+        assert_eq!(s.assigners[2].to_string(), "hfel?budget=42");
+    }
+
+    #[test]
+    fn rejects_unknown_policy_keys() {
+        let cfg = Config::default();
+        for toml in [
+            "schedulers = [\"quantum\"]",
+            "assigners = [\"teleport\"]",
+            "assigners = [\"hfel?warp=9\"]",
+        ] {
+            let t = parse(toml).unwrap();
+            assert!(ScenarioSpec::from_table(&t, &cfg).is_err(), "accepted {toml:?}");
+        }
     }
 
     #[test]

@@ -11,6 +11,11 @@
 //! for any thread count (`RAYON_NUM_THREADS=1` vs `-j N`). Wall-clock
 //! measurements (assignment latency, cell runtimes) are kept out of the
 //! deterministic CSVs and only surfaced in the printed summary.
+//!
+//! Policies are instantiated per cell from the global
+//! [`PolicyRegistry`] — the runner never matches on concrete strategy
+//! enums, so registering a new policy makes it sweepable with no changes
+//! here.
 
 use std::path::Path;
 use std::time::Instant;
@@ -18,14 +23,15 @@ use std::time::Instant;
 use rayon::prelude::*;
 
 use crate::allocation::SolverOpts;
-use crate::assignment::{evaluate, Assigner};
+use crate::assignment::evaluate;
 use crate::data::{partition, DeviceData};
-use crate::experiments::common::{
-    assigner_with_fallback, clusters_for, make_scheduler, AssignKind, SchedKind,
-};
+use crate::experiments::common::clusters_for;
 use crate::fl::{HflConfig, HflTrainer};
+use crate::policy::{
+    AssignEnv, AssignPolicy, ClusterNeed, PolicyCtx, PolicyKey, PolicyRegistry, RoundHistory,
+    SchedEnv, SchedulePolicy,
+};
 use crate::runtime::Backend;
-use crate::scheduling::AuxModel;
 use crate::system::Topology;
 use crate::util::csv::CsvWriter;
 use crate::util::{stats, Rng};
@@ -118,26 +124,36 @@ pub fn oracle_clusters(device_data: &[DeviceData]) -> Vec<Vec<usize>> {
 }
 
 fn build_assigner<'b>(
-    kind: &AssignKind,
+    key: &PolicyKey,
     spec: &ScenarioSpec,
     backend: Option<&'b dyn Backend>,
     seed: u64,
-) -> anyhow::Result<Box<dyn Assigner + 'b>> {
-    if matches!(kind, AssignKind::Drl(_)) {
-        let b = backend.ok_or_else(|| {
-            anyhow::anyhow!("the d3qn assigner needs a backend (cost sweeps: pass one, or drop d3qn)")
-        })?;
-        anyhow::ensure!(
-            b.manifest().consts.n_edges == spec.system.n_edges,
-            "backend D³QN expects {} edges, scenario deploys {}",
-            b.manifest().consts.n_edges,
-            spec.system.n_edges
-        );
+) -> anyhow::Result<Box<dyn AssignPolicy + 'b>> {
+    let reg = PolicyRegistry::global();
+    if let Some(entry) = reg.assign_entry(&key.name) {
+        if entry.needs_backend && backend.is_none() {
+            anyhow::bail!(
+                "the {} assigner needs a model backend (cost sweeps: pass one, or drop it)",
+                key.name
+            );
+        }
     }
-    assigner_with_fallback(kind, backend, spec.drl_checkpoint.clone(), seed)
+    // expect_edges guards the backend's fixed D³QN edge count against the
+    // scenario deployment at construction — inside the factory, so
+    // composite keys (static?base=d3qn) are covered too
+    reg.assigner(
+        key,
+        &AssignEnv {
+            backend,
+            default_ckpt: spec.drl_checkpoint.clone(),
+            expect_edges: Some(spec.system.n_edges),
+            seed,
+        },
+    )
 }
 
-/// Clusters for a cell's scheduler, if it needs any.
+/// Clusters for a cell's scheduler, if its registry entry declares any
+/// ([`ClusterNeed`]).
 fn cell_clusters(
     spec: &ScenarioSpec,
     cell: &SweepCell,
@@ -146,10 +162,12 @@ fn cell_clusters(
     device_data: &[DeviceData],
     seed: u64,
 ) -> anyhow::Result<Option<Vec<Vec<usize>>>> {
-    let aux = match cell.scheduler {
-        SchedKind::FedAvg => return Ok(None),
-        SchedKind::Ikc => AuxModel::Mini,
-        SchedKind::Vkc => AuxModel::Full,
+    let entry = PolicyRegistry::global()
+        .sched_entry(&cell.scheduler.name)
+        .ok_or_else(|| anyhow::anyhow!("unknown scheduler policy {}", cell.scheduler))?;
+    let aux = match entry.clusters {
+        ClusterNeed::None => return Ok(None),
+        ClusterNeed::Aux(aux) => aux,
     };
     if spec.oracle_clusters || spec.mode == SweepMode::Cost {
         return Ok(Some(oracle_clusters(device_data)));
@@ -177,8 +195,10 @@ pub fn run_cell(
 ) -> anyhow::Result<CellResult> {
     let t_start = Instant::now();
     let dep = deployment_seed(spec, cell);
+    let policy_seed = cell_seed(spec, cell);
     // per-arm stream (scheduler draws, exploration, fresh θ)
-    let mut rng = Rng::new(cell_seed(spec, cell));
+    let mut rng = Rng::new(policy_seed);
+    let reg = PolicyRegistry::global();
     match spec.mode {
         SweepMode::Cost => {
             let sys = spec.system.clone();
@@ -187,31 +207,29 @@ pub fn run_cell(
             let samples: Vec<usize> = topo.devices.iter().map(|d| d.num_samples).collect();
             let dd = partition(topo.devices.len(), &samples, spec.frac_major, dep ^ 0xDA7A);
             let clusters = cell_clusters(spec, cell, backend, None, &dd, dep)?;
-            if let Some(cl) = &clusters {
-                anyhow::ensure!(
-                    cell.h % cl.len() == 0,
-                    "{}: H={} must divide into {} clusters",
-                    cell.scheduler.name(),
-                    cell.h,
-                    cl.len()
-                );
-            }
-            let mut sched = make_scheduler(
-                cell.scheduler,
-                clusters,
-                topo.devices.len(),
-                cell.h,
-                rng.next_u64(),
-            )?;
+            let mut sched =
+                reg.scheduler(&cell.scheduler, &SchedEnv { seed: rng.next_u64() })?;
             let mut assigner = build_assigner(&cell.assigner, spec, backend, rng.next_u64())?;
             let opts = SolverOpts::default();
             let mut rows = Vec::with_capacity(spec.iters);
             let mut latencies = Vec::with_capacity(spec.iters);
+            let mut history = RoundHistory::default();
             for iter in 0..spec.iters {
-                let scheduled = sched.schedule();
-                let t0 = Instant::now();
-                let assignment = assigner.assign(&topo, &scheduled);
-                latencies.push(t0.elapsed().as_secs_f64());
+                let (scheduled, assignment, latency) = {
+                    let ctx = PolicyCtx {
+                        topo: &topo,
+                        clusters: clusters.as_deref(),
+                        h: cell.h,
+                        round: iter,
+                        history: &history,
+                        seed: policy_seed,
+                    };
+                    let scheduled = sched.schedule(&ctx)?;
+                    let t0 = Instant::now();
+                    let assignment = assigner.assign(&ctx, &scheduled)?;
+                    (scheduled, assignment, t0.elapsed().as_secs_f64())
+                };
+                latencies.push(latency);
                 debug_assert!(assignment.is_partition());
                 let (cost, _) = evaluate(&topo, &assignment, &opts);
                 rows.push(SweepRow {
@@ -224,6 +242,7 @@ pub fn run_cell(
                     msg_bytes: None,
                     n_scheduled: scheduled.len(),
                 });
+                history.push(scheduled, assignment);
             }
             Ok(CellResult {
                 cell: cell.clone(),
@@ -255,36 +274,29 @@ pub fn run_cell(
             let mut trainer = HflTrainer::new(b, hcfg, topo)?;
             let clusters =
                 cell_clusters(spec, cell, backend, Some(&trainer), &trainer.device_data, dep)?;
-            if let Some(cl) = &clusters {
-                anyhow::ensure!(
-                    cell.h % cl.len() == 0,
-                    "{}: H={} must divide into {} clusters",
-                    cell.scheduler.name(),
-                    cell.h,
-                    cl.len()
-                );
-            }
-            let mut sched = make_scheduler(
-                cell.scheduler,
-                clusters,
-                trainer.topo.devices.len(),
-                cell.h,
-                rng.next_u64(),
-            )?;
+            let mut sched =
+                reg.scheduler(&cell.scheduler, &SchedEnv { seed: rng.next_u64() })?;
             let mut assigner = build_assigner(&cell.assigner, spec, backend, rng.next_u64())?;
-            let sched_name = cell.scheduler.name();
-            let assigner_tag = cell.assigner.tag();
-            let res = trainer.run(&mut *sched, &mut *assigner, &SolverOpts::default(), |r| {
-                log::info!(
-                    "sweep {} {sched_name}×{assigner_tag} H={} seed{} it{} acc {:.3} loss {:.3}",
-                    spec.name,
-                    cell.h,
-                    cell.seed_i,
-                    r.iter,
-                    r.accuracy,
-                    r.train_loss
-                );
-            })?;
+            let sched_name = cell.scheduler.to_string();
+            let assigner_tag = cell.assigner.to_string();
+            let res = trainer.run_policies(
+                &mut *sched,
+                &mut *assigner,
+                clusters.as_deref(),
+                policy_seed,
+                &SolverOpts::default(),
+                |r| {
+                    log::info!(
+                        "sweep {} {sched_name}×{assigner_tag} H={} seed{} it{} acc {:.3} loss {:.3}",
+                        spec.name,
+                        cell.h,
+                        cell.seed_i,
+                        r.iter,
+                        r.accuracy,
+                        r.train_loss
+                    );
+                },
+            )?;
             let lambda = spec.system.lambda;
             let rows: Vec<SweepRow> = res
                 .records
@@ -425,8 +437,8 @@ impl SweepResult {
             ],
         )?;
         for c in &self.cells {
-            let sched = c.cell.scheduler.name().to_string();
-            let assigner = c.cell.assigner.tag();
+            let sched = c.cell.scheduler.to_string();
+            let assigner = c.cell.assigner.to_string();
             for r in &c.rows {
                 rows_csv.row(&[
                     c.cell.idx.to_string(),
@@ -463,12 +475,16 @@ impl SweepResult {
         Ok((rows_path, summary_path))
     }
 
-    /// Cells grouped by (scheduler, assigner, h), preserving grid order —
-    /// the shape the figure drivers aggregate over seeds.
-    pub fn grouped(&self) -> Vec<((SchedKind, String, usize), Vec<&CellResult>)> {
-        let mut out: Vec<((SchedKind, String, usize), Vec<&CellResult>)> = Vec::new();
+    /// Cells grouped by (scheduler key, assigner key, h), preserving grid
+    /// order — the shape the figure drivers aggregate over seeds.
+    pub fn grouped(&self) -> Vec<((String, String, usize), Vec<&CellResult>)> {
+        let mut out: Vec<((String, String, usize), Vec<&CellResult>)> = Vec::new();
         for c in &self.cells {
-            let key = (c.cell.scheduler, c.cell.assigner.tag(), c.cell.h);
+            let key = (
+                c.cell.scheduler.to_string(),
+                c.cell.assigner.to_string(),
+                c.cell.h,
+            );
             match out.iter().position(|(k, _)| *k == key) {
                 Some(i) => out[i].1.push(c),
                 None => out.push((key, vec![c])),

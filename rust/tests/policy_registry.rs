@@ -1,0 +1,159 @@
+//! Registry contract tests (ISSUE 3): round-trip every registered policy
+//! key through parse → instantiate → `name()`, pin the full `hfl policies`
+//! listing against the committed golden file, and property-test that every
+//! registered (scheduler, assigner) pair produces a valid partition on a
+//! random topology.
+
+use hfl::data::partition;
+use hfl::policy::{
+    AssignEnv, AssignPolicy, PolicyCtx, PolicyRegistry, RoundHistory, SchedEnv, SchedulePolicy,
+};
+use hfl::runtime::NativeBackend;
+use hfl::scenario::oracle_clusters;
+use hfl::system::{SystemParams, Topology};
+use hfl::util::Rng;
+
+fn topo(seed: u64) -> Topology {
+    Topology::generate(&SystemParams::default(), &mut Rng::new(seed))
+}
+
+#[test]
+fn every_scheduler_key_round_trips_through_parse_and_instantiate() {
+    let reg = PolicyRegistry::global();
+    // (input spelling, canonical form, instance name)
+    let cases = [
+        ("fedavg", "fedavg", "fedavg"),
+        ("vkc", "vkc", "vkc"),
+        ("ikc", "ikc", "ikc"),
+        ("channel", "channel", "channel"),
+        ("channel?share_hz=200000", "channel?share_hz=200000", "channel?share_hz=200000"),
+    ];
+    for (input, canonical, name) in cases {
+        let key = reg.sched_key(input).unwrap_or_else(|e| panic!("{input}: {e}"));
+        assert_eq!(key.to_string(), canonical, "{input}");
+        let policy = reg
+            .scheduler(&key, &SchedEnv { seed: 7 })
+            .unwrap_or_else(|e| panic!("{input}: {e}"));
+        assert_eq!(policy.name(), name, "{input}");
+    }
+    // every registered name is covered by the cases above
+    let mut covered: Vec<&str> = cases.iter().map(|(i, _, _)| *i).collect();
+    covered.sort_unstable();
+    for n in reg.sched_names() {
+        assert!(covered.contains(&n), "scheduler {n} missing from the round-trip cases");
+    }
+}
+
+#[test]
+fn every_assigner_key_round_trips_through_parse_and_instantiate() {
+    let reg = PolicyRegistry::global();
+    let backend = NativeBackend::new();
+    let env =
+        AssignEnv { backend: Some(&backend), default_ckpt: None, expect_edges: None, seed: 3 };
+    let cases = [
+        ("d3qn", "d3qn", "d3qn"),
+        ("drl", "d3qn", "d3qn"),
+        ("hfel", "hfel?budget=300", "hfel?budget=300"),
+        ("hfel-100", "hfel?budget=100", "hfel?budget=100"),
+        ("hfel-300", "hfel?budget=300", "hfel?budget=300"),
+        ("hfel?budget=42", "hfel?budget=42", "hfel?budget=42"),
+        ("geographic", "geographic", "geographic"),
+        ("geo", "geographic", "geographic"),
+        ("round-robin", "round-robin", "round-robin"),
+        ("rr", "round-robin", "round-robin"),
+        ("random", "random", "random"),
+        ("greedy", "greedy", "greedy"),
+        ("static", "static?base=geographic", "static?base=geographic"),
+        ("static?base=round-robin", "static?base=round-robin", "static?base=round-robin"),
+        ("static?base=hfel?budget=100", "static?base=hfel?budget=100", "static?base=hfel?budget=100"),
+    ];
+    for (input, canonical, name) in cases {
+        let key = reg.assign_key(input).unwrap_or_else(|e| panic!("{input}: {e}"));
+        assert_eq!(key.to_string(), canonical, "{input}");
+        let policy = reg
+            .assigner(&key, &env)
+            .unwrap_or_else(|e| panic!("{input}: {e}"));
+        assert_eq!(policy.name(), name, "{input}");
+    }
+    let covered: Vec<&str> = cases.iter().map(|(i, _, _)| *i).collect();
+    for n in reg.assign_names() {
+        assert!(covered.contains(&n), "assigner {n} missing from the round-trip cases");
+    }
+}
+
+#[test]
+fn golden_listing_is_pinned() {
+    // `hfl policies` prints exactly this listing; CI diffs the binary's
+    // output against the same golden file.
+    let expected = include_str!("golden/policies.txt");
+    assert_eq!(
+        PolicyRegistry::global().listing(),
+        expected,
+        "policy registry listing drifted — update rust/tests/golden/policies.txt \
+         (or revert the unintended registry change)"
+    );
+}
+
+#[test]
+fn every_registered_pair_produces_a_valid_partition() {
+    // Property: for every registered (scheduler, assigner) pair, two
+    // consecutive rounds on a random topology yield H distinct scheduled
+    // devices and a partition assigning exactly the scheduled set. Two
+    // rounds exercise the stateful paths (IKC history, static's frozen
+    // map, round history growth).
+    let reg = PolicyRegistry::global();
+    let backend = NativeBackend::new();
+    let t = topo(0xBEEF);
+    let samples: Vec<usize> = t.devices.iter().map(|d| d.num_samples).collect();
+    let dd = partition(t.devices.len(), &samples, 0.8, 0x5EED);
+    let clusters = oracle_clusters(&dd);
+    let h = 20; // divides the K=10 oracle clusters
+    for sched_name in reg.sched_names() {
+        for assign_name in reg.assign_names() {
+            let skey = reg.sched_key(sched_name).unwrap();
+            let akey = reg.assign_key(assign_name).unwrap();
+            let mut sched = reg.scheduler(&skey, &SchedEnv { seed: 1 }).unwrap();
+            let env = AssignEnv {
+                backend: Some(&backend),
+                default_ckpt: None,
+                expect_edges: Some(t.edges.len()),
+                seed: 2,
+            };
+            let mut assigner = reg.assigner(&akey, &env).unwrap();
+            let mut history = RoundHistory::default();
+            for round in 0..2 {
+                let (scheduled, assignment) = {
+                    let ctx = PolicyCtx {
+                        topo: &t,
+                        clusters: Some(&clusters),
+                        h,
+                        round,
+                        history: &history,
+                        seed: 3,
+                    };
+                    let scheduled = sched
+                        .schedule(&ctx)
+                        .unwrap_or_else(|e| panic!("{sched_name} round {round}: {e}"));
+                    let assignment = assigner
+                        .assign(&ctx, &scheduled)
+                        .unwrap_or_else(|e| panic!("{sched_name}×{assign_name}: {e}"));
+                    (scheduled, assignment)
+                };
+                let pair = format!("{sched_name}×{assign_name} round {round}");
+                assert_eq!(scheduled.len(), h, "{pair}: wrong H");
+                // the trait contract requires H *distinct* devices, not a
+                // particular order — normalize before set comparisons
+                let mut sched_sorted = scheduled.clone();
+                sched_sorted.sort_unstable();
+                sched_sorted.dedup();
+                assert_eq!(sched_sorted.len(), h, "{pair}: duplicate scheduled devices");
+                assert!(assignment.is_partition(), "{pair}: not a partition");
+                let mut assigned: Vec<usize> =
+                    assignment.groups.iter().flatten().cloned().collect();
+                assigned.sort_unstable();
+                assert_eq!(assigned, sched_sorted, "{pair}: assigned set != scheduled set");
+                history.push(scheduled, assignment);
+            }
+        }
+    }
+}

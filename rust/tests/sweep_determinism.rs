@@ -1,10 +1,12 @@
 //! Determinism contract of the scenario engine: the same spec + seed must
 //! produce byte-identical CSV output whether cells run serially
 //! (`RAYON_NUM_THREADS=1` equivalent) or fanned across threads — per-cell
-//! child RNG streams, no shared-state ordering dependence.
+//! child RNG streams, no shared-state ordering dependence. Policies are
+//! registry keys, so the contract covers every registered policy the specs
+//! name, including parameterized ones.
 
 use hfl::config::Config;
-use hfl::experiments::{AssignKind, SchedKind};
+use hfl::policy::{assign, sched};
 use hfl::runtime::NativeBackend;
 use hfl::scenario::{run_sweep, run_sweep_serial, ScenarioSpec, SweepMode};
 
@@ -14,12 +16,12 @@ fn small_cost_spec(name: &str) -> ScenarioSpec {
     ScenarioSpec {
         name: name.into(),
         mode: SweepMode::Cost,
-        schedulers: vec![SchedKind::FedAvg, SchedKind::Ikc],
+        schedulers: vec![sched("fedavg"), sched("ikc")],
         assigners: vec![
-            AssignKind::Drl(None),
-            AssignKind::Geo,
-            AssignKind::RoundRobin,
-            AssignKind::Random,
+            assign("d3qn"),
+            assign("geographic"),
+            assign("round-robin"),
+            assign("random"),
         ],
         h_values: vec![10, 20],
         seeds: 2,
@@ -89,16 +91,16 @@ fn strategy_arms_share_the_same_deployments() {
     // The deployment (topology/partition) stream depends only on
     // (spec.seed, H, seed_i) — not on which other strategies are in the
     // grid — so paired comparisons stay paired. With H = n_devices the
-    // FedAvg schedule is the full (deterministic) set and `geo` assignment
-    // is a pure function of the topology, so the geo cells must be
-    // identical whether or not other assigners run alongside.
+    // FedAvg schedule is the full (deterministic) set and `geographic`
+    // assignment is a pure function of the topology, so the geo cells must
+    // be identical whether or not other assigners run alongside.
     let mut small = small_cost_spec("pair_a");
-    small.schedulers = vec![SchedKind::FedAvg];
+    small.schedulers = vec![sched("fedavg")];
     small.h_values = vec![small.system.n_devices];
-    small.assigners = vec![AssignKind::Geo];
+    small.assigners = vec![assign("geographic")];
     let mut wide = small.clone();
     wide.name = "pair_b".into();
-    wide.assigners = vec![AssignKind::Random, AssignKind::Geo, AssignKind::RoundRobin];
+    wide.assigners = vec![assign("random"), assign("geographic"), assign("round-robin")];
 
     let a = run_sweep(&small, None::<&NativeBackend>, 2).unwrap();
     let b = run_sweep(&wide, None::<&NativeBackend>, 2).unwrap();
@@ -106,7 +108,7 @@ fn strategy_arms_share_the_same_deployments() {
     let geo_b: Vec<_> = b
         .cells
         .iter()
-        .filter(|c| c.cell.assigner == AssignKind::Geo)
+        .filter(|c| c.cell.assigner == assign("geographic"))
         .collect();
     assert_eq!(geo_a.len(), geo_b.len());
     for (ca, cb) in geo_a.iter().zip(&geo_b) {
@@ -132,8 +134,8 @@ fn train_mode_fig3_style_sweep_is_thread_count_invariant() {
         name: "train_det".into(),
         mode: SweepMode::Train,
         dataset: "tiny".into(),
-        schedulers: vec![SchedKind::Ikc, SchedKind::FedAvg],
-        assigners: vec![AssignKind::RoundRobin],
+        schedulers: vec![sched("ikc"), sched("fedavg")],
+        assigners: vec![assign("round-robin")],
         h_values: vec![10],
         seeds: 1,
         iters: 2,
@@ -169,7 +171,7 @@ fn train_mode_fig3_style_sweep_is_thread_count_invariant() {
 fn backendless_cost_sweep_runs_without_d3qn() {
     // a spec without the d3qn assigner needs no backend at all
     let mut spec = small_cost_spec("nobackend");
-    spec.assigners = vec![AssignKind::Geo, AssignKind::RoundRobin, AssignKind::Random];
+    spec.assigners = vec![assign("geographic"), assign("round-robin"), assign("random")];
     let r = run_sweep(&spec, None::<&NativeBackend>, 2).unwrap();
     assert_eq!(r.cells.len(), spec.cells().len());
     assert!(r.cells.iter().all(|c| c.rows.len() == spec.iters));
@@ -207,4 +209,86 @@ fn toml_spec_round_trips_through_the_runner() {
     let r = run_sweep(&spec, None::<&NativeBackend>, 2).unwrap();
     assert_eq!(r.cells.len(), 4); // 1 scheduler × 2 assigners × 1 H × 2 seeds
     std::fs::remove_dir_all(&tmp).ok();
+}
+
+#[test]
+fn new_policy_toml_runs_cost_mode_with_identical_csvs_across_threads() {
+    // ISSUE 3 acceptance: a TOML scenario naming the channel, greedy and
+    // static policies runs end-to-end through the sweep engine with
+    // byte-identical CSVs for any thread count.
+    let tmp = std::env::temp_dir().join(format!("hfl_sweep_newpol_{}", std::process::id()));
+    std::fs::create_dir_all(&tmp).unwrap();
+    let path = tmp.join("showcase.toml");
+    std::fs::write(
+        &path,
+        r#"
+        name = "showcase"
+        mode = "cost"
+        schedulers = ["channel", "fedavg"]
+        assigners = ["greedy", "static?base=greedy", "hfel-100"]
+        h_values = [10]
+        seeds = 2
+        iters = 2
+        seed = 11
+        [system]
+        n_devices = 20
+        "#,
+    )
+    .unwrap();
+    let spec = ScenarioSpec::load(&path, &Config::default()).unwrap();
+    assert_eq!(spec.assigners[2], assign("hfel?budget=100"), "alias not canonicalized");
+
+    let dir1 = tmp.join("t1");
+    let dir4 = tmp.join("t4");
+    std::fs::create_dir_all(&dir1).unwrap();
+    std::fs::create_dir_all(&dir4).unwrap();
+    let r1 = run_sweep(&spec, None::<&NativeBackend>, 1).unwrap();
+    r1.write_csvs(&dir1).unwrap();
+    let r4 = run_sweep(&spec, None::<&NativeBackend>, 4).unwrap();
+    r4.write_csvs(&dir4).unwrap();
+    assert_eq!(r1.cells.len(), 2 * 3 * 1 * 2);
+    for name in ["sweep_showcase.csv", "sweep_showcase_summary.csv"] {
+        let a = read(&dir1, name);
+        let b = read(&dir4, name);
+        assert_eq!(a, b, "{name} differs between thread counts");
+        assert!(a.contains("static?base=greedy"), "policy label missing from {name}");
+    }
+    std::fs::remove_dir_all(&tmp).ok();
+}
+
+#[test]
+fn new_policy_train_sweep_is_thread_count_invariant() {
+    // The same three new policies through full (tiny-model) HFL training.
+    let mut system = hfl::system::SystemParams::default();
+    system.n_devices = 20;
+    let spec = ScenarioSpec {
+        name: "newpol_train".into(),
+        mode: SweepMode::Train,
+        dataset: "tiny".into(),
+        schedulers: vec![sched("channel")],
+        assigners: vec![assign("greedy"), assign("static?base=greedy")],
+        h_values: vec![10],
+        seeds: 1,
+        iters: 2,
+        seed: 13,
+        oracle_clusters: true,
+        k_clusters: 10,
+        lr: 0.05,
+        target_acc: 1.0,
+        test_size: 100,
+        frac_major: 0.8,
+        drl_checkpoint: None,
+        system,
+    };
+    let backend = NativeBackend::new();
+    let a = run_sweep(&spec, Some(&backend), 1).unwrap();
+    let b = run_sweep(&spec, Some(&backend), 4).unwrap();
+    assert_eq!(a.cells.len(), spec.cells().len());
+    for (ca, cb) in a.cells.iter().zip(&b.cells) {
+        assert_eq!(ca.rows.len(), spec.iters);
+        for (ra, rb) in ca.rows.iter().zip(&cb.rows) {
+            assert_eq!(ra.accuracy, rb.accuracy, "cell {}", ca.cell.idx);
+            assert_eq!(ra.t_i.to_bits(), rb.t_i.to_bits(), "cell {}", ca.cell.idx);
+        }
+    }
 }
