@@ -1,18 +1,20 @@
 //! Bench for Fig. 5: D³QN training throughput (episodes/s) at a reduced
-//! episode count — the full curve is produced by `hfl exp fig5`.
+//! episode count — the full curve is produced by `hfl exp fig5`. Runs on
+//! the native backend (BPTT + Adam in pure Rust), so it needs no AOT
+//! artifacts.
 
 use hfl::bench::bench_once;
 use hfl::drl::{DqnTrainConfig, DqnTrainer};
-use hfl::runtime::Engine;
+use hfl::runtime::{Backend, NativeBackend};
 
 fn main() {
-    let engine = Engine::open(std::path::Path::new("artifacts")).expect("make artifacts");
+    let backend = NativeBackend::new();
     let mut cfg = DqnTrainConfig::default();
     cfg.episodes = 6;
     cfg.hfel_exchange = 100;
     cfg.system.model_bits =
-        (engine.manifest.model("fmnist").unwrap().bytes * 8) as f64;
-    let mut tr = DqnTrainer::new(&engine, cfg).unwrap();
+        (backend.manifest().model("fmnist").unwrap().bytes * 8) as f64;
+    let mut tr = DqnTrainer::new(&backend, cfg).unwrap();
     let (res, dt) = bench_once("fig5/drl_train_6_episodes", || tr.train(|_, _| {}).unwrap());
     println!(
         "  {:.1}s/episode, {} train steps, mean reward {:.1}",

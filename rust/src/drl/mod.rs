@@ -2,18 +2,17 @@
 //! construction (eqs. 24–25), the replay buffer Ω, the Algorithm 5 training
 //! loop and flat-parameter checkpoints.
 //!
-//! Inference is backend-portable (see `assignment::drl`); the Algorithm 5
-//! *training* loop still drives the `dqn_train` AOT artifact directly and
-//! therefore requires the `pjrt` feature (porting it to the native backend
-//! is a ROADMAP open item).
+//! Inference AND training are backend-portable: both dispatch through
+//! [`crate::runtime::Backend`] (`dqn_q_all` / `dqn_train_step`), so
+//! Algorithm 5 runs artifact-free on the native backend — per-cell agents
+//! in sweeps included (`d3qn?train=percell`) — while pjrt builds can
+//! replay the same loop on the AOT artifacts as a parity oracle.
 
 pub mod checkpoint;
 pub mod episode;
 pub mod replay;
-#[cfg(feature = "pjrt")]
 pub mod trainer;
 
 pub use episode::{build_features, EpisodeFeatures};
 pub use replay::{Batch, ReplayBuffer, Transition};
-#[cfg(feature = "pjrt")]
 pub use trainer::{DqnTrainConfig, DqnTrainer, TrainResult};

@@ -1,22 +1,31 @@
 //! Algorithm 5 — training the D³QN device-assignment agent.
 //!
-//! The control flow lives here in Rust (L3); the numerics — BiLSTM
-//! Q-values, double-DQN targets, Adam — are two AOT artifacts
-//! (`dqn_q_all_h<H>`, `dqn_train`). Per episode:
+//! Both the control flow AND the numerics live in Rust now: Q-values,
+//! double-DQN targets, the BiLSTM BPTT backward and Adam all run through
+//! the [`Backend`] trait — [`crate::runtime::NativeBackend`] executes them
+//! artifact-free (`runtime/native/{dqn,adam}.rs`), while a pjrt-feature
+//! build can point the same loop at the `dqn_q_all_h<H>` / `dqn_train` AOT
+//! artifacts as a parity oracle. Per episode:
 //!
 //! 1. generate a random deployment (Table I ranges) of H devices;
 //! 2. run HFEL to obtain the expert assignment pattern Ψ̂ (the reward
 //!    oracle, eq. 26);
 //! 3. ONE `dqn_q_all` call yields Q(s_t, ·) for every slot (the state is
 //!    position-indexed, see python/compile/dqn.py); actions are ε-greedy;
-//! 4. push the H transitions; after each slot, one `dqn_train` step on a
-//!    uniform minibatch; sync the target net every J steps.
+//! 4. push the H transitions; after each slot, one
+//!    [`Backend::dqn_train_step`] on a uniform minibatch; sync the target
+//!    net every J steps.
 //!
-//! Departures from the paper, both recorded in DESIGN.md §5: ε-greedy
+//! Everything stochastic draws from the trainer's single `Rng` stream, so
+//! a `(DqnTrainConfig, seed)` pair reproduces the episode rewards and the
+//! final θ bit-for-bit regardless of thread count — the property the
+//! determinism tests and the fig5 CI diff pin.
+//!
+//! Departures from the paper, recorded in DESIGN.md §5/§8: ε-greedy
 //! exploration is added (Algorithm 5 line 9 is pure argmax, which never
-//! explores non-greedy actions and cannot estimate their Q-values), and the
-//! default network is smaller than the paper's 256-unit BiLSTM (CPU
-//! interpret-mode wall-clock; `aot.py --dqn-hid 256` restores it).
+//! explores non-greedy actions and cannot estimate their Q-values), and
+//! the default network is smaller than the paper's 256-unit BiLSTM
+//! (CPU wall-clock; `NativeBackend::with_dqn` restores any width).
 
 use std::rc::Rc;
 
@@ -24,7 +33,7 @@ use super::episode::build_features;
 use super::replay::{ReplayBuffer, Transition};
 use crate::assignment::hfel::Hfel;
 use crate::model::{init_params, Init};
-use crate::runtime::{Arg, Engine};
+use crate::runtime::{Backend, DqnBatch, DqnTrainState};
 use crate::system::{SystemParams, Topology};
 use crate::util::Rng;
 
@@ -45,6 +54,10 @@ pub struct DqnTrainConfig {
     /// default 2 halves wall-clock with indistinguishable curves).
     pub train_every: usize,
     pub seed: u64,
+    /// Episode horizon H (devices per training deployment). `None` uses
+    /// the backend's `consts.train_horizon`; the native backend accepts
+    /// any value, PJRT only lowered horizons.
+    pub horizon: Option<usize>,
     /// System parameter ranges for the random episode deployments.
     pub system: SystemParams,
 }
@@ -62,6 +75,7 @@ impl Default for DqnTrainConfig {
             hfel_exchange: 150,
             train_every: 2,
             seed: 0,
+            horizon: None,
             system: SystemParams::default(),
         }
     }
@@ -79,33 +93,37 @@ pub struct TrainResult {
 }
 
 pub struct DqnTrainer<'e> {
-    engine: &'e Engine,
+    backend: &'e dyn Backend,
     pub cfg: DqnTrainConfig,
-    pub theta: Vec<f32>,
-    theta_tgt: Vec<f32>,
-    adam_m: Vec<f32>,
-    adam_v: Vec<f32>,
-    step: f32,
+    pub state: DqnTrainState,
     replay: ReplayBuffer,
     rng: Rng,
 }
 
 impl<'e> DqnTrainer<'e> {
-    pub fn new(engine: &'e Engine, cfg: DqnTrainConfig) -> anyhow::Result<Self> {
-        let info = engine.manifest.model("dqn")?.clone();
+    pub fn new(backend: &'e dyn Backend, cfg: DqnTrainConfig) -> anyhow::Result<Self> {
+        let info = backend.manifest().model("dqn")?.clone();
         let mut rng = Rng::new(cfg.seed ^ 0xD3_00_00);
         let theta = init_params(&info, Init::GlorotUniform, &mut rng);
         Ok(DqnTrainer {
-            engine,
-            theta_tgt: theta.clone(),
-            adam_m: vec![0.0; theta.len()],
-            adam_v: vec![0.0; theta.len()],
-            step: 0.0,
+            backend,
+            state: DqnTrainState::fresh(theta),
             replay: ReplayBuffer::new(cfg.buffer_cap),
             rng,
-            theta,
             cfg,
         })
+    }
+
+    /// The online network's current flat parameters.
+    pub fn theta(&self) -> &[f32] {
+        &self.state.theta
+    }
+
+    /// The episode horizon this configuration trains at.
+    pub fn horizon(&self) -> usize {
+        self.cfg
+            .horizon
+            .unwrap_or(self.backend.manifest().consts.train_horizon)
     }
 
     fn epsilon(&self, episode: usize) -> f64 {
@@ -119,48 +137,29 @@ impl<'e> DqnTrainer<'e> {
         }
     }
 
-    /// Q(s_t, ·) for all t of one episode: a single PJRT call.
+    /// Q(s_t, ·) for all t of one episode: a single backend dispatch.
     pub fn q_all(&self, feats: &[f32], h: usize) -> anyhow::Result<Vec<f32>> {
-        let c = &self.engine.manifest.consts;
-        let name = format!("dqn_q_all_h{h}");
-        let out = self.engine.run(
-            &name,
-            &[
-                Arg::F32(&self.theta, &[self.theta.len() as i64]),
-                Arg::F32(feats, &[h as i64, c.feat as i64]),
-            ],
-        )?;
-        Ok(out[0].clone())
+        self.backend.dqn_q_all(&self.state.theta, feats, h)
     }
 
-    fn train_step(&mut self) -> anyhow::Result<f32> {
-        let c = self.engine.manifest.consts.clone();
-        let (o, h, f) = (c.o, c.train_horizon, c.feat);
-        let batch = self.replay.sample(o, h * f, &mut self.rng);
-        let p = self.theta.len() as i64;
-        let out = self.engine.run(
-            "dqn_train",
-            &[
-                Arg::F32(&self.theta, &[p]),
-                Arg::F32(&self.theta_tgt, &[p]),
-                Arg::F32(&self.adam_m, &[p]),
-                Arg::F32(&self.adam_v, &[p]),
-                Arg::ScalarF32(self.step),
-                Arg::F32(&batch.feats, &[o as i64, h as i64, f as i64]),
-                Arg::I32(&batch.t, &[o as i64]),
-                Arg::I32(&batch.action, &[o as i64]),
-                Arg::F32(&batch.reward, &[o as i64]),
-                Arg::F32(&batch.done, &[o as i64]),
-                Arg::ScalarF32(self.cfg.gamma),
-            ],
+    fn train_step(&mut self, h: usize) -> anyhow::Result<f32> {
+        let c = self.backend.manifest().consts.clone();
+        let batch = self.replay.sample(c.o, h * c.feat, &mut self.rng);
+        let loss = self.backend.dqn_train_step(
+            &mut self.state,
+            &DqnBatch {
+                feats: &batch.feats,
+                t: &batch.t,
+                action: &batch.action,
+                reward: &batch.reward,
+                done: &batch.done,
+                o: c.o,
+                h,
+            },
+            self.cfg.gamma,
         )?;
-        self.theta = out[0].clone();
-        self.adam_m = out[1].clone();
-        self.adam_v = out[2].clone();
-        let loss = out[3][0];
-        self.step += 1.0;
-        if (self.step as usize) % self.cfg.target_sync == 0 {
-            self.theta_tgt = self.theta.clone();
+        if (self.state.step as usize) % self.cfg.target_sync == 0 {
+            self.state.sync_target();
         }
         Ok(loss)
     }
@@ -171,10 +170,11 @@ impl<'e> DqnTrainer<'e> {
         &mut self,
         mut progress: impl FnMut(usize, f64),
     ) -> anyhow::Result<TrainResult> {
-        let consts = self.engine.manifest.consts.clone();
-        let h = consts.train_horizon;
+        let consts = self.backend.manifest().consts.clone();
+        let h = self.horizon();
         let m = consts.n_edges;
         let o = consts.o;
+        anyhow::ensure!(h > 0, "dqn training horizon must be positive");
         let mut episode_rewards = Vec::with_capacity(self.cfg.episodes);
         let mut match_rate = Vec::with_capacity(self.cfg.episodes);
         let mut losses = Vec::new();
@@ -226,7 +226,7 @@ impl<'e> DqnTrainer<'e> {
                 });
                 // Alg.5 L12-15: gradient step every `train_every` slots
                 if self.replay.len() > o && t % self.cfg.train_every == 0 {
-                    losses.push(self.train_step()?);
+                    losses.push(self.train_step(h)?);
                 }
             }
             episode_rewards.push(total_r);
@@ -240,7 +240,7 @@ impl<'e> DqnTrainer<'e> {
         Ok(TrainResult {
             episode_rewards,
             losses,
-            theta: self.theta.clone(),
+            theta: self.state.theta.clone(),
             match_rate,
         })
     }

@@ -1,18 +1,28 @@
 //! Fig. 5 — the D³QN learning curve: average accumulated reward over a
 //! 50-episode window during Algorithm 5 training. Also saves the trained
 //! θ checkpoint consumed by the `drl` assigner (Figs. 6–7).
+//!
+//! Runs on any [`Backend`]: the native runtime needs no AOT artifacts
+//! (BPTT + Adam in `runtime/native/{dqn,adam}.rs`); a pjrt build replays
+//! the identical loop on the `dqn_train` artifact as a parity oracle.
 
 use crate::config::Config;
 use crate::drl::checkpoint::save_params;
 use crate::drl::{DqnTrainConfig, DqnTrainer, TrainResult};
-use crate::runtime::Engine;
+use crate::runtime::Backend;
 use crate::util::csv::CsvWriter;
 use crate::util::stats::moving_average;
 
 use super::common::{csv_path, default_checkpoint};
 
-pub fn run(engine: &Engine, cfg: &Config) -> anyhow::Result<TrainResult> {
-    let info = engine.manifest.model("fmnist")?;
+/// `horizon` overrides the episode length H (native backend only; `None`
+/// uses the backend's `consts.train_horizon`).
+pub fn run(
+    backend: &dyn Backend,
+    cfg: &Config,
+    horizon: Option<usize>,
+) -> anyhow::Result<TrainResult> {
+    let info = backend.manifest().model("fmnist")?;
     let mut sys = cfg.system.clone();
     sys.model_bits = (info.bytes * 8) as f64;
 
@@ -20,9 +30,11 @@ pub fn run(engine: &Engine, cfg: &Config) -> anyhow::Result<TrainResult> {
         episodes: cfg.drl_episodes,
         seed: cfg.seed,
         system: sys,
+        horizon,
         ..DqnTrainConfig::default()
     };
-    let mut trainer = DqnTrainer::new(engine, tcfg)?;
+    let mut trainer = DqnTrainer::new(backend, tcfg)?;
+    let h = trainer.horizon() as f64;
     let every = (cfg.drl_episodes / 20).max(1);
     let res = trainer.train(|ep, avg| {
         if ep % every == 0 {
@@ -48,10 +60,10 @@ pub fn run(engine: &Engine, cfg: &Config) -> anyhow::Result<TrainResult> {
     let ckpt = default_checkpoint(cfg);
     save_params(&ckpt, &res.theta)?;
     let final_avg = ma.last().cloned().unwrap_or(0.0);
-    let h = engine.manifest.consts.train_horizon as f64;
     println!(
-        "fig5: final avg reward {final_avg:.1} / {h:.0} \
+        "fig5 [{}]: final avg reward {final_avg:.1} / {h:.0} \
          (match rate {:.0}%; paper converges to ≈17/50 ≈ 67% match); θ → {}",
+        backend.name(),
         100.0 * (final_avg + h) / (2.0 * h),
         ckpt.display()
     );

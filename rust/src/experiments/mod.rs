@@ -4,11 +4,11 @@
 //!
 //! The figure drivers are thin views over the scenario engine
 //! (`crate::scenario`): they run a preset [`crate::scenario::ScenarioSpec`]
-//! and aggregate/format the results. `fig5` (D³QN training) drives the
-//! `dqn_train` artifact directly and needs the `pjrt` feature.
+//! and aggregate/format the results. `fig5` (D³QN training) runs
+//! Algorithm 5 through any [`crate::runtime::Backend`] — artifact-free on
+//! the native runtime since PR 4.
 
 pub mod common;
-#[cfg(feature = "pjrt")]
 pub mod fig5;
 pub mod fig6;
 pub mod fig7;

@@ -43,9 +43,13 @@ commands:
                              --baseline FILE  fail if the e2e speedup
                              regresses >25% vs the checked-in baseline
                              --out FILE  output path)
-  drl-train                 train the D3QN assigner (Algorithm 5; saves
-                            results/dqn_theta.bin) (--episodes --seed)
-                            [requires the pjrt feature]
+  drl-train                 train the D3QN assigner (Algorithm 5) on the
+                            native backend — no artifacts needed; saves
+                            results/dqn_theta.bin + the fig5 curve CSV
+                            (--episodes N  --seed N  --horizon H
+                             --dqn-hid N --dqn-fc N  tiny-net smoke knobs;
+                             --backend pjrt replays the AOT artifact path
+                             as a parity oracle)
   cluster                   run Algorithm 2 / Table II report
   assign                    compare assignment strategies (Fig. 6)
   exp <which>               paper experiments: fig3 fig4 fig5 fig6 fig7
@@ -169,11 +173,18 @@ fn cmd_train(args: &Args, cfg: &Config, backend: &dyn Backend) -> anyhow::Result
         )?),
     };
     let mut sched = reg.scheduler(&sched_key, &SchedEnv { seed: cfg.seed ^ 0x5c4ed })?;
+    // percell-training assigners draw deployments from these ranges: fix
+    // model_bits to the dataset model, like the trainer's own topology
+    // (HflTrainer::with_default_topology), so the HFEL reward oracle
+    // prices communication consistently
+    let mut assign_sys = cfg.system.clone();
+    assign_sys.model_bits = (backend.manifest().model(&dataset)?.bytes * 8) as f64;
     let env = AssignEnv {
         backend: Some(backend),
         default_ckpt: Some(ckpt),
         expect_edges: Some(trainer.topo.edges.len()),
         seed: cfg.seed,
+        system: Some(assign_sys),
     };
     let mut assigner = reg.assigner(&assign_key, &env)?;
 
@@ -336,7 +347,7 @@ fn cmd_exp(args: &Args, cfg: &Config, backend: &dyn Backend) -> anyhow::Result<(
             experiments::fig_sched::run(backend, cfg, "cifar")?;
         }
         "fig5" => {
-            run_fig5(cfg)?;
+            experiments::fig5::run(backend, cfg, None)?;
         }
         "fig6" => {
             experiments::fig6::run(backend, cfg)?;
@@ -351,9 +362,7 @@ fn cmd_exp(args: &Args, cfg: &Config, backend: &dyn Backend) -> anyhow::Result<(
         }
         "all" => {
             experiments::table2::run(backend, cfg)?;
-            if cfg!(feature = "pjrt") && cfg.backend == "pjrt" {
-                run_fig5(cfg)?;
-            }
+            experiments::fig5::run(backend, cfg, None)?;
             experiments::fig6::run(backend, cfg)?;
             for ds in cfg.datasets.clone() {
                 experiments::fig_sched::run(backend, cfg, &ds)?;
@@ -365,22 +374,57 @@ fn cmd_exp(args: &Args, cfg: &Config, backend: &dyn Backend) -> anyhow::Result<(
     Ok(())
 }
 
-/// Fig. 5 (Algorithm 5 D³QN training) drives the `dqn_train` artifact and
-/// exists only in pjrt builds.
-#[cfg(feature = "pjrt")]
-fn run_fig5(cfg: &Config) -> anyhow::Result<()> {
-    let engine = hfl::runtime::Engine::open(std::path::Path::new(&cfg.artifact_dir))?;
-    experiments::fig5::run(&engine, cfg)?;
+/// `hfl drl-train` — Algorithm 5 on the configured backend. The native
+/// path supports tiny-network smoke shapes (`--dqn-hid/--dqn-fc`, any
+/// `--horizon`); the pjrt path replays the AOT artifacts (fixed shapes)
+/// as a parity oracle.
+fn cmd_drl_train(args: &Args, cfg: &Config) -> anyhow::Result<()> {
+    let hid = args.get_usize("dqn-hid", 32)?;
+    let fc = args.get_usize("dqn-fc", 32)?;
+    let horizon = match args.get_usize("horizon", 0)? {
+        0 => None,
+        h => Some(h),
+    };
+    args.finish()?;
+    match cfg.backend.as_str() {
+        "native" => {
+            let backend = NativeBackend::with_dqn(cfg.system.n_edges, hid, fc);
+            experiments::fig5::run(&backend, cfg, horizon)?;
+        }
+        "pjrt" => {
+            #[cfg(feature = "pjrt")]
+            {
+                anyhow::ensure!(
+                    hid == 32 && fc == 32,
+                    "--dqn-hid/--dqn-fc are native-only (AOT artifacts fix the \
+                     network shape; re-run aot.py to change it)"
+                );
+                let engine =
+                    hfl::runtime::Engine::open(std::path::Path::new(&cfg.artifact_dir))?;
+                // fail fast: the lowered dqn_train artifact fixes H, and a
+                // mismatch would otherwise only surface after the replay
+                // warm-up (minutes of episodes deep)
+                if let Some(h) = horizon {
+                    let lowered = engine.manifest.consts.train_horizon;
+                    anyhow::ensure!(
+                        h == lowered,
+                        "--horizon {h}: the dqn_train artifact is lowered for \
+                         H={lowered} (use --backend native for other horizons)"
+                    );
+                }
+                experiments::fig5::run(&engine, cfg, horizon)?;
+            }
+            #[cfg(not(feature = "pjrt"))]
+            {
+                anyhow::bail!(
+                    "this binary was built without the pjrt feature; \
+                     rebuild with `--features pjrt` or use --backend native"
+                )
+            }
+        }
+        other => anyhow::bail!("unknown backend {other:?} (native|pjrt)"),
+    }
     Ok(())
-}
-
-#[cfg(not(feature = "pjrt"))]
-fn run_fig5(_cfg: &Config) -> anyhow::Result<()> {
-    anyhow::bail!(
-        "fig5 / drl-train need the dqn_train AOT artifact; \
-         rebuild with `--features pjrt` (DRL training on the native \
-         backend is a ROADMAP open item)"
-    )
 }
 
 fn main() -> anyhow::Result<()> {
@@ -408,14 +452,13 @@ fn main() -> anyhow::Result<()> {
     std::fs::create_dir_all(&cfg.out_dir).ok();
 
     // `sweep` builds its own (concrete, Sync) backend for the thread pool;
-    // `drl-train` opens the PJRT engine itself (run_fig5) — don't open a
+    // `drl-train` builds one sized by --dqn-hid/--dqn-fc — don't open a
     // second backend for either.
     if args.subcommand == "sweep" {
         return cmd_sweep(&args, &cfg);
     }
     if args.subcommand == "drl-train" {
-        args.finish()?;
-        return run_fig5(&cfg);
+        return cmd_drl_train(&args, &cfg);
     }
 
     let backend = open_backend(&cfg)?;

@@ -32,8 +32,10 @@ use crate::assignment::drl::DrlAssigner;
 use crate::assignment::geo::Geographic;
 use crate::assignment::hfel::Hfel;
 use crate::assignment::random::{RandomAssign, RoundRobin};
+use crate::drl::{DqnTrainConfig, DqnTrainer};
 use crate::runtime::Backend;
 use crate::scheduling::AuxModel;
+use crate::system::SystemParams;
 
 /// What a scheduler expects in `PolicyCtx::clusters` — drivers consult
 /// this to decide whether (and with which auxiliary model) to run
@@ -64,6 +66,10 @@ pub struct AssignEnv<'e> {
     pub expect_edges: Option<usize>,
     /// Seed of the policy's private RNG stream (per sweep cell).
     pub seed: u64,
+    /// Deployment parameter ranges (Table I) for policies that train at
+    /// construction time (`d3qn?train=percell` runs Algorithm 5 on random
+    /// deployments drawn from these). `None` disables such policies.
+    pub system: Option<SystemParams>,
 }
 
 pub type SchedFactory = fn(&PolicyKey, &SchedEnv) -> anyhow::Result<Box<dyn SchedulePolicy>>;
@@ -338,10 +344,24 @@ impl PolicyRegistry {
                     name: "d3qn",
                     aliases: &[("drl", "d3qn")],
                     summary: "one-shot D3QN inference, the paper's assigner (Fig. 6 latency win)",
-                    params: &[ParamSpec {
-                        key: "ckpt",
-                        help: "path to a dqn_theta.bin checkpoint (default: the sweep/config fallback, else a fresh untrained agent)",
-                    }],
+                    params: &[
+                        ParamSpec {
+                            key: "ckpt",
+                            help: "path to a dqn_theta.bin checkpoint (default: the sweep/config fallback, else a fresh untrained agent)",
+                        },
+                        ParamSpec {
+                            key: "train",
+                            help: "percell: train a fresh agent at construction (native Algorithm 5, seeded from the cell RNG stream)",
+                        },
+                        ParamSpec {
+                            key: "episodes",
+                            help: "training episodes for train=percell (default 10)",
+                        },
+                        ParamSpec {
+                            key: "train_h",
+                            help: "episode horizon H for train=percell deployments (default 12)",
+                        },
+                    ],
                     defaults: &[],
                     needs_backend: true,
                     factory: assign_d3qn,
@@ -449,20 +469,76 @@ fn assign_d3qn<'e>(
             b.manifest().consts.n_edges
         );
     }
-    let path = key.get_str("ckpt").map(PathBuf::from).or_else(|| env.default_ckpt.clone());
-    let inner = match path {
-        Some(p) => match DrlAssigner::from_checkpoint(b, &p) {
-            Ok(a) => a,
-            Err(e) => {
-                log::warn!(
-                    "no DRL checkpoint at {} ({e}); using untrained agent — \
-                     run `hfl drl-train` first for paper-faithful results",
-                    p.display()
-                );
-                DrlAssigner::fresh(b, env.seed)?
+    let inner = match key.get_str("train") {
+        Some("percell") => {
+            anyhow::ensure!(
+                key.get_str("ckpt").is_none(),
+                "{key}: ckpt and train=percell conflict (a per-cell agent is trained, not loaded)"
+            );
+            let sys = env.system.clone().ok_or_else(|| {
+                anyhow::anyhow!(
+                    "{key}: train=percell needs deployment system params in AssignEnv \
+                     (sweeps and `hfl train` provide them)"
+                )
+            })?;
+            let episodes = key.usize_or("episodes", 10)?;
+            let train_h = key.usize_or("train_h", 12)?;
+            anyhow::ensure!(
+                episodes > 0 && train_h > 0,
+                "{key}: episodes and train_h must be positive"
+            );
+            // gradient steps only start once the replay holds more than O
+            // transitions — a budget that can never cross it would hand
+            // back the random init silently labeled "trained"
+            let warmup = b.manifest().consts.o;
+            anyhow::ensure!(
+                episodes * train_h > warmup,
+                "{key}: episodes x train_h = {} transitions never crosses the \
+                 replay warm-up O={warmup} — no gradient step would run; \
+                 raise episodes/train_h (or use plain d3qn for a fresh agent)",
+                episodes * train_h
+            );
+            // deterministic per-cell training: every stochastic draw of
+            // Algorithm 5 descends from the cell's policy RNG stream seed
+            let tcfg = DqnTrainConfig {
+                episodes,
+                horizon: Some(train_h),
+                seed: env.seed,
+                system: sys,
+                ..DqnTrainConfig::default()
+            };
+            let mut trainer = DqnTrainer::new(b, tcfg)?;
+            let res = trainer.train(|_, _| {})?;
+            anyhow::ensure!(
+                !res.losses.is_empty(),
+                "{key}: training ran no gradient steps (replay warm-up O={warmup} \
+                 plus train_every never lined up) — raise episodes/train_h"
+            );
+            DrlAssigner::new(b, res.theta)
+        }
+        Some(other) => anyhow::bail!("{key}: unknown train mode {other:?} (supported: percell)"),
+        None => {
+            anyhow::ensure!(
+                key.get_str("episodes").is_none() && key.get_str("train_h").is_none(),
+                "{key}: episodes/train_h only apply with train=percell"
+            );
+            let path =
+                key.get_str("ckpt").map(PathBuf::from).or_else(|| env.default_ckpt.clone());
+            match path {
+                Some(p) => match DrlAssigner::from_checkpoint(b, &p) {
+                    Ok(a) => a,
+                    Err(e) => {
+                        log::warn!(
+                            "no DRL checkpoint at {} ({e}); using untrained agent — \
+                             run `hfl drl-train` first for paper-faithful results",
+                            p.display()
+                        );
+                        DrlAssigner::fresh(b, env.seed)?
+                    }
+                },
+                None => DrlAssigner::fresh(b, env.seed)?,
             }
-        },
-        None => DrlAssigner::fresh(b, env.seed)?,
+        }
     };
     Ok(Box::new(D3qnPolicy::new(inner, key.to_string())))
 }
@@ -549,8 +625,42 @@ mod tests {
     fn static_refuses_to_nest_itself() {
         let r = PolicyRegistry::global();
         let key = r.assign_key("static?base=static").unwrap();
-        let env = AssignEnv { backend: None, default_ckpt: None, expect_edges: None, seed: 0 };
+        let env = AssignEnv {
+            backend: None,
+            default_ckpt: None,
+            expect_edges: None,
+            seed: 0,
+            system: None,
+        };
         assert!(r.assigner(&key, &env).is_err());
+    }
+
+    #[test]
+    fn d3qn_train_params_resolve_and_validate() {
+        let r = PolicyRegistry::global();
+        // the drl alias accepts the training params and canonicalizes
+        let key = r.assign_key("drl?train=percell&episodes=2&train_h=6").unwrap();
+        assert_eq!(key.to_string(), "d3qn?episodes=2&train=percell&train_h=6");
+        // percell without system params in the env fails loudly
+        let backend = crate::runtime::NativeBackend::new();
+        let env = AssignEnv {
+            backend: Some(&backend),
+            default_ckpt: None,
+            expect_edges: None,
+            seed: 0,
+            system: None,
+        };
+        let err = r.assigner(&key, &env).unwrap_err().to_string();
+        assert!(err.contains("system params"), "{err}");
+        // episodes without train=percell is rejected
+        let orphan = r.assign_key("d3qn?episodes=3").unwrap();
+        assert!(r.assigner(&orphan, &env).is_err());
+        // unknown train mode is rejected
+        let bad = r.assign_key("d3qn?train=warp").unwrap();
+        assert!(r.assigner(&bad, &env).is_err());
+        // ckpt + percell conflict
+        let conflict = r.assign_key("d3qn?train=percell&ckpt=x.bin").unwrap();
+        assert!(r.assigner(&conflict, &env).is_err());
     }
 
     #[test]

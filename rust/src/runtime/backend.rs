@@ -31,6 +31,54 @@ pub struct BackendStats {
     pub scratch_bytes: u64,
 }
 
+/// A sampled replay minibatch in the flat layout shared by both runtimes
+/// (the same layout the `dqn_train` AOT artifact takes): `feats` is
+/// `o × h × F` episode feature matrices, the rest are per-transition
+/// `o`-vectors ([`crate::drl::ReplayBuffer::sample`] produces it).
+pub struct DqnBatch<'a> {
+    pub feats: &'a [f32],
+    /// Episode slot index of each transition.
+    pub t: &'a [i32],
+    pub action: &'a [i32],
+    pub reward: &'a [f32],
+    pub done: &'a [f32],
+    /// Minibatch size O.
+    pub o: usize,
+    /// Episode horizon H of every `feats` matrix.
+    pub h: usize,
+}
+
+/// Mutable optimizer state threaded through [`Backend::dqn_train_step`]:
+/// online/target parameters, Adam moments, and the completed-step count
+/// (the Adam bias-correction exponent of the NEXT step is `step + 1`).
+#[derive(Clone, Debug)]
+pub struct DqnTrainState {
+    pub theta: Vec<f32>,
+    pub theta_tgt: Vec<f32>,
+    pub adam_m: Vec<f32>,
+    pub adam_v: Vec<f32>,
+    pub step: u64,
+}
+
+impl DqnTrainState {
+    /// Fresh state: target net = online net, zero moments, step 0.
+    pub fn fresh(theta: Vec<f32>) -> DqnTrainState {
+        let n = theta.len();
+        DqnTrainState {
+            theta_tgt: theta.clone(),
+            adam_m: vec![0.0; n],
+            adam_v: vec![0.0; n],
+            step: 0,
+            theta,
+        }
+    }
+
+    /// Copy the online net into the target net (Algorithm 5's J-step sync).
+    pub fn sync_target(&mut self) {
+        self.theta_tgt.clone_from(&self.theta);
+    }
+}
+
 /// Input geometry `(channels, img)` of a model's samples, derived from the
 /// dataset registry (`data::SynthSpec`) so it cannot drift from the data
 /// plumbing; the IKC auxiliary model ξ is the one model without a dataset
@@ -91,6 +139,23 @@ pub trait Backend {
     /// devices (callers zero-pad features up to it). PJRT returns the
     /// smallest AOT-lowered horizon ≥ `h`; the native backend returns `h`.
     fn pick_horizon(&self, h: usize) -> anyhow::Result<usize>;
+
+    /// One Algorithm 5 training step: double-DQN TD loss on the minibatch
+    /// (eqs. 21–22) + one Adam update, applied to `state` in place;
+    /// returns the TD loss. The native backend runs the BPTT backward of
+    /// `runtime/native/dqn.rs` (any `batch.h`); PJRT dispatches the
+    /// `dqn_train` AOT artifact (`batch.h`/`batch.o` must match the
+    /// lowered `consts`). Target-net syncing stays with the caller
+    /// ([`DqnTrainState::sync_target`]).
+    fn dqn_train_step(
+        &self,
+        state: &mut DqnTrainState,
+        batch: &DqnBatch,
+        gamma: f32,
+    ) -> anyhow::Result<f32> {
+        let _ = (state, batch, gamma);
+        anyhow::bail!("backend {:?} does not support D³QN training", self.name())
+    }
 
     /// Whether [`Backend::local_round`] accepts fewer than `consts.db`
     /// device slots and [`Backend::forward`] fewer than `consts.eb`

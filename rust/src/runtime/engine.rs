@@ -11,7 +11,7 @@ use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::time::Instant;
 
-use super::backend::{model_geometry, Backend, BackendStats};
+use super::backend::{model_geometry, Backend, BackendStats, DqnBatch, DqnTrainState};
 use super::manifest::Manifest;
 
 /// A typed input argument for an artifact call.
@@ -264,6 +264,54 @@ impl Backend for Engine {
         hs.into_iter().find(|&x| x >= h).ok_or_else(|| {
             anyhow::anyhow!("no dqn_q_all artifact for H≥{h}; re-run aot.py with --horizons")
         })
+    }
+
+    /// The AOT `dqn_train` artifact as a train step — kept as the parity
+    /// oracle for the native BPTT implementation. Batch shapes are baked
+    /// into the lowered HLO, so `batch.o`/`batch.h` must match `consts`.
+    fn dqn_train_step(
+        &self,
+        state: &mut DqnTrainState,
+        batch: &DqnBatch,
+        gamma: f32,
+    ) -> anyhow::Result<f32> {
+        let c = &self.manifest.consts;
+        anyhow::ensure!(
+            batch.o == c.o && batch.h == c.train_horizon,
+            "dqn_train is lowered for O={} H={}, got O={} H={} \
+             (use the native backend for other shapes)",
+            c.o,
+            c.train_horizon,
+            batch.o,
+            batch.h
+        );
+        let p = state.theta.len() as i64;
+        let out = self.run(
+            "dqn_train",
+            &[
+                Arg::F32(&state.theta, &[p]),
+                Arg::F32(&state.theta_tgt, &[p]),
+                Arg::F32(&state.adam_m, &[p]),
+                Arg::F32(&state.adam_v, &[p]),
+                Arg::ScalarF32(state.step as f32),
+                Arg::F32(batch.feats, &[batch.o as i64, batch.h as i64, c.feat as i64]),
+                Arg::I32(batch.t, &[batch.o as i64]),
+                Arg::I32(batch.action, &[batch.o as i64]),
+                Arg::F32(batch.reward, &[batch.o as i64]),
+                Arg::F32(batch.done, &[batch.o as i64]),
+                Arg::ScalarF32(gamma),
+            ],
+        )?;
+        let mut it = out.into_iter();
+        state.theta = it.next().ok_or_else(|| anyhow::anyhow!("dqn_train: missing theta"))?;
+        state.adam_m = it.next().ok_or_else(|| anyhow::anyhow!("dqn_train: missing m"))?;
+        state.adam_v = it.next().ok_or_else(|| anyhow::anyhow!("dqn_train: missing v"))?;
+        let loss = it
+            .next()
+            .and_then(|l| l.first().copied())
+            .ok_or_else(|| anyhow::anyhow!("dqn_train: missing loss"))?;
+        state.step += 1;
+        Ok(loss)
     }
 
     fn stats(&self) -> BackendStats {

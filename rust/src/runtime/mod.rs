@@ -11,7 +11,7 @@ pub mod engine;
 pub mod manifest;
 pub mod native;
 
-pub use backend::{model_geometry, Backend, BackendStats};
+pub use backend::{model_geometry, Backend, BackendStats, DqnBatch, DqnTrainState};
 #[cfg(feature = "pjrt")]
 pub use engine::{Arg, Engine, EngineStats};
 pub use manifest::{Consts, Leaf, Manifest, ModelInfo};

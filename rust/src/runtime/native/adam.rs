@@ -1,0 +1,93 @@
+//! Adam on flat f32 parameter vectors — the native optimizer behind
+//! [`super::super::backend::Backend::dqn_train_step`].
+//!
+//! Semantics mirror `make_train_step` in `python/compile/dqn.py` exactly:
+//! first/second-moment EMAs, bias correction by the 1-based step count,
+//! update `θ ← θ − lr·m̂ /(√v̂ + ε)`. All arithmetic is f32 (the bias
+//! corrections use `powi`, which the numpy mirror transcribes
+//! one-for-one), so a native step is reproducible bit-for-bit from
+//! `(θ, m, v, grad, t)` alone — the property the determinism tests and
+//! the byte-identical-checkpoint CI diff pin.
+
+/// Adam hyper-parameters. The defaults are the `make_train_step` defaults
+/// in `python/compile/dqn.py` (and the paper's §V optimizer).
+#[derive(Clone, Copy, Debug)]
+pub struct Adam {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+}
+
+impl Default for Adam {
+    fn default() -> Self {
+        Adam { lr: 1e-3, beta1: 0.9, beta2: 0.999, eps: 1e-8 }
+    }
+}
+
+impl Adam {
+    /// One in-place update. `t` is the 1-based step count (the python
+    /// artifact receives the 0-based count and increments internally;
+    /// callers here pass the already-incremented value).
+    pub fn step(&self, theta: &mut [f32], grad: &[f32], m: &mut [f32], v: &mut [f32], t: u64) {
+        assert_eq!(theta.len(), grad.len());
+        assert_eq!(theta.len(), m.len());
+        assert_eq!(theta.len(), v.len());
+        assert!(t >= 1, "Adam step count is 1-based");
+        let bc1 = 1.0 - self.beta1.powi(t.min(i32::MAX as u64) as i32);
+        let bc2 = 1.0 - self.beta2.powi(t.min(i32::MAX as u64) as i32);
+        for i in 0..theta.len() {
+            let g = grad[i];
+            m[i] = self.beta1 * m[i] + (1.0 - self.beta1) * g;
+            v[i] = self.beta2 * v[i] + (1.0 - self.beta2) * g * g;
+            let mhat = m[i] / bc1;
+            let vhat = v[i] / bc2;
+            theta[i] -= self.lr * mhat / (vhat.sqrt() + self.eps);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_step_moves_against_the_gradient() {
+        let a = Adam::default();
+        let mut theta = vec![1.0f32, -1.0, 0.5];
+        let grad = vec![2.0f32, -3.0, 0.0];
+        let mut m = vec![0.0f32; 3];
+        let mut v = vec![0.0f32; 3];
+        a.step(&mut theta, &grad, &mut m, &mut v, 1);
+        // with zero moments, the bias-corrected first step is ≈ lr·sign(g)
+        assert!((theta[0] - (1.0 - 1e-3)).abs() < 1e-6, "{}", theta[0]);
+        assert!((theta[1] - (-1.0 + 1e-3)).abs() < 1e-6, "{}", theta[1]);
+        assert_eq!(theta[2], 0.5, "zero gradient must not move the weight");
+    }
+
+    #[test]
+    fn repeated_steps_are_deterministic() {
+        let a = Adam::default();
+        let run = || {
+            let mut theta = vec![0.3f32; 8];
+            let mut m = vec![0.0f32; 8];
+            let mut v = vec![0.0f32; 8];
+            for t in 1..=20u64 {
+                let grad: Vec<f32> = (0..8).map(|i| ((i as f32) - 3.5) * 0.1).collect();
+                a.step(&mut theta, &grad, &mut m, &mut v, t);
+            }
+            (theta, m, v)
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_step_count_is_rejected() {
+        let a = Adam::default();
+        let mut theta = vec![0.0f32];
+        let mut m = vec![0.0f32];
+        let mut v = vec![0.0f32];
+        a.step(&mut theta, &[0.0], &mut m, &mut v, 0);
+    }
+}

@@ -1,6 +1,7 @@
-//! Native D³QN inference — the Rust port of `qvalues_all` in
-//! `python/compile/dqn.py` (forward only; training the agent still runs on
-//! the PJRT artifacts, see ROADMAP "Open items").
+//! Native D³QN — the Rust port of `python/compile/dqn.py`, forward AND
+//! backward: `qvalues_all` inference plus the BPTT gradient of the
+//! double-DQN TD loss, which together make Algorithm 5 training
+//! artifact-free (see [`super::super::backend::Backend::dqn_train_step`]).
 //!
 //! The state (eq. 25) is position-indexed: one forward LSTM scan yields the
 //! prefix hidden for every split t, one scan over the reversed sequence
@@ -11,12 +12,26 @@
 //! heads (`[h_f;h_b] @ fc_w`, advantage/value heads) are batched through
 //! the blocked GEMM in [`super::gemm`]; only the recurrent `h @ Wh` matvec
 //! stays per-step. Scratch comes from a [`ScratchArena`].
+//!
+//! Training path: [`NativeDqn::td_grad_arena`] computes the TD loss of a
+//! replay minibatch and its analytic gradient on every leaf. Because the
+//! double-DQN target (eq. 22) is stop-gradiented — the argmax is
+//! non-differentiable and the value comes from the target net — the loss
+//! gradient enters each episode's Q-matrix at exactly one `(t, a)` entry;
+//! the backward then walks the dueling heads, the shared trunk, and BPTT
+//! through both scans of the shared-parameter cell φ (both directions
+//! accumulate into the same `lstm_*` leaves). Weight gradients are batched
+//! over timesteps with [`gemm::gemm_tn`]/[`gemm::gemm_nt`]; only the
+//! recurrent `dz @ Whᵀ` matvec stays per-step, mirroring the forward. The
+//! finite-difference harness `rust/tests/dqn_grad_parity.rs` and the numpy
+//! mirror `python/tests/test_dqn_train_mirror.py` pin the math.
 
 use super::gemm::{self, Epilogue};
 use super::ops::sigmoid;
 use super::push_leaf;
 use super::scratch::ScratchArena;
 use crate::runtime::manifest::ModelInfo;
+use crate::util::stats::argmax_f32;
 
 #[derive(Clone, Debug)]
 pub struct NativeDqn {
@@ -36,6 +51,26 @@ pub struct NativeDqn {
     v_b: usize,
     a_w: usize,
     a_b: usize,
+}
+
+/// Per-episode forward activations cached for BPTT. All buffers except the
+/// returned `q` are arena-borrowed; release with [`NativeDqn::release_cache`].
+struct FwdCache {
+    /// `(h, 4·hid)` post-activation gates `[i, f, g, o]`, forward scan.
+    gates_f: Vec<f32>,
+    /// `(h, hid)` cell states, forward scan.
+    cs_f: Vec<f32>,
+    /// `(h, hid)` hiddens, forward scan (prefix encodings).
+    hs_f: Vec<f32>,
+    gates_b: Vec<f32>,
+    cs_b: Vec<f32>,
+    hs_b: Vec<f32>,
+    /// `(h, 2·hid)` concatenated `[h_f ; h_b]`.
+    hcat: Vec<f32>,
+    /// `(h, fc)` post-ReLU trunk.
+    trunks: Vec<f32>,
+    /// `(h, M)` dueling Q-matrix (owned, not arena-pooled).
+    q: Vec<f32>,
 }
 
 impl NativeDqn {
@@ -64,7 +99,9 @@ impl NativeDqn {
     }
 
     /// One shared-parameter LSTM step (gate order [i, f, g, o]) with the
-    /// input projection `x@Wi + b` already precomputed into `xw_t`.
+    /// input projection `x@Wi + b` already precomputed into `xw_t`. On
+    /// return `gates` holds the POST-activation gate values (the BPTT
+    /// backward reads them); `h`/`c` are updated in place.
     fn lstm_step_pre(&self, theta: &[f32], xw_t: &[f32], h: &mut [f32], c: &mut [f32], gates: &mut [f32]) {
         let hid = self.hid;
         let wh = &theta[self.wh..self.wh + hid * 4 * hid];
@@ -85,37 +122,16 @@ impl NativeDqn {
             let o = sigmoid(gates[3 * hid + u]);
             c[u] = f * c[u] + i * g;
             h[u] = o * c[u].tanh();
+            gates[u] = i;
+            gates[hid + u] = f;
+            gates[2 * hid + u] = g;
+            gates[3 * hid + u] = o;
         }
     }
 
-    /// Q-values for every split position of one episode: `feats` is a
-    /// row-major `(h, F)` matrix, the result a row-major `(h, M)` matrix.
-    pub fn qvalues_all(&self, theta: &[f32], feats: &[f32], h: usize) -> anyhow::Result<Vec<f32>> {
-        let mut arena = ScratchArena::new();
-        self.qvalues_all_arena(theta, feats, h, &mut arena)
-    }
-
-    /// [`NativeDqn::qvalues_all`] with caller-owned scratch.
-    pub fn qvalues_all_arena(
-        &self,
-        theta: &[f32],
-        feats: &[f32],
-        h: usize,
-        arena: &mut ScratchArena,
-    ) -> anyhow::Result<Vec<f32>> {
-        anyhow::ensure!(
-            theta.len() == self.info.params,
-            "dqn theta has {} params, expected {}",
-            theta.len(),
-            self.info.params
-        );
-        anyhow::ensure!(
-            feats.len() == h * self.feat,
-            "episode features have {} values, expected {}x{}",
-            feats.len(),
-            h,
-            self.feat
-        );
+    /// Full forward with every BPTT-relevant activation cached. The Q
+    /// result (`cache.q`) is bit-identical to [`NativeDqn::qvalues_all`].
+    fn forward_cached(&self, theta: &[f32], feats: &[f32], h: usize, arena: &mut ScratchArena) -> FwdCache {
         let hid = self.hid;
 
         // input projection for every timestep in one blocked GEMM
@@ -132,25 +148,41 @@ impl NativeDqn {
             &mut xw,
         );
 
-        let mut gates = arena.take_f32(4 * hid);
         let mut hh = arena.take_f32(hid);
         let mut cc = arena.take_f32(hid);
 
         // prefix hiddens: hs_f[t] encodes χ_1..χ_{t+1}
+        let mut gates_f = arena.take_f32(h * 4 * hid);
+        let mut cs_f = arena.take_f32(h * hid);
         let mut hs_f = arena.take_f32(h * hid);
         for t in 0..h {
-            self.lstm_step_pre(theta, &xw[t * 4 * hid..(t + 1) * 4 * hid], &mut hh, &mut cc, &mut gates);
+            self.lstm_step_pre(
+                theta,
+                &xw[t * 4 * hid..(t + 1) * 4 * hid],
+                &mut hh,
+                &mut cc,
+                &mut gates_f[t * 4 * hid..(t + 1) * 4 * hid],
+            );
             hs_f[t * hid..(t + 1) * hid].copy_from_slice(&hh);
+            cs_f[t * hid..(t + 1) * hid].copy_from_slice(&cc);
         }
         // suffix hiddens: hs_b[t] encodes χ_{t+1}..χ_H (same shared cell φ)
+        let mut gates_b = arena.take_f32(h * 4 * hid);
+        let mut cs_b = arena.take_f32(h * hid);
         let mut hs_b = arena.take_f32(h * hid);
         hh.fill(0.0);
         cc.fill(0.0);
         for t in (0..h).rev() {
-            self.lstm_step_pre(theta, &xw[t * 4 * hid..(t + 1) * 4 * hid], &mut hh, &mut cc, &mut gates);
+            self.lstm_step_pre(
+                theta,
+                &xw[t * 4 * hid..(t + 1) * 4 * hid],
+                &mut hh,
+                &mut cc,
+                &mut gates_b[t * 4 * hid..(t + 1) * 4 * hid],
+            );
             hs_b[t * hid..(t + 1) * hid].copy_from_slice(&hh);
+            cs_b[t * hid..(t + 1) * hid].copy_from_slice(&cc);
         }
-        arena.put_f32(gates);
         arena.put_f32(hh);
         arena.put_f32(cc);
         arena.put_f32(xw);
@@ -169,8 +201,6 @@ impl NativeDqn {
             hcat[t * 2 * hid + hid..(t + 1) * 2 * hid]
                 .copy_from_slice(&hs_b[t * hid..(t + 1) * hid]);
         }
-        arena.put_f32(hs_f);
-        arena.put_f32(hs_b);
         let mut trunks = arena.take_f32(h * self.fc);
         gemm::gemm_nn(
             &hcat,
@@ -181,7 +211,6 @@ impl NativeDqn {
             &Epilogue::BiasCol { bias: fc_b, relu: true },
             &mut trunks,
         );
-        arena.put_f32(hcat);
 
         // dueling combination (eq. 20): advantages via GEMM, value per t
         let m = self.n_edges;
@@ -207,8 +236,436 @@ impl NativeDqn {
                 *qv = v + *qv - a_mean;
             }
         }
-        arena.put_f32(trunks);
+        FwdCache { gates_f, cs_f, hs_f, gates_b, cs_b, hs_b, hcat, trunks, q }
+    }
+
+    /// Return a cache's arena-borrowed buffers to the pool.
+    fn release_cache(&self, cache: FwdCache, arena: &mut ScratchArena) {
+        arena.put_f32(cache.gates_f);
+        arena.put_f32(cache.cs_f);
+        arena.put_f32(cache.hs_f);
+        arena.put_f32(cache.gates_b);
+        arena.put_f32(cache.cs_b);
+        arena.put_f32(cache.hs_b);
+        arena.put_f32(cache.hcat);
+        arena.put_f32(cache.trunks);
+    }
+
+    /// Q-values for every split position of one episode: `feats` is a
+    /// row-major `(h, F)` matrix, the result a row-major `(h, M)` matrix.
+    pub fn qvalues_all(&self, theta: &[f32], feats: &[f32], h: usize) -> anyhow::Result<Vec<f32>> {
+        let mut arena = ScratchArena::new();
+        self.qvalues_all_arena(theta, feats, h, &mut arena)
+    }
+
+    /// [`NativeDqn::qvalues_all`] with caller-owned scratch.
+    ///
+    /// Shares [`NativeDqn::forward_cached`] with the training path — one
+    /// forward implementation, mirrored once in python — at the cost of
+    /// writing the BPTT activation caches (≈10·h·hid floats) that pure
+    /// inference discards; against the recurrent matvec (h·4·hid² MACs)
+    /// this is minor, and warm arenas make it allocation-free.
+    pub fn qvalues_all_arena(
+        &self,
+        theta: &[f32],
+        feats: &[f32],
+        h: usize,
+        arena: &mut ScratchArena,
+    ) -> anyhow::Result<Vec<f32>> {
+        self.check_shapes(theta, feats, h)?;
+        let FwdCache { gates_f, cs_f, hs_f, gates_b, cs_b, hs_b, hcat, trunks, q } =
+            self.forward_cached(theta, feats, h, arena);
+        for buf in [gates_f, cs_f, hs_f, gates_b, cs_b, hs_b, hcat, trunks] {
+            arena.put_f32(buf);
+        }
         Ok(q)
+    }
+
+    fn check_shapes(&self, theta: &[f32], feats: &[f32], h: usize) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            theta.len() == self.info.params,
+            "dqn theta has {} params, expected {}",
+            theta.len(),
+            self.info.params
+        );
+        anyhow::ensure!(
+            feats.len() == h * self.feat,
+            "episode features have {} values, expected {}x{}",
+            feats.len(),
+            h,
+            self.feat
+        );
+        Ok(())
+    }
+
+    /// TD loss of one replay minibatch under the double-DQN target
+    /// (eqs. 21–22), forward only — the probe the finite-difference tests
+    /// differentiate numerically. Flat layouts match the AOT artifact:
+    /// `feats` is `(o, h, F)`, the rest `(o,)`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn td_loss(
+        &self,
+        theta: &[f32],
+        theta_tgt: &[f32],
+        feats: &[f32],
+        ts: &[i32],
+        actions: &[i32],
+        rewards: &[f32],
+        dones: &[f32],
+        h: usize,
+        gamma: f32,
+    ) -> anyhow::Result<f32> {
+        let mut arena = ScratchArena::new();
+        let o = self.check_batch(theta, theta_tgt, feats, ts, actions, rewards, dones, h)?;
+        let m = self.n_edges;
+        let mut loss = 0.0f64;
+        for r in 0..o {
+            let ef = &feats[r * h * self.feat..(r + 1) * h * self.feat];
+            let q_on = self.qvalues_all_arena(theta, ef, h, &mut arena)?;
+            let q_tg = self.qvalues_all_arena(theta_tgt, ef, h, &mut arena)?;
+            let t = ts[r] as usize;
+            let a = actions[r] as usize;
+            let t_next = (t + 1).min(h - 1);
+            let a_star = argmax_f32(&q_on[t_next * m..(t_next + 1) * m]).expect("m > 0");
+            let target = rewards[r] + gamma * (1.0 - dones[r]) * q_tg[t_next * m + a_star];
+            let delta = target - q_on[t * m + a];
+            loss += delta as f64 * delta as f64;
+        }
+        Ok((loss / o as f64) as f32)
+    }
+
+    /// TD loss and its analytic gradient w.r.t. `theta` (same leaf layout).
+    /// The gradient of [`NativeDqn::td_loss`]: the target is treated as a
+    /// constant (double-DQN stop-gradient), so per episode the loss
+    /// gradient enters Q at the single `(t, a)` replay entry.
+    #[allow(clippy::too_many_arguments)]
+    pub fn td_grad(
+        &self,
+        theta: &[f32],
+        theta_tgt: &[f32],
+        feats: &[f32],
+        ts: &[i32],
+        actions: &[i32],
+        rewards: &[f32],
+        dones: &[f32],
+        h: usize,
+        gamma: f32,
+    ) -> anyhow::Result<(f32, Vec<f32>)> {
+        let mut arena = ScratchArena::new();
+        self.td_grad_arena(theta, theta_tgt, feats, ts, actions, rewards, dones, h, gamma, &mut arena)
+    }
+
+    /// [`NativeDqn::td_grad`] with caller-owned scratch (the hot path of
+    /// the native `dqn_train_step`).
+    #[allow(clippy::too_many_arguments)]
+    pub fn td_grad_arena(
+        &self,
+        theta: &[f32],
+        theta_tgt: &[f32],
+        feats: &[f32],
+        ts: &[i32],
+        actions: &[i32],
+        rewards: &[f32],
+        dones: &[f32],
+        h: usize,
+        gamma: f32,
+        arena: &mut ScratchArena,
+    ) -> anyhow::Result<(f32, Vec<f32>)> {
+        let o = self.check_batch(theta, theta_tgt, feats, ts, actions, rewards, dones, h)?;
+        let m = self.n_edges;
+        let mut grad = vec![0.0f32; self.info.params];
+        let mut loss = 0.0f64;
+        let mut dq = arena.take_f32(h * m);
+        for r in 0..o {
+            let ef = &feats[r * h * self.feat..(r + 1) * h * self.feat];
+            let cache = self.forward_cached(theta, ef, h, arena);
+            let q_tg = self.qvalues_all_arena(theta_tgt, ef, h, arena)?;
+            let t = ts[r] as usize;
+            let a = actions[r] as usize;
+            let t_next = (t + 1).min(h - 1);
+            // double DQN (eq. 22): argmax under the online net, value
+            // under the target net; the target is a constant for BPTT
+            let a_star = argmax_f32(&cache.q[t_next * m..(t_next + 1) * m]).expect("m > 0");
+            let target = rewards[r] + gamma * (1.0 - dones[r]) * q_tg[t_next * m + a_star];
+            let delta = target - cache.q[t * m + a];
+            loss += delta as f64 * delta as f64;
+            // dL/dQ of L = mean_r (target_r − Q[t_r, a_r])²
+            dq.fill(0.0);
+            dq[t * m + a] = -2.0 * delta / o as f32;
+            self.backward_episode(theta, ef, h, &cache, &dq, &mut grad, arena);
+            self.release_cache(cache, arena);
+        }
+        arena.put_f32(dq);
+        Ok(((loss / o as f64) as f32, grad))
+    }
+
+    /// Validate a flat minibatch, returning O.
+    #[allow(clippy::too_many_arguments)]
+    fn check_batch(
+        &self,
+        theta: &[f32],
+        theta_tgt: &[f32],
+        feats: &[f32],
+        ts: &[i32],
+        actions: &[i32],
+        rewards: &[f32],
+        dones: &[f32],
+        h: usize,
+    ) -> anyhow::Result<usize> {
+        let o = ts.len();
+        anyhow::ensure!(o > 0 && h > 0, "empty dqn train batch (o={o}, h={h})");
+        anyhow::ensure!(
+            theta.len() == self.info.params && theta_tgt.len() == self.info.params,
+            "dqn train: theta/theta_tgt have {}/{} params, expected {}",
+            theta.len(),
+            theta_tgt.len(),
+            self.info.params
+        );
+        anyhow::ensure!(
+            actions.len() == o && rewards.len() == o && dones.len() == o,
+            "dqn train: batch field lengths differ ({o}/{}/{}/{})",
+            actions.len(),
+            rewards.len(),
+            dones.len()
+        );
+        anyhow::ensure!(
+            feats.len() == o * h * self.feat,
+            "dqn train: feats length {} != {o}x{h}x{}",
+            feats.len(),
+            self.feat
+        );
+        for r in 0..o {
+            let t = ts[r];
+            let a = actions[r];
+            anyhow::ensure!(
+                t >= 0 && (t as usize) < h,
+                "dqn train: slot index t={t} outside episode horizon {h}"
+            );
+            anyhow::ensure!(
+                a >= 0 && (a as usize) < self.n_edges,
+                "dqn train: action {a} outside edge set M={}",
+                self.n_edges
+            );
+        }
+        Ok(o)
+    }
+
+    /// Accumulate `dL/dθ` of one episode into `grad`, given the cached
+    /// forward and `dq = dL/dQ` (`h × M`). BPTT runs anti-scan-order per
+    /// direction; both directions accumulate into the shared φ leaves.
+    #[allow(clippy::too_many_arguments)]
+    fn backward_episode(
+        &self,
+        theta: &[f32],
+        feats: &[f32],
+        h: usize,
+        cache: &FwdCache,
+        dq: &[f32],
+        grad: &mut [f32],
+        arena: &mut ScratchArena,
+    ) {
+        let hid = self.hid;
+        let fc = self.fc;
+        let m = self.n_edges;
+        let v_w = &theta[self.v_w..self.v_w + fc];
+        let fc_w = &theta[self.fc_w..self.fc_w + 2 * hid * fc];
+        let a_w = &theta[self.a_w..self.a_w + fc * m];
+        let wh = &theta[self.wh..self.wh + hid * 4 * hid];
+
+        // dueling combination (eq. 20): q = v + a − mean(a)
+        //   dV[t] = Σ_j dQ[t,j];  dA[t,j] = dQ[t,j] − dV[t]/M
+        let mut dv = arena.take_f32(h);
+        let mut da = arena.take_f32(h * m);
+        for t in 0..h {
+            let row = &dq[t * m..(t + 1) * m];
+            let s: f32 = row.iter().sum();
+            dv[t] = s;
+            let mean = s / m as f32;
+            for j in 0..m {
+                da[t * m + j] = row[j] - mean;
+            }
+        }
+
+        // head grads: d a_w += trunksᵀ·dA, d v_w += trunksᵀ·dV, biases sum
+        gemm::gemm_tn(&cache.trunks, &da, h, fc, m, true, &mut grad[self.a_w..self.a_w + fc * m]);
+        for t in 0..h {
+            for j in 0..m {
+                grad[self.a_b + j] += da[t * m + j];
+            }
+            grad[self.v_b] += dv[t];
+            let trunk = &cache.trunks[t * fc..(t + 1) * fc];
+            let gvw = &mut grad[self.v_w..self.v_w + fc];
+            for (gv, &tv) in gvw.iter_mut().zip(trunk) {
+                *gv += dv[t] * tv;
+            }
+        }
+
+        // d trunk = dA·a_wᵀ + dV⊗v_w, masked by the trunk ReLU
+        let mut dtrunk = arena.take_f32(h * fc);
+        gemm::gemm_nt(&da, a_w, h, m, fc, false, &mut dtrunk);
+        for t in 0..h {
+            let row = &mut dtrunk[t * fc..(t + 1) * fc];
+            let trunk = &cache.trunks[t * fc..(t + 1) * fc];
+            for c in 0..fc {
+                row[c] += dv[t] * v_w[c];
+                if trunk[c] <= 0.0 {
+                    row[c] = 0.0;
+                }
+            }
+        }
+        arena.put_f32(dv);
+        arena.put_f32(da);
+
+        // trunk layer: d fc_w += hcatᵀ·dpre, d hcat = dpre·fc_wᵀ
+        gemm::gemm_tn(
+            &cache.hcat,
+            &dtrunk,
+            h,
+            2 * hid,
+            fc,
+            true,
+            &mut grad[self.fc_w..self.fc_w + 2 * hid * fc],
+        );
+        for t in 0..h {
+            for c in 0..fc {
+                grad[self.fc_b + c] += dtrunk[t * fc + c];
+            }
+        }
+        let mut dhcat = arena.take_f32(h * 2 * hid);
+        gemm::gemm_nt(&dtrunk, fc_w, h, fc, 2 * hid, false, &mut dhcat);
+        arena.put_f32(dtrunk);
+
+        // BPTT, forward scan (prefix direction): anti-scan order t = h−1..0
+        let mut dz_f = arena.take_f32(h * 4 * hid);
+        let mut dh = arena.take_f32(hid);
+        let mut dc = arena.take_f32(hid);
+        for t in (0..h).rev() {
+            for u in 0..hid {
+                dh[u] += dhcat[t * 2 * hid + u];
+            }
+            self.lstm_step_bwd(
+                &cache.gates_f[t * 4 * hid..(t + 1) * 4 * hid],
+                &cache.cs_f[t * hid..(t + 1) * hid],
+                if t > 0 { Some(&cache.cs_f[(t - 1) * hid..t * hid]) } else { None },
+                wh,
+                &mut dh,
+                &mut dc,
+                &mut dz_f[t * 4 * hid..(t + 1) * 4 * hid],
+            );
+        }
+        // dWh += Σ_t h_prev(t) ⊗ dz(t);  h_prev(t) = hs_f[t−1] (0 at t=0)
+        if h > 1 {
+            gemm::gemm_tn(
+                &cache.hs_f[..(h - 1) * hid],
+                &dz_f[4 * hid..],
+                h - 1,
+                hid,
+                4 * hid,
+                true,
+                &mut grad[self.wh..self.wh + hid * 4 * hid],
+            );
+        }
+
+        // BPTT, reverse scan (suffix direction): the scan consumed
+        // timesteps h−1..0, so its anti-scan order is t = 0..h−1 and the
+        // "previous" state of timestep t is the one at t+1
+        let mut dz_b = arena.take_f32(h * 4 * hid);
+        dh.fill(0.0);
+        dc.fill(0.0);
+        for t in 0..h {
+            for u in 0..hid {
+                dh[u] += dhcat[t * 2 * hid + hid + u];
+            }
+            self.lstm_step_bwd(
+                &cache.gates_b[t * 4 * hid..(t + 1) * 4 * hid],
+                &cache.cs_b[t * hid..(t + 1) * hid],
+                if t + 1 < h { Some(&cache.cs_b[(t + 1) * hid..(t + 2) * hid]) } else { None },
+                wh,
+                &mut dh,
+                &mut dc,
+                &mut dz_b[t * 4 * hid..(t + 1) * 4 * hid],
+            );
+        }
+        if h > 1 {
+            gemm::gemm_tn(
+                &cache.hs_b[hid..],
+                &dz_b[..(h - 1) * 4 * hid],
+                h - 1,
+                hid,
+                4 * hid,
+                true,
+                &mut grad[self.wh..self.wh + hid * 4 * hid],
+            );
+        }
+        arena.put_f32(dhcat);
+        arena.put_f32(dh);
+        arena.put_f32(dc);
+
+        // shared input projection: dWi += featsᵀ·(dz_f + dz_b), db likewise.
+        // Both scans' gate grads are summed first (the dWh GEMMs above are
+        // done with the separate buffers) so the feats GEMM runs once.
+        for (zf, &zb) in dz_f.iter_mut().zip(dz_b.iter()) {
+            *zf += zb;
+        }
+        arena.put_f32(dz_b);
+        gemm::gemm_tn(
+            feats,
+            &dz_f,
+            h,
+            self.feat,
+            4 * hid,
+            true,
+            &mut grad[self.wi..self.wi + self.feat * 4 * hid],
+        );
+        for t in 0..h {
+            for g in 0..4 * hid {
+                grad[self.b + g] += dz_f[t * 4 * hid + g];
+            }
+        }
+        arena.put_f32(dz_f);
+    }
+
+    /// One LSTM cell backward step. Inputs: post-activation `gates`
+    /// `[i,f,g,o]`, cell state `c`, previous cell state (`None` ⇒ zeros),
+    /// the recurrent weight `wh`. `dh`/`dc` carry the downstream hidden/
+    /// cell gradients in and the upstream (previous-step) gradients out;
+    /// `dz` receives the pre-activation gate gradients.
+    #[allow(clippy::too_many_arguments)]
+    fn lstm_step_bwd(
+        &self,
+        gates: &[f32],
+        c: &[f32],
+        c_prev: Option<&[f32]>,
+        wh: &[f32],
+        dh: &mut [f32],
+        dc: &mut [f32],
+        dz: &mut [f32],
+    ) {
+        let hid = self.hid;
+        for u in 0..hid {
+            let i = gates[u];
+            let f = gates[hid + u];
+            let g = gates[2 * hid + u];
+            let o = gates[3 * hid + u];
+            let tc = c[u].tanh();
+            let cp = c_prev.map_or(0.0, |p| p[u]);
+            let dcu = dc[u] + dh[u] * o * (1.0 - tc * tc);
+            dz[3 * hid + u] = dh[u] * tc * o * (1.0 - o);
+            dz[hid + u] = dcu * cp * f * (1.0 - f);
+            dz[u] = dcu * g * i * (1.0 - i);
+            dz[2 * hid + u] = dcu * i * (1.0 - g * g);
+            dc[u] = dcu * f;
+        }
+        // dh_prev = dz · Whᵀ (the only per-step recurrent matvec, same as
+        // the forward's h·Wh)
+        for u in 0..hid {
+            let row = &wh[u * 4 * hid..(u + 1) * 4 * hid];
+            let mut s = 0.0f32;
+            for (dzv, &wv) in dz.iter().zip(row) {
+                s += dzv * wv;
+            }
+            dh[u] = s;
+        }
     }
 }
 
@@ -277,5 +734,75 @@ mod tests {
         let theta = vec![0.0f32; d.info.params];
         assert!(d.qvalues_all(&theta, &[0.0; 7], 1).is_err());
         assert!(d.qvalues_all(&theta[1..], &[0.0; 8], 1).is_err());
+    }
+
+    fn tiny_batch(d: &NativeDqn, h: usize, o: usize, seed: u64)
+        -> (Vec<f32>, Vec<i32>, Vec<i32>, Vec<f32>, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        let feats: Vec<f32> = (0..o * h * d.feat).map(|_| rng.f32()).collect();
+        let ts: Vec<i32> = (0..o).map(|_| rng.below(h) as i32).collect();
+        let actions: Vec<i32> = (0..o).map(|_| rng.below(d.n_edges) as i32).collect();
+        let rewards: Vec<f32> = ts.iter().map(|_| if rng.f64() < 0.5 { 1.0 } else { -1.0 }).collect();
+        let dones: Vec<f32> = ts.iter().map(|&t| if t as usize == h - 1 { 1.0 } else { 0.0 }).collect();
+        (feats, ts, actions, rewards, dones)
+    }
+
+    #[test]
+    fn td_grad_loss_matches_td_loss_and_is_deterministic() {
+        let d = NativeDqn::new(3, 4, 4);
+        let mut rng = Rng::new(21);
+        let theta = init_params(&d.info, Init::GlorotUniform, &mut rng);
+        let theta_tgt = init_params(&d.info, Init::GlorotUniform, &mut rng);
+        let (feats, ts, actions, rewards, dones) = tiny_batch(&d, 6, 5, 22);
+        let (l1, g1) =
+            d.td_grad(&theta, &theta_tgt, &feats, &ts, &actions, &rewards, &dones, 6, 0.99).unwrap();
+        let (l2, g2) =
+            d.td_grad(&theta, &theta_tgt, &feats, &ts, &actions, &rewards, &dones, 6, 0.99).unwrap();
+        let l3 =
+            d.td_loss(&theta, &theta_tgt, &feats, &ts, &actions, &rewards, &dones, 6, 0.99).unwrap();
+        assert_eq!(l1, l2);
+        assert_eq!(g1, g2);
+        assert_eq!(l1, l3, "td_grad and td_loss must agree on the loss");
+        assert_eq!(g1.len(), d.info.params);
+        assert!(g1.iter().all(|v| v.is_finite()));
+        assert!(g1.iter().any(|&v| v != 0.0), "gradient must not vanish identically");
+        assert!(l1 >= 0.0);
+    }
+
+    #[test]
+    fn td_grad_rejects_malformed_batches() {
+        let d = NativeDqn::new(3, 4, 4);
+        let theta = vec![0.0f32; d.info.params];
+        let (feats, ts, actions, rewards, dones) = tiny_batch(&d, 4, 3, 5);
+        // out-of-range slot index
+        let mut bad_t = ts.clone();
+        bad_t[0] = 4;
+        assert!(d.td_grad(&theta, &theta, &feats, &bad_t, &actions, &rewards, &dones, 4, 0.9).is_err());
+        // out-of-range action
+        let mut bad_a = actions.clone();
+        bad_a[0] = 3;
+        assert!(d.td_grad(&theta, &theta, &feats, &ts, &bad_a, &rewards, &dones, 4, 0.9).is_err());
+        // truncated features
+        assert!(d.td_grad(&theta, &theta, &feats[1..], &ts, &actions, &rewards, &dones, 4, 0.9).is_err());
+        // empty batch
+        assert!(d.td_grad(&theta, &theta, &[], &[], &[], &[], &[], 4, 0.9).is_err());
+    }
+
+    #[test]
+    fn gradient_is_zero_where_loss_cannot_see() {
+        // with gamma=0 and the target net equal to the online net, the loss
+        // is a function of Q[t,a] only; perturbing an unrelated head bias
+        // (an advantage column never acted on) must still produce gradient
+        // through the mean-subtraction — but a_b grads must sum to ~0
+        // because eq. 20 is invariant to a constant advantage shift
+        let d = NativeDqn::new(3, 4, 4);
+        let mut rng = Rng::new(31);
+        let theta = init_params(&d.info, Init::GlorotUniform, &mut rng);
+        let (feats, ts, actions, rewards, dones) = tiny_batch(&d, 5, 4, 32);
+        let (_, g) =
+            d.td_grad(&theta, &theta, &feats, &ts, &actions, &rewards, &dones, 5, 0.0).unwrap();
+        let a_b_off = d.info.params - d.n_edges;
+        let s: f32 = g[a_b_off..].iter().sum();
+        assert!(s.abs() < 1e-5, "advantage-bias gradient sum {s} should vanish (eq. 20)");
     }
 }

@@ -10,6 +10,7 @@
 //! as the AOT path, so checkpoints and topology `model_bits` are
 //! interchangeable; bit-exactness with XLA is not a goal.
 
+pub mod adam;
 pub mod cnn;
 pub mod dqn;
 pub mod gemm;
@@ -20,7 +21,8 @@ use std::collections::BTreeMap;
 use std::sync::Mutex;
 use std::time::Instant;
 
-use super::backend::{Backend, BackendStats};
+use super::backend::{Backend, BackendStats, DqnBatch, DqnTrainState};
+use adam::Adam;
 use super::manifest::{Consts, Leaf, Manifest, ModelInfo};
 use crate::data::NUM_CLASSES;
 use cnn::NativeCnn;
@@ -246,6 +248,53 @@ impl Backend for NativeBackend {
     fn pick_horizon(&self, h: usize) -> anyhow::Result<usize> {
         anyhow::ensure!(h > 0, "empty episode");
         Ok(h)
+    }
+
+    fn dqn_train_step(
+        &self,
+        state: &mut DqnTrainState,
+        batch: &DqnBatch,
+        gamma: f32,
+    ) -> anyhow::Result<f32> {
+        let t0 = Instant::now();
+        let p = self.dqn.info.params;
+        anyhow::ensure!(
+            state.theta.len() == p
+                && state.theta_tgt.len() == p
+                && state.adam_m.len() == p
+                && state.adam_v.len() == p,
+            "dqn_train_step: state vectors must all have {p} params"
+        );
+        anyhow::ensure!(
+            batch.t.len() == batch.o,
+            "dqn_train_step: batch has {} transitions, o={}",
+            batch.t.len(),
+            batch.o
+        );
+        let (loss, grad) = self.with_arena(|arena| {
+            self.dqn.td_grad_arena(
+                &state.theta,
+                &state.theta_tgt,
+                batch.feats,
+                batch.t,
+                batch.action,
+                batch.reward,
+                batch.done,
+                batch.h,
+                gamma,
+                arena,
+            )
+        })?;
+        state.step += 1;
+        Adam::default().step(
+            &mut state.theta,
+            &grad,
+            &mut state.adam_m,
+            &mut state.adam_v,
+            state.step,
+        );
+        self.record(t0);
+        Ok(loss)
     }
 
     fn supports_partial_batch(&self) -> bool {

@@ -32,7 +32,7 @@ use crate::policy::{
     SchedEnv, SchedulePolicy,
 };
 use crate::runtime::Backend;
-use crate::system::Topology;
+use crate::system::{SystemParams, Topology};
 use crate::util::csv::CsvWriter;
 use crate::util::{stats, Rng};
 
@@ -128,6 +128,7 @@ fn build_assigner<'b>(
     spec: &ScenarioSpec,
     backend: Option<&'b dyn Backend>,
     seed: u64,
+    system: &SystemParams,
 ) -> anyhow::Result<Box<dyn AssignPolicy + 'b>> {
     let reg = PolicyRegistry::global();
     if let Some(entry) = reg.assign_entry(&key.name) {
@@ -148,6 +149,12 @@ fn build_assigner<'b>(
             default_ckpt: spec.drl_checkpoint.clone(),
             expect_edges: Some(spec.system.n_edges),
             seed,
+            // lets `d3qn?train=percell` cells train their own agent on
+            // deployments drawn from the cell's Table I ranges — the
+            // CALLER's corrected copy (train mode fixes model_bits to the
+            // dataset model), so the HFEL reward oracle prices
+            // communication like the cells the agent will serve
+            system: Some(system.clone()),
         },
     )
 }
@@ -209,7 +216,8 @@ pub fn run_cell(
             let clusters = cell_clusters(spec, cell, backend, None, &dd, dep)?;
             let mut sched =
                 reg.scheduler(&cell.scheduler, &SchedEnv { seed: rng.next_u64() })?;
-            let mut assigner = build_assigner(&cell.assigner, spec, backend, rng.next_u64())?;
+            let mut assigner =
+                build_assigner(&cell.assigner, spec, backend, rng.next_u64(), &sys)?;
             let opts = SolverOpts::default();
             let mut rows = Vec::with_capacity(spec.iters);
             let mut latencies = Vec::with_capacity(spec.iters);
@@ -276,7 +284,8 @@ pub fn run_cell(
                 cell_clusters(spec, cell, backend, Some(&trainer), &trainer.device_data, dep)?;
             let mut sched =
                 reg.scheduler(&cell.scheduler, &SchedEnv { seed: rng.next_u64() })?;
-            let mut assigner = build_assigner(&cell.assigner, spec, backend, rng.next_u64())?;
+            let mut assigner =
+                build_assigner(&cell.assigner, spec, backend, rng.next_u64(), &sys)?;
             let sched_name = cell.scheduler.to_string();
             let assigner_tag = cell.assigner.to_string();
             let res = trainer.run_policies(

@@ -1,0 +1,211 @@
+//! Artifact-free Algorithm 5 (ISSUE 4): determinism, checkpoint round-trip
+//! and replay pinning for native D³QN training, plus thread-count
+//! invariance of `d3qn?train=percell` sweep cells.
+
+use std::rc::Rc;
+
+use hfl::drl::checkpoint::{load_params, save_params};
+use hfl::drl::{DqnTrainConfig, DqnTrainer, ReplayBuffer, Transition};
+use hfl::policy::{assign, sched, PolicyRegistry};
+use hfl::runtime::{Backend, NativeBackend};
+use hfl::scenario::{run_sweep, run_sweep_serial, ScenarioSpec, SweepMode};
+use hfl::system::SystemParams;
+use hfl::util::Rng;
+
+/// Small-but-real config: 12 episodes × horizon 6 = 72 transitions, so the
+/// replay crosses the O=64 warm-up threshold and Adam steps actually run.
+fn tiny_cfg(seed: u64) -> DqnTrainConfig {
+    DqnTrainConfig {
+        episodes: 12,
+        horizon: Some(6),
+        hfel_exchange: 30,
+        eps_decay_episodes: 6,
+        seed,
+        ..DqnTrainConfig::default()
+    }
+}
+
+fn tiny_backend() -> NativeBackend {
+    NativeBackend::with_dqn(5, 8, 8)
+}
+
+#[test]
+fn training_runs_steps_and_moves_theta() {
+    let backend = tiny_backend();
+    let mut tr = DqnTrainer::new(&backend, tiny_cfg(3)).unwrap();
+    let init = tr.theta().to_vec();
+    let res = tr.train(|_, _| {}).unwrap();
+    assert_eq!(res.episode_rewards.len(), 12);
+    assert!(!res.losses.is_empty(), "replay warm-up never crossed O — no train steps ran");
+    assert!(res.losses.iter().all(|l| l.is_finite()));
+    assert_ne!(init, res.theta, "training did not move the parameters");
+    let h = 6.0;
+    assert!(res.episode_rewards.iter().all(|&r| (-h..=h).contains(&r)));
+    assert!(res.match_rate.iter().all(|&m| (0.0..=1.0).contains(&m)));
+}
+
+/// Identical `DqnTrainConfig` + seed ⇒ byte-identical θ and bit-identical
+/// episode-reward/loss traces, no matter how many rayon workers the
+/// ambient pool has (the trainer's RNG streams never depend on threads).
+#[test]
+fn train_is_byte_identical_across_rayon_thread_counts() {
+    let run = |threads: usize| {
+        let pool = rayon::ThreadPoolBuilder::new().num_threads(threads).build().unwrap();
+        pool.install(|| {
+            let backend = tiny_backend();
+            let mut tr = DqnTrainer::new(&backend, tiny_cfg(11)).unwrap();
+            let res = tr.train(|_, _| {}).unwrap();
+            let theta_bytes: Vec<u8> =
+                res.theta.iter().flat_map(|v| v.to_le_bytes()).collect();
+            (theta_bytes, res.episode_rewards, res.losses)
+        })
+    };
+    let (theta1, rewards1, losses1) = run(1);
+    let (theta4, rewards4, losses4) = run(4);
+    assert_eq!(theta1, theta4, "checkpoint bytes depend on thread count");
+    assert_eq!(rewards1, rewards4, "episode-reward trace depends on thread count");
+    assert_eq!(losses1, losses4);
+    assert!(!losses1.is_empty());
+}
+
+/// drl::checkpoint save→load→`qvalues_all` bit-equality on a trained θ.
+#[test]
+fn checkpoint_round_trips_q_bit_exact() {
+    let backend = tiny_backend();
+    let mut tr = DqnTrainer::new(&backend, tiny_cfg(17)).unwrap();
+    let res = tr.train(|_, _| {}).unwrap();
+
+    let dir = std::env::temp_dir().join("hfl_drl_train_ckpt_test");
+    let path = dir.join("dqn_theta.bin");
+    save_params(&path, &res.theta).unwrap();
+    let loaded = load_params(&path).unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+    assert_eq!(loaded.len(), res.theta.len());
+    assert!(
+        loaded.iter().zip(&res.theta).all(|(a, b)| a.to_bits() == b.to_bits()),
+        "checkpoint round-trip is not bit-exact"
+    );
+
+    let feat = backend.manifest().consts.feat;
+    let mut rng = Rng::new(5);
+    let h = 9;
+    let feats: Vec<f32> = (0..h * feat).map(|_| rng.f32()).collect();
+    let q_orig = backend.dqn_q_all(&res.theta, &feats, h).unwrap();
+    let q_loaded = backend.dqn_q_all(&loaded, &feats, h).unwrap();
+    assert!(
+        q_orig.iter().zip(&q_loaded).all(|(a, b)| a.to_bits() == b.to_bits()),
+        "Q-values after checkpoint round-trip are not bit-identical"
+    );
+}
+
+/// Replay sampling under a fixed RNG stream is pinned to the exact draw
+/// sequence — co-pinned with the xoshiro port in
+/// `python/tests/test_dqn_train_mirror.py::test_xoshiro_port_matches_rust_pins`
+/// (same seed, same `below(4)` draws). A reordered draw anywhere in the
+/// sampling path changes this list.
+#[test]
+fn replay_sampling_is_pinned_under_the_cell_rng_stream() {
+    let mut rb = ReplayBuffer::new(8);
+    for t in 0..4 {
+        rb.push(Transition {
+            feats: Rc::new(vec![t as f32; 6]),
+            t,
+            action: 0,
+            reward: 0.0,
+            done: 0.0,
+        });
+    }
+    let mut rng = Rng::new(0xC311);
+    let batch = rb.sample(8, 6, &mut rng);
+    assert_eq!(batch.t, vec![2, 2, 1, 1, 3, 1, 1, 1]);
+    // and the feature blocks track the sampled transitions
+    for (i, &t) in batch.t.iter().enumerate() {
+        assert_eq!(batch.feats[i * 6], t as f32);
+    }
+}
+
+/// `d3qn?train=percell` cells train their own agent from the cell RNG
+/// stream: serial and 4-thread sweeps of the same spec must produce
+/// byte-identical CSVs.
+#[test]
+fn percell_trained_cells_are_thread_count_invariant() {
+    let mut system = SystemParams::default();
+    system.n_devices = 20;
+    let spec = ScenarioSpec {
+        name: "drl_percell".into(),
+        mode: SweepMode::Cost,
+        schedulers: vec![sched("fedavg")],
+        assigners: vec![PolicyRegistry::global()
+            .assign_key("d3qn?train=percell&episodes=12&train_h=6")
+            .unwrap()],
+        h_values: vec![8],
+        seeds: 2,
+        iters: 2,
+        system,
+        ..ScenarioSpec::default()
+    };
+    let backend = tiny_backend();
+
+    let serial = run_sweep_serial(&spec, Some(&backend as &dyn Backend)).unwrap();
+    let parallel = run_sweep(&spec, Some(&backend), 4).unwrap();
+    assert_eq!(serial.cells.len(), 2);
+    assert_eq!(parallel.cells.len(), 2);
+
+    let d1 = std::env::temp_dir().join("hfl_drl_percell_serial");
+    let d2 = std::env::temp_dir().join("hfl_drl_percell_parallel");
+    std::fs::create_dir_all(&d1).unwrap();
+    std::fs::create_dir_all(&d2).unwrap();
+    let (rows1, sum1) = serial.write_csvs(&d1).unwrap();
+    let (rows2, sum2) = parallel.write_csvs(&d2).unwrap();
+    let b1 = std::fs::read(&rows1).unwrap();
+    let b2 = std::fs::read(&rows2).unwrap();
+    assert_eq!(b1, b2, "per-iteration CSV differs between serial and parallel");
+    let s1 = std::fs::read(&sum1).unwrap();
+    let s2 = std::fs::read(&sum2).unwrap();
+    assert_eq!(s1, s2, "summary CSV differs between serial and parallel");
+    std::fs::remove_dir_all(&d1).ok();
+    std::fs::remove_dir_all(&d2).ok();
+}
+
+/// A per-cell-trained agent differs from the fresh-θ agent of the same
+/// cell seed (the training actually happened), while two constructions of
+/// the same key + seed agree exactly.
+#[test]
+fn percell_training_is_deterministic_and_distinct_from_fresh() {
+    use hfl::policy::{AssignEnv, PolicyCtx, RoundHistory};
+    use hfl::system::Topology;
+
+    let backend = tiny_backend();
+    let reg = PolicyRegistry::global();
+    let env = AssignEnv {
+        backend: Some(&backend),
+        default_ckpt: None,
+        expect_edges: None,
+        seed: 9,
+        system: Some(SystemParams::default()),
+    };
+    let percell = reg.assign_key("d3qn?train=percell&episodes=12&train_h=6").unwrap();
+    let fresh = assign("d3qn");
+    let topo = Topology::generate(&SystemParams::default(), &mut Rng::new(77));
+    let scheduled: Vec<usize> = (0..10).collect();
+    let history = RoundHistory::default();
+    let ctx = PolicyCtx {
+        topo: &topo,
+        clusters: None,
+        h: 10,
+        round: 0,
+        history: &history,
+        seed: 9,
+    };
+    let assign_of = |key| {
+        let mut a = reg.assigner(key, &env).unwrap();
+        a.assign(&ctx, &scheduled).unwrap().edge_index().to_vec_sorted()
+    };
+    let a1 = assign_of(&percell);
+    let a2 = assign_of(&percell);
+    assert_eq!(a1, a2, "percell training is not deterministic");
+    // generically the trained agent assigns differently than the fresh one
+    // (both are valid partitions; equality would mean θ never moved)
+    let af = assign_of(&fresh);
+    assert_ne!(a1, af, "trained and fresh agents agree suspiciously");
+}

@@ -48,8 +48,13 @@ fn every_scheduler_key_round_trips_through_parse_and_instantiate() {
 fn every_assigner_key_round_trips_through_parse_and_instantiate() {
     let reg = PolicyRegistry::global();
     let backend = NativeBackend::new();
-    let env =
-        AssignEnv { backend: Some(&backend), default_ckpt: None, expect_edges: None, seed: 3 };
+    let env = AssignEnv {
+        backend: Some(&backend),
+        default_ckpt: None,
+        expect_edges: None,
+        seed: 3,
+        system: Some(SystemParams::default()),
+    };
     let cases = [
         ("d3qn", "d3qn", "d3qn"),
         ("drl", "d3qn", "d3qn"),
@@ -118,6 +123,7 @@ fn every_registered_pair_produces_a_valid_partition() {
                 default_ckpt: None,
                 expect_edges: Some(t.edges.len()),
                 seed: 2,
+                system: Some(SystemParams::default()),
             };
             let mut assigner = reg.assigner(&akey, &env).unwrap();
             let mut history = RoundHistory::default();
