@@ -1,0 +1,232 @@
+"""Toolchain-less oracle for the sweep shard/merge/resume logic (ISSUE 5).
+
+A literal Python transcription of the orchestration-layer algorithms in
+`rust/src/scenario/{plan,merge}.rs` — the manifest format, the
+round-robin shard split, the byte-offset resume cookie (truncate to the
+last recorded cut, re-deliver the rest) and the k-way leading-cell-id
+merge — exercised over randomized grids and crash points. When no Rust
+toolchain is available (see .claude/skills/verify/SKILL.md), a change to
+that logic should be mirrored here first: an algorithmic bug (overlap /
+gap in the shard partition, wrong merge interleave, resume double-write)
+fails these tests without ever compiling the Rust.
+
+Stdlib only (no numpy).
+"""
+import random
+
+# ---------------- sink output mirror ----------------
+# Synthetic but structurally faithful rows: every line starts with the
+# cell id (CSV first column / JSONL "cell" key), rows of a cell are
+# consecutive, cells ascend. Values depend only on (cell, iter) so any
+# execution order writes identical bytes, like the Rust cell RNG streams.
+
+CSV_HEADER = "cell,scheduler,assigner,h,seed,iter,t_i\n"
+
+
+def cell_rows_csv(cell_id, iters):
+    return "".join(
+        f"{cell_id},sched{cell_id % 3},assign{cell_id % 2},10,0,{it},{(cell_id * 7 + it):.6f}\n"
+        for it in range(iters)
+    )
+
+
+def cell_summary_csv(cell_id, iters):
+    return f"{cell_id},sched{cell_id % 3},assign{cell_id % 2},10,0,{iters},{cell_id * 7.0:.6f}\n"
+
+
+def cell_rows_jsonl(cell_id, iters):
+    return "".join(
+        f'{{"cell":{cell_id},"iter":{it},"t_i":{(cell_id * 7 + it):.6f}}}\n'
+        for it in range(iters)
+    )
+
+
+class Sink:
+    """CsvSink/JsonlSink mirror: append-only string with offset cookies."""
+
+    def __init__(self, header):
+        self.buf = header
+
+    def checkpoint(self):
+        return len(self.buf)
+
+    def restore(self, cookie):
+        self.buf = self.buf[:cookie]
+
+
+def run_shard(cells, iters, make_block, sink, manifest, resume=False, abort_after=None):
+    """plan.rs run loop: skip the manifest prefix, restore the cookie,
+    deliver in plan order, record (id, cookie) per delivered cell."""
+    skip = 0
+    if resume and manifest["lines"]:
+        skip = len(manifest["lines"])
+        assert [i for i, _ in manifest["lines"]] == cells[:skip]
+        sink.restore(manifest["lines"][-1][1])
+    elif resume:
+        sink.restore(manifest["start"])
+    run = 0
+    for cell in cells[skip:]:
+        if abort_after is not None and run >= abort_after:
+            return True
+        sink.buf += make_block(cell, iters)
+        manifest["lines"].append((cell, sink.checkpoint()))
+        run += 1
+    return False
+
+
+def shard_cells(total, i, n):
+    return [c for c in range(total) if c % n == i]
+
+
+# ---------------- merge.rs mirror ----------------
+
+def line_cell_id(line):
+    if line.startswith('{"cell":'):
+        rest = line[len('{"cell":'):]
+        digits = ""
+        for ch in rest:
+            if ch.isdigit():
+                digits += ch
+            else:
+                break
+        return int(digits)
+    return int(line.split(",")[0])
+
+
+def merge_streams(shard_texts, has_header, total_cells):
+    streams = []
+    header = None
+    for text in shard_texts:
+        lines = text.splitlines(keepends=True)
+        if has_header:
+            h, lines = lines[0], lines[1:]
+            assert header is None or header == h
+            header = h
+        streams.append(lines)
+    out = header or ""
+    pos = [0] * len(streams)
+    for expect in range(total_cells):
+        si = next(
+            (
+                k
+                for k, lines in enumerate(streams)
+                if pos[k] < len(lines) and line_cell_id(lines[pos[k]]) == expect
+            ),
+            None,
+        )
+        assert si is not None, f"cell {expect} missing from every shard"
+        while pos[si] < len(streams[si]) and line_cell_id(streams[si][pos[si]]) == expect:
+            out += streams[si][pos[si]]
+            pos[si] += 1
+    for k, lines in enumerate(streams):
+        assert pos[k] == len(lines), "leftover lines after merge"
+    return out
+
+
+# ---------------- properties ----------------
+
+def single_shot(total, iters, make_block, header):
+    s = Sink(header)
+    m = {"start": s.checkpoint(), "lines": []}
+    run_shard(list(range(total)), iters, make_block, s, m)
+    return s.buf
+
+
+def test_shard_split_partitions_ids():
+    rng = random.Random(5)
+    for _ in range(50):
+        total = rng.randrange(1, 40)
+        n = rng.randrange(1, 8)
+        seen = []
+        for i in range(n):
+            cells = shard_cells(total, i, n)
+            assert cells == sorted(cells)
+            seen += cells
+        assert sorted(seen) == list(range(total))
+
+
+def test_any_partition_merges_to_single_shot_bytes():
+    rng = random.Random(7)
+    for _ in range(30):
+        total = rng.randrange(1, 30)
+        iters = rng.randrange(1, 4)
+        n = rng.randrange(1, 6)
+        for make_block, header, has_header in [
+            (cell_rows_csv, CSV_HEADER, True),
+            (cell_summary_csv, CSV_HEADER, True),
+            (cell_rows_jsonl, "", False),
+        ]:
+            want = single_shot(total, iters, make_block, header)
+            shard_texts = []
+            order = list(range(n))
+            rng.shuffle(order)  # shards finish in any order
+            for i in order:
+                s = Sink(header)
+                m = {"start": s.checkpoint(), "lines": []}
+                run_shard(shard_cells(total, i, n), iters, make_block, s, m)
+                shard_texts.append(s.buf)
+            # merge consults ids, not shard order
+            got = merge_streams(shard_texts, has_header, total)
+            assert got == want, f"total={total} n={n} {make_block.__name__}"
+
+
+def test_resume_after_abort_is_byte_identical():
+    rng = random.Random(11)
+    for _ in range(40):
+        total = rng.randrange(2, 25)
+        iters = rng.randrange(1, 4)
+        cells = list(range(total))
+        want = single_shot(total, iters, cell_rows_csv, CSV_HEADER)
+
+        s = Sink(CSV_HEADER)
+        m = {"start": s.checkpoint(), "lines": []}
+        cut = rng.randrange(0, total)
+        aborted = run_shard(cells, iters, cell_rows_csv, s, m, abort_after=cut)
+        assert aborted == (cut < total)
+        run_shard(cells, iters, cell_rows_csv, s, m, resume=True)
+        assert s.buf == want
+
+
+def test_crash_tail_is_discarded_by_the_cookie_restore():
+    rng = random.Random(13)
+    for _ in range(40):
+        total = rng.randrange(1, 20)
+        iters = rng.randrange(1, 4)
+        cells = list(range(total))
+        want = single_shot(total, iters, cell_rows_csv, CSV_HEADER)
+
+        s = Sink(CSV_HEADER)
+        m = {"start": s.checkpoint(), "lines": []}
+        cut = rng.randrange(0, total)
+        run_shard(cells, iters, cell_rows_csv, s, m, abort_after=cut)
+        # crash mid-cell: rows (possibly partial) written, no manifest line
+        orphan = cell_rows_csv(cut, iters)[: rng.randrange(1, 8)]
+        s.buf += orphan
+        run_shard(cells, iters, cell_rows_csv, s, m, resume=True)
+        assert s.buf == want
+
+
+def test_resume_with_zero_completed_cells_restores_to_start():
+    # crash after the header + manifest header, before any cell
+    s = Sink(CSV_HEADER)
+    m = {"start": s.checkpoint(), "lines": []}
+    s.buf += "0,partial"
+    run_shard([0, 1], 2, cell_rows_csv, s, m, resume=True)
+    assert s.buf == single_shot(2, 2, cell_rows_csv, CSV_HEADER)
+
+
+def test_merge_detects_missing_cells():
+    import pytest
+
+    s0 = Sink(CSV_HEADER)
+    m0 = {"start": s0.checkpoint(), "lines": []}
+    run_shard(shard_cells(4, 0, 2), 1, cell_rows_csv, s0, m0)
+    # shard 1 missing entirely
+    with pytest.raises(AssertionError, match="missing"):
+        merge_streams([s0.buf], True, 4)
+
+
+def test_jsonl_and_csv_leading_ids_agree():
+    for cell_id in [0, 7, 123]:
+        assert line_cell_id(cell_rows_csv(cell_id, 1)) == cell_id
+        assert line_cell_id(cell_rows_jsonl(cell_id, 1)) == cell_id

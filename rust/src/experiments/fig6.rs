@@ -10,7 +10,7 @@
 use crate::bench::Table;
 use crate::config::Config;
 use crate::runtime::Backend;
-use crate::scenario::{presets, run_sweep_serial};
+use crate::scenario::{presets, SweepPlan};
 use crate::util::csv::CsvWriter;
 use crate::util::stats;
 
@@ -33,7 +33,7 @@ pub fn run(backend: &dyn Backend, cfg: &Config) -> anyhow::Result<Vec<StrategySt
     spec.drl_checkpoint = Some(default_checkpoint(cfg));
     let lambda = spec.system.lambda;
 
-    let result = run_sweep_serial(&spec, Some(backend))?;
+    let result = SweepPlan::new(spec)?.run_collect_serial(Some(backend))?;
 
     let mut csv = CsvWriter::create(
         csv_path(cfg, "fig6_assignment.csv"),

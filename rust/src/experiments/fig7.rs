@@ -10,7 +10,7 @@
 use crate::bench::Table;
 use crate::config::Config;
 use crate::runtime::Backend;
-use crate::scenario::{presets, run_sweep_serial};
+use crate::scenario::{presets, SweepPlan};
 use crate::util::csv::CsvWriter;
 use crate::util::stats;
 
@@ -34,7 +34,7 @@ pub fn run(backend: &dyn Backend, cfg: &Config, dataset: &str) -> anyhow::Result
     let spec = presets::fig7(cfg, dataset);
     let target = spec.target_acc;
     let lambda = spec.system.lambda;
-    let result = run_sweep_serial(&spec, Some(backend))?;
+    let result = SweepPlan::new(spec)?.run_collect_serial(Some(backend))?;
 
     let mut curve_csv = CsvWriter::create(
         csv_path(cfg, &format!("fig7_curves_{dataset}.csv")),

@@ -9,7 +9,7 @@
 use crate::config::Config;
 use crate::metrics::aggregate_curves;
 use crate::runtime::Backend;
-use crate::scenario::{presets, run_sweep_serial};
+use crate::scenario::{presets, SweepPlan};
 use crate::util::csv::CsvWriter;
 
 use super::common::csv_path;
@@ -27,7 +27,7 @@ pub struct SchedCurve {
 pub fn run(backend: &dyn Backend, cfg: &Config, dataset: &str) -> anyhow::Result<Vec<SchedCurve>> {
     let fig = if dataset == "cifar" { "fig4" } else { "fig3" };
     let spec = presets::fig_sched(cfg, dataset);
-    let result = run_sweep_serial(&spec, Some(backend))?;
+    let result = SweepPlan::new(spec)?.run_collect_serial(Some(backend))?;
 
     let mut csv = CsvWriter::create(
         csv_path(cfg, &format!("{fig}_{dataset}_scheduling.csv")),

@@ -11,7 +11,7 @@ use hfl::experiments;
 use hfl::fl::{HflConfig, HflTrainer};
 use hfl::policy::{AssignEnv, AssignPolicy, ClusterNeed, PolicyRegistry, SchedEnv};
 use hfl::runtime::{Backend, NativeBackend};
-use hfl::scenario::{self, ScenarioSpec};
+use hfl::scenario::{self, ScenarioSpec, Shard, SweepPlan};
 use hfl::util::logging;
 
 const USAGE: &str = "\
@@ -36,6 +36,24 @@ commands:
                              --schedulers k1,k2  --assigners k1,k2
                              --dataset fmnist|cifar|tiny overrides the
                              preset's dataset for train mode)
+                            orchestration (cells stream to disk as they
+                            finish; output bytes are identical for any
+                            thread count / shard split):
+                             --shard i/N   run the i-th of N shards
+                                           (cross-host: one shard per
+                                           host, then `hfl merge`)
+                             --sink csv|jsonl|csv,jsonl   output formats
+                             --list-cells  print the shard's cell table
+                                           and exit
+                             --resume      skip cells the shard manifest
+                                           records as finished
+                             --abort-after N  stop cleanly after N cells
+                                           (test aid for --resume)
+  merge <dir>...            combine finished shard outputs (discovered
+                            via their sweep_*.manifest files) into the
+                            byte-identical single-host files
+                            (--name NAME  only this sweep
+                             --out DIR    destination, default results)
   bench                     kernel benchmarks: blocked native kernels vs
                             the scalar reference oracle, micro + e2e
                             local round; writes BENCH_kernels.json
@@ -228,7 +246,10 @@ fn cmd_train(args: &Args, cfg: &Config, backend: &dyn Backend) -> anyhow::Result
     Ok(())
 }
 
-/// `hfl sweep` — the parallel scenario engine on the native backend.
+/// `hfl sweep` — the sharded, resumable scenario orchestrator on the
+/// native backend. Cells stream to the configured sinks as they finish;
+/// the reorder buffer keeps output bytes identical for any thread count,
+/// and the shard manifest makes `--resume` / `hfl merge` possible.
 fn cmd_sweep(args: &Args, cfg: &Config) -> anyhow::Result<()> {
     let reg = PolicyRegistry::global();
     let which = args
@@ -271,8 +292,31 @@ fn cmd_sweep(args: &Args, cfg: &Config) -> anyhow::Result<()> {
     spec.seeds = args.get_usize("seeds", spec.seeds)?;
     spec.h_values = args.get_usize_list("h-values", &spec.h_values)?;
     let threads = args.get_usize("threads", 0)?;
+    let shard = Shard::parse(&args.get_str("shard", "0/1"))?;
+    let list_cells = args.flag("list-cells");
+    let resume = args.flag("resume");
+    let sink_arg = args.get_str("sink", "csv");
+    let abort_after = match args.get_usize("abort-after", 0)? {
+        0 => None,
+        n => Some(n),
+    };
     args.finish()?;
-    spec.validate()?;
+
+    let plan = SweepPlan::sharded(spec, shard)?;
+    if list_cells {
+        println!(
+            "sweep {} [{}] shard {shard}: {} of {} cells",
+            plan.spec.name,
+            plan.spec.mode.name(),
+            plan.cells().len(),
+            plan.total_cells()
+        );
+        println!("cell\tscheduler\tassigner\th\tseed");
+        for c in plan.cells() {
+            println!("{}\t{}\t{}\t{}\t{}", c.idx, c.scheduler, c.assigner, c.h, c.seed_i);
+        }
+        return Ok(());
+    }
 
     anyhow::ensure!(
         cfg.backend == "native",
@@ -282,22 +326,92 @@ fn cmd_sweep(args: &Args, cfg: &Config) -> anyhow::Result<()> {
     );
     let backend = NativeBackend::new();
     println!(
-        "sweep {} [{}]: {} cells (schedulers×assigners×H×seeds = {}×{}×{}×{})",
-        spec.name,
-        spec.mode.name(),
-        spec.cells().len(),
-        spec.schedulers.len(),
-        spec.assigners.len(),
-        spec.h_values.len(),
-        spec.seeds
+        "sweep {} [{}] shard {shard}: {} of {} cells \
+         (schedulers×assigners×H×seeds = {}×{}×{}×{})",
+        plan.spec.name,
+        plan.spec.mode.name(),
+        plan.cells().len(),
+        plan.total_cells(),
+        plan.spec.schedulers.len(),
+        plan.spec.assigners.len(),
+        plan.spec.h_values.len(),
+        plan.spec.seeds
     );
-    let result = scenario::run_sweep(&spec, Some(&backend), threads)?;
-    let out_dir = std::path::Path::new(&cfg.out_dir);
-    let (rows_path, summary_path) = result.write_csvs(out_dir)?;
 
-    let mut table = hfl::bench::Table::new(&["scheduler", "assigner", "H", "E+λT (mean)", "assign lat"]);
-    for ((sched, assigner, h), cells) in result.grouped() {
-        let objs: Vec<f64> = cells.iter().map(|c| c.objective(result.lambda)).collect();
+    let out_dir = std::path::Path::new(&cfg.out_dir);
+    std::fs::create_dir_all(out_dir)?;
+    let stem = plan.output_stem();
+    let manifest_path = out_dir.join(format!("sweep_{stem}.manifest"));
+    // resuming appends to the existing files; a fresh run truncates them
+    let resuming = resume && manifest_path.exists();
+    let mut file_sinks: Vec<Box<dyn scenario::RecordSink>> = Vec::new();
+    let mut kinds_seen: Vec<&str> = Vec::new();
+    let mut outputs: Vec<std::path::PathBuf> = Vec::new();
+    for kind in sink_arg.split(',') {
+        let kind = kind.trim();
+        anyhow::ensure!(!kinds_seen.contains(&kind), "--sink lists {kind} twice");
+        kinds_seen.push(kind);
+        let (sink, rows, summary): (Box<dyn scenario::RecordSink>, _, _) = match kind {
+            "csv" => {
+                let s = if resuming {
+                    scenario::CsvSink::append(out_dir, &stem)?
+                } else {
+                    scenario::CsvSink::create(out_dir, &stem)?
+                };
+                let (r, su) = s.paths();
+                let (r, su) = (r.to_path_buf(), su.to_path_buf());
+                (Box::new(s), r, su)
+            }
+            "jsonl" => {
+                let s = if resuming {
+                    scenario::JsonlSink::append(out_dir, &stem)?
+                } else {
+                    scenario::JsonlSink::create(out_dir, &stem)?
+                };
+                let (r, su) = s.paths();
+                let (r, su) = (r.to_path_buf(), su.to_path_buf());
+                (Box::new(s), r, su)
+            }
+            other => anyhow::bail!("--sink {other:?}: expected csv, jsonl or csv,jsonl"),
+        };
+        outputs.push(rows);
+        outputs.push(summary);
+        file_sinks.push(sink);
+    }
+    anyhow::ensure!(!file_sinks.is_empty(), "--sink selected no output format");
+    // summaries-only observer for the printed table (not written to disk,
+    // so it never participates in resume cookies)
+    let mut table_sink = scenario::MemorySink::summaries_only();
+    let mut sinks: Vec<&mut dyn scenario::RecordSink> =
+        file_sinks.iter_mut().map(|b| b.as_mut()).collect();
+    sinks.push(&mut table_sink);
+    let mut sink = scenario::MultiSink::new(sinks);
+
+    let opts = scenario::RunOpts {
+        manifest: Some(manifest_path.clone()),
+        resume,
+        abort_after,
+    };
+    let outcome = plan.run_parallel(Some(&backend), threads, &mut sink, &opts)?;
+    drop(sink);
+    if outcome.cells_skipped > 0 {
+        println!("resume: skipped {} finished cells", outcome.cells_skipped);
+    }
+
+    // aggregate the freshly run cells' summaries (resumed runs only see
+    // the remainder — the written files still hold everything)
+    let mut table =
+        hfl::bench::Table::new(&["scheduler", "assigner", "H", "E+λT (mean)", "assign lat"]);
+    let mut groups: Vec<((String, String, usize), Vec<&scenario::CellSummary>)> = Vec::new();
+    for (s, _) in &table_sink.cells {
+        let key = (s.cell.scheduler.to_string(), s.cell.assigner.to_string(), s.cell.h);
+        match groups.iter_mut().find(|(k, _)| *k == key) {
+            Some((_, v)) => v.push(s),
+            None => groups.push((key, vec![s])),
+        }
+    }
+    for ((sched, assigner, h), cells) in groups {
+        let objs: Vec<f64> = cells.iter().map(|c| c.objective).collect();
         let lats: Vec<f64> = cells.iter().map(|c| c.assign_latency_mean_s).collect();
         table.row(&[
             sched,
@@ -308,14 +422,54 @@ fn cmd_sweep(args: &Args, cfg: &Config) -> anyhow::Result<()> {
         ]);
     }
     table.print();
+    let paths: Vec<String> = outputs.iter().map(|p| p.display().to_string()).collect();
     println!(
-        "{} cells on {} threads in {:.2}s -> {} + {}",
-        result.cells.len(),
-        result.threads,
-        result.wall_secs,
-        rows_path.display(),
-        summary_path.display()
+        "{} cells on {} threads in {:.2}s -> {} (manifest {})",
+        outcome.cells_run,
+        outcome.threads,
+        outcome.wall_secs,
+        paths.join(" + "),
+        manifest_path.display()
     );
+    if outcome.aborted {
+        println!(
+            "aborted after {} cells — continue with `hfl sweep ... --resume`",
+            outcome.cells_run
+        );
+    } else if shard.count > 1 {
+        println!(
+            "shard {shard} complete — after all {} shards finish, combine with \
+             `hfl merge {}`",
+            shard.count,
+            out_dir.display()
+        );
+    }
+    Ok(())
+}
+
+/// `hfl merge` — combine finished shard outputs (any mix of directories)
+/// into the byte-identical single-host files.
+fn cmd_merge(args: &Args) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        !args.positional.is_empty(),
+        "hfl merge needs at least one directory holding shard outputs"
+    );
+    let dirs: Vec<std::path::PathBuf> =
+        args.positional.iter().map(std::path::PathBuf::from).collect();
+    let name = args.opt("name").map(str::to_string);
+    let out = std::path::PathBuf::from(args.get_str("out", "results"));
+    args.finish()?;
+    let reports = hfl::scenario::merge_dirs(&dirs, name.as_deref(), &out)?;
+    for r in reports {
+        let paths: Vec<String> = r.outputs.iter().map(|p| p.display().to_string()).collect();
+        println!(
+            "merged sweep {} ({} shards, {} cells) -> {}",
+            r.name,
+            r.shards,
+            r.cells,
+            paths.join(" + ")
+        );
+    }
     Ok(())
 }
 
@@ -447,6 +601,11 @@ fn main() -> anyhow::Result<()> {
     }
     if args.subcommand == "bench" {
         return cmd_bench(&args);
+    }
+    // `merge` reads shard manifests from its positional dirs and treats
+    // --out as the destination directory — no Config involved
+    if args.subcommand == "merge" {
+        return cmd_merge(&args);
     }
     let cfg = load_config(&args)?;
     std::fs::create_dir_all(&cfg.out_dir).ok();

@@ -30,7 +30,7 @@ pub mod schedulers;
 
 pub use key::PolicyKey;
 pub use registry::{
-    AssignEntry, AssignEnv, ClusterNeed, PolicyRegistry, SchedEntry, SchedEnv,
+    AssignEntry, AssignEnv, ClusterNeed, ParamSpec, PolicyRegistry, SchedEntry, SchedEnv,
 };
 
 use crate::assignment::Assignment;

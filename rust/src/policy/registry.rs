@@ -16,13 +16,22 @@
 //!    or your own module);
 //! 2. write a factory `fn(&PolicyKey, &SchedEnv) -> Result<Box<dyn …>>`;
 //! 3. append a [`SchedEntry`]/[`AssignEntry`] in
-//!    [`PolicyRegistry::builtin`].
+//!    [`PolicyRegistry::builtin`] — or, from a downstream crate, call
+//!    [`PolicyRegistry::register_scheduler`] /
+//!    [`PolicyRegistry::register_assigner`] at startup (entry fields are
+//!    `&'static`; use literals, or `Box::leak` for computed names).
 //!
 //! Every driver — `hfl train`, `hfl sweep` grids, presets, TOML profiles,
 //! `hfl policies` — picks the new key up with no further changes.
+//!
+//! [`PolicyRegistry::global`] hands out a cheap [`Arc`] snapshot:
+//! registration swaps the shared registry for an extended copy, so
+//! snapshots taken earlier stay valid (entries are never removed) and
+//! in-flight sweeps are unaffected. Register before building the specs
+//! that name the new keys.
 
 use std::path::PathBuf;
-use std::sync::OnceLock;
+use std::sync::{Arc, OnceLock, RwLock};
 
 use super::assigners::{D3qnPolicy, FromAssigner, GreedyCost, StickyAssign};
 use super::key::PolicyKey;
@@ -83,6 +92,7 @@ pub struct ParamSpec {
 }
 
 /// One registered scheduling policy.
+#[derive(Clone)]
 pub struct SchedEntry {
     pub name: &'static str,
     /// `(spelling, canonical key)` back-compat aliases.
@@ -96,6 +106,7 @@ pub struct SchedEntry {
 }
 
 /// One registered assignment policy.
+#[derive(Clone)]
 pub struct AssignEntry {
     pub name: &'static str,
     pub aliases: &'static [(&'static str, &'static str)],
@@ -107,6 +118,7 @@ pub struct AssignEntry {
     pub factory: AssignFactory,
 }
 
+#[derive(Clone)]
 pub struct PolicyRegistry {
     scheds: Vec<SchedEntry>,
     assigns: Vec<AssignEntry>,
@@ -156,10 +168,101 @@ fn canonicalize(
 }
 
 impl PolicyRegistry {
-    /// The process-wide registry of built-in policies.
-    pub fn global() -> &'static PolicyRegistry {
-        static REG: OnceLock<PolicyRegistry> = OnceLock::new();
-        REG.get_or_init(PolicyRegistry::builtin)
+    fn cell() -> &'static RwLock<Arc<PolicyRegistry>> {
+        static REG: OnceLock<RwLock<Arc<PolicyRegistry>>> = OnceLock::new();
+        REG.get_or_init(|| RwLock::new(Arc::new(PolicyRegistry::builtin())))
+    }
+
+    /// The process-wide registry: built-in policies plus anything added
+    /// through [`PolicyRegistry::register_scheduler`] /
+    /// [`PolicyRegistry::register_assigner`]. Returns a cheap snapshot —
+    /// hold it across a lookup + instantiate pair; re-call for fresh
+    /// registrations.
+    pub fn global() -> Arc<PolicyRegistry> {
+        Self::cell().read().expect("policy registry lock").clone()
+    }
+
+    /// Register a scheduling policy at runtime (the ROADMAP's downstream-
+    /// crate hook). The new key is immediately resolvable by every driver
+    /// — `hfl sweep` grids, TOML profiles, `hfl policies`. Fails on a
+    /// name/alias collision or an inconsistent entry; never unregisters.
+    pub fn register_scheduler(entry: SchedEntry) -> anyhow::Result<()> {
+        let cell = Self::cell();
+        let mut cur = cell.write().expect("policy registry lock");
+        let mut next = (**cur).clone();
+        Self::check_new_entry(
+            "scheduler",
+            entry.name,
+            entry.aliases,
+            entry.params,
+            entry.defaults,
+            &next.sched_vocabulary(),
+        )?;
+        next.scheds.push(entry);
+        *cur = Arc::new(next);
+        Ok(())
+    }
+
+    /// Register an assignment policy at runtime. See
+    /// [`PolicyRegistry::register_scheduler`].
+    pub fn register_assigner(entry: AssignEntry) -> anyhow::Result<()> {
+        let cell = Self::cell();
+        let mut cur = cell.write().expect("policy registry lock");
+        let mut next = (**cur).clone();
+        Self::check_new_entry(
+            "assigner",
+            entry.name,
+            entry.aliases,
+            entry.params,
+            entry.defaults,
+            &next.assign_vocabulary(),
+        )?;
+        next.assigns.push(entry);
+        *cur = Arc::new(next);
+        Ok(())
+    }
+
+    fn check_new_entry(
+        kind: &str,
+        name: &str,
+        aliases: &[(&'static str, &'static str)],
+        params: &[ParamSpec],
+        defaults: &[(&'static str, &'static str)],
+        vocabulary: &[&str],
+    ) -> anyhow::Result<()> {
+        let mut seen: Vec<&str> = Vec::new();
+        for spelling in std::iter::once(name).chain(aliases.iter().map(|&(a, _)| a)) {
+            anyhow::ensure!(
+                !vocabulary.contains(&spelling),
+                "{kind} {spelling:?} is already registered"
+            );
+            // ...and the entry must not collide with itself (a name
+            // reused as an alias, or two identical alias spellings)
+            anyhow::ensure!(
+                !seen.contains(&spelling),
+                "{kind} {name}: spelling {spelling:?} appears twice in the entry"
+            );
+            seen.push(spelling);
+            // the key must survive its own grammar (lowercase names, no
+            // separators), so specs can spell it
+            let parsed = PolicyKey::parse(spelling)
+                .map_err(|e| anyhow::anyhow!("{kind} name {spelling:?}: {e}"))?;
+            anyhow::ensure!(
+                parsed.name == spelling && parsed.params.is_empty(),
+                "{kind} name {spelling:?} must be a bare key (no ?params)"
+            );
+        }
+        for &(_, target) in aliases {
+            PolicyKey::parse(target)
+                .map_err(|e| anyhow::anyhow!("{kind} {name}: alias target {target:?}: {e}"))?;
+        }
+        for &(k, _) in defaults {
+            anyhow::ensure!(
+                params.iter().any(|p| p.key == k),
+                "{kind} {name}: default for undeclared param {k:?}"
+            );
+        }
+        Ok(())
     }
 
     /// Resolve a scheduler key string to its canonical [`PolicyKey`].
@@ -661,6 +764,48 @@ mod tests {
         // ckpt + percell conflict
         let conflict = r.assign_key("d3qn?train=percell&ckpt=x.bin").unwrap();
         assert!(r.assigner(&conflict, &env).is_err());
+    }
+
+    #[test]
+    fn register_rejects_collisions_and_malformed_entries() {
+        fn f(_k: &PolicyKey, env: &SchedEnv) -> anyhow::Result<Box<dyn SchedulePolicy>> {
+            Ok(Box::new(FedAvgPolicy::new(env.seed)))
+        }
+        let entry = |name: &'static str, aliases, defaults| SchedEntry {
+            name,
+            aliases,
+            summary: "test",
+            params: &[],
+            defaults,
+            clusters: ClusterNeed::None,
+            factory: f,
+        };
+        // collides with a built-in name
+        assert!(PolicyRegistry::register_scheduler(entry("ikc", &[], &[])).is_err());
+        // collides with a built-in assigner alias? no — kinds are separate
+        // namespaces, but a *scheduler* alias collision is refused
+        assert!(
+            PolicyRegistry::register_scheduler(entry("okc", &[("ikc", "okc")], &[])).is_err()
+        );
+        // name must survive the key grammar
+        assert!(PolicyRegistry::register_scheduler(entry("bad name", &[], &[])).is_err());
+        // an entry colliding with ITSELF (name reused as alias) is refused
+        assert!(
+            PolicyRegistry::register_scheduler(entry("selfy", &[("selfy", "selfy")], &[]))
+                .is_err()
+        );
+        // defaults must reference declared params
+        assert!(
+            PolicyRegistry::register_scheduler(entry("okc2", &[], &[("k", "1")])).is_err()
+        );
+        // a valid registration lands and resolves through fresh snapshots
+        PolicyRegistry::register_scheduler(entry("unit-reg", &[("ureg", "unit-reg")], &[]))
+            .unwrap();
+        let r = PolicyRegistry::global();
+        assert_eq!(r.sched_key("ureg").unwrap().to_string(), "unit-reg");
+        assert!(r.sched_entry("unit-reg").is_some());
+        // duplicate registration is refused
+        assert!(PolicyRegistry::register_scheduler(entry("unit-reg", &[], &[])).is_err());
     }
 
     #[test]

@@ -337,6 +337,24 @@ pub fn gemm_nn(
     );
 }
 
+/// `out[m×n] += a[m×k] @ b[k×n]` — the NN shape accumulating into `out`
+/// (the batched-LSTM `gates += H @ Wh` step: the input projection is
+/// already stored in `out`, the recurrent term adds onto it).
+pub fn gemm_nn_acc(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    gemm_driver(
+        ASrc::RowMajor { a, lda: k },
+        BSrc::RowMajor { b, ldb: n },
+        m,
+        k,
+        n,
+        true,
+        &Epilogue::None,
+        out,
+    );
+}
+
 /// `out[m×n] (+)= aᵀ[k×m] @ b[k×n]` — the dW = Xᵀ·dY shape.
 pub fn gemm_tn(
     a: &[f32],
@@ -474,6 +492,27 @@ mod tests {
         gemm_nt(&a, &bt, m, k, n, true, &mut acc);
         for (u, &v) in acc.iter().zip(&once) {
             assert!((u - 2.0 * v).abs() < 1e-5, "{u} vs 2*{v}");
+        }
+    }
+
+    #[test]
+    fn nn_acc_adds_on_top_and_rows_are_batch_invariant() {
+        let (m, k, n) = (6usize, 7usize, 9usize);
+        let a = fill(9, m * k);
+        let b = fill(10, k * n);
+        let mut once = vec![0.0f32; m * n];
+        gemm_nn(&a, &b, m, k, n, &Epilogue::None, &mut once);
+        let mut acc = once.clone();
+        gemm_nn_acc(&a, &b, m, k, n, &mut acc);
+        for (u, &v) in acc.iter().zip(&once) {
+            assert!((u - 2.0 * v).abs() < 1e-5, "{u} vs 2*{v}");
+        }
+        // per-row bits do not depend on how many rows share the GEMM —
+        // the invariant the batched D³QN minibatch path rests on
+        for i in 0..m {
+            let mut row_out = vec![0.0f32; n];
+            gemm_nn(&a[i * k..(i + 1) * k], &b, 1, k, n, &Epilogue::None, &mut row_out);
+            assert_eq!(&once[i * n..(i + 1) * n], &row_out[..], "row {i} differs");
         }
     }
 

@@ -1,0 +1,330 @@
+//! `hfl merge` — reassemble shard outputs into single-host bytes.
+//!
+//! Every output stream a [`super::sink::RecordSink`] writes is ordered by
+//! [`super::plan::CellId`] and starts each line with the cell id (CSV
+//! first column, JSONL `"cell"` key), so merging shards is a k-way merge
+//! on the leading id: for ids `0..total_cells`, copy the id's line block
+//! from whichever shard owns it. No re-parsing or re-formatting happens —
+//! lines are moved verbatim — which is what makes the merged file
+//! **byte-identical** to what one unsharded run would have written.
+//!
+//! Shards are discovered through their manifests
+//! (`sweep_<name>_shard<i>of<N>.manifest`, written by `hfl sweep
+//! --shard i/N`): a merge set must contain every shard `0..N` of the same
+//! spec fingerprint, and every manifest must be complete — an interrupted
+//! shard is reported with the `--resume` command that finishes it.
+
+use std::fs::File;
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::path::{Path, PathBuf};
+
+use super::plan::Manifest;
+
+/// One discovered shard: its manifest plus where its output files live.
+#[derive(Clone, Debug)]
+pub struct ShardOutputs {
+    pub manifest: Manifest,
+    pub dir: PathBuf,
+    /// Output stem of the shard's files (`<name>_shard<i>of<N>`, or the
+    /// bare name for a `0/1` manifest).
+    pub stem: String,
+}
+
+/// A complete, consistent set of shards for one sweep.
+#[derive(Debug)]
+pub struct MergeSet {
+    pub name: String,
+    pub shards: Vec<ShardOutputs>,
+    pub total_cells: usize,
+}
+
+/// What one merged sweep produced.
+#[derive(Debug)]
+pub struct MergeReport {
+    pub name: String,
+    pub shards: usize,
+    pub cells: usize,
+    pub outputs: Vec<PathBuf>,
+}
+
+/// The four streams a sweep may have written, as `(suffix, has_header)`.
+/// Streams present in *all* shards are merged; streams present in none
+/// are skipped; a stream present in only some shards is an error.
+const STREAMS: [(&str, bool); 4] = [
+    (".csv", true),
+    ("_summary.csv", true),
+    (".jsonl", false),
+    ("_summary.jsonl", false),
+];
+
+/// Scan directories for shard manifests and group them into consistent,
+/// complete merge sets (keyed by sweep name + fingerprint).
+pub fn discover(dirs: &[PathBuf]) -> anyhow::Result<Vec<MergeSet>> {
+    let mut found: Vec<ShardOutputs> = Vec::new();
+    for dir in dirs {
+        let entries = std::fs::read_dir(dir)
+            .map_err(|e| anyhow::anyhow!("cannot read {}: {e}", dir.display()))?;
+        for entry in entries {
+            let path = entry?.path();
+            let fname = match path.file_name().and_then(|n| n.to_str()) {
+                Some(n) => n,
+                None => continue,
+            };
+            let stem = match fname.strip_prefix("sweep_").and_then(|s| s.strip_suffix(".manifest"))
+            {
+                Some(s) => s,
+                None => continue,
+            };
+            // a corrupt stray manifest (e.g. a sweep killed before its
+            // header flushed) must not block merging every OTHER sweep in
+            // the directory — skip it loudly; if it belonged to a
+            // selected set, the missing-shard check reports it
+            let manifest = match Manifest::load(&path) {
+                Ok(m) => m,
+                Err(e) => {
+                    log::warn!("skipping unreadable manifest {}: {e}", path.display());
+                    continue;
+                }
+            };
+            found.push(ShardOutputs {
+                manifest,
+                dir: dir.clone(),
+                stem: stem.to_string(),
+            });
+        }
+    }
+    // group by (name, fingerprint)
+    let mut sets: Vec<Vec<ShardOutputs>> = Vec::new();
+    for s in found {
+        match sets.iter_mut().find(|g| {
+            g[0].manifest.name == s.manifest.name
+                && g[0].manifest.fingerprint == s.manifest.fingerprint
+        }) {
+            Some(g) => g.push(s),
+            None => sets.push(vec![s]),
+        }
+    }
+    // group only — validation (completeness, full 0..N coverage) happens
+    // in merge_set, AFTER any --name filter, so an unrelated in-progress
+    // sweep sharing a directory never blocks merging a finished one
+    let mut out = Vec::new();
+    for mut group in sets {
+        let name = group[0].manifest.name.clone();
+        let total = group[0].manifest.total_cells;
+        group.sort_by_key(|s| s.manifest.shard.index);
+        out.push(MergeSet { name, shards: group, total_cells: total });
+    }
+    out.sort_by(|a, b| a.name.cmp(&b.name));
+    Ok(out)
+}
+
+/// Check a discovered set is mergeable: consistent shard count/grid size,
+/// every shard `0..N` present exactly once, every shard complete.
+fn validate_set(set: &MergeSet) -> anyhow::Result<()> {
+    let name = &set.name;
+    let count = set.shards[0].manifest.shard.count;
+    for s in &set.shards {
+        anyhow::ensure!(
+            s.manifest.shard.count == count && s.manifest.total_cells == set.total_cells,
+            "sweep {name}: shard manifests disagree on the shard count or grid size"
+        );
+        anyhow::ensure!(
+            s.manifest.complete(),
+            "sweep {name}: shard {} is incomplete ({}/{} cells) — finish it with \
+             `hfl sweep ... --shard {} --resume` before merging",
+            s.manifest.shard,
+            s.manifest.completed.len(),
+            s.manifest.shard_cells,
+            s.manifest.shard
+        );
+    }
+    anyhow::ensure!(
+        set.shards.len() == count
+            && set.shards.iter().enumerate().all(|(i, s)| s.manifest.shard.index == i),
+        "sweep {name}: expected shards 0..{count}, found {:?}",
+        set.shards.iter().map(|s| s.manifest.shard.to_string()).collect::<Vec<_>>()
+    );
+    Ok(())
+}
+
+/// Merge one set into `out_dir`, producing `sweep_<name><suffix>` files
+/// byte-identical to an unsharded run's.
+pub fn merge_set(set: &MergeSet, out_dir: &Path) -> anyhow::Result<MergeReport> {
+    validate_set(set)?;
+    std::fs::create_dir_all(out_dir)?;
+    // an unsharded (0/1) set writes the same file names the merge would:
+    // refuse to truncate an input mid-read
+    let out_canon = out_dir.canonicalize()?;
+    for s in &set.shards {
+        anyhow::ensure!(
+            !(s.stem == set.name && s.dir.canonicalize()? == out_canon),
+            "sweep {}: merge output would overwrite the shard outputs in {} — \
+             pick a different --out directory",
+            set.name,
+            s.dir.display()
+        );
+    }
+    let mut outputs = Vec::new();
+    for (suffix, has_header) in STREAMS {
+        let paths: Vec<PathBuf> = set
+            .shards
+            .iter()
+            .map(|s| s.dir.join(format!("sweep_{}{suffix}", s.stem)))
+            .collect();
+        let present = paths.iter().filter(|p| p.exists()).count();
+        if present == 0 {
+            continue;
+        }
+        anyhow::ensure!(
+            present == paths.len(),
+            "sweep {}: stream {suffix} exists in only {present} of {} shards",
+            set.name,
+            paths.len()
+        );
+        let out_path = out_dir.join(format!("sweep_{}{suffix}", set.name));
+        merge_stream(&paths, has_header, set.total_cells, &out_path)?;
+        outputs.push(out_path);
+    }
+    anyhow::ensure!(!outputs.is_empty(), "sweep {}: no output streams found", set.name);
+    Ok(MergeReport {
+        name: set.name.clone(),
+        shards: set.shards.len(),
+        cells: set.total_cells,
+        outputs,
+    })
+}
+
+/// Discover shards in `dirs` (optionally filtered by sweep name) and merge
+/// every complete set into `out_dir`.
+pub fn merge_dirs(
+    dirs: &[PathBuf],
+    name: Option<&str>,
+    out_dir: &Path,
+) -> anyhow::Result<Vec<MergeReport>> {
+    let mut sets = discover(dirs)?;
+    if let Some(n) = name {
+        sets.retain(|s| s.name == n);
+        anyhow::ensure!(!sets.is_empty(), "no shard manifests for sweep {n:?} found");
+    }
+    anyhow::ensure!(!sets.is_empty(), "no shard manifests found in the given directories");
+    // two sets with the same sweep name (e.g. a re-run with a changed spec
+    // next to stale shard outputs) would write the same sweep_<name>.*
+    // files, silently last-wins in discovery order — refuse instead
+    for w in sets.windows(2) {
+        anyhow::ensure!(
+            w[0].name != w[1].name,
+            "sweep {}: multiple distinct shard sets (different spec fingerprints) \
+             found — remove the stale shard outputs/manifests before merging",
+            w[0].name
+        );
+    }
+    sets.iter().map(|s| merge_set(s, out_dir)).collect()
+}
+
+/// Pull the leading cell id out of one output line.
+fn line_cell_id(line: &str) -> anyhow::Result<usize> {
+    let digits = if let Some(rest) = line.strip_prefix("{\"cell\":") {
+        rest.split(|c: char| !c.is_ascii_digit()).next().unwrap_or("")
+    } else {
+        line.split(',').next().unwrap_or("")
+    };
+    digits
+        .parse()
+        .map_err(|_| anyhow::anyhow!("output line has no leading cell id: {line:?}"))
+}
+
+/// One shard's stream with a single-line lookahead.
+struct ShardStream {
+    lines: std::io::Lines<BufReader<File>>,
+    pending: Option<(usize, String)>,
+    path: PathBuf,
+}
+
+impl ShardStream {
+    fn advance(&mut self) -> anyhow::Result<()> {
+        self.pending = match self.lines.next().transpose()? {
+            None => None,
+            Some(l) => Some((line_cell_id(&l)?, l)),
+        };
+        Ok(())
+    }
+}
+
+fn merge_stream(
+    paths: &[PathBuf],
+    has_header: bool,
+    total_cells: usize,
+    out_path: &Path,
+) -> anyhow::Result<()> {
+    let mut streams = Vec::with_capacity(paths.len());
+    let mut header: Option<String> = None;
+    for p in paths {
+        let f = File::open(p)
+            .map_err(|e| anyhow::anyhow!("cannot read {}: {e}", p.display()))?;
+        let mut lines = BufReader::new(f).lines();
+        if has_header {
+            let h = lines
+                .next()
+                .transpose()?
+                .ok_or_else(|| anyhow::anyhow!("{}: empty file", p.display()))?;
+            match &header {
+                None => header = Some(h),
+                Some(prev) => anyhow::ensure!(
+                    *prev == h,
+                    "{}: header differs from the other shards",
+                    p.display()
+                ),
+            }
+        }
+        let mut s = ShardStream { lines, pending: None, path: p.clone() };
+        s.advance()?;
+        streams.push(s);
+    }
+
+    let mut w = BufWriter::new(File::create(out_path)?);
+    if let Some(h) = header {
+        writeln!(w, "{h}")?;
+    }
+    for expect in 0..total_cells {
+        let si = streams
+            .iter()
+            .position(|s| s.pending.as_ref().map(|(id, _)| *id) == Some(expect))
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "cell {expect} missing from every shard of {}",
+                    out_path.display()
+                )
+            })?;
+        let s = &mut streams[si];
+        while let Some((id, line)) = &s.pending {
+            if *id != expect {
+                break;
+            }
+            writeln!(w, "{line}")?;
+            s.advance()?;
+        }
+    }
+    for s in &streams {
+        if let Some((id, _)) = &s.pending {
+            anyhow::bail!(
+                "{}: leftover lines for cell {id} after merging {total_cells} cells",
+                s.path.display()
+            );
+        }
+    }
+    w.flush()?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn leading_ids_parse_for_both_formats() {
+        assert_eq!(line_cell_id("12,ikc,d3qn,10,0,...").unwrap(), 12);
+        assert_eq!(line_cell_id("{\"cell\":7,\"scheduler\":\"ikc\"}").unwrap(), 7);
+        assert!(line_cell_id("scheduler,assigner").is_err());
+        assert!(line_cell_id("{\"other\":1}").is_err());
+    }
+}

@@ -1,5 +1,6 @@
-//! The scenario engine — declarative experiment grids and a parallel sweep
-//! runner, decoupled from any particular model runtime.
+//! The scenario engine — declarative experiment grids and a sharded,
+//! resumable, streaming sweep orchestrator, decoupled from any particular
+//! model runtime.
 //!
 //! The paper's headline results are sweeps over scheduler × assigner ×
 //! scheduling-ratio combinations (Figs. 3–7). Edge association and
@@ -9,8 +10,18 @@
 //!
 //! * [`spec::ScenarioSpec`] — a declarative, TOML-loadable grid of
 //!   (scheduler, assigner, H, seed) cells;
-//! * [`sweep`] — runs every cell, serially or rayon-parallel, with
-//!   per-cell RNG streams so results are independent of thread count;
+//! * [`plan::SweepPlan`] — the orchestration layer: deterministic
+//!   [`plan::CellId`] enumeration, `--shard i/N` selection, serial and
+//!   rayon execution behind one reorder-buffered delivery order, and
+//!   completed-cell manifests for `--resume`;
+//! * [`sink`] — the object-safe [`sink::RecordSink`] streaming consumer
+//!   ([`sink::CsvSink`], [`sink::JsonlSink`], [`sink::MemorySink`]): cells
+//!   stream out as they finish instead of accumulating in memory, with
+//!   byte-identical output for any thread count or shard partition;
+//! * [`merge`] — `hfl merge`: reassemble shard outputs into exactly the
+//!   bytes a single-host run would have produced;
+//! * [`sweep`] — the per-cell execution engine and the in-memory result
+//!   shapes (plus the deprecated pre-orchestration wrappers);
 //! * [`presets`] — the paper figures expressed as specs, plus the default
 //!   `hfl sweep` grid.
 //!
@@ -19,11 +30,19 @@
 //! through any backend (in parallel when the backend is `Sync`, i.e. the
 //! native one).
 
+pub mod merge;
+pub mod plan;
 pub mod presets;
+pub mod sink;
 pub mod spec;
 pub mod sweep;
 
-pub use spec::{ScenarioSpec, SweepCell, SweepMode};
-pub use sweep::{
-    oracle_clusters, run_cell, run_sweep, run_sweep_serial, CellResult, SweepResult, SweepRow,
+pub use merge::{merge_dirs, MergeReport};
+pub use plan::{CellId, Manifest, RunOpts, RunOutcome, Shard, SweepPlan};
+pub use sink::{
+    emit_cell, CellSummary, CsvSink, JsonlSink, MemorySink, MultiSink, RecordSink,
 };
+pub use spec::{ScenarioSpec, SweepCell, SweepMode};
+#[allow(deprecated)]
+pub use sweep::{run_sweep, run_sweep_serial};
+pub use sweep::{oracle_clusters, run_cell, CellResult, SweepResult, SweepRow};

@@ -1,0 +1,989 @@
+//! Sweep orchestration: deterministic cell enumeration, sharding and the
+//! streaming, resumable runner.
+//!
+//! A [`SweepPlan`] is the single source of truth for *which* cells run and
+//! *in what output order* — serial execution, the rayon fan-out and
+//! cross-host shards all derive from the same plan:
+//!
+//! * **[`CellId`]** — the hash-free ordinal of a cell in the spec's
+//!   deterministic nested grid order ([`ScenarioSpec::cells`]). It tags
+//!   the cell's RNG streams, orders every output stream, and is what
+//!   `hfl merge` keys on, so any partition of the id space reassembles
+//!   into exactly the single-host bytes.
+//! * **[`Shard`]** — an `i/N` selector. A shard owns the cells with
+//!   `idx % N == i` (round-robin, so H/seed axes spread evenly across
+//!   hosts), in ascending id order.
+//! * **Streaming + reorder buffer** — cells stream to a
+//!   [`RecordSink`](super::sink::RecordSink) as they finish instead of
+//!   accumulating in memory; a reorder buffer delays out-of-order
+//!   completions so the sink always sees plan order and
+//!   serial/parallel/sharded bytes are identical. A delivery window
+//!   keeps workers from racing ahead of the in-order front, so the
+//!   buffer stays bounded (~2× the worker count) even when one slow
+//!   cell stalls delivery.
+//! * **Resumability** — with [`RunOpts::manifest`] set, the runner appends
+//!   one line per *delivered* cell (its id plus the sink's byte-offset
+//!   cookie) to a shard manifest. `--resume` replays the manifest: the
+//!   finished prefix is skipped, the sink is truncated back to the last
+//!   recorded cut (discarding a partially written crash tail), and the
+//!   run continues appending — producing the same bytes as an
+//!   uninterrupted run.
+//!
+//! The pre-orchestration entry points `run_sweep` / `run_sweep_serial` /
+//! `SweepResult::write_csvs` survive as thin deprecated wrappers over this
+//! API (see [`super::sweep`]).
+
+use std::collections::BTreeMap;
+use std::fs::{File, OpenOptions};
+use std::io::{BufRead, BufReader, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc;
+use std::time::Instant;
+
+use rayon::prelude::*;
+
+use crate::runtime::Backend;
+
+use super::sink::{emit_cell, MemorySink, RecordSink};
+use super::spec::{ScenarioSpec, SweepCell};
+use super::sweep::{run_cell, CellResult, SweepResult};
+
+/// Stable identifier of one grid cell: its ordinal in the spec's
+/// deterministic nested grid order (`SweepCell::idx`). Hash-free, dense,
+/// and identical on every host that loads the same spec.
+pub type CellId = usize;
+
+/// An `i/N` shard selector over the cell id space.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Shard {
+    pub index: usize,
+    pub count: usize,
+}
+
+impl Shard {
+    /// The whole grid (`0/1`).
+    pub fn solo() -> Shard {
+        Shard { index: 0, count: 1 }
+    }
+
+    /// Parse `"i/N"` (e.g. `--shard 2/3`).
+    pub fn parse(s: &str) -> anyhow::Result<Shard> {
+        let (i, n) = s
+            .split_once('/')
+            .ok_or_else(|| anyhow::anyhow!("shard {s:?}: expected i/N (e.g. 0/3)"))?;
+        let index: usize =
+            i.trim().parse().map_err(|_| anyhow::anyhow!("shard {s:?}: bad index"))?;
+        let count: usize =
+            n.trim().parse().map_err(|_| anyhow::anyhow!("shard {s:?}: bad count"))?;
+        anyhow::ensure!(count >= 1, "shard {s:?}: count must be >= 1");
+        anyhow::ensure!(index < count, "shard {s:?}: index must be < count");
+        Ok(Shard { index, count })
+    }
+
+    /// Does this shard own the cell with the given id?
+    pub fn owns(&self, id: CellId) -> bool {
+        id % self.count == self.index
+    }
+}
+
+impl std::fmt::Display for Shard {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}/{}", self.index, self.count)
+    }
+}
+
+/// FNV-1a 64 over a byte string — the spec fingerprint hash. Stable,
+/// dependency-free, and not security-sensitive (it guards against
+/// *accidental* spec/shard mismatches, not adversaries).
+pub(crate) fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+/// Options for a plan run.
+#[derive(Clone, Debug, Default)]
+pub struct RunOpts {
+    /// Write/replay a completed-cell manifest at this path. Required for
+    /// `resume` and for `hfl merge` to recognize the shard's outputs.
+    pub manifest: Option<PathBuf>,
+    /// Skip the cells the manifest records as finished and truncate the
+    /// sink back to the last recorded cut before continuing.
+    pub resume: bool,
+    /// Stop cleanly after delivering this many cells (test/CI aid for
+    /// exercising `--resume`; `None` = run to completion).
+    pub abort_after: Option<usize>,
+}
+
+/// What a run did.
+#[derive(Clone, Debug)]
+pub struct RunOutcome {
+    /// Cells executed and delivered this run.
+    pub cells_run: usize,
+    /// Finished cells skipped via the resume manifest.
+    pub cells_skipped: usize,
+    /// Cells this shard owns in total.
+    pub shard_cells: usize,
+    /// Worker threads used (1 for serial runs).
+    pub threads: usize,
+    pub wall_secs: f64,
+    /// True when `abort_after` stopped the run early.
+    pub aborted: bool,
+}
+
+/// A validated, shard-selected execution plan over one [`ScenarioSpec`].
+#[derive(Clone, Debug)]
+pub struct SweepPlan {
+    pub spec: ScenarioSpec,
+    pub shard: Shard,
+    /// This shard's cells, ascending [`CellId`] order.
+    cells: Vec<SweepCell>,
+    /// Cells in the full grid (all shards).
+    total: usize,
+    /// FNV-1a of the resolved DRL checkpoint's BYTES (`None` when no
+    /// checkpoint resolved). Content, not path: shards legitimately keep
+    /// their checkpoint under different paths (per-shard out dirs), and
+    /// conversely a same-path stale file must not co-merge with a fresh
+    /// one. Computed once at plan construction.
+    ckpt_digest: Option<u64>,
+}
+
+impl SweepPlan {
+    /// Plan the whole grid.
+    pub fn new(spec: ScenarioSpec) -> anyhow::Result<SweepPlan> {
+        SweepPlan::sharded(spec, Shard::solo())
+    }
+
+    /// Plan one shard of the grid. Validates the spec and resolves the
+    /// sweep-level DRL checkpoint once (a missing file is warned about a
+    /// single time and dropped, so d3qn cells quietly fall back to a
+    /// fresh θ instead of re-warning from every parallel worker).
+    pub fn sharded(spec: ScenarioSpec, shard: Shard) -> anyhow::Result<SweepPlan> {
+        spec.validate()?;
+        let mut spec = spec;
+        let mut ckpt_digest = None;
+        if let Some(p) = &spec.drl_checkpoint {
+            match std::fs::read(p) {
+                Ok(bytes) => ckpt_digest = Some(fnv1a64(&bytes)),
+                // only a MISSING file falls back to fresh θ; an existing
+                // but unreadable checkpoint (permissions, I/O error) must
+                // fail loudly, not silently produce untrained results
+                Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                    log::warn!(
+                        "no DRL checkpoint at {} — d3qn cells use fresh untrained θ \
+                         (run `hfl drl-train` for paper-faithful results)",
+                        p.display()
+                    );
+                    spec.drl_checkpoint = None;
+                }
+                Err(e) => {
+                    anyhow::bail!("cannot read DRL checkpoint {}: {e}", p.display())
+                }
+            }
+        }
+        let all = spec.cells();
+        let total = all.len();
+        let cells: Vec<SweepCell> = all.into_iter().filter(|c| shard.owns(c.idx)).collect();
+        Ok(SweepPlan { spec, shard, cells, total, ckpt_digest })
+    }
+
+    /// This shard's cells, ascending id order.
+    pub fn cells(&self) -> &[SweepCell] {
+        &self.cells
+    }
+
+    /// Cells in the full (unsharded) grid.
+    pub fn total_cells(&self) -> usize {
+        self.total
+    }
+
+    /// Output file stem: the spec name, suffixed for real shards so shard
+    /// outputs of the same sweep never collide in a shared directory
+    /// (`grid` → `grid_shard1of3`).
+    pub fn output_stem(&self) -> String {
+        if self.shard.count == 1 {
+            self.spec.name.clone()
+        } else {
+            format!("{}_shard{}of{}", self.spec.name, self.shard.index, self.shard.count)
+        }
+    }
+
+    /// Shard-independent fingerprint of the result-defining spec fields —
+    /// recorded in manifests so `--resume` and `hfl merge` fail loudly on
+    /// a spec that doesn't match the outputs. Includes a digest of the
+    /// RESOLVED DRL checkpoint's *contents* (after `sharded` drops a
+    /// missing file): a host whose checkpoint is absent or stale would
+    /// otherwise run d3qn cells with different θ and merge cleanly into a
+    /// file that is not what a single-host run would have produced —
+    /// while shards that keep identical checkpoint bytes under different
+    /// per-shard paths still co-merge.
+    pub fn fingerprint(&self) -> u64 {
+        let s = &self.spec;
+        let scheds: Vec<String> = s.schedulers.iter().map(|k| k.to_string()).collect();
+        let assigns: Vec<String> = s.assigners.iter().map(|k| k.to_string()).collect();
+        let canon = format!(
+            "{:?}|{}|{}|{:?}|{:?}|{:?}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{:?}|{:?}",
+            s.name,
+            s.mode.name(),
+            s.dataset,
+            scheds,
+            assigns,
+            s.h_values,
+            s.seeds,
+            s.iters,
+            s.seed,
+            s.oracle_clusters,
+            s.k_clusters,
+            s.lr,
+            s.target_acc,
+            s.test_size,
+            s.frac_major,
+            s.system,
+            self.ckpt_digest,
+        );
+        fnv1a64(canon.as_bytes())
+    }
+
+    /// Run this shard on the current thread, streaming to `sink`.
+    pub fn run_serial(
+        &self,
+        backend: Option<&dyn Backend>,
+        sink: &mut dyn RecordSink,
+        opts: &RunOpts,
+    ) -> anyhow::Result<RunOutcome> {
+        let t0 = Instant::now();
+        let (skip, mut manifest) = self.prepare(sink, opts)?;
+        let limit = opts.abort_after.unwrap_or(usize::MAX);
+        let mut run = 0usize;
+        let mut aborted = false;
+        for cell in &self.cells[skip.min(self.cells.len())..] {
+            if run >= limit {
+                aborted = true;
+                break;
+            }
+            let res = run_cell(&self.spec, cell, backend);
+            let res = match res {
+                Ok(r) => r,
+                Err(e) => {
+                    sink.finish().ok();
+                    return Err(e);
+                }
+            };
+            self.deliver(res, sink, &mut manifest)?;
+            run += 1;
+        }
+        sink.finish()?;
+        Ok(RunOutcome {
+            cells_run: run,
+            cells_skipped: skip,
+            shard_cells: self.cells.len(),
+            threads: 1,
+            wall_secs: t0.elapsed().as_secs_f64(),
+            aborted,
+        })
+    }
+
+    /// Run this shard with rayon, fanning cells across cores while the
+    /// calling thread drains completions through the reorder buffer into
+    /// `sink`. `threads == 0` uses the ambient default. The backend is
+    /// shared by all workers, hence `B: Sync` — which the native backend
+    /// satisfies and the PJRT engine deliberately does not (use
+    /// [`SweepPlan::run_serial`] there).
+    pub fn run_parallel<B: Backend + Sync>(
+        &self,
+        backend: Option<&B>,
+        threads: usize,
+        sink: &mut dyn RecordSink,
+        opts: &RunOpts,
+    ) -> anyhow::Result<RunOutcome> {
+        let t0 = Instant::now();
+        let (skip, mut manifest) = self.prepare(sink, opts)?;
+        let todo = &self.cells[skip.min(self.cells.len())..];
+        let limit = opts.abort_after.unwrap_or(usize::MAX);
+        let pool = rayon::ThreadPoolBuilder::new().num_threads(threads).build()?;
+        let effective = pool.current_num_threads().min(todo.len().max(1));
+        if limit == 0 {
+            // match run_serial, which checks the limit BEFORE running a
+            // cell: abort_after=Some(0) delivers nothing on either path
+            sink.finish()?;
+            return Ok(RunOutcome {
+                cells_run: 0,
+                cells_skipped: skip,
+                shard_cells: self.cells.len(),
+                threads: effective,
+                wall_secs: t0.elapsed().as_secs_f64(),
+                aborted: !todo.is_empty(),
+            });
+        }
+
+        // shard-local positions let the drain loop reorder without
+        // consulting global ids
+        let indexed: Vec<(usize, &SweepCell)> = todo.iter().enumerate().collect();
+        let cancelled = AtomicBool::new(false);
+        // delivery window: a worker whose cell is too far ahead of the
+        // in-order delivery front waits on a condvar, so the reorder
+        // buffer (and the finished-but-undelivered results) stay bounded
+        // by ~2x the worker count even when one slow cell stalls the
+        // front — without this, the buffer could grow to the whole
+        // shard, re-creating the all-in-memory peak this layer removes.
+        // Waiters wake exactly when the front advances (or on cancel),
+        // so fast cells are never throttled by polling.
+        let front = std::sync::Mutex::new(0usize);
+        let front_cv = std::sync::Condvar::new();
+        let window = 2 * effective + 2;
+        let (tx, rx) = mpsc::channel::<(usize, anyhow::Result<CellResult>)>();
+
+        let mut run = 0usize;
+        let mut aborted = false;
+        let mut first_err: Option<anyhow::Error> = None;
+        std::thread::scope(|s| {
+            let spec = &self.spec;
+            let indexed = &indexed;
+            let pool = &pool;
+            let cancelled_ref = &cancelled;
+            let front_ref = &front;
+            let front_cv_ref = &front_cv;
+            s.spawn(move || {
+                pool.install(|| {
+                    indexed.par_iter().for_each(|&(i, cell)| {
+                        // deadlock-free: cells are claimed in index order,
+                        // so every cell below the window front is already
+                        // held by a non-waiting worker
+                        {
+                            let mut f =
+                                front_ref.lock().expect("delivery front lock");
+                            while i >= *f + window
+                                && !cancelled_ref.load(Ordering::Relaxed)
+                            {
+                                f = front_cv_ref
+                                    .wait(f)
+                                    .expect("delivery front lock");
+                            }
+                        }
+                        if cancelled_ref.load(Ordering::Relaxed) {
+                            return;
+                        }
+                        let res = run_cell(spec, cell, backend.map(|b| b as &dyn Backend));
+                        let _ = tx.send((i, res));
+                    })
+                });
+                // tx drops here → the drain loop below terminates
+            });
+
+            // cancel = set the flag, then notify under the front mutex so
+            // a worker between its window check and its condvar wait
+            // cannot miss the wakeup
+            let cancel = |cancelled: &AtomicBool| {
+                cancelled.store(true, Ordering::Relaxed);
+                let _g = front.lock().expect("delivery front lock");
+                front_cv.notify_all();
+            };
+            // drain: reorder-buffer completions, deliver in plan order
+            let mut buffer: BTreeMap<usize, CellResult> = BTreeMap::new();
+            let mut next = 0usize;
+            'drain: for (i, res) in rx.iter() {
+                match res {
+                    Err(e) => {
+                        first_err.get_or_insert(e);
+                        cancel(&cancelled);
+                        break 'drain;
+                    }
+                    Ok(cr) => {
+                        buffer.insert(i, cr);
+                    }
+                }
+                while let Some(cr) = buffer.remove(&next) {
+                    if let Err(e) = self.deliver(cr, sink, &mut manifest) {
+                        first_err.get_or_insert(e);
+                        cancel(&cancelled);
+                        break 'drain;
+                    }
+                    next += 1;
+                    {
+                        let mut f = front.lock().expect("delivery front lock");
+                        *f = next;
+                    }
+                    front_cv.notify_all();
+                    run += 1;
+                    if run >= limit {
+                        // only "aborted" if cells actually remain — an
+                        // abort_after equal to the remaining work is a
+                        // clean completion, matching run_serial
+                        aborted = next < todo.len();
+                        cancel(&cancelled);
+                        break 'drain;
+                    }
+                }
+            }
+            // a clean end needs no notify (every cell was delivered, so
+            // no worker can still be outside the window); error/abort
+            // paths notified via cancel above. Dropping the receiver
+            // unblocks nothing (sends are non-blocking) but makes late
+            // sends fail fast.
+            drop(rx);
+        });
+        let finish = sink.finish();
+        if let Some(e) = first_err {
+            return Err(e);
+        }
+        finish?;
+        Ok(RunOutcome {
+            cells_run: run,
+            cells_skipped: skip,
+            shard_cells: self.cells.len(),
+            threads: effective,
+            wall_secs: t0.elapsed().as_secs_f64(),
+            aborted,
+        })
+    }
+
+    /// Run the shard and return the in-memory [`SweepResult`] shape the
+    /// figure drivers aggregate over (no sinks, no manifest).
+    pub fn run_collect<B: Backend + Sync>(
+        &self,
+        backend: Option<&B>,
+        threads: usize,
+    ) -> anyhow::Result<SweepResult> {
+        let mut mem = MemorySink::new();
+        let outcome = self.run_parallel(backend, threads, &mut mem, &RunOpts::default())?;
+        Ok(self.assemble(mem, outcome))
+    }
+
+    /// Serial [`SweepPlan::run_collect`] — works with any backend,
+    /// including the single-threaded PJRT engine.
+    pub fn run_collect_serial(
+        &self,
+        backend: Option<&dyn Backend>,
+    ) -> anyhow::Result<SweepResult> {
+        let mut mem = MemorySink::new();
+        let outcome = self.run_serial(backend, &mut mem, &RunOpts::default())?;
+        Ok(self.assemble(mem, outcome))
+    }
+
+    fn assemble(&self, mem: MemorySink, outcome: RunOutcome) -> SweepResult {
+        let cells = mem
+            .cells
+            .into_iter()
+            .map(|(s, rows)| CellResult {
+                cell: s.cell,
+                rows,
+                converged_at: s.converged_at,
+                assign_latency_mean_s: s.assign_latency_mean_s,
+                wall_secs: s.wall_secs,
+            })
+            .collect();
+        SweepResult {
+            name: self.spec.name.clone(),
+            mode: self.spec.mode,
+            lambda: self.spec.system.lambda,
+            cells,
+            threads: outcome.threads,
+            wall_secs: outcome.wall_secs,
+        }
+    }
+
+    /// Resume bookkeeping: returns how many leading cells to skip and the
+    /// open manifest handle (positioned for appending).
+    fn prepare(
+        &self,
+        sink: &mut dyn RecordSink,
+        opts: &RunOpts,
+    ) -> anyhow::Result<(usize, Option<File>)> {
+        let path = match &opts.manifest {
+            None => {
+                anyhow::ensure!(
+                    !opts.resume,
+                    "resume requested but no manifest path configured"
+                );
+                return Ok((0, None));
+            }
+            Some(p) => p,
+        };
+        if opts.resume && path.exists() {
+            let m = Manifest::load(path)?;
+            self.check_manifest(&m, path)?;
+            // the finished cells must be exactly this shard's leading
+            // prefix (delivery is in plan order, so anything else means a
+            // corrupt or foreign manifest)
+            for (i, (id, _)) in m.completed.iter().enumerate() {
+                anyhow::ensure!(
+                    *id == self.cells[i].idx,
+                    "manifest {}: completed cell #{i} is id {id}, plan expects {} — \
+                     was it produced by a different spec or shard?",
+                    path.display(),
+                    self.cells[i].idx
+                );
+            }
+            let cookie = m
+                .completed
+                .last()
+                .map(|(_, c)| c.clone())
+                .unwrap_or_else(|| m.start_cookie.clone());
+            sink.restore(&cookie)?;
+            let f = OpenOptions::new().write(true).append(true).open(path)?;
+            // cut any torn tail first: appending straight after it would
+            // weld the next entry onto the partial line, creating one
+            // garbage line that stops every future load at this point
+            // (the shard could then never reach complete())
+            f.set_len(m.valid_len)?;
+            Ok((m.completed.len(), Some(f)))
+        } else {
+            let mut f = File::create(path)?;
+            let start = sink.checkpoint()?;
+            writeln!(f, "hfl-sweep-manifest v1")?;
+            writeln!(f, "name={}", self.spec.name)?;
+            writeln!(f, "mode={}", self.spec.mode.name())?;
+            writeln!(f, "fingerprint={:016x}", self.fingerprint())?;
+            writeln!(f, "shard={}", self.shard)?;
+            writeln!(f, "shard_cells={}", self.cells.len())?;
+            writeln!(f, "total_cells={}", self.total)?;
+            writeln!(f, "start={}", fmt_cookie(&start))?;
+            writeln!(f, "cells:")?;
+            f.flush()?;
+            Ok((0, Some(f)))
+        }
+    }
+
+    fn check_manifest(&self, m: &Manifest, path: &Path) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            m.name == self.spec.name
+                && m.fingerprint == self.fingerprint()
+                && m.shard == self.shard
+                && m.shard_cells == self.cells.len()
+                && m.total_cells == self.total,
+            "manifest {} (name={}, fingerprint={:016x}, shard={}) does not match \
+             this plan (name={}, fingerprint={:016x}, shard={}) — refusing to resume",
+            path.display(),
+            m.name,
+            m.fingerprint,
+            m.shard,
+            self.spec.name,
+            self.fingerprint(),
+            self.shard
+        );
+        anyhow::ensure!(
+            m.completed.len() <= self.cells.len(),
+            "manifest {} records {} finished cells, shard only has {}",
+            path.display(),
+            m.completed.len(),
+            self.cells.len()
+        );
+        Ok(())
+    }
+
+    /// Write one finished cell to the sink, then (if a manifest is open)
+    /// flush and record the cut so a crash between cells loses nothing and
+    /// a crash mid-cell is truncated away on resume.
+    fn deliver(
+        &self,
+        res: CellResult,
+        sink: &mut dyn RecordSink,
+        manifest: &mut Option<File>,
+    ) -> anyhow::Result<()> {
+        let id = res.cell.idx;
+        emit_cell(sink, self.spec.system.lambda, &res)?;
+        if let Some(f) = manifest {
+            let cookie = sink.checkpoint()?;
+            // trailing "ok" terminates the line: a crash that tears the
+            // write mid-cookie (e.g. "…,789" → "…,78") would otherwise
+            // still parse as a structurally valid entry and resume to a
+            // wrong byte offset
+            writeln!(f, "{id} {} ok", fmt_cookie(&cookie))?;
+            f.flush()?;
+        }
+        Ok(())
+    }
+}
+
+fn fmt_cookie(cookie: &[u64]) -> String {
+    if cookie.is_empty() {
+        "-".to_string()
+    } else {
+        cookie.iter().map(u64::to_string).collect::<Vec<_>>().join(",")
+    }
+}
+
+fn parse_cookie(s: &str) -> anyhow::Result<Vec<u64>> {
+    if s == "-" {
+        return Ok(Vec::new());
+    }
+    s.split(',')
+        .map(|p| p.parse::<u64>().map_err(|_| anyhow::anyhow!("bad cookie entry {p:?}")))
+        .collect()
+}
+
+/// A parsed shard manifest (see the module docs for the format). Tolerant
+/// of a torn final data line (a crash mid-append): the partial line is
+/// dropped, `valid_len` marks where it started, and the resume path
+/// truncates the file there before appending — otherwise the next
+/// appended entry would concatenate onto the torn tail into one garbage
+/// line that wedges every future load at that point.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub name: String,
+    pub mode: String,
+    pub fingerprint: u64,
+    pub shard: Shard,
+    pub shard_cells: usize,
+    pub total_cells: usize,
+    pub start_cookie: Vec<u64>,
+    /// `(cell id, sink cookie)` per finished cell, delivery order.
+    pub completed: Vec<(CellId, Vec<u64>)>,
+    /// Byte length of the valid prefix (through the last fully parsed,
+    /// newline-terminated line).
+    pub valid_len: u64,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> anyhow::Result<Manifest> {
+        let f = File::open(path)
+            .map_err(|e| anyhow::anyhow!("cannot read manifest {}: {e}", path.display()))?;
+        let mut reader = BufReader::new(f);
+        let mut valid_len = 0u64;
+        let mut buf = String::new();
+        // a line counts only when newline-terminated: a tail flushed
+        // without its '\n' may still be mid-write
+        let mut next_line = |reader: &mut BufReader<File>| -> anyhow::Result<Option<(String, u64)>> {
+            buf.clear();
+            let n = reader.read_line(&mut buf)?;
+            if n == 0 || !buf.ends_with('\n') {
+                return Ok(None);
+            }
+            Ok(Some((buf.trim_end_matches('\n').trim_end_matches('\r').to_string(), n as u64)))
+        };
+        let (magic, n) = next_line(&mut reader)?.unwrap_or_default();
+        anyhow::ensure!(
+            magic == "hfl-sweep-manifest v1",
+            "{}: not an hfl sweep manifest (got {magic:?})",
+            path.display()
+        );
+        valid_len += n;
+        let mut name = None;
+        let mut mode = None;
+        let mut fingerprint = None;
+        let mut shard = None;
+        let mut shard_cells = None;
+        let mut total_cells = None;
+        let mut start_cookie = None;
+        let mut in_cells = false;
+        let mut completed = Vec::new();
+        while let Some((line, n)) = next_line(&mut reader)? {
+            if !in_cells {
+                if line == "cells:" {
+                    in_cells = true;
+                    valid_len += n;
+                    continue;
+                }
+                let (k, v) = line
+                    .split_once('=')
+                    .ok_or_else(|| anyhow::anyhow!("{}: bad header line {line:?}", path.display()))?;
+                match k {
+                    "name" => name = Some(v.to_string()),
+                    "mode" => mode = Some(v.to_string()),
+                    "fingerprint" => {
+                        fingerprint = Some(u64::from_str_radix(v, 16).map_err(|_| {
+                            anyhow::anyhow!("{}: bad fingerprint {v:?}", path.display())
+                        })?)
+                    }
+                    "shard" => shard = Some(Shard::parse(v)?),
+                    "shard_cells" => {
+                        shard_cells = Some(v.parse().map_err(|_| {
+                            anyhow::anyhow!("{}: bad shard_cells {v:?}", path.display())
+                        })?)
+                    }
+                    "total_cells" => {
+                        total_cells = Some(v.parse().map_err(|_| {
+                            anyhow::anyhow!("{}: bad total_cells {v:?}", path.display())
+                        })?)
+                    }
+                    "start" => start_cookie = Some(parse_cookie(v)?),
+                    other => {
+                        anyhow::bail!("{}: unknown header key {other:?}", path.display())
+                    }
+                }
+                valid_len += n;
+                continue;
+            }
+            // data line: "<id> <cookie> ok" — the trailing terminator
+            // proves the line was written whole; a torn final line
+            // (crash mid-append, even mid-digit) lacks it and is dropped
+            let parsed = (|| -> Option<(CellId, Vec<u64>)> {
+                let rest = line.strip_suffix(" ok")?;
+                let (id, cookie) = rest.split_once(' ')?;
+                Some((id.parse().ok()?, parse_cookie(cookie).ok()?))
+            })();
+            match parsed {
+                Some(entry) => {
+                    completed.push(entry);
+                    valid_len += n;
+                }
+                None => break,
+            }
+        }
+        let missing = |what: &str| anyhow::anyhow!("{}: missing {what}", path.display());
+        Ok(Manifest {
+            name: name.ok_or_else(|| missing("name"))?,
+            mode: mode.ok_or_else(|| missing("mode"))?,
+            fingerprint: fingerprint.ok_or_else(|| missing("fingerprint"))?,
+            shard: shard.ok_or_else(|| missing("shard"))?,
+            shard_cells: shard_cells.ok_or_else(|| missing("shard_cells"))?,
+            total_cells: total_cells.ok_or_else(|| missing("total_cells"))?,
+            start_cookie: start_cookie.ok_or_else(|| missing("start"))?,
+            completed,
+            valid_len,
+        })
+    }
+
+    /// All of the shard's cells are recorded as finished.
+    pub fn complete(&self) -> bool {
+        self.completed.len() == self.shard_cells
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::policy::{assign, sched};
+    use crate::scenario::spec::SweepMode;
+
+    fn small_spec() -> ScenarioSpec {
+        let mut system = crate::system::SystemParams::default();
+        system.n_devices = 20;
+        ScenarioSpec {
+            name: "plan_test".into(),
+            mode: SweepMode::Cost,
+            schedulers: vec![sched("fedavg")],
+            assigners: vec![assign("geographic"), assign("round-robin")],
+            h_values: vec![10],
+            seeds: 3,
+            iters: 2,
+            seed: 5,
+            system,
+            ..ScenarioSpec::default()
+        }
+    }
+
+    #[test]
+    fn shard_parse_and_ownership() {
+        let s = Shard::parse("1/3").unwrap();
+        assert_eq!(s, Shard { index: 1, count: 3 });
+        assert!(s.owns(1) && s.owns(4) && !s.owns(0) && !s.owns(2));
+        assert_eq!(s.to_string(), "1/3");
+        assert!(Shard::parse("3/3").is_err());
+        assert!(Shard::parse("0/0").is_err());
+        assert!(Shard::parse("2").is_err());
+        assert!(Shard::parse("a/b").is_err());
+        assert_eq!(Shard::solo(), Shard::parse("0/1").unwrap());
+    }
+
+    #[test]
+    fn shards_partition_the_grid() {
+        let spec = small_spec();
+        let full = SweepPlan::new(spec.clone()).unwrap();
+        assert_eq!(full.cells().len(), full.total_cells());
+        assert_eq!(full.total_cells(), 6);
+        let mut seen = vec![0usize; full.total_cells()];
+        for i in 0..3 {
+            let p = SweepPlan::sharded(spec.clone(), Shard { index: i, count: 3 }).unwrap();
+            assert_eq!(p.total_cells(), 6);
+            for c in p.cells() {
+                seen[c.idx] += 1;
+            }
+            // ascending id order within the shard
+            for w in p.cells().windows(2) {
+                assert!(w[0].idx < w[1].idx);
+            }
+        }
+        assert!(seen.iter().all(|&n| n == 1), "shards overlap or miss cells: {seen:?}");
+    }
+
+    #[test]
+    fn fingerprint_tracks_grid_shape_not_shard() {
+        let spec = small_spec();
+        let a = SweepPlan::new(spec.clone()).unwrap();
+        let b = SweepPlan::sharded(spec.clone(), Shard { index: 1, count: 2 }).unwrap();
+        assert_eq!(a.fingerprint(), b.fingerprint(), "shard must not change the fingerprint");
+        let mut other = spec.clone();
+        other.seeds = 4;
+        let c = SweepPlan::new(other).unwrap();
+        assert_ne!(a.fingerprint(), c.fingerprint());
+        // the RESOLVED checkpoint CONTENT is part of the fingerprint: a
+        // host with the file and one without it (or with stale bytes)
+        // must not co-merge — while the same bytes under different
+        // per-shard paths must
+        let dir = std::env::temp_dir().join(format!("hfl_fp_ckpt_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let ckpt = dir.join("theta.bin");
+        std::fs::write(&ckpt, b"fresh").unwrap();
+        let mut with_ckpt = spec.clone();
+        with_ckpt.drl_checkpoint = Some(ckpt.clone());
+        let d = SweepPlan::new(with_ckpt.clone()).unwrap();
+        assert_ne!(a.fingerprint(), d.fingerprint(), "ckpt presence must change it");
+        let ckpt2 = dir.join("elsewhere").join("theta.bin");
+        std::fs::create_dir_all(ckpt2.parent().unwrap()).unwrap();
+        std::fs::write(&ckpt2, b"fresh").unwrap();
+        let mut moved = spec.clone();
+        moved.drl_checkpoint = Some(ckpt2.clone());
+        let d2 = SweepPlan::new(moved.clone()).unwrap();
+        assert_eq!(d.fingerprint(), d2.fingerprint(), "same bytes, different path must match");
+        std::fs::write(&ckpt2, b"stale").unwrap();
+        let d3 = SweepPlan::new(moved).unwrap();
+        assert_ne!(d.fingerprint(), d3.fingerprint(), "different bytes must not co-merge");
+        // missing file ⇒ resolved to None ⇒ same fingerprint as no-ckpt
+        std::fs::remove_file(&ckpt).unwrap();
+        let e = SweepPlan::new(with_ckpt).unwrap();
+        assert_eq!(a.fingerprint(), e.fingerprint());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn output_stem_distinguishes_shards() {
+        let spec = small_spec();
+        assert_eq!(SweepPlan::new(spec.clone()).unwrap().output_stem(), "plan_test");
+        assert_eq!(
+            SweepPlan::sharded(spec, Shard { index: 2, count: 3 }).unwrap().output_stem(),
+            "plan_test_shard2of3"
+        );
+    }
+
+    #[test]
+    fn manifest_roundtrip_and_torn_tail() {
+        let dir = std::env::temp_dir().join(format!("hfl_manifest_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("m.manifest");
+        let plan = SweepPlan::new(small_spec()).unwrap();
+        let mut mem = MemorySink::new();
+        let opts = RunOpts { manifest: Some(path.clone()), ..RunOpts::default() };
+        let out = plan.run_serial(None, &mut mem, &opts).unwrap();
+        assert_eq!(out.cells_run, 6);
+        let m = Manifest::load(&path).unwrap();
+        assert_eq!(m.name, "plan_test");
+        assert_eq!(m.fingerprint, plan.fingerprint());
+        assert_eq!(m.shard, Shard::solo());
+        assert!(m.complete());
+        assert_eq!(m.completed.len(), 6);
+        for (i, (id, cookie)) in m.completed.iter().enumerate() {
+            assert_eq!(*id, i);
+            assert_eq!(cookie, &[(i + 1) as u64], "memory sink cookie counts cells");
+        }
+        // torn tails are dropped: a crash can tear the final line at any
+        // byte — even mid-digit, where the prefix would still look like a
+        // structurally valid (id, cookie) pair — so only the trailing
+        // " ok" terminator marks a complete entry
+        let base = std::fs::read(&path).unwrap();
+        assert_eq!(m.valid_len, base.len() as u64);
+        for torn in ["7 12", "7 12,34", "7 123,45 o", "7", "7 ", "7 12 ok"] {
+            let mut bytes = base.clone();
+            bytes.extend_from_slice(torn.as_bytes());
+            std::fs::write(&path, bytes).unwrap();
+            let m2 = Manifest::load(&path).unwrap();
+            assert_eq!(m2.completed.len(), 6, "torn line {torn:?} was not dropped");
+            // valid_len marks the cut point resume truncates to
+            assert_eq!(m2.valid_len, base.len() as u64, "torn line {torn:?}");
+        }
+        // a whole newline-terminated extra line IS parsed (and then
+        // rejected by the plan-prefix check at resume time)
+        let mut bytes = base.clone();
+        bytes.extend_from_slice(b"7 12 ok\n");
+        std::fs::write(&path, bytes).unwrap();
+        assert_eq!(Manifest::load(&path).unwrap().completed.len(), 7);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn resume_skips_finished_cells() {
+        let dir = std::env::temp_dir().join(format!("hfl_resume_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("r.manifest");
+        let plan = SweepPlan::new(small_spec()).unwrap();
+
+        let mut first = MemorySink::new();
+        let opts = RunOpts {
+            manifest: Some(path.clone()),
+            abort_after: Some(2),
+            ..RunOpts::default()
+        };
+        let out1 = plan.run_serial(None, &mut first, &opts).unwrap();
+        assert!(out1.aborted);
+        assert_eq!(out1.cells_run, 2);
+
+        let mut second = MemorySink::new();
+        let opts2 = RunOpts { manifest: Some(path.clone()), resume: true, ..RunOpts::default() };
+        let out2 = plan.run_serial(None, &mut second, &opts2).unwrap();
+        assert!(!out2.aborted);
+        assert_eq!(out2.cells_skipped, 2);
+        assert_eq!(out2.cells_run, 4);
+        let ids: Vec<usize> = second.cells.iter().map(|(s, _)| s.cell.idx).collect();
+        assert_eq!(ids, vec![2, 3, 4, 5]);
+        assert!(Manifest::load(&path).unwrap().complete());
+
+        // resuming a complete manifest runs nothing
+        let mut third = MemorySink::new();
+        let out3 = plan.run_serial(None, &mut third, &opts2).unwrap();
+        assert_eq!(out3.cells_run, 0);
+        assert_eq!(out3.cells_skipped, 6);
+
+        // a different spec refuses the manifest
+        let mut other = small_spec();
+        other.iters = 3;
+        let plan2 = SweepPlan::new(other).unwrap();
+        let mut m = MemorySink::new();
+        assert!(plan2.run_serial(None, &mut m, &opts2).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn resume_truncates_a_torn_manifest_tail_instead_of_welding_onto_it() {
+        let dir = std::env::temp_dir().join(format!("hfl_resume_torn_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.manifest");
+        let plan = SweepPlan::new(small_spec()).unwrap();
+
+        let mut first = MemorySink::new();
+        let opts = RunOpts {
+            manifest: Some(path.clone()),
+            abort_after: Some(3),
+            ..RunOpts::default()
+        };
+        plan.run_serial(None, &mut first, &opts).unwrap();
+        // crash mid-append: torn tail with no terminator/newline
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes.extend_from_slice(b"3 4");
+        std::fs::write(&path, bytes).unwrap();
+
+        let mut second = MemorySink::new();
+        let opts2 = RunOpts { manifest: Some(path.clone()), resume: true, ..RunOpts::default() };
+        let out = plan.run_serial(None, &mut second, &opts2).unwrap();
+        assert_eq!(out.cells_skipped, 3);
+        assert_eq!(out.cells_run, 3);
+        // the tail was cut before appending: the manifest parses whole
+        // and records every cell exactly once
+        let m = Manifest::load(&path).unwrap();
+        assert!(m.complete(), "torn tail wedged the manifest: {m:?}");
+        let ids: Vec<usize> = m.completed.iter().map(|(id, _)| *id).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3, 4, 5]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn parallel_delivery_matches_serial_order() {
+        let spec = small_spec();
+        let plan = SweepPlan::new(spec).unwrap();
+        let a = plan.run_collect_serial(None).unwrap();
+        let b = plan
+            .run_collect(None::<&crate::runtime::NativeBackend>, 4)
+            .unwrap();
+        assert_eq!(a.cells.len(), b.cells.len());
+        for (ca, cb) in a.cells.iter().zip(&b.cells) {
+            assert_eq!(ca.cell.idx, cb.cell.idx);
+            for (ra, rb) in ca.rows.iter().zip(&cb.rows) {
+                assert_eq!(ra.t_i.to_bits(), rb.t_i.to_bits());
+                assert_eq!(ra.e_i.to_bits(), rb.e_i.to_bits());
+            }
+        }
+    }
+}

@@ -1,0 +1,646 @@
+//! Streaming record sinks for sweep output.
+//!
+//! The [`RecordSink`] trait is the write side of the sweep orchestration
+//! layer (see [`super::plan::SweepPlan`]): the runner delivers each cell's
+//! per-iteration rows and a per-cell summary **as typed structs, in
+//! deterministic cell order**, and the sink decides the bytes. Because the
+//! runner reorders completions before delivery, a sink never needs
+//! buffering of its own — serial, rayon-parallel and sharded executions of
+//! the same plan hand every sink an identical call sequence, which is what
+//! makes the CSV/JSONL outputs byte-identical across all of them.
+//!
+//! Sinks also participate in resumability: [`RecordSink::checkpoint`]
+//! returns a position cookie (file byte offsets) after a consistent cut,
+//! which the shard manifest records per cell; on `--resume`,
+//! [`RecordSink::restore`] truncates any partially written tail back to
+//! the last recorded cut before the runner continues appending.
+//!
+//! Implementations:
+//! * [`CsvSink`] — the classic `sweep_<name>.csv` + `sweep_<name>_summary.csv`
+//!   pair, byte-compatible with the pre-orchestration `SweepResult::write_csvs`;
+//! * [`JsonlSink`] — the same records as JSON lines (one object per
+//!   iteration / per cell), for downstream tooling that wants typed rows;
+//! * [`MemorySink`] — in-memory collection for tests, the printed summary
+//!   table, and the deprecated `SweepResult` wrappers;
+//! * [`MultiSink`] — fan one delivery out to several sinks (e.g. CSV and
+//!   JSONL side by side) with a combined resume cookie.
+
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use crate::util::csv::{CsvWriter, OffsetFile};
+
+use super::spec::SweepCell;
+use super::sweep::{CellResult, SweepRow};
+
+/// Per-cell summary record, computed by the runner once all of a cell's
+/// rows are in. Wall-clock fields are surfaced for live reporting but MUST
+/// NOT be written to deterministic outputs (they differ run to run).
+#[derive(Clone, Debug)]
+pub struct CellSummary {
+    pub cell: SweepCell,
+    pub iters: usize,
+    pub total_t: f64,
+    pub total_e: f64,
+    /// `total_e + λ·total_t` with the spec's λ.
+    pub objective: f64,
+    pub final_acc: Option<f64>,
+    pub converged_at: Option<usize>,
+    /// Mean wall-clock of the assignment decision (reporting only).
+    pub assign_latency_mean_s: f64,
+    /// Cell wall-clock (reporting only).
+    pub wall_secs: f64,
+}
+
+/// A streaming consumer of sweep records. Object-safe; see the module docs
+/// for the delivery contract.
+pub trait RecordSink {
+    /// One simulated iteration of one cell. Rows of a cell arrive in
+    /// iteration order, cells in plan (CellId) order.
+    fn iter_row(&mut self, cell: &SweepCell, row: &SweepRow) -> anyhow::Result<()>;
+
+    /// Called once per cell, after its last `iter_row`.
+    fn cell_done(&mut self, summary: &CellSummary) -> anyhow::Result<()>;
+
+    /// Flush and return a position cookie marking a consistent cut (file
+    /// byte offsets for file sinks). Recorded in the shard manifest after
+    /// every cell.
+    fn checkpoint(&mut self) -> anyhow::Result<Vec<u64>> {
+        Ok(Vec::new())
+    }
+
+    /// Rewind to a cookie previously returned by
+    /// [`RecordSink::checkpoint`] — drops any bytes written after that cut.
+    fn restore(&mut self, _cookie: &[u64]) -> anyhow::Result<()> {
+        Ok(())
+    }
+
+    /// Whether this sink's output survives the process (file sinks). Non-
+    /// durable sinks (e.g. [`MemorySink`] observers) are excluded from
+    /// [`MultiSink`] resume cookies.
+    fn durable(&self) -> bool {
+        true
+    }
+
+    /// Final flush after the last cell.
+    fn finish(&mut self) -> anyhow::Result<()> {
+        Ok(())
+    }
+}
+
+/// Deliver one finished cell to a sink: all rows, then the summary.
+/// The single translation point from [`CellResult`] to sink calls — the
+/// runner, the deprecated `write_csvs` wrapper and tests all route
+/// through it so every path produces the same call sequence.
+pub fn emit_cell(
+    sink: &mut dyn RecordSink,
+    lambda: f64,
+    c: &CellResult,
+) -> anyhow::Result<()> {
+    for r in &c.rows {
+        sink.iter_row(&c.cell, r)?;
+    }
+    sink.cell_done(&CellSummary {
+        cell: c.cell.clone(),
+        iters: c.rows.len(),
+        total_t: c.total_t(),
+        total_e: c.total_e(),
+        objective: c.objective(lambda),
+        final_acc: c.final_accuracy(),
+        converged_at: c.converged_at,
+        assign_latency_mean_s: c.assign_latency_mean_s,
+        wall_secs: c.wall_secs,
+    })
+}
+
+pub(crate) fn opt_fmt(v: Option<f64>, prec: usize) -> String {
+    match v {
+        Some(x) => format!("{x:.prec$}"),
+        None => String::new(),
+    }
+}
+
+const ROWS_HEADER: [&str; 13] = [
+    "cell", "scheduler", "assigner", "h", "seed", "iter", "t_i", "e_i",
+    "objective", "accuracy", "train_loss", "msg_bytes", "n_scheduled",
+];
+const SUMMARY_HEADER: [&str; 11] = [
+    "cell", "scheduler", "assigner", "h", "seed", "iters", "total_t",
+    "total_e", "objective", "final_acc", "converged_at",
+];
+
+/// The per-iteration + summary CSV pair. Output bytes are a pure function
+/// of the delivered records (no wall-clock columns), and identical to what
+/// the pre-orchestration `SweepResult::write_csvs` wrote.
+pub struct CsvSink {
+    rows: CsvWriter,
+    summary: CsvWriter,
+    rows_path: PathBuf,
+    summary_path: PathBuf,
+}
+
+/// `sweep_<stem>.csv` / `sweep_<stem>_summary.csv` under `out_dir`.
+pub fn csv_paths(out_dir: &Path, stem: &str) -> (PathBuf, PathBuf) {
+    (
+        out_dir.join(format!("sweep_{stem}.csv")),
+        out_dir.join(format!("sweep_{stem}_summary.csv")),
+    )
+}
+
+impl CsvSink {
+    /// Create both files fresh (truncating) and write the headers.
+    pub fn create(out_dir: &Path, stem: &str) -> anyhow::Result<CsvSink> {
+        let (rows_path, summary_path) = csv_paths(out_dir, stem);
+        Ok(CsvSink {
+            rows: CsvWriter::create(&rows_path, &ROWS_HEADER)?,
+            summary: CsvWriter::create(&summary_path, &SUMMARY_HEADER)?,
+            rows_path,
+            summary_path,
+        })
+    }
+
+    /// Reopen existing files for appending (resume; headers not rewritten).
+    pub fn append(out_dir: &Path, stem: &str) -> anyhow::Result<CsvSink> {
+        let (rows_path, summary_path) = csv_paths(out_dir, stem);
+        Ok(CsvSink {
+            rows: CsvWriter::append(&rows_path, ROWS_HEADER.len())?,
+            summary: CsvWriter::append(&summary_path, SUMMARY_HEADER.len())?,
+            rows_path,
+            summary_path,
+        })
+    }
+
+    pub fn paths(&self) -> (&Path, &Path) {
+        (&self.rows_path, &self.summary_path)
+    }
+}
+
+impl RecordSink for CsvSink {
+    fn iter_row(&mut self, cell: &SweepCell, r: &SweepRow) -> anyhow::Result<()> {
+        self.rows.row(&[
+            cell.idx.to_string(),
+            cell.scheduler.to_string(),
+            cell.assigner.to_string(),
+            cell.h.to_string(),
+            cell.seed_i.to_string(),
+            r.iter.to_string(),
+            format!("{:.6}", r.t_i),
+            format!("{:.6}", r.e_i),
+            format!("{:.6}", r.objective),
+            opt_fmt(r.accuracy, 4),
+            opt_fmt(r.train_loss, 4),
+            opt_fmt(r.msg_bytes, 0),
+            r.n_scheduled.to_string(),
+        ])
+    }
+
+    fn cell_done(&mut self, s: &CellSummary) -> anyhow::Result<()> {
+        self.summary.row(&[
+            s.cell.idx.to_string(),
+            s.cell.scheduler.to_string(),
+            s.cell.assigner.to_string(),
+            s.cell.h.to_string(),
+            s.cell.seed_i.to_string(),
+            s.iters.to_string(),
+            format!("{:.6}", s.total_t),
+            format!("{:.6}", s.total_e),
+            format!("{:.6}", s.objective),
+            opt_fmt(s.final_acc, 4),
+            s.converged_at.map(|i| i.to_string()).unwrap_or_default(),
+        ])
+    }
+
+    fn checkpoint(&mut self) -> anyhow::Result<Vec<u64>> {
+        Ok(vec![CSV_COOKIE_TAG, self.rows.position()?, self.summary.position()?])
+    }
+
+    fn restore(&mut self, cookie: &[u64]) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            cookie.len() == 3 && cookie[0] == CSV_COOKIE_TAG,
+            "resume cookie is not a CsvSink cookie — was the sweep resumed \
+             with a different --sink configuration or order?"
+        );
+        self.rows.truncate_to(cookie[1])?;
+        self.summary.truncate_to(cookie[2])
+    }
+
+    fn finish(&mut self) -> anyhow::Result<()> {
+        self.rows.flush()?;
+        self.summary.flush()
+    }
+}
+
+/// Cookie kind tags: the first entry of every file sink's cookie, so a
+/// resume under a reordered `--sink` list (same arity, different kinds)
+/// fails loudly instead of truncating the wrong files.
+const CSV_COOKIE_TAG: u64 = 0xC5F;
+const JSONL_COOKIE_TAG: u64 = 0x150_11;
+
+/// Quoted-JSON string for policy keys / names — delegates to the one
+/// escaping implementation in [`crate::util::json`].
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    crate::util::json::escape(s, &mut out);
+    out
+}
+
+fn json_opt(v: Option<f64>, prec: usize) -> String {
+    match v {
+        Some(x) => format!("{x:.prec$}"),
+        None => "null".into(),
+    }
+}
+
+/// JSON-lines twin of [`CsvSink`]: `sweep_<stem>.jsonl` (one object per
+/// iteration) + `sweep_<stem>_summary.jsonl` (one object per cell). Every
+/// line starts with the `"cell"` id, which is what `hfl merge` keys on.
+/// Numeric precision matches the CSVs so both formats stay deterministic.
+/// Checkpoint/restore ride on the same [`OffsetFile`] primitive as the
+/// CSV writer, so the resume-cut invariants live in one place.
+pub struct JsonlSink {
+    rows: OffsetFile,
+    summary: OffsetFile,
+}
+
+/// `sweep_<stem>.jsonl` / `sweep_<stem>_summary.jsonl` under `out_dir`.
+pub fn jsonl_paths(out_dir: &Path, stem: &str) -> (PathBuf, PathBuf) {
+    (
+        out_dir.join(format!("sweep_{stem}.jsonl")),
+        out_dir.join(format!("sweep_{stem}_summary.jsonl")),
+    )
+}
+
+impl JsonlSink {
+    pub fn create(out_dir: &Path, stem: &str) -> anyhow::Result<JsonlSink> {
+        let (rows, summary) = jsonl_paths(out_dir, stem);
+        Ok(JsonlSink {
+            rows: OffsetFile::create(rows)?,
+            summary: OffsetFile::create(summary)?,
+        })
+    }
+
+    pub fn append(out_dir: &Path, stem: &str) -> anyhow::Result<JsonlSink> {
+        let (rows, summary) = jsonl_paths(out_dir, stem);
+        Ok(JsonlSink {
+            rows: OffsetFile::append(rows)?,
+            summary: OffsetFile::append(summary)?,
+        })
+    }
+
+    pub fn paths(&self) -> (&Path, &Path) {
+        (self.rows.path(), self.summary.path())
+    }
+}
+
+impl RecordSink for JsonlSink {
+    fn iter_row(&mut self, cell: &SweepCell, r: &SweepRow) -> anyhow::Result<()> {
+        writeln!(
+            self.rows,
+            "{{\"cell\":{},\"scheduler\":{},\"assigner\":{},\"h\":{},\"seed\":{},\
+             \"iter\":{},\"t_i\":{:.6},\"e_i\":{:.6},\"objective\":{:.6},\
+             \"accuracy\":{},\"train_loss\":{},\"msg_bytes\":{},\"n_scheduled\":{}}}",
+            cell.idx,
+            json_str(&cell.scheduler.to_string()),
+            json_str(&cell.assigner.to_string()),
+            cell.h,
+            cell.seed_i,
+            r.iter,
+            r.t_i,
+            r.e_i,
+            r.objective,
+            json_opt(r.accuracy, 4),
+            json_opt(r.train_loss, 4),
+            json_opt(r.msg_bytes, 0),
+            r.n_scheduled,
+        )?;
+        Ok(())
+    }
+
+    fn cell_done(&mut self, s: &CellSummary) -> anyhow::Result<()> {
+        writeln!(
+            self.summary,
+            "{{\"cell\":{},\"scheduler\":{},\"assigner\":{},\"h\":{},\"seed\":{},\
+             \"iters\":{},\"total_t\":{:.6},\"total_e\":{:.6},\"objective\":{:.6},\
+             \"final_acc\":{},\"converged_at\":{}}}",
+            s.cell.idx,
+            json_str(&s.cell.scheduler.to_string()),
+            json_str(&s.cell.assigner.to_string()),
+            s.cell.h,
+            s.cell.seed_i,
+            s.iters,
+            s.total_t,
+            s.total_e,
+            s.objective,
+            json_opt(s.final_acc, 4),
+            s.converged_at.map(|i| i.to_string()).unwrap_or_else(|| "null".into()),
+        )?;
+        Ok(())
+    }
+
+    fn checkpoint(&mut self) -> anyhow::Result<Vec<u64>> {
+        Ok(vec![JSONL_COOKIE_TAG, self.rows.position()?, self.summary.position()?])
+    }
+
+    fn restore(&mut self, cookie: &[u64]) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            cookie.len() == 3 && cookie[0] == JSONL_COOKIE_TAG,
+            "resume cookie is not a JsonlSink cookie — was the sweep resumed \
+             with a different --sink configuration or order?"
+        );
+        self.rows.truncate_to(cookie[1])?;
+        self.summary.truncate_to(cookie[2])
+    }
+
+    fn finish(&mut self) -> anyhow::Result<()> {
+        self.rows.flush()?;
+        self.summary.flush()
+    }
+}
+
+/// In-memory sink: collects summaries (and optionally the full rows) for
+/// tests, the printed sweep table and the deprecated `SweepResult`
+/// wrappers. Not durable — [`MultiSink`] leaves it out of resume cookies.
+#[derive(Default)]
+pub struct MemorySink {
+    keep_rows: bool,
+    pending: Vec<SweepRow>,
+    /// One entry per delivered cell, in delivery (plan) order.
+    pub cells: Vec<(CellSummary, Vec<SweepRow>)>,
+}
+
+impl MemorySink {
+    /// Collect summaries and rows.
+    pub fn new() -> MemorySink {
+        MemorySink { keep_rows: true, ..MemorySink::default() }
+    }
+
+    /// Collect summaries only (the sweep table needs no rows).
+    pub fn summaries_only() -> MemorySink {
+        MemorySink::default()
+    }
+}
+
+impl RecordSink for MemorySink {
+    fn iter_row(&mut self, _cell: &SweepCell, r: &SweepRow) -> anyhow::Result<()> {
+        if self.keep_rows {
+            self.pending.push(r.clone());
+        }
+        Ok(())
+    }
+
+    fn cell_done(&mut self, s: &CellSummary) -> anyhow::Result<()> {
+        self.cells.push((s.clone(), std::mem::take(&mut self.pending)));
+        Ok(())
+    }
+
+    fn checkpoint(&mut self) -> anyhow::Result<Vec<u64>> {
+        Ok(vec![self.cells.len() as u64])
+    }
+
+    /// Drop cells past the cookie. An in-memory sink cannot replay what a
+    /// previous process collected, so a fresh instance resuming a manifest
+    /// legitimately starts empty — restore only ever truncates, never
+    /// errors on "too little content".
+    fn restore(&mut self, cookie: &[u64]) -> anyhow::Result<()> {
+        anyhow::ensure!(cookie.len() == 1, "MemorySink cookie must hold 1 count");
+        self.cells.truncate((cookie[0] as usize).min(self.cells.len()));
+        self.pending.clear();
+        Ok(())
+    }
+
+    fn durable(&self) -> bool {
+        false
+    }
+}
+
+/// Fan every delivery out to several sinks. The resume cookie is the
+/// concatenation of the durable children's cookies (each prefixed by its
+/// length), so a cookie recorded with one `--sink` configuration fails
+/// loudly if restored under another.
+pub struct MultiSink<'a> {
+    sinks: Vec<&'a mut dyn RecordSink>,
+}
+
+impl<'a> MultiSink<'a> {
+    pub fn new(sinks: Vec<&'a mut dyn RecordSink>) -> MultiSink<'a> {
+        MultiSink { sinks }
+    }
+}
+
+impl RecordSink for MultiSink<'_> {
+    fn iter_row(&mut self, cell: &SweepCell, r: &SweepRow) -> anyhow::Result<()> {
+        for s in &mut self.sinks {
+            s.iter_row(cell, r)?;
+        }
+        Ok(())
+    }
+
+    fn cell_done(&mut self, summary: &CellSummary) -> anyhow::Result<()> {
+        for s in &mut self.sinks {
+            s.cell_done(summary)?;
+        }
+        Ok(())
+    }
+
+    fn checkpoint(&mut self) -> anyhow::Result<Vec<u64>> {
+        let mut out = Vec::new();
+        for s in &mut self.sinks {
+            if !s.durable() {
+                continue;
+            }
+            let c = s.checkpoint()?;
+            out.push(c.len() as u64);
+            out.extend(c);
+        }
+        Ok(out)
+    }
+
+    fn restore(&mut self, cookie: &[u64]) -> anyhow::Result<()> {
+        // validate the whole partition FIRST: applying child restores as
+        // the walk goes would truncate/extend real output files with the
+        // wrong offsets before a later mismatch errors out (e.g. a
+        // resume under a different --sink set feeding CSV offsets to the
+        // JSONL files)
+        let durable = self.sinks.iter().filter(|s| s.durable()).count();
+        let mut spans = Vec::with_capacity(durable);
+        let mut at = 0usize;
+        for _ in 0..durable {
+            anyhow::ensure!(
+                at < cookie.len(),
+                "resume cookie too short — was the sweep resumed with a \
+                 different --sink configuration?"
+            );
+            let len = cookie[at] as usize;
+            at += 1;
+            anyhow::ensure!(
+                at + len <= cookie.len(),
+                "resume cookie truncated — was the sweep resumed with a \
+                 different --sink configuration?"
+            );
+            spans.push(at..at + len);
+            at += len;
+        }
+        anyhow::ensure!(
+            at == cookie.len(),
+            "resume cookie has leftover entries — was the sweep resumed \
+             with a different --sink configuration?"
+        );
+        let mut spans = spans.into_iter();
+        for s in &mut self.sinks {
+            if !s.durable() {
+                continue;
+            }
+            let span = spans.next().expect("span per durable sink");
+            s.restore(&cookie[span])?;
+        }
+        Ok(())
+    }
+
+    fn durable(&self) -> bool {
+        self.sinks.iter().any(|s| s.durable())
+    }
+
+    fn finish(&mut self) -> anyhow::Result<()> {
+        for s in &mut self.sinks {
+            s.finish()?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::policy::{assign, sched};
+
+    fn cell(idx: usize) -> SweepCell {
+        SweepCell {
+            idx,
+            scheduler: sched("fedavg"),
+            assigner: assign("round-robin"),
+            h: 10,
+            seed_i: 0,
+        }
+    }
+
+    fn row(iter: usize) -> SweepRow {
+        SweepRow {
+            iter,
+            t_i: 1.5,
+            e_i: 2.5,
+            objective: 4.0,
+            accuracy: None,
+            train_loss: None,
+            msg_bytes: None,
+            n_scheduled: 10,
+        }
+    }
+
+    fn summary(idx: usize) -> CellSummary {
+        CellSummary {
+            cell: cell(idx),
+            iters: 1,
+            total_t: 1.5,
+            total_e: 2.5,
+            objective: 4.0,
+            final_acc: None,
+            converged_at: None,
+            assign_latency_mean_s: 0.0,
+            wall_secs: 0.0,
+        }
+    }
+
+    #[test]
+    fn csv_sink_restore_drops_the_tail() {
+        let dir = std::env::temp_dir().join(format!("hfl_sink_csv_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let want;
+        {
+            let mut s = CsvSink::create(&dir, "t").unwrap();
+            emit(&mut s, 0);
+            let cut = s.checkpoint().unwrap();
+            emit(&mut s, 1);
+            s.restore(&cut).unwrap();
+            emit(&mut s, 1);
+            s.finish().unwrap();
+            want = read_pair(&dir, "t");
+        }
+        // a straight-through run writes the same bytes
+        let dir2 = dir.join("straight");
+        std::fs::create_dir_all(&dir2).unwrap();
+        let mut s = CsvSink::create(&dir2, "t").unwrap();
+        emit(&mut s, 0);
+        emit(&mut s, 1);
+        s.finish().unwrap();
+        assert_eq!(read_pair(&dir2, "t"), want);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn jsonl_lines_are_valid_json_shapes() {
+        let dir = std::env::temp_dir().join(format!("hfl_sink_jsonl_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut s = JsonlSink::create(&dir, "t").unwrap();
+        emit(&mut s, 0);
+        s.finish().unwrap();
+        let rows = std::fs::read_to_string(dir.join("sweep_t.jsonl")).unwrap();
+        let line = rows.lines().next().unwrap();
+        assert!(line.starts_with("{\"cell\":0,"), "{line}");
+        crate::util::json::Json::parse(line).unwrap();
+        let sums = std::fs::read_to_string(dir.join("sweep_t_summary.jsonl")).unwrap();
+        crate::util::json::Json::parse(sums.lines().next().unwrap()).unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn multi_sink_cookie_skips_nondurable_children() {
+        let dir = std::env::temp_dir().join(format!("hfl_sink_multi_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut csv = CsvSink::create(&dir, "m").unwrap();
+        let mut mem = MemorySink::new();
+        let mut multi = MultiSink::new(vec![&mut csv, &mut mem]);
+        emit(&mut multi, 0);
+        let cookie = multi.checkpoint().unwrap();
+        // 1 durable child with a tagged 3-entry cookie → [3, tag, o1, o2]
+        assert_eq!(cookie.len(), 4);
+        assert_eq!(cookie[0], 3);
+        emit(&mut multi, 1);
+        multi.restore(&cookie).unwrap();
+        assert!(multi.restore(&cookie[..2]).is_err(), "truncated cookie accepted");
+        drop(multi);
+        // the memory observer kept both cells (restore skipped it)
+        assert_eq!(mem.cells.len(), 2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn cookie_kind_tags_reject_swapped_sinks() {
+        let dir = std::env::temp_dir().join(format!("hfl_sink_swap_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut csv = CsvSink::create(&dir, "s").unwrap();
+        let mut jsonl = JsonlSink::create(&dir, "s").unwrap();
+        emit(&mut csv, 0);
+        emit(&mut jsonl, 0);
+        let csv_cookie = csv.checkpoint().unwrap();
+        let jsonl_cookie = jsonl.checkpoint().unwrap();
+        // a CSV cookie must never truncate JSONL files (and vice versa) —
+        // same arity, so only the kind tag catches the swap
+        assert!(jsonl.restore(&csv_cookie).is_err(), "jsonl accepted a csv cookie");
+        assert!(csv.restore(&jsonl_cookie).is_err(), "csv accepted a jsonl cookie");
+        csv.restore(&csv_cookie).unwrap();
+        jsonl.restore(&jsonl_cookie).unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    fn emit(s: &mut dyn RecordSink, idx: usize) {
+        s.iter_row(&cell(idx), &row(0)).unwrap();
+        s.cell_done(&summary(idx)).unwrap();
+    }
+
+    fn read_pair(dir: &Path, stem: &str) -> (String, String) {
+        (
+            std::fs::read_to_string(dir.join(format!("sweep_{stem}.csv"))).unwrap(),
+            std::fs::read_to_string(dir.join(format!("sweep_{stem}_summary.csv"))).unwrap(),
+        )
+    }
+}

@@ -64,7 +64,10 @@ impl SweepMode {
 /// One point of the sweep grid.
 #[derive(Clone, Debug)]
 pub struct SweepCell {
-    /// Position in deterministic grid order (also the RNG stream tag).
+    /// Position in deterministic grid order (also the RNG stream tag) —
+    /// the cell's [`crate::scenario::CellId`]: every host that loads the
+    /// same spec computes the same ids, which is what makes `--shard i/N`
+    /// selection and `hfl merge` reassembly possible.
     pub idx: usize,
     /// Canonical scheduler policy key (see [`crate::policy`]).
     pub scheduler: PolicyKey,
@@ -265,7 +268,8 @@ impl ScenarioSpec {
     /// Expand the grid in deterministic nested order (scheduler, assigner,
     /// H, seed). The cell index both orders the CSV output and tags each
     /// cell's independent RNG stream, so results are identical no matter
-    /// how cells are distributed across threads.
+    /// how cells are distributed across threads — or across hosts
+    /// ([`crate::scenario::SweepPlan`] shards this list by `idx % N`).
     pub fn cells(&self) -> Vec<SweepCell> {
         let mut out = Vec::new();
         let mut idx = 0usize;

@@ -1,5 +1,10 @@
-//! The sweep runner: execute every cell of a [`ScenarioSpec`], serially or
-//! fanned across cores with rayon.
+//! The per-cell execution engine ([`run_cell`]) and the in-memory result
+//! shapes ([`SweepRow`], [`CellResult`], [`SweepResult`]).
+//!
+//! Orchestration — which cells run, sharding, streaming output, resume —
+//! lives in [`super::plan::SweepPlan`] / [`super::sink::RecordSink`]; the
+//! `run_sweep` / `run_sweep_serial` / [`SweepResult::write_csvs`] entry
+//! points below survive only as deprecated wrappers over that API.
 //!
 //! Determinism contract: every RNG stream a cell uses is a pure function
 //! of the spec and the cell's grid coordinates — the random *deployment*
@@ -20,8 +25,6 @@
 use std::path::Path;
 use std::time::Instant;
 
-use rayon::prelude::*;
-
 use crate::allocation::SolverOpts;
 use crate::assignment::evaluate;
 use crate::data::{partition, DeviceData};
@@ -33,7 +36,6 @@ use crate::policy::{
 };
 use crate::runtime::Backend;
 use crate::system::{SystemParams, Topology};
-use crate::util::csv::CsvWriter;
 use crate::util::{stats, Rng};
 
 use super::spec::{ScenarioSpec, SweepCell, SweepMode};
@@ -169,7 +171,8 @@ fn cell_clusters(
     device_data: &[DeviceData],
     seed: u64,
 ) -> anyhow::Result<Option<Vec<Vec<usize>>>> {
-    let entry = PolicyRegistry::global()
+    let reg = PolicyRegistry::global();
+    let entry = reg
         .sched_entry(&cell.scheduler.name)
         .ok_or_else(|| anyhow::anyhow!("unknown scheduler policy {}", cell.scheduler))?;
     let aux = match entry.clusters {
@@ -334,154 +337,57 @@ pub fn run_cell(
     }
 }
 
-/// Resolve the sweep-level DRL checkpoint once up front: a missing file is
-/// warned about a single time and dropped, so d3qn cells quietly fall back
-/// to a fresh θ instead of re-warning from every parallel worker.
-fn resolve_checkpoint(spec: &ScenarioSpec) -> ScenarioSpec {
-    let mut s = spec.clone();
-    if let Some(p) = &s.drl_checkpoint {
-        if !p.exists() {
-            log::warn!(
-                "no DRL checkpoint at {} — d3qn cells use fresh untrained θ \
-                 (run `hfl drl-train` for paper-faithful results)",
-                p.display()
-            );
-            s.drl_checkpoint = None;
-        }
-    }
-    s
-}
-
-fn collect_results(
-    spec: &ScenarioSpec,
-    results: Vec<anyhow::Result<CellResult>>,
-    threads: usize,
-    t0: Instant,
-) -> anyhow::Result<SweepResult> {
-    let mut cells = Vec::with_capacity(results.len());
-    for r in results {
-        cells.push(r?);
-    }
-    Ok(SweepResult {
-        name: spec.name.clone(),
-        mode: spec.mode,
-        lambda: spec.system.lambda,
-        cells,
-        threads,
-        wall_secs: t0.elapsed().as_secs_f64(),
-    })
-}
-
 /// Run the sweep with rayon, fanning independent cells across cores.
 ///
 /// `threads == 0` uses the ambient default (`RAYON_NUM_THREADS` or the
 /// core count). The backend is shared by all workers, hence `B: Sync` —
 /// which the native backend satisfies and the PJRT engine deliberately
 /// does not (use [`run_sweep_serial`] there).
+#[deprecated(
+    note = "use scenario::SweepPlan — run_parallel streams to a RecordSink, \
+            run_collect keeps this in-memory shape"
+)]
 pub fn run_sweep<B: Backend + Sync>(
     spec: &ScenarioSpec,
     backend: Option<&B>,
     threads: usize,
 ) -> anyhow::Result<SweepResult> {
-    spec.validate()?;
-    let spec = resolve_checkpoint(spec);
-    let spec = &spec;
-    let cells = spec.cells();
-    let pool = rayon::ThreadPoolBuilder::new().num_threads(threads).build()?;
-    let effective = pool.current_num_threads().min(cells.len().max(1));
-    let t0 = Instant::now();
-    let results: Vec<anyhow::Result<CellResult>> = pool.install(|| {
-        cells
-            .par_iter()
-            .map(|cell| run_cell(spec, cell, backend.map(|b| b as &dyn Backend)))
-            .collect()
-    });
-    collect_results(spec, results, effective, t0)
+    super::plan::SweepPlan::new(spec.clone())?.run_collect(backend, threads)
 }
 
 /// Run the sweep on the current thread — works with any backend including
 /// the single-threaded PJRT engine. Produces byte-identical results to
 /// [`run_sweep`] on the same spec.
+#[deprecated(
+    note = "use scenario::SweepPlan — run_serial streams to a RecordSink, \
+            run_collect_serial keeps this in-memory shape"
+)]
 pub fn run_sweep_serial(
     spec: &ScenarioSpec,
     backend: Option<&dyn Backend>,
 ) -> anyhow::Result<SweepResult> {
-    spec.validate()?;
-    let spec = resolve_checkpoint(spec);
-    let t0 = Instant::now();
-    let results: Vec<anyhow::Result<CellResult>> = spec
-        .cells()
-        .iter()
-        .map(|cell| run_cell(&spec, cell, backend))
-        .collect();
-    collect_results(&spec, results, 1, t0)
-}
-
-fn opt_fmt(v: Option<f64>, prec: usize) -> String {
-    match v {
-        Some(x) => format!("{x:.prec$}"),
-        None => String::new(),
-    }
+    super::plan::SweepPlan::new(spec.clone())?.run_collect_serial(backend)
 }
 
 impl SweepResult {
     /// Write the per-iteration and per-cell CSVs under `out_dir`. Output is
     /// a pure function of the spec (no wall-clock columns), so serial and
     /// parallel sweeps of the same spec produce byte-identical files.
-    pub fn write_csvs(&self, out_dir: &Path) -> anyhow::Result<(std::path::PathBuf, std::path::PathBuf)> {
-        let rows_path = out_dir.join(format!("sweep_{}.csv", self.name));
-        let summary_path = out_dir.join(format!("sweep_{}_summary.csv", self.name));
-        let mut rows_csv = CsvWriter::create(
-            &rows_path,
-            &[
-                "cell", "scheduler", "assigner", "h", "seed", "iter", "t_i", "e_i",
-                "objective", "accuracy", "train_loss", "msg_bytes", "n_scheduled",
-            ],
-        )?;
-        let mut sum_csv = CsvWriter::create(
-            &summary_path,
-            &[
-                "cell", "scheduler", "assigner", "h", "seed", "iters", "total_t",
-                "total_e", "objective", "final_acc", "converged_at",
-            ],
-        )?;
+    #[deprecated(
+        note = "use scenario::CsvSink with SweepPlan::run_* — this buffers \
+                the whole sweep in memory before writing"
+    )]
+    pub fn write_csvs(
+        &self,
+        out_dir: &Path,
+    ) -> anyhow::Result<(std::path::PathBuf, std::path::PathBuf)> {
+        let mut sink = super::sink::CsvSink::create(out_dir, &self.name)?;
         for c in &self.cells {
-            let sched = c.cell.scheduler.to_string();
-            let assigner = c.cell.assigner.to_string();
-            for r in &c.rows {
-                rows_csv.row(&[
-                    c.cell.idx.to_string(),
-                    sched.clone(),
-                    assigner.clone(),
-                    c.cell.h.to_string(),
-                    c.cell.seed_i.to_string(),
-                    r.iter.to_string(),
-                    format!("{:.6}", r.t_i),
-                    format!("{:.6}", r.e_i),
-                    format!("{:.6}", r.objective),
-                    opt_fmt(r.accuracy, 4),
-                    opt_fmt(r.train_loss, 4),
-                    opt_fmt(r.msg_bytes, 0),
-                    r.n_scheduled.to_string(),
-                ])?;
-            }
-            sum_csv.row(&[
-                c.cell.idx.to_string(),
-                sched,
-                assigner,
-                c.cell.h.to_string(),
-                c.cell.seed_i.to_string(),
-                c.rows.len().to_string(),
-                format!("{:.6}", c.total_t()),
-                format!("{:.6}", c.total_e()),
-                format!("{:.6}", c.objective(self.lambda)),
-                opt_fmt(c.final_accuracy(), 4),
-                c.converged_at.map(|i| i.to_string()).unwrap_or_default(),
-            ])?;
+            super::sink::emit_cell(&mut sink, self.lambda, c)?;
         }
-        rows_csv.flush()?;
-        sum_csv.flush()?;
-        Ok((rows_path, summary_path))
+        sink.finish()?;
+        let (rows, summary) = sink.paths();
+        Ok((rows.to_path_buf(), summary.to_path_buf()))
     }
 
     /// Cells grouped by (scheduler key, assigner key, h), preserving grid

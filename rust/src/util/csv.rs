@@ -3,12 +3,91 @@
 //! Fields containing commas/quotes/newlines are quoted per RFC 4180 so the
 //! files load cleanly in pandas/gnuplot.
 
-use std::fs::File;
-use std::io::{BufWriter, Write};
-use std::path::Path;
+use std::fs::{File, OpenOptions};
+use std::io::{BufWriter, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+
+/// Append-only output file with byte-offset checkpoints — the shared
+/// primitive under [`CsvWriter`] and the scenario JSONL sink. Resume
+/// cookies are [`OffsetFile::position`] values; [`OffsetFile::truncate_to`]
+/// rewinds to one, holding the invariant (in exactly one place) that a
+/// restore never NUL-pads a file shorter than the recorded offset.
+pub struct OffsetFile {
+    w: BufWriter<File>,
+    path: PathBuf,
+}
+
+impl OffsetFile {
+    /// Create (truncating) the file and its parent dirs.
+    pub fn create<P: AsRef<Path>>(path: P) -> anyhow::Result<Self> {
+        let path = path.as_ref().to_path_buf();
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        Ok(OffsetFile { w: BufWriter::new(File::create(&path)?), path })
+    }
+
+    /// Reopen an existing file positioned at its end (no truncation).
+    pub fn append<P: AsRef<Path>>(path: P) -> anyhow::Result<Self> {
+        let path = path.as_ref().to_path_buf();
+        let mut f = OpenOptions::new()
+            .write(true)
+            .open(&path)
+            .map_err(|e| anyhow::anyhow!("cannot append to {}: {e}", path.display()))?;
+        f.seek(SeekFrom::End(0))?;
+        Ok(OffsetFile { w: BufWriter::new(f), path })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Flush and report the current byte offset — a consistent cut point
+    /// a resume manifest can record.
+    pub fn position(&mut self) -> anyhow::Result<u64> {
+        self.w.flush()?;
+        Ok(self.w.get_mut().stream_position()?)
+    }
+
+    /// Truncate back to an offset previously returned by
+    /// [`OffsetFile::position`] and continue writing from there. Errors
+    /// if the file is already SHORTER than `pos` — `set_len` would
+    /// silently NUL-pad the gap and the "restored" output would carry
+    /// zero bytes instead of the rows the offset promises (e.g. a shard
+    /// file damaged or partially copied before a resume).
+    pub fn truncate_to(&mut self, pos: u64) -> anyhow::Result<()> {
+        self.w.flush()?;
+        let f = self.w.get_mut();
+        let len = f.metadata()?.len();
+        anyhow::ensure!(
+            pos <= len,
+            "cannot restore {} to offset {pos}: file is only {len} bytes \
+             (damaged or partially copied output?)",
+            self.path.display()
+        );
+        f.set_len(pos)?;
+        f.seek(SeekFrom::Start(pos))?;
+        Ok(())
+    }
+
+    pub fn flush(&mut self) -> anyhow::Result<()> {
+        self.w.flush()?;
+        Ok(())
+    }
+}
+
+impl Write for OffsetFile {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        self.w.write(buf)
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        self.w.flush()
+    }
+}
 
 pub struct CsvWriter {
-    w: BufWriter<File>,
+    w: OffsetFile,
     cols: usize,
 }
 
@@ -23,16 +102,31 @@ fn quote(field: &str) -> String {
 impl CsvWriter {
     /// Create the file (and parent dirs) and write the header row.
     pub fn create<P: AsRef<Path>>(path: P, header: &[&str]) -> anyhow::Result<Self> {
-        if let Some(dir) = path.as_ref().parent() {
-            std::fs::create_dir_all(dir)?;
-        }
-        let mut w = BufWriter::new(File::create(path)?);
+        let mut w = OffsetFile::create(path)?;
         writeln!(
             w,
             "{}",
             header.iter().map(|h| quote(h)).collect::<Vec<_>>().join(",")
         )?;
         Ok(CsvWriter { w, cols: header.len() })
+    }
+
+    /// Reopen an existing CSV for appending (no header is written; `cols`
+    /// must match the header the file was created with). Used by resumed
+    /// sweep shards — pair with [`CsvWriter::position`] /
+    /// [`CsvWriter::truncate_to`] to discard a partially written tail.
+    pub fn append<P: AsRef<Path>>(path: P, cols: usize) -> anyhow::Result<Self> {
+        Ok(CsvWriter { w: OffsetFile::append(path)?, cols })
+    }
+
+    /// See [`OffsetFile::position`].
+    pub fn position(&mut self) -> anyhow::Result<u64> {
+        self.w.position()
+    }
+
+    /// See [`OffsetFile::truncate_to`].
+    pub fn truncate_to(&mut self, pos: u64) -> anyhow::Result<()> {
+        self.w.truncate_to(pos)
     }
 
     pub fn row(&mut self, fields: &[String]) -> anyhow::Result<()> {
@@ -76,6 +170,34 @@ mod tests {
         }
         let s = std::fs::read_to_string(&path).unwrap();
         assert_eq!(s, "a,b\n1,\"x,\"\"y\"\"\"\n");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn append_truncate_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("hfl_csv_app_{}", std::process::id()));
+        let path = dir.join("t.csv");
+        let cut;
+        {
+            let mut w = CsvWriter::create(&path, &["a", "b"]).unwrap();
+            w.row(&["1".into(), "2".into()]).unwrap();
+            cut = w.position().unwrap();
+            w.row(&["partial".into(), "tail".into()]).unwrap();
+            w.flush().unwrap();
+        }
+        {
+            // resume: reopen, drop the tail past the recorded cut, rewrite
+            let mut w = CsvWriter::append(&path, 2).unwrap();
+            w.truncate_to(cut).unwrap();
+            w.row(&["3".into(), "4".into()]).unwrap();
+            w.flush().unwrap();
+        }
+        let s = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(s, "a,b\n1,2\n3,4\n");
+        assert!(CsvWriter::append(dir.join("missing.csv"), 2).is_err());
+        // restoring past EOF is an error, never a NUL-padded extension
+        let mut w = CsvWriter::append(&path, 2).unwrap();
+        assert!(w.truncate_to(10_000).is_err());
         std::fs::remove_dir_all(&dir).ok();
     }
 

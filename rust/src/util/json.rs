@@ -277,7 +277,9 @@ impl<'a> Parser<'a> {
 // Writer
 // ---------------------------------------------------------------------------
 
-fn escape(s: &str, out: &mut String) {
+/// Escape `s` as a quoted JSON string into `out` (the one copy of the
+/// escaping rules — the JSONL sweep sink reuses it).
+pub(crate) fn escape(s: &str, out: &mut String) {
     out.push('"');
     for c in s.chars() {
         match c {

@@ -1,0 +1,201 @@
+//! ISSUE 5 satellite: the `PolicyRegistry::register` downstream hook.
+//!
+//! Lives in its own integration-test binary (= its own process) so the
+//! registered test policies never leak into the `hfl policies` golden
+//! listing pinned by `policy_registry.rs`.
+//!
+//! A custom-registered policy must be a first-class citizen of the sweep
+//! orchestration layer: resolvable from spec strings, runnable through a
+//! [`SweepPlan`] shard, byte-identical across thread counts, and labeled
+//! with its canonical key in the CSV output.
+
+use hfl::policy::{
+    AssignEntry, AssignEnv, AssignPolicy, ClusterNeed, PolicyCtx, PolicyKey, PolicyRegistry,
+    SchedEntry, SchedEnv, SchedulePolicy,
+};
+use hfl::runtime::NativeBackend;
+use hfl::scenario::{CsvSink, RunOpts, ScenarioSpec, SweepMode, SweepPlan};
+use hfl::system::SystemParams;
+
+/// Deterministic toy scheduler: the `stride` parameter picks every k-th
+/// device until H are scheduled — exercises key params end to end.
+struct StrideSched {
+    stride: usize,
+    key: String,
+}
+
+impl SchedulePolicy for StrideSched {
+    fn schedule(&mut self, ctx: &PolicyCtx) -> anyhow::Result<Vec<usize>> {
+        let n = ctx.topo.devices.len();
+        anyhow::ensure!(ctx.h <= n, "H={} exceeds {n} devices", ctx.h);
+        // deterministic permutation keyed by the stride, then the first H
+        let mut ids: Vec<usize> = (0..n).collect();
+        ids.sort_by_key(|&d| ((d * self.stride) % n, d));
+        ids.truncate(ctx.h);
+        ids.sort_unstable();
+        Ok(ids)
+    }
+
+    fn name(&self) -> String {
+        self.key.clone()
+    }
+}
+
+fn stride_factory(key: &PolicyKey, _env: &SchedEnv) -> anyhow::Result<Box<dyn SchedulePolicy>> {
+    let stride = key.usize_or("stride", 1)?;
+    anyhow::ensure!(stride >= 1, "{key}: stride must be >= 1");
+    Ok(Box::new(StrideSched { stride, key: key.to_string() }))
+}
+
+/// Toy assigner: everything onto edge 0 — registered to prove the
+/// assigner hook too.
+struct AllToFirst {
+    key: String,
+}
+
+impl AssignPolicy for AllToFirst {
+    fn assign(
+        &mut self,
+        ctx: &PolicyCtx,
+        scheduled: &[usize],
+    ) -> anyhow::Result<hfl::assignment::Assignment> {
+        let pairs: Vec<(usize, usize)> = scheduled.iter().map(|&d| (d, 0)).collect();
+        Ok(hfl::assignment::Assignment::from_pairs(ctx.topo.edges.len(), &pairs))
+    }
+
+    fn name(&self) -> String {
+        self.key.clone()
+    }
+}
+
+fn all_first_factory<'e>(
+    key: &PolicyKey,
+    _env: &AssignEnv<'e>,
+) -> anyhow::Result<Box<dyn AssignPolicy + 'e>> {
+    Ok(Box::new(AllToFirst { key: key.to_string() }))
+}
+
+fn register_once() {
+    static ONCE: std::sync::Once = std::sync::Once::new();
+    ONCE.call_once(|| {
+        PolicyRegistry::register_scheduler(SchedEntry {
+            name: "stride",
+            aliases: &[("every-kth", "stride")],
+            summary: "toy: every stride-th device (downstream-registration test)",
+            params: &[hfl::policy::ParamSpec {
+                key: "stride",
+                help: "schedule every stride-th device id (default 1)",
+            }],
+            defaults: &[("stride", "1")],
+            clusters: ClusterNeed::None,
+            factory: stride_factory,
+        })
+        .unwrap();
+        PolicyRegistry::register_assigner(AssignEntry {
+            name: "all-first",
+            aliases: &[],
+            summary: "toy: every device on edge 0 (downstream-registration test)",
+            params: &[],
+            defaults: &[],
+            needs_backend: false,
+            factory: all_first_factory,
+        })
+        .unwrap();
+    });
+}
+
+fn spec_with_custom_policies(name: &str) -> ScenarioSpec {
+    register_once();
+    let reg = PolicyRegistry::global();
+    let mut system = SystemParams::default();
+    system.n_devices = 20;
+    ScenarioSpec {
+        name: name.into(),
+        mode: SweepMode::Cost,
+        schedulers: vec![
+            reg.sched_key("stride?stride=3").unwrap(),
+            reg.sched_key("every-kth").unwrap(),
+        ],
+        assigners: vec![
+            reg.assign_key("all-first").unwrap(),
+            reg.assign_key("round-robin").unwrap(),
+        ],
+        h_values: vec![5, 10],
+        seeds: 2,
+        iters: 2,
+        seed: 77,
+        system,
+        ..ScenarioSpec::default()
+    }
+}
+
+#[test]
+fn registered_keys_resolve_with_aliases_and_defaults() {
+    register_once();
+    let reg = PolicyRegistry::global();
+    assert_eq!(reg.sched_key("stride").unwrap().to_string(), "stride?stride=1");
+    assert_eq!(reg.sched_key("every-kth").unwrap().to_string(), "stride?stride=1");
+    assert!(reg.sched_key("stride?warp=2").is_err(), "undeclared param accepted");
+    assert!(reg.listing().contains("stride"), "listing must include registered policies");
+    assert!(reg.assign_key("all-first").is_ok());
+}
+
+#[test]
+fn custom_registered_policies_are_sweepable_through_a_sweep_plan() {
+    let spec = spec_with_custom_policies("custom_reg");
+    let plan = SweepPlan::new(spec.clone()).unwrap();
+    assert_eq!(plan.total_cells(), 2 * 2 * 2 * 2);
+
+    let dir = std::env::temp_dir().join(format!("hfl_reg_sweep_{}", std::process::id()));
+    let d1 = dir.join("t1");
+    let d4 = dir.join("t4");
+    std::fs::create_dir_all(&d1).unwrap();
+    std::fs::create_dir_all(&d4).unwrap();
+
+    let backend = NativeBackend::new();
+    let mut s1 = CsvSink::create(&d1, "custom_reg").unwrap();
+    plan.run_serial(Some(&backend), &mut s1, &RunOpts::default()).unwrap();
+    let mut s4 = CsvSink::create(&d4, "custom_reg").unwrap();
+    plan.run_parallel(Some(&backend), 4, &mut s4, &RunOpts::default()).unwrap();
+
+    for name in ["sweep_custom_reg.csv", "sweep_custom_reg_summary.csv"] {
+        let a = std::fs::read_to_string(d1.join(name)).unwrap();
+        let b = std::fs::read_to_string(d4.join(name)).unwrap();
+        assert_eq!(a, b, "{name} differs between serial and 4-thread runs");
+        assert!(a.contains("stride?stride=3"), "canonical custom key missing from {name}");
+        assert!(a.contains("all-first"), "custom assigner missing from {name}");
+    }
+    // every cell ran its iterations
+    let rows = std::fs::read_to_string(d1.join("sweep_custom_reg.csv")).unwrap();
+    assert_eq!(rows.lines().count(), 1 + plan.total_cells() * spec.iters);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn registered_policy_rides_through_toml_specs() {
+    register_once();
+    let dir = std::env::temp_dir().join(format!("hfl_reg_toml_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("custom.toml");
+    std::fs::write(
+        &path,
+        r#"
+        name = "custom_toml"
+        mode = "cost"
+        schedulers = ["every-kth", "fedavg"]
+        assigners = ["all-first"]
+        h_values = [5]
+        seeds = 1
+        iters = 1
+        [system]
+        n_devices = 15
+        "#,
+    )
+    .unwrap();
+    let spec = ScenarioSpec::load(&path, &hfl::config::Config::default()).unwrap();
+    assert_eq!(spec.schedulers[0].to_string(), "stride?stride=1");
+    let result = SweepPlan::new(spec).unwrap().run_collect_serial(None).unwrap();
+    assert_eq!(result.cells.len(), 2);
+    assert!(result.cells.iter().all(|c| c.rows.len() == 1));
+    std::fs::remove_dir_all(&dir).ok();
+}

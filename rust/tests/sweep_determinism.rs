@@ -4,6 +4,13 @@
 //! child RNG streams, no shared-state ordering dependence. Policies are
 //! registry keys, so the contract covers every registered policy the specs
 //! name, including parameterized ones.
+//!
+//! These tests deliberately keep exercising the deprecated
+//! `run_sweep`/`run_sweep_serial`/`write_csvs` wrappers: they are the
+//! back-compat pin that the thin shims over `SweepPlan`/`RecordSink`
+//! still behave exactly like the pre-orchestration API (shard/merge/
+//! resume coverage for the new surface lives in `sweep_shard_merge.rs`).
+#![allow(deprecated)]
 
 use hfl::config::Config;
 use hfl::policy::{assign, sched};

@@ -1,0 +1,228 @@
+//! ISSUE 5 tentpole acceptance: shard/merge/resume equivalence.
+//!
+//! Property: for ANY shard partition of a [`SweepPlan`], running every
+//! shard (serial or 4-thread, in any order) and combining the outputs
+//! with the merge layer produces files **byte-identical** to a single
+//! unsharded run — for both the CSV and JSONL sinks — and a shard that
+//! is interrupted and resumed contributes exactly the same bytes as an
+//! uninterrupted one.
+
+use std::path::{Path, PathBuf};
+
+use hfl::runtime::NativeBackend;
+use hfl::scenario::{
+    merge_dirs, CsvSink, JsonlSink, MultiSink, RecordSink, RunOpts, ScenarioSpec, Shard,
+    SweepMode, SweepPlan,
+};
+use hfl::policy::{assign, sched};
+use hfl::system::SystemParams;
+
+fn spec(name: &str) -> ScenarioSpec {
+    let mut system = SystemParams::default();
+    system.n_devices = 24;
+    ScenarioSpec {
+        name: name.into(),
+        mode: SweepMode::Cost,
+        schedulers: vec![sched("fedavg"), sched("channel")],
+        assigners: vec![assign("geographic"), assign("round-robin"), assign("greedy")],
+        h_values: vec![8, 12],
+        seeds: 2,
+        iters: 2,
+        seed: 31,
+        system,
+        ..ScenarioSpec::default()
+    }
+}
+
+fn tmp(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("hfl_shardmerge_{tag}_{}", std::process::id()));
+    std::fs::remove_dir_all(&d).ok();
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// Run one plan into `dir` with both sinks + manifest; returns the stem.
+fn run_plan(
+    plan: &SweepPlan,
+    dir: &Path,
+    threads: usize,
+    resume: bool,
+    abort_after: Option<usize>,
+) -> String {
+    let stem = plan.output_stem();
+    let resuming = resume && dir.join(format!("sweep_{stem}.manifest")).exists();
+    let mut csv = if resuming {
+        CsvSink::append(dir, &stem).unwrap()
+    } else {
+        CsvSink::create(dir, &stem).unwrap()
+    };
+    let mut jsonl = if resuming {
+        JsonlSink::append(dir, &stem).unwrap()
+    } else {
+        JsonlSink::create(dir, &stem).unwrap()
+    };
+    let mut sink = MultiSink::new(vec![
+        &mut csv as &mut dyn RecordSink,
+        &mut jsonl as &mut dyn RecordSink,
+    ]);
+    let opts = RunOpts {
+        manifest: Some(dir.join(format!("sweep_{stem}.manifest"))),
+        resume,
+        abort_after,
+    };
+    let backend = NativeBackend::new();
+    if threads <= 1 {
+        plan.run_serial(Some(&backend), &mut sink, &opts).unwrap();
+    } else {
+        plan.run_parallel(Some(&backend), threads, &mut sink, &opts).unwrap();
+    }
+    stem
+}
+
+const SUFFIXES: [&str; 4] = [".csv", "_summary.csv", ".jsonl", "_summary.jsonl"];
+
+fn read(dir: &Path, stem: &str, suffix: &str) -> String {
+    let p = dir.join(format!("sweep_{stem}{suffix}"));
+    std::fs::read_to_string(&p).unwrap_or_else(|e| panic!("missing {}: {e}", p.display()))
+}
+
+#[test]
+fn any_shard_partition_merges_to_the_single_shot_bytes() {
+    // the unsharded reference, serial
+    let single_dir = tmp("single");
+    let plan = SweepPlan::new(spec("prop")).unwrap();
+    run_plan(&plan, &single_dir, 1, false, None);
+
+    for &n in &[2usize, 3, 5] {
+        let shard_dir = tmp(&format!("shards{n}"));
+        // shards run with different thread counts and out of order
+        for i in (0..n).rev() {
+            let p = SweepPlan::sharded(spec("prop"), Shard { index: i, count: n }).unwrap();
+            let threads = if i % 2 == 0 { 4 } else { 1 };
+            run_plan(&p, &shard_dir, threads, false, None);
+        }
+        let merged_dir = tmp(&format!("merged{n}"));
+        let reports = merge_dirs(&[shard_dir.clone()], Some("prop"), &merged_dir).unwrap();
+        assert_eq!(reports.len(), 1);
+        assert_eq!(reports[0].shards, n);
+        assert_eq!(reports[0].cells, plan.total_cells());
+        for suffix in SUFFIXES {
+            let want = read(&single_dir, "prop", suffix);
+            let got = read(&merged_dir, "prop", suffix);
+            assert!(!want.is_empty());
+            assert_eq!(
+                got, want,
+                "sweep_prop{suffix}: {n}-shard merge differs from the single-shot run"
+            );
+        }
+        std::fs::remove_dir_all(&shard_dir).ok();
+        std::fs::remove_dir_all(&merged_dir).ok();
+    }
+    std::fs::remove_dir_all(&single_dir).ok();
+}
+
+#[test]
+fn interrupted_then_resumed_shard_merges_identically() {
+    let single_dir = tmp("res_single");
+    let plan = SweepPlan::new(spec("resume")).unwrap();
+    run_plan(&plan, &single_dir, 1, false, None);
+
+    let shard_dir = tmp("res_shards");
+    for i in 0..3usize {
+        let p = SweepPlan::sharded(spec("resume"), Shard { index: i, count: 3 }).unwrap();
+        if i == 1 {
+            // interrupt shard 1 mid-grid, then resume it (parallel)
+            run_plan(&p, &shard_dir, 1, false, Some(3));
+            run_plan(&p, &shard_dir, 4, true, None);
+        } else {
+            run_plan(&p, &shard_dir, 4, false, None);
+        }
+    }
+    let merged_dir = tmp("res_merged");
+    merge_dirs(&[shard_dir.clone()], None, &merged_dir).unwrap();
+    for suffix in SUFFIXES {
+        assert_eq!(
+            read(&merged_dir, "resume", suffix),
+            read(&single_dir, "resume", suffix),
+            "sweep_resume{suffix}: resumed shard changed the merged bytes"
+        );
+    }
+    std::fs::remove_dir_all(&single_dir).ok();
+    std::fs::remove_dir_all(&shard_dir).ok();
+    std::fs::remove_dir_all(&merged_dir).ok();
+}
+
+#[test]
+fn crash_tail_is_truncated_on_resume() {
+    // simulate a crash AFTER rows hit the sink but BEFORE the manifest
+    // line: resume must discard the orphan bytes and rewrite the cell,
+    // ending byte-identical to an uninterrupted run
+    let clean_dir = tmp("crash_clean");
+    let plan = SweepPlan::new(spec("crash")).unwrap();
+    run_plan(&plan, &clean_dir, 1, false, None);
+
+    let crash_dir = tmp("crash_run");
+    run_plan(&plan, &crash_dir, 1, false, Some(4));
+    // orphan tail: rows written past the last manifest cut
+    let rows_path = crash_dir.join("sweep_crash.csv");
+    let mut rows = std::fs::read(&rows_path).unwrap();
+    rows.extend_from_slice(b"999,torn,row,0,0,0,0.0,0.0,0.0,,,,0\n");
+    std::fs::write(&rows_path, rows).unwrap();
+    run_plan(&plan, &crash_dir, 1, true, None);
+    for suffix in SUFFIXES {
+        assert_eq!(
+            read(&crash_dir, "crash", suffix),
+            read(&clean_dir, "crash", suffix),
+            "sweep_crash{suffix}: crash tail survived the resume"
+        );
+    }
+    std::fs::remove_dir_all(&clean_dir).ok();
+    std::fs::remove_dir_all(&crash_dir).ok();
+}
+
+#[test]
+fn merge_refuses_incomplete_shards() {
+    let dir = tmp("incomplete");
+    let p = SweepPlan::sharded(spec("part"), Shard { index: 0, count: 2 }).unwrap();
+    run_plan(&p, &dir, 1, false, Some(2)); // aborted shard 0
+    let p1 = SweepPlan::sharded(spec("part"), Shard { index: 1, count: 2 }).unwrap();
+    run_plan(&p1, &dir, 1, false, None);
+    let out = tmp("incomplete_out");
+    let err = merge_dirs(&[dir.clone()], None, &out).unwrap_err().to_string();
+    assert!(err.contains("incomplete"), "unexpected error: {err}");
+    assert!(err.contains("--resume"), "error should point at --resume: {err}");
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::remove_dir_all(&out).ok();
+}
+
+#[test]
+fn name_filtered_merge_ignores_unrelated_incomplete_sweeps() {
+    // a still-running sweep sharing the directory must not block merging
+    // a finished one when --name selects the finished set
+    let dir = tmp("mixed");
+    for i in 0..2usize {
+        let p = SweepPlan::sharded(spec("done"), Shard { index: i, count: 2 }).unwrap();
+        run_plan(&p, &dir, 1, false, None);
+    }
+    let p = SweepPlan::sharded(spec("wip"), Shard { index: 0, count: 2 }).unwrap();
+    run_plan(&p, &dir, 1, false, Some(1)); // aborted, incomplete
+    let out = tmp("mixed_out");
+    let reports = merge_dirs(&[dir.clone()], Some("done"), &out).unwrap();
+    assert_eq!(reports.len(), 1);
+    assert_eq!(reports[0].name, "done");
+    // unfiltered, the incomplete sweep still fails loudly
+    let err = merge_dirs(&[dir.clone()], None, &out).unwrap_err().to_string();
+    assert!(err.contains("wip") && err.contains("incomplete"), "{err}");
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::remove_dir_all(&out).ok();
+}
+
+#[test]
+fn list_order_is_stable_and_ids_are_dense() {
+    let plan = SweepPlan::new(spec("ids")).unwrap();
+    let cells = plan.cells();
+    assert_eq!(cells.len(), plan.total_cells());
+    for (i, c) in cells.iter().enumerate() {
+        assert_eq!(c.idx, i, "CellId must be the dense grid ordinal");
+    }
+}

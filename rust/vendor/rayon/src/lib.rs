@@ -183,6 +183,42 @@ impl<'data, T: Sync> ParIter<'data, T> {
         ParMap { items: self.items, f, _out: PhantomData }
     }
 
+    /// Parallel side-effecting iteration (no result collection): items are
+    /// claimed from a shared atomic queue in input order, but `f` may run
+    /// concurrently and complete in any order. Callers that need ordered
+    /// output should send `(index, value)` pairs through a channel and
+    /// reorder on the receiving side.
+    pub fn for_each<F>(self, f: F)
+    where
+        F: Fn(&'data T) + Sync,
+    {
+        let n = self.items.len();
+        let threads = current_num_threads().max(1).min(n.max(1));
+        if threads <= 1 || n <= 1 {
+            self.items.iter().for_each(f);
+            return;
+        }
+        let next = AtomicUsize::new(0);
+        let items = self.items;
+        std::thread::scope(|s| {
+            let mut handles = Vec::with_capacity(threads);
+            for _ in 0..threads {
+                let next = &next;
+                let f = &f;
+                handles.push(s.spawn(move || loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    f(&items[i]);
+                }));
+            }
+            for h in handles {
+                h.join().expect("parallel for_each worker panicked");
+            }
+        });
+    }
+
     pub fn len(&self) -> usize {
         self.items.len()
     }
@@ -251,5 +287,45 @@ mod tests {
         let xs: Vec<u8> = vec![];
         let out: Vec<u8> = xs.par_iter().map(|&x| x).collect();
         assert!(out.is_empty());
+    }
+
+    #[test]
+    fn for_each_visits_every_item_exactly_once() {
+        use std::sync::atomic::AtomicU64;
+        let xs: Vec<usize> = (0..500).collect();
+        let sum = AtomicU64::new(0);
+        let pool = ThreadPoolBuilder::new().num_threads(4).build().unwrap();
+        pool.install(|| {
+            xs.par_iter().for_each(|&x| {
+                sum.fetch_add(x as u64, Ordering::Relaxed);
+            })
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 500 * 499 / 2);
+    }
+
+    #[test]
+    fn for_each_streams_through_a_channel_in_reorderable_form() {
+        let xs: Vec<usize> = (0..64).collect();
+        let (tx, rx) = std::sync::mpsc::channel::<(usize, usize)>();
+        let pool = ThreadPoolBuilder::new().num_threads(3).build().unwrap();
+        std::thread::scope(|s| {
+            let xs = &xs;
+            let pool = &pool;
+            s.spawn(move || {
+                pool.install(|| {
+                    xs.par_iter().for_each(|&x| {
+                        let _ = tx.send((x, x * x));
+                    })
+                });
+                // tx dropped here: receiver loop below terminates
+            });
+            let mut got: Vec<Option<usize>> = vec![None; xs.len()];
+            for (i, v) in rx.iter() {
+                got[i] = Some(v);
+            }
+            for (i, v) in got.iter().enumerate() {
+                assert_eq!(*v, Some(i * i));
+            }
+        });
     }
 }
