@@ -17,7 +17,7 @@ fn main() -> anyhow::Result<()> {
     let topo = Topology::generate(&params, &mut rng);
     let spec = SynthSpec::fmnist();
     let templates = Templates::generate(&spec, 3);
-    let samples: Vec<usize> = topo.devices.iter().map(|d| d.num_samples).collect();
+    let samples: Vec<usize> = topo.num_samples_per_device();
     let dd = partition(40, &samples, 0.8, 3);
     for lr in [0.05f32, 0.2, 0.5] {
         let res = cluster_devices(&eng, &topo, &templates, &dd, AuxModel::Mini, 10, lr, &mut rng)?;

@@ -24,14 +24,13 @@ fn best_over_tau(
         .iter()
         .zip(bw)
         .map(|(&n, &b)| {
-            let d = &topo.devices[n];
-            z / topo.channel.rate(b, d.gain_to_edge[m], d.tx_power_w)
+            z / topo.channel.rate(b, topo.gain(n, m), topo.fleet.tx_power_w(n))
         })
         .collect();
     let c: Vec<f64> = devices
         .iter()
         .map(|&n| {
-            let d = &topo.devices[n];
+            let d = topo.device(n);
             p.local_iters as f64 * d.cycles_per_sample * d.num_samples as f64
         })
         .collect();
@@ -44,7 +43,7 @@ fn best_over_tau(
                 return None;
             }
             let f = c[i] / slack;
-            if f > topo.devices[devices[i]].max_freq_hz {
+            if f > topo.fleet.max_freq_hz() {
                 return None;
             }
             allocs.push(DeviceAlloc { bandwidth_hz: bw[i], freq_hz: f });
@@ -57,7 +56,7 @@ fn best_over_tau(
 
     // bracket: τ_lo = max infeasible floor, τ_hi grows until objective rises
     let tau_floor = (0..devices.len())
-        .map(|i| t_com[i] + c[i] / topo.devices[devices[i]].max_freq_hz)
+        .map(|i| t_com[i] + c[i] / topo.fleet.max_freq_hz())
         .fold(0.0f64, f64::max)
         * 1.000001;
     let mut tau_hi = tau_floor * 2.0;

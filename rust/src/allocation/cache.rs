@@ -1,0 +1,320 @@
+//! Incremental evaluation of the one-round objective (17).
+//!
+//! The objective decomposes per edge: `E = Σ_m E_m`, `T = max_m T_m`, and
+//! a candidate move/swap touches at most two edges — yet the legacy HFEL
+//! and greedy paths cloned whole groups and re-derived per-edge state for
+//! every candidate. `CostCache` keeps the committed per-edge solution
+//! (objective, [`EdgeCost`], per-device [`DeviceCost`]s) and recomputes
+//! only the *dirty* edges of a hypothetical or applied change, through a
+//! reusable scratch buffer instead of per-candidate `Vec` clones.
+//!
+//! Two evaluation backends share the bookkeeping:
+//!
+//! * **solver** ([`CostCache::new_solver`]) — each edge's objective is the
+//!   solved problem (27) via [`solve_edge`]; this is what HFEL and the
+//!   greedy assigner search over (the separable surrogate
+//!   Σ_m (E_m + λ·T_m)). Identical inputs give identical floats, so a
+//!   cache-driven search accepts exactly the moves the legacy clone-based
+//!   code accepted.
+//! * **equal-split** ([`CostCache::new_equal_split`]) — `b_n = B_m/|g|`,
+//!   `f_n = f^max` (the fixed allocation used for cost accounting at fleet
+//!   scale, where 10³ solver runs per round would dominate); dirty-edge
+//!   updates are O(|group|) evaluations of eqs. 4–12.
+//!
+//! From-scratch oracles: [`crate::assignment::evaluate`] (solver) and
+//! [`crate::system::cost::iter_cost`] (fixed allocs) — the equivalence is
+//! pinned by `tests/topo_scale.rs` after randomized move/swap sequences.
+
+use super::solver::{solve_edge, SolverOpts};
+use crate::system::cost::{cloud_cost, device_cost, DeviceAlloc, DeviceCost, EdgeCost, IterCost};
+use crate::system::Topology;
+
+enum Backend {
+    Solver(SolverOpts),
+    EqualSplit,
+}
+
+pub struct CostCache {
+    lambda: f64,
+    backend: Backend,
+    /// Committed groups, one per edge (the cache owns its membership copy).
+    members: Vec<Vec<usize>>,
+    /// Per-edge surrogate objective `E_m + λ·T_m` of the committed state.
+    obj: Vec<f64>,
+    /// Per-edge eq. 13–14 inner terms of the committed state.
+    cost: Vec<EdgeCost>,
+    /// Per-device costs, parallel to `members[m]`.
+    dcosts: Vec<Vec<DeviceCost>>,
+    /// Reusable candidate-group buffer (replaces per-candidate clones).
+    scratch: Vec<usize>,
+}
+
+impl CostCache {
+    pub fn new_solver(lambda: f64, opts: SolverOpts) -> Self {
+        Self::new(lambda, Backend::Solver(opts))
+    }
+
+    pub fn new_equal_split(lambda: f64) -> Self {
+        Self::new(lambda, Backend::EqualSplit)
+    }
+
+    fn new(lambda: f64, backend: Backend) -> Self {
+        CostCache {
+            lambda,
+            backend,
+            members: vec![],
+            obj: vec![],
+            cost: vec![],
+            dcosts: vec![],
+            scratch: vec![],
+        }
+    }
+
+    /// Full recompute from `groups` (adopts them as the committed state).
+    pub fn reset(&mut self, topo: &Topology, groups: &[Vec<usize>]) {
+        self.members = groups.to_vec();
+        let m_count = self.members.len();
+        self.obj = vec![0.0; m_count];
+        self.cost = vec![EdgeCost::default(); m_count];
+        self.dcosts = vec![Vec::new(); m_count];
+        for m in 0..m_count {
+            self.refresh_edge(topo, m);
+        }
+    }
+
+    /// Evaluate one group under the configured backend.
+    fn eval_group(
+        &self,
+        topo: &Topology,
+        m: usize,
+        group: &[usize],
+    ) -> (f64, EdgeCost, Vec<DeviceCost>) {
+        if group.is_empty() {
+            return (0.0, EdgeCost::default(), vec![]);
+        }
+        match &self.backend {
+            Backend::Solver(opts) => {
+                let s = solve_edge(topo, m, group, self.lambda, opts);
+                let dcosts = group
+                    .iter()
+                    .zip(&s.allocs)
+                    .map(|(&n, &a)| device_cost(topo, n, m, a))
+                    .collect();
+                (s.objective, s.cost, dcosts)
+            }
+            Backend::EqualSplit => {
+                let b = topo.edges[m].bandwidth_hz / group.len() as f64;
+                let alloc = DeviceAlloc { bandwidth_hz: b, freq_hz: topo.fleet.max_freq_hz() };
+                let q = topo.params.edge_iters as f64;
+                let mut t_max = 0.0f64;
+                let mut e_sum = 0.0f64;
+                let dcosts: Vec<DeviceCost> = group
+                    .iter()
+                    .map(|&n| {
+                        let c = device_cost(topo, n, m, alloc);
+                        t_max = t_max.max(c.t_total());
+                        e_sum += c.e_total();
+                        c
+                    })
+                    .collect();
+                let (t_cloud, e_cloud) = cloud_cost(topo, m);
+                let ec = EdgeCost { t: q * t_max + t_cloud, e: q * e_sum + e_cloud };
+                (ec.e + self.lambda * ec.t, ec, dcosts)
+            }
+        }
+    }
+
+    /// Recompute one dirty edge from its committed membership.
+    fn refresh_edge(&mut self, topo: &Topology, m: usize) {
+        let (obj, cost, dcosts) = self.eval_group(topo, m, &self.members[m]);
+        self.obj[m] = obj;
+        self.cost[m] = cost;
+        self.dcosts[m] = dcosts;
+    }
+
+    pub fn n_edges(&self) -> usize {
+        self.members.len()
+    }
+
+    pub fn members(&self, m: usize) -> &[usize] {
+        &self.members[m]
+    }
+
+    /// Committed groups — e.g. to build the final [`crate::assignment::Assignment`].
+    pub fn groups(&self) -> &[Vec<usize>] {
+        &self.members
+    }
+
+    pub fn edge_objective(&self, m: usize) -> f64 {
+        self.obj[m]
+    }
+
+    pub fn edge_cost(&self, m: usize) -> EdgeCost {
+        self.cost[m]
+    }
+
+    /// Per-device costs of edge `m`'s committed solution, parallel to
+    /// [`CostCache::members`].
+    pub fn device_costs(&self, m: usize) -> &[DeviceCost] {
+        &self.dcosts[m]
+    }
+
+    /// Separable surrogate Σ_m (E_m + λ·T_m) — HFEL's search total.
+    pub fn surrogate_total(&self) -> f64 {
+        self.obj.iter().sum()
+    }
+
+    /// True objective-(17) terms: straggler max over non-empty edges (an
+    /// O(M) fold over cached per-edge values) + energy sum.
+    pub fn iter_cost(&self) -> IterCost {
+        let mut t = 0.0f64;
+        let mut e = 0.0f64;
+        for (m, g) in self.members.iter().enumerate() {
+            if g.is_empty() {
+                continue;
+            }
+            t = t.max(self.cost[m].t);
+            e += self.cost[m].e;
+        }
+        IterCost { t, e }
+    }
+
+    /// Objective of edge `m` with `dev` removed (no state change).
+    pub fn eval_remove(&mut self, topo: &Topology, m: usize, dev: usize) -> f64 {
+        self.scratch.clear();
+        self.scratch.extend(self.members[m].iter().copied().filter(|&d| d != dev));
+        self.eval_group(topo, m, &self.scratch).0
+    }
+
+    /// Objective of edge `m` with `dev` appended (no state change).
+    pub fn eval_add(&mut self, topo: &Topology, m: usize, dev: usize) -> f64 {
+        self.scratch.clear();
+        self.scratch.extend_from_slice(&self.members[m]);
+        self.scratch.push(dev);
+        self.eval_group(topo, m, &self.scratch).0
+    }
+
+    /// Objective of edge `m` with `out` replaced by `inn` in place (the
+    /// exchange-candidate shape: position preserved; no state change).
+    pub fn eval_swap_in_place(
+        &mut self,
+        topo: &Topology,
+        m: usize,
+        out: usize,
+        inn: usize,
+    ) -> f64 {
+        self.scratch.clear();
+        self.scratch.extend(
+            self.members[m].iter().map(|&d| if d == out { inn } else { d }),
+        );
+        self.eval_group(topo, m, &self.scratch).0
+    }
+
+    /// Commit a transfer `dev: src → dst`; both edges become dirty and are
+    /// recomputed (membership order matches the legacy mutation:
+    /// `retain` on src, `push` on dst — so solver inputs are identical).
+    pub fn apply_move(&mut self, topo: &Topology, src: usize, dst: usize, dev: usize) {
+        self.members[src].retain(|&d| d != dev);
+        self.members[dst].push(dev);
+        self.refresh_edge(topo, src);
+        self.refresh_edge(topo, dst);
+    }
+
+    /// Commit an exchange `d1 ∈ e1 ↔ d2 ∈ e2` (in-place replacement).
+    pub fn apply_swap(&mut self, topo: &Topology, e1: usize, d1: usize, e2: usize, d2: usize) {
+        for d in self.members[e1].iter_mut() {
+            if *d == d1 {
+                *d = d2;
+            }
+        }
+        for d in self.members[e2].iter_mut() {
+            if *d == d2 && *d != d1 {
+                *d = d1;
+            }
+        }
+        self.refresh_edge(topo, e1);
+        self.refresh_edge(topo, e2);
+    }
+
+    /// Commit appending `dev` to edge `m` (the greedy-constructive shape).
+    pub fn apply_add(&mut self, topo: &Topology, m: usize, dev: usize) {
+        self.members[m].push(dev);
+        self.refresh_edge(topo, m);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::system::cost::iter_cost;
+    use crate::system::SystemParams;
+    use crate::util::Rng;
+
+    fn topo() -> Topology {
+        Topology::generate(&SystemParams::default(), &mut Rng::new(9))
+    }
+
+    fn groups() -> Vec<Vec<usize>> {
+        vec![vec![0, 1, 2], vec![3, 4], vec![5], vec![], vec![6, 7]]
+    }
+
+    #[test]
+    fn equal_split_matches_from_scratch_iter_cost() {
+        let t = topo();
+        let mut c = CostCache::new_equal_split(t.params.lambda);
+        c.reset(&t, &groups());
+        let reference: Vec<Vec<(usize, DeviceAlloc)>> = groups()
+            .iter()
+            .enumerate()
+            .map(|(m, g)| {
+                let b = t.edges[m].bandwidth_hz / g.len().max(1) as f64;
+                g.iter()
+                    .map(|&n| {
+                        (n, DeviceAlloc { bandwidth_hz: b, freq_hz: t.fleet.max_freq_hz() })
+                    })
+                    .collect()
+            })
+            .collect();
+        let want = iter_cost(&t, &reference);
+        let got = c.iter_cost();
+        assert_eq!(got.t, want.t);
+        assert_eq!(got.e, want.e);
+    }
+
+    #[test]
+    fn apply_move_equals_reset_from_scratch() {
+        let t = topo();
+        let mut c = CostCache::new_solver(t.params.lambda, SolverOpts::fast());
+        c.reset(&t, &groups());
+        c.apply_move(&t, 0, 3, 1);
+        let mut fresh = CostCache::new_solver(t.params.lambda, SolverOpts::fast());
+        fresh.reset(&t, c.groups().to_vec().as_slice());
+        assert_eq!(c.surrogate_total(), fresh.surrogate_total());
+        assert_eq!(c.iter_cost().t, fresh.iter_cost().t);
+        assert_eq!(c.members(3), &[3, 4, 1]);
+    }
+
+    #[test]
+    fn eval_does_not_mutate_committed_state() {
+        let t = topo();
+        let mut c = CostCache::new_solver(t.params.lambda, SolverOpts::fast());
+        c.reset(&t, &groups());
+        let before = c.surrogate_total();
+        let _ = c.eval_add(&t, 2, 9);
+        let _ = c.eval_remove(&t, 0, 1);
+        let _ = c.eval_swap_in_place(&t, 1, 3, 9);
+        assert_eq!(c.surrogate_total(), before);
+        assert_eq!(c.members(0), &[0, 1, 2]);
+    }
+
+    #[test]
+    fn device_costs_track_membership() {
+        let t = topo();
+        let mut c = CostCache::new_equal_split(t.params.lambda);
+        c.reset(&t, &groups());
+        assert_eq!(c.device_costs(0).len(), 3);
+        c.apply_add(&t, 2, 9);
+        assert_eq!(c.device_costs(2).len(), 2);
+        assert!(c.device_costs(2)[1].t_total() > 0.0);
+    }
+}

@@ -2,9 +2,13 @@
 //! and CPU frequency `f_n` for the devices assigned to one edge server.
 //!
 //! `solver` is the production epigraph solver (replaces the paper's CVXPY,
-//! DESIGN.md §5); `bruteforce` is the grid oracle used by the test suite.
+//! DESIGN.md §5); `bruteforce` is the grid oracle used by the test suite;
+//! `cache` is the incremental objective-(17) evaluator that lets search
+//! loops re-solve only the edges a candidate move touches.
 
 pub mod bruteforce;
+pub mod cache;
 pub mod solver;
 
+pub use cache::CostCache;
 pub use solver::{solve_edge, AllocSolution, SolverOpts};

@@ -275,9 +275,9 @@ pub fn solve_edge(
     let links: Vec<Link> = devices
         .iter()
         .map(|&n| {
-            let d = &topo.devices[n];
+            let d = topo.device(n);
             Link {
-                gamma: d.gain_to_edge[m] * d.tx_power_w / n0,
+                gamma: topo.gain(n, m) * d.tx_power_w / n0,
                 p: d.tx_power_w,
                 c: p.local_iters as f64 * d.cycles_per_sample * d.num_samples as f64,
                 f_max: d.max_freq_hz,
@@ -432,7 +432,7 @@ mod tests {
         for (a, &n) in s.allocs.iter().zip(&devices) {
             assert!(a.bandwidth_hz > 0.0);
             assert!(a.freq_hz > 0.0);
-            assert!(a.freq_hz <= t.devices[n].max_freq_hz * 1.000001);
+            assert!(a.freq_hz <= t.device(n).max_freq_hz * 1.000001);
         }
     }
 
@@ -463,7 +463,7 @@ mod tests {
         let naive: Vec<(usize, DeviceAlloc)> = devices
             .iter()
             .map(|&n| {
-                (n, DeviceAlloc { bandwidth_hz: nb, freq_hz: t.devices[n].max_freq_hz })
+                (n, DeviceAlloc { bandwidth_hz: nb, freq_hz: t.device(n).max_freq_hz })
             })
             .collect();
         let ec = edge_cost(&t, 2, &naive);

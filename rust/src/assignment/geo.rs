@@ -5,11 +5,14 @@ use super::{Assigner, Assignment};
 use crate::system::Topology;
 
 pub fn assign_geographic(topo: &Topology, scheduled: &[usize]) -> Assignment {
-    let pairs: Vec<(usize, usize)> = scheduled
-        .iter()
-        .map(|&n| (n, topo.nearest_edge(n)))
-        .collect();
-    Assignment::from_pairs(topo.edges.len(), &pairs)
+    // Nearest edges are cached on the topology (O(1) per device), so the
+    // whole pass is O(H) — bucket directly, preserving `scheduled` order
+    // within each group exactly like `Assignment::from_pairs` did.
+    let mut groups: Vec<Vec<usize>> = vec![Vec::new(); topo.edges.len()];
+    for &n in scheduled {
+        groups[topo.nearest_edge(n)].push(n);
+    }
+    Assignment { groups }
 }
 
 #[derive(Default)]

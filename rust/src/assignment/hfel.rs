@@ -10,11 +10,19 @@
 //! for the (at most two) affected edges, which is why HFEL's assignment
 //! latency is high — the motivation for the paper's D³QN.
 //!
+//! Candidate groups are staged through a [`CostCache`] scratch buffer, so a
+//! transfer scan allocates nothing per candidate edge (the legacy code
+//! cloned the destination group M−1 times per iteration). The cache builds
+//! candidates in the same membership order as the old clone+mutate code
+//! (`retain` for removals, `push` for additions, in-place replacement for
+//! swaps), so every `solve_edge` call sees identical inputs and the
+//! accept/reject decisions are bit-for-bit unchanged.
+//!
 //! Per §VI-B, HFEL-k performs 100 transferring iterations and k exchanging
 //! iterations; each iteration scans candidates greedily (first improvement).
 
 use super::{Assigner, Assignment};
-use crate::allocation::{solve_edge, SolverOpts};
+use crate::allocation::{CostCache, SolverOpts};
 use crate::system::Topology;
 use crate::util::Rng;
 
@@ -23,8 +31,6 @@ pub struct Hfel {
     pub exchange_iters: usize,
     pub opts: SolverOpts,
     rng: Rng,
-    /// Per-edge objective cache for the current assignment.
-    edge_obj: Vec<f64>,
 }
 
 impl Hfel {
@@ -35,76 +41,51 @@ impl Hfel {
             exchange_iters,
             opts: SolverOpts::fast(),
             rng: Rng::new(seed),
-            edge_obj: vec![],
         }
-    }
-
-    /// Objective (17) from per-edge objectives: Σ_m E_m + λ·max_m T_m is
-    /// NOT separable, so HFEL (like the original paper [15]) works with the
-    /// separable surrogate Σ_m (E_m + λ·T_m); adjustments that reduce the
-    /// surrogate also reduce the true objective in the common case where
-    /// they shrink the straggler edge.
-    fn total(&self) -> f64 {
-        self.edge_obj.iter().sum()
-    }
-
-    fn solve_for(&self, topo: &Topology, m: usize, group: &[usize]) -> f64 {
-        solve_edge(topo, m, group, topo.params.lambda, &self.opts).objective
-    }
-
-    fn recompute_all(&mut self, topo: &Topology, a: &Assignment) {
-        self.edge_obj = a
-            .groups
-            .iter()
-            .enumerate()
-            .map(|(m, g)| self.solve_for(topo, m, g))
-            .collect();
     }
 
     /// One transferring iteration: try moving a random device to the best
     /// other edge; accept if the surrogate objective improves.
-    fn transfer_step(&mut self, topo: &Topology, a: &mut Assignment) -> bool {
-        let total_devices = a.num_devices();
+    ///
+    /// Objective (17) `Σ_m E_m + λ·max_m T_m` is NOT separable, so HFEL
+    /// (like the original paper [15]) works with the separable surrogate
+    /// `Σ_m (E_m + λ·T_m)` — exactly what [`CostCache`] tracks per edge.
+    fn transfer_step(&mut self, topo: &Topology, cache: &mut CostCache) -> bool {
+        let total_devices: usize = cache.groups().iter().map(|g| g.len()).sum();
         if total_devices == 0 {
             return false;
         }
         // pick a random (edge, device)
         let mut k = self.rng.below(total_devices);
         let mut src = 0;
-        for (m, g) in a.groups.iter().enumerate() {
+        for (m, g) in cache.groups().iter().enumerate() {
             if k < g.len() {
                 src = m;
                 break;
             }
             k -= g.len();
         }
-        let dev = a.groups[src][k];
-        if a.groups[src].len() <= 1 {
+        let dev = cache.members(src)[k];
+        if cache.members(src).len() <= 1 {
             return false; // keep every edge non-empty (paper assumption)
         }
 
-        let mut src_group = a.groups[src].clone();
-        src_group.retain(|&d| d != dev);
-        let src_new = self.solve_for(topo, src, &src_group);
+        let src_new = cache.eval_remove(topo, src, dev);
 
-        let mut best: Option<(usize, f64, f64)> = None; // (dst, dst_new, delta)
-        for dst in 0..a.groups.len() {
+        let mut best: Option<(usize, f64)> = None; // (dst, delta)
+        for dst in 0..cache.n_edges() {
             if dst == src {
                 continue;
             }
-            let mut dst_group = a.groups[dst].clone();
-            dst_group.push(dev);
-            let dst_new = self.solve_for(topo, dst, &dst_group);
-            let delta = (src_new + dst_new) - (self.edge_obj[src] + self.edge_obj[dst]);
-            if delta < -1e-9 && best.map_or(true, |(_, _, bd)| delta < bd) {
-                best = Some((dst, dst_new, delta));
+            let dst_new = cache.eval_add(topo, dst, dev);
+            let delta = (src_new + dst_new)
+                - (cache.edge_objective(src) + cache.edge_objective(dst));
+            if delta < -1e-9 && best.map_or(true, |(_, bd)| delta < bd) {
+                best = Some((dst, delta));
             }
         }
-        if let Some((dst, dst_new, _)) = best {
-            a.groups[src].retain(|&d| d != dev);
-            a.groups[dst].push(dev);
-            self.edge_obj[src] = src_new;
-            self.edge_obj[dst] = dst_new;
+        if let Some((dst, _)) = best {
+            cache.apply_move(topo, src, dst, dev);
             true
         } else {
             false
@@ -113,10 +94,10 @@ impl Hfel {
 
     /// One exchanging iteration: try swapping two random devices from two
     /// random distinct edges; accept on improvement.
-    fn exchange_step(&mut self, topo: &Topology, a: &mut Assignment) -> bool {
-        let m_count = a.groups.len();
+    fn exchange_step(&mut self, topo: &Topology, cache: &mut CostCache) -> bool {
+        let m_count = cache.n_edges();
         let non_empty: Vec<usize> =
-            (0..m_count).filter(|&m| !a.groups[m].is_empty()).collect();
+            (0..m_count).filter(|&m| !cache.members(m).is_empty()).collect();
         if non_empty.len() < 2 {
             return false;
         }
@@ -125,24 +106,13 @@ impl Hfel {
         while e2 == e1 {
             e2 = non_empty[self.rng.below(non_empty.len())];
         }
-        let d1 = a.groups[e1][self.rng.below(a.groups[e1].len())];
-        let d2 = a.groups[e2][self.rng.below(a.groups[e2].len())];
+        let d1 = cache.members(e1)[self.rng.below(cache.members(e1).len())];
+        let d2 = cache.members(e2)[self.rng.below(cache.members(e2).len())];
 
-        let g1: Vec<usize> = a.groups[e1]
-            .iter()
-            .map(|&d| if d == d1 { d2 } else { d })
-            .collect();
-        let g2: Vec<usize> = a.groups[e2]
-            .iter()
-            .map(|&d| if d == d2 { d1 } else { d })
-            .collect();
-        let o1 = self.solve_for(topo, e1, &g1);
-        let o2 = self.solve_for(topo, e2, &g2);
-        if o1 + o2 < self.edge_obj[e1] + self.edge_obj[e2] - 1e-9 {
-            a.groups[e1] = g1;
-            a.groups[e2] = g2;
-            self.edge_obj[e1] = o1;
-            self.edge_obj[e2] = o2;
+        let o1 = cache.eval_swap_in_place(topo, e1, d1, d2);
+        let o2 = cache.eval_swap_in_place(topo, e2, d2, d1);
+        if o1 + o2 < cache.edge_objective(e1) + cache.edge_objective(e2) - 1e-9 {
+            cache.apply_swap(topo, e1, d1, e2, d2);
             true
         } else {
             false
@@ -151,21 +121,22 @@ impl Hfel {
 
     /// Run the full HFEL search from a geographic start.
     pub fn run(&mut self, topo: &Topology, scheduled: &[usize]) -> Assignment {
-        let mut a = super::geo::assign_geographic(topo, scheduled);
-        self.recompute_all(topo, &a);
-        let before = self.total();
+        let a = super::geo::assign_geographic(topo, scheduled);
+        let mut cache = CostCache::new_solver(topo.params.lambda, self.opts.clone());
+        cache.reset(topo, &a.groups);
+        let before = cache.surrogate_total();
         for _ in 0..self.transfer_iters {
-            self.transfer_step(topo, &mut a);
+            self.transfer_step(topo, &mut cache);
         }
         for _ in 0..self.exchange_iters {
-            self.exchange_step(topo, &mut a);
+            self.exchange_step(topo, &mut cache);
         }
         log::debug!(
             "hfel: objective {before:.2} -> {:.2} ({} devices)",
-            self.total(),
+            cache.surrogate_total(),
             scheduled.len()
         );
-        a
+        Assignment { groups: cache.groups().to_vec() }
     }
 }
 
@@ -232,5 +203,122 @@ mod tests {
         // same seed ⇒ the first 100 exchange draws coincide; more search
         // cannot increase the surrogate objective
         assert!(c300.objective(lambda) <= c100.objective(lambda) * 1.01);
+    }
+
+    /// The cache-driven search must visit the exact same states as a
+    /// transcription of the legacy clone-per-candidate implementation.
+    #[test]
+    fn matches_legacy_clone_based_search() {
+        use crate::allocation::solve_edge;
+
+        struct Legacy {
+            rng: Rng,
+            edge_obj: Vec<f64>,
+            opts: SolverOpts,
+        }
+        impl Legacy {
+            fn solve_for(&self, t: &Topology, m: usize, g: &[usize]) -> f64 {
+                solve_edge(t, m, g, t.params.lambda, &self.opts).objective
+            }
+            fn transfer(&mut self, t: &Topology, a: &mut Assignment) {
+                let total: usize = a.num_devices();
+                if total == 0 {
+                    return;
+                }
+                let mut k = self.rng.below(total);
+                let mut src = 0;
+                for (m, g) in a.groups.iter().enumerate() {
+                    if k < g.len() {
+                        src = m;
+                        break;
+                    }
+                    k -= g.len();
+                }
+                let dev = a.groups[src][k];
+                if a.groups[src].len() <= 1 {
+                    return;
+                }
+                let mut sg = a.groups[src].clone();
+                sg.retain(|&d| d != dev);
+                let src_new = self.solve_for(t, src, &sg);
+                let mut best: Option<(usize, f64, f64)> = None;
+                for dst in 0..a.groups.len() {
+                    if dst == src {
+                        continue;
+                    }
+                    let mut dg = a.groups[dst].clone();
+                    dg.push(dev);
+                    let dst_new = self.solve_for(t, dst, &dg);
+                    let delta =
+                        (src_new + dst_new) - (self.edge_obj[src] + self.edge_obj[dst]);
+                    if delta < -1e-9 && best.map_or(true, |(_, _, bd)| delta < bd) {
+                        best = Some((dst, dst_new, delta));
+                    }
+                }
+                if let Some((dst, dst_new, _)) = best {
+                    a.groups[src].retain(|&d| d != dev);
+                    a.groups[dst].push(dev);
+                    self.edge_obj[src] = src_new;
+                    self.edge_obj[dst] = dst_new;
+                }
+            }
+            fn exchange(&mut self, t: &Topology, a: &mut Assignment) {
+                let non_empty: Vec<usize> = (0..a.groups.len())
+                    .filter(|&m| !a.groups[m].is_empty())
+                    .collect();
+                if non_empty.len() < 2 {
+                    return;
+                }
+                let e1 = non_empty[self.rng.below(non_empty.len())];
+                let mut e2 = e1;
+                while e2 == e1 {
+                    e2 = non_empty[self.rng.below(non_empty.len())];
+                }
+                let d1 = a.groups[e1][self.rng.below(a.groups[e1].len())];
+                let d2 = a.groups[e2][self.rng.below(a.groups[e2].len())];
+                let g1: Vec<usize> = a.groups[e1]
+                    .iter()
+                    .map(|&d| if d == d1 { d2 } else { d })
+                    .collect();
+                let g2: Vec<usize> = a.groups[e2]
+                    .iter()
+                    .map(|&d| if d == d2 { d1 } else { d })
+                    .collect();
+                let o1 = self.solve_for(t, e1, &g1);
+                let o2 = self.solve_for(t, e2, &g2);
+                if o1 + o2 < self.edge_obj[e1] + self.edge_obj[e2] - 1e-9 {
+                    a.groups[e1] = g1;
+                    a.groups[e2] = g2;
+                    self.edge_obj[e1] = o1;
+                    self.edge_obj[e2] = o2;
+                }
+            }
+        }
+
+        let t = topo(17);
+        let sched: Vec<usize> = (0..36).collect();
+        let mut a = super::super::geo::assign_geographic(&t, &sched);
+        let mut legacy = Legacy {
+            rng: Rng::new(23),
+            edge_obj: vec![],
+            opts: SolverOpts::fast(),
+        };
+        legacy.edge_obj = a
+            .groups
+            .iter()
+            .enumerate()
+            .map(|(m, g)| legacy.solve_for(&t, m, g))
+            .collect();
+        for _ in 0..40 {
+            legacy.transfer(&t, &mut a);
+        }
+        for _ in 0..40 {
+            legacy.exchange(&t, &mut a);
+        }
+
+        let mut h = Hfel::new(40, 23);
+        h.transfer_iters = 40;
+        let b = h.run(&t, &sched);
+        assert_eq!(a.groups, b.groups, "cache-driven HFEL diverged from legacy");
     }
 }

@@ -2,9 +2,11 @@
 //! timed iterations with mean/p50/p95 reporting, and fixed-width table
 //! printing for the paper-figure benches. The [`kernels`] submodule is
 //! the `hfl bench` subcommand (blocked vs reference kernel speedups +
-//! `BENCH_kernels.json`).
+//! `BENCH_kernels.json`); [`topo`] is `hfl bench --topo` (fleet scaling
+//! up to 10⁶ devices × 10³ edges + `BENCH_topo.json`).
 
 pub mod kernels;
+pub mod topo;
 
 use std::time::Instant;
 

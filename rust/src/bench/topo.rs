@@ -1,0 +1,323 @@
+//! `hfl bench --topo` — the topology scaling suite behind
+//! `BENCH_topo.json`: N = 10³..10⁶ devices against M = N/1000 (clamped to
+//! [5, 1000]) edge servers, measuring generation time, one full
+//! schedule→assign→cost round, and resident topology memory.
+//!
+//! Every size past the dense budget exercises the scalable path: per-device
+//! RNG streams, the sparse k-nearest gain table, and the equal-split
+//! [`CostCache`] — the dense N×M gain matrix (8·N·M bytes; 8 GB at
+//! 10⁶×10³) is never allocated, which is the point of the suite. The
+//! per-round pipeline is IKC scheduling over K=10 synthetic index clusters
+//! (H = N/10), geographic assignment via the cached nearest-edge indices,
+//! and a full objective-(17) evaluation through the cache.
+//!
+//! Wall-clock numbers are machine-dependent, so the regression gate is
+//! relative like the kernel bench's: against a *measured* baseline entry,
+//! rounds/s may not drop below 50% and bytes/device may not grow past
+//! 125%; against a bootstrap *floor* entry (no `rounds_per_s`), only the
+//! absolute `max_bytes_per_device` ceiling is enforced — memory per device
+//! is a deterministic property of the layout, not of the host.
+
+use std::path::{Path, PathBuf};
+
+use crate::allocation::CostCache;
+use crate::assignment::geo::assign_geographic;
+use crate::scheduling::{Ikc, Scheduler};
+use crate::system::{SystemParams, Topology, DENSE_GAIN_BUDGET};
+use crate::util::{Json, Rng};
+
+use super::{bench_once, Table};
+
+/// Measured rounds/s may not drop below this fraction of the baseline's.
+const SPEED_SLACK: f64 = 0.5;
+/// Measured bytes/device may not exceed this multiple of the baseline's.
+const MEM_SLACK: f64 = 1.25;
+/// Synthetic cluster count for the IKC scheduling stage (devices are
+/// binned by `n % K`; class-balance structure is irrelevant to timing).
+const K_CLUSTERS: usize = 10;
+
+pub struct TopoBenchOpts {
+    /// CI quick run: stop at N = 10⁵.
+    pub smoke: bool,
+    /// Baseline JSON (`BENCH_topo.json`) to gate against.
+    pub baseline: Option<PathBuf>,
+    /// Where to write the fresh results JSON.
+    pub out: PathBuf,
+}
+
+struct SizeResult {
+    n: usize,
+    m: usize,
+    gain_mode: &'static str,
+    gen_s: f64,
+    round_s: f64,
+    topo_bytes: usize,
+}
+
+impl SizeResult {
+    fn rounds_per_s(&self) -> f64 {
+        if self.round_s > 0.0 {
+            1.0 / self.round_s
+        } else {
+            f64::INFINITY
+        }
+    }
+
+    fn bytes_per_device(&self) -> f64 {
+        self.topo_bytes as f64 / self.n as f64
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("n", Json::num(self.n as f64)),
+            ("m", Json::num(self.m as f64)),
+            ("gain_mode", Json::str(self.gain_mode)),
+            ("gen_s", Json::num(self.gen_s)),
+            ("round_s", Json::num(self.round_s)),
+            ("rounds_per_s", Json::num(self.rounds_per_s())),
+            ("topo_bytes", Json::num(self.topo_bytes as f64)),
+            ("bytes_per_device", Json::num(self.bytes_per_device())),
+            (
+                "dense_equivalent_bytes",
+                Json::num((self.n * self.m * 8) as f64),
+            ),
+        ])
+    }
+}
+
+fn params_for(n: usize) -> SystemParams {
+    SystemParams {
+        n_devices: n,
+        n_edges: (n / 1000).clamp(5, 1000),
+        ..SystemParams::default()
+    }
+}
+
+/// One schedule→assign→cost round at size `n` (the sweep loop's per-round
+/// work, minus FL training, which scales with H·model, not with N).
+fn run_size(n: usize) -> SizeResult {
+    let params = params_for(n);
+    let m = params.n_edges;
+    let (topo, gen_s) =
+        bench_once(&format!("topo_gen_n{n}_m{m}"), || Topology::generate(&params, &mut Rng::new(42)));
+
+    let h = (n / 10).max(1);
+    let clusters: Vec<Vec<usize>> = (0..K_CLUSTERS)
+        .map(|k| (0..n).filter(|d| d % K_CLUSTERS == k).collect())
+        .collect();
+    let h_round = h - h % K_CLUSTERS;
+    let mut ikc = Ikc::new(clusters, n, h_round.max(K_CLUSTERS), 7);
+    let mut cache = CostCache::new_equal_split(params.lambda);
+
+    let ((), round_s) = bench_once(&format!("topo_round_n{n}_m{m}"), || {
+        let scheduled = ikc.schedule();
+        let a = assign_geographic(&topo, &scheduled);
+        cache.reset(&topo, &a.groups);
+        let c = cache.iter_cost();
+        assert!(c.t.is_finite() && c.e.is_finite());
+    });
+
+    SizeResult {
+        n,
+        m,
+        gain_mode: if topo.is_lazy_gains() { "lazy" } else { "dense" },
+        gen_s,
+        round_s,
+        topo_bytes: topo.mem_bytes(),
+    }
+}
+
+fn check_against_baseline(results: &[SizeResult], path: &Path) -> anyhow::Result<()> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("cannot read baseline {}: {e}", path.display()))?;
+    let base =
+        Json::parse(&text).map_err(|e| anyhow::anyhow!("baseline {}: {e}", path.display()))?;
+    let entries = match base.get("sizes").and_then(Json::as_arr) {
+        Some(a) => a,
+        None => {
+            log::warn!(
+                "baseline {} has no sizes entries — skipping regression check",
+                path.display()
+            );
+            return Ok(());
+        }
+    };
+    for cur in results {
+        let prev = entries
+            .iter()
+            .find(|e| e.get("n").and_then(Json::as_f64) == Some(cur.n as f64));
+        let prev = match prev {
+            Some(p) => p,
+            None => {
+                log::warn!("baseline has no entry for N={} — not gated", cur.n);
+                continue;
+            }
+        };
+        // always-on floor: memory layout is deterministic per device count
+        if let Some(ceiling) = prev.get("max_bytes_per_device").and_then(Json::as_f64) {
+            anyhow::ensure!(
+                cur.bytes_per_device() <= ceiling,
+                "N={}: {:.1} bytes/device exceeds the {ceiling:.1} ceiling in {}",
+                cur.n,
+                cur.bytes_per_device(),
+                path.display()
+            );
+            println!(
+                "baseline check N={:<8} mem ok: {:.1} B/dev <= {ceiling:.1} B/dev floor",
+                cur.n,
+                cur.bytes_per_device()
+            );
+        }
+        // measured entries additionally gate relative throughput + memory
+        if let Some(prev_rps) = prev.get("rounds_per_s").and_then(Json::as_f64) {
+            let cur_rps = cur.rounds_per_s();
+            anyhow::ensure!(
+                cur_rps >= prev_rps * SPEED_SLACK,
+                "N={}: rounds/s regressed >50%: {cur_rps:.3} now vs {prev_rps:.3} in {}",
+                cur.n,
+                path.display()
+            );
+            println!(
+                "baseline check N={:<8} speed ok: {cur_rps:.3} rounds/s vs baseline {prev_rps:.3}",
+                cur.n
+            );
+        }
+        if let Some(prev_bpd) = prev.get("bytes_per_device").and_then(Json::as_f64) {
+            anyhow::ensure!(
+                cur.bytes_per_device() <= prev_bpd * MEM_SLACK,
+                "N={}: bytes/device grew >25%: {:.1} now vs {prev_bpd:.1} in {}",
+                cur.n,
+                cur.bytes_per_device(),
+                path.display()
+            );
+        }
+    }
+    Ok(())
+}
+
+fn results_json(mode: &str, results: &[SizeResult]) -> Json {
+    Json::obj(vec![
+        ("schema", Json::num(1.0)),
+        ("mode", Json::str(mode)),
+        (
+            "generated_by",
+            Json::str("hfl bench --topo (fleet generation + schedule/assign/cost round at scale)"),
+        ),
+        ("sizes", Json::Arr(results.iter().map(SizeResult::to_json).collect())),
+    ])
+}
+
+/// Run the scaling suite; returns the largest size's rounds/s.
+pub fn run(opts: &TopoBenchOpts) -> anyhow::Result<f64> {
+    let mode = if opts.smoke { "smoke" } else { "full" };
+    println!("hfl bench --topo [{mode}]: fleet scaling suite");
+
+    let sizes: &[usize] = if opts.smoke {
+        &[1_000, 10_000, 100_000]
+    } else {
+        &[1_000, 10_000, 100_000, 1_000_000]
+    };
+    let results: Vec<SizeResult> = sizes.iter().map(|&n| run_size(n)).collect();
+
+    let mut table = Table::new(&[
+        "N", "M", "gains", "gen", "round", "rounds/s", "topo mem", "B/dev", "dense would be",
+    ]);
+    for r in &results {
+        table.row(&[
+            format!("{}", r.n),
+            format!("{}", r.m),
+            r.gain_mode.to_string(),
+            format!("{:.3}s", r.gen_s),
+            format!("{:.3}s", r.round_s),
+            format!("{:.3}", r.rounds_per_s()),
+            format!("{:.1} MB", r.topo_bytes as f64 / 1e6),
+            format!("{:.0}", r.bytes_per_device()),
+            format!("{:.1} MB", (r.n * r.m * 8) as f64 / 1e6),
+        ]);
+    }
+    table.print();
+
+    let json = results_json(mode, &results);
+    let mut text = String::new();
+    json.write(&mut text);
+    text.push('\n');
+    if let Some(dir) = opts.out.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir).ok();
+        }
+    }
+    std::fs::write(&opts.out, &text)
+        .map_err(|e| anyhow::anyhow!("cannot write {}: {e}", opts.out.display()))?;
+    println!("wrote {}", opts.out.display());
+
+    // structural sanity independent of the host: scalable sizes must not
+    // have paid for the dense matrix
+    for r in &results {
+        if r.n * r.m > DENSE_GAIN_BUDGET {
+            anyhow::ensure!(
+                r.gain_mode == "lazy" && r.topo_bytes < r.n * r.m * 8,
+                "N={} should be lazy/sparse but reports {} bytes (dense would be {})",
+                r.n,
+                r.topo_bytes,
+                r.n * r.m * 8
+            );
+        }
+    }
+
+    if let Some(baseline) = &opts.baseline {
+        check_against_baseline(&results, baseline)?;
+    }
+    let headline = results.last().expect("at least one size");
+    println!(
+        "largest size N={} M={}: {:.3} rounds/s, {:.1} MB topology ({:.0} B/device)",
+        headline.n,
+        headline.m,
+        headline.rounds_per_s(),
+        headline.topo_bytes as f64 / 1e6,
+        headline.bytes_per_device()
+    );
+    Ok(headline.rounds_per_s())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn params_clamp_edge_counts() {
+        assert_eq!(params_for(1_000).n_edges, 5);
+        assert_eq!(params_for(100_000).n_edges, 100);
+        assert_eq!(params_for(1_000_000).n_edges, 1000);
+        assert_eq!(params_for(5_000_000).n_edges, 1000);
+    }
+
+    #[test]
+    fn single_size_result_is_sane() {
+        let r = run_size(1_000);
+        assert_eq!(r.n, 1_000);
+        assert_eq!(r.m, 5);
+        assert_eq!(r.gain_mode, "dense");
+        assert!(r.gen_s >= 0.0 && r.round_s >= 0.0);
+        assert!(r.topo_bytes > 1_000 * 36);
+    }
+
+    #[test]
+    fn results_json_round_trips() {
+        let r = SizeResult {
+            n: 1000,
+            m: 5,
+            gain_mode: "dense",
+            gen_s: 0.01,
+            round_s: 0.02,
+            topo_bytes: 76_000,
+        };
+        let j = results_json("smoke", &[r]);
+        let mut text = String::new();
+        j.write(&mut text);
+        let back = Json::parse(&text).unwrap();
+        let sizes = back.get("sizes").and_then(Json::as_arr).unwrap();
+        assert_eq!(sizes.len(), 1);
+        assert_eq!(sizes[0].get("n").and_then(Json::as_f64), Some(1000.0));
+        assert!(sizes[0].get("rounds_per_s").and_then(Json::as_f64).unwrap() > 0.0);
+    }
+}

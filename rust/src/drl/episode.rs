@@ -17,11 +17,11 @@ pub struct EpisodeFeatures {
 
 /// Build raw (unnormalized) features for one device.
 fn raw_features(topo: &Topology, n: usize, out: &mut [f64]) {
-    let d = &topo.devices[n];
+    let d = topo.device(n);
     let m = topo.edges.len();
-    for (j, &g) in d.gain_to_edge.iter().enumerate() {
+    for j in 0..m {
         // gains span orders of magnitude: normalize in log domain
-        out[j] = g.log10();
+        out[j] = topo.gain(n, j).log10();
     }
     out[m] = d.cycles_per_sample;
     out[m + 1] = d.num_samples as f64;

@@ -34,8 +34,8 @@ pub fn run(backend: &dyn Backend, cfg: &Config) -> anyhow::Result<Vec<Table2Row>
         let mut rng = Rng::new(cfg.seed ^ 0x7ab1e2);
         let topo = Topology::generate(&params, &mut rng);
         let templates = Templates::generate(&spec, cfg.seed);
-        let samples: Vec<usize> = topo.devices.iter().map(|d| d.num_samples).collect();
-        let dd = partition(topo.devices.len(), &samples, cfg.frac_major, cfg.seed);
+        let samples: Vec<usize> = topo.num_samples_per_device();
+        let dd = partition(topo.n_devices(), &samples, cfg.frac_major, cfg.seed);
         let result = cluster_devices(
             backend,
             &topo,

@@ -89,9 +89,9 @@ impl<'e> HflTrainer<'e> {
         let rng = Rng::new(cfg.seed ^ 0xF1_00);
         let templates = Templates::generate(&spec, cfg.seed);
         let samples: Vec<usize> =
-            topo.devices.iter().map(|d| d.num_samples).collect();
+            topo.num_samples_per_device();
         let device_data =
-            crate::data::partition(topo.devices.len(), &samples, cfg.frac_major, cfg.seed);
+            crate::data::partition(topo.n_devices(), &samples, cfg.frac_major, cfg.seed);
         let test = TestSet::generate(&templates, cfg.test_size, cfg.seed ^ 0x7e57);
         Ok(HflTrainer {
             backend,

@@ -60,7 +60,11 @@ commands:
                             (--smoke    tiny-model quick run for CI
                              --baseline FILE  fail if the e2e speedup
                              regresses >25% vs the checked-in baseline
-                             --out FILE  output path)
+                             --out FILE  output path
+                             --topo     fleet scaling suite instead:
+                             N=1e3..1e6 devices (smoke stops at 1e5),
+                             generation + schedule/assign/cost round +
+                             resident memory; writes BENCH_topo.json)
   drl-train                 train the D3QN assigner (Algorithm 5) on the
                             native backend — no artifacts needed; saves
                             results/dqn_theta.bin + the fig5 curve CSV
@@ -474,10 +478,20 @@ fn cmd_merge(args: &Args) -> anyhow::Result<()> {
 }
 
 /// `hfl bench` — kernel micro-benchmarks + end-to-end local round,
-/// blocked kernels vs the scalar reference oracle.
+/// blocked kernels vs the scalar reference oracle. With `--topo`, the
+/// fleet scaling suite (N=10³..10⁶) instead.
 fn cmd_bench(args: &Args) -> anyhow::Result<()> {
+    let topo = args.flag("topo");
     let smoke = args.flag("smoke");
     let baseline = args.opt("baseline").map(PathBuf::from);
+    if topo {
+        let out = PathBuf::from(args.get_str("out", "BENCH_topo.json"));
+        args.finish()?;
+        let opts = hfl::bench::topo::TopoBenchOpts { smoke, baseline, out };
+        let rps = hfl::bench::topo::run(&opts)?;
+        println!("headline rounds/s at the largest size: {rps:.3}");
+        return Ok(());
+    }
     let out = PathBuf::from(args.get_str("out", "BENCH_kernels.json"));
     args.finish()?;
     let opts = hfl::bench::kernels::KernelBenchOpts { smoke, baseline, out };

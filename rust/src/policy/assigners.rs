@@ -6,7 +6,7 @@
 use std::collections::HashMap;
 
 use super::{AssignPolicy, PolicyCtx};
-use crate::allocation::{solve_edge, SolverOpts};
+use crate::allocation::{CostCache, SolverOpts};
 use crate::assignment::drl::DrlAssigner;
 use crate::assignment::{Assigner, Assignment};
 
@@ -58,9 +58,14 @@ impl AssignPolicy for D3qnPolicy<'_> {
 /// Cost-aware greedy assigner: devices are placed one at a time on the edge
 /// with the smallest *marginal* increase of the separable objective-(17)
 /// surrogate Σ_m (E_m + λ·T_m) — each candidate evaluated by re-solving the
-/// affected edge's resource allocation (27), exactly like one HFEL
-/// transferring step but in a single constructive pass (O(H·M) solves, no
+/// affected edge's resource allocation (27) through a [`CostCache`], exactly
+/// like one HFEL transferring step but in a single constructive pass (no
 /// search iterations).
+///
+/// Candidates come from [`crate::system::Topology::candidate_edges`]: all M
+/// edges in dense-gain mode (ascending, so tie-breaks match the legacy
+/// full scan bit-for-bit), or only the k nearest under the sparse gain
+/// table at fleet scale — O(H·k) solves instead of O(H·M).
 pub struct GreedyCost {
     opts: SolverOpts,
 }
@@ -80,27 +85,22 @@ impl Default for GreedyCost {
 impl AssignPolicy for GreedyCost {
     fn assign(&mut self, ctx: &PolicyCtx, scheduled: &[usize]) -> anyhow::Result<Assignment> {
         let topo = ctx.topo;
-        let lambda = topo.params.lambda;
         let m_count = topo.edges.len();
         anyhow::ensure!(m_count > 0, "greedy: topology has no edge servers");
-        let mut groups: Vec<Vec<usize>> = vec![Vec::new(); m_count];
-        let mut obj = vec![0.0f64; m_count];
+        let mut cache = CostCache::new_solver(topo.params.lambda, self.opts.clone());
+        cache.reset(topo, &vec![Vec::new(); m_count]);
         for &n in scheduled {
-            let mut best: Option<(usize, f64, f64)> = None; // (edge, delta, new_obj)
-            for (m, group) in groups.iter_mut().enumerate() {
-                group.push(n);
-                let new_obj = solve_edge(topo, m, group, lambda, &self.opts).objective;
-                group.pop();
-                let delta = new_obj - obj[m];
-                if best.map_or(true, |(_, bd, _)| delta < bd) {
-                    best = Some((m, delta, new_obj));
+            let mut best: Option<(usize, f64)> = None; // (edge, delta)
+            for m in topo.candidate_edges(n) {
+                let delta = cache.eval_add(topo, m, n) - cache.edge_objective(m);
+                if best.map_or(true, |(_, bd)| delta < bd) {
+                    best = Some((m, delta));
                 }
             }
-            let (m, _, new_obj) = best.expect("at least one edge");
-            groups[m].push(n);
-            obj[m] = new_obj;
+            let (m, _) = best.expect("at least one candidate edge");
+            cache.apply_add(topo, m, n);
         }
-        Ok(Assignment { groups })
+        Ok(Assignment { groups: cache.groups().to_vec() })
     }
 
     fn name(&self) -> String {

@@ -13,10 +13,10 @@ use crate::system::Topology;
 
 fn check_h(ctx: &PolicyCtx, who: &str) -> anyhow::Result<()> {
     anyhow::ensure!(
-        ctx.h >= 1 && ctx.h <= ctx.topo.devices.len(),
+        ctx.h >= 1 && ctx.h <= ctx.topo.n_devices(),
         "{who}: H={} out of range for {} devices",
         ctx.h,
-        ctx.topo.devices.len()
+        ctx.topo.n_devices()
     );
     Ok(())
 }
@@ -51,7 +51,7 @@ impl SchedulePolicy for FedAvgPolicy {
     fn schedule(&mut self, ctx: &PolicyCtx) -> anyhow::Result<Vec<usize>> {
         if self.inner.is_none() {
             check_h(ctx, "fedavg")?;
-            self.inner = Some(FedAvg::new(ctx.topo.devices.len(), ctx.h, self.seed));
+            self.inner = Some(FedAvg::new(ctx.topo.n_devices(), ctx.h, self.seed));
         }
         Ok(self.inner.as_mut().unwrap().schedule())
     }
@@ -78,7 +78,7 @@ impl SchedulePolicy for VkcPolicy {
         if self.inner.is_none() {
             check_h(ctx, "vkc")?;
             let clusters = ctx_clusters(ctx, "vkc")?;
-            self.inner = Some(Vkc::new(clusters, ctx.topo.devices.len(), ctx.h, self.seed));
+            self.inner = Some(Vkc::new(clusters, ctx.topo.n_devices(), ctx.h, self.seed));
         }
         Ok(self.inner.as_mut().unwrap().schedule())
     }
@@ -105,7 +105,7 @@ impl SchedulePolicy for IkcPolicy {
         if self.inner.is_none() {
             check_h(ctx, "ikc")?;
             let clusters = ctx_clusters(ctx, "ikc")?;
-            self.inner = Some(Ikc::new(clusters, ctx.topo.devices.len(), ctx.h, self.seed));
+            self.inner = Some(Ikc::new(clusters, ctx.topo.n_devices(), ctx.h, self.seed));
         }
         Ok(self.inner.as_mut().unwrap().schedule())
     }
@@ -137,31 +137,64 @@ impl ChannelTopH {
         ChannelTopH { share_hz, key, cache: None }
     }
 
+    /// Best-edge rate of device `n` over its candidate edges (all M in
+    /// dense mode, the k nearest over the sparse gain table at scale).
+    fn score(&self, topo: &Topology, n: usize, per_edge: usize) -> f64 {
+        let tx = topo.fleet.tx_power_w(n);
+        let mut best = 0.0f64;
+        for m in topo.candidate_edges(n) {
+            let share =
+                self.share_hz.unwrap_or(topo.edges[m].bandwidth_hz / per_edge as f64);
+            best = best.max(topo.channel.rate(share, topo.gain(n, m), tx));
+        }
+        best
+    }
+
+    /// Top-H selection through a bounded min-heap: O(N·k + N·log H) instead
+    /// of sorting all N scores. The heap keeps the H best under the same
+    /// (rate desc, id asc) total order the old full sort used, so the
+    /// selected set is identical — `Worst`'s `Ord` puts the lowest-rate /
+    /// highest-id entry on top for eviction.
     fn rank(&self, topo: &Topology, h: usize) -> Vec<usize> {
         let m_count = topo.edges.len();
         let per_edge = ((h + m_count - 1) / m_count).max(1);
-        let mut scored: Vec<(f64, usize)> = (0..topo.devices.len())
-            .map(|n| {
-                let d = &topo.devices[n];
-                let best = (0..m_count)
-                    .map(|m| {
-                        let share = self
-                            .share_hz
-                            .unwrap_or(topo.edges[m].bandwidth_hz / per_edge as f64);
-                        topo.channel.rate(share, d.gain_to_edge[m], d.tx_power_w)
-                    })
-                    .fold(0.0f64, f64::max);
-                (best, n)
-            })
-            .collect();
-        scored.sort_by(|a, b| {
-            b.0.partial_cmp(&a.0)
-                .unwrap_or(std::cmp::Ordering::Equal)
-                .then(a.1.cmp(&b.1))
-        });
-        let mut sel: Vec<usize> = scored.iter().take(h).map(|&(_, n)| n).collect();
+        let mut heap: std::collections::BinaryHeap<Worst> =
+            std::collections::BinaryHeap::with_capacity(h + 1);
+        for n in 0..topo.n_devices() {
+            let entry = Worst { rate: self.score(topo, n, per_edge), id: n };
+            if heap.len() < h {
+                heap.push(entry);
+            } else if entry < *heap.peek().expect("non-empty heap") {
+                heap.pop();
+                heap.push(entry);
+            }
+        }
+        let mut sel: Vec<usize> = heap.into_iter().map(|w| w.id).collect();
         sel.sort_unstable();
         sel
+    }
+}
+
+/// Heap entry ordered so the WORST kept device — lowest rate, then highest
+/// id — surfaces at the top of the max-heap. Rates are finite (eq. 6 on
+/// positive gains), so `total_cmp` agrees with the legacy `partial_cmp`.
+#[derive(PartialEq)]
+struct Worst {
+    rate: f64,
+    id: usize,
+}
+
+impl Eq for Worst {}
+
+impl Ord for Worst {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        other.rate.total_cmp(&self.rate).then(self.id.cmp(&other.id))
+    }
+}
+
+impl PartialOrd for Worst {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
     }
 }
 
@@ -216,16 +249,16 @@ mod tests {
         let mut s = ChannelTopH::new(None, PolicyKey::bare("channel"));
         let sel = s.schedule(&ctx(&t, &hist, 20)).unwrap();
         let rate = |n: usize| {
-            let d = &t.devices[n];
+            let d = t.device(n);
             (0..t.edges.len())
                 .map(|m| {
                     t.channel
-                        .rate(t.edges[m].bandwidth_hz / 4.0, d.gain_to_edge[m], d.tx_power_w)
+                        .rate(t.edges[m].bandwidth_hz / 4.0, t.gain(n, m), d.tx_power_w)
                 })
                 .fold(0.0f64, f64::max)
         };
         let worst_in = sel.iter().map(|&n| rate(n)).fold(f64::INFINITY, f64::min);
-        for n in 0..t.devices.len() {
+        for n in 0..t.n_devices() {
             if !sel.contains(&n) {
                 assert!(rate(n) <= worst_in + 1e-9, "device {n} outranks a selected one");
             }

@@ -214,8 +214,8 @@ pub fn run_cell(
             let sys = spec.system.clone();
             // shared across all strategy arms of the same (H, seed_i)
             let topo = Topology::generate(&sys, &mut Rng::new(dep));
-            let samples: Vec<usize> = topo.devices.iter().map(|d| d.num_samples).collect();
-            let dd = partition(topo.devices.len(), &samples, spec.frac_major, dep ^ 0xDA7A);
+            let samples: Vec<usize> = topo.num_samples_per_device();
+            let dd = partition(topo.n_devices(), &samples, spec.frac_major, dep ^ 0xDA7A);
             let clusters = cell_clusters(spec, cell, backend, None, &dd, dep)?;
             let mut sched =
                 reg.scheduler(&cell.scheduler, &SchedEnv { seed: rng.next_u64() })?;

@@ -79,18 +79,18 @@ pub fn crop_to_mini(full: &[f32], img: usize, key: u64, out: &mut [f32; 100]) {
 /// Simulated delay/energy of Algorithm 2 (see module docs).
 pub fn clustering_cost(topo: &Topology, aux_bits: f64, cycle_scale: f64) -> (f64, f64) {
     let p = &topo.params;
-    // equal bandwidth split per nearest-edge population
+    // equal bandwidth split per nearest-edge population (nearest is the
+    // O(1) construction-time cache, not a per-device O(M) rescan)
     let mut edge_pop = vec![0usize; topo.edges.len()];
-    let nearest: Vec<usize> =
-        (0..topo.devices.len()).map(|n| topo.nearest_edge(n)).collect();
-    for &m in &nearest {
-        edge_pop[m] += 1;
+    for n in 0..topo.n_devices() {
+        edge_pop[topo.nearest_edge(n)] += 1;
     }
 
     let mut t_max = 0.0f64;
     let mut e_sum = 0.0f64;
-    for d in &topo.devices {
-        let m = nearest[d.id];
+    for n in 0..topo.n_devices() {
+        let d = topo.device(n);
+        let m = topo.nearest_edge(n);
         let b = topo.edges[m].bandwidth_hz / edge_pop[m] as f64;
         let cycles = p.local_iters as f64
             * d.cycles_per_sample
@@ -98,7 +98,7 @@ pub fn clustering_cost(topo: &Topology, aux_bits: f64, cycle_scale: f64) -> (f64
             * d.num_samples as f64;
         let t_cmp = cycles / d.max_freq_hz;
         let e_cmp = 0.5 * p.alpha * cycles * d.max_freq_hz * d.max_freq_hz;
-        let rate = topo.channel.rate(b, d.gain_to_edge[m], d.tx_power_w);
+        let rate = topo.channel.rate(b, topo.gain(n, m), d.tx_power_w);
         let t_com = aux_bits / rate;
         t_max = t_max.max(t_cmp + t_com);
         e_sum += e_cmp + d.tx_power_w * t_com;

@@ -48,14 +48,52 @@ impl Scheduler for FedAvg {
 // Shared VKC/IKC helper: top-up from unscheduled devices (Alg. 3 L12-14).
 // ---------------------------------------------------------------------------
 
+/// Paper-scale fleets (N ≤ this) take the original materialize-the-pool
+/// path, which keeps the RNG call sequence — and thus every golden CSV —
+/// byte-identical. Larger fleets switch to rejection sampling.
+const TOP_UP_DENSE_LIMIT: usize = 4096;
+
 fn top_up(selected: &mut Vec<usize>, n_devices: usize, target: usize, rng: &mut Rng) {
     if selected.len() >= target {
         return;
     }
     let chosen: std::collections::HashSet<usize> = selected.iter().cloned().collect();
-    let pool: Vec<usize> = (0..n_devices).filter(|n| !chosen.contains(n)).collect();
-    let extra = (target - selected.len()).min(pool.len());
-    selected.extend(rng.sample(&pool, extra));
+    if n_devices <= TOP_UP_DENSE_LIMIT {
+        let pool: Vec<usize> = (0..n_devices).filter(|n| !chosen.contains(n)).collect();
+        let extra = (target - selected.len()).min(pool.len());
+        selected.extend(rng.sample(&pool, extra));
+        return;
+    }
+    // Million-device fleets: the complement pool is huge and the deficit
+    // tiny, so draw by rejection instead of materializing O(N) indices.
+    // Deterministic for a fixed RNG state; duplicates are rejected against
+    // both the prior selection and this top-up's own draws.
+    let extra = (target - selected.len()).min(n_devices - chosen.len().min(n_devices));
+    let mut picked: std::collections::HashSet<usize> = std::collections::HashSet::new();
+    let mut attempts = 16 * extra + 64;
+    while picked.len() < extra && attempts > 0 {
+        attempts -= 1;
+        let n = rng.below(n_devices);
+        if !chosen.contains(&n) && picked.insert(n) {
+            selected.push(n);
+        }
+    }
+    if picked.len() < extra {
+        // Pathological acceptance rate (selection covers almost all of N):
+        // finish with a wrap-around linear scan from a random offset, which
+        // is deterministic and always terminates.
+        let start = rng.below(n_devices);
+        let mut n = start;
+        while picked.len() < extra {
+            if !chosen.contains(&n) && picked.insert(n) {
+                selected.push(n);
+            }
+            n = (n + 1) % n_devices;
+            if n == start {
+                break; // complement exhausted
+            }
+        }
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -275,5 +313,53 @@ mod tests {
     #[should_panic]
     fn vkc_rejects_nondivisible_h() {
         Vkc::new(clusters_10x10(), 100, 37, 8);
+    }
+
+    #[test]
+    fn top_up_small_fleet_matches_legacy_draws() {
+        // transcription of the pre-rejection-sampling implementation: the
+        // gated path must consume the RNG identically (golden-CSV contract)
+        let legacy = |selected: &mut Vec<usize>, n: usize, target: usize, rng: &mut Rng| {
+            let chosen: std::collections::HashSet<usize> =
+                selected.iter().cloned().collect();
+            let pool: Vec<usize> = (0..n).filter(|d| !chosen.contains(d)).collect();
+            let extra = (target - selected.len()).min(pool.len());
+            selected.extend(rng.sample(&pool, extra));
+        };
+        for seed in [1u64, 7, 42] {
+            let mut a = vec![5, 17, 40];
+            let mut b = a.clone();
+            top_up(&mut a, 100, 10, &mut Rng::new(seed));
+            legacy(&mut b, 100, 10, &mut Rng::new(seed));
+            assert_eq!(a, b, "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn top_up_large_fleet_is_deterministic_and_distinct() {
+        let mut a = vec![0, 1, 2];
+        let mut b = a.clone();
+        top_up(&mut a, 100_000, 50, &mut Rng::new(9));
+        top_up(&mut b, 100_000, 50, &mut Rng::new(9));
+        assert_eq!(a, b, "rejection sampling must be deterministic");
+        assert_eq!(a.len(), 50);
+        let mut d = a.clone();
+        d.sort_unstable();
+        d.dedup();
+        assert_eq!(d.len(), 50, "duplicates slipped through");
+    }
+
+    #[test]
+    fn top_up_large_fleet_scan_fallback_when_nearly_full() {
+        // complement of 3 devices in a >4096 fleet: rejection sampling is
+        // hopeless, the wrap-around scan must still find every free device
+        let n = TOP_UP_DENSE_LIMIT + 10;
+        let mut sel: Vec<usize> = (0..n - 3).collect();
+        top_up(&mut sel, n, n, &mut Rng::new(1));
+        assert_eq!(sel.len(), n);
+        let mut d = sel.clone();
+        d.sort_unstable();
+        d.dedup();
+        assert_eq!(d.len(), n);
     }
 }

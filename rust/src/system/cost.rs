@@ -67,12 +67,12 @@ pub fn device_cost(
     alloc: DeviceAlloc,
 ) -> DeviceCost {
     let p = &topo.params;
-    let d = &topo.devices[n];
+    let d = topo.device(n);
     let t_cmp = d.t_cmp(p.local_iters, alloc.freq_hz);
     let e_cmp = d.e_cmp(p.local_iters, alloc.freq_hz, p.alpha);
     let rate = topo
         .channel
-        .rate(alloc.bandwidth_hz, d.gain_to_edge[m], d.tx_power_w);
+        .rate(alloc.bandwidth_hz, topo.gain(n, m), d.tx_power_w);
     let t_com = if rate > 0.0 { p.model_bits / rate } else { f64::INFINITY };
     let e_com = d.tx_power_w * t_com;
     DeviceCost { t_cmp, t_com, e_cmp, e_com }

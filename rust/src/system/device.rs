@@ -2,9 +2,14 @@
 
 /// Static characteristics of one IoT device.
 ///
-/// These are the quantities the D³QN state vector (eq. 24) is built from:
-/// per-edge channel gains plus (u_n, D_n, p_n).
-#[derive(Clone, Debug)]
+/// These are the quantities the D³QN state vector (eq. 24) is built from,
+/// together with the per-edge channel gains `ḡ_n^m`, which live in the
+/// topology's gain table (`Topology::gain(n, m)`) — dense at paper scale,
+/// lazy/sparse at fleet scale — rather than in a per-device vector.
+///
+/// Backed by the SoA [`super::fleet::Fleet`]; obtained as a cheap by-value
+/// view via `Topology::device(n)`.
+#[derive(Clone, Copy, Debug)]
 pub struct Device {
     /// Index in the fleet (0-based; the paper's n ∈ {1..N}).
     pub id: usize,
@@ -18,8 +23,6 @@ pub struct Device {
     pub max_freq_hz: f64,
     /// Position in meters within the deployment square.
     pub pos: (f64, f64),
-    /// Mean channel gain to each edge server, `ḡ_n^m` (linear, not dB).
-    pub gain_to_edge: Vec<f64>,
 }
 
 /// Static characteristics of one edge server.
@@ -66,7 +69,6 @@ mod tests {
             tx_power_w: 0.1,
             max_freq_hz: 2e9,
             pos: (0.0, 0.0),
-            gain_to_edge: vec![1e-12],
         }
     }
 

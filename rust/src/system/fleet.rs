@@ -1,0 +1,131 @@
+//! Structure-of-arrays device storage.
+//!
+//! At the paper's scale (100 devices) an array-of-structs `Vec<Device>` is
+//! fine, but the ROADMAP's north star is millions of devices, where the
+//! layout starts to matter: schedulers and the cost model touch one field
+//! across many devices (all positions, all sample counts), not all fields
+//! of one device. `Fleet` therefore stores each per-device quantity in its
+//! own parallel vector and hands out [`Device`] as a cheap by-value view
+//! ([`Fleet::device`]) for call sites that want the struct shape.
+//!
+//! Channel gains are deliberately NOT part of the fleet — they are a
+//! device×edge matrix and live in [`super::gains::GainTable`], which is
+//! dense at paper scale and lazy/sparse at million-device scale.
+
+use super::device::Device;
+
+/// Parallel per-device arrays (positions, compute and radio parameters).
+#[derive(Clone, Debug, Default)]
+pub struct Fleet {
+    xs: Vec<f64>,
+    ys: Vec<f64>,
+    cycles: Vec<f64>,
+    /// `D_n` fits u32 comfortably (Table I: hundreds); at 10⁶ devices the
+    /// narrower type saves 4 MB and halves the scheduler's cache traffic.
+    samples: Vec<u32>,
+    tx_w: Vec<f64>,
+    /// `f^max` is fleet-wide in Table I, so it is a scalar, not a column.
+    max_freq_hz: f64,
+}
+
+impl Fleet {
+    pub fn with_capacity(n: usize, max_freq_hz: f64) -> Fleet {
+        Fleet {
+            xs: Vec::with_capacity(n),
+            ys: Vec::with_capacity(n),
+            cycles: Vec::with_capacity(n),
+            samples: Vec::with_capacity(n),
+            tx_w: Vec::with_capacity(n),
+            max_freq_hz,
+        }
+    }
+
+    pub fn push(&mut self, pos: (f64, f64), cycles: f64, samples: usize, tx_w: f64) {
+        self.xs.push(pos.0);
+        self.ys.push(pos.1);
+        self.cycles.push(cycles);
+        self.samples.push(u32::try_from(samples).expect("num_samples fits u32"));
+        self.tx_w.push(tx_w);
+    }
+
+    pub fn len(&self) -> usize {
+        self.xs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.xs.is_empty()
+    }
+
+    pub fn pos(&self, n: usize) -> (f64, f64) {
+        (self.xs[n], self.ys[n])
+    }
+
+    pub fn cycles_per_sample(&self, n: usize) -> f64 {
+        self.cycles[n]
+    }
+
+    pub fn num_samples(&self, n: usize) -> usize {
+        self.samples[n] as usize
+    }
+
+    pub fn tx_power_w(&self, n: usize) -> f64 {
+        self.tx_w[n]
+    }
+
+    pub fn max_freq_hz(&self) -> f64 {
+        self.max_freq_hz
+    }
+
+    /// By-value AoS view of one device (cheap: 6 scalars, no heap).
+    pub fn device(&self, n: usize) -> Device {
+        Device {
+            id: n,
+            cycles_per_sample: self.cycles[n],
+            num_samples: self.samples[n] as usize,
+            tx_power_w: self.tx_w[n],
+            max_freq_hz: self.max_freq_hz,
+            pos: (self.xs[n], self.ys[n]),
+        }
+    }
+
+    /// Resident heap bytes of the fleet columns.
+    pub fn mem_bytes(&self) -> usize {
+        self.xs.capacity() * 8
+            + self.ys.capacity() * 8
+            + self.cycles.capacity() * 8
+            + self.samples.capacity() * 4
+            + self.tx_w.capacity() * 8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_and_view_round_trip() {
+        let mut f = Fleet::with_capacity(2, 2e9);
+        f.push((1.0, 2.0), 5e4, 500, 0.1);
+        f.push((3.0, 4.0), 7e4, 300, 0.2);
+        assert_eq!(f.len(), 2);
+        assert_eq!(f.pos(1), (3.0, 4.0));
+        assert_eq!(f.num_samples(0), 500);
+        let d = f.device(1);
+        assert_eq!(d.id, 1);
+        assert_eq!(d.cycles_per_sample, 7e4);
+        assert_eq!(d.num_samples, 300);
+        assert_eq!(d.tx_power_w, 0.2);
+        assert_eq!(d.max_freq_hz, 2e9);
+        assert_eq!(d.pos, (3.0, 4.0));
+    }
+
+    #[test]
+    fn mem_bytes_is_linear_in_devices() {
+        let mut f = Fleet::with_capacity(100, 2e9);
+        for i in 0..100 {
+            f.push((i as f64, 0.0), 1e4, 300, 0.1);
+        }
+        // 4 × f64 columns + 1 × u32 column = 36 bytes per device
+        assert_eq!(f.mem_bytes(), 100 * 36);
+    }
+}

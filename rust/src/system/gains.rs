@@ -1,0 +1,108 @@
+//! Channel-gain storage: dense at paper scale, lazy/sparse at fleet scale.
+//!
+//! The legacy topology materialized a dense N×M `gain_to_edge` matrix —
+//! 8 GB of shadow-fading draws at 10⁶ devices × 10³ edges. `GainTable`
+//! keeps that dense layout (and the legacy RNG draw order) whenever
+//! `N·M ≤ DENSE_GAIN_BUDGET`, which covers every paper preset, and
+//! otherwise stores only a per-device seed plus the k nearest edges' gains
+//! (the only ones schedulers/assigners actually touch at scale).
+//!
+//! ## Determinism contract
+//!
+//! In lazy mode the gain of link `(n, m)` is a pure function of
+//! `(device_seed[n], m, dist(n, m))` — see [`derive_gain`] — NOT of the
+//! order in which gains are queried. Lazily materializing a gain on the
+//! fly therefore produces bit-identical values to eagerly precomputing the
+//! whole row (or the whole matrix), at any thread count; the cached k-row
+//! is purely an optimization. Dense mode instead replays the legacy
+//! interleaved draw order so existing seeds keep their exact values.
+
+use super::channel::ChannelModel;
+use crate::util::Rng;
+
+/// Largest N·M for which the dense (legacy-identical) gain matrix is kept:
+/// 2²² entries = 32 MB. All paper presets (100×5 … 10⁴ fleets) fit; the
+/// million-device scenarios do not and switch to the lazy table.
+pub const DENSE_GAIN_BUDGET: usize = 1 << 22;
+
+/// Edges cached per device in lazy mode (the sparse gain table width).
+pub const DEFAULT_KNN: usize = 8;
+
+/// Per-link gain derivation for lazy mode: an order-independent stream
+/// seeded by `(device_seed, edge)`. One `mean_gain` call consumes exactly
+/// one shadow-fading draw from a fresh stream, so the value depends only
+/// on the link, never on what was derived before it.
+pub fn derive_gain(channel: &ChannelModel, device_seed: u64, edge: usize, dist_m: f64) -> f64 {
+    let link_seed =
+        device_seed ^ (edge as u64).wrapping_add(1).wrapping_mul(0xD6E8_FEB8_6659_FD93);
+    channel.mean_gain(dist_m, &mut Rng::new(link_seed))
+}
+
+/// Device×edge mean channel gains.
+#[derive(Clone, Debug)]
+pub enum GainTable {
+    /// Row-major N×M matrix, legacy draw order (paper scale).
+    Dense { n_edges: usize, g: Vec<f64> },
+    /// Per-device seed + cached k-nearest-edge rows (fleet scale). Gains to
+    /// edges outside the cached row are derived on demand via
+    /// [`derive_gain`] — same value the cache would hold.
+    Lazy {
+        seeds: Vec<u64>,
+        k: usize,
+        /// N×k edge ids, ascending by (distance, id) within each row.
+        knn: Vec<u32>,
+        /// N×k gains, parallel to `knn`.
+        knn_g: Vec<f64>,
+    },
+}
+
+impl GainTable {
+    pub fn is_lazy(&self) -> bool {
+        matches!(self, GainTable::Lazy { .. })
+    }
+
+    /// Cached candidate edges of device `n` (lazy mode only).
+    pub fn knn_row(&self, n: usize) -> Option<&[u32]> {
+        match self {
+            GainTable::Dense { .. } => None,
+            GainTable::Lazy { k, knn, .. } => Some(&knn[n * k..(n + 1) * k]),
+        }
+    }
+
+    /// Resident heap bytes of the table.
+    pub fn mem_bytes(&self) -> usize {
+        match self {
+            GainTable::Dense { g, .. } => g.capacity() * 8,
+            GainTable::Lazy { seeds, knn, knn_g, .. } => {
+                seeds.capacity() * 8 + knn.capacity() * 4 + knn_g.capacity() * 8
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn derive_gain_is_order_independent_and_deterministic() {
+        let ch = ChannelModel::default();
+        let forward: Vec<f64> = (0..20).map(|m| derive_gain(&ch, 42, m, 500.0)).collect();
+        let backward: Vec<f64> =
+            (0..20).rev().map(|m| derive_gain(&ch, 42, m, 500.0)).collect();
+        for (m, g) in forward.iter().enumerate() {
+            assert_eq!(*g, backward[19 - m], "edge {m}");
+            assert!(*g > 0.0);
+        }
+    }
+
+    #[test]
+    fn derive_gain_distinguishes_devices_and_edges() {
+        let ch = ChannelModel::default();
+        let a = derive_gain(&ch, 1, 0, 500.0);
+        let b = derive_gain(&ch, 2, 0, 500.0);
+        let c = derive_gain(&ch, 1, 1, 500.0);
+        assert_ne!(a, b);
+        assert_ne!(a, c);
+    }
+}

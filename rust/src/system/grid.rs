@@ -1,0 +1,269 @@
+//! Uniform spatial grid over the edge servers.
+//!
+//! Replaces the O(M) linear scan of `Topology::nearest_edge` with an O(1)
+//! expected ring search: edges are bucketed into a √M × √M grid over the
+//! deployment square (≈1 edge per cell), and a query expands outward in
+//! Chebyshev rings until no unvisited ring can possibly hold a closer
+//! point. Ties break to the lowest edge id, matching the legacy
+//! `min_by`-over-indices scan exactly (its `min_by` keeps the first
+//! minimum), so grid answers are drop-in identical to the old path.
+
+/// CSR-bucketed point grid (point = edge-server position).
+#[derive(Clone, Debug)]
+pub struct SpatialGrid {
+    /// Cells per axis.
+    cells: usize,
+    cell_size: f64,
+    /// CSR bucket starts, `cells² + 1` entries.
+    starts: Vec<u32>,
+    /// Point ids grouped by cell, sorted ascending within each cell.
+    items: Vec<u32>,
+    /// Point coordinates, indexed by point id (copied for locality).
+    pxs: Vec<f64>,
+    pys: Vec<f64>,
+}
+
+fn dist(a: (f64, f64), b: (f64, f64)) -> f64 {
+    ((a.0 - b.0).powi(2) + (a.1 - b.1).powi(2)).sqrt()
+}
+
+impl SpatialGrid {
+    /// Build over `pts` (must be non-empty) covering `[0, side]²`. Points
+    /// outside the square are clamped into the boundary cells, so queries
+    /// stay correct even for out-of-area coordinates.
+    pub fn build(side: f64, pts: &[(f64, f64)]) -> SpatialGrid {
+        assert!(!pts.is_empty(), "spatial grid over zero points");
+        assert!(side > 0.0, "non-positive deployment side");
+        let m = pts.len();
+        let cells = (m as f64).sqrt().ceil() as usize;
+        let cells = cells.max(1);
+        let cell_size = side / cells as f64;
+        let n_cells = cells * cells;
+
+        let cell_of = |x: f64, y: f64| -> usize {
+            let cx = ((x / cell_size) as isize).clamp(0, cells as isize - 1) as usize;
+            let cy = ((y / cell_size) as isize).clamp(0, cells as isize - 1) as usize;
+            cy * cells + cx
+        };
+
+        let mut counts = vec![0u32; n_cells + 1];
+        for &(x, y) in pts {
+            counts[cell_of(x, y) + 1] += 1;
+        }
+        for c in 1..=n_cells {
+            counts[c] += counts[c - 1];
+        }
+        let starts = counts;
+        let mut cursor: Vec<u32> = starts[..n_cells].to_vec();
+        let mut items = vec![0u32; m];
+        // pts iterated in id order, so each bucket ends up id-sorted
+        for (id, &(x, y)) in pts.iter().enumerate() {
+            let c = cell_of(x, y);
+            items[cursor[c] as usize] = id as u32;
+            cursor[c] += 1;
+        }
+
+        SpatialGrid {
+            cells,
+            cell_size,
+            starts,
+            items,
+            pxs: pts.iter().map(|p| p.0).collect(),
+            pys: pts.iter().map(|p| p.1).collect(),
+        }
+    }
+
+    fn bucket(&self, cx: usize, cy: usize) -> &[u32] {
+        let c = cy * self.cells + cx;
+        &self.items[self.starts[c] as usize..self.starts[c + 1] as usize]
+    }
+
+    fn cell_of(&self, x: f64, y: f64) -> (usize, usize) {
+        let cx = ((x / self.cell_size) as isize).clamp(0, self.cells as isize - 1);
+        let cy = ((y / self.cell_size) as isize).clamp(0, self.cells as isize - 1);
+        (cx as usize, cy as usize)
+    }
+
+    /// Visit every in-bounds cell at Chebyshev distance exactly `r` from
+    /// `(cx, cy)`. Returns false when the whole ring lies outside the grid
+    /// (at which point every larger ring does too).
+    fn for_ring<F: FnMut(usize, usize)>(&self, cx: usize, cy: usize, r: usize, mut f: F) -> bool {
+        let cells = self.cells as isize;
+        let (cx, cy, r) = (cx as isize, cy as isize, r as isize);
+        if r == 0 {
+            f(cx as usize, cy as usize);
+            return true;
+        }
+        let mut any = false;
+        let mut visit = |gx: isize, gy: isize, f: &mut F| {
+            if gx >= 0 && gx < cells && gy >= 0 && gy < cells {
+                any = true;
+                f(gx as usize, gy as usize);
+            }
+        };
+        for gx in (cx - r)..=(cx + r) {
+            visit(gx, cy - r, &mut f);
+            visit(gx, cy + r, &mut f);
+        }
+        for gy in (cy - r + 1)..=(cy + r - 1) {
+            visit(cx - r, gy, &mut f);
+            visit(cx + r, gy, &mut f);
+        }
+        any
+    }
+
+    /// Id of the point nearest to `(x, y)`; ties → lowest id (legacy
+    /// `min_by` semantics).
+    pub fn nearest(&self, x: f64, y: f64) -> usize {
+        let (cx, cy) = self.cell_of(x, y);
+        let mut best_d = f64::INFINITY;
+        let mut best = usize::MAX;
+        let mut r = 0usize;
+        loop {
+            if best < usize::MAX {
+                // any point in a ring-r cell is ≥ (r-1)·cell away from a
+                // query anywhere inside the center cell
+                let bound = (r as f64 - 1.0).max(0.0) * self.cell_size;
+                if bound > best_d {
+                    break;
+                }
+            }
+            let any = self.for_ring(cx, cy, r, |gx, gy| {
+                for &id in self.bucket(gx, gy) {
+                    let d = dist((x, y), (self.pxs[id as usize], self.pys[id as usize]));
+                    if d < best_d || (d == best_d && (id as usize) < best) {
+                        best_d = d;
+                        best = id as usize;
+                    }
+                }
+            });
+            if !any {
+                break;
+            }
+            r += 1;
+        }
+        debug_assert!(best != usize::MAX);
+        best
+    }
+
+    /// The `k` points nearest to `(x, y)` as `(distance, id)`, ascending by
+    /// `(distance, id)`. Returns fewer than `k` only when the grid holds
+    /// fewer points.
+    pub fn k_nearest(&self, x: f64, y: f64, k: usize, out: &mut Vec<(f64, u32)>) {
+        out.clear();
+        if k == 0 {
+            return;
+        }
+        let (cx, cy) = self.cell_of(x, y);
+        let mut r = 0usize;
+        loop {
+            if out.len() >= k {
+                let bound = (r as f64 - 1.0).max(0.0) * self.cell_size;
+                let worst = out[k - 1].0;
+                if bound > worst {
+                    break;
+                }
+            }
+            let any = self.for_ring(cx, cy, r, |gx, gy| {
+                for &id in self.bucket(gx, gy) {
+                    let d = dist((x, y), (self.pxs[id as usize], self.pys[id as usize]));
+                    out.push((d, id));
+                }
+            });
+            if !any {
+                break;
+            }
+            out.sort_unstable_by(|a, b| {
+                a.0.total_cmp(&b.0).then(a.1.cmp(&b.1))
+            });
+            out.truncate(k);
+            r += 1;
+        }
+    }
+
+    /// Resident heap bytes of the grid.
+    pub fn mem_bytes(&self) -> usize {
+        self.starts.capacity() * 4
+            + self.items.capacity() * 4
+            + self.pxs.capacity() * 8
+            + self.pys.capacity() * 8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn brute_nearest(pts: &[(f64, f64)], q: (f64, f64)) -> usize {
+        (0..pts.len())
+            .min_by(|&a, &b| dist(q, pts[a]).partial_cmp(&dist(q, pts[b])).unwrap())
+            .unwrap()
+    }
+
+    fn brute_k(pts: &[(f64, f64)], q: (f64, f64), k: usize) -> Vec<(f64, u32)> {
+        let mut all: Vec<(f64, u32)> =
+            pts.iter().enumerate().map(|(i, &p)| (dist(q, p), i as u32)).collect();
+        all.sort_unstable_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        all.truncate(k);
+        all
+    }
+
+    #[test]
+    fn nearest_matches_linear_scan_randomized() {
+        let mut rng = Rng::new(0x6121D);
+        for &m in &[1usize, 2, 5, 17, 64, 300] {
+            let side = 1000.0;
+            let pts: Vec<(f64, f64)> =
+                (0..m).map(|_| (rng.range(0.0, side), rng.range(0.0, side))).collect();
+            let g = SpatialGrid::build(side, &pts);
+            for _ in 0..200 {
+                let q = (rng.range(0.0, side), rng.range(0.0, side));
+                assert_eq!(g.nearest(q.0, q.1), brute_nearest(&pts, q), "m={m} q={q:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn nearest_handles_clustered_points_and_corner_queries() {
+        let mut rng = Rng::new(7);
+        // all points crammed into one corner cell: ring search must expand
+        let side = 1000.0;
+        let pts: Vec<(f64, f64)> =
+            (0..40).map(|_| (rng.range(0.0, 50.0), rng.range(0.0, 50.0))).collect();
+        let g = SpatialGrid::build(side, &pts);
+        for q in [(999.0, 999.0), (0.0, 0.0), (500.0, 0.0), (0.0, 999.9)] {
+            assert_eq!(g.nearest(q.0, q.1), brute_nearest(&pts, q), "q={q:?}");
+        }
+    }
+
+    #[test]
+    fn k_nearest_matches_brute_force() {
+        let mut rng = Rng::new(0x4EA7);
+        for &m in &[3usize, 8, 50, 200] {
+            let side = 1000.0;
+            let pts: Vec<(f64, f64)> =
+                (0..m).map(|_| (rng.range(0.0, side), rng.range(0.0, side))).collect();
+            let g = SpatialGrid::build(side, &pts);
+            let mut out = Vec::new();
+            for _ in 0..100 {
+                let q = (rng.range(0.0, side), rng.range(0.0, side));
+                for &k in &[1usize, 4, 8] {
+                    g.k_nearest(q.0, q.1, k, &mut out);
+                    assert_eq!(out, brute_k(&pts, q, k), "m={m} k={k} q={q:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn k_larger_than_population_returns_all_sorted() {
+        let pts = vec![(10.0, 10.0), (900.0, 900.0), (500.0, 500.0)];
+        let g = SpatialGrid::build(1000.0, &pts);
+        let mut out = Vec::new();
+        g.k_nearest(0.0, 0.0, 8, &mut out);
+        assert_eq!(out.len(), 3);
+        assert_eq!(out[0].1, 0);
+        assert_eq!(out[2].1, 1);
+    }
+}

@@ -5,11 +5,17 @@
 pub mod channel;
 pub mod cost;
 pub mod device;
+pub mod fleet;
+pub mod gains;
+pub mod grid;
 pub mod topology;
 
 pub use channel::ChannelModel;
 pub use cost::{DeviceAlloc, DeviceCost, EdgeCost, IterCost};
 pub use device::{Device, EdgeServer};
+pub use fleet::Fleet;
+pub use gains::{derive_gain, GainTable, DEFAULT_KNN, DENSE_GAIN_BUDGET};
+pub use grid::SpatialGrid;
 pub use topology::Topology;
 
 /// Table I parameters (plus the constants the paper leaves implicit).

@@ -89,7 +89,7 @@ fn clustering_recovers_majority_classes() {
     let topo = Topology::generate(&params, &mut rng);
     let spec = SynthSpec::fmnist();
     let templates = Templates::generate(&spec, 3);
-    let samples: Vec<usize> = topo.devices.iter().map(|d| d.num_samples).collect();
+    let samples: Vec<usize> = topo.num_samples_per_device();
     let dd = partition(40, &samples, 0.8, 3);
 
     let res = cluster_devices(

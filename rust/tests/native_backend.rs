@@ -74,7 +74,7 @@ fn algorithm2_clustering_recovers_majorities_natively() {
     let topo = Topology::generate(&sys, &mut rng);
     let spec = SynthSpec::tiny();
     let templates = Templates::generate(&spec, 3);
-    let samples: Vec<usize> = topo.devices.iter().map(|d| d.num_samples).collect();
+    let samples: Vec<usize> = topo.num_samples_per_device();
     let dd = partition(30, &samples, 0.8, 3);
     let res = cluster_devices(
         &backend, &topo, &templates, &dd, AuxModel::Mini, 10, 0.5, &mut rng,

@@ -26,7 +26,7 @@ struct StrideSched {
 
 impl SchedulePolicy for StrideSched {
     fn schedule(&mut self, ctx: &PolicyCtx) -> anyhow::Result<Vec<usize>> {
-        let n = ctx.topo.devices.len();
+        let n = ctx.topo.n_devices();
         anyhow::ensure!(ctx.h <= n, "H={} exceeds {n} devices", ctx.h);
         // deterministic permutation keyed by the stride, then the first H
         let mut ids: Vec<usize> = (0..n).collect();

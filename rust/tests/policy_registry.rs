@@ -109,8 +109,8 @@ fn every_registered_pair_produces_a_valid_partition() {
     let reg = PolicyRegistry::global();
     let backend = NativeBackend::new();
     let t = topo(0xBEEF);
-    let samples: Vec<usize> = t.devices.iter().map(|d| d.num_samples).collect();
-    let dd = partition(t.devices.len(), &samples, 0.8, 0x5EED);
+    let samples: Vec<usize> = t.num_samples_per_device();
+    let dd = partition(t.n_devices(), &samples, 0.8, 0x5EED);
     let clusters = oracle_clusters(&dd);
     let h = 20; // divides the K=10 oracle clusters
     for sched_name in reg.sched_names() {

@@ -36,7 +36,7 @@ fn prop_allocator_always_feasible_and_consistent() {
         let mut rng = Rng::new(seed ^ 0xA110);
         let m = rng.below(t.edges.len());
         let n = 1 + rng.below(12);
-        let devices = rng.sample_indices(t.devices.len(), n);
+        let devices = rng.sample_indices(t.n_devices(), n);
         let s = solve_edge(&t, m, &devices, t.params.lambda, &SolverOpts::fast());
         let b_sum: f64 = s.allocs.iter().map(|a| a.bandwidth_hz).sum();
         assert!(
@@ -46,7 +46,7 @@ fn prop_allocator_always_feasible_and_consistent() {
         for (a, &d) in s.allocs.iter().zip(&devices) {
             assert!(a.bandwidth_hz > 0.0 && a.bandwidth_hz.is_finite());
             assert!(a.freq_hz > 0.0);
-            assert!(a.freq_hz <= t.devices[d].max_freq_hz * 1.0001, "seed {seed}");
+            assert!(a.freq_hz <= t.device(d).max_freq_hz * 1.0001, "seed {seed}");
         }
         assert!(s.objective.is_finite() && s.objective > 0.0);
     }
@@ -71,10 +71,10 @@ fn prop_adding_a_device_never_cheapens_the_edge() {
     for seed in 0..10u64 {
         let t = topo(seed);
         let mut rng = Rng::new(seed ^ 0xADD);
-        let base = rng.sample_indices(t.devices.len(), 4);
+        let base = rng.sample_indices(t.n_devices(), 4);
         let mut extended = base.clone();
         extended.push(
-            (0..t.devices.len())
+            (0..t.n_devices())
                 .find(|d| !base.contains(d))
                 .unwrap(),
         );
@@ -99,7 +99,7 @@ fn prop_all_assigners_produce_exact_partitions() {
         let t = topo(seed);
         let mut rng = Rng::new(seed ^ 0xA551);
         let h = 5 + rng.below(45);
-        let scheduled = rng.sample_indices(t.devices.len(), h);
+        let scheduled = rng.sample_indices(t.n_devices(), h);
         let assignments = vec![
             assign_geographic(&t, &scheduled),
             RandomAssign::new(seed).assign(&t, &scheduled),
@@ -273,7 +273,7 @@ fn prop_episode_features_always_unit_interval() {
         let t = topo(seed);
         let mut rng = Rng::new(seed ^ 0xFEA7);
         let h = 2 + rng.below(60);
-        let scheduled = rng.sample_indices(t.devices.len(), h);
+        let scheduled = rng.sample_indices(t.n_devices(), h);
         let ef = build_features(&t, &scheduled);
         assert_eq!(ef.feats.len(), h * (t.edges.len() + 3));
         assert!(ef.feats.iter().all(|&v| (0.0..=1.0).contains(&v)), "seed {seed}");
@@ -360,7 +360,7 @@ fn prop_drl_assignment_is_partition_of_scheduled_set() {
         let t = topo(seed ^ 0xD3);
         let mut rng = Rng::new(seed ^ 0x5EED);
         let h = 5 + rng.below(45);
-        let scheduled = rng.sample_indices(t.devices.len(), h);
+        let scheduled = rng.sample_indices(t.n_devices(), h);
         let mut drl = DrlAssigner::fresh(&backend, seed).unwrap();
         let a = drl.assign(&t, &scheduled);
         assert!(a.is_partition(), "seed {seed}");
@@ -382,7 +382,7 @@ fn prop_device_cost_nonnegative_and_monotone_in_bandwidth() {
     for seed in 0..10u64 {
         let t = topo(seed ^ 0xC057);
         let mut rng = Rng::new(seed);
-        let n = rng.below(t.devices.len());
+        let n = rng.below(t.n_devices());
         let m = rng.below(t.edges.len());
         let freq = 0.5e9 + rng.f64() * 1.5e9;
         let mut prev_t_com = f64::INFINITY;
@@ -409,7 +409,7 @@ fn prop_edge_cost_nonnegative_and_monotone_in_bandwidth() {
         let t = topo(seed ^ 0xED6E);
         let mut rng = Rng::new(seed);
         let m = rng.below(t.edges.len());
-        let devices = rng.sample_indices(t.devices.len(), 1 + rng.below(8));
+        let devices = rng.sample_indices(t.n_devices(), 1 + rng.below(8));
         let freq = 1e9;
         let mut prev_t = f64::INFINITY;
         for bw in [2e4f64, 1e5, 1e6] {

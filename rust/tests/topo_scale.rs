@@ -1,0 +1,404 @@
+//! Equivalence property tests for the scalable-topology refactor (PR 6).
+//!
+//! The SoA fleet, lazy/sparse gain table, and incremental `CostCache` are
+//! pure performance changes: for every paper-scale seed, generated values,
+//! channel gains, and search decisions must be bit-identical to the
+//! pre-refactor implementation. Each test pins one leg of that contract
+//! against an in-test transcription of the legacy code or a from-scratch
+//! oracle.
+
+use hfl::allocation::{solve_edge, CostCache, SolverOpts};
+use hfl::assignment::{evaluate, geo::assign_geographic, Assignment};
+use hfl::policy::{AssignPolicy, PolicyCtx, RoundHistory};
+use hfl::system::{
+    derive_gain, ChannelModel, SystemParams, Topology, DEFAULT_KNN, DENSE_GAIN_BUDGET,
+};
+use hfl::util::{dbm_to_watt, Rng};
+
+fn dist(a: (f64, f64), b: (f64, f64)) -> f64 {
+    ((a.0 - b.0).powi(2) + (a.1 - b.1).powi(2)).sqrt()
+}
+
+/// Transcription of the pre-SoA `Topology::generate`: one interleaved RNG
+/// stream, AoS devices with dense per-device gain vectors. The SoA
+/// dense-mode generator must replay this draw order exactly.
+struct LegacyTopo {
+    dev_pos: Vec<(f64, f64)>,
+    dev_gains: Vec<Vec<f64>>,
+    dev_cycles: Vec<f64>,
+    dev_samples: Vec<usize>,
+    dev_tx_w: Vec<f64>,
+    edge_pos: Vec<(f64, f64)>,
+    edge_bw: Vec<f64>,
+    edge_gain_to_cloud: Vec<f64>,
+}
+
+fn legacy_generate(params: &SystemParams, rng: &mut Rng) -> LegacyTopo {
+    let channel = ChannelModel::default();
+    let side = params.area_side_m;
+    let cloud_pos = (side / 2.0, side / 2.0);
+    let mut t = LegacyTopo {
+        dev_pos: vec![],
+        dev_gains: vec![],
+        dev_cycles: vec![],
+        dev_samples: vec![],
+        dev_tx_w: vec![],
+        edge_pos: vec![],
+        edge_bw: vec![],
+        edge_gain_to_cloud: vec![],
+    };
+    for _ in 0..params.n_edges {
+        // legacy edge draw order: pos.x, pos.y, bandwidth, gain_to_cloud
+        let pos = (rng.range(0.0, side), rng.range(0.0, side));
+        t.edge_bw.push(rng.range(params.edge_bw_hz.0, params.edge_bw_hz.1));
+        t.edge_gain_to_cloud.push(channel.mean_gain(dist(pos, cloud_pos), rng));
+        t.edge_pos.push(pos);
+    }
+    for _ in 0..params.n_devices {
+        // legacy device draw order: pos, per-edge gains, cycles, samples, tx
+        let pos = (rng.range(0.0, side), rng.range(0.0, side));
+        let gains: Vec<f64> = t
+            .edge_pos
+            .iter()
+            .map(|&ep| channel.mean_gain(dist(pos, ep), rng))
+            .collect();
+        t.dev_pos.push(pos);
+        t.dev_gains.push(gains);
+        t.dev_cycles.push(rng.range(params.cycles_per_sample.0, params.cycles_per_sample.1));
+        t.dev_samples
+            .push(rng.range(params.samples.0 as f64, params.samples.1 as f64) as usize);
+        t.dev_tx_w.push(dbm_to_watt(rng.range(params.dev_tx_dbm.0, params.dev_tx_dbm.1)));
+    }
+    t
+}
+
+#[test]
+fn dense_generation_is_bit_identical_to_legacy_for_paper_seeds() {
+    let params = SystemParams::default();
+    for seed in [1u64, 5, 42] {
+        let legacy = legacy_generate(&params, &mut Rng::new(seed));
+        let topo = Topology::generate(&params, &mut Rng::new(seed));
+        assert!(!topo.is_lazy_gains(), "paper preset must take the dense path");
+        for m in 0..params.n_edges {
+            assert_eq!(topo.edges[m].pos, legacy.edge_pos[m], "seed {seed} edge {m}");
+            assert_eq!(topo.edges[m].bandwidth_hz, legacy.edge_bw[m]);
+            assert_eq!(topo.edges[m].gain_to_cloud, legacy.edge_gain_to_cloud[m]);
+        }
+        for n in 0..params.n_devices {
+            let d = topo.device(n);
+            assert_eq!(d.pos, legacy.dev_pos[n], "seed {seed} device {n}");
+            assert_eq!(d.cycles_per_sample, legacy.dev_cycles[n]);
+            assert_eq!(d.num_samples, legacy.dev_samples[n]);
+            assert_eq!(d.tx_power_w, legacy.dev_tx_w[n]);
+            for m in 0..params.n_edges {
+                assert_eq!(
+                    topo.gain(n, m).to_bits(),
+                    legacy.dev_gains[n][m].to_bits(),
+                    "seed {seed} gain ({n},{m})"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn lazy_gains_equal_eager_derivation_in_any_query_order() {
+    let params = SystemParams { n_devices: 150, n_edges: 20, ..SystemParams::default() };
+    let a = Topology::generate_scalable(&params, &mut Rng::new(11), DEFAULT_KNN);
+    let b = Topology::generate_scalable(&params, &mut Rng::new(11), DEFAULT_KNN);
+    assert!(a.is_lazy_gains());
+    // forward on one instance, backward on the other: every (n, m) —
+    // cached k-nearest slot or derived on the fly — must agree bitwise
+    let mut fwd = Vec::new();
+    for n in 0..150 {
+        for m in 0..20 {
+            fwd.push(a.gain(n, m).to_bits());
+        }
+    }
+    let mut bwd = vec![0u64; fwd.len()];
+    for n in (0..150).rev() {
+        for m in (0..20).rev() {
+            bwd[n * 20 + m] = b.gain(n, m).to_bits();
+        }
+    }
+    assert_eq!(fwd, bwd, "gain values depend on query order");
+    // spot-check the determinism contract directly: repeated queries of an
+    // uncached link re-derive the same value (pure function of the link)
+    for n in [0usize, 77, 149] {
+        for m in 0..20 {
+            assert_eq!(a.gain(n, m).to_bits(), a.gain(n, m).to_bits());
+        }
+    }
+}
+
+#[test]
+fn scalable_generation_is_seed_deterministic_and_respects_ranges() {
+    let params = SystemParams { n_devices: 300, n_edges: 30, ..SystemParams::default() };
+    let a = Topology::generate_scalable(&params, &mut Rng::new(4), DEFAULT_KNN);
+    let b = Topology::generate_scalable(&params, &mut Rng::new(4), DEFAULT_KNN);
+    for n in 0..300 {
+        assert_eq!(a.device(n).pos, b.device(n).pos);
+        assert_eq!(a.device(n).tx_power_w, b.device(n).tx_power_w);
+        assert_eq!(a.nearest_edge(n), b.nearest_edge(n));
+        let d = a.device(n);
+        assert!(d.cycles_per_sample >= 1e4 && d.cycles_per_sample <= 1e5);
+        assert!(d.num_samples >= 300 && d.num_samples <= 700);
+        assert!(d.pos.0 >= 0.0 && d.pos.0 <= 1000.0);
+        // nearest cache vs brute force over all edges
+        let brute = (0..30)
+            .min_by(|&x, &y| {
+                dist(d.pos, a.edges[x].pos)
+                    .partial_cmp(&dist(d.pos, a.edges[y].pos))
+                    .unwrap()
+            })
+            .unwrap();
+        assert_eq!(a.nearest_edge(n), brute, "device {n}");
+    }
+}
+
+#[test]
+fn auto_dispatch_threshold_matches_budget() {
+    // just under the budget in N·M terms stays dense; the bench sizes
+    // N≥1e5 (M≥100) exceed it and must go lazy
+    assert!(100 * 5 <= DENSE_GAIN_BUDGET);
+    assert!(100_000usize * 100 > DENSE_GAIN_BUDGET);
+    let small = Topology::generate(&SystemParams::default(), &mut Rng::new(2));
+    assert!(!small.is_lazy_gains());
+}
+
+/// Randomized move/swap sequences: the incrementally maintained cache must
+/// equal a from-scratch `solve_edge`/`evaluate` of the final groups.
+#[test]
+fn cost_cache_matches_from_scratch_after_random_moves_and_swaps() {
+    let topo = Topology::generate(&SystemParams::default(), &mut Rng::new(8));
+    let sched: Vec<usize> = (0..40).collect();
+    let start = assign_geographic(&topo, &sched);
+    let opts = SolverOpts::fast();
+    let mut cache = CostCache::new_solver(topo.params.lambda, opts.clone());
+    cache.reset(&topo, &start.groups);
+
+    let mut rng = Rng::new(99);
+    for step in 0..30 {
+        let m_count = cache.n_edges();
+        if step % 2 == 0 {
+            // random transfer from a non-singleton edge
+            let sizes: Vec<usize> = (0..m_count).map(|m| cache.members(m).len()).collect();
+            let movable: Vec<usize> =
+                (0..m_count).filter(|&m| sizes[m] > 1).collect();
+            if movable.is_empty() {
+                continue;
+            }
+            let src = movable[rng.below(movable.len())];
+            let dev = cache.members(src)[rng.below(sizes[src])];
+            let mut dst = rng.below(m_count);
+            if dst == src {
+                dst = (dst + 1) % m_count;
+            }
+            cache.apply_move(&topo, src, dst, dev);
+        } else {
+            let non_empty: Vec<usize> =
+                (0..m_count).filter(|&m| !cache.members(m).is_empty()).collect();
+            if non_empty.len() < 2 {
+                continue;
+            }
+            let e1 = non_empty[rng.below(non_empty.len())];
+            let mut e2 = e1;
+            while e2 == e1 {
+                e2 = non_empty[rng.below(non_empty.len())];
+            }
+            let d1 = cache.members(e1)[rng.below(cache.members(e1).len())];
+            let d2 = cache.members(e2)[rng.below(cache.members(e2).len())];
+            cache.apply_swap(&topo, e1, d1, e2, d2);
+        }
+    }
+
+    // per-edge objectives vs a fresh solve of the same membership order
+    for m in 0..cache.n_edges() {
+        let fresh = solve_edge(&topo, m, cache.members(m), topo.params.lambda, &opts);
+        let want = if cache.members(m).is_empty() { 0.0 } else { fresh.objective };
+        assert_eq!(
+            cache.edge_objective(m).to_bits(),
+            want.to_bits(),
+            "edge {m} objective diverged"
+        );
+    }
+    // whole-round cost vs the assignment::evaluate oracle
+    let a = Assignment { groups: cache.groups().to_vec() };
+    let (oracle, _) = evaluate(&topo, &a, &opts);
+    let got = cache.iter_cost();
+    assert_eq!(got.t.to_bits(), oracle.t.to_bits());
+    assert_eq!(got.e.to_bits(), oracle.e.to_bits());
+    // still a partition of the scheduled set
+    assert!(a.is_partition());
+    assert_eq!(a.num_devices(), 40);
+}
+
+/// The cache-backed greedy assigner must place devices exactly like the
+/// legacy push/solve/pop implementation (dense mode scans all edges
+/// ascending, so tie-breaks coincide).
+#[test]
+fn greedy_with_cache_matches_legacy_transcription() {
+    let topo = Topology::generate(&SystemParams::default(), &mut Rng::new(6));
+    let sched: Vec<usize> = (10..45).collect();
+    let opts = SolverOpts::fast();
+
+    // legacy transcription
+    let m_count = topo.edges.len();
+    let mut groups: Vec<Vec<usize>> = vec![Vec::new(); m_count];
+    let mut obj = vec![0.0f64; m_count];
+    for &n in &sched {
+        let mut best: Option<(usize, f64, f64)> = None;
+        for (m, group) in groups.iter_mut().enumerate() {
+            group.push(n);
+            let new_obj = solve_edge(&topo, m, group, topo.params.lambda, &opts).objective;
+            group.pop();
+            let delta = new_obj - obj[m];
+            if best.map_or(true, |(_, bd, _)| delta < bd) {
+                best = Some((m, delta, new_obj));
+            }
+        }
+        let (m, _, new_obj) = best.unwrap();
+        groups[m].push(n);
+        obj[m] = new_obj;
+    }
+
+    let hist = RoundHistory::default();
+    let ctx = PolicyCtx {
+        topo: &topo,
+        clusters: None,
+        h: sched.len(),
+        round: 0,
+        history: &hist,
+        seed: 1,
+    };
+    let mut greedy = hfl::policy::assigners::GreedyCost::new();
+    let a = greedy.assign(&ctx, &sched).unwrap();
+    assert_eq!(a.groups, groups, "cache-backed greedy diverged from legacy");
+}
+
+/// Heap-based top-H channel scheduling must select the same devices as a
+/// full sort under (rate desc, id asc).
+#[test]
+fn channel_top_h_heap_matches_full_sort_reference() {
+    use hfl::policy::{PolicyKey, SchedulePolicy};
+    let topo = Topology::generate(&SystemParams::default(), &mut Rng::new(13));
+    let hist = RoundHistory::default();
+    for h in [1usize, 7, 30, 99, 100] {
+        let ctx = PolicyCtx {
+            topo: &topo,
+            clusters: None,
+            h,
+            round: 0,
+            history: &hist,
+            seed: 1,
+        };
+        let mut pol = hfl::policy::schedulers::ChannelTopH::new(None, PolicyKey::bare("channel"));
+        let got = pol.schedule(&ctx).unwrap();
+
+        // full-sort reference (the legacy implementation)
+        let m_count = topo.edges.len();
+        let per_edge = ((h + m_count - 1) / m_count).max(1);
+        let mut rates: Vec<(f64, usize)> = (0..topo.n_devices())
+            .map(|n| {
+                let d = topo.device(n);
+                let best = (0..m_count)
+                    .map(|m| {
+                        topo.channel.rate(
+                            topo.edges[m].bandwidth_hz / per_edge as f64,
+                            topo.gain(n, m),
+                            d.tx_power_w,
+                        )
+                    })
+                    .fold(0.0f64, f64::max);
+                (best, n)
+            })
+            .collect();
+        rates.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap().then(a.1.cmp(&b.1)));
+        let mut want: Vec<usize> = rates[..h].iter().map(|&(_, n)| n).collect();
+        want.sort_unstable();
+        assert_eq!(got, want, "H={h}");
+    }
+}
+
+/// Geographic assignment at scalable sizes still buckets every scheduled
+/// device to its true nearest edge in O(H).
+#[test]
+fn geographic_assignment_correct_in_lazy_mode() {
+    let params = SystemParams { n_devices: 500, n_edges: 40, ..SystemParams::default() };
+    let topo = Topology::generate_scalable(&params, &mut Rng::new(21), DEFAULT_KNN);
+    let sched: Vec<usize> = (0..500).step_by(3).collect();
+    let a = assign_geographic(&topo, &sched);
+    assert!(a.is_partition());
+    assert_eq!(a.num_devices(), sched.len());
+    let idx = a.edge_index();
+    for &n in &sched {
+        let m = idx.edge_of(n).unwrap();
+        let p = topo.device(n).pos;
+        for e in 0..40 {
+            assert!(
+                dist(p, topo.edges[m].pos) <= dist(p, topo.edges[e].pos) + 1e-9,
+                "device {n}: edge {m} not nearest"
+            );
+        }
+    }
+}
+
+/// The equal-split cache backend — what `bench --topo` times — agrees with
+/// the fixed-allocation `iter_cost` oracle on a lazy-mode topology.
+#[test]
+fn equal_split_cache_matches_iter_cost_oracle_in_lazy_mode() {
+    use hfl::system::cost::{iter_cost, DeviceAlloc};
+    let params = SystemParams { n_devices: 400, n_edges: 25, ..SystemParams::default() };
+    let topo = Topology::generate_scalable(&params, &mut Rng::new(31), DEFAULT_KNN);
+    let sched: Vec<usize> = (0..400).collect();
+    let a = assign_geographic(&topo, &sched);
+    let mut cache = CostCache::new_equal_split(topo.params.lambda);
+    cache.reset(&topo, &a.groups);
+
+    let reference: Vec<Vec<(usize, DeviceAlloc)>> = a
+        .groups
+        .iter()
+        .enumerate()
+        .map(|(m, g)| {
+            let b = topo.edges[m].bandwidth_hz / g.len().max(1) as f64;
+            g.iter()
+                .map(|&n| {
+                    (n, DeviceAlloc { bandwidth_hz: b, freq_hz: topo.fleet.max_freq_hz() })
+                })
+                .collect()
+        })
+        .collect();
+    let want = iter_cost(&topo, &reference);
+    let got = cache.iter_cost();
+    assert_eq!(got.t.to_bits(), want.t.to_bits());
+    assert_eq!(got.e.to_bits(), want.e.to_bits());
+}
+
+/// Cross-language pins shared with `python/tests/test_topo_scale_mirror.py`:
+/// the seed-mixing integers are exact; the gain floats allow 1e-9 relative
+/// slack for libm ulp differences. Keep both files' constants identical.
+#[test]
+fn seed_mixing_matches_python_mirror_pins() {
+    // xoshiro256++ seeded through splitmix64
+    let mut r = Rng::new(42);
+    assert_eq!(r.next_u64(), 15021278609987233951);
+    assert_eq!(r.next_u64(), 5881210131331364753);
+    assert_eq!(r.next_u64(), 18149643915985481100);
+
+    // topology.rs stream_seed(base, i) = base + (i+1)*GOLDEN (mod 2^64)
+    let stream = 0x1234u64.wrapping_add(6u64.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    assert_eq!(stream, 0xB54C_DA58_FBBE_FAB2);
+
+    // gains.rs link-seed mixing for derive_gain(seed=42, edge=3)
+    let link = 42u64 ^ 4u64.wrapping_mul(0xD6E8_FEB8_6659_FD93);
+    assert_eq!(link, 0x5BA3_FAE1_9967_F666);
+
+    let ch = ChannelModel::default();
+    let g = derive_gain(&ch, 42, 3, 500.0);
+    let want = 5.955357191763563e-12;
+    assert!((g - want).abs() < 1e-9 * want, "derive_gain pin drifted: {g:e}");
+
+    let gm = ch.mean_gain(250.0, &mut Rng::new(7));
+    let want_m = 2.122415362385412e-11;
+    assert!((gm - want_m).abs() < 1e-9 * want_m, "mean_gain pin drifted: {gm:e}");
+}
