@@ -3,18 +3,22 @@
 //! flatten uplink bursts. Reports per-iteration message sizes for
 //! H ∈ {10, 30, 50, 100} and the per-round burst reduction.
 //!
+//! Runs on the native backend; the sweepable version of this scenario is
+//! `hfl sweep --preset burst` (optionally with `--faults lossy` to see the
+//! burst under stragglers/dropout).
+//!
 //! Run: `cargo run --release --example burst_traffic`
 
 use hfl::assignment::random::RoundRobin;
 use hfl::assignment::Assigner;
 use hfl::bench::Table;
 use hfl::fl::{HflConfig, HflTrainer};
-use hfl::runtime::Engine;
+use hfl::runtime::NativeBackend;
 use hfl::scheduling::{FedAvg, Scheduler};
 
 fn main() -> anyhow::Result<()> {
     hfl::util::logging::init(1);
-    let engine = Engine::open(std::path::Path::new("artifacts"))?;
+    let backend = NativeBackend::new();
     let mut table = Table::new(&["H", "msgs/round (MB)", "burst vs full"]);
 
     let mut full_burst = 0.0f64;
@@ -29,7 +33,7 @@ fn main() -> anyhow::Result<()> {
             frac_major: 0.8,
             seed: 7,
         };
-        let trainer = HflTrainer::with_default_topology(&engine, cfg)?;
+        let trainer = HflTrainer::with_default_topology(&backend, cfg)?;
         let mut sched = FedAvg::new(100, h, 1);
         let scheduled = sched.schedule();
         let assignment = RoundRobin.assign(&trainer.topo, &scheduled);

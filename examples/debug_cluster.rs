@@ -1,17 +1,17 @@
 //! Diagnostic: Algorithm 2 clustering quality (ARI) vs auxiliary-model
 //! learning rate — the calibration probe behind AuxModel::cluster_lr().
 use hfl::data::{partition, SynthSpec, Templates};
-use hfl::runtime::Engine;
+use hfl::runtime::{Backend, NativeBackend};
 use hfl::scheduling::{cluster_devices, AuxModel};
 use hfl::system::{SystemParams, Topology};
 use hfl::util::Rng;
 
 fn main() -> anyhow::Result<()> {
     hfl::util::logging::init(1);
-    let eng = Engine::open(std::path::Path::new("artifacts"))?;
+    let backend = NativeBackend::new();
     let mut params = SystemParams::default();
     params.n_devices = 40;
-    let info = eng.manifest.model("fmnist")?;
+    let info = backend.manifest().model("fmnist")?;
     params.model_bits = (info.bytes * 8) as f64;
     let mut rng = Rng::new(3);
     let topo = Topology::generate(&params, &mut rng);
@@ -20,7 +20,8 @@ fn main() -> anyhow::Result<()> {
     let samples: Vec<usize> = topo.num_samples_per_device();
     let dd = partition(40, &samples, 0.8, 3);
     for lr in [0.05f32, 0.2, 0.5] {
-        let res = cluster_devices(&eng, &topo, &templates, &dd, AuxModel::Mini, 10, lr, &mut rng)?;
+        let res =
+            cluster_devices(&backend, &topo, &templates, &dd, AuxModel::Mini, 10, lr, &mut rng)?;
         println!("lr {lr}: ARI {:.3}", res.ari);
     }
     Ok(())

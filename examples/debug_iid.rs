@@ -1,17 +1,18 @@
-//! Diagnostic: single-device IID training through the AOT artifacts —
-//! isolates the eval/data path from FL aggregation dynamics. Loss must
-//! fall and accuracy must approach 1.0 within ~10 rounds.
+//! Diagnostic: single-device IID training through the backend's
+//! local-round kernel — isolates the eval/data path from FL aggregation
+//! dynamics. Loss must fall and accuracy must approach 1.0 within ~10
+//! rounds.
 use hfl::data::{partition, SynthSpec, Templates, TestSet, NUM_CLASSES};
 use hfl::fl::evaluate_accuracy;
 use hfl::model::{init_params, Init};
-use hfl::runtime::{Arg, Engine};
+use hfl::runtime::{Backend, NativeBackend};
 use hfl::util::Rng;
 
 fn main() -> anyhow::Result<()> {
     hfl::util::logging::init(1);
-    let engine = Engine::open(std::path::Path::new("artifacts"))?;
-    let c = engine.manifest.consts.clone();
-    let info = engine.manifest.model("fmnist")?.clone();
+    let backend = NativeBackend::new();
+    let c = backend.manifest().consts.clone();
+    let info = backend.manifest().model("fmnist")?.clone();
     let spec = SynthSpec::fmnist();
     let templates = Templates::generate(&spec, 1);
     // frac_major=0.1 => exactly uniform-ish (10% majority + rest spread)
@@ -19,32 +20,29 @@ fn main() -> anyhow::Result<()> {
     let test = TestSet::generate(&templates, 500, 99);
     let mut rng = Rng::new(2);
     let p = info.params;
-    let (db, l, b) = (c.db, c.l, c.b);
+    let (l, b) = (c.l, c.b);
+    // flexible backends run exactly one device slot; fixed-shape ones
+    // (PJRT) need the full DB batch, with the extra slots as duplicates
+    let slots = if backend.supports_partial_batch() { 1 } else { c.db };
     let pixels = spec.pixels();
     let mut params = init_params(&info, Init::HeNormal, &mut rng);
-    let mut xs = vec![0.0f32; db * l * b * pixels];
-    let mut ys = vec![0.0f32; db * l * b * NUM_CLASSES];
+    let mut xs = vec![0.0f32; slots * l * b * pixels];
+    let mut ys = vec![0.0f32; slots * l * b * NUM_CLASSES];
     for round in 0..20 {
-        // all DB slots carry the same params; each gets fresh batches
-        let mut pb = vec![0.0f32; db * p];
-        for s in 0..db {
+        // all slots carry the same params; each gets fresh batches
+        let mut pb = vec![0.0f32; slots * p];
+        for s in 0..slots {
             pb[s * p..(s + 1) * p].copy_from_slice(&params);
             dd.fill_batch(&templates, &mut rng, l * b,
                 &mut xs[s*l*b*pixels..(s+1)*l*b*pixels],
                 &mut ys[s*l*b*NUM_CLASSES..(s+1)*l*b*NUM_CLASSES]);
         }
-        let out = engine.run("local_round_fmnist", &[
-            Arg::F32(&pb, &[db as i64, p as i64]),
-            Arg::F32(&xs, &[db as i64, l as i64, b as i64, 1, 28, 28]),
-            Arg::F32(&ys, &[db as i64, l as i64, b as i64, NUM_CLASSES as i64]),
-            Arg::ScalarF32(0.05),
-        ])?;
-        // chain slot 0's params (sequential SGD: db*l steps per round... no,
-        // slot 0 only does l steps; but we loop rounds)
-        params = out[0][0..p].to_vec();
-        let loss = out[1][0];
+        let (updated, losses) = backend.local_round("fmnist", &pb, &xs, &ys, 0.05)?;
+        // chain slot 0's params (l SGD steps per round, looped over rounds)
+        params = updated[0..p].to_vec();
+        let loss = losses[0];
         if round % 2 == 1 {
-            let acc = evaluate_accuracy(&engine, "fmnist", &params, &test, 1, 28)?;
+            let acc = evaluate_accuracy(&backend, "fmnist", &params, &test, 1, 28)?;
             println!("round {round:2} loss {loss:.3} acc {acc:.3}");
         }
     }

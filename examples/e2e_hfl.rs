@@ -3,36 +3,39 @@
 //!
 //!   Rust coordinator (L3: IKC scheduling + D³QN assignment + convex
 //!   allocation + Algorithm 1/6 orchestration)
-//!     → PJRT runtime (AOT HLO artifacts)
-//!       → JAX model (L2) → Pallas fused matmul kernel (L1)
+//!     → Backend abstraction (pure-Rust NativeBackend here; the same code
+//!       drives the PJRT engine when the `pjrt` feature is on)
+//!       → native kernels (L1/L2 ports of the JAX model)
 //!
 //! It (1) trains the D³QN assigner for a few Algorithm-5 episodes,
 //! (2) clusters devices with the mini model (Algorithm 2), then (3) runs
 //! HFL on synth-fmnist until the target accuracy, logging the loss/accuracy
 //! curve and the eq. 13/14 cost accounting. Recorded in EXPERIMENTS.md.
 //!
-//! Run: `cargo run --release --example e2e_hfl` (after `make artifacts`)
+//! Run: `cargo run --release --example e2e_hfl`
 
 use hfl::allocation::SolverOpts;
 use hfl::assignment::drl::DrlAssigner;
 use hfl::drl::{DqnTrainConfig, DqnTrainer};
-use hfl::experiments::common::{clusters_for, make_scheduler, SchedKind};
+use hfl::experiments::common::clusters_for;
 use hfl::fl::{HflConfig, HflTrainer};
-use hfl::runtime::Engine;
+use hfl::policy::assigners::D3qnPolicy;
+use hfl::policy::{PolicyRegistry, SchedEnv};
+use hfl::runtime::{Backend, NativeBackend};
 use hfl::scheduling::AuxModel;
 
 fn main() -> anyhow::Result<()> {
     hfl::util::logging::init(1);
     let t0 = std::time::Instant::now();
-    let engine = Engine::open(std::path::Path::new("artifacts"))?;
+    let backend = NativeBackend::new();
 
     // ---- phase 1: train the D³QN assignment agent (Algorithm 5) --------
     println!("[1/3] training D³QN assigner (Algorithm 5, reduced episodes)…");
     let mut tcfg = DqnTrainConfig::default();
     tcfg.episodes = 10;
     tcfg.hfel_exchange = 100;
-    tcfg.system.model_bits = (engine.manifest.model("fmnist")?.bytes * 8) as f64;
-    let mut dqn_trainer = DqnTrainer::new(&engine, tcfg)?;
+    tcfg.system.model_bits = (backend.manifest().model("fmnist")?.bytes * 8) as f64;
+    let mut dqn_trainer = DqnTrainer::new(&backend, tcfg)?;
     let dqn = dqn_trainer.train(|ep, avg| {
         println!("  episode {ep:3}  avg reward {avg:6.1}");
     })?;
@@ -49,23 +52,31 @@ fn main() -> anyhow::Result<()> {
         frac_major: 0.8,
         seed: 2024,
     };
-    let mut trainer = HflTrainer::with_default_topology(&engine, cfg)?;
+    let mut trainer = HflTrainer::with_default_topology(&backend, cfg)?;
     let clusters = clusters_for(
-        &engine, &trainer.topo, &trainer.templates, &trainer.device_data,
+        &backend, &trainer.topo, &trainer.templates, &trainer.device_data,
         AuxModel::Mini, 10, 2024,
     )?;
 
     // ---- phase 3: the full HFL framework (Algorithm 6) -----------------
     println!("[3/3] HFL training: IKC + D³QN + convex allocation…");
-    let mut sched = make_scheduler(SchedKind::Ikc, Some(clusters), 100, 50, 11)?;
-    let mut assigner = DrlAssigner::new(&engine, dqn.theta);
-    let res = trainer.run(&mut *sched, &mut assigner, &SolverOpts::default(), |r| {
-        println!(
-            "  iter {:2}  acc {:.3}  loss {:.3}  T_i {:8.1}s  E_i {:7.1}J  msgs {:5.1}MB  assign {:5.1}ms",
-            r.iter, r.accuracy, r.train_loss, r.t_i, r.e_i,
-            r.msg_bytes / 1e6, r.assign_latency_s * 1e3
-        );
-    })?;
+    let reg = PolicyRegistry::global();
+    let mut sched = reg.scheduler(&reg.sched_key("ikc")?, &SchedEnv { seed: 11 })?;
+    let mut assigner = D3qnPolicy::new(DrlAssigner::new(&backend, dqn.theta), "d3qn".into());
+    let res = trainer.run_policies(
+        &mut *sched,
+        &mut assigner,
+        Some(&clusters),
+        11,
+        &SolverOpts::default(),
+        |r| {
+            println!(
+                "  iter {:2}  acc {:.3}  loss {:.3}  T_i {:8.1}s  E_i {:7.1}J  msgs {:5.1}MB  assign {:5.1}ms",
+                r.iter, r.accuracy, r.train_loss, r.t_i, r.e_i,
+                r.msg_bytes / 1e6, r.assign_latency_s * 1e3
+            );
+        },
+    )?;
 
     println!("\n==== e2e summary ====");
     match res.converged_at {
@@ -83,10 +94,10 @@ fn main() -> anyhow::Result<()> {
         res.objective(1.0),
         res.total_msg_bytes() / 1e6
     );
-    let s = engine.stats();
+    let s = backend.stats();
     println!(
-        "engine: {} artifact calls, {:.1}s exec, {:.1}s compile; wall {:.1}s",
-        s.calls, s.exec_secs, s.compile_secs, t0.elapsed().as_secs_f64()
+        "backend: {} kernel calls, {:.1}s exec; wall {:.1}s",
+        s.calls, s.exec_secs, t0.elapsed().as_secs_f64()
     );
     anyhow::ensure!(
         res.final_accuracy() > 0.5,

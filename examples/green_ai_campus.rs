@@ -9,14 +9,16 @@
 use hfl::allocation::SolverOpts;
 use hfl::assignment::random::RoundRobin;
 use hfl::bench::Table;
-use hfl::experiments::common::{clusters_for, make_scheduler, SchedKind};
+use hfl::experiments::common::clusters_for;
 use hfl::fl::{HflConfig, HflTrainer};
-use hfl::runtime::Engine;
+use hfl::policy::assigners::FromAssigner;
+use hfl::policy::{PolicyRegistry, SchedEnv};
+use hfl::runtime::NativeBackend;
 use hfl::scheduling::AuxModel;
 
 fn main() -> anyhow::Result<()> {
     hfl::util::logging::init(1);
-    let engine = Engine::open(std::path::Path::new("artifacts"))?;
+    let backend = NativeBackend::new();
     let target = 0.93;
 
     let mut table = Table::new(&[
@@ -33,17 +35,25 @@ fn main() -> anyhow::Result<()> {
             frac_major: 0.8,
             seed: 42,
         };
-        let mut trainer = HflTrainer::with_default_topology(&engine, cfg)?;
+        let mut trainer = HflTrainer::with_default_topology(&backend, cfg)?;
         trainer.topo.params.lambda = 0.1; // Green AI: energy-dominant
         let clusters = clusters_for(
-            &engine, &trainer.topo, &trainer.templates, &trainer.device_data,
+            &backend, &trainer.topo, &trainer.templates, &trainer.device_data,
             AuxModel::Mini, 10, 42,
         )?;
-        let mut sched = make_scheduler(SchedKind::Ikc, Some(clusters), 100, h, 1)?;
-        let mut assigner = RoundRobin;
-        let res = trainer.run(&mut *sched, &mut assigner, &SolverOpts::default(), |r| {
-            println!("H={h} iter {} acc {:.3} E_i {:.1}J", r.iter, r.accuracy, r.e_i);
-        })?;
+        let reg = PolicyRegistry::global();
+        let mut sched = reg.scheduler(&reg.sched_key("ikc")?, &SchedEnv { seed: 1 })?;
+        let mut assigner = FromAssigner::new(RoundRobin, "round-robin");
+        let res = trainer.run_policies(
+            &mut *sched,
+            &mut assigner,
+            Some(&clusters),
+            1,
+            &SolverOpts::default(),
+            |r| {
+                println!("H={h} iter {} acc {:.3} E_i {:.1}J", r.iter, r.accuracy, r.e_i);
+            },
+        )?;
         table.row(&[
             h.to_string(),
             format!("{}%", h),

@@ -1,21 +1,20 @@
-//! Quickstart: load the AOT artifacts, run one scheduled+assigned+allocated
-//! HFL global iteration, print accuracy and costs.
+//! Quickstart: run one scheduled+assigned+allocated HFL training loop on
+//! the pure-Rust native backend, print accuracy and costs.
 //!
-//! Run: `cargo run --release --example quickstart` (after `make artifacts`)
+//! Run: `cargo run --release --example quickstart`
 
 use std::time::Instant;
 
 use hfl::allocation::SolverOpts;
 use hfl::assignment::random::RoundRobin;
 use hfl::fl::{HflConfig, HflTrainer};
-use hfl::runtime::Engine;
+use hfl::runtime::{Backend, NativeBackend};
 use hfl::scheduling::FedAvg;
 
 fn main() -> anyhow::Result<()> {
     hfl::util::logging::init(1);
     let t0 = Instant::now();
-    let engine = Engine::open(std::path::Path::new("artifacts"))?;
-    println!("engine open: {:.2}s", t0.elapsed().as_secs_f64());
+    let backend = NativeBackend::new();
 
     let cfg = HflConfig {
         dataset: "fmnist".into(),
@@ -27,7 +26,7 @@ fn main() -> anyhow::Result<()> {
         frac_major: 0.8,
         seed: 7,
     };
-    let mut trainer = HflTrainer::with_default_topology(&engine, cfg)?;
+    let mut trainer = HflTrainer::with_default_topology(&backend, cfg)?;
     let mut sched = FedAvg::new(100, 30, 1);
     let mut assigner = RoundRobin;
     let res = trainer.run(&mut sched, &mut assigner, &SolverOpts::default(), |r| {
@@ -36,13 +35,12 @@ fn main() -> anyhow::Result<()> {
             r.iter, r.accuracy, r.train_loss, r.t_i, r.e_i, r.n_scheduled
         );
     })?;
-    let s = engine.stats();
+    let s = backend.stats();
     println!(
-        "done: final acc {:.3}; engine {} calls, exec {:.2}s, compile {:.2}s, wall {:.2}s",
+        "done: final acc {:.3}; backend {} calls, exec {:.2}s, wall {:.2}s",
         res.final_accuracy(),
         s.calls,
         s.exec_secs,
-        s.compile_secs,
         t0.elapsed().as_secs_f64()
     );
     Ok(())

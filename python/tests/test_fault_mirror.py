@@ -1,0 +1,194 @@
+"""Toolchain-less oracle for the fault-injection layer (ISSUE 7).
+
+Literal transcriptions of the ``rust/src/faults/mod.rs`` derivation math:
+
+* ``rust/src/util/rng.rs``   — xoshiro256++ / SplitMix64 / Box–Muller (the
+  same port as ``test_topo_scale_mirror.py``);
+* the per-draw seed mixing ``plan_seed ^ kind·KIND_MUL ^ (round+1)·ROUND_MUL
+  ^ (id+1)·ID_MUL`` that makes every fault draw a pure function of
+  ``(seed, round, kind, id)`` — the determinism contract behind the
+  byte-identical lossy traces;
+* the straggler tail ``1 + exp(N(μ, σ))`` (first uniform gates, then one
+  Gaussian shapes the tail);
+* the retry backoff schedule ``min(base · 2^(streak-1), cap)``.
+
+Float pins here are asserted (at coarser tolerance) from the Rust side in
+``rust/src/faults/mod.rs`` (``draws_match_python_mirror``), so a reordered
+draw or changed mixing constant fails in CI without compiling any Rust.
+
+Run: cd python && python3 -m pytest tests/test_fault_mirror.py
+"""
+import math
+
+MASK = (1 << 64) - 1
+
+
+# ---------------- util/rng.rs transcription (xoshiro256++) ----------------
+
+def _splitmix64(state):
+    state = (state + 0x9E3779B97F4A7C15) & MASK
+    z = state
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK
+    return state, (z ^ (z >> 31)) & MASK
+
+
+def _rotl(x, k):
+    return ((x << k) | (x >> (64 - k))) & MASK
+
+
+class Rng:
+    """rust/src/util/rng.rs, draw-for-draw."""
+
+    def __init__(self, seed):
+        s = seed & MASK
+        self.s = []
+        for _ in range(4):
+            s, v = _splitmix64(s)
+            self.s.append(v)
+        self.gauss_spare = None
+
+    def next_u64(self):
+        s = self.s
+        result = (_rotl((s[0] + s[3]) & MASK, 23) + s[0]) & MASK
+        t = (s[1] << 17) & MASK
+        s[2] ^= s[0]
+        s[3] ^= s[1]
+        s[1] ^= s[2]
+        s[0] ^= s[3]
+        s[2] ^= t
+        s[3] = _rotl(s[3], 45)
+        return result
+
+    def f64(self):
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+    def gaussian(self):
+        if self.gauss_spare is not None:
+            z, self.gauss_spare = self.gauss_spare, None
+            return z
+        u1 = 1.0 - self.f64()
+        u2 = self.f64()
+        r = math.sqrt(-2.0 * math.log(u1))
+        theta = 2.0 * math.pi * u2
+        self.gauss_spare = r * math.sin(theta)
+        return r * math.cos(theta)
+
+
+# ---------------- faults/mod.rs seed mixing ----------------
+
+STRAGGLER = 0x57A6
+DROPOUT = 0xD801
+OUTAGE = 0x007A
+CHURN = 0xC402
+
+KIND_MUL = 0xE7037ED1A0B428DB
+ROUND_MUL = 0x9E3779B97F4A7C15
+ID_MUL = 0xA0761D6478BD642F
+
+FAULT_SEED_TAG = 0xFA17
+
+
+def draw_seed(plan_seed, round_i, kind, dev):
+    return (
+        plan_seed
+        ^ ((kind * KIND_MUL) & MASK)
+        ^ (((round_i + 1) * ROUND_MUL) & MASK)
+        ^ (((dev + 1) * ID_MUL) & MASK)
+    ) & MASK
+
+
+def uniform(plan_seed, round_i, kind, dev):
+    """The gating uniform of one fault draw (dropout/churn/outage compare
+    this against their probability)."""
+    return Rng(draw_seed(plan_seed, round_i, kind, dev)).f64()
+
+
+def straggler_mult(plan_seed, round_i, dev, prob, mu, sigma):
+    if prob == 0.0:
+        return 1.0
+    rng = Rng(draw_seed(plan_seed, round_i, STRAGGLER, dev))
+    if rng.f64() < prob:
+        return 1.0 + math.exp(mu + sigma * rng.gaussian())
+    return 1.0
+
+
+def backoff_delays(base, cap, misses):
+    """Rounds a device stays blocked after its k-th consecutive miss."""
+    out = []
+    for k in range(1, misses + 1):
+        out.append(max(min(base << min(k - 1, 16), cap), 1))
+    return out
+
+
+# ======================= tests =======================
+
+def test_plan_seed_derivation():
+    # FaultPlan::for_deployment — co-pinned in rust/src/scenario/spec.rs
+    # (toml_fault_profile_and_overrides)
+    assert 42 ^ FAULT_SEED_TAG == 64061
+    # distinct kinds / rounds / devices decorrelate the streams
+    base = draw_seed(7, 3, STRAGGLER, 5)
+    assert base != draw_seed(7, 3, DROPOUT, 5)
+    assert base != draw_seed(7, 4, STRAGGLER, 5)
+    assert base != draw_seed(7, 3, STRAGGLER, 6)
+
+
+def test_straggler_tail_pin():
+    # co-pinned in rust/src/faults/mod.rs (draws_match_python_mirror):
+    # seed 7, round 3, device 5, μ = σ = 0.5, prob 1.0
+    m = straggler_mult(7, 3, 5, 1.0, 0.5, 0.5)
+    assert abs(m - 3.4141072310631544) < 1e-12, repr(m)
+    # the tail multiplies ON TOP of the nominal time: never below 1
+    for dev in range(50):
+        assert straggler_mult(7, 0, dev, 1.0, 0.5, 0.5) > 1.0
+    # prob 0 short-circuits without consuming any stream
+    assert straggler_mult(7, 3, 5, 0.0, 9.9, 9.9) == 1.0
+
+
+def test_gating_uniform_pins():
+    # the uniforms the Rust unit test brackets with 0.068 / 0.24 / 0.292
+    u = uniform(7, 0, DROPOUT, 0)
+    assert abs(u - 0.06756520095316365) < 1e-12, repr(u)
+    u = uniform(7, 0, CHURN, 0)
+    assert abs(u - 0.24274335941335856) < 1e-12, repr(u)
+    u = uniform(7, 2, OUTAGE, 1)
+    assert abs(u - 0.2910004507266095) < 1e-12, repr(u)
+
+
+def test_per_device_dropout_stream_pins():
+    # dropout u(7, 4, n) for n = 0..5 — rust asserts device 4 (< 0.5) drops
+    # while device 0 (> 0.5) lands in draws_are_stateless_and_order_free
+    us = [uniform(7, 4, DROPOUT, n) for n in range(6)]
+    want = [0.7177, 0.9830, 0.9321, 0.7135, 0.4529, 0.8103]
+    for u, w in zip(us, want):
+        assert abs(u - w) < 5e-5, (us, want)
+    assert us[4] < 0.5 < us[0]
+
+
+def test_churn_stream_pins():
+    # churn u(7, 0, n) for n = 0..3 — device 0 churns at churn_prob ≈ 0.243
+    # (filter_drops_churned_devices_without_penalty)
+    us = [uniform(7, 0, CHURN, n) for n in range(4)]
+    want = [0.2427, 0.1585, 0.5738, 0.9471]
+    for u, w in zip(us, want):
+        assert abs(u - w) < 5e-5, (us, want)
+
+
+def test_draws_are_stateless_and_order_free():
+    fwd = [uniform(7, 1, DROPOUT, n) for n in range(20)]
+    bwd = [uniform(7, 1, DROPOUT, n) for n in reversed(range(20))]
+    assert fwd == bwd[::-1]
+    assert all(0.0 <= u < 1.0 for u in fwd)
+    # re-drawing consumes an identical fresh stream every time
+    assert uniform(7, 1, DROPOUT, 3) == fwd[3]
+
+
+def test_backoff_schedule_pins():
+    # co-pinned in rust/src/faults/mod.rs (backoff_doubles_and_caps)
+    assert backoff_delays(1, 8, 6) == [1, 2, 4, 8, 8, 8]
+    assert backoff_delays(2, 16, 6) == [2, 4, 8, 16, 16, 16]
+    # base ≥ 1 invariant: the delay never collapses to zero
+    assert backoff_delays(1, 1, 3) == [1, 1, 1]
+    # the shift is clamped at 16 so huge streaks cannot overflow
+    assert backoff_delays(1, 1 << 40, 70)[-1] == 1 << 16

@@ -1,0 +1,673 @@
+//! Deterministic event-time fault injection (DESIGN.md §11).
+//!
+//! The paper's round-synchronous loop assumes every scheduled upload lands;
+//! this layer drops that assumption. A [`FaultPlan`] injects straggler
+//! latency tails, mid-round device dropout, transient edge outages and
+//! between-round availability churn; a [`RoundClock`] orders per-device
+//! completion events (cost model × fault state) and cuts the round at a
+//! deadline; a [`FaultSession`] carries the only mutable state — retry
+//! backoff and failure streaks — across rounds.
+//!
+//! **Determinism contract:** every draw is a pure function of
+//! `(plan seed, round, kind, id)` — a fresh [`Rng`] is seeded per draw, no
+//! stream is shared — so the fault environment is identical for every
+//! policy arm of a cell, at any thread count, and regardless of the order
+//! in which devices are scheduled, assigned or resolved. The plan seed is
+//! derived from the cell's *deployment* seed (topology/data stream), so
+//! all scheduler/assigner arms of one deployment face the same faults.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use crate::allocation::AllocSolution;
+use crate::assignment::Assignment;
+use crate::system::cost::device_cost;
+use crate::system::Topology;
+use crate::util::Rng;
+
+/// Per-draw-kind stream tags (mixed into the draw seed; distinct per kind
+/// so e.g. the straggler and dropout draws of one device never correlate).
+const STRAGGLER: u64 = 0x57A6;
+const DROPOUT: u64 = 0xD801;
+const OUTAGE: u64 = 0x007A;
+const CHURN: u64 = 0xC402;
+
+const KIND_MUL: u64 = 0xE703_7ED1_A0B4_28DB;
+const ROUND_MUL: u64 = 0x9E37_79B9_7F4A_7C15;
+const ID_MUL: u64 = 0xA076_1D64_78BD_642F;
+
+/// XOR tag deriving a cell's fault-plan seed from its deployment seed.
+pub const FAULT_SEED_TAG: u64 = 0xFA17;
+
+/// A named fault environment: probabilities, tail shape, deadline and
+/// degradation knobs. `none()` (the default) is the exact fault-free
+/// behaviour of the plain round loop.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultProfile {
+    /// Preset this profile started from (`none`/`lossy`/`bursty`); field
+    /// overrides do not rename it — the full profile is fingerprinted.
+    pub name: String,
+    /// P(device is a straggler this round).
+    pub straggler_prob: f64,
+    /// ln-space mean of the lognormal latency tail.
+    pub straggler_mu: f64,
+    /// ln-space std of the lognormal latency tail.
+    pub straggler_sigma: f64,
+    /// P(a completed upload is lost mid-round).
+    pub dropout_prob: f64,
+    /// P(an edge server is down for a whole round).
+    pub outage_prob: f64,
+    /// P(device is away this round) — availability churn: departures and
+    /// re-arrivals between rounds, drawn independently per round.
+    pub churn_prob: f64,
+    /// Round cutoff in milliseconds of event time; 0 disables the deadline.
+    pub deadline_ms: f64,
+    /// Fraction of an edge's scheduled uploads that must land for its
+    /// aggregate to count; an edge below quorum is voided for the round.
+    pub quorum: f64,
+    /// First retry delay in rounds (doubles per consecutive failure).
+    pub backoff_base: u32,
+    /// Retry delay ceiling in rounds.
+    pub backoff_cap: u32,
+}
+
+impl Default for FaultProfile {
+    fn default() -> Self {
+        FaultProfile::none()
+    }
+}
+
+impl FaultProfile {
+    /// Fault-free: the plain round loop, byte-identical output.
+    pub fn none() -> FaultProfile {
+        FaultProfile {
+            name: "none".into(),
+            straggler_prob: 0.0,
+            straggler_mu: 0.0,
+            straggler_sigma: 0.0,
+            dropout_prob: 0.0,
+            outage_prob: 0.0,
+            churn_prob: 0.0,
+            deadline_ms: 0.0,
+            quorum: 0.0,
+            backoff_base: 1,
+            backoff_cap: 8,
+        }
+    }
+
+    /// Mild impairments: occasional stragglers/dropouts, rare outages.
+    pub fn lossy() -> FaultProfile {
+        FaultProfile {
+            name: "lossy".into(),
+            straggler_prob: 0.2,
+            straggler_mu: 0.5,
+            straggler_sigma: 0.5,
+            dropout_prob: 0.1,
+            outage_prob: 0.02,
+            churn_prob: 0.05,
+            deadline_ms: 0.0,
+            quorum: 0.25,
+            backoff_base: 1,
+            backoff_cap: 8,
+        }
+    }
+
+    /// Heavy congestion: fat straggler tails, frequent dropouts/outages.
+    pub fn bursty() -> FaultProfile {
+        FaultProfile {
+            name: "bursty".into(),
+            straggler_prob: 0.35,
+            straggler_mu: 1.0,
+            straggler_sigma: 0.8,
+            dropout_prob: 0.25,
+            outage_prob: 0.1,
+            churn_prob: 0.15,
+            deadline_ms: 0.0,
+            quorum: 0.5,
+            backoff_base: 2,
+            backoff_cap: 16,
+        }
+    }
+
+    pub fn preset(name: &str) -> anyhow::Result<FaultProfile> {
+        match name {
+            "none" => Ok(FaultProfile::none()),
+            "lossy" => Ok(FaultProfile::lossy()),
+            "bursty" => Ok(FaultProfile::bursty()),
+            _ => anyhow::bail!("unknown fault profile {name:?} (none|lossy|bursty)"),
+        }
+    }
+
+    /// Whether any fault mechanism can fire. Inactive profiles take the
+    /// plain (byte-identical) round path everywhere.
+    pub fn is_active(&self) -> bool {
+        self.straggler_prob > 0.0
+            || self.dropout_prob > 0.0
+            || self.outage_prob > 0.0
+            || self.churn_prob > 0.0
+            || self.deadline_ms > 0.0
+    }
+
+    /// Override one field by TOML/CLI key.
+    pub fn set(&mut self, key: &str, v: f64) -> anyhow::Result<()> {
+        match key {
+            "straggler_prob" => self.straggler_prob = v,
+            "straggler_mu" => self.straggler_mu = v,
+            "straggler_sigma" => self.straggler_sigma = v,
+            "dropout_prob" => self.dropout_prob = v,
+            "outage_prob" => self.outage_prob = v,
+            "churn_prob" => self.churn_prob = v,
+            "deadline_ms" => self.deadline_ms = v,
+            "quorum" => self.quorum = v,
+            "backoff_base" => self.backoff_base = v as u32,
+            "backoff_cap" => self.backoff_cap = v as u32,
+            _ => anyhow::bail!(
+                "unknown fault key {key:?} (straggler_prob|straggler_mu|straggler_sigma|\
+                 dropout_prob|outage_prob|churn_prob|deadline_ms|quorum|\
+                 backoff_base|backoff_cap)"
+            ),
+        }
+        Ok(())
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        for (k, v) in [
+            ("straggler_prob", self.straggler_prob),
+            ("dropout_prob", self.dropout_prob),
+            ("outage_prob", self.outage_prob),
+            ("churn_prob", self.churn_prob),
+            ("quorum", self.quorum),
+        ] {
+            anyhow::ensure!((0.0..=1.0).contains(&v), "faults.{k} = {v} outside [0, 1]");
+        }
+        anyhow::ensure!(self.straggler_sigma >= 0.0, "faults.straggler_sigma < 0");
+        anyhow::ensure!(self.deadline_ms >= 0.0, "faults.deadline_ms < 0");
+        anyhow::ensure!(self.backoff_base >= 1, "faults.backoff_base must be ≥ 1");
+        anyhow::ensure!(
+            self.backoff_cap >= self.backoff_base,
+            "faults.backoff_cap < faults.backoff_base"
+        );
+        Ok(())
+    }
+}
+
+/// A profile bound to one cell's fault seed — the immutable half of fault
+/// injection. All methods are pure functions of `(seed, round, id)`.
+#[derive(Clone, Debug)]
+pub struct FaultPlan {
+    pub profile: FaultProfile,
+    pub seed: u64,
+}
+
+impl FaultPlan {
+    pub fn new(profile: FaultProfile, seed: u64) -> FaultPlan {
+        FaultPlan { profile, seed }
+    }
+
+    /// Plan for a deployment: seeded off the deployment stream so every
+    /// policy arm of one `(H, seed_i)` cell faces identical faults.
+    pub fn for_deployment(profile: FaultProfile, deployment_seed: u64) -> FaultPlan {
+        FaultPlan::new(profile, deployment_seed ^ FAULT_SEED_TAG)
+    }
+
+    pub fn is_active(&self) -> bool {
+        self.profile.is_active()
+    }
+
+    fn draw(&self, round: usize, kind: u64, id: usize) -> Rng {
+        Rng::new(
+            self.seed
+                ^ kind.wrapping_mul(KIND_MUL)
+                ^ (round as u64 + 1).wrapping_mul(ROUND_MUL)
+                ^ (id as u64 + 1).wrapping_mul(ID_MUL),
+        )
+    }
+
+    /// Availability churn: is the device away this round?
+    pub fn absent(&self, round: usize, device: usize) -> bool {
+        self.profile.churn_prob > 0.0
+            && self.draw(round, CHURN, device).f64() < self.profile.churn_prob
+    }
+
+    /// Mid-round upload loss for this device.
+    pub fn dropout(&self, round: usize, device: usize) -> bool {
+        self.profile.dropout_prob > 0.0
+            && self.draw(round, DROPOUT, device).f64() < self.profile.dropout_prob
+    }
+
+    /// Whole-round transient outage of this edge server.
+    pub fn edge_out(&self, round: usize, edge: usize) -> bool {
+        self.profile.outage_prob > 0.0
+            && self.draw(round, OUTAGE, edge).f64() < self.profile.outage_prob
+    }
+
+    /// Completion-time multiplier: 1.0 for a healthy device, else
+    /// `1 + exp(N(μ, σ))` — a lognormal tail on top of the nominal delay,
+    /// so a straggler is never *faster* than its cost-model time.
+    pub fn straggler_mult(&self, round: usize, device: usize) -> f64 {
+        if self.profile.straggler_prob == 0.0 {
+            return 1.0;
+        }
+        let mut rng = self.draw(round, STRAGGLER, device);
+        if rng.f64() < self.profile.straggler_prob {
+            1.0 + (self.profile.straggler_mu
+                + self.profile.straggler_sigma * rng.gaussian())
+                .exp()
+        } else {
+            1.0
+        }
+    }
+}
+
+/// Why an upload did not aggregate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FailCause {
+    /// The upload was lost mid-round.
+    Dropout,
+    /// The device's edge server was down for the round.
+    Outage,
+    /// Completion time exceeded `deadline_ms`.
+    Deadline,
+}
+
+/// One upload completion event.
+#[derive(Clone, Copy, Debug)]
+struct Ev {
+    t: f64,
+    device: usize,
+    edge: usize,
+}
+
+// Min-heap ordering on (time, device id) — `total_cmp` keeps the order
+// total (and the trace deterministic) even for pathological times.
+impl PartialEq for Ev {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+impl Eq for Ev {}
+impl PartialOrd for Ev {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Ev {
+    fn cmp(&self, other: &Self) -> Ordering {
+        other
+            .t
+            .total_cmp(&self.t)
+            .then(other.device.cmp(&self.device))
+    }
+}
+
+/// Event-queue round clock: uploads complete in event-time order instead
+/// of the implicit "all uploads land" assumption.
+#[derive(Debug, Default)]
+pub struct RoundClock {
+    heap: BinaryHeap<Ev>,
+}
+
+impl RoundClock {
+    pub fn new() -> RoundClock {
+        RoundClock::default()
+    }
+
+    pub fn push(&mut self, t: f64, device: usize, edge: usize) {
+        self.heap.push(Ev { t, device, edge });
+    }
+
+    /// Next completion event in (time, device) order.
+    pub fn pop(&mut self) -> Option<(f64, usize, usize)> {
+        self.heap.pop().map(|e| (e.t, e.device, e.edge))
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+/// Per-round fault statistics — the sink columns.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct RoundFaults {
+    /// Uploads that landed AND aggregated (survivors of quorum voiding).
+    pub completed: usize,
+    /// Uploads lost to dropout, outage or the deadline.
+    pub dropped: usize,
+    /// Devices that drew a straggler tail this round.
+    pub stragglers: usize,
+    /// Effective-scheduled devices retrying after a previous failure.
+    pub retries: usize,
+    /// Event time the round occupied, milliseconds.
+    pub wall_ms: f64,
+    /// True when no edge met quorum: aggregation skipped, global model
+    /// untouched.
+    pub aborted: bool,
+    /// Edges voided this round (outage or below quorum).
+    pub edges_out: usize,
+}
+
+/// What one round resolved to.
+#[derive(Clone, Debug)]
+pub struct RoundOutcome {
+    /// Survivor groups (same edge shape as the input assignment); empty
+    /// groups where an edge was voided.
+    pub survivors: Assignment,
+    /// `(device, cause)` for every lost upload.
+    pub dropped: Vec<(usize, FailCause)>,
+    pub stats: RoundFaults,
+}
+
+/// The mutable half of fault injection: per-device failure streaks and
+/// retry-backoff windows, carried across rounds of one run.
+#[derive(Clone, Debug)]
+pub struct FaultSession {
+    pub plan: FaultPlan,
+    /// Consecutive-failure count; reset on a successful upload.
+    streak: Vec<u32>,
+    /// Device is in backoff until `round >= blocked_until[n]`.
+    blocked_until: Vec<usize>,
+    /// Cumulative failure count per device (exposed to policies via
+    /// [`crate::policy::RoundHistory`]).
+    pub failures: Vec<u32>,
+}
+
+impl FaultSession {
+    pub fn new(plan: FaultPlan, n_devices: usize) -> FaultSession {
+        FaultSession {
+            plan,
+            streak: vec![0; n_devices],
+            blocked_until: vec![0; n_devices],
+            failures: vec![0; n_devices],
+        }
+    }
+
+    /// Remove churned-away and backoff-blocked devices from a schedule.
+    /// Returns the effective set (input order preserved) and how many of
+    /// them are retrying after a previous failure.
+    pub fn filter(&self, round: usize, scheduled: &[usize]) -> (Vec<usize>, usize) {
+        let mut eff = Vec::with_capacity(scheduled.len());
+        let mut retries = 0;
+        for &n in scheduled {
+            if round < self.blocked_until[n] || self.plan.absent(round, n) {
+                continue;
+            }
+            if self.streak[n] > 0 {
+                retries += 1;
+            }
+            eff.push(n);
+        }
+        (eff, retries)
+    }
+
+    /// Resolve one round: apply straggler tails, order completions through
+    /// the [`RoundClock`], cut at the deadline, void edges below quorum,
+    /// and commit retry backoff. `uploads` is `(device, edge, base_t_s)`
+    /// per effective-scheduled device.
+    pub fn resolve(
+        &mut self,
+        round: usize,
+        n_edges: usize,
+        uploads: &[(usize, usize, f64)],
+    ) -> RoundOutcome {
+        let p = self.plan.profile.clone();
+        let deadline_s = if p.deadline_ms > 0.0 { p.deadline_ms / 1e3 } else { f64::INFINITY };
+
+        let edge_down: Vec<bool> = (0..n_edges).map(|m| self.plan.edge_out(round, m)).collect();
+        let mut clock = RoundClock::new();
+        let mut scheduled_per_edge = vec![0usize; n_edges];
+        let mut stragglers = 0usize;
+        let mut wall_s = 0.0f64;
+        for &(n, m, t) in uploads {
+            scheduled_per_edge[m] += 1;
+            let mult = self.plan.straggler_mult(round, n);
+            if mult > 1.0 {
+                stragglers += 1;
+            }
+            let t = t * mult;
+            // the round ends when its last upload lands, times out at the
+            // deadline, or is detected missing — whichever is later
+            wall_s = wall_s.max(t.min(deadline_s));
+            clock.push(t, n, m);
+        }
+
+        let mut groups: Vec<Vec<usize>> = vec![Vec::new(); n_edges];
+        let mut dropped: Vec<(usize, FailCause)> = Vec::new();
+        while let Some((t, n, m)) = clock.pop() {
+            if t > deadline_s {
+                dropped.push((n, FailCause::Deadline));
+            } else if edge_down[m] {
+                dropped.push((n, FailCause::Outage));
+            } else if self.plan.dropout(round, n) {
+                dropped.push((n, FailCause::Dropout));
+            } else {
+                groups[m].push(n);
+            }
+        }
+
+        // quorum: an edge whose surviving share fell below the threshold is
+        // voided — its landed uploads are discarded (but count as successes
+        // for backoff purposes: the *device* did nothing wrong)
+        let mut edges_out = 0usize;
+        for m in 0..n_edges {
+            if scheduled_per_edge[m] == 0 {
+                continue;
+            }
+            let need = ((p.quorum * scheduled_per_edge[m] as f64).ceil() as usize).max(1);
+            if groups[m].len() < need {
+                edges_out += 1;
+                for &n in &groups[m] {
+                    self.streak[n] = 0;
+                }
+                groups[m].clear();
+            }
+        }
+
+        for g in &groups {
+            for &n in g {
+                self.streak[n] = 0;
+            }
+        }
+        for &(n, _) in &dropped {
+            self.failures[n] += 1;
+            let k = self.streak[n].saturating_add(1);
+            self.streak[n] = k;
+            let delay = ((p.backoff_base as u64) << (k - 1).min(16))
+                .min(p.backoff_cap as u64)
+                .max(1);
+            self.blocked_until[n] = round + delay as usize;
+        }
+
+        let survivors = Assignment { groups };
+        let completed = survivors.num_devices();
+        let aborted = !uploads.is_empty() && completed == 0;
+        let stats = RoundFaults {
+            completed,
+            dropped: dropped.len(),
+            stragglers,
+            retries: 0, // filled by the caller from `filter`
+            wall_ms: wall_s * 1e3,
+            aborted,
+            edges_out,
+        };
+        RoundOutcome { survivors, dropped, stats }
+    }
+}
+
+/// Per-device upload completion times under an assignment's allocation:
+/// `(device, edge, t_cmp + t_com)` in the assignment's group order, the
+/// [`RoundClock`] inputs for one round.
+pub fn upload_times(
+    topo: &Topology,
+    assignment: &Assignment,
+    sols: &[AllocSolution],
+) -> Vec<(usize, usize, f64)> {
+    let mut out = Vec::with_capacity(assignment.num_devices());
+    for (m, g) in assignment.groups.iter().enumerate() {
+        for (j, &n) in g.iter().enumerate() {
+            let t = device_cost(topo, n, m, sols[m].allocs[j]).t_total();
+            out.push((n, m, t));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn plan(profile: FaultProfile) -> FaultPlan {
+        FaultPlan::new(profile, 7)
+    }
+
+    #[test]
+    fn draws_match_python_mirror() {
+        // pinned against python/tests/test_fault_mirror.py (same derivation
+        // from the same xoshiro256++/SplitMix64 construction)
+        let mut p = FaultProfile::lossy();
+        p.straggler_prob = 1.0;
+        let fp = plan(p);
+        let m = fp.straggler_mult(3, 5);
+        assert!((m - 3.4141072310631544).abs() < 1e-12, "{m}");
+        let none = plan(FaultProfile::none());
+        assert!(!none.dropout(0, 0) && !none.absent(0, 0) && !none.edge_out(2, 1));
+        let mut all = FaultProfile::none();
+        all.dropout_prob = 0.068; // dropout u(7,0,0) = 0.06756…
+        all.churn_prob = 0.24; // churn u(7,0,0) = 0.24274…
+        all.outage_prob = 0.292; // outage u(7,2,1) = 0.29100…
+        let fp = plan(all);
+        assert!(fp.dropout(0, 0));
+        assert!(!fp.absent(0, 0));
+        assert!(fp.edge_out(2, 1));
+    }
+
+    #[test]
+    fn draws_are_stateless_and_order_free() {
+        let mut p = FaultProfile::lossy();
+        p.straggler_prob = 0.5;
+        let fp = plan(p);
+        let a: Vec<f64> = (0..20).map(|n| fp.straggler_mult(4, n)).collect();
+        let b: Vec<f64> = (0..20).rev().map(|n| fp.straggler_mult(4, n)).collect();
+        let b: Vec<f64> = b.into_iter().rev().collect();
+        assert_eq!(a, b);
+        // per-device streams: dropout u(7,4,n) = 0.7177, …, 0.4529 for n=4
+        let mut p = FaultProfile::none();
+        p.dropout_prob = 0.5;
+        let fp = plan(p);
+        assert!(fp.dropout(4, 4));
+        assert!(!fp.dropout(4, 0));
+    }
+
+    #[test]
+    fn clock_orders_by_time_then_device() {
+        let mut c = RoundClock::new();
+        c.push(2.0, 9, 0);
+        c.push(1.0, 5, 1);
+        c.push(1.0, 3, 0);
+        assert_eq!(c.pop(), Some((1.0, 3, 0)));
+        assert_eq!(c.pop(), Some((1.0, 5, 1)));
+        assert_eq!(c.pop(), Some((2.0, 9, 0)));
+        assert_eq!(c.pop(), None);
+    }
+
+    #[test]
+    fn deadline_cuts_and_quorum_voids() {
+        let mut p = FaultProfile::none();
+        p.deadline_ms = 1500.0;
+        p.quorum = 0.6;
+        let mut s = FaultSession::new(plan(p), 6);
+        // edge 0: 2/3 land (quorum 0.6 → need 2) — survives
+        // edge 1: 1/3 lands (need 2) — voided
+        let uploads = vec![
+            (0, 0, 1.0),
+            (1, 0, 1.2),
+            (2, 0, 2.0), // past deadline
+            (3, 1, 0.5),
+            (4, 1, 1.6), // past deadline
+            (5, 1, 1.7), // past deadline
+        ];
+        let out = s.resolve(0, 2, &uploads);
+        assert_eq!(out.survivors.groups, vec![vec![0, 1], vec![]]);
+        assert_eq!(out.stats.completed, 2);
+        assert_eq!(out.stats.dropped, 3);
+        assert_eq!(out.stats.edges_out, 1);
+        assert!(!out.stats.aborted);
+        assert!((out.stats.wall_ms - 1500.0).abs() < 1e-9);
+        assert!(out
+            .dropped
+            .iter()
+            .all(|&(_, c)| c == FailCause::Deadline));
+    }
+
+    #[test]
+    fn total_quorum_loss_aborts() {
+        let mut p = FaultProfile::none();
+        p.deadline_ms = 0.1; // everyone misses
+        let mut s = FaultSession::new(plan(p), 3);
+        let out = s.resolve(0, 1, &[(0, 0, 1.0), (1, 0, 2.0), (2, 0, 3.0)]);
+        assert!(out.stats.aborted);
+        assert_eq!(out.stats.completed, 0);
+        assert_eq!(out.survivors.num_devices(), 0);
+    }
+
+    #[test]
+    fn backoff_doubles_and_caps() {
+        let mut p = FaultProfile::none();
+        p.deadline_ms = 0.1;
+        p.backoff_base = 1;
+        p.backoff_cap = 8;
+        let mut s = FaultSession::new(plan(p), 1);
+        // streak 1..6 → delays 1, 2, 4, 8, 8, 8 (pinned in the python
+        // mirror); the device is blocked for `delay` rounds after each miss
+        let mut round = 0usize;
+        for expect in [1usize, 2, 4, 8, 8, 8] {
+            let (eff, _) = s.filter(round, &[0]);
+            assert_eq!(eff, vec![0], "round {round}: expected eligible");
+            s.resolve(round, 1, &[(0, 0, 1.0)]);
+            for r in round + 1..round + expect {
+                assert!(s.filter(r, &[0]).0.is_empty(), "round {r}: expected blocked");
+            }
+            round += expect;
+        }
+        assert_eq!(s.failures[0], 6);
+        // a success resets the streak: the next failure is delay 1 again
+        s.plan.profile.deadline_ms = 1e9;
+        let (eff, retries) = s.filter(round, &[0]);
+        assert_eq!((eff.len(), retries), (1, 1));
+        s.resolve(round, 1, &[(0, 0, 1.0)]);
+        s.plan.profile.deadline_ms = 0.1;
+        s.resolve(round + 1, 1, &[(0, 0, 1.0)]);
+        assert!(!s.filter(round + 2, &[0]).0.is_empty(), "streak restarted at 1");
+        s.resolve(round + 2, 1, &[(0, 0, 1.0)]);
+        assert!(s.filter(round + 3, &[0]).0.is_empty(), "second failure: delay 2");
+        assert!(!s.filter(round + 4, &[0]).0.is_empty());
+    }
+
+    #[test]
+    fn filter_drops_churned_devices_without_penalty() {
+        let mut p = FaultProfile::none();
+        p.churn_prob = 0.24274336; // churn u(7,0,0) = 0.24274335941…
+        let s = FaultSession::new(plan(p), 4);
+        let (eff, retries) = s.filter(0, &[0, 1, 2, 3]);
+        assert!(!eff.contains(&0), "device 0 churned out");
+        assert_eq!(retries, 0);
+    }
+
+    #[test]
+    fn profile_set_and_validate() {
+        let mut p = FaultProfile::none();
+        p.set("dropout_prob", 0.3).unwrap();
+        p.set("deadline_ms", 250.0).unwrap();
+        assert!(p.is_active());
+        p.validate().unwrap();
+        assert!(p.set("nope", 1.0).is_err());
+        p.set("dropout_prob", 1.5).unwrap();
+        assert!(p.validate().is_err());
+        assert!(FaultProfile::preset("lossy").unwrap().is_active());
+        assert!(!FaultProfile::preset("none").unwrap().is_active());
+        assert!(FaultProfile::preset("heavy").is_err());
+    }
+}

@@ -17,6 +17,7 @@ use std::time::Instant;
 use crate::allocation::SolverOpts;
 use crate::assignment::{evaluate as eval_assignment, Assigner, Assignment};
 use crate::data::{DeviceData, Templates, TestSet, NUM_CLASSES};
+use crate::faults::{upload_times, FaultPlan, FaultSession};
 use crate::fl::eval::evaluate_accuracy;
 use crate::metrics::{IterRecord, RunResult};
 use crate::model::{accumulate, finish, init_params, Init};
@@ -286,6 +287,31 @@ impl<'e> HflTrainer<'e> {
         clusters: Option<&[Vec<usize>]>,
         policy_seed: u64,
         alloc_opts: &SolverOpts,
+        progress: impl FnMut(&IterRecord),
+    ) -> anyhow::Result<RunResult> {
+        self.run_policies_with(
+            scheduler, assigner, clusters, policy_seed, alloc_opts, None, progress,
+        )
+    }
+
+    /// [`HflTrainer::run_policies`] with an optional fault layer
+    /// (DESIGN.md §11). With `None` (or an inactive profile) the loop is
+    /// exactly the fault-free Algorithm 6 — same RNG draws, same records.
+    /// With an active [`FaultPlan`]: churned/backed-off devices leave the
+    /// schedule before assignment, the round resolves through the event
+    /// clock (stragglers, dropout, outages, deadline), aggregation uses
+    /// only the survivors (their allocation re-solved without the dropped
+    /// devices), and a total quorum loss skips aggregation, leaving the
+    /// global model untouched.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_policies_with(
+        &mut self,
+        scheduler: &mut dyn SchedulePolicy,
+        assigner: &mut dyn AssignPolicy,
+        clusters: Option<&[Vec<usize>]>,
+        policy_seed: u64,
+        alloc_opts: &SolverOpts,
+        faults: Option<&FaultPlan>,
         mut progress: impl FnMut(&IterRecord),
     ) -> anyhow::Result<RunResult> {
         let t_start = Instant::now();
@@ -293,9 +319,12 @@ impl<'e> HflTrainer<'e> {
         let mut global = init_params(&info, Init::HeNormal, &mut self.rng);
         let mut result = RunResult::default();
         let mut history = RoundHistory::default();
+        let mut session = faults
+            .filter(|p| p.is_active())
+            .map(|p| FaultSession::new(p.clone(), self.topo.n_devices()));
 
         for i in 0..self.cfg.max_iters {
-            let (scheduled, assignment, assign_latency_s) = {
+            let (scheduled, retries, assignment, assign_latency_s) = {
                 let ctx = PolicyCtx {
                     topo: &self.topo,
                     clusters,
@@ -305,16 +334,47 @@ impl<'e> HflTrainer<'e> {
                     seed: policy_seed,
                 };
                 let scheduled = scheduler.schedule(&ctx)?;
+                // churned-away and backoff-blocked devices never start the
+                // round, so assignment sees the effective set
+                let (scheduled, retries) = match &session {
+                    Some(s) => s.filter(i, &scheduled),
+                    None => (scheduled, 0),
+                };
                 let t_assign = Instant::now();
                 let assignment = assigner.assign(&ctx, &scheduled)?;
-                (scheduled, assignment, t_assign.elapsed().as_secs_f64())
+                (scheduled, retries, assignment, t_assign.elapsed().as_secs_f64())
             };
             debug_assert!(assignment.is_partition());
 
-            let (iter_cost, _) = eval_assignment(&self.topo, &assignment, alloc_opts);
-            let (new_global, loss) =
-                self.train_global_iteration(&global, &assignment)?;
-            global = new_global;
+            let (iter_cost, sols) = eval_assignment(&self.topo, &assignment, alloc_opts);
+            let (survivors, fstats) = match &mut session {
+                None => (None, None),
+                Some(s) => {
+                    let uploads = upload_times(&self.topo, &assignment, &sols);
+                    let mut out = s.resolve(i, self.topo.edges.len(), &uploads);
+                    out.stats.retries = retries;
+                    (Some(out.survivors), Some(out.stats))
+                }
+            };
+            // dropped devices leave their edge's objective: the survivors'
+            // allocation is re-solved without them
+            let live = survivors.as_ref().unwrap_or(&assignment);
+            let iter_cost = if survivors.is_some() {
+                eval_assignment(&self.topo, live, alloc_opts).0
+            } else {
+                iter_cost
+            };
+
+            let skip = fstats.map_or(false, |s| s.aborted) || live.num_devices() == 0;
+            let loss = if skip {
+                // quorum lost (or nobody scheduled): skip aggregation, keep
+                // the global model untouched
+                0.0
+            } else {
+                let (new_global, loss) = self.train_global_iteration(&global, live)?;
+                global = new_global;
+                loss
+            };
 
             let accuracy = evaluate_accuracy(
                 self.backend,
@@ -331,13 +391,20 @@ impl<'e> HflTrainer<'e> {
                 t_i: iter_cost.t,
                 e_i: iter_cost.e,
                 train_loss: loss,
-                msg_bytes: self.iter_msg_bytes(&assignment),
+                msg_bytes: self.iter_msg_bytes(live),
                 n_scheduled: scheduled.len(),
                 assign_latency_s,
+                faults: fstats,
             };
             progress(&rec);
             result.records.push(rec);
+            let surv: Option<Vec<usize>> = survivors
+                .as_ref()
+                .map(|a| a.groups.iter().flatten().cloned().collect());
             history.push(scheduled, assignment);
+            if let (Some(surv), Some(s)) = (surv, &session) {
+                history.push_faults(surv, &s.failures);
+            }
 
             if accuracy >= self.cfg.target_acc {
                 result.converged_at = Some(i + 1);

@@ -32,6 +32,7 @@ pub mod config;
 pub mod data;
 pub mod drl;
 pub mod experiments;
+pub mod faults;
 pub mod fl;
 pub mod metrics;
 pub mod model;

@@ -8,6 +8,7 @@ use hfl::allocation::SolverOpts;
 use hfl::cli::Args;
 use hfl::config::Config;
 use hfl::experiments;
+use hfl::faults::{FaultPlan, FaultProfile};
 use hfl::fl::{HflConfig, HflTrainer};
 use hfl::policy::{AssignEnv, AssignPolicy, ClusterNeed, PolicyRegistry, SchedEnv};
 use hfl::runtime::{Backend, NativeBackend};
@@ -24,18 +25,24 @@ commands:
                             --assigners vocabulary)
   train                     single HFL run
                             (--dataset --h --scheduler KEY --assigner KEY
-                             --max-iters --target-acc --lr --seed;
+                             --max-iters --target-acc --lr --seed
+                             --faults none|lossy|bursty fault injection;
                              policy KEYs take inline params, e.g.
                              hfel?budget=100 or static?base=greedy —
                              see `hfl policies`)
   sweep [preset|spec.toml]  scenario sweep: run a scheduler × assigner × H
                             grid, rayon-parallel on the native backend
-                            (presets: grid fig3 fig4 fig6 fig7;
+                            (presets: grid fig3 fig4 fig6 fig7 burst;
                              --threads N  --iters N  --seeds N
                              --h-values 10,30  --mode cost|train
                              --schedulers k1,k2  --assigners k1,k2
                              --dataset fmnist|cifar|tiny overrides the
-                             preset's dataset for train mode)
+                             preset's dataset for train mode
+                             --faults none|lossy|bursty  deterministic
+                             fault injection: stragglers, dropouts, edge
+                             outages, churn, deadlines (DESIGN.md §11);
+                             TOML specs take a [faults] table for
+                             per-field overrides)
                             orchestration (cells stream to disk as they
                             finish; output bytes are identical for any
                             thread count / shard split):
@@ -181,6 +188,15 @@ fn cmd_train(args: &Args, cfg: &Config, backend: &dyn Backend) -> anyhow::Result
         frac_major: cfg.frac_major,
         seed: cfg.seed,
     };
+    let fplan = match args.opt("faults") {
+        Some(f) => {
+            let profile = FaultProfile::preset(f)?;
+            profile
+                .is_active()
+                .then(|| FaultPlan::for_deployment(profile, cfg.seed))
+        }
+        None => None,
+    };
     args.finish()?;
 
     let mut trainer = HflTrainer::with_default_topology(backend, hcfg)?;
@@ -216,15 +232,24 @@ fn cmd_train(args: &Args, cfg: &Config, backend: &dyn Backend) -> anyhow::Result
         backend.name(),
         trainer.cfg.target_acc
     );
-    let res = trainer.run_policies(
+    let res = trainer.run_policies_with(
         &mut *sched,
         &mut *assigner,
         clusters.as_deref(),
         cfg.seed,
         &SolverOpts::default(),
+        fplan.as_ref(),
         |r| {
+            let faults = match r.faults {
+                Some(f) if f.aborted => "  [round aborted: no edge met quorum]".to_string(),
+                Some(f) => format!(
+                    "  ok {}/{} drop {} retry {}",
+                    f.completed, r.n_scheduled, f.dropped, f.retries
+                ),
+                None => String::new(),
+            };
             println!(
-                "iter {:3}  acc {:.3}  loss {:.3}  T_i {:9.1}s  E_i {:8.1}J  msgs {:6.1}MB  assign {:7.2}ms",
+                "iter {:3}  acc {:.3}  loss {:.3}  T_i {:9.1}s  E_i {:8.1}J  msgs {:6.1}MB  assign {:7.2}ms{faults}",
                 r.iter, r.accuracy, r.train_loss, r.t_i, r.e_i,
                 r.msg_bytes / 1e6, r.assign_latency_s * 1e3
             );
@@ -289,6 +314,12 @@ fn cmd_sweep(args: &Args, cfg: &Config) -> anyhow::Result<()> {
             spec.name = format!("{}_{ds}", spec.name);
             spec.dataset = ds.to_string();
         }
+    }
+    // `--faults none` on a [faults] TOML spec deliberately disables it:
+    // the CLI is how CI re-runs a profile fault-free for the byte-identity
+    // regression check
+    if let Some(f) = args.opt("faults") {
+        spec.faults = FaultProfile::preset(f)?;
     }
     spec.iters = args.get_usize("iters", spec.iters)?;
     // explicit CLI shaping wins over TOML profile values (a TOML spec
@@ -355,12 +386,15 @@ fn cmd_sweep(args: &Args, cfg: &Config) -> anyhow::Result<()> {
         let kind = kind.trim();
         anyhow::ensure!(!kinds_seen.contains(&kind), "--sink lists {kind} twice");
         kinds_seen.push(kind);
+        // an active fault profile adds the fault columns; `none` keeps the
+        // classic (byte-identical) headers
+        let fault_cols = plan.spec.faults.is_active();
         let (sink, rows, summary): (Box<dyn scenario::RecordSink>, _, _) = match kind {
             "csv" => {
                 let s = if resuming {
-                    scenario::CsvSink::append(out_dir, &stem)?
+                    scenario::CsvSink::append_with(out_dir, &stem, fault_cols)?
                 } else {
-                    scenario::CsvSink::create(out_dir, &stem)?
+                    scenario::CsvSink::create_with(out_dir, &stem, fault_cols)?
                 };
                 let (r, su) = s.paths();
                 let (r, su) = (r.to_path_buf(), su.to_path_buf());
@@ -368,9 +402,9 @@ fn cmd_sweep(args: &Args, cfg: &Config) -> anyhow::Result<()> {
             }
             "jsonl" => {
                 let s = if resuming {
-                    scenario::JsonlSink::append(out_dir, &stem)?
+                    scenario::JsonlSink::append_with(out_dir, &stem, fault_cols)?
                 } else {
-                    scenario::JsonlSink::create(out_dir, &stem)?
+                    scenario::JsonlSink::create_with(out_dir, &stem, fault_cols)?
                 };
                 let (r, su) = s.paths();
                 let (r, su) = (r.to_path_buf(), su.to_path_buf());

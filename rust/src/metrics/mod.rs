@@ -18,6 +18,8 @@ pub struct IterRecord {
     pub n_scheduled: usize,
     /// Latency of the assignment decision itself (Fig. 6d), seconds.
     pub assign_latency_s: f64,
+    /// Fault-injection stats for this round; `None` on fault-free runs.
+    pub faults: Option<crate::faults::RoundFaults>,
 }
 
 /// A complete HFL run (one seed).
@@ -89,6 +91,7 @@ mod tests {
             msg_bytes: 100.0,
             n_scheduled: 10,
             assign_latency_s: 0.0,
+            faults: None,
         }
     }
 

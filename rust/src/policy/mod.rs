@@ -68,6 +68,13 @@ pub struct PolicyCtx<'a> {
 pub struct RoundHistory {
     pub scheduled: Vec<Vec<usize>>,
     pub assignments: Vec<Assignment>,
+    /// Per round under fault injection: devices whose updates actually
+    /// aggregated (a subset of that round's `scheduled`). Empty when the
+    /// run is fault-free — treat a missing entry as "everyone survived".
+    pub survivors: Vec<Vec<usize>>,
+    /// Cumulative per-device upload-failure counts under fault injection
+    /// (index = device id); empty when the run is fault-free.
+    pub failures: Vec<u32>,
 }
 
 impl RoundHistory {
@@ -76,12 +83,30 @@ impl RoundHistory {
         self.assignments.push(assignment);
     }
 
+    /// Record one round's fault resolution (called by fault-aware runners
+    /// right after [`RoundHistory::push`]).
+    pub fn push_faults(&mut self, survivors: Vec<usize>, failures: &[u32]) {
+        self.survivors.push(survivors);
+        self.failures.clear();
+        self.failures.extend_from_slice(failures);
+    }
+
     pub fn rounds(&self) -> usize {
         self.scheduled.len()
     }
 
     pub fn last_assignment(&self) -> Option<&Assignment> {
         self.assignments.last()
+    }
+
+    /// Last round's survivor set, when fault injection recorded one.
+    pub fn last_survivors(&self) -> Option<&[usize]> {
+        self.survivors.last().map(Vec::as_slice)
+    }
+
+    /// Cumulative failure count of a device (0 when fault-free).
+    pub fn failure_count(&self, device: usize) -> u32 {
+        self.failures.get(device).copied().unwrap_or(0)
     }
 }
 

@@ -35,7 +35,7 @@ use std::sync::{Arc, OnceLock, RwLock};
 
 use super::assigners::{D3qnPolicy, FromAssigner, GreedyCost, StickyAssign};
 use super::key::PolicyKey;
-use super::schedulers::{ChannelTopH, FedAvgPolicy, IkcPolicy, VkcPolicy};
+use super::schedulers::{ChannelTopH, DeadlineSched, FedAvgPolicy, IkcPolicy, VkcPolicy};
 use super::{AssignPolicy, SchedulePolicy};
 use crate::assignment::drl::DrlAssigner;
 use crate::assignment::geo::Geographic;
@@ -441,6 +441,24 @@ impl PolicyRegistry {
                     clusters: ClusterNeed::None,
                     factory: sched_channel,
                 },
+                SchedEntry {
+                    name: "deadline",
+                    aliases: &[],
+                    summary: "deadline-fit devices first (predicted completion <= ms), fastest fill after",
+                    params: &[
+                        ParamSpec {
+                            key: "ms",
+                            help: "round deadline in milliseconds a device's predicted completion must fit (default 1000)",
+                        },
+                        ParamSpec {
+                            key: "relay",
+                            help: "edge used for the completion prediction: nearest (best candidate edge)",
+                        },
+                    ],
+                    defaults: &[("ms", "1000"), ("relay", "nearest")],
+                    clusters: ClusterNeed::None,
+                    factory: sched_deadline,
+                },
             ],
             assigns: vec![
                 AssignEntry {
@@ -556,6 +574,17 @@ fn sched_channel(key: &PolicyKey, _env: &SchedEnv) -> anyhow::Result<Box<dyn Sch
         anyhow::ensure!(s > 0.0, "{key}: share_hz must be positive");
     }
     Ok(Box::new(ChannelTopH::new(share, key.clone())))
+}
+
+fn sched_deadline(key: &PolicyKey, _env: &SchedEnv) -> anyhow::Result<Box<dyn SchedulePolicy>> {
+    let ms = key.get_f64("ms")?.unwrap_or(1000.0);
+    anyhow::ensure!(ms > 0.0 && ms.is_finite(), "{key}: ms must be positive and finite");
+    let relay = key.get_str("relay").unwrap_or("nearest");
+    anyhow::ensure!(
+        relay == "nearest",
+        "{key}: unknown relay mode {relay:?} (supported: nearest)"
+    );
+    Ok(Box::new(DeadlineSched::new(ms, key.clone())))
 }
 
 fn assign_d3qn<'e>(
@@ -722,6 +751,23 @@ mod tests {
         assert!(r.assign_key("hfel?depth=2").is_err());
         assert!(r.sched_key("fedavg?h=3").is_err());
         assert!(r.assign_key("hfel-100?budget=5").is_err(), "alias param conflict accepted");
+    }
+
+    #[test]
+    fn deadline_defaults_and_param_validation() {
+        let r = PolicyRegistry::global();
+        assert_eq!(
+            r.sched_key("deadline").unwrap().to_string(),
+            "deadline?ms=1000&relay=nearest"
+        );
+        let env = SchedEnv { seed: 0 };
+        let ok = r.sched_key("deadline?ms=250").unwrap();
+        assert!(r.scheduler(&ok, &env).is_ok());
+        let zero = r.sched_key("deadline?ms=0").unwrap();
+        assert!(r.scheduler(&zero, &env).is_err());
+        let relay = r.sched_key("deadline?relay=farthest").unwrap();
+        assert!(r.scheduler(&relay, &env).is_err());
+        assert!(r.sched_key("deadline?window=5").is_err());
     }
 
     #[test]

@@ -9,7 +9,8 @@
 
 use super::{PolicyCtx, PolicyKey, SchedulePolicy};
 use crate::scheduling::{FedAvg, Ikc, Scheduler, Vkc};
-use crate::system::Topology;
+use crate::system::cost::device_cost;
+use crate::system::{DeviceAlloc, Topology};
 
 fn check_h(ctx: &PolicyCtx, who: &str) -> anyhow::Result<()> {
     anyhow::ensure!(
@@ -212,6 +213,76 @@ impl SchedulePolicy for ChannelTopH {
     }
 }
 
+/// Deadline-aware scheduler (`deadline?ms=X&relay=nearest`): devices whose
+/// *predicted* round completion fits the deadline are scheduled first, the
+/// rest of H is filled with the fastest remaining devices. The prediction is
+/// the eq. 4–8 compute+upload time at the device's best (`relay=nearest`)
+/// candidate edge, under the same fair bandwidth share `B_m / ceil(H/M)` the
+/// channel scheduler assumes and the device's maximum CPU frequency — an
+/// optimistic bound, which is exactly what a deadline check wants (a device
+/// that misses it optimistically will certainly miss it allocated).
+///
+/// Under fault injection the ranking also consults
+/// [`RoundHistory::failure_count`](super::RoundHistory::failure_count):
+/// among deadline-fitting devices, historically flaky ones are deprioritized
+/// before predicted time breaks the tie. Fully deterministic — final ties
+/// break on device id.
+pub struct DeadlineSched {
+    /// Round deadline in seconds (`ms` param / 1e3).
+    deadline_s: f64,
+    key: PolicyKey,
+}
+
+impl DeadlineSched {
+    pub fn new(deadline_ms: f64, key: PolicyKey) -> Self {
+        DeadlineSched { deadline_s: deadline_ms / 1e3, key }
+    }
+
+    /// Predicted completion time of device `n`: fastest candidate edge
+    /// under a fair-share bandwidth split at max CPU frequency.
+    fn t_pred(topo: &Topology, n: usize, per_edge: usize) -> f64 {
+        let freq = topo.device(n).max_freq_hz;
+        let mut best = f64::INFINITY;
+        for m in topo.candidate_edges(n) {
+            let alloc = DeviceAlloc {
+                bandwidth_hz: topo.edges[m].bandwidth_hz / per_edge as f64,
+                freq_hz: freq,
+            };
+            best = best.min(device_cost(topo, n, m, alloc).t_total());
+        }
+        best
+    }
+}
+
+impl SchedulePolicy for DeadlineSched {
+    fn schedule(&mut self, ctx: &PolicyCtx) -> anyhow::Result<Vec<usize>> {
+        check_h(ctx, "deadline")?;
+        let m_count = ctx.topo.edges.len();
+        let per_edge = ((ctx.h + m_count - 1) / m_count).max(1);
+        // No cache (unlike ChannelTopH): failure counts evolve round to
+        // round, so the ranking is history-dependent by design.
+        let mut ranked: Vec<(bool, u32, f64, usize)> = (0..ctx.topo.n_devices())
+            .map(|n| {
+                let t = Self::t_pred(ctx.topo, n, per_edge);
+                (t > self.deadline_s, ctx.history.failure_count(n), t, n)
+            })
+            .collect();
+        ranked.sort_unstable_by(|a, b| {
+            a.0.cmp(&b.0)
+                .then(a.1.cmp(&b.1))
+                .then(a.2.total_cmp(&b.2))
+                .then(a.3.cmp(&b.3))
+        });
+        let mut sel: Vec<usize> = ranked[..ctx.h].iter().map(|r| r.3).collect();
+        sel.sort_unstable();
+        Ok(sel)
+    }
+
+    fn name(&self) -> String {
+        self.key.to_string()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -263,6 +334,93 @@ mod tests {
                 assert!(rate(n) <= worst_in + 1e-9, "device {n} outranks a selected one");
             }
         }
+    }
+
+    /// Mirror of `DeadlineSched::t_pred` built from public cost APIs.
+    fn pred(t: &Topology, n: usize, per_edge: usize) -> f64 {
+        (0..t.edges.len())
+            .map(|m| {
+                let alloc = DeviceAlloc {
+                    bandwidth_hz: t.edges[m].bandwidth_hz / per_edge as f64,
+                    freq_hz: t.device(n).max_freq_hz,
+                };
+                device_cost(t, n, m, alloc).t_total()
+            })
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    #[test]
+    fn deadline_selects_h_distinct_and_is_deterministic() {
+        let t = topo(6);
+        let hist = RoundHistory::default();
+        let mut s = DeadlineSched::new(1000.0, PolicyKey::bare("deadline"));
+        let a = s.schedule(&ctx(&t, &hist, 20)).unwrap();
+        let b = s.schedule(&ctx(&t, &hist, 20)).unwrap();
+        assert_eq!(a.len(), 20);
+        let mut d = a.clone();
+        d.dedup();
+        assert_eq!(d.len(), 20, "duplicate devices scheduled");
+        assert_eq!(a, b, "deadline scheduling must be deterministic");
+    }
+
+    #[test]
+    fn deadline_falls_back_to_fastest_fill() {
+        // With a deadline nobody can meet, selection = the H fastest
+        // predicted devices (pure best-channel/compute fill).
+        let t = topo(7);
+        let hist = RoundHistory::default();
+        let h = 20;
+        let per_edge = ((h + t.edges.len() - 1) / t.edges.len()).max(1);
+        let mut s = DeadlineSched::new(1e-9, PolicyKey::bare("deadline"));
+        let sel = s.schedule(&ctx(&t, &hist, h)).unwrap();
+        let worst_in =
+            sel.iter().map(|&n| pred(&t, n, per_edge)).fold(0.0f64, f64::max);
+        for n in 0..t.n_devices() {
+            if !sel.contains(&n) {
+                assert!(
+                    pred(&t, n, per_edge) >= worst_in - 1e-12,
+                    "device {n} is faster than a selected one"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn deadline_fitting_devices_are_always_kept() {
+        // Cut the fleet so exactly k < H devices fit the deadline: every
+        // one of them must be scheduled, whatever their rank otherwise.
+        let t = topo(8);
+        let hist = RoundHistory::default();
+        let h = 10;
+        let per_edge = ((h + t.edges.len() - 1) / t.edges.len()).max(1);
+        let preds: Vec<f64> = (0..t.n_devices()).map(|n| pred(&t, n, per_edge)).collect();
+        let mut sorted = preds.clone();
+        sorted.sort_by(f64::total_cmp);
+        let k = 5;
+        let cutoff_s = (sorted[k - 1] + sorted[k]) / 2.0;
+        let mut s = DeadlineSched::new(cutoff_s * 1e3, PolicyKey::bare("deadline"));
+        let sel = s.schedule(&ctx(&t, &hist, h)).unwrap();
+        for (n, &p) in preds.iter().enumerate() {
+            if p <= cutoff_s {
+                assert!(sel.contains(&n), "fitting device {n} was dropped");
+            }
+        }
+    }
+
+    #[test]
+    fn deadline_deprioritizes_historically_failing_devices() {
+        // All devices fit a huge deadline; giving one selected device a
+        // nonzero failure count pushes it behind every clean device.
+        let t = topo(9);
+        let mut hist = RoundHistory::default();
+        let mut s = DeadlineSched::new(1e12, PolicyKey::bare("deadline"));
+        let sel = s.schedule(&ctx(&t, &hist, 10)).unwrap();
+        let victim = sel[0];
+        hist.failures = vec![0; t.n_devices()];
+        hist.failures[victim] = 3;
+        let sel2 = s.schedule(&ctx(&t, &hist, 10)).unwrap();
+        assert!(!sel2.contains(&victim), "failing device {victim} still scheduled");
+        assert_eq!(sel2.len(), 10);
     }
 
     #[test]

@@ -225,7 +225,7 @@ impl SweepPlan {
         let s = &self.spec;
         let scheds: Vec<String> = s.schedulers.iter().map(|k| k.to_string()).collect();
         let assigns: Vec<String> = s.assigners.iter().map(|k| k.to_string()).collect();
-        let canon = format!(
+        let mut canon = format!(
             "{:?}|{}|{}|{:?}|{:?}|{:?}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{:?}|{:?}",
             s.name,
             s.mode.name(),
@@ -245,6 +245,11 @@ impl SweepPlan {
             s.system,
             self.ckpt_digest,
         );
+        // appended only when active so every pre-fault manifest (and the
+        // fault-free outputs written today) keeps its fingerprint
+        if s.faults.is_active() {
+            canon.push_str(&format!("|faults={:?}", s.faults));
+        }
         fnv1a64(canon.as_bytes())
     }
 
@@ -811,6 +816,15 @@ mod tests {
         other.seeds = 4;
         let c = SweepPlan::new(other).unwrap();
         assert_ne!(a.fingerprint(), c.fingerprint());
+        // an active fault profile changes the fingerprint; `none` does not
+        // (pre-fault manifests must stay resumable)
+        let mut faulted = spec.clone();
+        faulted.faults = crate::faults::FaultProfile::lossy();
+        let f = SweepPlan::new(faulted.clone()).unwrap();
+        assert_ne!(a.fingerprint(), f.fingerprint(), "lossy faults must change it");
+        faulted.faults.dropout_prob = 0.2;
+        let f2 = SweepPlan::new(faulted).unwrap();
+        assert_ne!(f.fingerprint(), f2.fingerprint(), "fault overrides must change it");
         // the RESOLVED checkpoint CONTENT is part of the fingerprint: a
         // host with the file and one without it (or with stale bytes)
         // must not co-merge — while the same bytes under different

@@ -30,6 +30,7 @@ pub fn fig_sched(cfg: &Config, dataset: &str) -> ScenarioSpec {
         frac_major: cfg.frac_major,
         drl_checkpoint: None,
         system: cfg.system.clone(),
+        ..ScenarioSpec::default()
     }
 }
 
@@ -79,6 +80,7 @@ pub fn fig7(cfg: &Config, dataset: &str) -> ScenarioSpec {
         frac_major: cfg.frac_major,
         drl_checkpoint: Some(crate::experiments::common::default_checkpoint(cfg)),
         system: cfg.system.clone(),
+        ..ScenarioSpec::default()
     }
 }
 
@@ -110,7 +112,34 @@ pub fn grid(cfg: &Config) -> ScenarioSpec {
     }
 }
 
-/// Resolve a preset by name (`grid`, `fig3`, `fig4`, `fig6`, `fig7`).
+/// Burst-traffic scenario (paper §I, §VI-C): per-round uplink message
+/// volume vs the scheduled share H — the sweepable version of
+/// `examples/burst_traffic.rs`. Short train runs (message accounting needs
+/// the training loop) with fixed round-robin assignment, comparing uniform
+/// scheduling against the deadline-aware scheduler; compose with
+/// `--faults lossy` to measure the burst under stragglers and dropout.
+pub fn burst(cfg: &Config) -> ScenarioSpec {
+    ScenarioSpec {
+        name: "burst".into(),
+        mode: SweepMode::Train,
+        dataset: "fmnist".into(),
+        schedulers: vec![sched("fedavg"), sched("deadline")],
+        assigners: vec![assign("round-robin")],
+        h_values: cfg.h_values.clone(),
+        seeds: cfg.seeds,
+        iters: 2,
+        seed: cfg.seed ^ 0xB057,
+        k_clusters: cfg.k_clusters,
+        lr: cfg.lr,
+        test_size: cfg.test_size,
+        frac_major: cfg.frac_major,
+        system: cfg.system.clone(),
+        ..ScenarioSpec::default()
+    }
+}
+
+/// Resolve a preset by name (`grid`, `fig3`, `fig4`, `fig6`, `fig7`,
+/// `burst`).
 pub fn preset(name: &str, cfg: &Config) -> anyhow::Result<ScenarioSpec> {
     match name {
         "grid" => Ok(grid(cfg)),
@@ -118,7 +147,8 @@ pub fn preset(name: &str, cfg: &Config) -> anyhow::Result<ScenarioSpec> {
         "fig4" => Ok(fig_sched(cfg, "cifar")),
         "fig6" => Ok(fig6(cfg, 50)),
         "fig7" => Ok(fig7(cfg, cfg.datasets.first().map(String::as_str).unwrap_or("fmnist"))),
-        other => anyhow::bail!("unknown scenario preset {other:?} (grid|fig3|fig4|fig6|fig7)"),
+        "burst" => Ok(burst(cfg)),
+        other => anyhow::bail!("unknown scenario preset {other:?} (grid|fig3|fig4|fig6|fig7|burst)"),
     }
 }
 
@@ -129,7 +159,7 @@ mod tests {
     #[test]
     fn presets_validate() {
         let cfg = Config::default();
-        for name in ["grid", "fig3", "fig4", "fig6", "fig7"] {
+        for name in ["grid", "fig3", "fig4", "fig6", "fig7", "burst"] {
             let s = preset(name, &cfg).unwrap();
             s.validate().unwrap_or_else(|e| panic!("{name}: {e}"));
             assert!(!s.cells().is_empty(), "{name} has no cells");
@@ -144,6 +174,16 @@ mod tests {
         assert_eq!(s.h_values, vec![50]);
         assert_eq!(s.iters, 1);
         assert_eq!(s.seeds, cfg.assign_eval_iters);
+    }
+
+    #[test]
+    fn burst_preset_trains_with_deadline_scheduler() {
+        let cfg = Config::default();
+        let s = burst(&cfg);
+        assert!(matches!(s.mode, SweepMode::Train));
+        let scheds: Vec<String> = s.schedulers.iter().map(|k| k.to_string()).collect();
+        assert!(scheds.contains(&"deadline?ms=1000&relay=nearest".to_string()));
+        assert!(!s.faults.is_active(), "burst preset must default fault-free");
     }
 
     #[test]

@@ -128,6 +128,18 @@ const SUMMARY_HEADER: [&str; 11] = [
     "cell", "scheduler", "assigner", "h", "seed", "iters", "total_t",
     "total_e", "objective", "final_acc", "converged_at",
 ];
+/// Extra per-iteration columns emitted only when the spec's fault profile
+/// is active ([`crate::faults`]): fault-free output stays byte-identical.
+const FAULT_COLS: [&str; 5] =
+    ["completed", "dropped", "stragglers", "round_wall_ms", "retries"];
+
+fn rows_header(fault_cols: bool) -> Vec<&'static str> {
+    let mut h = ROWS_HEADER.to_vec();
+    if fault_cols {
+        h.extend(FAULT_COLS);
+    }
+    h
+}
 
 /// The per-iteration + summary CSV pair. Output bytes are a pure function
 /// of the delivered records (no wall-clock columns), and identical to what
@@ -137,6 +149,7 @@ pub struct CsvSink {
     summary: CsvWriter,
     rows_path: PathBuf,
     summary_path: PathBuf,
+    fault_cols: bool,
 }
 
 /// `sweep_<stem>.csv` / `sweep_<stem>_summary.csv` under `out_dir`.
@@ -150,23 +163,37 @@ pub fn csv_paths(out_dir: &Path, stem: &str) -> (PathBuf, PathBuf) {
 impl CsvSink {
     /// Create both files fresh (truncating) and write the headers.
     pub fn create(out_dir: &Path, stem: &str) -> anyhow::Result<CsvSink> {
+        CsvSink::create_with(out_dir, stem, false)
+    }
+
+    /// [`CsvSink::create`] with the fault columns appended to the rows
+    /// header when `fault_cols` (spec has an active fault profile) —
+    /// fault-free sweeps keep today's bytes exactly.
+    pub fn create_with(out_dir: &Path, stem: &str, fault_cols: bool) -> anyhow::Result<CsvSink> {
         let (rows_path, summary_path) = csv_paths(out_dir, stem);
         Ok(CsvSink {
-            rows: CsvWriter::create(&rows_path, &ROWS_HEADER)?,
+            rows: CsvWriter::create(&rows_path, &rows_header(fault_cols))?,
             summary: CsvWriter::create(&summary_path, &SUMMARY_HEADER)?,
             rows_path,
             summary_path,
+            fault_cols,
         })
     }
 
     /// Reopen existing files for appending (resume; headers not rewritten).
     pub fn append(out_dir: &Path, stem: &str) -> anyhow::Result<CsvSink> {
+        CsvSink::append_with(out_dir, stem, false)
+    }
+
+    /// [`CsvSink::append`] for a file created with fault columns.
+    pub fn append_with(out_dir: &Path, stem: &str, fault_cols: bool) -> anyhow::Result<CsvSink> {
         let (rows_path, summary_path) = csv_paths(out_dir, stem);
         Ok(CsvSink {
-            rows: CsvWriter::append(&rows_path, ROWS_HEADER.len())?,
+            rows: CsvWriter::append(&rows_path, rows_header(fault_cols).len())?,
             summary: CsvWriter::append(&summary_path, SUMMARY_HEADER.len())?,
             rows_path,
             summary_path,
+            fault_cols,
         })
     }
 
@@ -177,7 +204,7 @@ impl CsvSink {
 
 impl RecordSink for CsvSink {
     fn iter_row(&mut self, cell: &SweepCell, r: &SweepRow) -> anyhow::Result<()> {
-        self.rows.row(&[
+        let mut cols = vec![
             cell.idx.to_string(),
             cell.scheduler.to_string(),
             cell.assigner.to_string(),
@@ -191,7 +218,16 @@ impl RecordSink for CsvSink {
             opt_fmt(r.train_loss, 4),
             opt_fmt(r.msg_bytes, 0),
             r.n_scheduled.to_string(),
-        ])
+        ];
+        if self.fault_cols {
+            let f = r.faults.unwrap_or_default();
+            cols.push(f.completed.to_string());
+            cols.push(f.dropped.to_string());
+            cols.push(f.stragglers.to_string());
+            cols.push(format!("{:.3}", f.wall_ms));
+            cols.push(f.retries.to_string());
+        }
+        self.rows.row(&cols)
     }
 
     fn cell_done(&mut self, s: &CellSummary) -> anyhow::Result<()> {
@@ -260,6 +296,7 @@ fn json_opt(v: Option<f64>, prec: usize) -> String {
 pub struct JsonlSink {
     rows: OffsetFile,
     summary: OffsetFile,
+    fault_cols: bool,
 }
 
 /// `sweep_<stem>.jsonl` / `sweep_<stem>_summary.jsonl` under `out_dir`.
@@ -272,18 +309,31 @@ pub fn jsonl_paths(out_dir: &Path, stem: &str) -> (PathBuf, PathBuf) {
 
 impl JsonlSink {
     pub fn create(out_dir: &Path, stem: &str) -> anyhow::Result<JsonlSink> {
+        JsonlSink::create_with(out_dir, stem, false)
+    }
+
+    /// [`JsonlSink::create`] emitting the fault fields on every row when
+    /// `fault_cols` (spec has an active fault profile).
+    pub fn create_with(out_dir: &Path, stem: &str, fault_cols: bool) -> anyhow::Result<JsonlSink> {
         let (rows, summary) = jsonl_paths(out_dir, stem);
         Ok(JsonlSink {
             rows: OffsetFile::create(rows)?,
             summary: OffsetFile::create(summary)?,
+            fault_cols,
         })
     }
 
     pub fn append(out_dir: &Path, stem: &str) -> anyhow::Result<JsonlSink> {
+        JsonlSink::append_with(out_dir, stem, false)
+    }
+
+    /// [`JsonlSink::append`] for files created with fault fields.
+    pub fn append_with(out_dir: &Path, stem: &str, fault_cols: bool) -> anyhow::Result<JsonlSink> {
         let (rows, summary) = jsonl_paths(out_dir, stem);
         Ok(JsonlSink {
             rows: OffsetFile::append(rows)?,
             summary: OffsetFile::append(summary)?,
+            fault_cols,
         })
     }
 
@@ -294,11 +344,11 @@ impl JsonlSink {
 
 impl RecordSink for JsonlSink {
     fn iter_row(&mut self, cell: &SweepCell, r: &SweepRow) -> anyhow::Result<()> {
-        writeln!(
+        write!(
             self.rows,
             "{{\"cell\":{},\"scheduler\":{},\"assigner\":{},\"h\":{},\"seed\":{},\
              \"iter\":{},\"t_i\":{:.6},\"e_i\":{:.6},\"objective\":{:.6},\
-             \"accuracy\":{},\"train_loss\":{},\"msg_bytes\":{},\"n_scheduled\":{}}}",
+             \"accuracy\":{},\"train_loss\":{},\"msg_bytes\":{},\"n_scheduled\":{}",
             cell.idx,
             json_str(&cell.scheduler.to_string()),
             json_str(&cell.assigner.to_string()),
@@ -313,6 +363,16 @@ impl RecordSink for JsonlSink {
             json_opt(r.msg_bytes, 0),
             r.n_scheduled,
         )?;
+        if self.fault_cols {
+            let f = r.faults.unwrap_or_default();
+            write!(
+                self.rows,
+                ",\"completed\":{},\"dropped\":{},\"stragglers\":{},\
+                 \"round_wall_ms\":{:.3},\"retries\":{}",
+                f.completed, f.dropped, f.stragglers, f.wall_ms, f.retries,
+            )?;
+        }
+        writeln!(self.rows, "}}")?;
         Ok(())
     }
 
@@ -533,6 +593,7 @@ mod tests {
             train_loss: None,
             msg_bytes: None,
             n_scheduled: 10,
+            faults: None,
         }
     }
 
@@ -589,6 +650,47 @@ mod tests {
         crate::util::json::Json::parse(line).unwrap();
         let sums = std::fs::read_to_string(dir.join("sweep_t_summary.jsonl")).unwrap();
         crate::util::json::Json::parse(sums.lines().next().unwrap()).unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn fault_columns_only_when_enabled() {
+        use crate::faults::RoundFaults;
+        let dir = std::env::temp_dir().join(format!("hfl_sink_faults_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut plain = CsvSink::create(&dir, "p").unwrap();
+        let mut faulted = CsvSink::create_with(&dir, "f", true).unwrap();
+        let mut jf = JsonlSink::create_with(&dir, "f", true).unwrap();
+        let mut r = row(0);
+        r.faults = Some(RoundFaults {
+            completed: 7,
+            dropped: 2,
+            stragglers: 1,
+            retries: 3,
+            wall_ms: 123.4567,
+            aborted: false,
+            edges_out: 0,
+        });
+        for s in [&mut plain as &mut dyn RecordSink, &mut faulted, &mut jf] {
+            s.iter_row(&cell(0), &r).unwrap();
+            s.cell_done(&summary(0)).unwrap();
+            s.finish().unwrap();
+        }
+        let p = std::fs::read_to_string(dir.join("sweep_p.csv")).unwrap();
+        assert!(p.lines().next().unwrap().ends_with("n_scheduled"), "{p}");
+        assert!(!p.contains("round_wall_ms"));
+        let f = std::fs::read_to_string(dir.join("sweep_f.csv")).unwrap();
+        assert!(
+            f.lines().next().unwrap().ends_with(
+                "n_scheduled,completed,dropped,stragglers,round_wall_ms,retries"
+            ),
+            "{f}"
+        );
+        assert!(f.lines().nth(1).unwrap().ends_with("10,7,2,1,123.457,3"), "{f}");
+        let j = std::fs::read_to_string(dir.join("sweep_f.jsonl")).unwrap();
+        let line = j.lines().next().unwrap();
+        assert!(line.contains("\"round_wall_ms\":123.457,\"retries\":3"), "{line}");
+        crate::util::json::Json::parse(line).unwrap();
         std::fs::remove_dir_all(&dir).ok();
     }
 

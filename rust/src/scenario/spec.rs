@@ -31,6 +31,7 @@ use std::path::{Path, PathBuf};
 
 use crate::config::toml::{parse, Table, Value};
 use crate::config::{apply_system, Config};
+use crate::faults::{FaultPlan, FaultProfile};
 use crate::policy::{assign, sched, PolicyKey, PolicyRegistry};
 use crate::system::SystemParams;
 
@@ -105,6 +106,9 @@ pub struct ScenarioSpec {
     /// D³QN checkpoint for the `d3qn` assigner (falls back to a fresh θ).
     pub drl_checkpoint: Option<PathBuf>,
     pub system: SystemParams,
+    /// Fault-injection environment (see [`crate::faults`]); the default
+    /// `none` profile reproduces the fault-free loop byte-for-byte.
+    pub faults: FaultProfile,
 }
 
 impl Default for ScenarioSpec {
@@ -132,6 +136,7 @@ impl Default for ScenarioSpec {
             frac_major: 0.8,
             drl_checkpoint: None,
             system: SystemParams::default(),
+            faults: FaultProfile::none(),
         }
     }
 }
@@ -224,6 +229,29 @@ impl ScenarioSpec {
         if let Some(v) = t.get("drl_checkpoint").and_then(Value::as_str) {
             s.drl_checkpoint = Some(PathBuf::from(v));
         }
+        // `faults = "lossy"` or a `[faults]` table: `profile` picks the
+        // preset base, numeric keys override fields. Two passes because the
+        // table is sorted — the preset must land before its overrides.
+        if let Some(v) = t.get("faults").and_then(Value::as_str) {
+            s.faults = FaultProfile::preset(v)?;
+        }
+        if let Some(v) = t.get("faults.profile") {
+            let name = v
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("faults.profile must be a string"))?;
+            s.faults = FaultProfile::preset(name)?;
+        }
+        for (k, v) in t.iter() {
+            if let Some(field) = k.strip_prefix("faults.") {
+                if field == "profile" {
+                    continue;
+                }
+                let x = v
+                    .as_f64()
+                    .ok_or_else(|| anyhow::anyhow!("faults.{field} must be a number"))?;
+                s.faults.set(field, x)?;
+            }
+        }
         apply_system(t, &mut s.system);
         s.validate()?;
         Ok(s)
@@ -262,7 +290,18 @@ impl ScenarioSpec {
                 self.system.n_devices
             );
         }
+        self.faults.validate()?;
         Ok(())
+    }
+
+    /// The fault plan a cell runs under, or `None` when the profile is
+    /// inactive (the byte-identical plain path). Seeded off the deployment
+    /// stream so every policy arm of one `(H, seed_i)` cell faces the same
+    /// faults.
+    pub fn fault_plan(&self, deployment_seed: u64) -> Option<FaultPlan> {
+        self.faults
+            .is_active()
+            .then(|| FaultPlan::for_deployment(self.faults.clone(), deployment_seed))
     }
 
     /// Expand the grid in deterministic nested order (scheduler, assigner,
@@ -378,6 +417,41 @@ mod tests {
             let t = parse(toml).unwrap();
             assert!(ScenarioSpec::from_table(&t, &cfg).is_err(), "accepted {toml:?}");
         }
+    }
+
+    #[test]
+    fn toml_fault_profile_and_overrides() {
+        let cfg = Config::default();
+        // default: inactive, no plan
+        let s = ScenarioSpec::default();
+        assert!(!s.faults.is_active());
+        assert!(s.fault_plan(42).is_none());
+        // top-level preset string
+        let t = parse("faults = \"lossy\"").unwrap();
+        let s = ScenarioSpec::from_table(&t, &cfg).unwrap();
+        assert_eq!(s.faults.name, "lossy");
+        let plan = s.fault_plan(42).expect("active profile yields a plan");
+        assert_eq!(plan.seed, 42 ^ crate::faults::FAULT_SEED_TAG);
+        // [faults] table: preset base + numeric overrides (override order
+        // must not depend on the table's alphabetical key order)
+        let t = parse(
+            r#"
+            [faults]
+            dropout_prob = 0.4
+            profile = "bursty"
+            quorum = 0.3
+            "#,
+        )
+        .unwrap();
+        let s = ScenarioSpec::from_table(&t, &cfg).unwrap();
+        assert_eq!(s.faults.name, "bursty");
+        assert_eq!(s.faults.dropout_prob, 0.4);
+        assert_eq!(s.faults.quorum, 0.3);
+        assert_eq!(s.faults.straggler_prob, FaultProfile::bursty().straggler_prob);
+        // bad values are rejected
+        assert!(ScenarioSpec::from_table(&parse("faults = \"heavy\"").unwrap(), &cfg).is_err());
+        let t = parse("[faults]\ndropout_prob = 1.5").unwrap();
+        assert!(ScenarioSpec::from_table(&t, &cfg).is_err());
     }
 
     #[test]

@@ -29,6 +29,7 @@ use crate::allocation::SolverOpts;
 use crate::assignment::evaluate;
 use crate::data::{partition, DeviceData};
 use crate::experiments::common::clusters_for;
+use crate::faults::{upload_times, FaultSession, RoundFaults};
 use crate::fl::{HflConfig, HflTrainer};
 use crate::policy::{
     AssignEnv, AssignPolicy, ClusterNeed, PolicyCtx, PolicyKey, PolicyRegistry, RoundHistory,
@@ -52,6 +53,10 @@ pub struct SweepRow {
     pub train_loss: Option<f64>,
     pub msg_bytes: Option<f64>,
     pub n_scheduled: usize,
+    /// Fault-injection stats for this round; `None` on fault-free sweeps
+    /// (the sinks only emit the fault columns when the spec's profile is
+    /// active, keeping fault-free output byte-identical).
+    pub faults: Option<RoundFaults>,
 }
 
 /// The complete result of one grid cell.
@@ -222,11 +227,15 @@ pub fn run_cell(
             let mut assigner =
                 build_assigner(&cell.assigner, spec, backend, rng.next_u64(), &sys)?;
             let opts = SolverOpts::default();
+            // same fault environment for every strategy arm of (H, seed_i)
+            let mut session = spec
+                .fault_plan(dep)
+                .map(|p| FaultSession::new(p, topo.n_devices()));
             let mut rows = Vec::with_capacity(spec.iters);
             let mut latencies = Vec::with_capacity(spec.iters);
             let mut history = RoundHistory::default();
             for iter in 0..spec.iters {
-                let (scheduled, assignment, latency) = {
+                let (scheduled, retries, assignment, latency) = {
                     let ctx = PolicyCtx {
                         topo: &topo,
                         clusters: clusters.as_deref(),
@@ -236,13 +245,31 @@ pub fn run_cell(
                         seed: policy_seed,
                     };
                     let scheduled = sched.schedule(&ctx)?;
+                    // churned-away and backoff-blocked devices never start
+                    // the round, so assignment sees the effective set
+                    let (scheduled, retries) = match &session {
+                        Some(s) => s.filter(iter, &scheduled),
+                        None => (scheduled, 0),
+                    };
                     let t0 = Instant::now();
                     let assignment = assigner.assign(&ctx, &scheduled)?;
-                    (scheduled, assignment, t0.elapsed().as_secs_f64())
+                    (scheduled, retries, assignment, t0.elapsed().as_secs_f64())
                 };
                 latencies.push(latency);
                 debug_assert!(assignment.is_partition());
-                let (cost, _) = evaluate(&topo, &assignment, &opts);
+                let (cost, sols) = evaluate(&topo, &assignment, &opts);
+                // resolve the event clock; dropped devices leave their
+                // edge's objective (survivor allocation re-solved)
+                let (cost, fstats, survivors) = match &mut session {
+                    None => (cost, None, None),
+                    Some(s) => {
+                        let uploads = upload_times(&topo, &assignment, &sols);
+                        let mut out = s.resolve(iter, topo.edges.len(), &uploads);
+                        out.stats.retries = retries;
+                        let cost = evaluate(&topo, &out.survivors, &opts).0;
+                        (cost, Some(out.stats), Some(out.survivors))
+                    }
+                };
                 rows.push(SweepRow {
                     iter,
                     t_i: cost.t,
@@ -252,8 +279,15 @@ pub fn run_cell(
                     train_loss: None,
                     msg_bytes: None,
                     n_scheduled: scheduled.len(),
+                    faults: fstats,
                 });
+                let surv: Option<Vec<usize>> = survivors
+                    .as_ref()
+                    .map(|a| a.groups.iter().flatten().cloned().collect());
                 history.push(scheduled, assignment);
+                if let (Some(surv), Some(s)) = (surv, &session) {
+                    history.push_faults(surv, &s.failures);
+                }
             }
             Ok(CellResult {
                 cell: cell.clone(),
@@ -291,12 +325,14 @@ pub fn run_cell(
                 build_assigner(&cell.assigner, spec, backend, rng.next_u64(), &sys)?;
             let sched_name = cell.scheduler.to_string();
             let assigner_tag = cell.assigner.to_string();
-            let res = trainer.run_policies(
+            let fplan = spec.fault_plan(dep);
+            let res = trainer.run_policies_with(
                 &mut *sched,
                 &mut *assigner,
                 clusters.as_deref(),
                 policy_seed,
                 &SolverOpts::default(),
+                fplan.as_ref(),
                 |r| {
                     log::info!(
                         "sweep {} {sched_name}×{assigner_tag} H={} seed{} it{} acc {:.3} loss {:.3}",
@@ -322,6 +358,7 @@ pub fn run_cell(
                     train_loss: Some(r.train_loss),
                     msg_bytes: Some(r.msg_bytes),
                     n_scheduled: r.n_scheduled,
+                    faults: r.faults,
                 })
                 .collect();
             let latencies: Vec<f64> =

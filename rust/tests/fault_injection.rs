@@ -1,0 +1,302 @@
+//! ISSUE 7 tentpole acceptance: deterministic fault injection.
+//!
+//! Properties:
+//! * a lossy sweep's fault traces (dropped / retries / wall-clock columns)
+//!   are **byte-identical** at 1 vs 4 rayon threads and across any
+//!   shard+merge partition — faults perturb the simulation, never the
+//!   determinism contract;
+//! * a `faults = "none"` (or inactive-override) spec produces exactly the
+//!   fault-free bytes: no extra columns, no dependence on dormant knobs;
+//! * dropout/churn/outage can only ever *shrink* a round's assignment —
+//!   the partition property survives every failure combination;
+//! * a round that loses quorum everywhere aborts cleanly: training is
+//!   skipped and the global model (hence the accuracy curve) is unchanged.
+
+use std::collections::HashSet;
+use std::path::{Path, PathBuf};
+
+use hfl::allocation::SolverOpts;
+use hfl::assignment::random::RoundRobin;
+use hfl::assignment::{evaluate, Assignment};
+use hfl::faults::{upload_times, FaultPlan, FaultProfile, FaultSession};
+use hfl::fl::{HflConfig, HflTrainer};
+use hfl::policy::assigners::FromAssigner;
+use hfl::policy::{assign, sched, PolicyRegistry, SchedEnv};
+use hfl::runtime::NativeBackend;
+use hfl::scenario::{
+    merge_dirs, CsvSink, JsonlSink, MultiSink, RecordSink, RunOpts, ScenarioSpec, Shard,
+    SweepMode, SweepPlan,
+};
+use hfl::system::{SystemParams, Topology};
+use hfl::util::Rng;
+
+/// A small cost-mode grid under a hard lossy profile: dropout every other
+/// upload on average so every fault column is exercised within 4 rounds.
+fn lossy_spec(name: &str) -> ScenarioSpec {
+    let mut system = SystemParams::default();
+    system.n_devices = 24;
+    let mut faults = FaultProfile::lossy();
+    faults.set("dropout_prob", 0.5).unwrap();
+    ScenarioSpec {
+        name: name.into(),
+        mode: SweepMode::Cost,
+        schedulers: vec![sched("fedavg"), sched("deadline")],
+        assigners: vec![assign("round-robin"), assign("greedy")],
+        h_values: vec![8, 12],
+        seeds: 2,
+        iters: 4,
+        seed: 47,
+        system,
+        faults,
+        ..ScenarioSpec::default()
+    }
+}
+
+fn tmp(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("hfl_faultinj_{tag}_{}", std::process::id()));
+    std::fs::remove_dir_all(&d).ok();
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// Run one plan into `dir` with both sinks, honouring the spec's fault
+/// profile for the column layout (exactly what `hfl sweep` does).
+fn run_plan(plan: &SweepPlan, dir: &Path, threads: usize) -> String {
+    let stem = plan.output_stem();
+    let fault_cols = plan.spec.faults.is_active();
+    let mut csv = CsvSink::create_with(dir, &stem, fault_cols).unwrap();
+    let mut jsonl = JsonlSink::create_with(dir, &stem, fault_cols).unwrap();
+    let mut sink = MultiSink::new(vec![
+        &mut csv as &mut dyn RecordSink,
+        &mut jsonl as &mut dyn RecordSink,
+    ]);
+    let opts = RunOpts {
+        manifest: Some(dir.join(format!("sweep_{stem}.manifest"))),
+        resume: false,
+        abort_after: None,
+    };
+    let backend = NativeBackend::new();
+    if threads <= 1 {
+        plan.run_serial(Some(&backend), &mut sink, &opts).unwrap();
+    } else {
+        plan.run_parallel(Some(&backend), threads, &mut sink, &opts).unwrap();
+    }
+    stem
+}
+
+const SUFFIXES: [&str; 4] = [".csv", "_summary.csv", ".jsonl", "_summary.jsonl"];
+
+fn read(dir: &Path, stem: &str, suffix: &str) -> String {
+    let p = dir.join(format!("sweep_{stem}{suffix}"));
+    std::fs::read_to_string(&p).unwrap_or_else(|e| panic!("missing {}: {e}", p.display()))
+}
+
+#[test]
+fn lossy_fault_traces_are_byte_identical_across_threads_and_shards() {
+    let serial_dir = tmp("lossy_serial");
+    let plan = SweepPlan::new(lossy_spec("lossy")).unwrap();
+    run_plan(&plan, &serial_dir, 1);
+
+    // same plan, 4 rayon workers
+    let par_dir = tmp("lossy_par");
+    run_plan(&plan, &par_dir, 4);
+
+    // 2 shards run out of order, then merged
+    let shard_dir = tmp("lossy_shards");
+    for i in (0..2usize).rev() {
+        let p = SweepPlan::sharded(lossy_spec("lossy"), Shard { index: i, count: 2 }).unwrap();
+        run_plan(&p, &shard_dir, if i == 0 { 4 } else { 1 });
+    }
+    let merged_dir = tmp("lossy_merged");
+    merge_dirs(&[shard_dir.clone()], Some("lossy"), &merged_dir).unwrap();
+
+    for suffix in SUFFIXES {
+        let want = read(&serial_dir, "lossy", suffix);
+        assert!(!want.is_empty());
+        assert_eq!(
+            read(&par_dir, "lossy", suffix),
+            want,
+            "sweep_lossy{suffix}: 4-thread run diverged from serial"
+        );
+        assert_eq!(
+            read(&merged_dir, "lossy", suffix),
+            want,
+            "sweep_lossy{suffix}: shard+merge diverged from serial"
+        );
+    }
+
+    // the trace must actually be lossy: nonzero drops, retries and a
+    // positive round wall-clock somewhere in the grid — and survivors too
+    let rows = read(&serial_dir, "lossy", ".csv");
+    let header = rows.lines().next().unwrap();
+    assert!(
+        header.ends_with("n_scheduled,completed,dropped,stragglers,round_wall_ms,retries"),
+        "{header}"
+    );
+    let (mut completed, mut dropped, mut retries) = (0u64, 0u64, 0u64);
+    let mut wall_seen = false;
+    for line in rows.lines().skip(1) {
+        let cols: Vec<&str> = line.split(',').collect();
+        let tail = &cols[cols.len() - 5..];
+        completed += tail[0].parse::<u64>().unwrap();
+        dropped += tail[1].parse::<u64>().unwrap();
+        retries += tail[4].parse::<u64>().unwrap();
+        wall_seen |= tail[3].parse::<f64>().unwrap() > 0.0;
+    }
+    assert!(completed > 0, "every upload died — profile too harsh to be a useful trace");
+    assert!(dropped > 0, "a 50% dropout sweep recorded zero drops");
+    assert!(retries > 0, "no device ever came back after a failure");
+    assert!(wall_seen, "round wall-clock never left zero");
+
+    for d in [serial_dir, par_dir, shard_dir, merged_dir] {
+        std::fs::remove_dir_all(&d).ok();
+    }
+}
+
+#[test]
+fn inactive_fault_profiles_keep_the_fault_free_bytes() {
+    // the plain spec: default (none) profile
+    let mut spec = lossy_spec("plain");
+    spec.faults = FaultProfile::none();
+    let plain_dir = tmp("none_plain");
+    let plan = SweepPlan::new(spec).unwrap();
+    run_plan(&plan, &plain_dir, 1);
+
+    // same grid with a *configured but inactive* profile (all probabilities
+    // zero, no deadline): the dormant knobs must not leak into the output
+    let mut spec = lossy_spec("plain");
+    spec.faults = FaultProfile::none();
+    spec.faults.set("straggler_mu", 9.9).unwrap();
+    spec.faults.set("straggler_sigma", 4.0).unwrap();
+    spec.faults.set("quorum", 0.9).unwrap();
+    assert!(!spec.faults.is_active());
+    let dormant_dir = tmp("none_dormant");
+    let plan2 = SweepPlan::new(spec).unwrap();
+    run_plan(&plan2, &dormant_dir, 4);
+
+    for suffix in SUFFIXES {
+        let want = read(&plain_dir, "plain", suffix);
+        assert!(!want.is_empty());
+        assert_eq!(
+            read(&dormant_dir, "plain", suffix),
+            want,
+            "sweep_plain{suffix}: an inactive profile changed the fault-free bytes"
+        );
+    }
+    let header = read(&plain_dir, "plain", ".csv");
+    let header = header.lines().next().unwrap();
+    assert!(header.ends_with("n_scheduled"), "{header}");
+    assert!(!header.contains("round_wall_ms"), "{header}");
+
+    std::fs::remove_dir_all(&plain_dir).ok();
+    std::fs::remove_dir_all(&dormant_dir).ok();
+}
+
+#[test]
+fn dropout_churn_and_outages_never_break_the_partition_property() {
+    let mut params = SystemParams::default();
+    params.n_devices = 30;
+    let topo = Topology::generate(&params, &mut Rng::new(11));
+    let n_edges = topo.edges.len();
+
+    let mut profile = FaultProfile::bursty();
+    profile.set("dropout_prob", 0.3).unwrap();
+    profile.set("churn_prob", 0.25).unwrap();
+    let mut session = FaultSession::new(FaultPlan::new(profile, 1234), topo.n_devices());
+    let opts = SolverOpts::default();
+
+    let scheduled: Vec<usize> = (0..topo.n_devices()).collect();
+    let (mut total_completed, mut total_dropped) = (0usize, 0usize);
+    for round in 0..6 {
+        let (eff, _retries) = session.filter(round, &scheduled);
+        let mut groups = vec![Vec::new(); n_edges];
+        for (i, &n) in eff.iter().enumerate() {
+            groups[i % n_edges].push(n);
+        }
+        let assignment = Assignment { groups };
+        let (_cost, sols) = evaluate(&topo, &assignment, &opts);
+        let uploads = upload_times(&topo, &assignment, &sols);
+        let out = session.resolve(round, n_edges, &uploads);
+
+        assert!(out.survivors.is_partition(), "round {round}: duplicate survivor");
+        assert_eq!(out.survivors.groups.len(), n_edges);
+        let eff_set: HashSet<usize> = eff.iter().copied().collect();
+        let dropped_set: HashSet<usize> = out.dropped.iter().map(|&(n, _)| n).collect();
+        let surv: Vec<usize> = out.survivors.groups.iter().flatten().copied().collect();
+        for &n in &surv {
+            assert!(eff_set.contains(&n), "round {round}: survivor {n} was never scheduled");
+            assert!(!dropped_set.contains(&n), "round {round}: {n} both survived and dropped");
+        }
+        for &n in &dropped_set {
+            assert!(eff_set.contains(&n), "round {round}: dropped {n} was never scheduled");
+        }
+        assert_eq!(out.stats.completed, surv.len());
+        // quorum voiding may discard landed uploads, so ≤ rather than ==
+        assert!(out.stats.completed + out.stats.dropped <= eff.len());
+        total_completed += out.stats.completed;
+        total_dropped += out.stats.dropped;
+    }
+    assert!(total_completed > 0, "bursty profile killed every round");
+    assert!(total_dropped > 0, "bursty profile never dropped anything");
+}
+
+#[test]
+fn quorum_loss_rounds_leave_the_global_model_unchanged() {
+    let backend = NativeBackend::new();
+    let mut params = SystemParams::default();
+    params.n_devices = 16;
+    params.model_bits = (backend.manifest().model("fmnist").unwrap().bytes * 8) as f64;
+    let topo = Topology::generate(&params, &mut Rng::new(5));
+    let cfg = HflConfig {
+        dataset: "fmnist".into(),
+        h: 16, // everyone scheduled, so the quorum loss is total
+        lr: 0.05,
+        target_acc: 1.0,
+        max_iters: 2,
+        test_size: 64,
+        frac_major: 0.8,
+        seed: 5,
+    };
+    let mut trainer = HflTrainer::new(&backend, cfg, topo).unwrap();
+
+    // a deadline no upload can meet: every round times out in full
+    let mut profile = FaultProfile::none();
+    profile.set("deadline_ms", 1e-6).unwrap();
+    assert!(profile.is_active());
+    let plan = FaultPlan::new(profile, 99);
+
+    let reg = PolicyRegistry::global();
+    let mut sched = reg
+        .scheduler(&reg.sched_key("fedavg").unwrap(), &SchedEnv { seed: 3 })
+        .unwrap();
+    let mut assigner = FromAssigner::new(RoundRobin, "round-robin");
+    let res = trainer
+        .run_policies_with(
+            &mut *sched,
+            &mut assigner,
+            None,
+            3,
+            &SolverOpts::default(),
+            Some(&plan),
+            |_| {},
+        )
+        .unwrap();
+
+    assert_eq!(res.records.len(), 2);
+    for r in &res.records {
+        let f = r.faults.expect("active plan must stamp fault stats");
+        assert!(f.aborted, "iter {}: total deadline loss must abort the round", r.iter);
+        assert_eq!(f.completed, 0, "iter {}", r.iter);
+        assert_eq!(f.dropped, 16, "iter {}: every upload must time out", r.iter);
+        assert_eq!(r.train_loss, 0.0, "iter {}: aborted round must skip training", r.iter);
+    }
+    // backoff base 1 ⇒ everyone is eligible again next round, all retrying
+    assert_eq!(res.records[0].faults.unwrap().retries, 0);
+    assert_eq!(res.records[1].faults.unwrap().retries, 16);
+    // the global model never moved, so the accuracy curve is flat
+    assert_eq!(
+        res.records[0].accuracy, res.records[1].accuracy,
+        "aborted rounds must not touch the global model"
+    );
+    assert!(res.converged_at.is_none());
+}

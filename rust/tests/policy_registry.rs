@@ -27,6 +27,16 @@ fn every_scheduler_key_round_trips_through_parse_and_instantiate() {
         ("ikc", "ikc", "ikc"),
         ("channel", "channel", "channel"),
         ("channel?share_hz=200000", "channel?share_hz=200000", "channel?share_hz=200000"),
+        (
+            "deadline",
+            "deadline?ms=1000&relay=nearest",
+            "deadline?ms=1000&relay=nearest",
+        ),
+        (
+            "deadline?ms=250",
+            "deadline?ms=250&relay=nearest",
+            "deadline?ms=250&relay=nearest",
+        ),
     ];
     for (input, canonical, name) in cases {
         let key = reg.sched_key(input).unwrap_or_else(|e| panic!("{input}: {e}"));
