@@ -1,0 +1,283 @@
+"""Toolchain-less oracle for the exact branch-and-bound assigner (PR 8).
+
+Literal stdlib-only transcription of ``rust/src/allocation/exact/mod.rs``:
+
+* the admissible cheapest-marginal lower bound (each unassigned slot
+  priced at its minimum marginal over candidate edges, marginals taken
+  at the node's current per-edge masks);
+* best-first frontier ordering with deterministic ``(bound, node_id)``
+  tie-breaks (smaller bound first, then smaller id);
+* the greedy constructive incumbent seed (strict ``<`` first-min
+  tie-break);
+* the full pop trace of the shared 3-slot / 2-edge supermodular table
+  fixture, pinned bit-for-bit against the constants asserted by the Rust
+  unit test ``exact::tests::mirror_trace_is_pinned``.
+
+Every fixture value is a multiple of 0.25 (exactly representable in
+binary floating point), so the cross-language pins use ``==`` — no
+tolerance. A reordered pop, changed tie-break, or edited fixture fails
+here without compiling any Rust.
+
+Run: cd python && python3 -m pytest tests/test_exact_oracle_mirror.py
+"""
+import heapq
+import math
+
+INF = float("inf")
+
+
+# ------------- allocation/exact/mod.rs::tests::TableCost -------------
+#
+# cost(m, mask) = w[m]*k + q[m]*k*(k-1)/2 + sum(a[s][m] for s in mask),
+# k = popcount(mask). Supermodular for q >= 0: the marginal of adding a
+# slot to a size-k group is w[m] + q[m]*k + a[s][m], non-decreasing in k.
+
+class TableCost:
+    def __init__(self, w, q, a, cands):
+        self.w = w
+        self.q = q
+        self.a = a
+        self.cands = cands
+
+    @property
+    def n_slots(self):
+        return len(self.a)
+
+    @property
+    def n_edges(self):
+        return len(self.w)
+
+    def group_cost(self, m, mask):
+        k = bin(mask).count("1")
+        c = self.w[m] * k + self.q[m] * k * (k - 1) / 2
+        s = 0
+        bits = mask
+        while bits:
+            s = (bits & -bits).bit_length() - 1
+            c += self.a[s][m]
+            bits &= bits - 1
+        return c
+
+
+def mirror_fixture():
+    """Keep in sync with exact::tests::mirror_fixture (mod.rs)."""
+    return TableCost(
+        w=[1.0, 1.0],
+        q=[1.0, 0.0],
+        a=[[0.0, 0.25], [0.0, 2.0], [0.0, 2.0]],
+        cands=[[0, 1], [0, 1], [0, 1]],
+    )
+
+
+# ------------- greedy_seed (the incumbent constructor) -------------
+
+def greedy_seed(t):
+    masks = [0] * t.n_edges
+    choices = []
+    for s in range(t.n_slots):
+        best_m, best_delta = None, INF
+        for m in t.cands[s]:
+            delta = t.group_cost(m, masks[m] | (1 << s)) - t.group_cost(m, masks[m])
+            if delta < best_delta:  # strict <: first minimum wins ties
+                best_delta, best_m = delta, m
+        masks[best_m] |= 1 << s
+        choices.append(best_m)
+    total = sum(t.group_cost(m, masks[m]) for m in range(t.n_edges))
+    return choices, total
+
+
+# ------------- branch_and_bound_traced transcription -------------
+
+def row_min(row):
+    return min(row)
+
+
+def branch_and_bound(t, node_budget=100_000):
+    n, m_count = t.n_slots, t.n_edges
+    if n == 0:
+        return dict(choices=[], objective=0.0, lower_bound=0.0, proven=True,
+                    nodes_expanded=0, trace=[])
+    best_choices, best_obj = greedy_seed(t)
+
+    # Root marginal matrix: rows = slots, non-candidate entries = inf.
+    marg = [[INF] * m_count for _ in range(n)]
+    for s in range(n):
+        for m in t.cands[s]:
+            marg[s][m] = t.group_cost(m, 1 << s) - t.group_cost(m, 0)
+    root_bound = sum(row_min(r) for r in marg)
+
+    SLACK = 1e-9
+    heap = []
+    next_id = 0
+    # node tuple: (bound, id, depth, choices, masks, partial, marg)
+    heapq.heappush(heap, (root_bound, next_id, 0, [], [0] * m_count, 0.0, marg))
+    next_id += 1
+    expanded = 0
+    trace = []
+    while heap:
+        bound, nid, depth, choices, masks, partial, marg = heapq.heappop(heap)
+        if bound >= best_obj - SLACK * abs(best_obj):
+            break  # frontier min can't beat the incumbent: proven
+        if expanded >= node_budget:
+            return dict(choices=best_choices, objective=best_obj,
+                        lower_bound=min(bound, best_obj), proven=False,
+                        nodes_expanded=expanded, trace=trace)
+        expanded += 1
+        trace.append((nid, depth, bound))
+        s = depth
+        for e in t.cands[s]:
+            delta = marg[0][e]
+            child_partial = partial + delta
+            child_depth = depth + 1
+            if child_depth == n:
+                obj = 0.0
+                for m in range(m_count):
+                    mask = masks[m] | ((1 << s) if m == e else 0)
+                    obj += t.group_cost(m, mask)
+                if obj < best_obj:
+                    best_obj = obj
+                    best_choices = choices + [e]
+                continue
+            rows = n - child_depth
+            cmarg = [list(marg[r + 1]) for r in range(rows)]
+            child_mask_e = masks[e] | (1 << s)
+            base_e = t.group_cost(e, child_mask_e)
+            for r in range(rows):
+                slot = child_depth + r
+                if e in t.cands[slot]:
+                    cmarg[r][e] = t.group_cost(e, child_mask_e | (1 << slot)) - base_e
+                else:
+                    cmarg[r][e] = INF
+            child_bound = child_partial + sum(row_min(r) for r in cmarg)
+            if child_bound >= best_obj - SLACK * abs(best_obj):
+                continue  # prune
+            cmasks = list(masks)
+            cmasks[e] = child_mask_e
+            heapq.heappush(
+                heap, (child_bound, next_id, child_depth, choices + [e],
+                       cmasks, child_partial, cmarg))
+            next_id += 1
+    return dict(choices=best_choices, objective=best_obj, lower_bound=best_obj,
+                proven=True, nodes_expanded=expanded, trace=trace)
+
+
+def enumerate_best(t):
+    """Exhaustive reference (mirrors bruteforce::enumerate_assignments)."""
+    best_obj, best_choices = INF, None
+    n, m_count = t.n_slots, t.n_edges
+
+    def rec(s, masks, choices):
+        nonlocal best_obj, best_choices
+        if s == n:
+            obj = sum(t.group_cost(m, masks[m]) for m in range(m_count))
+            if obj < best_obj:
+                best_obj, best_choices = obj, list(choices)
+            return
+        for e in t.cands[s]:
+            masks[e] |= 1 << s
+            choices.append(e)
+            rec(s + 1, masks, choices)
+            choices.pop()
+            masks[e] &= ~(1 << s)
+
+    rec(0, [0] * m_count, [])
+    return best_choices, best_obj
+
+
+# ----------------------------- pins -----------------------------
+
+def test_lower_bound_is_admissible_on_fixture():
+    """Root bound <= every complete assignment's objective."""
+    t = mirror_fixture()
+    marg = [[t.group_cost(m, 1 << s) if m in t.cands[s] else INF
+             for m in range(t.n_edges)] for s in range(t.n_slots)]
+    root_bound = sum(min(r) for r in marg)
+    assert root_bound == 3.0  # min(1,1.25)+min(1,3)+min(1,3)
+    _, best = enumerate_best(t)
+    assert root_bound <= best
+
+
+def test_greedy_seed_pins():
+    t = mirror_fixture()
+    choices, obj = greedy_seed(t)
+    # Myopic pile-up on congested edge 0; slot 2 ties (delta 3.0 on both
+    # edges) and the strict-< first-min keeps edge 0.
+    assert choices == [0, 0, 0]
+    assert obj == 6.0
+
+
+def test_bnb_trace_pins():
+    """The exact constants asserted by exact::tests::mirror_trace_is_pinned."""
+    t = mirror_fixture()
+    res = branch_and_bound(t)
+    assert res["objective"] == 4.25
+    assert res["choices"] == [1, 0, 0]
+    assert res["proven"] is True
+    assert res["lower_bound"] == 4.25
+    assert res["trace"] == [(0, 0, 3.0), (2, 1, 3.25), (3, 2, 4.25)]
+    assert res["nodes_expanded"] == 3
+
+
+def test_bnb_matches_enumeration():
+    t = mirror_fixture()
+    res = branch_and_bound(t)
+    choices, obj = enumerate_best(t)
+    assert res["objective"] == obj
+    assert res["choices"] == choices
+
+
+def test_budget_degrades_to_greedy_incumbent():
+    t = mirror_fixture()
+    res = branch_and_bound(t, node_budget=1)
+    assert res["proven"] is False
+    assert res["choices"] == [0, 0, 0]  # greedy incumbent, still valid
+    assert res["objective"] == 6.0
+    assert res["lower_bound"] == 3.25  # smallest open bound at exhaustion
+    assert res["lower_bound"] <= res["objective"]
+
+
+def tie_fixture():
+    """Fully symmetric 3-slot / 2-edge table: the root's two children tie
+    at bound 3.0, so the pop order pins the (bound, node_id) rule. Keep
+    in sync with exact::tests::equal_bound_ties_pop_in_id_order."""
+    return TableCost(
+        w=[1.0, 1.0],
+        q=[1.0, 1.0],
+        a=[[0.0, 0.0], [0.0, 0.0], [0.0, 0.0]],
+        cands=[[0, 1], [0, 1], [0, 1]],
+    )
+
+
+def test_tie_breaks_prefer_lower_node_id():
+    """Equal-bound frontier nodes pop in creation (id) order."""
+    t = tie_fixture()
+    res = branch_and_bound(t)
+    # Greedy seeds [0, 1, 0] (slot 0 and the slot-2 tie both resolve to
+    # edge 0 by strict <): F = cost0({0,2}) + cost1({1}) = 3 + 1 = 4.0,
+    # which is optimal (any 2+1 split costs 4). The search still opens
+    # the root's twin children (both bound 3.0) and must pop id 1 before
+    # id 2; every grandchild bounds to 4.0 and prunes.
+    assert res["objective"] == 4.0
+    assert res["choices"] == [0, 1, 0]
+    assert res["proven"] is True
+    assert res["trace"] == [(0, 0, 3.0), (1, 1, 3.0), (2, 1, 3.0)]
+    assert res["nodes_expanded"] == 3
+
+
+def test_supermodular_marginals_never_decrease():
+    """The admissibility precondition on the fixture: marginals of a slot
+    on an edge are non-decreasing in the host group (mask inclusion)."""
+    t = mirror_fixture()
+    n, m_count = t.n_slots, t.n_edges
+    for m in range(m_count):
+        for s in range(n):
+            for mask in range(1 << n):
+                if mask & (1 << s):
+                    continue
+                for other in range(n):
+                    bigger = mask | (1 << other)
+                    if bigger == mask or bigger & (1 << s):
+                        continue
+                    small = t.group_cost(m, mask | (1 << s)) - t.group_cost(m, mask)
+                    large = t.group_cost(m, bigger | (1 << s)) - t.group_cost(m, bigger)
+                    assert large >= small

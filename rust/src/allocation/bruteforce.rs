@@ -1,12 +1,111 @@
-//! Brute-force grid oracle for problem (27) — tests only.
+//! Brute-force oracles: a bandwidth-grid check for the per-edge solver
+//! and an exhaustive assignment-space enumerator for the exact subsystem.
 //!
-//! For ≤3 devices: grid over the bandwidth simplex; for each bandwidth
-//! vector the remaining problem is 1-D convex in the round time τ
-//! (frequencies are closed-form given τ), solved by fine golden-section.
-//! The solver in `solver.rs` must match this within a small relative gap.
+//! * [`solve_bruteforce`] — for ≤3 devices: grid over the bandwidth
+//!   simplex; for each bandwidth vector the remaining problem is 1-D
+//!   convex in the round time τ (frequencies are closed-form given τ),
+//!   solved by fine golden-section. The solver in `solver.rs` must match
+//!   this within a small relative gap (tests).
+//! * [`enumerate_assignments`] / [`enumerate_topology`] — the M^N sweep
+//!   over device→edge choices that the branch-and-bound in
+//!   `allocation/exact` must agree with bit-for-bit. Runs through the
+//!   same [`AssignCost`] table (memoized edge-subset solves), guarded by
+//!   an N·M^N work budget so a mis-sized call fails loudly instead of
+//!   spinning.
 
+use crate::allocation::exact::{AssignCost, SolverCost, MAX_EXACT_DEVICES};
+use crate::allocation::SolverOpts;
+use crate::assignment::Assignment;
 use crate::system::cost::{cloud_cost, edge_cost, DeviceAlloc};
 use crate::system::Topology;
+
+/// Exhaustively enumerate every device→edge assignment over the cost
+/// table's candidate lists and return the argmin `(choices, objective)`
+/// (strict `<`: the lexicographically-first optimum wins ties, matching
+/// the deterministic candidate order). Returns `None` — rather than
+/// hanging — when the N·M^N leaf-evaluation work estimate exceeds
+/// `budget`. Objectives are re-folded sums of per-edge group costs, so a
+/// proven branch-and-bound run over the same table yields bit-identical
+/// floats.
+pub fn enumerate_assignments(
+    eval: &mut dyn AssignCost,
+    budget: u64,
+) -> Option<(Vec<usize>, f64)> {
+    let n = eval.n_slots();
+    let m_count = eval.n_edges();
+    if n > MAX_EXACT_DEVICES {
+        return None;
+    }
+    // Work estimate: N · Π |candidates(s)| (saturating — huge is huge).
+    let mut leaves: u64 = 1;
+    for s in 0..n {
+        leaves = leaves.saturating_mul(eval.candidates(s).len().max(1) as u64);
+    }
+    if (n as u64).saturating_mul(leaves) > budget {
+        return None;
+    }
+    if n == 0 {
+        return Some((vec![], 0.0));
+    }
+
+    let mut best_obj = f64::INFINITY;
+    let mut best_choices: Vec<usize> = vec![];
+    let mut choices: Vec<usize> = Vec::with_capacity(n);
+    let mut masks = vec![0u64; m_count];
+    // Depth-first product of candidate lists, lexicographic over the
+    // per-slot candidate order.
+    fn rec(
+        eval: &mut dyn AssignCost,
+        s: usize,
+        n: usize,
+        masks: &mut Vec<u64>,
+        choices: &mut Vec<usize>,
+        best_obj: &mut f64,
+        best_choices: &mut Vec<usize>,
+    ) {
+        if s == n {
+            let mut obj = 0.0;
+            for m in 0..masks.len() {
+                obj += eval.group_cost(m, masks[m]);
+            }
+            if obj.total_cmp(best_obj) == std::cmp::Ordering::Less {
+                *best_obj = obj;
+                *best_choices = choices.clone();
+            }
+            return;
+        }
+        for &e in &eval.candidates(s).to_vec() {
+            masks[e] |= 1 << s;
+            choices.push(e);
+            rec(eval, s + 1, n, masks, choices, best_obj, best_choices);
+            choices.pop();
+            masks[e] &= !(1 << s);
+        }
+    }
+    rec(eval, 0, n, &mut masks, &mut choices, &mut best_obj, &mut best_choices);
+    Some((best_choices, best_obj))
+}
+
+/// [`enumerate_assignments`] over a real topology: builds the same
+/// memoized [`SolverCost`] table the exact solver uses and materializes
+/// the argmin as an [`Assignment`] (groups in scheduled order).
+pub fn enumerate_topology(
+    topo: &Topology,
+    scheduled: &[usize],
+    opts: &SolverOpts,
+    budget: u64,
+) -> Option<(Assignment, f64)> {
+    if scheduled.len() > MAX_EXACT_DEVICES {
+        return None;
+    }
+    let mut eval = SolverCost::new(topo, scheduled, opts);
+    let (choices, obj) = enumerate_assignments(&mut eval, budget)?;
+    let mut a = Assignment::empty(topo.edges.len());
+    for (slot, &m) in choices.iter().enumerate() {
+        a.groups[m].push(scheduled[slot]);
+    }
+    Some((a, obj))
+}
 
 /// Evaluate the exact objective for a fixed bandwidth split by optimizing
 /// τ (and hence f) by golden-section.

@@ -179,6 +179,14 @@ impl CostCache {
         IterCost { t, e }
     }
 
+    /// Objective of edge `m` serving exactly `group` (no state change) —
+    /// the exact oracle's leaf evaluator. A pure function of
+    /// `(topo, m, group)` including member order, which is why the oracle
+    /// canonicalizes groups into scheduled order before calling.
+    pub fn eval_group_objective(&mut self, topo: &Topology, m: usize, group: &[usize]) -> f64 {
+        self.eval_group(topo, m, group).0
+    }
+
     /// Objective of edge `m` with `dev` removed (no state change).
     pub fn eval_remove(&mut self, topo: &Topology, m: usize, dev: usize) -> f64 {
         self.scratch.clear();

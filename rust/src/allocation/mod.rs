@@ -2,13 +2,18 @@
 //! and CPU frequency `f_n` for the devices assigned to one edge server.
 //!
 //! `solver` is the production epigraph solver (replaces the paper's CVXPY,
-//! DESIGN.md §5); `bruteforce` is the grid oracle used by the test suite;
-//! `cache` is the incremental objective-(17) evaluator that lets search
-//! loops re-solve only the edges a candidate move touches.
+//! DESIGN.md §5); `bruteforce` holds the exhaustive oracles — a bandwidth
+//! grid check for the solver and an assignment-space enumerator for the
+//! exact subsystem; `cache` is the incremental objective-(17) evaluator
+//! that lets search loops re-solve only the edges a candidate move
+//! touches; `exact` is the branch-and-bound assignment oracle built on
+//! both (DESIGN.md §12).
 
 pub mod bruteforce;
 pub mod cache;
+pub mod exact;
 pub mod solver;
 
 pub use cache::CostCache;
+pub use exact::{branch_and_bound, AssignCost, ExactOpts, ExactResult, ExactSolve, SolverCost};
 pub use solver::{solve_edge, AllocSolution, SolverOpts};

@@ -32,7 +32,7 @@ commands:
                              see `hfl policies`)
   sweep [preset|spec.toml]  scenario sweep: run a scheduler × assigner × H
                             grid, rayon-parallel on the native backend
-                            (presets: grid fig3 fig4 fig6 fig7 burst;
+                            (presets: grid fig3 fig4 fig6 fig7 burst oracle_smoke;
                              --threads N  --iters N  --seeds N
                              --h-values 10,30  --mode cost|train
                              --schedulers k1,k2  --assigners k1,k2
@@ -42,7 +42,15 @@ commands:
                              fault injection: stragglers, dropouts, edge
                              outages, churn, deadlines (DESIGN.md §11);
                              TOML specs take a [faults] table for
-                             per-field overrides)
+                             per-field overrides
+                             --oracle  per-round branch-and-bound reference
+                             solve, appending opt_obj/opt_gap/oracle_proven
+                             columns (cost mode; DESIGN.md §12); knobs:
+                             --oracle-nodes N  node-expansion budget
+                             --oracle-max-n N  skip rounds with more than
+                                           N scheduled devices (≤64);
+                             TOML specs take oracle = true / an [oracle]
+                             table)
                             orchestration (cells stream to disk as they
                             finish; output bytes are identical for any
                             thread count / shard split):
@@ -321,6 +329,23 @@ fn cmd_sweep(args: &Args, cfg: &Config) -> anyhow::Result<()> {
     if let Some(f) = args.opt("faults") {
         spec.faults = FaultProfile::preset(f)?;
     }
+    // --oracle switches on the per-round branch-and-bound reference solve
+    // (opt_obj/opt_gap/oracle_proven columns); a knob alone also enables it
+    if args.flag("oracle") && spec.oracle.is_none() {
+        spec.oracle = Some(scenario::OracleCfg::default());
+    }
+    let oracle_nodes = args.get_usize("oracle-nodes", 0)?;
+    let oracle_max_n = args.get_usize("oracle-max-n", 0)?;
+    if oracle_nodes > 0 || oracle_max_n > 0 {
+        let mut o = spec.oracle.take().unwrap_or_default();
+        if oracle_nodes > 0 {
+            o.nodes = oracle_nodes;
+        }
+        if oracle_max_n > 0 {
+            o.max_devices = oracle_max_n;
+        }
+        spec.oracle = Some(o);
+    }
     spec.iters = args.get_usize("iters", spec.iters)?;
     // explicit CLI shaping wins over TOML profile values (a TOML spec
     // otherwise re-overrides what load_config read into cfg)
@@ -386,15 +411,18 @@ fn cmd_sweep(args: &Args, cfg: &Config) -> anyhow::Result<()> {
         let kind = kind.trim();
         anyhow::ensure!(!kinds_seen.contains(&kind), "--sink lists {kind} twice");
         kinds_seen.push(kind);
-        // an active fault profile adds the fault columns; `none` keeps the
-        // classic (byte-identical) headers
-        let fault_cols = plan.spec.faults.is_active();
+        // each opt-in column family appears only when its feature is
+        // active; with both off the classic headers stay byte-identical
+        let extra = scenario::ExtraCols {
+            faults: plan.spec.faults.is_active(),
+            oracle: plan.spec.oracle.is_some(),
+        };
         let (sink, rows, summary): (Box<dyn scenario::RecordSink>, _, _) = match kind {
             "csv" => {
                 let s = if resuming {
-                    scenario::CsvSink::append_with(out_dir, &stem, fault_cols)?
+                    scenario::CsvSink::append_ext(out_dir, &stem, extra)?
                 } else {
-                    scenario::CsvSink::create_with(out_dir, &stem, fault_cols)?
+                    scenario::CsvSink::create_ext(out_dir, &stem, extra)?
                 };
                 let (r, su) = s.paths();
                 let (r, su) = (r.to_path_buf(), su.to_path_buf());
@@ -402,9 +430,9 @@ fn cmd_sweep(args: &Args, cfg: &Config) -> anyhow::Result<()> {
             }
             "jsonl" => {
                 let s = if resuming {
-                    scenario::JsonlSink::append_with(out_dir, &stem, fault_cols)?
+                    scenario::JsonlSink::append_ext(out_dir, &stem, extra)?
                 } else {
-                    scenario::JsonlSink::create_with(out_dir, &stem, fault_cols)?
+                    scenario::JsonlSink::create_ext(out_dir, &stem, extra)?
                 };
                 let (r, su) = s.paths();
                 let (r, su) = (r.to_path_buf(), su.to_path_buf());

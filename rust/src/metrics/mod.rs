@@ -22,6 +22,25 @@ pub struct IterRecord {
     pub faults: Option<crate::faults::RoundFaults>,
 }
 
+/// Per-round optimality-gap instrumentation (`--oracle` on `hfl sweep`):
+/// a branch-and-bound reference solve of the round's scheduled set run in
+/// parallel with the configured assigner (DESIGN.md §12). `None` rows —
+/// oracle off, or the cell exceeded the size cap — emit empty CSV fields
+/// so classic headers and bytes stay untouched.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RoundOracle {
+    /// Best surrogate objective F the oracle found (the proven optimum
+    /// when `proven`, else the best incumbent within budget).
+    pub opt_obj: f64,
+    /// Relative gap of the committed assignment: (F_arm − opt_obj) /
+    /// opt_obj. Exactly 0.0 for the `oracle` assigner itself; ≥ 0 for
+    /// every assigner whenever `proven` (an unproven incumbent can be
+    /// beaten, showing up as a negative gap).
+    pub opt_gap: f64,
+    /// Whether the branch-and-bound closed the tree within budget.
+    pub proven: bool,
+}
+
 /// A complete HFL run (one seed).
 #[derive(Clone, Debug, Default)]
 pub struct RunResult {

@@ -1,11 +1,13 @@
 //! Assignment policies: adapters over the paper's concrete assigners
-//! (D³QN / HFEL / geographic / round-robin / random) plus the two new
-//! strategies shipped through the open policy API — the cost-aware greedy
-//! assigner and the sticky/static assigner.
+//! (D³QN / HFEL / geographic / round-robin / random) plus the strategies
+//! shipped through the open policy API — the cost-aware greedy assigner,
+//! the sticky/static assigner, the exact branch-and-bound `oracle`, and
+//! the `portfolio` meta-assigner that races several arms per round.
 
 use std::collections::HashMap;
 
 use super::{AssignPolicy, PolicyCtx};
+use crate::allocation::exact::{self, ExactOpts};
 use crate::allocation::{CostCache, SolverOpts};
 use crate::assignment::drl::DrlAssigner;
 use crate::assignment::{Assigner, Assignment};
@@ -147,6 +149,81 @@ impl AssignPolicy for StickyAssign<'_> {
             })
             .collect();
         Ok(Assignment::from_pairs(ctx.topo.edges.len(), &pairs))
+    }
+
+    fn name(&self) -> String {
+        self.label.clone()
+    }
+}
+
+/// Exact branch-and-bound assigner (`oracle?nodes=N&fallback=KEY`): solves
+/// the joint assignment problem to proven optimality on cells that fit
+/// the 64-device mask (DESIGN.md §12), and delegates larger cells to the
+/// configured fallback heuristic. Budget-exhausted solves still commit
+/// the best incumbent (a valid partition) — they just aren't proven.
+pub struct OracleAssign<'e> {
+    exact: ExactOpts,
+    opts: SolverOpts,
+    fallback: Box<dyn AssignPolicy + 'e>,
+    label: String,
+}
+
+impl<'e> OracleAssign<'e> {
+    pub fn new(exact: ExactOpts, fallback: Box<dyn AssignPolicy + 'e>, label: impl Into<String>) -> Self {
+        OracleAssign { exact, opts: SolverOpts::default(), fallback, label: label.into() }
+    }
+}
+
+impl AssignPolicy for OracleAssign<'_> {
+    fn assign(&mut self, ctx: &PolicyCtx, scheduled: &[usize]) -> anyhow::Result<Assignment> {
+        match exact::solve_assignment(ctx.topo, scheduled, &self.opts, &self.exact) {
+            Some(solve) => Ok(solve.assignment),
+            None => self.fallback.assign(ctx, scheduled), // > 64 devices
+        }
+    }
+
+    fn name(&self) -> String {
+        self.label.clone()
+    }
+}
+
+/// Portfolio meta-assigner (`portfolio?arms=a+b+c`): every round, run all
+/// arm policies on the scheduled set, price each proposal's separable
+/// surrogate Σ_m (E_m + λ·T_m) through a [`CostCache`], and commit the
+/// argmin (strict `<`: the earliest-listed arm wins ties). Per-arm win
+/// counts accumulate in [`super::RoundHistory::arm_wins`].
+pub struct PortfolioAssign<'e> {
+    arms: Vec<Box<dyn AssignPolicy + 'e>>,
+    opts: SolverOpts,
+    label: String,
+}
+
+impl<'e> PortfolioAssign<'e> {
+    pub fn new(arms: Vec<Box<dyn AssignPolicy + 'e>>, label: impl Into<String>) -> Self {
+        PortfolioAssign { arms, opts: SolverOpts::default(), label: label.into() }
+    }
+}
+
+impl AssignPolicy for PortfolioAssign<'_> {
+    fn assign(&mut self, ctx: &PolicyCtx, scheduled: &[usize]) -> anyhow::Result<Assignment> {
+        let mut cache = CostCache::new_solver(ctx.topo.params.lambda, self.opts.clone());
+        let mut best: Option<(f64, Assignment, usize)> = None;
+        for (i, arm) in self.arms.iter_mut().enumerate() {
+            let a = arm.assign(ctx, scheduled)?;
+            cache.reset(ctx.topo, &a.groups);
+            let f = cache.surrogate_total();
+            let better = match &best {
+                None => true,
+                Some((fb, _, _)) => f.total_cmp(fb) == std::cmp::Ordering::Less,
+            };
+            if better {
+                best = Some((f, a, i));
+            }
+        }
+        let (_, assignment, winner) =
+            best.ok_or_else(|| anyhow::anyhow!("{}: no arms configured", self.label))?;
+        ctx.history.record_arm_win(&self.arms[winner].name());
+        Ok(assignment)
     }
 
     fn name(&self) -> String {

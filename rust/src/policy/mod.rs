@@ -75,6 +75,12 @@ pub struct RoundHistory {
     /// Cumulative per-device upload-failure counts under fault injection
     /// (index = device id); empty when the run is fault-free.
     pub failures: Vec<u32>,
+    /// Per-arm win counts recorded by the `portfolio` meta-assigner
+    /// (canonical arm key → rounds won). Interior-mutable because
+    /// assigners only hold `&RoundHistory` through [`PolicyCtx`]; a
+    /// `BTreeMap` so iteration order is deterministic. Cells run
+    /// single-threaded, so the `RefCell` is uncontended.
+    arm_wins: std::cell::RefCell<std::collections::BTreeMap<String, u64>>,
 }
 
 impl RoundHistory {
@@ -93,6 +99,18 @@ impl RoundHistory {
 
     pub fn rounds(&self) -> usize {
         self.scheduled.len()
+    }
+
+    /// Credit one round win to `arm` (called by the portfolio assigner
+    /// through the shared `&RoundHistory`).
+    pub fn record_arm_win(&self, arm: &str) {
+        *self.arm_wins.borrow_mut().entry(arm.to_string()).or_insert(0) += 1;
+    }
+
+    /// Snapshot of the portfolio win counts (arm key → rounds won);
+    /// empty when no portfolio assigner ran.
+    pub fn arm_wins(&self) -> std::collections::BTreeMap<String, u64> {
+        self.arm_wins.borrow().clone()
     }
 
     pub fn last_assignment(&self) -> Option<&Assignment> {

@@ -33,7 +33,9 @@
 use std::path::PathBuf;
 use std::sync::{Arc, OnceLock, RwLock};
 
-use super::assigners::{D3qnPolicy, FromAssigner, GreedyCost, StickyAssign};
+use super::assigners::{
+    D3qnPolicy, FromAssigner, GreedyCost, OracleAssign, PortfolioAssign, StickyAssign,
+};
 use super::key::PolicyKey;
 use super::schedulers::{ChannelTopH, DeadlineSched, FedAvgPolicy, IkcPolicy, VkcPolicy};
 use super::{AssignPolicy, SchedulePolicy};
@@ -547,6 +549,36 @@ impl PolicyRegistry {
                     needs_backend: false,
                     factory: assign_static,
                 },
+                AssignEntry {
+                    name: "oracle",
+                    aliases: &[],
+                    summary: "exact branch-and-bound on objective (17); proven-optimal small cells",
+                    params: &[
+                        ParamSpec {
+                            key: "nodes",
+                            help: "node budget before degrading to the best incumbent (default 100000)",
+                        },
+                        ParamSpec {
+                            key: "fallback",
+                            help: "assigner key for cells beyond the 64-device exact limit (default greedy)",
+                        },
+                    ],
+                    defaults: &[("fallback", "greedy"), ("nodes", "100000")],
+                    needs_backend: false,
+                    factory: assign_oracle,
+                },
+                AssignEntry {
+                    name: "portfolio",
+                    aliases: &[],
+                    summary: "race every arm per round; commit the argmin-cost assignment",
+                    params: &[ParamSpec {
+                        key: "arms",
+                        help: "'+'-separated assigner keys to race (default greedy+round-robin)",
+                    }],
+                    defaults: &[("arms", "greedy+round-robin")],
+                    needs_backend: false,
+                    factory: assign_portfolio,
+                },
             ],
         }
     }
@@ -728,6 +760,50 @@ fn assign_static<'e>(
     Ok(Box::new(StickyAssign::new(inner, key.to_string())))
 }
 
+fn assign_oracle<'e>(
+    key: &PolicyKey,
+    env: &AssignEnv<'e>,
+) -> anyhow::Result<Box<dyn AssignPolicy + 'e>> {
+    let nodes = key.usize_or("nodes", 100_000)?;
+    anyhow::ensure!(nodes > 0, "{key}: nodes must be positive");
+    let fb = key.get_str("fallback").unwrap_or("greedy");
+    let fb_key = PolicyRegistry::global().assign_key(fb)?;
+    anyhow::ensure!(
+        fb_key.name != "oracle",
+        "{key}: the oracle cannot fall back to itself"
+    );
+    let fallback = PolicyRegistry::global().assigner(&fb_key, env)?;
+    let exact = crate::allocation::ExactOpts { node_budget: nodes, time_budget_ms: None };
+    Ok(Box::new(OracleAssign::new(exact, fallback, key.to_string())))
+}
+
+fn assign_portfolio<'e>(
+    key: &PolicyKey,
+    env: &AssignEnv<'e>,
+) -> anyhow::Result<Box<dyn AssignPolicy + 'e>> {
+    // Canonical separator is '+' (CSV/awk-friendly: a comma would be
+    // RFC-4180-quoted in the assigner column and break `--assigners`
+    // splitting); ',' is accepted for values that survive quoting.
+    let arms_raw = key.get_str("arms").unwrap_or("greedy+round-robin");
+    let mut arms: Vec<Box<dyn AssignPolicy + 'e>> = Vec::new();
+    for part in arms_raw.split(|c| c == '+' || c == ',') {
+        let part = part.trim();
+        anyhow::ensure!(!part.is_empty(), "{key}: empty arm in arms={arms_raw:?}");
+        let akey = PolicyRegistry::global().assign_key(part)?;
+        anyhow::ensure!(
+            akey.name != "portfolio",
+            "{key}: a portfolio cannot nest another portfolio"
+        );
+        arms.push(PolicyRegistry::global().assigner(&akey, env)?);
+    }
+    anyhow::ensure!(
+        arms.len() >= 2,
+        "{key}: need at least two arms to race (got {})",
+        arms.len()
+    );
+    Ok(Box::new(PortfolioAssign::new(arms, key.to_string())))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -862,5 +938,57 @@ mod tests {
             r.assign_key("static?base=greedy").unwrap().to_string(),
             "static?base=greedy"
         );
+        assert_eq!(
+            r.assign_key("oracle").unwrap().to_string(),
+            "oracle?fallback=greedy&nodes=100000"
+        );
+        assert_eq!(
+            r.assign_key("portfolio").unwrap().to_string(),
+            "portfolio?arms=greedy+round-robin"
+        );
+    }
+
+    fn plain_env() -> AssignEnv<'static> {
+        AssignEnv {
+            backend: None,
+            default_ckpt: None,
+            expect_edges: None,
+            seed: 0,
+            system: None,
+        }
+    }
+
+    #[test]
+    fn oracle_validates_budget_and_refuses_self_fallback() {
+        let r = PolicyRegistry::global();
+        let env = plain_env();
+        assert!(r.assigner(&r.assign_key("oracle").unwrap(), &env).is_ok());
+        let selfy = r.assign_key("oracle?fallback=oracle").unwrap();
+        let e = r.assigner(&selfy, &env).unwrap_err().to_string();
+        assert!(e.contains("itself"), "{e}");
+        let zero = r.assign_key("oracle?nodes=0").unwrap();
+        assert!(r.assigner(&zero, &env).is_err());
+        assert!(r.assign_key("oracle?depth=3").is_err(), "undeclared param accepted");
+    }
+
+    #[test]
+    fn portfolio_validates_arms_and_refuses_nesting() {
+        let r = PolicyRegistry::global();
+        let env = plain_env();
+        // '+' and (quoting-survivor) ',' both split; aliases resolve per arm
+        for key in ["portfolio?arms=greedy+rr+geo", "portfolio?arms=greedy,random"] {
+            let k = r.assign_key(key).unwrap();
+            assert!(r.assigner(&k, &env).is_ok(), "{key}");
+        }
+        let nested = r.assign_key("portfolio?arms=greedy+portfolio").unwrap();
+        let e = r.assigner(&nested, &env).unwrap_err().to_string();
+        assert!(e.contains("nest"), "{e}");
+        let lone = r.assign_key("portfolio?arms=greedy").unwrap();
+        let e = r.assigner(&lone, &env).unwrap_err().to_string();
+        assert!(e.contains("two arms"), "{e}");
+        let gap = r.assign_key("portfolio?arms=greedy++rr").unwrap();
+        assert!(r.assigner(&gap, &env).is_err(), "empty arm accepted");
+        let typo = r.assign_key("portfolio?arms=greedy+quantum").unwrap();
+        assert!(r.assigner(&typo, &env).is_err(), "unknown arm accepted");
     }
 }

@@ -40,9 +40,9 @@ pub mod sweep;
 pub use merge::{merge_dirs, MergeReport};
 pub use plan::{CellId, Manifest, RunOpts, RunOutcome, Shard, SweepPlan};
 pub use sink::{
-    emit_cell, CellSummary, CsvSink, JsonlSink, MemorySink, MultiSink, RecordSink,
+    emit_cell, CellSummary, CsvSink, ExtraCols, JsonlSink, MemorySink, MultiSink, RecordSink,
 };
-pub use spec::{ScenarioSpec, SweepCell, SweepMode};
+pub use spec::{OracleCfg, ScenarioSpec, SweepCell, SweepMode};
 #[allow(deprecated)]
 pub use sweep::{run_sweep, run_sweep_serial};
 pub use sweep::{oracle_clusters, run_cell, CellResult, SweepResult, SweepRow};

@@ -250,6 +250,10 @@ impl SweepPlan {
         if s.faults.is_active() {
             canon.push_str(&format!("|faults={:?}", s.faults));
         }
+        // same opt-in rule: oracle-off manifests keep today's fingerprint
+        if let Some(o) = &s.oracle {
+            canon.push_str(&format!("|oracle={},{}", o.nodes, o.max_devices));
+        }
         fnv1a64(canon.as_bytes())
     }
 
@@ -825,6 +829,15 @@ mod tests {
         faulted.faults.dropout_prob = 0.2;
         let f2 = SweepPlan::new(faulted).unwrap();
         assert_ne!(f.fingerprint(), f2.fingerprint(), "fault overrides must change it");
+        // --oracle is opt-in the same way: off keeps the fingerprint, on
+        // (and each knob) changes it
+        let mut gapped = spec.clone();
+        gapped.oracle = Some(crate::scenario::OracleCfg::default());
+        let g = SweepPlan::new(gapped.clone()).unwrap();
+        assert_ne!(a.fingerprint(), g.fingerprint(), "--oracle must change it");
+        gapped.oracle = Some(crate::scenario::OracleCfg { nodes: 7, ..Default::default() });
+        let g2 = SweepPlan::new(gapped).unwrap();
+        assert_ne!(g.fingerprint(), g2.fingerprint(), "oracle knobs must change it");
         // the RESOLVED checkpoint CONTENT is part of the fingerprint: a
         // host with the file and one without it (or with stale bytes)
         // must not co-merge — while the same bytes under different

@@ -138,8 +138,41 @@ pub fn burst(cfg: &Config) -> ScenarioSpec {
     }
 }
 
+/// Optimality-gap smoke (DESIGN.md §12): cells small enough that the
+/// branch-and-bound reference solve *proves* its optimum, so every
+/// heuristic's `opt_gap` is a true distance-from-optimal and the `oracle`
+/// assigner's gap is exactly zero. The assigner's node budget matches the
+/// instrumentation's ([`super::spec::OracleCfg::nodes`]) so both run the
+/// identical deterministic search — bit-equal objectives even if a cell
+/// somehow exhausts the budget.
+pub fn oracle_smoke(cfg: &Config) -> ScenarioSpec {
+    let mut system = cfg.system.clone();
+    system.n_devices = 10;
+    ScenarioSpec {
+        name: "oracle_smoke".into(),
+        mode: SweepMode::Cost,
+        schedulers: vec![sched("fedavg")],
+        assigners: vec![
+            assign("oracle?nodes=200000"),
+            assign("greedy"),
+            assign("round-robin"),
+            assign("hfel?budget=100"),
+            assign("portfolio?arms=greedy+round-robin"),
+        ],
+        h_values: vec![4, 8],
+        seeds: 2,
+        iters: 3,
+        seed: cfg.seed ^ 0x0AC1,
+        k_clusters: cfg.k_clusters,
+        frac_major: cfg.frac_major,
+        system,
+        oracle: Some(super::spec::OracleCfg { nodes: 200_000, max_devices: 16 }),
+        ..ScenarioSpec::default()
+    }
+}
+
 /// Resolve a preset by name (`grid`, `fig3`, `fig4`, `fig6`, `fig7`,
-/// `burst`).
+/// `burst`, `oracle_smoke`).
 pub fn preset(name: &str, cfg: &Config) -> anyhow::Result<ScenarioSpec> {
     match name {
         "grid" => Ok(grid(cfg)),
@@ -148,7 +181,10 @@ pub fn preset(name: &str, cfg: &Config) -> anyhow::Result<ScenarioSpec> {
         "fig6" => Ok(fig6(cfg, 50)),
         "fig7" => Ok(fig7(cfg, cfg.datasets.first().map(String::as_str).unwrap_or("fmnist"))),
         "burst" => Ok(burst(cfg)),
-        other => anyhow::bail!("unknown scenario preset {other:?} (grid|fig3|fig4|fig6|fig7|burst)"),
+        "oracle_smoke" => Ok(oracle_smoke(cfg)),
+        other => anyhow::bail!(
+            "unknown scenario preset {other:?} (grid|fig3|fig4|fig6|fig7|burst|oracle_smoke)"
+        ),
     }
 }
 
@@ -159,7 +195,7 @@ mod tests {
     #[test]
     fn presets_validate() {
         let cfg = Config::default();
-        for name in ["grid", "fig3", "fig4", "fig6", "fig7", "burst"] {
+        for name in ["grid", "fig3", "fig4", "fig6", "fig7", "burst", "oracle_smoke"] {
             let s = preset(name, &cfg).unwrap();
             s.validate().unwrap_or_else(|e| panic!("{name}: {e}"));
             assert!(!s.cells().is_empty(), "{name} has no cells");
@@ -184,6 +220,24 @@ mod tests {
         let scheds: Vec<String> = s.schedulers.iter().map(|k| k.to_string()).collect();
         assert!(scheds.contains(&"deadline?ms=1000&relay=nearest".to_string()));
         assert!(!s.faults.is_active(), "burst preset must default fault-free");
+    }
+
+    #[test]
+    fn oracle_smoke_budgets_line_up() {
+        let cfg = Config::default();
+        let s = oracle_smoke(&cfg);
+        assert!(matches!(s.mode, SweepMode::Cost));
+        let o = s.oracle.as_ref().expect("oracle instrumentation on");
+        let assigns: Vec<String> = s.assigners.iter().map(|k| k.to_string()).collect();
+        // the oracle *assigner* must search with the instrumentation's node
+        // budget so both land on bit-identical objectives (gap exactly 0)
+        assert!(
+            assigns.iter().any(|a| a.starts_with("oracle?")
+                && a.contains(&format!("nodes={}", o.nodes))),
+            "{assigns:?} vs nodes={}",
+            o.nodes
+        );
+        assert!(s.h_values.iter().all(|&h| h <= o.max_devices), "no skipped rounds");
     }
 
     #[test]

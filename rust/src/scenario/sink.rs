@@ -132,11 +132,28 @@ const SUMMARY_HEADER: [&str; 11] = [
 /// is active ([`crate::faults`]): fault-free output stays byte-identical.
 const FAULT_COLS: [&str; 5] =
     ["completed", "dropped", "stragglers", "round_wall_ms", "retries"];
+/// Extra per-iteration columns emitted only under `--oracle`
+/// (DESIGN.md §12): rounds the reference solve skipped (cell above the
+/// size cap) leave the fields empty (CSV) / null (JSONL).
+const ORACLE_COLS: [&str; 3] = ["opt_obj", "opt_gap", "oracle_proven"];
 
-fn rows_header(fault_cols: bool) -> Vec<&'static str> {
+/// Which opt-in column families a sink writes. Order is fixed: classic
+/// header, then fault columns, then oracle columns — each family appears
+/// only when its flag is set, so a sweep with both off reproduces the
+/// classic bytes exactly.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ExtraCols {
+    pub faults: bool,
+    pub oracle: bool,
+}
+
+fn rows_header(extra: ExtraCols) -> Vec<&'static str> {
     let mut h = ROWS_HEADER.to_vec();
-    if fault_cols {
+    if extra.faults {
         h.extend(FAULT_COLS);
+    }
+    if extra.oracle {
+        h.extend(ORACLE_COLS);
     }
     h
 }
@@ -149,7 +166,7 @@ pub struct CsvSink {
     summary: CsvWriter,
     rows_path: PathBuf,
     summary_path: PathBuf,
-    fault_cols: bool,
+    extra: ExtraCols,
 }
 
 /// `sweep_<stem>.csv` / `sweep_<stem>_summary.csv` under `out_dir`.
@@ -170,13 +187,18 @@ impl CsvSink {
     /// header when `fault_cols` (spec has an active fault profile) —
     /// fault-free sweeps keep today's bytes exactly.
     pub fn create_with(out_dir: &Path, stem: &str, fault_cols: bool) -> anyhow::Result<CsvSink> {
+        CsvSink::create_ext(out_dir, stem, ExtraCols { faults: fault_cols, oracle: false })
+    }
+
+    /// [`CsvSink::create`] with any combination of opt-in column families.
+    pub fn create_ext(out_dir: &Path, stem: &str, extra: ExtraCols) -> anyhow::Result<CsvSink> {
         let (rows_path, summary_path) = csv_paths(out_dir, stem);
         Ok(CsvSink {
-            rows: CsvWriter::create(&rows_path, &rows_header(fault_cols))?,
+            rows: CsvWriter::create(&rows_path, &rows_header(extra))?,
             summary: CsvWriter::create(&summary_path, &SUMMARY_HEADER)?,
             rows_path,
             summary_path,
-            fault_cols,
+            extra,
         })
     }
 
@@ -187,13 +209,18 @@ impl CsvSink {
 
     /// [`CsvSink::append`] for a file created with fault columns.
     pub fn append_with(out_dir: &Path, stem: &str, fault_cols: bool) -> anyhow::Result<CsvSink> {
+        CsvSink::append_ext(out_dir, stem, ExtraCols { faults: fault_cols, oracle: false })
+    }
+
+    /// [`CsvSink::append`] for a file created with `extra` column families.
+    pub fn append_ext(out_dir: &Path, stem: &str, extra: ExtraCols) -> anyhow::Result<CsvSink> {
         let (rows_path, summary_path) = csv_paths(out_dir, stem);
         Ok(CsvSink {
-            rows: CsvWriter::append(&rows_path, rows_header(fault_cols).len())?,
+            rows: CsvWriter::append(&rows_path, rows_header(extra).len())?,
             summary: CsvWriter::append(&summary_path, SUMMARY_HEADER.len())?,
             rows_path,
             summary_path,
-            fault_cols,
+            extra,
         })
     }
 
@@ -219,13 +246,26 @@ impl RecordSink for CsvSink {
             opt_fmt(r.msg_bytes, 0),
             r.n_scheduled.to_string(),
         ];
-        if self.fault_cols {
+        if self.extra.faults {
             let f = r.faults.unwrap_or_default();
             cols.push(f.completed.to_string());
             cols.push(f.dropped.to_string());
             cols.push(f.stragglers.to_string());
             cols.push(format!("{:.3}", f.wall_ms));
             cols.push(f.retries.to_string());
+        }
+        if self.extra.oracle {
+            match r.oracle {
+                Some(o) => {
+                    cols.push(format!("{:.6}", o.opt_obj));
+                    cols.push(format!("{:.6}", o.opt_gap));
+                    cols.push(if o.proven { "1" } else { "0" }.to_string());
+                }
+                None => {
+                    // round skipped (cell above the size cap): empty fields
+                    cols.extend(std::iter::repeat_with(String::new).take(3));
+                }
+            }
         }
         self.rows.row(&cols)
     }
@@ -296,7 +336,7 @@ fn json_opt(v: Option<f64>, prec: usize) -> String {
 pub struct JsonlSink {
     rows: OffsetFile,
     summary: OffsetFile,
-    fault_cols: bool,
+    extra: ExtraCols,
 }
 
 /// `sweep_<stem>.jsonl` / `sweep_<stem>_summary.jsonl` under `out_dir`.
@@ -315,11 +355,16 @@ impl JsonlSink {
     /// [`JsonlSink::create`] emitting the fault fields on every row when
     /// `fault_cols` (spec has an active fault profile).
     pub fn create_with(out_dir: &Path, stem: &str, fault_cols: bool) -> anyhow::Result<JsonlSink> {
+        JsonlSink::create_ext(out_dir, stem, ExtraCols { faults: fault_cols, oracle: false })
+    }
+
+    /// [`JsonlSink::create`] with any combination of opt-in field families.
+    pub fn create_ext(out_dir: &Path, stem: &str, extra: ExtraCols) -> anyhow::Result<JsonlSink> {
         let (rows, summary) = jsonl_paths(out_dir, stem);
         Ok(JsonlSink {
             rows: OffsetFile::create(rows)?,
             summary: OffsetFile::create(summary)?,
-            fault_cols,
+            extra,
         })
     }
 
@@ -329,11 +374,16 @@ impl JsonlSink {
 
     /// [`JsonlSink::append`] for files created with fault fields.
     pub fn append_with(out_dir: &Path, stem: &str, fault_cols: bool) -> anyhow::Result<JsonlSink> {
+        JsonlSink::append_ext(out_dir, stem, ExtraCols { faults: fault_cols, oracle: false })
+    }
+
+    /// [`JsonlSink::append`] for files created with `extra` field families.
+    pub fn append_ext(out_dir: &Path, stem: &str, extra: ExtraCols) -> anyhow::Result<JsonlSink> {
         let (rows, summary) = jsonl_paths(out_dir, stem);
         Ok(JsonlSink {
             rows: OffsetFile::append(rows)?,
             summary: OffsetFile::append(summary)?,
-            fault_cols,
+            extra,
         })
     }
 
@@ -363,7 +413,7 @@ impl RecordSink for JsonlSink {
             json_opt(r.msg_bytes, 0),
             r.n_scheduled,
         )?;
-        if self.fault_cols {
+        if self.extra.faults {
             let f = r.faults.unwrap_or_default();
             write!(
                 self.rows,
@@ -371,6 +421,21 @@ impl RecordSink for JsonlSink {
                  \"round_wall_ms\":{:.3},\"retries\":{}",
                 f.completed, f.dropped, f.stragglers, f.wall_ms, f.retries,
             )?;
+        }
+        if self.extra.oracle {
+            match r.oracle {
+                Some(o) => write!(
+                    self.rows,
+                    ",\"opt_obj\":{:.6},\"opt_gap\":{:.6},\"oracle_proven\":{}",
+                    o.opt_obj,
+                    o.opt_gap,
+                    if o.proven { 1 } else { 0 },
+                )?,
+                None => write!(
+                    self.rows,
+                    ",\"opt_obj\":null,\"opt_gap\":null,\"oracle_proven\":null",
+                )?,
+            }
         }
         writeln!(self.rows, "}}")?;
         Ok(())
@@ -594,6 +659,7 @@ mod tests {
             msg_bytes: None,
             n_scheduled: 10,
             faults: None,
+            oracle: None,
         }
     }
 
@@ -691,6 +757,47 @@ mod tests {
         let line = j.lines().next().unwrap();
         assert!(line.contains("\"round_wall_ms\":123.457,\"retries\":3"), "{line}");
         crate::util::json::Json::parse(line).unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn oracle_columns_only_when_enabled() {
+        use crate::metrics::RoundOracle;
+        let dir = std::env::temp_dir().join(format!("hfl_sink_oracle_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut plain = CsvSink::create(&dir, "p").unwrap();
+        let ex = ExtraCols { faults: false, oracle: true };
+        let mut gapped = CsvSink::create_ext(&dir, "g", ex).unwrap();
+        let mut jg = JsonlSink::create_ext(&dir, "g", ex).unwrap();
+        let mut r = row(0);
+        r.oracle = Some(RoundOracle { opt_obj: 3.5, opt_gap: 0.125, proven: true });
+        for s in [&mut plain as &mut dyn RecordSink, &mut gapped, &mut jg] {
+            s.iter_row(&cell(0), &r).unwrap();
+            // a row the oracle skipped (cell over the size cap) → empty fields
+            let mut skipped = row(1);
+            skipped.oracle = None;
+            s.iter_row(&cell(0), &skipped).unwrap();
+            s.cell_done(&summary(0)).unwrap();
+            s.finish().unwrap();
+        }
+        let p = std::fs::read_to_string(dir.join("sweep_p.csv")).unwrap();
+        assert!(p.lines().next().unwrap().ends_with("n_scheduled"), "{p}");
+        assert!(!p.contains("opt_gap"));
+        let g = std::fs::read_to_string(dir.join("sweep_g.csv")).unwrap();
+        assert!(
+            g.lines().next().unwrap().ends_with("n_scheduled,opt_obj,opt_gap,oracle_proven"),
+            "{g}"
+        );
+        assert!(g.lines().nth(1).unwrap().ends_with("10,3.500000,0.125000,1"), "{g}");
+        assert!(g.lines().nth(2).unwrap().ends_with("10,,,"), "{g}");
+        let j = std::fs::read_to_string(dir.join("sweep_g.jsonl")).unwrap();
+        let mut lines = j.lines();
+        let line = lines.next().unwrap();
+        assert!(line.contains("\"opt_obj\":3.500000,\"opt_gap\":0.125000,\"oracle_proven\":1"), "{line}");
+        crate::util::json::Json::parse(line).unwrap();
+        let line2 = lines.next().unwrap();
+        assert!(line2.contains("\"oracle_proven\":null"), "{line2}");
+        crate::util::json::Json::parse(line2).unwrap();
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -109,6 +109,32 @@ pub struct ScenarioSpec {
     /// Fault-injection environment (see [`crate::faults`]); the default
     /// `none` profile reproduces the fault-free loop byte-for-byte.
     pub faults: FaultProfile,
+    /// Optimality-gap instrumentation (`--oracle` / `[oracle]` TOML
+    /// table): reference-solve each round exactly and append
+    /// opt_obj/opt_gap/oracle_proven columns. `None` (the default) keeps
+    /// classic headers byte-identical.
+    pub oracle: Option<OracleCfg>,
+}
+
+/// Knobs for the `--oracle` gap instrumentation (DESIGN.md §12). Distinct
+/// from the `oracle` *assigner* (which has its own `nodes`/`fallback`
+/// params): this solves a reference problem alongside whatever assigner
+/// the cell is configured with.
+#[derive(Clone, Debug, PartialEq)]
+pub struct OracleCfg {
+    /// Branch-and-bound node budget per round solve; exhausted solves
+    /// report their best incumbent with `oracle_proven = 0`.
+    pub nodes: usize,
+    /// Rounds with more scheduled devices than this get empty gap fields
+    /// (the exact subsystem hard-caps at 64; the default keeps the
+    /// reference solves cheap enough to run alongside every arm).
+    pub max_devices: usize,
+}
+
+impl Default for OracleCfg {
+    fn default() -> Self {
+        OracleCfg { nodes: 10_000, max_devices: 16 }
+    }
 }
 
 impl Default for ScenarioSpec {
@@ -137,6 +163,7 @@ impl Default for ScenarioSpec {
             drl_checkpoint: None,
             system: SystemParams::default(),
             faults: FaultProfile::none(),
+            oracle: None,
         }
     }
 }
@@ -252,6 +279,29 @@ impl ScenarioSpec {
                 s.faults.set(field, x)?;
             }
         }
+        // `oracle = true` (defaults) or an `[oracle]` table with knobs.
+        // Same two-pass shape as faults; `oracle_clusters` (the Algorithm-2
+        // ground-truth toggle above) is unrelated and left alone.
+        if let Some(v) = t.get("oracle") {
+            let on = v.as_bool().ok_or_else(|| {
+                anyhow::anyhow!("oracle must be a boolean (use an [oracle] table for knobs)")
+            })?;
+            s.oracle = on.then(OracleCfg::default);
+        }
+        if t.get("oracle.nodes").is_some() || t.get("oracle.max_devices").is_some() {
+            let mut o = s.oracle.take().unwrap_or_default();
+            if let Some(v) = t.get("oracle.nodes") {
+                o.nodes = v
+                    .as_usize()
+                    .ok_or_else(|| anyhow::anyhow!("oracle.nodes must be an integer"))?;
+            }
+            if let Some(v) = t.get("oracle.max_devices") {
+                o.max_devices = v
+                    .as_usize()
+                    .ok_or_else(|| anyhow::anyhow!("oracle.max_devices must be an integer"))?;
+            }
+            s.oracle = Some(o);
+        }
         apply_system(t, &mut s.system);
         s.validate()?;
         Ok(s)
@@ -291,6 +341,19 @@ impl ScenarioSpec {
             );
         }
         self.faults.validate()?;
+        if let Some(o) = &self.oracle {
+            anyhow::ensure!(o.nodes > 0, "oracle.nodes must be positive");
+            anyhow::ensure!(
+                (1..=crate::allocation::exact::MAX_EXACT_DEVICES).contains(&o.max_devices),
+                "oracle.max_devices must be in 1..={} (the exact solver's slot-mask width)",
+                crate::allocation::exact::MAX_EXACT_DEVICES
+            );
+            anyhow::ensure!(
+                self.mode == SweepMode::Cost,
+                "the --oracle gap instrumentation runs in cost mode only \
+                 (train mode has no per-round reference solve)"
+            );
+        }
         Ok(())
     }
 
@@ -452,6 +515,38 @@ mod tests {
         assert!(ScenarioSpec::from_table(&parse("faults = \"heavy\"").unwrap(), &cfg).is_err());
         let t = parse("[faults]\ndropout_prob = 1.5").unwrap();
         assert!(ScenarioSpec::from_table(&t, &cfg).is_err());
+    }
+
+    #[test]
+    fn toml_oracle_switch_and_knobs() {
+        let cfg = Config::default();
+        // default: off
+        assert!(ScenarioSpec::default().oracle.is_none());
+        // top-level boolean switch → defaults
+        let t = parse("oracle = true").unwrap();
+        let s = ScenarioSpec::from_table(&t, &cfg).unwrap();
+        assert_eq!(s.oracle, Some(OracleCfg::default()));
+        let t = parse("oracle = false").unwrap();
+        assert!(ScenarioSpec::from_table(&t, &cfg).unwrap().oracle.is_none());
+        // [oracle] table: knobs imply the switch, unset knobs keep defaults
+        let t = parse("[oracle]\nnodes = 500\nmax_devices = 12").unwrap();
+        let s = ScenarioSpec::from_table(&t, &cfg).unwrap();
+        assert_eq!(s.oracle, Some(OracleCfg { nodes: 500, max_devices: 12 }));
+        let t = parse("[oracle]\nnodes = 500").unwrap();
+        let s = ScenarioSpec::from_table(&t, &cfg).unwrap();
+        assert_eq!(s.oracle.unwrap().max_devices, OracleCfg::default().max_devices);
+        // bad values are rejected
+        for toml in [
+            "oracle = \"yes\"",
+            "[oracle]\nnodes = 0",
+            "[oracle]\nmax_devices = 0",
+            "[oracle]\nmax_devices = 65",
+            // cost mode only: train mode has no per-round reference solve
+            "mode = \"train\"\noracle = true",
+        ] {
+            let t = parse(toml).unwrap();
+            assert!(ScenarioSpec::from_table(&t, &cfg).is_err(), "accepted {toml:?}");
+        }
     }
 
     #[test]

@@ -57,6 +57,11 @@ pub struct SweepRow {
     /// (the sinks only emit the fault columns when the spec's profile is
     /// active, keeping fault-free output byte-identical).
     pub faults: Option<RoundFaults>,
+    /// Optimality-gap instrumentation (`--oracle`); `None` when the oracle
+    /// is off or the round's scheduled set exceeded its size cap. The gap
+    /// is measured on the assignment the arm *committed* (pre-fault), so
+    /// every arm is scored against the same reference solve.
+    pub oracle: Option<crate::metrics::RoundOracle>,
 }
 
 /// The complete result of one grid cell.
@@ -270,6 +275,48 @@ pub fn run_cell(
                         (cost, Some(out.stats), Some(out.survivors))
                     }
                 };
+                // reference solve: compare the assignment the arm committed
+                // against the branch-and-bound optimum on the same scheduled
+                // set (pre-fault — both sides see the problem the assigner
+                // actually solved)
+                let oracle = match &spec.oracle {
+                    Some(o) if scheduled.len() <= o.max_devices => {
+                        if scheduled.is_empty() {
+                            Some(crate::metrics::RoundOracle {
+                                opt_obj: 0.0,
+                                opt_gap: 0.0,
+                                proven: true,
+                            })
+                        } else {
+                            let ex = crate::allocation::ExactOpts {
+                                node_budget: o.nodes,
+                                time_budget_ms: None,
+                            };
+                            crate::allocation::exact::solve_assignment(
+                                &topo, &scheduled, &opts, &ex,
+                            )
+                            .map(|solve| {
+                                let f_arm = crate::allocation::exact::surrogate_of(
+                                    &topo,
+                                    &scheduled,
+                                    &assignment,
+                                    &opts,
+                                );
+                                let gap = if solve.objective == 0.0 {
+                                    0.0
+                                } else {
+                                    (f_arm - solve.objective) / solve.objective
+                                };
+                                crate::metrics::RoundOracle {
+                                    opt_obj: solve.objective,
+                                    opt_gap: gap,
+                                    proven: solve.proven,
+                                }
+                            })
+                        }
+                    }
+                    _ => None,
+                };
                 rows.push(SweepRow {
                     iter,
                     t_i: cost.t,
@@ -280,6 +327,7 @@ pub fn run_cell(
                     msg_bytes: None,
                     n_scheduled: scheduled.len(),
                     faults: fstats,
+                    oracle,
                 });
                 let surv: Option<Vec<usize>> = survivors
                     .as_ref()
@@ -359,6 +407,8 @@ pub fn run_cell(
                     msg_bytes: Some(r.msg_bytes),
                     n_scheduled: r.n_scheduled,
                     faults: r.faults,
+                    // spec.validate() rejects --oracle in train mode
+                    oracle: None,
                 })
                 .collect();
             let latencies: Vec<f64> =

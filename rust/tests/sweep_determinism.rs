@@ -155,6 +155,7 @@ fn train_mode_fig3_style_sweep_is_thread_count_invariant() {
         frac_major: 0.8,
         drl_checkpoint: None,
         system,
+        ..ScenarioSpec::default()
     };
     let backend = NativeBackend::new();
     let a = run_sweep(&spec, Some(&backend), 1).unwrap();
@@ -286,6 +287,7 @@ fn new_policy_train_sweep_is_thread_count_invariant() {
         frac_major: 0.8,
         drl_checkpoint: None,
         system,
+        ..ScenarioSpec::default()
     };
     let backend = NativeBackend::new();
     let a = run_sweep(&spec, Some(&backend), 1).unwrap();
