@@ -114,11 +114,23 @@ def straggler_mult(plan_seed, round_i, dev, prob, mu, sigma):
 
 
 def backoff_delays(base, cap, misses):
-    """Rounds a device stays blocked after its k-th consecutive miss."""
+    """Rounds a device stays blocked after its k-th consecutive miss.
+
+    Only *device-fault* causes (dropout, deadline) feed this schedule:
+    ``resolve`` exempts ``FailCause::Outage`` — an edge outage is the
+    infrastructure's fault, so its victims keep their streak and are
+    rescheduled immediately (ISSUE 9 satellite).
+    """
     out = []
     for k in range(1, misses + 1):
         out.append(max(min(base << min(k - 1, 16), cap), 1))
     return out
+
+
+def staleness_weight(alpha, staleness):
+    """rust/src/faults/stale.rs AsyncCfg::weight: a buffered update that is
+    ``s`` rounds old is mixed into eq. 2 at ``alpha**s`` of its fresh mass."""
+    return alpha ** staleness
 
 
 # ======================= tests =======================
@@ -192,3 +204,16 @@ def test_backoff_schedule_pins():
     assert backoff_delays(1, 1, 3) == [1, 1, 1]
     # the shift is clamped at 16 so huge streaks cannot overflow
     assert backoff_delays(1, 1 << 40, 70)[-1] == 1 << 16
+
+
+def test_staleness_weight_schedule():
+    # co-pinned in rust/src/faults/stale.rs (weight_schedule_matches_python_mirror)
+    want = [1.0, 0.5, 0.25, 0.125, 0.0625]
+    for s, w in enumerate(want):
+        assert abs(staleness_weight(0.5, s) - w) < 1e-15, (s, w)
+    assert abs(staleness_weight(0.7, 3) - 0.343) < 1e-12
+    # staleness 0 is full weight (the entry is kept, not consumed, that
+    # round); past max_staleness the buffer evicts, so no weight applies
+    assert staleness_weight(0.9, 0) == 1.0
+    # alpha = 0 disables the async path entirely (gate, not a weight)
+    assert staleness_weight(0.0, 1) == 0.0

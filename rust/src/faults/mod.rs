@@ -19,6 +19,9 @@
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 
+mod stale;
+pub use stale::{AsyncCfg, RoundAsync, StaleBuffer, StaleEntry};
+
 use crate::allocation::AllocSolution;
 use crate::assignment::Assignment;
 use crate::system::cost::device_cost;
@@ -358,6 +361,9 @@ pub struct RoundOutcome {
     pub survivors: Assignment,
     /// `(device, cause)` for every lost upload.
     pub dropped: Vec<(usize, FailCause)>,
+    /// Devices whose uploads landed in time but were discarded because
+    /// their edge fell below quorum — candidates for the [`StaleBuffer`].
+    pub voided: Vec<usize>,
     pub stats: RoundFaults,
 }
 
@@ -428,9 +434,13 @@ impl FaultSession {
                 stragglers += 1;
             }
             let t = t * mult;
-            // the round ends when its last upload lands, times out at the
-            // deadline, or is detected missing — whichever is later
-            wall_s = wall_s.max(t.min(deadline_s));
+            // the round ends when its last upload lands or times out at
+            // the deadline — whichever is later. Uploads headed for an
+            // edge that is down are excluded: the outage is detected at
+            // round start, so those devices never occupy event time.
+            if !edge_down[m] {
+                wall_s = wall_s.max(t.min(deadline_s));
+            }
             clock.push(t, n, m);
         }
 
@@ -452,6 +462,7 @@ impl FaultSession {
         // voided — its landed uploads are discarded (but count as successes
         // for backoff purposes: the *device* did nothing wrong)
         let mut edges_out = 0usize;
+        let mut voided: Vec<usize> = Vec::new();
         for m in 0..n_edges {
             if scheduled_per_edge[m] == 0 {
                 continue;
@@ -462,6 +473,7 @@ impl FaultSession {
                 for &n in &groups[m] {
                     self.streak[n] = 0;
                 }
+                voided.extend_from_slice(&groups[m]);
                 groups[m].clear();
             }
         }
@@ -471,7 +483,13 @@ impl FaultSession {
                 self.streak[n] = 0;
             }
         }
-        for &(n, _) in &dropped {
+        for &(n, cause) in &dropped {
+            // an edge outage is infrastructure loss, not the device's
+            // fault — like the quorum-void branch above, it carries no
+            // failure mark, no streak and no backoff
+            if cause == FailCause::Outage {
+                continue;
+            }
             self.failures[n] += 1;
             let k = self.streak[n].saturating_add(1);
             self.streak[n] = k;
@@ -493,7 +511,7 @@ impl FaultSession {
             aborted,
             edges_out,
         };
-        RoundOutcome { survivors, dropped, stats }
+        RoundOutcome { survivors, dropped, voided, stats }
     }
 }
 
@@ -600,6 +618,23 @@ mod tests {
             .dropped
             .iter()
             .all(|&(_, c)| c == FailCause::Deadline));
+        // device 3 landed in time on the voided edge — surfaced for the
+        // stale buffer, not counted as dropped
+        assert_eq!(out.voided, vec![3]);
+
+        // a late landing on a dead edge must not hold the wall clock:
+        // the outage is detected at round start, so the round's event
+        // time comes from live-edge uploads only
+        // (outage u(7,2,1) = 0.29100… < 0.292 → edge 1 down at round 2)
+        let mut p = FaultProfile::none();
+        p.deadline_ms = 5000.0;
+        p.outage_prob = 0.292;
+        let mut s = FaultSession::new(plan(p), 2);
+        let out = s.resolve(2, 2, &[(0, 0, 1.0), (1, 1, 2.9)]);
+        assert_eq!(out.survivors.groups, vec![vec![0], vec![]]);
+        assert_eq!(out.dropped, vec![(1, FailCause::Outage)]);
+        assert_eq!(out.stats.edges_out, 1);
+        assert!((out.stats.wall_ms - 1000.0).abs() < 1e-9, "{}", out.stats.wall_ms);
     }
 
     #[test]
@@ -621,7 +656,9 @@ mod tests {
         p.backoff_cap = 8;
         let mut s = FaultSession::new(plan(p), 1);
         // streak 1..6 → delays 1, 2, 4, 8, 8, 8 (pinned in the python
-        // mirror); the device is blocked for `delay` rounds after each miss
+        // mirror); the device is blocked for `delay` rounds after each
+        // miss. Only Deadline/Dropout misses enter this schedule —
+        // Outage drops are exempt (see outage_drops_carry_no_penalty).
         let mut round = 0usize;
         for expect in [1usize, 2, 4, 8, 8, 8] {
             let (eff, _) = s.filter(round, &[0]);
@@ -644,6 +681,21 @@ mod tests {
         s.resolve(round + 2, 1, &[(0, 0, 1.0)]);
         assert!(s.filter(round + 3, &[0]).0.is_empty(), "second failure: delay 2");
         assert!(!s.filter(round + 4, &[0]).0.is_empty());
+    }
+
+    #[test]
+    fn outage_drops_carry_no_penalty() {
+        // an edge outage is not the device's fault: no failure count, no
+        // streak, no backoff — the device stays eligible next round
+        // (outage u(7,2,1) = 0.29100… < 0.292 → edge 1 down at round 2)
+        let mut p = FaultProfile::none();
+        p.outage_prob = 0.292;
+        let mut s = FaultSession::new(plan(p), 1);
+        let out = s.resolve(2, 2, &[(0, 1, 1.0)]);
+        assert_eq!(out.dropped, vec![(0, FailCause::Outage)]);
+        assert_eq!(s.failures[0], 0, "outage must not mark a device failure");
+        let (eff, retries) = s.filter(3, &[0]);
+        assert_eq!((eff, retries), (vec![0], 0), "no backoff after an outage");
     }
 
     #[test]

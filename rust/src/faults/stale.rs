@@ -1,0 +1,222 @@
+//! Staleness-weighted async aggregation (DESIGN.md §13).
+//!
+//! The synchronous fault layer (mod.rs) discards every upload that misses
+//! the deadline or lands on a quorum-voided edge — real gradient work
+//! thrown away. This module retains those uploads in a [`StaleBuffer`] and
+//! lets the next round's edge aggregation (eq. 2) fold them back in at a
+//! staleness-discounted weight `w_n · alpha^staleness`, so the global
+//! model monotonically consumes stragglers instead of retrying them from
+//! scratch.
+//!
+//! **Lifecycle contract** (mirrored bit-for-bit by the cost-mode
+//! bookkeeping in `scenario::sweep` and by
+//! `python/tests/test_fault_mirror.py`):
+//!
+//! 1. A round that aggregates (not aborted, survivors non-empty) first
+//!    *consumes* every buffered entry whose staleness `round − round_born`
+//!    lies in `1..=max_staleness` — each entry is folded into its owning
+//!    edge's aggregate exactly once, then removed.
+//! 2. Entries older than `max_staleness` are evicted unconsumed at the
+//!    same point.
+//! 3. After training, the round's deadline-missed and quorum-voided
+//!    uploads are buffered with `round_born = round` (newest entry per
+//!    device wins). Aborted rounds neither consume nor buffer — entries
+//!    age across them.
+//!
+//! `alpha = 0` disables the whole path: the trainer never trains dropped
+//! devices and never touches the buffer, so the output is byte-identical
+//! to discard-mode (PR 7) semantics. Zero-weight mixing would not be
+//! enough — training extra devices advances the shared data-RNG stream.
+
+/// Configuration of the async aggregation path (`[async]` TOML table,
+/// `--async-alpha` / `--async-max-stale` CLI).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AsyncCfg {
+    /// Per-round staleness discount in `[0, 1]`; an entry consumed at
+    /// staleness `s` carries weight `w_n · alpha^s`. `0` disables async
+    /// aggregation entirely (exact discard-mode bytes).
+    pub alpha: f64,
+    /// Entries older than this many rounds are evicted unconsumed.
+    pub max_staleness: usize,
+}
+
+impl Default for AsyncCfg {
+    fn default() -> Self {
+        AsyncCfg { alpha: 0.5, max_staleness: 3 }
+    }
+}
+
+impl AsyncCfg {
+    /// Whether the async path runs at all.
+    pub fn is_active(&self) -> bool {
+        self.alpha > 0.0
+    }
+
+    /// The staleness discount `alpha^staleness` (weight per unit `w_n`).
+    pub fn weight(&self, staleness: usize) -> f64 {
+        self.alpha.powi(staleness as i32)
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&self.alpha) && self.alpha.is_finite(),
+            "async.alpha = {} outside [0, 1]",
+            self.alpha
+        );
+        anyhow::ensure!(self.max_staleness >= 1, "async.max_staleness must be ≥ 1");
+        Ok(())
+    }
+}
+
+/// One retained upload: the device's last local update of the round whose
+/// upload missed the deadline or landed on a voided edge.
+#[derive(Clone, Debug)]
+pub struct StaleEntry {
+    pub device: usize,
+    /// Edge the upload was destined for — the aggregate it folds into.
+    pub edge: usize,
+    /// Round the update was produced in; staleness = round − round_born.
+    pub round_born: usize,
+    /// Fresh-sample weight `w_n` (device sample count); the consumption
+    /// weight is `w_n · alpha^staleness`.
+    pub weight: f64,
+    /// Flattened model parameters at drop time; `None` in cost-mode
+    /// bookkeeping, where no model exists and only the stats matter.
+    pub params: Option<Vec<f32>>,
+}
+
+/// Per-round async-aggregation statistics — the opt-in sink columns.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct RoundAsync {
+    /// Buffered entries consumed into edge aggregates this round.
+    pub stale_used: usize,
+    /// Mean staleness (rounds) of the consumed entries; 0 when none.
+    pub mean_staleness: f64,
+}
+
+/// The retained-upload buffer: at most one live entry per device, kept in
+/// device order so consumption (and therefore float accumulation) is
+/// deterministic regardless of drop/void discovery order.
+#[derive(Clone, Debug)]
+pub struct StaleBuffer {
+    pub cfg: AsyncCfg,
+    entries: Vec<StaleEntry>,
+}
+
+impl StaleBuffer {
+    pub fn new(cfg: AsyncCfg) -> StaleBuffer {
+        StaleBuffer { cfg, entries: Vec::new() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Insert an entry, replacing any older one for the same device
+    /// (newest wins). Keeps the buffer sorted by device id.
+    pub fn push(&mut self, entry: StaleEntry) {
+        match self.entries.binary_search_by_key(&entry.device, |e| e.device) {
+            Ok(i) => self.entries[i] = entry,
+            Err(i) => self.entries.insert(i, entry),
+        }
+    }
+
+    /// Drain the buffer for an aggregating round: entries with staleness
+    /// in `1..=max_staleness` are returned for consumption (device
+    /// order); anything older is evicted. The buffer is empty afterwards
+    /// except for same-round entries (staleness 0), which are unborn
+    /// until next round.
+    pub fn take_consumable(&mut self, round: usize) -> (Vec<StaleEntry>, RoundAsync) {
+        let mut consumed = Vec::new();
+        let mut kept = Vec::new();
+        for e in self.entries.drain(..) {
+            let staleness = round - e.round_born;
+            if staleness == 0 {
+                kept.push(e);
+            } else if staleness <= self.cfg.max_staleness {
+                consumed.push(e);
+            }
+            // staleness > max_staleness: evicted unconsumed
+        }
+        self.entries = kept;
+        let stats = RoundAsync {
+            stale_used: consumed.len(),
+            mean_staleness: if consumed.is_empty() {
+                0.0
+            } else {
+                consumed
+                    .iter()
+                    .map(|e| (round - e.round_born) as f64)
+                    .sum::<f64>()
+                    / consumed.len() as f64
+            },
+        };
+        (consumed, stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(device: usize, round_born: usize) -> StaleEntry {
+        StaleEntry { device, edge: 0, round_born, weight: 10.0, params: None }
+    }
+
+    #[test]
+    fn weight_schedule_matches_python_mirror() {
+        // pinned against test_staleness_weight_schedule in
+        // python/tests/test_fault_mirror.py: w = w_n · alpha^s
+        let cfg = AsyncCfg { alpha: 0.5, max_staleness: 3 };
+        let expect = [1.0, 0.5, 0.25, 0.125, 0.0625];
+        for (s, e) in expect.iter().enumerate() {
+            assert!((cfg.weight(s) - e).abs() < 1e-15, "s={s}");
+        }
+        let cfg = AsyncCfg { alpha: 0.7, max_staleness: 3 };
+        assert!((cfg.weight(3) - 0.343).abs() < 1e-12);
+        assert_eq!(AsyncCfg { alpha: 0.0, max_staleness: 3 }.weight(0), 1.0);
+        assert!(!AsyncCfg { alpha: 0.0, max_staleness: 3 }.is_active());
+    }
+
+    #[test]
+    fn buffer_consumes_in_device_order_and_evicts_old_entries() {
+        let mut buf = StaleBuffer::new(AsyncCfg { alpha: 0.5, max_staleness: 2 });
+        buf.push(entry(9, 0));
+        buf.push(entry(3, 1));
+        buf.push(entry(5, 3)); // staleness 0 at round 3: not yet consumable
+        assert_eq!(buf.len(), 3);
+        let (consumed, stats) = buf.take_consumable(3);
+        // device 9 (staleness 3) evicted; 3 (staleness 2) consumed;
+        // 5 (staleness 0) kept for next round
+        assert_eq!(consumed.iter().map(|e| e.device).collect::<Vec<_>>(), vec![3]);
+        assert_eq!(stats, RoundAsync { stale_used: 1, mean_staleness: 2.0 });
+        assert_eq!(buf.len(), 1);
+        let (consumed, stats) = buf.take_consumable(4);
+        assert_eq!(consumed.iter().map(|e| e.device).collect::<Vec<_>>(), vec![5]);
+        assert!((stats.mean_staleness - 1.0).abs() < 1e-15);
+        assert!(buf.is_empty());
+    }
+
+    #[test]
+    fn newest_entry_per_device_wins() {
+        let mut buf = StaleBuffer::new(AsyncCfg::default());
+        buf.push(entry(4, 0));
+        buf.push(entry(4, 2));
+        assert_eq!(buf.len(), 1);
+        let (consumed, _) = buf.take_consumable(3);
+        assert_eq!(consumed[0].round_born, 2);
+    }
+
+    #[test]
+    fn cfg_validate_rejects_bad_knobs() {
+        AsyncCfg::default().validate().unwrap();
+        assert!(AsyncCfg { alpha: 1.5, max_staleness: 3 }.validate().is_err());
+        assert!(AsyncCfg { alpha: -0.1, max_staleness: 3 }.validate().is_err());
+        assert!(AsyncCfg { alpha: 0.5, max_staleness: 0 }.validate().is_err());
+        AsyncCfg { alpha: 0.0, max_staleness: 1 }.validate().unwrap();
+    }
+}

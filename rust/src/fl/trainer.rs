@@ -17,7 +17,10 @@ use std::time::Instant;
 use crate::allocation::SolverOpts;
 use crate::assignment::{evaluate as eval_assignment, Assigner, Assignment};
 use crate::data::{DeviceData, Templates, TestSet, NUM_CLASSES};
-use crate::faults::{upload_times, FaultPlan, FaultSession};
+use crate::faults::{
+    upload_times, AsyncCfg, FailCause, FaultPlan, FaultSession, RoundAsync, StaleBuffer,
+    StaleEntry,
+};
 use crate::fl::eval::evaluate_accuracy;
 use crate::metrics::{IterRecord, RunResult};
 use crate::model::{accumulate, finish, init_params, Init};
@@ -245,6 +248,116 @@ impl<'e> HflTrainer<'e> {
         Ok((finish(&acc, total_w), last_loss))
     }
 
+    /// Algorithm 1 with staleness-weighted async aggregation (DESIGN.md
+    /// §13). Every effective-scheduled device of `full` trains — its
+    /// compute happened; only the upload may have been lost — but eq. 2
+    /// aggregates fresh updates from the `live` survivors only, plus the
+    /// consumable [`StaleBuffer`] entries of each edge at weight
+    /// `w_n · alpha^staleness` (params frozen at drop time). Afterwards
+    /// the round's `buffer` devices (deadline-missed + quorum-voided) are
+    /// retained with `round_born = round` for future rounds.
+    fn train_global_iteration_async(
+        &mut self,
+        global: &[f32],
+        full: &Assignment,
+        live: &Assignment,
+        stale: &mut StaleBuffer,
+        buffer: &[usize],
+        round: usize,
+    ) -> anyhow::Result<(Vec<f32>, f64, RoundAsync)> {
+        let (consumed, astats) = stale.take_consumable(round);
+        let q_iters = self.topo.params.edge_iters;
+        let m_count = self.topo.edges.len();
+        let mut edge_params: Vec<Vec<f32>> =
+            (0..m_count).map(|_| global.to_vec()).collect();
+
+        let scheduled: Vec<usize> = full.groups.iter().flatten().cloned().collect();
+        let edge_index = full.edge_index();
+        let device_edge: Vec<usize> = scheduled
+            .iter()
+            .map(|&n| edge_index.edge_of(n).expect("scheduled device unassigned"))
+            .collect();
+        let edge_lookup =
+            |n: usize| edge_index.edge_of(n).expect("scheduled device unassigned");
+        let mut is_live = vec![false; self.topo.n_devices()];
+        for g in &live.groups {
+            for &n in g {
+                is_live[n] = true;
+            }
+        }
+
+        let mut last_loss = 0.0f64;
+        let mut updated_last: Vec<Vec<f32>> = Vec::new();
+        for _q in 0..q_iters {
+            let (updated, loss) =
+                self.local_rounds(&scheduled, &edge_lookup, &edge_params)?;
+            last_loss = loss;
+            // edge aggregation (eq. 2): survivors at w_n, stale entries at
+            // w_n · alpha^staleness (consumed in device order, so the float
+            // accumulation order is deterministic)
+            for m in 0..m_count {
+                let mut acc = vec![0.0f64; self.params_len];
+                let mut total_w = 0.0f64;
+                for (j, &n) in scheduled.iter().enumerate() {
+                    if device_edge[j] == m && is_live[n] {
+                        let w = self.device_data[n].n_samples as f64;
+                        accumulate(&mut acc, &updated[j], w);
+                        total_w += w;
+                    }
+                }
+                for e in consumed.iter().filter(|e| e.edge == m) {
+                    let w = e.weight * stale.cfg.weight(round - e.round_born);
+                    let p = e.params.as_ref().expect("train-mode stale entry has params");
+                    if w > 0.0 {
+                        accumulate(&mut acc, p, w);
+                        total_w += w;
+                    }
+                }
+                if total_w > 0.0 {
+                    edge_params[m] = finish(&acc, total_w);
+                }
+            }
+            updated_last = updated;
+        }
+
+        // cloud aggregation (eq. 3): per-edge weight = the fresh + stale
+        // sample mass its eq.-2 aggregate carried
+        let mut acc = vec![0.0f64; self.params_len];
+        let mut total_w = 0.0f64;
+        for m in 0..m_count {
+            let mut w: f64 = live.groups[m]
+                .iter()
+                .map(|&n| self.device_data[n].n_samples as f64)
+                .sum();
+            for e in consumed.iter().filter(|e| e.edge == m) {
+                w += e.weight * stale.cfg.weight(round - e.round_born);
+            }
+            if w > 0.0 {
+                accumulate(&mut acc, &edge_params[m], w);
+                total_w += w;
+            }
+        }
+        let new_global = finish(&acc, total_w);
+
+        // retain this round's lost uploads (newest entry per device wins)
+        let mut slot_of = vec![usize::MAX; self.topo.n_devices()];
+        for (j, &n) in scheduled.iter().enumerate() {
+            slot_of[n] = j;
+        }
+        for &n in buffer {
+            let j = slot_of[n];
+            debug_assert!(j != usize::MAX, "buffered device {n} was never scheduled");
+            stale.push(StaleEntry {
+                device: n,
+                edge: device_edge[j],
+                round_born: round,
+                weight: self.device_data[n].n_samples as f64,
+                params: Some(updated_last[j].clone()),
+            });
+        }
+        Ok((new_global, last_loss, astats))
+    }
+
     /// Bytes transmitted in one global iteration: H·Q device uplinks plus
     /// one edge→cloud upload per participating edge (downlinks are free per
     /// the standard assumption, §III-B).
@@ -290,12 +403,13 @@ impl<'e> HflTrainer<'e> {
         progress: impl FnMut(&IterRecord),
     ) -> anyhow::Result<RunResult> {
         self.run_policies_with(
-            scheduler, assigner, clusters, policy_seed, alloc_opts, None, progress,
+            scheduler, assigner, clusters, policy_seed, alloc_opts, None, None, progress,
         )
     }
 
     /// [`HflTrainer::run_policies`] with an optional fault layer
-    /// (DESIGN.md §11). With `None` (or an inactive profile) the loop is
+    /// (DESIGN.md §11) and optional staleness-weighted async aggregation
+    /// (DESIGN.md §13). With `None` (or an inactive profile) the loop is
     /// exactly the fault-free Algorithm 6 — same RNG draws, same records.
     /// With an active [`FaultPlan`]: churned/backed-off devices leave the
     /// schedule before assignment, the round resolves through the event
@@ -303,6 +417,14 @@ impl<'e> HflTrainer<'e> {
     /// only the survivors (their allocation re-solved without the dropped
     /// devices), and a total quorum loss skips aggregation, leaving the
     /// global model untouched.
+    ///
+    /// With an additionally active [`AsyncCfg`] (`alpha > 0`), deadline-
+    /// missed and quorum-voided uploads are retained in a [`StaleBuffer`]
+    /// and folded into their owning edge's eq.-2 aggregate on the next
+    /// aggregating round at weight `w_n · alpha^staleness`. `alpha = 0`
+    /// (or `async_cfg: None`) leaves the discard-mode byte stream
+    /// untouched: the async path never runs, no extra device trains, no
+    /// extra RNG draw happens.
     #[allow(clippy::too_many_arguments)]
     pub fn run_policies_with(
         &mut self,
@@ -312,6 +434,7 @@ impl<'e> HflTrainer<'e> {
         policy_seed: u64,
         alloc_opts: &SolverOpts,
         faults: Option<&FaultPlan>,
+        async_cfg: Option<AsyncCfg>,
         mut progress: impl FnMut(&IterRecord),
     ) -> anyhow::Result<RunResult> {
         let t_start = Instant::now();
@@ -322,6 +445,12 @@ impl<'e> HflTrainer<'e> {
         let mut session = faults
             .filter(|p| p.is_active())
             .map(|p| FaultSession::new(p.clone(), self.topo.n_devices()));
+        // the stale buffer only exists when both the fault layer and the
+        // async path are on — without faults nothing is ever dropped
+        let mut stale = async_cfg
+            .filter(|a| a.is_active() && session.is_some())
+            .map(StaleBuffer::new);
+        let mut prev_loss = f64::NAN;
 
         for i in 0..self.cfg.max_iters {
             let (scheduled, retries, assignment, assign_latency_s) = {
@@ -347,13 +476,25 @@ impl<'e> HflTrainer<'e> {
             debug_assert!(assignment.is_partition());
 
             let (iter_cost, sols) = eval_assignment(&self.topo, &assignment, alloc_opts);
-            let (survivors, fstats) = match &mut session {
-                None => (None, None),
+            let (survivors, fstats, stale_in) = match &mut session {
+                None => (None, None, Vec::new()),
                 Some(s) => {
                     let uploads = upload_times(&self.topo, &assignment, &sols);
                     let mut out = s.resolve(i, self.topo.edges.len(), &uploads);
                     out.stats.retries = retries;
-                    (Some(out.survivors), Some(out.stats))
+                    // deadline-missed + quorum-voided uploads are the
+                    // stale-buffer candidates: their local work finished,
+                    // only the aggregation was lost. Dropout losses are
+                    // gone, outage-blocked devices never transmitted.
+                    let mut stale_in: Vec<usize> = out
+                        .dropped
+                        .iter()
+                        .filter(|&&(_, c)| c == FailCause::Deadline)
+                        .map(|&(n, _)| n)
+                        .collect();
+                    stale_in.extend_from_slice(&out.voided);
+                    stale_in.sort_unstable();
+                    (Some(out.survivors), Some(out.stats), stale_in)
                 }
             };
             // dropped devices leave their edge's objective: the survivors'
@@ -366,13 +507,25 @@ impl<'e> HflTrainer<'e> {
             };
 
             let skip = fstats.map_or(false, |s| s.aborted) || live.num_devices() == 0;
+            let mut round_async = stale.as_ref().map(|_| RoundAsync::default());
             let loss = if skip {
-                // quorum lost (or nobody scheduled): skip aggregation, keep
-                // the global model untouched
-                0.0
+                // quorum lost (or nobody scheduled): skip aggregation and
+                // keep the global model untouched. The previous round's
+                // loss carries forward (first round: NaN, serialized
+                // empty) — recording 0.0 here would poison convergence
+                // post-processing with fake perfect-loss dips.
+                prev_loss
+            } else if let Some(buf) = &mut stale {
+                let (new_global, loss, astats) = self
+                    .train_global_iteration_async(&global, &assignment, live, buf, &stale_in, i)?;
+                global = new_global;
+                round_async = Some(astats);
+                prev_loss = loss;
+                loss
             } else {
                 let (new_global, loss) = self.train_global_iteration(&global, live)?;
                 global = new_global;
+                prev_loss = loss;
                 loss
             };
 
@@ -395,6 +548,7 @@ impl<'e> HflTrainer<'e> {
                 n_scheduled: scheduled.len(),
                 assign_latency_s,
                 faults: fstats,
+                stale: round_async,
             };
             progress(&rec);
             result.records.push(rec);

@@ -32,7 +32,8 @@ commands:
                              see `hfl policies`)
   sweep [preset|spec.toml]  scenario sweep: run a scheduler × assigner × H
                             grid, rayon-parallel on the native backend
-                            (presets: grid fig3 fig4 fig6 fig7 burst oracle_smoke;
+                            (presets: grid fig3 fig4 fig6 fig7 burst
+                                      oracle_smoke async_smoke;
                              --threads N  --iters N  --seeds N
                              --h-values 10,30  --mode cost|train
                              --schedulers k1,k2  --assigners k1,k2
@@ -50,6 +51,15 @@ commands:
                              --oracle-max-n N  skip rounds with more than
                                            N scheduled devices (≤64);
                              TOML specs take oracle = true / an [oracle]
+                             table
+                             --async-alpha A  staleness-weighted async
+                             aggregation: buffer deadline/quorum-voided
+                             uploads and mix them in at weight w·A^s
+                             (DESIGN.md §13), appending stale_used/
+                             mean_staleness columns; requires --faults
+                             --async-max-stale S  evict entries older
+                                           than S rounds (default 3);
+                             TOML specs take async = true / an [async]
                              table)
                             orchestration (cells stream to disk as they
                             finish; output bytes are identical for any
@@ -247,6 +257,7 @@ fn cmd_train(args: &Args, cfg: &Config, backend: &dyn Backend) -> anyhow::Result
         cfg.seed,
         &SolverOpts::default(),
         fplan.as_ref(),
+        None,
         |r| {
             let faults = match r.faults {
                 Some(f) if f.aborted => "  [round aborted: no edge met quorum]".to_string(),
@@ -346,6 +357,23 @@ fn cmd_sweep(args: &Args, cfg: &Config) -> anyhow::Result<()> {
         }
         spec.oracle = Some(o);
     }
+    // --async-alpha enables staleness-weighted aggregation (stale_used/
+    // mean_staleness columns); 0 is accepted and disables the path, which
+    // is how CI re-runs an [async] spec async-off for the byte-identity
+    // check
+    if let Some(a) = args.opt("async-alpha") {
+        let mut cfg = spec.async_cfg.take().unwrap_or_default();
+        cfg.alpha = a
+            .parse::<f64>()
+            .map_err(|_| anyhow::anyhow!("--async-alpha {a:?} is not a number"))?;
+        spec.async_cfg = Some(cfg);
+    }
+    let async_max_stale = args.get_usize("async-max-stale", 0)?;
+    if async_max_stale > 0 {
+        let mut cfg = spec.async_cfg.take().unwrap_or_default();
+        cfg.max_staleness = async_max_stale;
+        spec.async_cfg = Some(cfg);
+    }
     spec.iters = args.get_usize("iters", spec.iters)?;
     // explicit CLI shaping wins over TOML profile values (a TOML spec
     // otherwise re-overrides what load_config read into cfg)
@@ -416,6 +444,9 @@ fn cmd_sweep(args: &Args, cfg: &Config) -> anyhow::Result<()> {
         let extra = scenario::ExtraCols {
             faults: plan.spec.faults.is_active(),
             oracle: plan.spec.oracle.is_some(),
+            // alpha = 0 parks the whole async path, so its columns are
+            // gated on is_active() (not mere presence) to keep the bytes
+            stale: plan.spec.async_cfg.as_ref().is_some_and(|a| a.is_active()),
         };
         let (sink, rows, summary): (Box<dyn scenario::RecordSink>, _, _) = match kind {
             "csv" => {

@@ -20,6 +20,9 @@ pub struct IterRecord {
     pub assign_latency_s: f64,
     /// Fault-injection stats for this round; `None` on fault-free runs.
     pub faults: Option<crate::faults::RoundFaults>,
+    /// Async-aggregation stats (stale updates consumed this round);
+    /// `None` unless the `[async]` path is active (DESIGN.md §13).
+    pub stale: Option<crate::faults::RoundAsync>,
 }
 
 /// Per-round optimality-gap instrumentation (`--oracle` on `hfl sweep`):
@@ -111,6 +114,7 @@ mod tests {
             n_scheduled: 10,
             assign_latency_s: 0.0,
             faults: None,
+            stale: None,
         }
     }
 

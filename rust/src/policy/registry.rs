@@ -37,7 +37,7 @@ use super::assigners::{
     D3qnPolicy, FromAssigner, GreedyCost, OracleAssign, PortfolioAssign, StickyAssign,
 };
 use super::key::PolicyKey;
-use super::schedulers::{ChannelTopH, DeadlineSched, FedAvgPolicy, IkcPolicy, VkcPolicy};
+use super::schedulers::{ChannelTopH, DeadlineSched, FedAvgPolicy, IkcPolicy, MpSched, VkcPolicy};
 use super::{AssignPolicy, SchedulePolicy};
 use crate::assignment::drl::DrlAssigner;
 use crate::assignment::geo::Geographic;
@@ -454,12 +454,24 @@ impl PolicyRegistry {
                         },
                         ParamSpec {
                             key: "relay",
-                            help: "edge used for the completion prediction: nearest (best candidate edge)",
+                            help: "edge used for the completion prediction: nearest (best candidate edge) or best (all edges)",
                         },
                     ],
                     defaults: &[("ms", "1000"), ("relay", "nearest")],
                     clusters: ClusterNeed::None,
                     factory: sched_deadline,
+                },
+                SchedEntry {
+                    name: "mp",
+                    aliases: &[],
+                    summary: "matching pursuit: residual-damped best-edge rate picks (arXiv 2206.06679)",
+                    params: &[ParamSpec {
+                        key: "decay",
+                        help: "residual damping of the chosen edge per pick, in [0, 1] (default 0.5; 1 = the channel top-H pick)",
+                    }],
+                    defaults: &[("decay", "0.5")],
+                    clusters: ClusterNeed::None,
+                    factory: sched_mp,
                 },
             ],
             assigns: vec![
@@ -611,12 +623,23 @@ fn sched_channel(key: &PolicyKey, _env: &SchedEnv) -> anyhow::Result<Box<dyn Sch
 fn sched_deadline(key: &PolicyKey, _env: &SchedEnv) -> anyhow::Result<Box<dyn SchedulePolicy>> {
     let ms = key.get_f64("ms")?.unwrap_or(1000.0);
     anyhow::ensure!(ms > 0.0 && ms.is_finite(), "{key}: ms must be positive and finite");
-    let relay = key.get_str("relay").unwrap_or("nearest");
+    let best_relay = match key.get_str("relay").unwrap_or("nearest") {
+        "nearest" => false,
+        "best" => true,
+        relay => anyhow::bail!(
+            "{key}: unknown relay mode {relay:?} (supported: nearest, best)"
+        ),
+    };
+    Ok(Box::new(DeadlineSched::new(ms, best_relay, key.clone())))
+}
+
+fn sched_mp(key: &PolicyKey, _env: &SchedEnv) -> anyhow::Result<Box<dyn SchedulePolicy>> {
+    let decay = key.get_f64("decay")?.unwrap_or(0.5);
     anyhow::ensure!(
-        relay == "nearest",
-        "{key}: unknown relay mode {relay:?} (supported: nearest)"
+        (0.0..=1.0).contains(&decay),
+        "{key}: decay must lie in [0, 1]"
     );
-    Ok(Box::new(DeadlineSched::new(ms, key.clone())))
+    Ok(Box::new(MpSched::new(decay, key.clone())))
 }
 
 fn assign_d3qn<'e>(
@@ -843,7 +866,21 @@ mod tests {
         assert!(r.scheduler(&zero, &env).is_err());
         let relay = r.sched_key("deadline?relay=farthest").unwrap();
         assert!(r.scheduler(&relay, &env).is_err());
+        let best = r.sched_key("deadline?relay=best").unwrap();
+        assert!(r.scheduler(&best, &env).is_ok());
         assert!(r.sched_key("deadline?window=5").is_err());
+    }
+
+    #[test]
+    fn mp_defaults_and_param_validation() {
+        let r = PolicyRegistry::global();
+        assert_eq!(r.sched_key("mp").unwrap().to_string(), "mp?decay=0.5");
+        let env = SchedEnv { seed: 0 };
+        let ok = r.sched_key("mp?decay=1").unwrap();
+        assert!(r.scheduler(&ok, &env).is_ok());
+        let hot = r.sched_key("mp?decay=1.5").unwrap();
+        assert!(r.scheduler(&hot, &env).is_err());
+        assert!(r.sched_key("mp?greed=2").is_err());
     }
 
     #[test]

@@ -221,6 +221,10 @@ impl SchedulePolicy for ChannelTopH {
 /// channel scheduler assumes and the device's maximum CPU frequency — an
 /// optimistic bound, which is exactly what a deadline check wants (a device
 /// that misses it optimistically will certainly miss it allocated).
+/// `relay=best` widens the prediction to *every* edge via the on-demand
+/// gain fallback — in sparse (k-nearest) gain mode a device may complete
+/// faster through an edge outside its candidate set; dense mode already
+/// considers all edges, so there the two relays are identical.
 ///
 /// Under fault injection the ranking also consults
 /// [`RoundHistory::failure_count`](super::RoundHistory::failure_count):
@@ -230,25 +234,37 @@ impl SchedulePolicy for ChannelTopH {
 pub struct DeadlineSched {
     /// Round deadline in seconds (`ms` param / 1e3).
     deadline_s: f64,
+    /// `relay=best`: predict over all edges, not just the candidate set.
+    best_relay: bool,
     key: PolicyKey,
 }
 
 impl DeadlineSched {
-    pub fn new(deadline_ms: f64, key: PolicyKey) -> Self {
-        DeadlineSched { deadline_s: deadline_ms / 1e3, key }
+    pub fn new(deadline_ms: f64, best_relay: bool, key: PolicyKey) -> Self {
+        DeadlineSched { deadline_s: deadline_ms / 1e3, best_relay, key }
     }
 
     /// Predicted completion time of device `n`: fastest candidate edge
-    /// under a fair-share bandwidth split at max CPU frequency.
-    fn t_pred(topo: &Topology, n: usize, per_edge: usize) -> f64 {
+    /// (`relay=best`: fastest of all edges) under a fair-share bandwidth
+    /// split at max CPU frequency.
+    fn t_pred(&self, topo: &Topology, n: usize, per_edge: usize) -> f64 {
         let freq = topo.device(n).max_freq_hz;
-        let mut best = f64::INFINITY;
-        for m in topo.candidate_edges(n) {
+        let edge_t = |m: usize| {
             let alloc = DeviceAlloc {
                 bandwidth_hz: topo.edges[m].bandwidth_hz / per_edge as f64,
                 freq_hz: freq,
             };
-            best = best.min(device_cost(topo, n, m, alloc).t_total());
+            device_cost(topo, n, m, alloc).t_total()
+        };
+        let mut best = f64::INFINITY;
+        if self.best_relay {
+            for m in 0..topo.edges.len() {
+                best = best.min(edge_t(m));
+            }
+        } else {
+            for m in topo.candidate_edges(n) {
+                best = best.min(edge_t(m));
+            }
         }
         best
     }
@@ -263,7 +279,7 @@ impl SchedulePolicy for DeadlineSched {
         // round, so the ranking is history-dependent by design.
         let mut ranked: Vec<(bool, u32, f64, usize)> = (0..ctx.topo.n_devices())
             .map(|n| {
-                let t = Self::t_pred(ctx.topo, n, per_edge);
+                let t = self.t_pred(ctx.topo, n, per_edge);
                 (t > self.deadline_s, ctx.history.failure_count(n), t, n)
             })
             .collect();
@@ -276,6 +292,91 @@ impl SchedulePolicy for DeadlineSched {
         let mut sel: Vec<usize> = ranked[..ctx.h].iter().map(|r| r.3).collect();
         sel.sort_unstable();
         Ok(sel)
+    }
+
+    fn name(&self) -> String {
+        self.key.to_string()
+    }
+}
+
+/// Matching-pursuit scheduler (`mp?decay=0.5`), after the greedy
+/// residual-correlation device selection of MP-based scheduling
+/// (arXiv:2206.06679). Each edge carries a residual starting at 1.0; H
+/// times the scheduler picks the unselected device with the largest
+/// "correlation" `rate(n, m) · residual[m]` over its candidate edges and
+/// damps the chosen edge's residual by `decay` — every pick discounts the
+/// channel dimension it just explained, so the schedule spreads across
+/// edges instead of piling onto the single best cell (`decay=1` degrades
+/// to exactly the `channel` top-H pick). Fully deterministic — ties break
+/// on device id — and history-independent, so the selection is cached
+/// like [`ChannelTopH`].
+pub struct MpSched {
+    decay: f64,
+    key: PolicyKey,
+    cache: Option<(usize, Vec<usize>)>,
+}
+
+impl MpSched {
+    pub fn new(decay: f64, key: PolicyKey) -> Self {
+        MpSched { decay, key, cache: None }
+    }
+
+    fn rank(&self, topo: &Topology, h: usize) -> Vec<usize> {
+        let m_count = topo.edges.len();
+        let per_edge = ((h + m_count - 1) / m_count).max(1);
+        // per-device candidate (edge, rate) lists, priced like `channel`
+        let cand: Vec<Vec<(usize, f64)>> = (0..topo.n_devices())
+            .map(|n| {
+                let tx = topo.fleet.tx_power_w(n);
+                topo.candidate_edges(n)
+                    .map(|m| {
+                        let share = topo.edges[m].bandwidth_hz / per_edge as f64;
+                        (m, topo.channel.rate(share, topo.gain(n, m), tx))
+                    })
+                    .collect()
+            })
+            .collect();
+        let mut residual = vec![1.0f64; m_count];
+        let mut picked = vec![false; topo.n_devices()];
+        let mut sel = Vec::with_capacity(h);
+        for _ in 0..h {
+            // (score, device, edge) of the best remaining correlation;
+            // strict > keeps the lowest device id on exact ties
+            let mut best: Option<(f64, usize, usize)> = None;
+            for (n, edges) in cand.iter().enumerate() {
+                if picked[n] {
+                    continue;
+                }
+                let mut score = f64::NEG_INFINITY;
+                let mut at = 0;
+                for &(m, r) in edges {
+                    let c = r * residual[m];
+                    if c > score {
+                        score = c;
+                        at = m;
+                    }
+                }
+                if best.map_or(true, |(s, _, _)| score > s) {
+                    best = Some((score, n, at));
+                }
+            }
+            let (_, n, m) = best.expect("check_h guarantees H <= N");
+            picked[n] = true;
+            sel.push(n);
+            residual[m] *= self.decay;
+        }
+        sel.sort_unstable();
+        sel
+    }
+}
+
+impl SchedulePolicy for MpSched {
+    fn schedule(&mut self, ctx: &PolicyCtx) -> anyhow::Result<Vec<usize>> {
+        check_h(ctx, "mp")?;
+        if self.cache.as_ref().map(|(h, _)| *h) != Some(ctx.h) {
+            self.cache = Some((ctx.h, self.rank(ctx.topo, ctx.h)));
+        }
+        Ok(self.cache.as_ref().unwrap().1.clone())
     }
 
     fn name(&self) -> String {
@@ -353,7 +454,7 @@ mod tests {
     fn deadline_selects_h_distinct_and_is_deterministic() {
         let t = topo(6);
         let hist = RoundHistory::default();
-        let mut s = DeadlineSched::new(1000.0, PolicyKey::bare("deadline"));
+        let mut s = DeadlineSched::new(1000.0, false, PolicyKey::bare("deadline"));
         let a = s.schedule(&ctx(&t, &hist, 20)).unwrap();
         let b = s.schedule(&ctx(&t, &hist, 20)).unwrap();
         assert_eq!(a.len(), 20);
@@ -371,7 +472,7 @@ mod tests {
         let hist = RoundHistory::default();
         let h = 20;
         let per_edge = ((h + t.edges.len() - 1) / t.edges.len()).max(1);
-        let mut s = DeadlineSched::new(1e-9, PolicyKey::bare("deadline"));
+        let mut s = DeadlineSched::new(1e-9, false, PolicyKey::bare("deadline"));
         let sel = s.schedule(&ctx(&t, &hist, h)).unwrap();
         let worst_in =
             sel.iter().map(|&n| pred(&t, n, per_edge)).fold(0.0f64, f64::max);
@@ -398,7 +499,7 @@ mod tests {
         sorted.sort_by(f64::total_cmp);
         let k = 5;
         let cutoff_s = (sorted[k - 1] + sorted[k]) / 2.0;
-        let mut s = DeadlineSched::new(cutoff_s * 1e3, PolicyKey::bare("deadline"));
+        let mut s = DeadlineSched::new(cutoff_s * 1e3, false, PolicyKey::bare("deadline"));
         let sel = s.schedule(&ctx(&t, &hist, h)).unwrap();
         for (n, &p) in preds.iter().enumerate() {
             if p <= cutoff_s {
@@ -413,7 +514,7 @@ mod tests {
         // nonzero failure count pushes it behind every clean device.
         let t = topo(9);
         let mut hist = RoundHistory::default();
-        let mut s = DeadlineSched::new(1e12, PolicyKey::bare("deadline"));
+        let mut s = DeadlineSched::new(1e12, false, PolicyKey::bare("deadline"));
         let sel = s.schedule(&ctx(&t, &hist, 10)).unwrap();
         let victim = sel[0];
         hist.failures = vec![0; t.n_devices()];
@@ -421,6 +522,65 @@ mod tests {
         let sel2 = s.schedule(&ctx(&t, &hist, 10)).unwrap();
         assert!(!sel2.contains(&victim), "failing device {victim} still scheduled");
         assert_eq!(sel2.len(), 10);
+    }
+
+    #[test]
+    fn deadline_best_relay_matches_nearest_in_dense_mode() {
+        // dense gain mode: candidate_edges is already all M edges, so the
+        // two relay modes must predict — and therefore select — identically
+        let t = topo(6);
+        let hist = RoundHistory::default();
+        let mut near = DeadlineSched::new(1000.0, false, PolicyKey::bare("deadline"));
+        let mut best = DeadlineSched::new(1000.0, true, PolicyKey::bare("deadline"));
+        assert_eq!(
+            near.schedule(&ctx(&t, &hist, 20)).unwrap(),
+            best.schedule(&ctx(&t, &hist, 20)).unwrap()
+        );
+    }
+
+    #[test]
+    fn mp_selects_h_distinct_and_is_deterministic() {
+        let t = topo(11);
+        let hist = RoundHistory::default();
+        let mut s = MpSched::new(0.5, PolicyKey::bare("mp"));
+        let a = s.schedule(&ctx(&t, &hist, 20)).unwrap();
+        let b = s.schedule(&ctx(&t, &hist, 20)).unwrap();
+        assert_eq!(a.len(), 20);
+        let mut d = a.clone();
+        d.dedup();
+        assert_eq!(d.len(), 20, "duplicate devices scheduled");
+        assert_eq!(a, b, "mp scheduling must be deterministic");
+    }
+
+    #[test]
+    fn mp_with_decay_one_is_the_channel_pick() {
+        // decay = 1 never damps a residual, so every pick is simply the
+        // best remaining best-edge rate — exactly the channel top-H set
+        // under the same tie order (rate desc, id asc)
+        let t = topo(3);
+        let hist = RoundHistory::default();
+        let mut mp = MpSched::new(1.0, PolicyKey::bare("mp"));
+        let mut ch = ChannelTopH::new(None, PolicyKey::bare("channel"));
+        assert_eq!(
+            mp.schedule(&ctx(&t, &hist, 30)).unwrap(),
+            ch.schedule(&ctx(&t, &hist, 30)).unwrap()
+        );
+    }
+
+    #[test]
+    fn mp_damping_diversifies_away_from_channel() {
+        // decay = 0 zeroes an edge's residual at first use: after all M
+        // edges are spent every remaining correlation is 0 and ties fill
+        // with the lowest ids — a maximally diversity-driven pick that
+        // cannot coincide with the pure rate ranking
+        let t = topo(3);
+        let hist = RoundHistory::default();
+        let mut mp = MpSched::new(0.0, PolicyKey::bare("mp"));
+        let mut ch = ChannelTopH::new(None, PolicyKey::bare("channel"));
+        assert_ne!(
+            mp.schedule(&ctx(&t, &hist, 20)).unwrap(),
+            ch.schedule(&ctx(&t, &hist, 20)).unwrap()
+        );
     }
 
     #[test]

@@ -43,6 +43,9 @@ pub use sink::{
     emit_cell, CellSummary, CsvSink, ExtraCols, JsonlSink, MemorySink, MultiSink, RecordSink,
 };
 pub use spec::{OracleCfg, ScenarioSpec, SweepCell, SweepMode};
+// `AsyncCfg` lives in `faults` (the trainer consumes it) but is spec
+// surface like `OracleCfg`, so re-export it here too.
+pub use crate::faults::AsyncCfg;
 #[allow(deprecated)]
 pub use sweep::{run_sweep, run_sweep_serial};
 pub use sweep::{oracle_clusters, run_cell, CellResult, SweepResult, SweepRow};

@@ -254,6 +254,10 @@ impl SweepPlan {
         if let Some(o) = &s.oracle {
             canon.push_str(&format!("|oracle={},{}", o.nodes, o.max_devices));
         }
+        // same opt-in rule again: async-off manifests keep today's bytes
+        if let Some(a) = &s.async_cfg {
+            canon.push_str(&format!("|async={},{}", a.alpha, a.max_staleness));
+        }
         fnv1a64(canon.as_bytes())
     }
 

@@ -171,8 +171,35 @@ pub fn oracle_smoke(cfg: &Config) -> ScenarioSpec {
     }
 }
 
+/// Async-aggregation smoke (DESIGN.md §13): a lossy cost grid with
+/// `quorum = 1.0` — any dropout voids its whole edge, so landed uploads
+/// flow into the stale buffer every few rounds and the `stale_used` /
+/// `mean_staleness` columns exercise real consumption. Also the CI home of
+/// the PR 9 registry policies (`mp`, `deadline?relay=best`), so the new
+/// schedulers ride the 1-vs-N-thread byte-identity check.
+pub fn async_smoke(cfg: &Config) -> ScenarioSpec {
+    let mut faults = crate::faults::FaultProfile::lossy();
+    faults.quorum = 1.0;
+    ScenarioSpec {
+        name: "async_smoke".into(),
+        mode: SweepMode::Cost,
+        schedulers: vec![sched("fedavg"), sched("mp"), sched("deadline?relay=best")],
+        assigners: vec![assign("greedy"), assign("round-robin")],
+        h_values: vec![10, 30],
+        seeds: 2,
+        iters: 6,
+        seed: cfg.seed ^ 0xA51C,
+        k_clusters: cfg.k_clusters,
+        frac_major: cfg.frac_major,
+        system: cfg.system.clone(),
+        faults,
+        async_cfg: Some(crate::faults::AsyncCfg::default()),
+        ..ScenarioSpec::default()
+    }
+}
+
 /// Resolve a preset by name (`grid`, `fig3`, `fig4`, `fig6`, `fig7`,
-/// `burst`, `oracle_smoke`).
+/// `burst`, `oracle_smoke`, `async_smoke`).
 pub fn preset(name: &str, cfg: &Config) -> anyhow::Result<ScenarioSpec> {
     match name {
         "grid" => Ok(grid(cfg)),
@@ -182,8 +209,10 @@ pub fn preset(name: &str, cfg: &Config) -> anyhow::Result<ScenarioSpec> {
         "fig7" => Ok(fig7(cfg, cfg.datasets.first().map(String::as_str).unwrap_or("fmnist"))),
         "burst" => Ok(burst(cfg)),
         "oracle_smoke" => Ok(oracle_smoke(cfg)),
+        "async_smoke" => Ok(async_smoke(cfg)),
         other => anyhow::bail!(
-            "unknown scenario preset {other:?} (grid|fig3|fig4|fig6|fig7|burst|oracle_smoke)"
+            "unknown scenario preset {other:?} \
+             (grid|fig3|fig4|fig6|fig7|burst|oracle_smoke|async_smoke)"
         ),
     }
 }
@@ -195,7 +224,9 @@ mod tests {
     #[test]
     fn presets_validate() {
         let cfg = Config::default();
-        for name in ["grid", "fig3", "fig4", "fig6", "fig7", "burst", "oracle_smoke"] {
+        for name in
+            ["grid", "fig3", "fig4", "fig6", "fig7", "burst", "oracle_smoke", "async_smoke"]
+        {
             let s = preset(name, &cfg).unwrap();
             s.validate().unwrap_or_else(|e| panic!("{name}: {e}"));
             assert!(!s.cells().is_empty(), "{name} has no cells");
@@ -238,6 +269,19 @@ mod tests {
             o.nodes
         );
         assert!(s.h_values.iter().all(|&h| h <= o.max_devices), "no skipped rounds");
+    }
+
+    #[test]
+    fn async_smoke_buffers_under_total_quorum() {
+        let cfg = Config::default();
+        let s = async_smoke(&cfg);
+        assert!(matches!(s.mode, SweepMode::Cost));
+        assert!(s.faults.is_active());
+        assert_eq!(s.faults.quorum, 1.0, "total quorum feeds the stale buffer");
+        assert!(s.async_cfg.expect("async on").is_active());
+        let scheds: Vec<String> = s.schedulers.iter().map(|k| k.to_string()).collect();
+        assert!(scheds.contains(&"mp?decay=0.5".to_string()));
+        assert!(scheds.contains(&"deadline?ms=1000&relay=best".to_string()));
     }
 
     #[test]

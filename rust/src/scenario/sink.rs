@@ -136,15 +136,20 @@ const FAULT_COLS: [&str; 5] =
 /// (DESIGN.md §12): rounds the reference solve skipped (cell above the
 /// size cap) leave the fields empty (CSV) / null (JSONL).
 const ORACLE_COLS: [&str; 3] = ["opt_obj", "opt_gap", "oracle_proven"];
+/// Extra per-iteration columns emitted only when the `[async]` staleness-
+/// weighted aggregation path is configured (DESIGN.md §13); async-off
+/// output stays byte-identical to the fault-layer bytes.
+const ASYNC_COLS: [&str; 2] = ["stale_used", "mean_staleness"];
 
 /// Which opt-in column families a sink writes. Order is fixed: classic
-/// header, then fault columns, then oracle columns — each family appears
-/// only when its flag is set, so a sweep with both off reproduces the
-/// classic bytes exactly.
+/// header, then fault columns, then oracle columns, then async columns —
+/// each family appears only when its flag is set, so a sweep with all of
+/// them off reproduces the classic bytes exactly.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct ExtraCols {
     pub faults: bool,
     pub oracle: bool,
+    pub stale: bool,
 }
 
 fn rows_header(extra: ExtraCols) -> Vec<&'static str> {
@@ -154,6 +159,9 @@ fn rows_header(extra: ExtraCols) -> Vec<&'static str> {
     }
     if extra.oracle {
         h.extend(ORACLE_COLS);
+    }
+    if extra.stale {
+        h.extend(ASYNC_COLS);
     }
     h
 }
@@ -187,7 +195,7 @@ impl CsvSink {
     /// header when `fault_cols` (spec has an active fault profile) —
     /// fault-free sweeps keep today's bytes exactly.
     pub fn create_with(out_dir: &Path, stem: &str, fault_cols: bool) -> anyhow::Result<CsvSink> {
-        CsvSink::create_ext(out_dir, stem, ExtraCols { faults: fault_cols, oracle: false })
+        CsvSink::create_ext(out_dir, stem, ExtraCols { faults: fault_cols, ..ExtraCols::default() })
     }
 
     /// [`CsvSink::create`] with any combination of opt-in column families.
@@ -209,7 +217,7 @@ impl CsvSink {
 
     /// [`CsvSink::append`] for a file created with fault columns.
     pub fn append_with(out_dir: &Path, stem: &str, fault_cols: bool) -> anyhow::Result<CsvSink> {
-        CsvSink::append_ext(out_dir, stem, ExtraCols { faults: fault_cols, oracle: false })
+        CsvSink::append_ext(out_dir, stem, ExtraCols { faults: fault_cols, ..ExtraCols::default() })
     }
 
     /// [`CsvSink::append`] for a file created with `extra` column families.
@@ -266,6 +274,11 @@ impl RecordSink for CsvSink {
                     cols.extend(std::iter::repeat_with(String::new).take(3));
                 }
             }
+        }
+        if self.extra.stale {
+            let a = r.stale.unwrap_or_default();
+            cols.push(a.stale_used.to_string());
+            cols.push(format!("{:.3}", a.mean_staleness));
         }
         self.rows.row(&cols)
     }
@@ -355,7 +368,7 @@ impl JsonlSink {
     /// [`JsonlSink::create`] emitting the fault fields on every row when
     /// `fault_cols` (spec has an active fault profile).
     pub fn create_with(out_dir: &Path, stem: &str, fault_cols: bool) -> anyhow::Result<JsonlSink> {
-        JsonlSink::create_ext(out_dir, stem, ExtraCols { faults: fault_cols, oracle: false })
+        JsonlSink::create_ext(out_dir, stem, ExtraCols { faults: fault_cols, ..ExtraCols::default() })
     }
 
     /// [`JsonlSink::create`] with any combination of opt-in field families.
@@ -374,7 +387,7 @@ impl JsonlSink {
 
     /// [`JsonlSink::append`] for files created with fault fields.
     pub fn append_with(out_dir: &Path, stem: &str, fault_cols: bool) -> anyhow::Result<JsonlSink> {
-        JsonlSink::append_ext(out_dir, stem, ExtraCols { faults: fault_cols, oracle: false })
+        JsonlSink::append_ext(out_dir, stem, ExtraCols { faults: fault_cols, ..ExtraCols::default() })
     }
 
     /// [`JsonlSink::append`] for files created with `extra` field families.
@@ -436,6 +449,14 @@ impl RecordSink for JsonlSink {
                     ",\"opt_obj\":null,\"opt_gap\":null,\"oracle_proven\":null",
                 )?,
             }
+        }
+        if self.extra.stale {
+            let a = r.stale.unwrap_or_default();
+            write!(
+                self.rows,
+                ",\"stale_used\":{},\"mean_staleness\":{:.3}",
+                a.stale_used, a.mean_staleness,
+            )?;
         }
         writeln!(self.rows, "}}")?;
         Ok(())
@@ -660,6 +681,7 @@ mod tests {
             n_scheduled: 10,
             faults: None,
             oracle: None,
+            stale: None,
         }
     }
 
@@ -766,7 +788,7 @@ mod tests {
         let dir = std::env::temp_dir().join(format!("hfl_sink_oracle_{}", std::process::id()));
         std::fs::create_dir_all(&dir).unwrap();
         let mut plain = CsvSink::create(&dir, "p").unwrap();
-        let ex = ExtraCols { faults: false, oracle: true };
+        let ex = ExtraCols { oracle: true, ..ExtraCols::default() };
         let mut gapped = CsvSink::create_ext(&dir, "g", ex).unwrap();
         let mut jg = JsonlSink::create_ext(&dir, "g", ex).unwrap();
         let mut r = row(0);
@@ -798,6 +820,49 @@ mod tests {
         let line2 = lines.next().unwrap();
         assert!(line2.contains("\"oracle_proven\":null"), "{line2}");
         crate::util::json::Json::parse(line2).unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn async_columns_only_when_enabled() {
+        use crate::faults::{RoundAsync, RoundFaults};
+        let dir = std::env::temp_dir().join(format!("hfl_sink_async_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut plain = CsvSink::create_with(&dir, "p", true).unwrap();
+        // real async runs always carry the fault family too ([async]
+        // requires an active profile)
+        let ex = ExtraCols { faults: true, stale: true, ..ExtraCols::default() };
+        let mut asy = CsvSink::create_ext(&dir, "a", ex).unwrap();
+        let mut ja = JsonlSink::create_ext(&dir, "a", ex).unwrap();
+        let mut r = row(0);
+        r.faults = Some(RoundFaults::default());
+        r.stale = Some(RoundAsync { stale_used: 4, mean_staleness: 1.25 });
+        for s in [&mut plain as &mut dyn RecordSink, &mut asy, &mut ja] {
+            s.iter_row(&cell(0), &r).unwrap();
+            // an aborted round consumes nothing → zero stats
+            let mut quiet = row(1);
+            quiet.faults = r.faults;
+            quiet.stale = Some(RoundAsync::default());
+            s.iter_row(&cell(0), &quiet).unwrap();
+            s.cell_done(&summary(0)).unwrap();
+            s.finish().unwrap();
+        }
+        let p = std::fs::read_to_string(dir.join("sweep_p.csv")).unwrap();
+        assert!(p.lines().next().unwrap().ends_with("retries"), "{p}");
+        assert!(!p.contains("stale_used"));
+        let a = std::fs::read_to_string(dir.join("sweep_a.csv")).unwrap();
+        assert!(
+            a.lines().next().unwrap().ends_with(
+                "round_wall_ms,retries,stale_used,mean_staleness"
+            ),
+            "{a}"
+        );
+        assert!(a.lines().nth(1).unwrap().ends_with(",4,1.250"), "{a}");
+        assert!(a.lines().nth(2).unwrap().ends_with(",0,0.000"), "{a}");
+        let j = std::fs::read_to_string(dir.join("sweep_a.jsonl")).unwrap();
+        let line = j.lines().next().unwrap();
+        assert!(line.contains("\"stale_used\":4,\"mean_staleness\":1.250"), "{line}");
+        crate::util::json::Json::parse(line).unwrap();
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -31,7 +31,7 @@ use std::path::{Path, PathBuf};
 
 use crate::config::toml::{parse, Table, Value};
 use crate::config::{apply_system, Config};
-use crate::faults::{FaultPlan, FaultProfile};
+use crate::faults::{AsyncCfg, FaultPlan, FaultProfile};
 use crate::policy::{assign, sched, PolicyKey, PolicyRegistry};
 use crate::system::SystemParams;
 
@@ -114,6 +114,13 @@ pub struct ScenarioSpec {
     /// opt_obj/opt_gap/oracle_proven columns. `None` (the default) keeps
     /// classic headers byte-identical.
     pub oracle: Option<OracleCfg>,
+    /// Staleness-weighted async aggregation (`[async]` TOML table /
+    /// `--async-alpha` / `--async-max-stale`; DESIGN.md §13). Requires an
+    /// active fault profile — without drops there is nothing to retain.
+    /// `None` (the default) keeps discard-mode bytes untouched. The field
+    /// is named `async_cfg` because `async` is a Rust keyword; the TOML
+    /// surface stays `[async]`.
+    pub async_cfg: Option<AsyncCfg>,
 }
 
 /// Knobs for the `--oracle` gap instrumentation (DESIGN.md §12). Distinct
@@ -164,6 +171,7 @@ impl Default for ScenarioSpec {
             system: SystemParams::default(),
             faults: FaultProfile::none(),
             oracle: None,
+            async_cfg: None,
         }
     }
 }
@@ -302,6 +310,28 @@ impl ScenarioSpec {
             }
             s.oracle = Some(o);
         }
+        // `async = true` (defaults) or an `[async]` table with knobs —
+        // same switch/knob shape as oracle
+        if let Some(v) = t.get("async") {
+            let on = v.as_bool().ok_or_else(|| {
+                anyhow::anyhow!("async must be a boolean (use an [async] table for knobs)")
+            })?;
+            s.async_cfg = on.then(AsyncCfg::default);
+        }
+        if t.get("async.alpha").is_some() || t.get("async.max_staleness").is_some() {
+            let mut a = s.async_cfg.take().unwrap_or_default();
+            if let Some(v) = t.get("async.alpha") {
+                a.alpha = v
+                    .as_f64()
+                    .ok_or_else(|| anyhow::anyhow!("async.alpha must be a number"))?;
+            }
+            if let Some(v) = t.get("async.max_staleness") {
+                a.max_staleness = v
+                    .as_usize()
+                    .ok_or_else(|| anyhow::anyhow!("async.max_staleness must be an integer"))?;
+            }
+            s.async_cfg = Some(a);
+        }
         apply_system(t, &mut s.system);
         s.validate()?;
         Ok(s)
@@ -352,6 +382,14 @@ impl ScenarioSpec {
                 self.mode == SweepMode::Cost,
                 "the --oracle gap instrumentation runs in cost mode only \
                  (train mode has no per-round reference solve)"
+            );
+        }
+        if let Some(a) = &self.async_cfg {
+            a.validate()?;
+            anyhow::ensure!(
+                self.faults.is_active(),
+                "[async] requires an active fault profile — without drops \
+                 there is nothing to buffer (set faults = \"lossy\" or similar)"
             );
         }
         Ok(())
@@ -543,6 +581,44 @@ mod tests {
             "[oracle]\nmax_devices = 65",
             // cost mode only: train mode has no per-round reference solve
             "mode = \"train\"\noracle = true",
+        ] {
+            let t = parse(toml).unwrap();
+            assert!(ScenarioSpec::from_table(&t, &cfg).is_err(), "accepted {toml:?}");
+        }
+    }
+
+    #[test]
+    fn toml_async_switch_and_knobs() {
+        let cfg = Config::default();
+        // default: off
+        assert!(ScenarioSpec::default().async_cfg.is_none());
+        // top-level boolean switch → defaults (needs an active profile)
+        let t = parse("faults = \"lossy\"\nasync = true").unwrap();
+        let s = ScenarioSpec::from_table(&t, &cfg).unwrap();
+        assert_eq!(s.async_cfg, Some(AsyncCfg::default()));
+        let t = parse("async = false").unwrap();
+        assert!(ScenarioSpec::from_table(&t, &cfg).unwrap().async_cfg.is_none());
+        // [async] table: knobs imply the switch, unset knobs keep defaults
+        let t = parse("faults = \"bursty\"\n[async]\nalpha = 0.7\nmax_staleness = 5").unwrap();
+        let s = ScenarioSpec::from_table(&t, &cfg).unwrap();
+        assert_eq!(s.async_cfg, Some(AsyncCfg { alpha: 0.7, max_staleness: 5 }));
+        let t = parse("faults = \"lossy\"\n[async]\nalpha = 0.25").unwrap();
+        let s = ScenarioSpec::from_table(&t, &cfg).unwrap();
+        assert_eq!(s.async_cfg.unwrap().max_staleness, AsyncCfg::default().max_staleness);
+        // alpha = 0 is a valid "configured but disabled" state (the CI
+        // byte-identity gate runs it against plain discard mode)
+        let t = parse("faults = \"lossy\"\n[async]\nalpha = 0.0").unwrap();
+        let s = ScenarioSpec::from_table(&t, &cfg).unwrap();
+        assert!(!s.async_cfg.unwrap().is_active());
+        // bad values are rejected
+        for toml in [
+            "async = \"yes\"",
+            "faults = \"lossy\"\n[async]\nalpha = 1.5",
+            "faults = \"lossy\"\n[async]\nalpha = -0.1",
+            "faults = \"lossy\"\n[async]\nmax_staleness = 0",
+            // async without an active fault profile has nothing to buffer
+            "async = true",
+            "[async]\nalpha = 0.5",
         ] {
             let t = parse(toml).unwrap();
             assert!(ScenarioSpec::from_table(&t, &cfg).is_err(), "accepted {toml:?}");

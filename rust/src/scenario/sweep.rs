@@ -29,7 +29,9 @@ use crate::allocation::SolverOpts;
 use crate::assignment::evaluate;
 use crate::data::{partition, DeviceData};
 use crate::experiments::common::clusters_for;
-use crate::faults::{upload_times, FaultSession, RoundFaults};
+use crate::faults::{
+    upload_times, FailCause, FaultSession, RoundAsync, RoundFaults, StaleBuffer, StaleEntry,
+};
 use crate::fl::{HflConfig, HflTrainer};
 use crate::policy::{
     AssignEnv, AssignPolicy, ClusterNeed, PolicyCtx, PolicyKey, PolicyRegistry, RoundHistory,
@@ -62,6 +64,9 @@ pub struct SweepRow {
     /// is measured on the assignment the arm *committed* (pre-fault), so
     /// every arm is scored against the same reference solve.
     pub oracle: Option<crate::metrics::RoundOracle>,
+    /// Async-aggregation stats (`[async]`); `None` unless the async path
+    /// is configured with `alpha > 0` (DESIGN.md §13).
+    pub stale: Option<RoundAsync>,
 }
 
 /// The complete result of one grid cell.
@@ -236,6 +241,14 @@ pub fn run_cell(
             let mut session = spec
                 .fault_plan(dep)
                 .map(|p| FaultSession::new(p, topo.n_devices()));
+            // cost mode has no model, so the stale buffer is pure
+            // bookkeeping (params: None) — the classic/fault columns are
+            // untouched by [async], which is what the CI cut-and-diff
+            // byte-identity gate rests on
+            let mut stale_buf = spec
+                .async_cfg
+                .filter(|a| a.is_active() && session.is_some())
+                .map(StaleBuffer::new);
             let mut rows = Vec::with_capacity(spec.iters);
             let mut latencies = Vec::with_capacity(spec.iters);
             let mut history = RoundHistory::default();
@@ -265,14 +278,48 @@ pub fn run_cell(
                 let (cost, sols) = evaluate(&topo, &assignment, &opts);
                 // resolve the event clock; dropped devices leave their
                 // edge's objective (survivor allocation re-solved)
-                let (cost, fstats, survivors) = match &mut session {
-                    None => (cost, None, None),
+                let (cost, fstats, survivors, row_stale) = match &mut session {
+                    None => (cost, None, None, None),
                     Some(s) => {
                         let uploads = upload_times(&topo, &assignment, &sols);
                         let mut out = s.resolve(iter, topo.edges.len(), &uploads);
                         out.stats.retries = retries;
+                        // bookkeeping mirror of the trainer's async path
+                        // (same lifecycle, no params): an aggregating round
+                        // consumes entries at staleness 1..=max and buffers
+                        // this round's deadline-missed + quorum-voided
+                        // uploads; an aborted round does neither
+                        let row_stale = stale_buf.as_mut().map(|buf| {
+                            let skip =
+                                out.stats.aborted || out.survivors.num_devices() == 0;
+                            if skip {
+                                return RoundAsync::default();
+                            }
+                            let (_, astats) = buf.take_consumable(iter);
+                            let edge_index = assignment.edge_index();
+                            let mut stale_in: Vec<usize> = out
+                                .dropped
+                                .iter()
+                                .filter(|&&(_, c)| c == FailCause::Deadline)
+                                .map(|&(n, _)| n)
+                                .collect();
+                            stale_in.extend_from_slice(&out.voided);
+                            stale_in.sort_unstable();
+                            for n in stale_in {
+                                buf.push(StaleEntry {
+                                    device: n,
+                                    edge: edge_index
+                                        .edge_of(n)
+                                        .expect("dropped device unassigned"),
+                                    round_born: iter,
+                                    weight: 1.0,
+                                    params: None,
+                                });
+                            }
+                            astats
+                        });
                         let cost = evaluate(&topo, &out.survivors, &opts).0;
-                        (cost, Some(out.stats), Some(out.survivors))
+                        (cost, Some(out.stats), Some(out.survivors), row_stale)
                     }
                 };
                 // reference solve: compare the assignment the arm committed
@@ -328,6 +375,7 @@ pub fn run_cell(
                     n_scheduled: scheduled.len(),
                     faults: fstats,
                     oracle,
+                    stale: row_stale,
                 });
                 let surv: Option<Vec<usize>> = survivors
                     .as_ref()
@@ -381,6 +429,7 @@ pub fn run_cell(
                 policy_seed,
                 &SolverOpts::default(),
                 fplan.as_ref(),
+                spec.async_cfg,
                 |r| {
                     log::info!(
                         "sweep {} {sched_name}×{assigner_tag} H={} seed{} it{} acc {:.3} loss {:.3}",
@@ -403,12 +452,15 @@ pub fn run_cell(
                     e_i: r.e_i,
                     objective: r.e_i + lambda * r.t_i,
                     accuracy: Some(r.accuracy),
-                    train_loss: Some(r.train_loss),
+                    // a first-round abort has no loss to carry forward:
+                    // the trainer records NaN, serialized as an empty field
+                    train_loss: (!r.train_loss.is_nan()).then_some(r.train_loss),
                     msg_bytes: Some(r.msg_bytes),
                     n_scheduled: r.n_scheduled,
                     faults: r.faults,
                     // spec.validate() rejects --oracle in train mode
                     oracle: None,
+                    stale: r.stale,
                 })
                 .collect();
             let latencies: Vec<f64> =

@@ -1,0 +1,265 @@
+//! ISSUE 9 tentpole acceptance: staleness-weighted async aggregation.
+//!
+//! Properties:
+//! * an async lossy sweep (stale columns on) is **byte-identical** at 1 vs
+//!   4 rayon threads and across a 2-shard `hfl merge` — the stale buffer
+//!   is deterministic bookkeeping, never a race;
+//! * the stale trace is real: entries are consumed (`stale_used` > 0
+//!   somewhere) and every consumed batch's mean staleness lies in
+//!   `[1, max_staleness]`;
+//! * `alpha = 0` disables the path completely: output bytes equal a run
+//!   with no `[async]` table at all (the PR 7 discard semantics);
+//! * the buffer's lifecycle holds under six bursty rounds driven through
+//!   the real fault session: at most one entry per device, consumption
+//!   only in the `1..=max_staleness` window, older entries evicted.
+
+use std::path::{Path, PathBuf};
+
+use hfl::allocation::SolverOpts;
+use hfl::assignment::{evaluate, Assignment};
+use hfl::faults::{
+    upload_times, AsyncCfg, FailCause, FaultPlan, FaultProfile, FaultSession, StaleBuffer,
+    StaleEntry,
+};
+use hfl::policy::{assign, sched};
+use hfl::runtime::NativeBackend;
+use hfl::scenario::{
+    merge_dirs, CsvSink, ExtraCols, JsonlSink, MultiSink, RecordSink, RunOpts, ScenarioSpec,
+    Shard, SweepMode, SweepPlan,
+};
+use hfl::system::{SystemParams, Topology};
+use hfl::util::Rng;
+
+/// The fault-injection test grid under a total quorum: any dropout voids
+/// its whole edge, so landed uploads feed the stale buffer every round.
+fn async_spec(name: &str, async_cfg: Option<AsyncCfg>) -> ScenarioSpec {
+    let mut system = SystemParams::default();
+    system.n_devices = 24;
+    let mut faults = FaultProfile::lossy();
+    faults.set("dropout_prob", 0.5).unwrap();
+    faults.set("quorum", 1.0).unwrap();
+    ScenarioSpec {
+        name: name.into(),
+        mode: SweepMode::Cost,
+        schedulers: vec![sched("fedavg"), sched("mp")],
+        assigners: vec![assign("round-robin"), assign("greedy")],
+        h_values: vec![8, 12],
+        seeds: 2,
+        iters: 4,
+        seed: 47,
+        system,
+        faults,
+        async_cfg,
+        ..ScenarioSpec::default()
+    }
+}
+
+fn tmp(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("hfl_async_{tag}_{}", std::process::id()));
+    std::fs::remove_dir_all(&d).ok();
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// Run one plan into `dir` with both sinks and the exact column families
+/// `hfl sweep` would enable for this spec.
+fn run_plan(plan: &SweepPlan, dir: &Path, threads: usize) -> String {
+    let stem = plan.output_stem();
+    let extra = ExtraCols {
+        faults: plan.spec.faults.is_active(),
+        oracle: plan.spec.oracle.is_some(),
+        stale: plan.spec.async_cfg.as_ref().is_some_and(|a| a.is_active()),
+    };
+    let mut csv = CsvSink::create_ext(dir, &stem, extra).unwrap();
+    let mut jsonl = JsonlSink::create_ext(dir, &stem, extra).unwrap();
+    let mut sink = MultiSink::new(vec![
+        &mut csv as &mut dyn RecordSink,
+        &mut jsonl as &mut dyn RecordSink,
+    ]);
+    let opts = RunOpts {
+        manifest: Some(dir.join(format!("sweep_{stem}.manifest"))),
+        resume: false,
+        abort_after: None,
+    };
+    let backend = NativeBackend::new();
+    if threads <= 1 {
+        plan.run_serial(Some(&backend), &mut sink, &opts).unwrap();
+    } else {
+        plan.run_parallel(Some(&backend), threads, &mut sink, &opts).unwrap();
+    }
+    stem
+}
+
+const SUFFIXES: [&str; 4] = [".csv", "_summary.csv", ".jsonl", "_summary.jsonl"];
+
+fn read(dir: &Path, stem: &str, suffix: &str) -> String {
+    let p = dir.join(format!("sweep_{stem}{suffix}"));
+    std::fs::read_to_string(&p).unwrap_or_else(|e| panic!("missing {}: {e}", p.display()))
+}
+
+#[test]
+fn async_sweep_is_byte_identical_across_threads_and_shards() {
+    let max_staleness = AsyncCfg::default().max_staleness;
+    let serial_dir = tmp("serial");
+    let plan = SweepPlan::new(async_spec("asyncs", Some(AsyncCfg::default()))).unwrap();
+    run_plan(&plan, &serial_dir, 1);
+
+    let par_dir = tmp("par");
+    run_plan(&plan, &par_dir, 4);
+
+    let shard_dir = tmp("shards");
+    for i in (0..2usize).rev() {
+        let p = SweepPlan::sharded(
+            async_spec("asyncs", Some(AsyncCfg::default())),
+            Shard { index: i, count: 2 },
+        )
+        .unwrap();
+        run_plan(&p, &shard_dir, if i == 0 { 4 } else { 1 });
+    }
+    let merged_dir = tmp("merged");
+    merge_dirs(&[shard_dir.clone()], Some("asyncs"), &merged_dir).unwrap();
+
+    for suffix in SUFFIXES {
+        let want = read(&serial_dir, "asyncs", suffix);
+        assert!(!want.is_empty());
+        assert_eq!(
+            read(&par_dir, "asyncs", suffix),
+            want,
+            "sweep_asyncs{suffix}: 4-thread run diverged from serial"
+        );
+        assert_eq!(
+            read(&merged_dir, "asyncs", suffix),
+            want,
+            "sweep_asyncs{suffix}: shard+merge diverged from serial"
+        );
+    }
+
+    // the async columns must carry a real trace: stale updates consumed
+    // somewhere, and every batch's mean staleness inside the window
+    let rows = read(&serial_dir, "asyncs", ".csv");
+    let header = rows.lines().next().unwrap();
+    assert!(header.ends_with("round_wall_ms,retries,stale_used,mean_staleness"), "{header}");
+    let mut total_used = 0u64;
+    for line in rows.lines().skip(1) {
+        let cols: Vec<&str> = line.split(',').collect();
+        let used: u64 = cols[cols.len() - 2].parse().unwrap();
+        let mean: f64 = cols[cols.len() - 1].parse().unwrap();
+        total_used += used;
+        if used > 0 {
+            assert!(
+                mean >= 1.0 && mean <= max_staleness as f64,
+                "mean staleness {mean} outside [1, {max_staleness}]: {line}"
+            );
+        } else {
+            assert_eq!(mean, 0.0, "{line}");
+        }
+    }
+    assert!(total_used > 0, "a total-quorum lossy sweep never consumed a stale update");
+
+    for d in [serial_dir, par_dir, shard_dir, merged_dir] {
+        std::fs::remove_dir_all(&d).ok();
+    }
+}
+
+#[test]
+fn alpha_zero_reproduces_the_discard_bytes() {
+    // alpha = 0 must not just zero the weights — the async path may not
+    // run at all, so the output equals a spec with no [async] config
+    let off_dir = tmp("a0_off");
+    let plan = SweepPlan::new(async_spec("a0", None)).unwrap();
+    run_plan(&plan, &off_dir, 1);
+
+    let zero_dir = tmp("a0_zero");
+    let plan =
+        SweepPlan::new(async_spec("a0", Some(AsyncCfg { alpha: 0.0, max_staleness: 3 })))
+            .unwrap();
+    run_plan(&plan, &zero_dir, 4);
+
+    for suffix in SUFFIXES {
+        let want = read(&off_dir, "a0", suffix);
+        assert!(!want.is_empty());
+        assert_eq!(
+            read(&zero_dir, "a0", suffix),
+            want,
+            "sweep_a0{suffix}: alpha=0 diverged from the no-[async] bytes"
+        );
+    }
+    let header = read(&off_dir, "a0", ".csv");
+    let header = header.lines().next().unwrap();
+    assert!(!header.contains("stale_used"), "{header}");
+
+    std::fs::remove_dir_all(&off_dir).ok();
+    std::fs::remove_dir_all(&zero_dir).ok();
+}
+
+#[test]
+fn stale_buffer_lifecycle_holds_over_bursty_rounds() {
+    let mut params = SystemParams::default();
+    params.n_devices = 30;
+    let topo = Topology::generate(&params, &mut Rng::new(11));
+    let n_edges = topo.edges.len();
+
+    let mut profile = FaultProfile::bursty();
+    profile.set("dropout_prob", 0.3).unwrap();
+    profile.set("quorum", 1.0).unwrap();
+    let mut session = FaultSession::new(FaultPlan::new(profile, 1234), topo.n_devices());
+    let cfg = AsyncCfg { alpha: 0.5, max_staleness: 2 };
+    let mut buf = StaleBuffer::new(cfg);
+    let opts = SolverOpts::default();
+
+    let scheduled: Vec<usize> = (0..topo.n_devices()).collect();
+    let mut total_used = 0usize;
+    let mut total_buffered = 0usize;
+    for round in 0..6 {
+        let (eff, _retries) = session.filter(round, &scheduled);
+        let mut groups = vec![Vec::new(); n_edges];
+        for (i, &n) in eff.iter().enumerate() {
+            groups[i % n_edges].push(n);
+        }
+        let assignment = Assignment { groups };
+        let (_cost, sols) = evaluate(&topo, &assignment, &opts);
+        let uploads = upload_times(&topo, &assignment, &sols);
+        let out = session.resolve(round, n_edges, &uploads);
+        if out.stats.aborted || out.survivors.num_devices() == 0 {
+            continue; // aborted rounds neither consume nor buffer
+        }
+        let (consumed, stats) = buf.take_consumable(round);
+        assert_eq!(stats.stale_used, consumed.len());
+        for e in &consumed {
+            let staleness = round - e.round_born;
+            assert!(
+                (1..=cfg.max_staleness).contains(&staleness),
+                "round {round}: consumed entry of device {} at staleness {staleness}",
+                e.device
+            );
+        }
+        // device order ⇒ strictly increasing ids ⇒ no device twice
+        for w in consumed.windows(2) {
+            assert!(w[0].device < w[1].device, "round {round}: unsorted consumption");
+        }
+        total_used += consumed.len();
+        let edge_index = assignment.edge_index();
+        let mut stale_in: Vec<usize> = out
+            .dropped
+            .iter()
+            .filter(|&&(_, c)| c == FailCause::Deadline)
+            .map(|&(n, _)| n)
+            .collect();
+        stale_in.extend_from_slice(&out.voided);
+        stale_in.sort_unstable();
+        total_buffered += stale_in.len();
+        for n in stale_in {
+            buf.push(StaleEntry {
+                device: n,
+                edge: edge_index.edge_of(n).expect("dropped device unassigned"),
+                round_born: round,
+                weight: 1.0,
+                params: None,
+            });
+        }
+        // nothing older than the eviction window may survive a drain
+        assert!(buf.len() <= topo.n_devices());
+    }
+    assert!(total_buffered > 0, "total quorum under bursty dropout buffered nothing");
+    assert!(total_used > 0, "six bursty rounds never consumed a stale update");
+}

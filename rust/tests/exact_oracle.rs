@@ -160,6 +160,7 @@ fn run_csv(plan: &SweepPlan, dir: &Path, threads: usize) -> String {
     let extra = hfl::scenario::ExtraCols {
         faults: plan.spec.faults.is_active(),
         oracle: plan.spec.oracle.is_some(),
+        stale: plan.spec.async_cfg.as_ref().is_some_and(|a| a.is_active()),
     };
     let mut csv = CsvSink::create_ext(dir, &stem, extra).unwrap();
     let backend = NativeBackend::new();
