@@ -1,0 +1,170 @@
+"""Toolchain-less oracle for the `hfl top` tailer (ISSUE 10).
+
+A literal Python transcription of `rust/src/fleet/tail.rs` — the
+torn-write-safe incremental reader `hfl top` uses on live sweep outputs:
+only newline-terminated bytes are consumed, the consumed offset is
+remembered between polls, UTF-8 is validated only over terminated lines,
+and a file that SHRANK below the remembered offset (a `--resume`
+truncating a crash tail) rewinds to zero and tells the caller to discard
+accumulated state. When no Rust toolchain is available (see
+.claude/skills/verify/SKILL.md), a change to that logic should be
+mirrored here first: an off-by-one in the consume point or a missed
+rewind fails these tests without ever compiling the Rust.
+
+Stdlib only (no numpy).
+"""
+import io
+import json
+import os
+import random
+import tempfile
+import unittest
+
+
+class Tailer:
+    """Mirror of fleet::tail::Tailer. poll() -> (lines, rewound)."""
+
+    def __init__(self, path):
+        self.path = path
+        self.offset = 0  # bytes consumed, always at a line boundary
+
+    def poll(self):
+        lines, rewound = [], False
+        try:
+            f = open(self.path, "rb")
+        except FileNotFoundError:
+            return lines, rewound
+        with f:
+            f.seek(0, io.SEEK_END)
+            length = f.tell()
+            if length < self.offset:
+                # resume truncated the file under us
+                self.offset = 0
+                rewound = True
+            if length == self.offset:
+                return lines, rewound
+            f.seek(self.offset)
+            buf = f.read()
+        # consume only through the last newline; the torn tail (possibly
+        # mid-UTF-8) stays for a future poll
+        cut = buf.rfind(b"\n")
+        if cut < 0:
+            return lines, rewound
+        consumed = buf[: cut + 1]
+        text = consumed.decode("utf-8")  # error only on terminated lines
+        self.offset += len(consumed)
+        lines.extend(l.rstrip("\r") for l in text.split("\n")[:-1])
+        return lines, rewound
+
+
+def jsonl_stream(cells=6, iters=3):
+    """A structurally faithful JSONL row stream (ascii + one unicode key)."""
+    out = []
+    for c in range(cells):
+        for it in range(iters):
+            out.append(
+                json.dumps(
+                    {
+                        "cell": c,
+                        "scheduler": "ikc" if c % 2 else "vkcé",  # é: 2-byte UTF-8
+                        "iter": it,
+                        "objective": round(c * 7.0 + it, 6),
+                    },
+                    separators=(",", ":"),
+                )
+            )
+    return ("\n".join(out) + "\n").encode("utf-8")
+
+
+class TailerMirrorTest(unittest.TestCase):
+    def setUp(self):
+        self.dir = tempfile.mkdtemp(prefix="hfl_tail_mirror_")
+        self.path = os.path.join(self.dir, "rows.jsonl")
+
+    def test_missing_file_is_empty_not_an_error(self):
+        lines, rewound = Tailer(os.path.join(self.dir, "never")).poll()
+        self.assertEqual(lines, [])
+        self.assertFalse(rewound)
+
+    def test_consumes_only_terminated_lines(self):
+        with open(self.path, "wb") as f:
+            f.write(b'{"cell":0}\n{"cell":1')
+        t = Tailer(self.path)
+        lines, _ = t.poll()
+        self.assertEqual(lines, ['{"cell":0}'])
+        self.assertEqual(t.offset, 11)
+        with open(self.path, "ab") as f:
+            f.write(b"}\n")
+        lines, _ = t.poll()
+        self.assertEqual(lines, ['{"cell":1}'])
+        self.assertEqual(t.poll(), ([], False))
+
+    def test_adversarial_chunk_splits_never_tear_lines(self):
+        """The tentpole property: for ANY chunking of a real byte stream —
+        including splits inside multi-byte UTF-8 sequences — no poll yields
+        a partial line, and the concatenation is exactly the stream."""
+        full = jsonl_stream()
+        want = full.decode("utf-8").splitlines()
+        rng = random.Random(31)
+        schedules = [[1], [2, 3, 5, 7, 11]] + [
+            [rng.randint(1, 17) for _ in range(64)] for _ in range(20)
+        ]
+        for sizes in schedules:
+            with open(self.path, "wb"):
+                pass
+            t = Tailer(self.path)
+            got, i, si = [], 0, 0
+            while i < len(full):
+                n = min(sizes[si % len(sizes)], len(full) - i)
+                si += 1
+                with open(self.path, "ab") as f:
+                    f.write(full[i : i + n])
+                i += n
+                lines, rewound = t.poll()
+                self.assertFalse(rewound)
+                for line in lines:
+                    json.loads(line)  # torn line would fail to parse
+                    got.append(line)
+            self.assertEqual(got, want, f"chunk schedule {sizes} tore lines")
+            self.assertEqual(t.offset, len(full))
+
+    def test_mid_utf8_tear_is_never_yielded(self):
+        # "é" = 0xC3 0xA9; cut between the bytes after a terminated line
+        with open(self.path, "wb") as f:
+            f.write(b"ok\n\xc3")
+        t = Tailer(self.path)
+        lines, _ = t.poll()
+        self.assertEqual(lines, ["ok"])
+        self.assertEqual(t.offset, 3)
+        with open(self.path, "ab") as f:
+            f.write(b"\xa9x\n")
+        lines, _ = t.poll()
+        self.assertEqual(lines, ["éx"])
+
+    def test_shrunken_file_rewinds_and_replays(self):
+        with open(self.path, "wb") as f:
+            f.write(b"a\nb\nc\n")
+        t = Tailer(self.path)
+        lines, _ = t.poll()
+        self.assertEqual(lines, ["a", "b", "c"])
+        # a resume truncated back past our offset
+        with open(self.path, "wb") as f:
+            f.write(b"a\n")
+        lines, rewound = t.poll()
+        self.assertTrue(rewound, "shrink must signal a rewind")
+        self.assertEqual(lines, ["a"])
+        self.assertEqual(t.offset, 2)
+
+    def test_same_length_rewrite_is_not_a_rewind(self):
+        # the rewind heuristic is length-based (like the Rust); equal-length
+        # rewrites are indistinguishable and must at least not duplicate
+        with open(self.path, "wb") as f:
+            f.write(b"a\nb\n")
+        t = Tailer(self.path)
+        t.poll()
+        lines, rewound = t.poll()
+        self.assertEqual((lines, rewound), ([], False))
+
+
+if __name__ == "__main__":
+    unittest.main()

@@ -96,6 +96,27 @@ impl Args {
         }
     }
 
+    /// Collect the subset of options/flags named in `keys` as a flat argv
+    /// fragment (`--key value` / `--flag`), marking them consumed.
+    /// `hfl fleet` uses this to forward sweep-shaping options verbatim to
+    /// its worker subprocesses: the worker re-parses the same tokens, so a
+    /// fleet cell grid is *definitionally* the single-host cell grid.
+    /// Deterministic order (the order of `keys`), so worker argvs — and
+    /// therefore manifest fingerprints — are stable across runs.
+    pub fn passthrough(&self, keys: &[&str]) -> Vec<String> {
+        let mut out = Vec::new();
+        for key in keys {
+            self.mark(key);
+            if let Some(v) = self.opts.get(*key) {
+                out.push(format!("--{key}"));
+                out.push(v.clone());
+            } else if self.flags.iter().any(|f| f == key) {
+                out.push(format!("--{key}"));
+            }
+        }
+        out
+    }
+
     /// Error on unrecognized options (call after all gets).
     pub fn finish(&self) -> anyhow::Result<()> {
         let seen = self.consumed.borrow();
@@ -132,6 +153,14 @@ mod tests {
     fn unknown_option_fails_finish() {
         let a = Args::parse(&argv("train --oops 3")).unwrap();
         assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn passthrough_rebuilds_tokens_in_key_order() {
+        let a = Args::parse(&argv("fleet fig3 --seeds 5 --oracle --iters 2")).unwrap();
+        let fwd = a.passthrough(&["iters", "seeds", "oracle", "absent"]);
+        assert_eq!(fwd, vec!["--iters", "2", "--seeds", "5", "--oracle"]);
+        a.finish().unwrap(); // passthrough marks its keys consumed
     }
 
     #[test]

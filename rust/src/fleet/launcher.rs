@@ -1,0 +1,314 @@
+//! Pluggable worker launch: local subprocesses today, ssh+rsync for real
+//! clusters, and (in tests) in-process fakes — all behind one trait so the
+//! supervisor never cares where a shard runs.
+//!
+//! [`LocalLauncher`] spawns `hfl sweep --shard …` subprocesses with
+//! stdout/stderr redirected to a per-worker log file. [`SshLauncher`]
+//! drives `ssh` (run the remote sweep) and `rsync` (pull the shard outputs
+//! back); the command lines it runs are built by the pure functions
+//! [`ssh_argv`] / [`rsync_pull_argv`], which CI unit-tests without a
+//! cluster.
+
+use std::fs::OpenOptions;
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+
+use super::spec::SshHost;
+
+/// Everything needed to launch (and re-launch) one worker.
+#[derive(Clone, Debug)]
+pub struct WorkerCmd {
+    /// Roster name, for logs and events.
+    pub worker: String,
+    /// `hfl` arguments, program excluded (e.g. `["sweep", "fig3",
+    /// "--shard", "0/3", …]`).
+    pub argv: Vec<String>,
+    /// `None` = local subprocess.
+    pub host: Option<SshHost>,
+    /// Local directory the shard's outputs must end up in (the launch
+    /// directory for local workers, the rsync destination for ssh ones).
+    pub local_out: PathBuf,
+    /// Local path of the shard manifest once outputs are local — the
+    /// supervisor's progress/completeness probe.
+    pub manifest: PathBuf,
+    /// Local log file capturing the worker's stdout+stderr.
+    pub log: PathBuf,
+}
+
+/// A launched worker the supervisor can poll and kill.
+pub trait WorkerHandle: Send {
+    /// Non-blocking: `Some(exit_code)` once the worker exited.
+    fn poll(&mut self) -> anyhow::Result<Option<i32>>;
+    /// Best-effort terminate (used on liveness timeout and fleet abort).
+    fn kill(&mut self);
+}
+
+/// Launch workers and move their outputs; see the module docs.
+pub trait Launcher {
+    fn launch(&mut self, cmd: &WorkerCmd) -> anyhow::Result<Box<dyn WorkerHandle>>;
+
+    /// A monotone progress measurement for liveness timeouts — the local
+    /// manifest's byte length where observable, `None` where it isn't
+    /// (remote workers), so unknown progress never false-positives a kill.
+    fn progress(&mut self, cmd: &WorkerCmd) -> Option<u64> {
+        let _ = cmd;
+        None
+    }
+
+    /// Bring a finished worker's outputs into `cmd.local_out` (no-op for
+    /// local workers, rsync for ssh ones).
+    fn fetch(&mut self, cmd: &WorkerCmd) -> anyhow::Result<()> {
+        let _ = cmd;
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Local subprocesses
+// ---------------------------------------------------------------------------
+
+struct ChildHandle(Child);
+
+impl WorkerHandle for ChildHandle {
+    fn poll(&mut self) -> anyhow::Result<Option<i32>> {
+        match self.0.try_wait()? {
+            None => Ok(None),
+            // a signal death has no code; report it as a conventional
+            // nonzero so the supervisor treats it as a crash
+            Some(status) => Ok(Some(status.code().unwrap_or(128))),
+        }
+    }
+
+    fn kill(&mut self) {
+        self.0.kill().ok();
+        self.0.wait().ok();
+    }
+}
+
+/// Spawn workers as local `hfl` subprocesses.
+pub struct LocalLauncher {
+    /// The `hfl` binary to run (the supervisor passes its own
+    /// `std::env::current_exe`).
+    pub program: PathBuf,
+}
+
+impl Launcher for LocalLauncher {
+    fn launch(&mut self, cmd: &WorkerCmd) -> anyhow::Result<Box<dyn WorkerHandle>> {
+        let log = OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&cmd.log)
+            .map_err(|e| anyhow::anyhow!("cannot open {}: {e}", cmd.log.display()))?;
+        let err = log.try_clone()?;
+        let child = Command::new(&self.program)
+            .args(&cmd.argv)
+            .stdin(Stdio::null())
+            .stdout(Stdio::from(log))
+            .stderr(Stdio::from(err))
+            .spawn()
+            .map_err(|e| anyhow::anyhow!("cannot spawn {}: {e}", self.program.display()))?;
+        Ok(Box::new(ChildHandle(child)))
+    }
+
+    fn progress(&mut self, cmd: &WorkerCmd) -> Option<u64> {
+        std::fs::metadata(&cmd.manifest).map(|m| m.len()).ok()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ssh + rsync
+// ---------------------------------------------------------------------------
+
+/// POSIX-shell single-quote `s` for the remote command line.
+fn sh_quote(s: &str) -> String {
+    if !s.is_empty()
+        && s.bytes().all(|b| b.is_ascii_alphanumeric() || matches!(b, b'-' | b'_' | b'.' | b'/' | b':' | b',' | b'='))
+    {
+        return s.to_string();
+    }
+    format!("'{}'", s.replace('\'', r"'\''"))
+}
+
+/// The `ssh` argv that runs one remote worker: change into its remote
+/// dir (the shard's `--out` is relative to it) and exec the remote `hfl`.
+/// Pure — unit-testable without a cluster.
+pub fn ssh_argv(cmd: &WorkerCmd) -> anyhow::Result<Vec<String>> {
+    let host = cmd
+        .host
+        .as_ref()
+        .ok_or_else(|| anyhow::anyhow!("worker {}: ssh launch without a host", cmd.worker))?;
+    let mut remote = format!("mkdir -p {dir} && cd {dir} && {hfl}",
+        dir = sh_quote(&host.dir),
+        hfl = sh_quote(&host.hfl));
+    for a in &cmd.argv {
+        remote.push(' ');
+        remote.push_str(&sh_quote(a));
+    }
+    Ok(vec![
+        "ssh".to_string(),
+        "-o".to_string(),
+        "BatchMode=yes".to_string(),
+        host.addr.clone(),
+        remote,
+    ])
+}
+
+/// The `rsync` argv that pulls a finished remote worker's outputs back
+/// into `cmd.local_out`. Pure — unit-testable without a cluster.
+pub fn rsync_pull_argv(cmd: &WorkerCmd) -> anyhow::Result<Vec<String>> {
+    let host = cmd
+        .host
+        .as_ref()
+        .ok_or_else(|| anyhow::anyhow!("worker {}: rsync without a host", cmd.worker))?;
+    Ok(vec![
+        "rsync".to_string(),
+        "-az".to_string(),
+        format!("{}:{}/", host.addr, host.dir.trim_end_matches('/')),
+        format!("{}/", cmd.local_out.display()),
+    ])
+}
+
+/// Launch workers over `ssh`, pulling outputs back with `rsync`.
+#[derive(Default)]
+pub struct SshLauncher;
+
+impl Launcher for SshLauncher {
+    fn launch(&mut self, cmd: &WorkerCmd) -> anyhow::Result<Box<dyn WorkerHandle>> {
+        let argv = ssh_argv(cmd)?;
+        let log = OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&cmd.log)
+            .map_err(|e| anyhow::anyhow!("cannot open {}: {e}", cmd.log.display()))?;
+        let err = log.try_clone()?;
+        let child = Command::new(&argv[0])
+            .args(&argv[1..])
+            .stdin(Stdio::null())
+            .stdout(Stdio::from(log))
+            .stderr(Stdio::from(err))
+            .spawn()
+            .map_err(|e| anyhow::anyhow!("cannot spawn ssh: {e}"))?;
+        Ok(Box::new(ChildHandle(child)))
+    }
+
+    // progress stays `None`: the manifest grows on the remote host, and a
+    // liveness probe that stat()s a never-updated local path would kill
+    // every healthy remote worker.
+
+    fn fetch(&mut self, cmd: &WorkerCmd) -> anyhow::Result<()> {
+        let argv = rsync_pull_argv(cmd)?;
+        let status = Command::new(&argv[0])
+            .args(&argv[1..])
+            .status()
+            .map_err(|e| anyhow::anyhow!("cannot spawn rsync: {e}"))?;
+        anyhow::ensure!(
+            status.success(),
+            "worker {}: rsync pull failed with {status}",
+            cmd.worker
+        );
+        Ok(())
+    }
+}
+
+/// Route each worker to the launcher its roster entry calls for: ssh when
+/// the worker has a host, a local subprocess otherwise — which is what
+/// lets one `hosts.toml` mix the local machine with remote hosts.
+pub struct DispatchLauncher {
+    local: LocalLauncher,
+    ssh: SshLauncher,
+}
+
+impl DispatchLauncher {
+    pub fn new(program: PathBuf) -> DispatchLauncher {
+        DispatchLauncher { local: LocalLauncher { program }, ssh: SshLauncher }
+    }
+
+    fn pick(&mut self, cmd: &WorkerCmd) -> &mut dyn Launcher {
+        if cmd.host.is_some() {
+            &mut self.ssh
+        } else {
+            &mut self.local
+        }
+    }
+}
+
+impl Launcher for DispatchLauncher {
+    fn launch(&mut self, cmd: &WorkerCmd) -> anyhow::Result<Box<dyn WorkerHandle>> {
+        self.pick(cmd).launch(cmd)
+    }
+
+    fn progress(&mut self, cmd: &WorkerCmd) -> Option<u64> {
+        self.pick(cmd).progress(cmd)
+    }
+
+    fn fetch(&mut self, cmd: &WorkerCmd) -> anyhow::Result<()> {
+        self.pick(cmd).fetch(cmd)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ssh_cmd() -> WorkerCmd {
+        WorkerCmd {
+            worker: "alpha".into(),
+            argv: vec![
+                "sweep".into(),
+                "fig3".into(),
+                "--shard".into(),
+                "0/2:0-6".into(),
+                "--out".into(),
+                "results".into(),
+            ],
+            host: Some(SshHost {
+                addr: "user@alpha".into(),
+                dir: "/scratch/hfl run".into(), // space forces quoting
+                hfl: "/opt/hfl/bin/hfl".into(),
+            }),
+            local_out: PathBuf::from("/tmp/fleet"),
+            manifest: PathBuf::from("/tmp/fleet/sweep_x.manifest"),
+            log: PathBuf::from("/tmp/fleet/fleet_alpha.log"),
+        }
+    }
+
+    #[test]
+    fn ssh_argv_is_quoted_and_batch_mode() {
+        let argv = ssh_argv(&ssh_cmd()).unwrap();
+        assert_eq!(&argv[..3], &["ssh", "-o", "BatchMode=yes"]);
+        assert_eq!(argv[3], "user@alpha");
+        let remote = &argv[4];
+        assert_eq!(
+            remote,
+            "mkdir -p '/scratch/hfl run' && cd '/scratch/hfl run' && \
+             /opt/hfl/bin/hfl sweep fig3 --shard 0/2:0-6 --out results"
+        );
+    }
+
+    #[test]
+    fn rsync_pull_targets_local_out() {
+        let argv = rsync_pull_argv(&ssh_cmd()).unwrap();
+        assert_eq!(argv[0], "rsync");
+        assert_eq!(argv[1], "-az");
+        assert_eq!(argv[2], "user@alpha:/scratch/hfl run/");
+        assert_eq!(argv[3], "/tmp/fleet/");
+    }
+
+    #[test]
+    fn local_workers_refuse_ssh_command_builders() {
+        let mut cmd = ssh_cmd();
+        cmd.host = None;
+        assert!(ssh_argv(&cmd).is_err());
+        assert!(rsync_pull_argv(&cmd).is_err());
+    }
+
+    #[test]
+    fn quoting_handles_hostile_strings() {
+        assert_eq!(sh_quote("plain-1.2/x"), "plain-1.2/x");
+        assert_eq!(sh_quote("has space"), "'has space'");
+        assert_eq!(sh_quote("a'b"), r"'a'\''b'");
+        assert_eq!(sh_quote(""), "''");
+        assert_eq!(sh_quote("$HOME"), "'$HOME'");
+        assert_eq!(sh_quote("a;rm -rf"), "'a;rm -rf'");
+    }
+}

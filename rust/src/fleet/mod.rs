@@ -1,0 +1,50 @@
+//! `hfl fleet` + `hfl top` — multi-worker sweep orchestration and live
+//! observability over the PR-5 shard/manifest substrate.
+//!
+//! PR 5 made sweeps shardable (`--shard i/N`), crash-safe (per-shard
+//! manifests + `--resume`) and reassemblable (`hfl merge`), but stopped at
+//! "run these N commands yourself." This module closes the loop:
+//!
+//! * [`spec`] — the worker roster: `--workers local:K` (K equal local
+//!   subprocesses, round-robin `i/K` shards) or `--workers-file hosts.toml`
+//!   (named hosts with weights, turned into contiguous
+//!   [`Shard::Range`](crate::scenario::Shard) splits via
+//!   [`Shard::split_weighted`](crate::scenario::Shard::split_weighted) so a
+//!   2× host gets 2× the cells).
+//! * [`launcher`] — the pluggable [`launcher::Launcher`] trait:
+//!   [`launcher::LocalLauncher`] spawns `hfl sweep` subprocesses;
+//!   [`launcher::SshLauncher`] drives `ssh`/`rsync`, with the command
+//!   lines built by pure functions so CI tests the generated argv without
+//!   a cluster.
+//! * [`supervisor`] — launch, liveness-watch (manifest growth), detect
+//!   death (nonzero exit, or a zero exit with an incomplete manifest),
+//!   re-dispatch the dead worker's shard with `--resume` up to a retry
+//!   cap, then run the existing merge path. Because every worker IS a
+//!   plain `hfl sweep --shard` run writing the PR-5 manifests/sinks, the
+//!   merged output is byte-identical to a single-host run by construction
+//!   — the fleet layer adds no new serialization format.
+//! * [`tail`] — a torn-write-safe incremental file [`tail::Tailer`]
+//!   mirroring the `util::csv::OffsetFile` discipline on the read side:
+//!   only newline-terminated lines are consumed, byte offsets are
+//!   remembered between polls, and a shrunken file (resume truncated a
+//!   crash tail) signals a rewind instead of yielding garbage.
+//! * [`view`] — `hfl top`: tail the per-shard manifests and JSONL sinks
+//!   in any results directory and render per-shard progress, per-cell
+//!   latest round/loss/accuracy, fault/stale counters, throughput and an
+//!   ETA as a plain-ANSI redraw loop (`--once` prints a single snapshot
+//!   for tests/CI).
+//!
+//! See DESIGN.md §14 for the liveness/re-dispatch contract and the
+//! byte-identity argument.
+
+pub mod launcher;
+pub mod spec;
+pub mod supervisor;
+pub mod tail;
+pub mod view;
+
+pub use launcher::{DispatchLauncher, LocalLauncher, Launcher, SshLauncher, WorkerCmd, WorkerHandle};
+pub use spec::{FleetSpec, FleetWorker, SshHost};
+pub use supervisor::{supervise, FleetEvent, FleetOpts, FleetOutcome, WorkerPlan};
+pub use tail::{TailPoll, Tailer};
+pub use view::TopSession;

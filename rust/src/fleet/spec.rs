@@ -1,0 +1,343 @@
+//! The fleet roster: who the workers are, how heavy they are, and how the
+//! cell id space is split between them.
+//!
+//! Two sources:
+//!
+//! * `--workers local:K` — K equal local subprocesses; the grid is split
+//!   round-robin (`Shard::Mod` `i/K`), exactly what K hand-run
+//!   `hfl sweep --shard i/K` commands would get.
+//! * `--workers-file hosts.toml` — named workers with weights and
+//!   optional ssh endpoints; the grid is split into contiguous
+//!   [`Shard::Range`]s sized by weight ([`Shard::split_weighted`]), so a
+//!   host with `weight = 2.0` gets twice the cells of a `weight = 1.0`
+//!   one.
+//!
+//! `hosts.toml` is the repo's flat TOML subset — one `[section]` per
+//! worker (the section name is the worker name; nested tables are not
+//! supported), top-level keys for fleet-wide knobs:
+//!
+//! ```toml
+//! retries = 2                 # re-dispatches per worker (default 2)
+//! liveness_timeout_s = 300.0  # kill a worker whose manifest stops
+//!                             # growing for this long (default: off)
+//!
+//! [alpha]
+//! weight = 2.0                # relative cell share (default 1.0)
+//! ssh = "user@alpha"          # launch over ssh (omit = local worker)
+//! dir = "/scratch/hfl"        # remote working dir (required with ssh)
+//! hfl = "/opt/hfl/bin/hfl"    # remote binary (default "hfl")
+//!
+//! [beta]
+//! weight = 1.0
+//! ```
+//!
+//! Workers are ordered by name (the TOML subset parses into a sorted
+//! map), and shard indices follow that order — deterministic, so a
+//! re-dispatched fleet re-derives the same split.
+
+use std::path::Path;
+
+use crate::config::toml::{self, Table, Value};
+use crate::scenario::Shard;
+
+/// An ssh-reachable worker endpoint.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SshHost {
+    /// `user@host` (or a plain host / ssh-config alias).
+    pub addr: String,
+    /// Remote working directory the shard outputs land in.
+    pub dir: String,
+    /// Remote `hfl` binary (default `"hfl"`, resolved by the remote shell).
+    pub hfl: String,
+}
+
+/// One worker in the roster.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FleetWorker {
+    pub name: String,
+    /// Relative share of the cell id space (positive).
+    pub weight: f64,
+    /// `None` = a local subprocess.
+    pub host: Option<SshHost>,
+}
+
+/// How the id space is partitioned across the roster.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum SplitKind {
+    /// `local:K` — round-robin `i/K`, identical to hand-run shards.
+    RoundRobin,
+    /// `hosts.toml` — weighted contiguous ranges.
+    WeightedRange,
+}
+
+/// A parsed worker roster plus fleet-wide knobs.
+#[derive(Clone, Debug)]
+pub struct FleetSpec {
+    pub workers: Vec<FleetWorker>,
+    /// Re-dispatches allowed per worker (file knob; CLI overrides).
+    pub retries: Option<usize>,
+    /// Liveness timeout in seconds (file knob; CLI overrides).
+    pub liveness_timeout_s: Option<f64>,
+    split: SplitKind,
+}
+
+impl FleetSpec {
+    /// `--workers local:K` — K equal, anonymous local workers.
+    pub fn local(k: usize) -> anyhow::Result<FleetSpec> {
+        anyhow::ensure!(k >= 1, "--workers local:{k}: need at least one worker");
+        let workers = (0..k)
+            .map(|i| FleetWorker { name: format!("local{i}"), weight: 1.0, host: None })
+            .collect();
+        Ok(FleetSpec {
+            workers,
+            retries: None,
+            liveness_timeout_s: None,
+            split: SplitKind::RoundRobin,
+        })
+    }
+
+    /// Parse the `--workers` argument (currently only `local:K`).
+    pub fn parse_workers_arg(s: &str) -> anyhow::Result<FleetSpec> {
+        match s.split_once(':') {
+            Some(("local", k)) => {
+                let k: usize = k
+                    .trim()
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("--workers {s:?}: bad worker count"))?;
+                FleetSpec::local(k)
+            }
+            _ => anyhow::bail!(
+                "--workers {s:?}: expected local:K (use --workers-file for ssh hosts)"
+            ),
+        }
+    }
+
+    /// Load a `hosts.toml` roster (see the module docs for the format).
+    pub fn load(path: &Path) -> anyhow::Result<FleetSpec> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("cannot read {}: {e}", path.display()))?;
+        let table = toml::parse(&text)
+            .map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+        FleetSpec::from_table(&table)
+            .map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))
+    }
+
+    /// Build a roster from a parsed flat table (`worker.key` entries plus
+    /// top-level fleet knobs).
+    pub fn from_table(table: &Table) -> anyhow::Result<FleetSpec> {
+        let mut retries = None;
+        let mut liveness_timeout_s = None;
+        // collect per-worker key/value groups; BTreeMap order makes the
+        // worker list (and therefore the shard indices) name-sorted
+        let mut workers: Vec<(String, Vec<(&str, &Value)>)> = Vec::new();
+        for (key, value) in table {
+            match key.split_once('.') {
+                None => match key.as_str() {
+                    "retries" => {
+                        retries = Some(value.as_usize().ok_or_else(|| {
+                            anyhow::anyhow!("retries: expected an integer")
+                        })?)
+                    }
+                    "liveness_timeout_s" => {
+                        liveness_timeout_s = Some(value.as_f64().ok_or_else(|| {
+                            anyhow::anyhow!("liveness_timeout_s: expected a number")
+                        })?)
+                    }
+                    other => anyhow::bail!(
+                        "unknown top-level key {other:?} (want retries / \
+                         liveness_timeout_s, or a [worker] section)"
+                    ),
+                },
+                Some((worker, field)) => {
+                    match workers.iter_mut().find(|(n, _)| n == worker) {
+                        Some((_, fields)) => fields.push((field, value)),
+                        None => workers.push((worker.to_string(), vec![(field, value)])),
+                    }
+                }
+            }
+        }
+        anyhow::ensure!(!workers.is_empty(), "no [worker] sections found");
+        let mut roster = Vec::with_capacity(workers.len());
+        for (name, fields) in workers {
+            let mut weight = 1.0f64;
+            let mut ssh = None;
+            let mut dir = None;
+            let mut hfl = None;
+            for (field, value) in fields {
+                match field {
+                    "weight" => {
+                        weight = value.as_f64().ok_or_else(|| {
+                            anyhow::anyhow!("[{name}] weight: expected a number")
+                        })?
+                    }
+                    "ssh" => {
+                        ssh = Some(
+                            value
+                                .as_str()
+                                .ok_or_else(|| {
+                                    anyhow::anyhow!("[{name}] ssh: expected \"user@host\"")
+                                })?
+                                .to_string(),
+                        )
+                    }
+                    "dir" => {
+                        dir = Some(
+                            value
+                                .as_str()
+                                .ok_or_else(|| {
+                                    anyhow::anyhow!("[{name}] dir: expected a path string")
+                                })?
+                                .to_string(),
+                        )
+                    }
+                    "hfl" => {
+                        hfl = Some(
+                            value
+                                .as_str()
+                                .ok_or_else(|| {
+                                    anyhow::anyhow!("[{name}] hfl: expected a path string")
+                                })?
+                                .to_string(),
+                        )
+                    }
+                    other => anyhow::bail!(
+                        "[{name}] unknown key {other:?} (want weight / ssh / dir / hfl)"
+                    ),
+                }
+            }
+            anyhow::ensure!(
+                weight.is_finite() && weight > 0.0,
+                "[{name}] weight {weight} must be a positive finite number"
+            );
+            let host = match ssh {
+                None => {
+                    anyhow::ensure!(
+                        dir.is_none() && hfl.is_none(),
+                        "[{name}] dir/hfl only apply to ssh workers"
+                    );
+                    None
+                }
+                Some(addr) => Some(SshHost {
+                    addr,
+                    dir: dir.ok_or_else(|| {
+                        anyhow::anyhow!("[{name}] ssh workers need dir = \"<remote dir>\"")
+                    })?,
+                    hfl: hfl.unwrap_or_else(|| "hfl".to_string()),
+                }),
+            };
+            roster.push(FleetWorker { name, weight, host });
+        }
+        Ok(FleetSpec {
+            workers: roster,
+            retries,
+            liveness_timeout_s,
+            split: SplitKind::WeightedRange,
+        })
+    }
+
+    /// Partition `total` cells across the roster: one shard per worker,
+    /// roster order. A single worker gets the whole grid (`0/1`, so its
+    /// outputs need no merge).
+    pub fn shards(&self, total: usize) -> anyhow::Result<Vec<Shard>> {
+        if self.workers.len() == 1 {
+            return Ok(vec![Shard::solo()]);
+        }
+        match self.split {
+            SplitKind::RoundRobin => {
+                let count = self.workers.len();
+                Ok((0..count).map(|index| Shard::Mod { index, count }).collect())
+            }
+            SplitKind::WeightedRange => {
+                let weights: Vec<f64> = self.workers.iter().map(|w| w.weight).collect();
+                Shard::split_weighted(total, &weights)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn local_k_gives_round_robin_shards() {
+        let f = FleetSpec::parse_workers_arg("local:3").unwrap();
+        assert_eq!(f.workers.len(), 3);
+        assert!(f.workers.iter().all(|w| w.host.is_none()));
+        assert_eq!(
+            f.shards(12).unwrap(),
+            vec![
+                Shard::Mod { index: 0, count: 3 },
+                Shard::Mod { index: 1, count: 3 },
+                Shard::Mod { index: 2, count: 3 },
+            ]
+        );
+        assert!(FleetSpec::parse_workers_arg("local:0").is_err());
+        assert!(FleetSpec::parse_workers_arg("local").is_err());
+        assert!(FleetSpec::parse_workers_arg("k8s:3").is_err());
+        assert!(FleetSpec::parse_workers_arg("local:x").is_err());
+    }
+
+    #[test]
+    fn single_worker_runs_solo_unsharded() {
+        let f = FleetSpec::local(1).unwrap();
+        assert_eq!(f.shards(10).unwrap(), vec![Shard::solo()]);
+    }
+
+    #[test]
+    fn hosts_toml_weighted_ranges() {
+        let table = toml::parse(
+            r#"
+            retries = 3
+            liveness_timeout_s = 120.0
+            [alpha]
+            weight = 2.0
+            ssh = "user@alpha"
+            dir = "/scratch/hfl"
+            [beta]
+            weight = 1.0
+            [gamma]
+            weight = 1.0
+            ssh = "gamma"
+            dir = "/tmp/hfl"
+            hfl = "/opt/hfl"
+            "#,
+        )
+        .unwrap();
+        let f = FleetSpec::from_table(&table).unwrap();
+        assert_eq!(f.retries, Some(3));
+        assert_eq!(f.liveness_timeout_s, Some(120.0));
+        // name-sorted roster: alpha, beta, gamma
+        let names: Vec<&str> = f.workers.iter().map(|w| w.name.as_str()).collect();
+        assert_eq!(names, vec!["alpha", "beta", "gamma"]);
+        assert_eq!(f.workers[0].host.as_ref().unwrap().hfl, "hfl");
+        assert_eq!(f.workers[2].host.as_ref().unwrap().hfl, "/opt/hfl");
+        assert!(f.workers[1].host.is_none());
+        // 2:1:1 over 12 cells → contiguous 6/3/3
+        assert_eq!(
+            f.shards(12).unwrap(),
+            vec![
+                Shard::Range { index: 0, count: 3, start: 0, end: 6 },
+                Shard::Range { index: 1, count: 3, start: 6, end: 9 },
+                Shard::Range { index: 2, count: 3, start: 9, end: 12 },
+            ]
+        );
+    }
+
+    #[test]
+    fn hosts_toml_rejects_bad_rosters() {
+        for (src, needle) in [
+            ("retries = 2", "no [worker] sections"),
+            ("[a]\nweight = 0.0", "positive finite"),
+            ("[a]\nweight = -1.0", "positive finite"),
+            ("[a]\nssh = \"u@h\"", "need dir"),
+            ("[a]\ndir = \"/x\"", "only apply to ssh"),
+            ("[a]\nbudget = 3", "unknown key"),
+            ("oops = 1\n[a]\nweight = 1.0", "unknown top-level key"),
+        ] {
+            let table = toml::parse(src).unwrap();
+            let e = FleetSpec::from_table(&table).unwrap_err().to_string();
+            assert!(e.contains(needle), "{src:?}: unexpected error {e:?}");
+        }
+    }
+}

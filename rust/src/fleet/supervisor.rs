@@ -1,0 +1,241 @@
+//! The fleet supervision loop: launch every worker, watch them, re-dispatch
+//! the dead, and report when the whole grid is in.
+//!
+//! **Death detection.** A worker is dead when (a) it exits nonzero, (b) it
+//! exits zero but its (fetched) manifest is missing or incomplete — a
+//! vanished or silently truncated run must not count as success — or
+//! (c) a liveness timeout is configured and the worker's observable
+//! progress (manifest byte length via [`Launcher::progress`]) has not
+//! changed for that long, in which case it is killed first.
+//!
+//! **Re-dispatch contract.** A dead worker's shard is re-launched with the
+//! resume argv (`--resume` appended, deterministic kill aids stripped) up
+//! to `retries` times. Resume rides the PR-5 manifest: the finished cell
+//! prefix is skipped and the sinks are truncated back to the last recorded
+//! cookie, so a re-dispatched shard produces exactly the bytes an
+//! uninterrupted run would have — which is what makes the final merge
+//! byte-identical to a single-host run no matter how many crashes happened
+//! on the way. A worker that dies with no manifest at all resumes from
+//! cell zero (the `--resume` path treats a missing manifest as a fresh
+//! start).
+
+use std::time::{Duration, Instant};
+
+use super::launcher::{Launcher, WorkerCmd, WorkerHandle};
+use crate::scenario::{Manifest, Shard};
+
+/// One worker's launch recipe.
+#[derive(Clone, Debug)]
+pub struct WorkerPlan {
+    /// First-attempt command (may carry an injected `--abort-after` — the
+    /// deterministic mid-run kill CI uses).
+    pub launch: WorkerCmd,
+    /// Re-dispatch command: same shard, `--resume`, no kill aids.
+    pub resume: WorkerCmd,
+    pub shard: Shard,
+}
+
+/// Supervision knobs.
+#[derive(Clone, Debug)]
+pub struct FleetOpts {
+    /// Re-dispatches allowed per worker.
+    pub retries: usize,
+    /// Kill a worker whose progress measurement stalls this long
+    /// (`None` = disabled).
+    pub liveness_timeout: Option<Duration>,
+    /// Poll cadence.
+    pub poll: Duration,
+}
+
+impl Default for FleetOpts {
+    fn default() -> FleetOpts {
+        FleetOpts { retries: 2, liveness_timeout: None, poll: Duration::from_millis(100) }
+    }
+}
+
+/// What supervision did.
+#[derive(Clone, Debug)]
+pub struct FleetOutcome {
+    pub workers: usize,
+    /// Total re-dispatches across all workers.
+    pub redispatches: usize,
+    pub wall_secs: f64,
+}
+
+/// Lifecycle notifications, for the CLI's progress lines and for tests.
+#[derive(Clone, Debug, PartialEq)]
+pub enum FleetEvent {
+    Launched { worker: String, shard: String, attempt: usize },
+    /// Exited and its manifest is complete.
+    Finished { worker: String },
+    Dead { worker: String, reason: String },
+    Redispatched { worker: String, attempt: usize },
+}
+
+struct WorkerState {
+    attempt: usize,
+    handle: Option<Box<dyn WorkerHandle>>,
+    finished: bool,
+    last_progress: Option<u64>,
+    last_change: Instant,
+}
+
+/// Run the fleet to completion (every shard's manifest complete) or fail
+/// after a worker exhausts its retries. Merging is the caller's job — the
+/// supervisor only guarantees complete per-shard outputs in each worker's
+/// `local_out`.
+pub fn supervise(
+    plans: &[WorkerPlan],
+    launcher: &mut dyn Launcher,
+    opts: &FleetOpts,
+    mut on_event: impl FnMut(&FleetEvent),
+) -> anyhow::Result<FleetOutcome> {
+    anyhow::ensure!(!plans.is_empty(), "fleet has no workers");
+    let t0 = Instant::now();
+    let mut redispatches = 0usize;
+    let mut states: Vec<WorkerState> = Vec::with_capacity(plans.len());
+    for plan in plans {
+        let handle = launcher.launch(&plan.launch)?;
+        on_event(&FleetEvent::Launched {
+            worker: plan.launch.worker.clone(),
+            shard: plan.shard.to_string(),
+            attempt: 0,
+        });
+        states.push(WorkerState {
+            attempt: 0,
+            handle: Some(handle),
+            finished: false,
+            last_progress: None,
+            last_change: Instant::now(),
+        });
+    }
+
+    fn kill_all(states: &mut [WorkerState]) {
+        for s in states.iter_mut() {
+            if let Some(h) = &mut s.handle {
+                h.kill();
+            }
+            s.handle = None;
+        }
+    }
+
+    while states.iter().any(|s| !s.finished) {
+        let mut fatal: Option<anyhow::Error> = None;
+        for wi in 0..plans.len() {
+            let plan = &plans[wi];
+            let state = &mut states[wi];
+            if state.finished {
+                continue;
+            }
+            let cmd = if state.attempt == 0 { &plan.launch } else { &plan.resume };
+            // death by exit status / liveness / incomplete manifest
+            let mut death: Option<String> = None;
+            if let Some(handle) = &mut state.handle {
+                match handle.poll() {
+                    Err(e) => {
+                        fatal = Some(e);
+                        break;
+                    }
+                    Ok(None) => {
+                        // liveness: OBSERVABLE progress must keep moving;
+                        // an unobservable worker (remote, progress = None)
+                        // is never killed on a timer
+                        if let Some(timeout) = opts.liveness_timeout {
+                            match launcher.progress(cmd) {
+                                None => {}
+                                Some(p) => {
+                                    if state.last_progress != Some(p) {
+                                        state.last_progress = Some(p);
+                                        state.last_change = Instant::now();
+                                    } else if state.last_change.elapsed() > timeout {
+                                        handle.kill();
+                                        state.handle = None;
+                                        death = Some(format!(
+                                            "no manifest progress for {timeout:.0?}"
+                                        ));
+                                    }
+                                }
+                            }
+                        }
+                    }
+                    Ok(Some(code)) => {
+                        state.handle = None;
+                        if code != 0 {
+                            death = Some(format!("exit code {code}"));
+                        } else {
+                            if let Err(e) = launcher.fetch(cmd) {
+                                fatal = Some(e);
+                                break;
+                            }
+                            match Manifest::load(&cmd.manifest) {
+                                Ok(m) if m.complete() => {
+                                    state.finished = true;
+                                    on_event(&FleetEvent::Finished {
+                                        worker: cmd.worker.clone(),
+                                    });
+                                }
+                                Ok(m) => {
+                                    death = Some(format!(
+                                        "exited 0 with an incomplete manifest \
+                                         ({}/{} cells)",
+                                        m.completed.len(),
+                                        m.shard_cells
+                                    ));
+                                }
+                                Err(e) => {
+                                    death =
+                                        Some(format!("exited 0 without a manifest: {e}"));
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            if let Some(reason) = death {
+                on_event(&FleetEvent::Dead {
+                    worker: cmd.worker.clone(),
+                    reason: reason.clone(),
+                });
+                if state.attempt >= opts.retries {
+                    fatal = Some(anyhow::anyhow!(
+                        "worker {} died ({reason}) after {} re-dispatches — \
+                         see its log at {}",
+                        plan.launch.worker,
+                        opts.retries,
+                        plan.launch.log.display()
+                    ));
+                    break;
+                }
+                state.attempt += 1;
+                redispatches += 1;
+                state.last_progress = None;
+                state.last_change = Instant::now();
+                match launcher.launch(&plan.resume) {
+                    Ok(h) => {
+                        state.handle = Some(h);
+                        on_event(&FleetEvent::Redispatched {
+                            worker: plan.resume.worker.clone(),
+                            attempt: state.attempt,
+                        });
+                    }
+                    Err(e) => {
+                        fatal = Some(e);
+                        break;
+                    }
+                }
+            }
+        }
+        if let Some(e) = fatal {
+            kill_all(&mut states);
+            return Err(e);
+        }
+        if states.iter().any(|s| !s.finished) {
+            std::thread::sleep(opts.poll);
+        }
+    }
+    Ok(FleetOutcome {
+        workers: plans.len(),
+        redispatches,
+        wall_secs: t0.elapsed().as_secs_f64(),
+    })
+}

@@ -1,0 +1,160 @@
+//! Torn-write-safe incremental file tailing for `hfl top`.
+//!
+//! The write side ([`crate::util::csv::OffsetFile`] under the CSV/JSONL
+//! sinks) appends newline-terminated records and checkpoints byte
+//! offsets; a reader polling mid-write can see a *torn tail* — the last
+//! line cut at any byte, including inside a multi-byte UTF-8 sequence.
+//! [`Tailer`] mirrors the offset discipline on the read side:
+//!
+//! * only bytes up to the last `'\n'` are consumed; a torn tail stays in
+//!   the file for the next poll (the same "a line counts only when
+//!   newline-terminated" rule `Manifest::load` applies);
+//! * the consumed byte offset is remembered, so each poll reads only the
+//!   delta — tailing a growing multi-GB sink costs what grew, not the
+//!   file;
+//! * a file *shorter* than the remembered offset means `--resume`
+//!   truncated a crash tail; the tailer rewinds to zero and reports it so
+//!   the caller can rebuild state from scratch instead of yielding
+//!   records that no longer exist.
+//!
+//! Mirrored in `python/tests/test_fleet_tail_mirror.py`.
+
+use std::io::{Read, Seek, SeekFrom};
+use std::path::{Path, PathBuf};
+
+/// What one poll saw.
+#[derive(Debug, Default)]
+pub struct TailPoll {
+    /// Complete (newline-terminated) lines, terminators stripped.
+    pub lines: Vec<String>,
+    /// The file shrank below the consumed offset (a resume truncation);
+    /// the tailer restarted from byte zero and `lines` holds the whole
+    /// re-read — the caller must discard state built from earlier polls.
+    pub rewound: bool,
+}
+
+/// Incremental, torn-write-safe line reader over one growing file.
+#[derive(Debug)]
+pub struct Tailer {
+    path: PathBuf,
+    /// Bytes consumed so far — always at a line boundary.
+    offset: u64,
+}
+
+impl Tailer {
+    pub fn new(path: &Path) -> Tailer {
+        Tailer { path: path.to_path_buf(), offset: 0 }
+    }
+
+    /// Bytes consumed so far (always a line boundary).
+    pub fn offset(&self) -> u64 {
+        self.offset
+    }
+
+    /// Read everything new since the last poll. A missing file is not an
+    /// error — the sweep may not have created this stream yet.
+    pub fn poll(&mut self) -> anyhow::Result<TailPoll> {
+        let mut out = TailPoll::default();
+        let mut f = match std::fs::File::open(&self.path) {
+            Ok(f) => f,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(out),
+            Err(e) => {
+                return Err(anyhow::anyhow!("cannot tail {}: {e}", self.path.display()))
+            }
+        };
+        let len = f.metadata()?.len();
+        if len < self.offset {
+            // resume truncated the file under us: everything built from
+            // the earlier bytes is invalid
+            self.offset = 0;
+            out.rewound = true;
+        }
+        if len == self.offset {
+            return Ok(out);
+        }
+        f.seek(SeekFrom::Start(self.offset))?;
+        let mut buf = Vec::with_capacity((len - self.offset) as usize);
+        f.read_to_end(&mut buf)?;
+        // consume only through the last newline; the torn tail (possibly
+        // mid-UTF-8) is left for a future poll
+        let consumed = match buf.iter().rposition(|&b| b == b'\n') {
+            None => return Ok(out),
+            Some(p) => p + 1,
+        };
+        let text = std::str::from_utf8(&buf[..consumed]).map_err(|e| {
+            anyhow::anyhow!("{}: invalid utf-8 in a terminated line: {e}", self.path.display())
+        })?;
+        self.offset += consumed as u64;
+        out.lines
+            .extend(text.lines().map(|l| l.trim_end_matches('\r').to_string()));
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("hfl_tail_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn missing_file_is_empty_not_an_error() {
+        let mut t = Tailer::new(&tmp("never_written"));
+        let p = t.poll().unwrap();
+        assert!(p.lines.is_empty() && !p.rewound);
+    }
+
+    #[test]
+    fn consumes_only_terminated_lines() {
+        let path = tmp("torn.jsonl");
+        std::fs::write(&path, b"{\"cell\":0}\n{\"cell\":1").unwrap();
+        let mut t = Tailer::new(&path);
+        let p = t.poll().unwrap();
+        assert_eq!(p.lines, vec!["{\"cell\":0}"]);
+        assert_eq!(t.offset(), 11);
+        // the torn tail completes → next poll yields it whole
+        let mut f = std::fs::OpenOptions::new().append(true).open(&path).unwrap();
+        f.write_all(b"}\n").unwrap();
+        drop(f);
+        let p = t.poll().unwrap();
+        assert_eq!(p.lines, vec!["{\"cell\":1}"]);
+        // nothing new → empty poll
+        assert!(t.poll().unwrap().lines.is_empty());
+    }
+
+    #[test]
+    fn mid_utf8_tear_is_never_yielded() {
+        let path = tmp("utf8.jsonl");
+        // "é" = 0xC3 0xA9; cut between the two bytes — but only AFTER a
+        // terminated line, so the valid prefix still parses
+        std::fs::write(&path, b"ok\n\xC3").unwrap();
+        let mut t = Tailer::new(&path);
+        let p = t.poll().unwrap();
+        assert_eq!(p.lines, vec!["ok"]);
+        assert_eq!(t.offset(), 3);
+        let mut f = std::fs::OpenOptions::new().append(true).open(&path).unwrap();
+        f.write_all(&[0xA9, b'x', b'\n']).unwrap(); // finish é, then "x\n"
+        drop(f);
+        let p = t.poll().unwrap();
+        assert_eq!(p.lines, vec!["éx"]);
+    }
+
+    #[test]
+    fn shrunken_file_rewinds() {
+        let path = tmp("shrink.jsonl");
+        std::fs::write(&path, b"a\nb\nc\n").unwrap();
+        let mut t = Tailer::new(&path);
+        assert_eq!(t.poll().unwrap().lines, vec!["a", "b", "c"]);
+        // resume truncated back past our offset
+        std::fs::write(&path, b"a\n").unwrap();
+        let p = t.poll().unwrap();
+        assert!(p.rewound, "shrink must signal a rewind");
+        assert_eq!(p.lines, vec!["a"]);
+        assert_eq!(t.offset(), 2);
+    }
+}

@@ -1,0 +1,422 @@
+//! `hfl top` — build and render a live view of in-progress sweeps from
+//! their on-disk artifacts only.
+//!
+//! Read-only: the state is reconstructed from (a) the per-shard manifests
+//! (which cells are done — reusing `merge::discover`'s tolerant scan, so
+//! torn manifest tails and in-progress shards never error) and (b) the
+//! per-shard JSONL row sinks, tailed incrementally with the torn-write-safe
+//! [`Tailer`]. Between refreshes only the grown byte ranges are read, so
+//! watching a multi-GB sweep costs what changed, not the files.
+//!
+//! Rendering is a pure function of the view state (plus a throughput
+//! estimate), which is what `--once` snapshots and the CI greps exercise.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::time::Instant;
+
+use super::tail::Tailer;
+use crate::scenario::merge;
+use crate::util::json::Json;
+
+/// Latest known metrics for one cell, accumulated from its shard's JSONL
+/// row stream.
+#[derive(Clone, Debug, Default)]
+pub struct CellView {
+    pub scheduler: String,
+    pub assigner: String,
+    pub h: u64,
+    pub seed: u64,
+    /// Rows (rounds) seen so far.
+    pub rows: u64,
+    pub last_iter: u64,
+    /// Latest train loss / accuracy (`None` in cost mode).
+    pub loss: Option<f64>,
+    pub acc: Option<f64>,
+    pub objective: f64,
+    /// Accumulated fault/async counters (0 when the columns are absent).
+    pub dropped: u64,
+    pub retries: u64,
+    pub stale_used: u64,
+}
+
+/// One shard's progress, straight from its manifest.
+#[derive(Clone, Debug)]
+pub struct ShardView {
+    /// The shard selector as printed in the manifest (`1/3`, `0/2:0-6`).
+    pub label: String,
+    pub done: usize,
+    pub cells: usize,
+    pub complete: bool,
+}
+
+/// Everything known about one sweep (one `(name, fingerprint)` group).
+#[derive(Clone, Debug)]
+pub struct SweepView {
+    pub name: String,
+    pub mode: String,
+    pub fingerprint: u64,
+    pub total_cells: usize,
+    /// Cells recorded done across all shards.
+    pub done: usize,
+    pub shards: Vec<ShardView>,
+    pub cells: BTreeMap<usize, CellView>,
+    pub rows_seen: u64,
+    pub has_faults: bool,
+    pub has_stale: bool,
+}
+
+impl SweepView {
+    pub fn complete(&self) -> bool {
+        self.done >= self.total_cells && self.shards.iter().all(|s| s.complete)
+    }
+}
+
+type SweepKey = (String, u64);
+
+#[derive(Default)]
+struct SweepAccum {
+    cells: BTreeMap<usize, CellView>,
+    rows_seen: u64,
+    has_faults: bool,
+    has_stale: bool,
+}
+
+/// The stateful side of `hfl top`: tailer offsets and accumulated cell
+/// metrics between refreshes, plus the throughput estimator.
+pub struct TopSession {
+    dirs: Vec<PathBuf>,
+    name: Option<String>,
+    tailers: BTreeMap<PathBuf, Tailer>,
+    accum: BTreeMap<SweepKey, SweepAccum>,
+    last: Option<(Instant, usize)>,
+    /// EWMA cells/second over all watched sweeps.
+    rate: Option<f64>,
+}
+
+impl TopSession {
+    pub fn new(dirs: Vec<PathBuf>, name: Option<String>) -> TopSession {
+        TopSession { dirs, name, tailers: BTreeMap::new(), accum: BTreeMap::new(), last: None, rate: None }
+    }
+
+    /// Cells/second estimate (None until two refreshes saw progress).
+    pub fn rate(&self) -> Option<f64> {
+        self.rate
+    }
+
+    /// Rescan manifests, drain the JSONL tails, return the current views.
+    pub fn refresh(&mut self) -> anyhow::Result<Vec<SweepView>> {
+        let mut sets = merge::discover(&self.dirs)?;
+        if let Some(n) = &self.name {
+            sets.retain(|s| &s.name == n);
+        }
+        let mut views = Vec::with_capacity(sets.len());
+        for set in &sets {
+            let fingerprint = set.shards[0].manifest.fingerprint;
+            let key: SweepKey = (set.name.clone(), fingerprint);
+            let mut shards = Vec::with_capacity(set.shards.len());
+            let mut done = 0usize;
+            for s in &set.shards {
+                done += s.manifest.completed.len();
+                shards.push(ShardView {
+                    label: s.manifest.shard.to_string(),
+                    done: s.manifest.completed.len(),
+                    cells: s.manifest.shard_cells,
+                    complete: s.manifest.complete(),
+                });
+                // tail this shard's JSONL row stream, if it writes one
+                let rows_path = s.dir.join(format!("sweep_{}.jsonl", s.stem));
+                let tailer = self
+                    .tailers
+                    .entry(rows_path.clone())
+                    .or_insert_with(|| Tailer::new(&rows_path));
+                let polled = tailer.poll()?;
+                let acc = self.accum.entry(key.clone()).or_default();
+                if polled.rewound {
+                    // resume truncated this shard's stream: every cell the
+                    // shard owns was rebuilt from byte zero — drop our copy
+                    let shard = s.manifest.shard;
+                    acc.cells.retain(|id, _| !shard.owns(*id));
+                }
+                for line in &polled.lines {
+                    let row = match Json::parse(line) {
+                        Ok(r) => r,
+                        // a foreign or corrupt line in a tailed file must
+                        // not kill the viewer — skip it
+                        Err(_) => continue,
+                    };
+                    let Some(id) = row.get("cell").and_then(Json::as_usize) else {
+                        continue;
+                    };
+                    acc.rows_seen += 1;
+                    let cv = acc.cells.entry(id).or_default();
+                    if let Some(s) = row.get("scheduler").and_then(Json::as_str) {
+                        cv.scheduler = s.to_string();
+                    }
+                    if let Some(a) = row.get("assigner").and_then(Json::as_str) {
+                        cv.assigner = a.to_string();
+                    }
+                    cv.h = row.get("h").and_then(Json::as_f64).unwrap_or(0.0) as u64;
+                    cv.seed = row.get("seed").and_then(Json::as_f64).unwrap_or(0.0) as u64;
+                    cv.rows += 1;
+                    cv.last_iter = row.get("iter").and_then(Json::as_f64).unwrap_or(0.0) as u64;
+                    cv.loss = row.get("train_loss").and_then(Json::as_f64);
+                    cv.acc = row.get("accuracy").and_then(Json::as_f64);
+                    cv.objective = row.get("objective").and_then(Json::as_f64).unwrap_or(0.0);
+                    if let Some(d) = row.get("dropped").and_then(Json::as_f64) {
+                        acc.has_faults = true;
+                        cv.dropped += d as u64;
+                    }
+                    if let Some(r) = row.get("retries").and_then(Json::as_f64) {
+                        cv.retries += r as u64;
+                    }
+                    if let Some(su) = row.get("stale_used").and_then(Json::as_f64) {
+                        acc.has_stale = true;
+                        cv.stale_used += su as u64;
+                    }
+                }
+            }
+            let acc = self.accum.entry(key).or_default();
+            views.push(SweepView {
+                name: set.name.clone(),
+                mode: set.shards[0].manifest.mode.clone(),
+                fingerprint,
+                total_cells: set.total_cells,
+                done,
+                shards,
+                cells: acc.cells.clone(),
+                rows_seen: acc.rows_seen,
+                has_faults: acc.has_faults,
+                has_stale: acc.has_stale,
+            });
+        }
+        // throughput over everything watched
+        let done_total: usize = views.iter().map(|v| v.done).sum();
+        let now = Instant::now();
+        if let Some((t0, d0)) = self.last {
+            let dt = now.duration_since(t0).as_secs_f64();
+            if dt > 0.0 && done_total >= d0 {
+                let inst = (done_total - d0) as f64 / dt;
+                self.rate = Some(match self.rate {
+                    None => inst,
+                    Some(prev) => 0.5 * inst + 0.5 * prev,
+                });
+            }
+        }
+        self.last = Some((now, done_total));
+        Ok(views)
+    }
+}
+
+fn progress_bar(done: usize, total: usize, width: usize) -> String {
+    let filled = if total == 0 { width } else { (done * width) / total };
+    let mut bar = String::with_capacity(width + 2);
+    bar.push('[');
+    for i in 0..width {
+        bar.push(if i < filled { '#' } else { '.' });
+    }
+    bar.push(']');
+    bar
+}
+
+fn fmt_opt(v: Option<f64>, prec: usize) -> String {
+    match v {
+        Some(x) => format!("{x:.prec$}"),
+        None => "-".to_string(),
+    }
+}
+
+fn fmt_eta(secs: f64) -> String {
+    if secs < 90.0 {
+        format!("{secs:.0}s")
+    } else if secs < 5400.0 {
+        format!("{:.1}m", secs / 60.0)
+    } else {
+        format!("{:.1}h", secs / 3600.0)
+    }
+}
+
+/// Cap on rendered per-cell lines, keeping the redraw bounded for huge
+/// grids (the summary/shard lines always cover everything).
+const MAX_CELL_ROWS: usize = 40;
+
+/// Render one snapshot — a pure function of the views + rate, so `--once`
+/// and tests exercise exactly what the live loop redraws.
+pub fn render(views: &[SweepView], rate: Option<f64>) -> String {
+    let mut out = String::new();
+    if views.is_empty() {
+        out.push_str("no sweep manifests found\n");
+        return out;
+    }
+    for v in views {
+        let pct = if v.total_cells == 0 {
+            100.0
+        } else {
+            100.0 * v.done as f64 / v.total_cells as f64
+        };
+        let rate_s = match rate {
+            Some(r) if r > 0.0 => format!("{r:.2} cells/s"),
+            _ => "- cells/s".to_string(),
+        };
+        let eta = match rate {
+            Some(r) if r > 0.0 && v.done < v.total_cells => {
+                format!("eta {}", fmt_eta((v.total_cells - v.done) as f64 / r))
+            }
+            _ if v.complete() => "complete".to_string(),
+            _ => "eta -".to_string(),
+        };
+        out.push_str(&format!(
+            "sweep {} [{}] {:016x}  cells {}/{} ({pct:.0}%)  rows {}  {rate_s}  {eta}\n",
+            v.name, v.mode, v.fingerprint, v.done, v.total_cells, v.rows_seen
+        ));
+        for s in &v.shards {
+            let status = if s.complete { "complete" } else { "running" };
+            out.push_str(&format!(
+                "  shard {:<10} {} {:>4}/{:<4} {status}\n",
+                s.label,
+                progress_bar(s.done, s.cells, 20),
+                s.done,
+                s.cells
+            ));
+        }
+        if !v.cells.is_empty() {
+            let mut header = format!(
+                "  {:>5}  {:<12} {:<14} {:>4} {:>4} {:>5} {:>8} {:>8} {:>10}",
+                "cell", "scheduler", "assigner", "h", "seed", "iter", "loss", "acc", "objective"
+            );
+            if v.has_faults {
+                header.push_str(&format!(" {:>5} {:>5}", "drop", "retry"));
+            }
+            if v.has_stale {
+                header.push_str(&format!(" {:>5}", "stale"));
+            }
+            out.push_str(&header);
+            out.push('\n');
+            for (id, c) in v.cells.iter().take(MAX_CELL_ROWS) {
+                let mut line = format!(
+                    "  {:>5}  {:<12} {:<14} {:>4} {:>4} {:>5} {:>8} {:>8} {:>10.1}",
+                    id,
+                    c.scheduler,
+                    c.assigner,
+                    c.h,
+                    c.seed,
+                    c.last_iter,
+                    fmt_opt(c.loss, 4),
+                    fmt_opt(c.acc, 4),
+                    c.objective
+                );
+                if v.has_faults {
+                    line.push_str(&format!(" {:>5} {:>5}", c.dropped, c.retries));
+                }
+                if v.has_stale {
+                    line.push_str(&format!(" {:>5}", c.stale_used));
+                }
+                out.push_str(&line);
+                out.push('\n');
+            }
+            if v.cells.len() > MAX_CELL_ROWS {
+                out.push_str(&format!(
+                    "  … and {} more cells\n",
+                    v.cells.len() - MAX_CELL_ROWS
+                ));
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn view() -> SweepView {
+        let mut cells = BTreeMap::new();
+        cells.insert(
+            0,
+            CellView {
+                scheduler: "ikc".into(),
+                assigner: "d3qn".into(),
+                h: 10,
+                seed: 0,
+                rows: 3,
+                last_iter: 2,
+                loss: Some(0.4312),
+                acc: Some(0.8123),
+                objective: 812.5,
+                ..CellView::default()
+            },
+        );
+        cells.insert(
+            1,
+            CellView {
+                scheduler: "vkc".into(),
+                assigner: "greedy".into(),
+                h: 30,
+                seed: 0,
+                rows: 1,
+                last_iter: 0,
+                loss: None,
+                acc: None,
+                objective: 650.0,
+                ..CellView::default()
+            },
+        );
+        SweepView {
+            name: "grid".into(),
+            mode: "cost".into(),
+            fingerprint: 0xa3f2_9e01_0000_0001,
+            total_cells: 12,
+            done: 7,
+            shards: vec![
+                ShardView { label: "0/2".into(), done: 4, cells: 6, complete: false },
+                ShardView { label: "1/2".into(), done: 3, cells: 6, complete: false },
+            ],
+            cells,
+            rows_seen: 4,
+            has_faults: false,
+            has_stale: false,
+        }
+    }
+
+    #[test]
+    fn render_shows_progress_and_metrics() {
+        let s = render(&[view()], Some(1.5));
+        assert!(s.contains("cells 7/12 (58%)"), "{s}");
+        assert!(s.contains("shard 0/2"), "{s}");
+        assert!(s.contains("shard 1/2"), "{s}");
+        assert!(s.contains("1.50 cells/s"), "{s}");
+        assert!(s.contains("eta 3s"), "{s}");
+        assert!(s.contains("0.4312"), "{s}");
+        assert!(s.contains("0.8123"), "{s}");
+        // cost-mode cells render '-' for loss/acc, not 0
+        assert!(s.lines().any(|l| l.contains("vkc") && l.contains('-')), "{s}");
+        // fault/stale columns absent unless present in the rows
+        assert!(!s.contains("drop"), "{s}");
+        assert!(!s.contains("stale"), "{s}");
+    }
+
+    #[test]
+    fn render_fault_columns_opt_in() {
+        let mut v = view();
+        v.has_faults = true;
+        v.has_stale = true;
+        let s = render(&[v], None);
+        assert!(s.contains("drop"), "{s}");
+        assert!(s.contains("retry"), "{s}");
+        assert!(s.contains("stale"), "{s}");
+        assert!(s.contains("- cells/s"), "{s}");
+    }
+
+    #[test]
+    fn render_empty_says_so() {
+        assert!(render(&[], None).contains("no sweep manifests found"));
+    }
+
+    #[test]
+    fn progress_bar_bounds() {
+        assert_eq!(progress_bar(0, 4, 4), "[....]");
+        assert_eq!(progress_bar(2, 4, 4), "[##..]");
+        assert_eq!(progress_bar(4, 4, 4), "[####]");
+        assert_eq!(progress_bar(0, 0, 4), "[####]", "empty shard renders full");
+    }
+}

@@ -34,6 +34,7 @@ pub mod drl;
 pub mod experiments;
 pub mod faults;
 pub mod fl;
+pub mod fleet;
 pub mod metrics;
 pub mod model;
 pub mod assignment;

@@ -74,6 +74,36 @@ commands:
                                            records as finished
                              --abort-after N  stop cleanly after N cells
                                            (test aid for --resume)
+  fleet [preset|spec.toml]  run one sweep across several workers: shard
+                            the grid, launch the workers, watch them,
+                            re-dispatch crashed shards with --resume and
+                            merge the finished outputs into the
+                            byte-identical single-host files
+                            (--workers local:K      K local subprocesses,
+                                           round-robin i/K shards
+                             --workers-file hosts.toml  named hosts with
+                                           weights — weighted contiguous
+                                           ranges; [worker] entries with
+                                           an ssh key run remotely via
+                                           ssh+rsync, others locally
+                             --retries N   re-dispatches per worker
+                                           (default 2)
+                             --liveness-timeout S  kill a worker whose
+                                           manifest stalls S seconds
+                             --abort-worker i:N  worker i exits cleanly
+                                           after N cells on its first
+                                           attempt (re-dispatch test aid)
+                             --no-merge    leave per-shard outputs
+                             plus every sweep-shaping option above,
+                             forwarded verbatim to the workers)
+  top [dir]...              live view of running sweeps (default dir:
+                            results): tails shard manifests + JSONL sinks
+                            torn-write-safely; shows per-shard progress,
+                            per-cell round/loss/accuracy, fault/stale
+                            counters, throughput, ETA
+                            (--once         print one frame and exit
+                             --name NAME    only this sweep
+                             --interval-ms N  redraw cadence, default 1000)
   merge <dir>...            combine finished shard outputs (discovered
                             via their sweep_*.manifest files) into the
                             byte-identical single-host files
@@ -294,11 +324,13 @@ fn cmd_train(args: &Args, cfg: &Config, backend: &dyn Backend) -> anyhow::Result
     Ok(())
 }
 
-/// `hfl sweep` — the sharded, resumable scenario orchestrator on the
-/// native backend. Cells stream to the configured sinks as they finish;
-/// the reorder buffer keeps output bytes identical for any thread count,
-/// and the shard manifest makes `--resume` / `hfl merge` possible.
-fn cmd_sweep(args: &Args, cfg: &Config) -> anyhow::Result<()> {
+/// Resolve the sweep positional (preset name or spec TOML) and apply every
+/// grid-shaping flag. Shared by `hfl sweep` and `hfl fleet`: the fleet
+/// leader shapes the same spec to size the shard split, then forwards the
+/// same tokens to its workers (see `FLEET_PASSTHROUGH`), so every worker
+/// reconstructs the identical grid and fingerprint. Returns the positional
+/// token too — `hfl fleet` hands it to workers verbatim.
+fn shape_sweep_spec(args: &Args, cfg: &Config) -> anyhow::Result<(String, ScenarioSpec)> {
     let reg = PolicyRegistry::global();
     let which = args
         .positional
@@ -379,6 +411,15 @@ fn cmd_sweep(args: &Args, cfg: &Config) -> anyhow::Result<()> {
     // otherwise re-overrides what load_config read into cfg)
     spec.seeds = args.get_usize("seeds", spec.seeds)?;
     spec.h_values = args.get_usize_list("h-values", &spec.h_values)?;
+    Ok((which, spec))
+}
+
+/// `hfl sweep` — the sharded, resumable scenario orchestrator on the
+/// native backend. Cells stream to the configured sinks as they finish;
+/// the reorder buffer keeps output bytes identical for any thread count,
+/// and the shard manifest makes `--resume` / `hfl merge` possible.
+fn cmd_sweep(args: &Args, cfg: &Config) -> anyhow::Result<()> {
+    let (_, spec) = shape_sweep_spec(args, cfg)?;
     let threads = args.get_usize("threads", 0)?;
     let shard = Shard::parse(&args.get_str("shard", "0/1"))?;
     let list_cells = args.flag("list-cells");
@@ -533,11 +574,11 @@ fn cmd_sweep(args: &Args, cfg: &Config) -> anyhow::Result<()> {
             "aborted after {} cells — continue with `hfl sweep ... --resume`",
             outcome.cells_run
         );
-    } else if shard.count > 1 {
+    } else if shard.count() > 1 {
         println!(
             "shard {shard} complete — after all {} shards finish, combine with \
              `hfl merge {}`",
-            shard.count,
+            shard.count(),
             out_dir.display()
         );
     }
@@ -568,6 +609,212 @@ fn cmd_merge(args: &Args) -> anyhow::Result<()> {
         );
     }
     Ok(())
+}
+
+/// Sweep-shaping options `hfl fleet` forwards verbatim to its worker
+/// subprocesses. Everything here is also consumed by `shape_sweep_spec` /
+/// the worker's own `load_config`; what is NOT here is owned by the fleet
+/// leader (`--out`, `--shard`, `--resume`, `--abort-after`) or is
+/// fleet-only (`--workers`, `--retries`, …).
+const FLEET_PASSTHROUGH: &[&str] = &[
+    "config", "seed", "seeds", "max-iters", "test-size", "h-values", "lambda", "lr",
+    "backend", "mode", "schedulers", "assigners", "dataset", "faults", "oracle",
+    "oracle-nodes", "oracle-max-n", "async-alpha", "async-max-stale", "iters",
+    "threads", "sink",
+];
+
+/// `hfl fleet` — run one sweep across several workers (local subprocesses
+/// or ssh hosts), supervise them, re-dispatch crashed shards with
+/// `--resume`, and merge the finished shard outputs into the
+/// byte-identical single-host files. Workers are plain `hfl sweep --shard`
+/// runs, so the merged bytes match a single-host sweep by construction.
+fn cmd_fleet(args: &Args, cfg: &Config) -> anyhow::Result<()> {
+    use hfl::fleet::{supervise, DispatchLauncher, FleetEvent, FleetOpts, FleetSpec, WorkerCmd, WorkerPlan};
+
+    let (which, spec) = shape_sweep_spec(args, cfg)?;
+    let fleet_spec = match (args.opt("workers"), args.opt("workers-file")) {
+        (Some(_), Some(_)) => {
+            anyhow::bail!("--workers and --workers-file are mutually exclusive")
+        }
+        (Some(w), None) => FleetSpec::parse_workers_arg(w)?,
+        (None, Some(f)) => FleetSpec::load(std::path::Path::new(f))?,
+        (None, None) => anyhow::bail!(
+            "hfl fleet needs a worker roster: --workers local:K or \
+             --workers-file hosts.toml"
+        ),
+    };
+    let pass = args.passthrough(FLEET_PASSTHROUGH);
+    let retries = args.get_usize("retries", fleet_spec.retries.unwrap_or(2))?;
+    let liveness_s =
+        args.get_f64("liveness-timeout", fleet_spec.liveness_timeout_s.unwrap_or(0.0))?;
+    let liveness_timeout = if liveness_s > 0.0 {
+        Some(std::time::Duration::from_secs_f64(liveness_s))
+    } else {
+        None
+    };
+    // deterministic mid-run kill for CI / tests: worker `i` gets
+    // `--abort-after N` on its FIRST attempt only, so it exits cleanly
+    // mid-shard and exercises the re-dispatch + resume path
+    let abort_worker: Option<(usize, usize)> = match args.opt("abort-worker") {
+        None => None,
+        Some(v) => {
+            let (wi, n) = v.split_once(':').ok_or_else(|| {
+                anyhow::anyhow!("--abort-worker: expected worker:cells, e.g. 1:2, got {v:?}")
+            })?;
+            Some((
+                wi.parse()
+                    .map_err(|_| anyhow::anyhow!("--abort-worker: bad worker index {wi:?}"))?,
+                n.parse()
+                    .map_err(|_| anyhow::anyhow!("--abort-worker: bad cell count {n:?}"))?,
+            ))
+        }
+    };
+    let no_merge = args.flag("no-merge");
+    args.finish()?;
+
+    let solo = SweepPlan::sharded(spec, Shard::solo())?;
+    let total = solo.total_cells();
+    let sweep_name = solo.spec.name.clone();
+    let shards = fleet_spec.shards(total)?;
+    if let Some((wi, _)) = abort_worker {
+        anyhow::ensure!(
+            wi < shards.len(),
+            "--abort-worker {wi}: the fleet has only {} workers",
+            shards.len()
+        );
+    }
+
+    let out_dir = PathBuf::from(&cfg.out_dir);
+    let mut plans: Vec<WorkerPlan> = Vec::with_capacity(shards.len());
+    for (i, (w, shard)) in fleet_spec.workers.iter().zip(&shards).enumerate() {
+        let stem = format!("{sweep_name}{}", shard.stem_suffix());
+        // local workers share the fleet out dir (shard stems never
+        // collide); each ssh worker rsyncs its remote dir into its own
+        // subdirectory, and the merge scans all of them
+        let (local_out, out_arg) = match &w.host {
+            None => (out_dir.clone(), cfg.out_dir.clone()),
+            Some(_) => (out_dir.join(format!("fleet_{}", w.name)), ".".to_string()),
+        };
+        std::fs::create_dir_all(&local_out)?;
+        let mut base = vec!["sweep".to_string(), which.clone()];
+        base.extend(pass.iter().cloned());
+        base.push("--shard".to_string());
+        base.push(shard.to_string());
+        base.push("--out".to_string());
+        base.push(out_arg);
+        let mut launch_argv = base.clone();
+        if let Some((wi, n)) = abort_worker {
+            if wi == i {
+                launch_argv.push("--abort-after".to_string());
+                launch_argv.push(n.to_string());
+            }
+        }
+        let mut resume_argv = base;
+        resume_argv.push("--resume".to_string());
+        let manifest = local_out.join(format!("sweep_{stem}.manifest"));
+        let log = out_dir.join(format!("fleet_{}.log", w.name));
+        let cmd = |argv: Vec<String>| WorkerCmd {
+            worker: w.name.clone(),
+            argv,
+            host: w.host.clone(),
+            local_out: local_out.clone(),
+            manifest: manifest.clone(),
+            log: log.clone(),
+        };
+        plans.push(WorkerPlan { launch: cmd(launch_argv), resume: cmd(resume_argv), shard: *shard });
+    }
+
+    println!(
+        "fleet: sweep {sweep_name} ({total} cells) across {} workers \
+         (retries {retries}) -> {}",
+        plans.len(),
+        out_dir.display()
+    );
+    let mut launcher = DispatchLauncher::new(std::env::current_exe()?);
+    let opts = FleetOpts {
+        retries,
+        liveness_timeout,
+        ..FleetOpts::default()
+    };
+    let outcome = supervise(&plans, &mut launcher, &opts, |e| match e {
+        FleetEvent::Launched { worker, shard, attempt } => {
+            println!("fleet: launched {worker} (shard {shard}, attempt {attempt})")
+        }
+        FleetEvent::Finished { worker } => println!("fleet: worker {worker} finished"),
+        FleetEvent::Dead { worker, reason } => {
+            println!("fleet: worker {worker} died: {reason}")
+        }
+        FleetEvent::Redispatched { worker, attempt } => {
+            println!("fleet: re-dispatched {worker} (attempt {attempt})")
+        }
+    })?;
+    println!(
+        "fleet complete: {} workers, {} re-dispatches in {:.2}s",
+        outcome.workers, outcome.redispatches, outcome.wall_secs
+    );
+
+    if plans.len() == 1 {
+        println!("single worker — its outputs already are the single-host files");
+        return Ok(());
+    }
+    if no_merge {
+        println!(
+            "--no-merge: combine later with `hfl merge {}`",
+            out_dir.display()
+        );
+        return Ok(());
+    }
+    let mut dirs: Vec<PathBuf> = plans.iter().map(|p| p.launch.local_out.clone()).collect();
+    dirs.sort();
+    dirs.dedup();
+    let reports = hfl::scenario::merge_dirs(&dirs, Some(sweep_name.as_str()), &out_dir)?;
+    for r in reports {
+        let paths: Vec<String> = r.outputs.iter().map(|p| p.display().to_string()).collect();
+        println!(
+            "merged sweep {} ({} shards, {} cells) -> {}",
+            r.name,
+            r.shards,
+            r.cells,
+            paths.join(" + ")
+        );
+    }
+    Ok(())
+}
+
+/// `hfl top` — read-only live view of running sweeps: tails the shard
+/// manifests and JSONL sinks in the given directories and redraws a
+/// plain-ANSI status frame. `--once` prints a single frame and exits
+/// (what CI snapshots); the live loop exits when every watched sweep is
+/// complete.
+fn cmd_top(args: &Args) -> anyhow::Result<()> {
+    let dirs: Vec<PathBuf> = if args.positional.is_empty() {
+        vec![PathBuf::from("results")]
+    } else {
+        args.positional.iter().map(PathBuf::from).collect()
+    };
+    let name = args.opt("name").map(str::to_string);
+    let once = args.flag("once");
+    let interval = std::time::Duration::from_millis(args.get_u64("interval-ms", 1000)?);
+    args.finish()?;
+
+    let mut session = hfl::fleet::TopSession::new(dirs, name);
+    loop {
+        let views = session.refresh()?;
+        let frame = hfl::fleet::view::render(&views, session.rate());
+        if once {
+            print!("{frame}");
+            return Ok(());
+        }
+        // plain ANSI full-frame redraw: clear screen + home, no deps
+        print!("\x1b[2J\x1b[H{frame}");
+        use std::io::Write;
+        std::io::stdout().flush().ok();
+        if !views.is_empty() && views.iter().all(|v| v.complete()) {
+            println!("all sweeps complete");
+            return Ok(());
+        }
+        std::thread::sleep(interval);
+    }
 }
 
 /// `hfl bench` — kernel micro-benchmarks + end-to-end local round,
@@ -714,6 +961,10 @@ fn main() -> anyhow::Result<()> {
     if args.subcommand == "merge" {
         return cmd_merge(&args);
     }
+    // `top` is a read-only observer over its positional dirs — no Config
+    if args.subcommand == "top" {
+        return cmd_top(&args);
+    }
     let cfg = load_config(&args)?;
     std::fs::create_dir_all(&cfg.out_dir).ok();
 
@@ -722,6 +973,11 @@ fn main() -> anyhow::Result<()> {
     // second backend for either.
     if args.subcommand == "sweep" {
         return cmd_sweep(&args, &cfg);
+    }
+    // `fleet` shapes the same spec as sweep (to size the shard split) and
+    // spawns its workers itself — no backend in the leader process
+    if args.subcommand == "fleet" {
+        return cmd_fleet(&args, &cfg);
     }
     if args.subcommand == "drl-train" {
         return cmd_drl_train(&args, &cfg);

@@ -18,7 +18,7 @@ use std::fs::File;
 use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::path::{Path, PathBuf};
 
-use super::plan::Manifest;
+use super::plan::{Manifest, Shard};
 
 /// One discovered shard: its manifest plus where its output files live.
 #[derive(Clone, Debug)]
@@ -111,7 +111,7 @@ pub fn discover(dirs: &[PathBuf]) -> anyhow::Result<Vec<MergeSet>> {
     for mut group in sets {
         let name = group[0].manifest.name.clone();
         let total = group[0].manifest.total_cells;
-        group.sort_by_key(|s| s.manifest.shard.index);
+        group.sort_by_key(|s| s.manifest.shard.index());
         out.push(MergeSet { name, shards: group, total_cells: total });
     }
     out.sort_by(|a, b| a.name.cmp(&b.name));
@@ -119,13 +119,16 @@ pub fn discover(dirs: &[PathBuf]) -> anyhow::Result<Vec<MergeSet>> {
 }
 
 /// Check a discovered set is mergeable: consistent shard count/grid size,
-/// every shard `0..N` present exactly once, every shard complete.
+/// every shard `0..N` present exactly once, every shard complete, and —
+/// for range shards — the ranges contiguously covering `0..total_cells`
+/// (mixing round-robin and range shards in one set is an error: their id
+/// partitions can't be cross-checked against each other).
 fn validate_set(set: &MergeSet) -> anyhow::Result<()> {
     let name = &set.name;
-    let count = set.shards[0].manifest.shard.count;
+    let count = set.shards[0].manifest.shard.count();
     for s in &set.shards {
         anyhow::ensure!(
-            s.manifest.shard.count == count && s.manifest.total_cells == set.total_cells,
+            s.manifest.shard.count() == count && s.manifest.total_cells == set.total_cells,
             "sweep {name}: shard manifests disagree on the shard count or grid size"
         );
         anyhow::ensure!(
@@ -140,10 +143,42 @@ fn validate_set(set: &MergeSet) -> anyhow::Result<()> {
     }
     anyhow::ensure!(
         set.shards.len() == count
-            && set.shards.iter().enumerate().all(|(i, s)| s.manifest.shard.index == i),
+            && set.shards.iter().enumerate().all(|(i, s)| s.manifest.shard.index() == i),
         "sweep {name}: expected shards 0..{count}, found {:?}",
         set.shards.iter().map(|s| s.manifest.shard.to_string()).collect::<Vec<_>>()
     );
+    let ranged = set
+        .shards
+        .iter()
+        .filter(|s| matches!(s.manifest.shard, Shard::Range { .. }))
+        .count();
+    if ranged > 0 {
+        anyhow::ensure!(
+            ranged == set.shards.len(),
+            "sweep {name}: mixes range and round-robin shards — re-run the stragglers \
+             with one sharding scheme"
+        );
+        // shards are index-sorted, so contiguity is a single pass:
+        // shard 0 starts at 0, each starts where the previous ended, the
+        // last ends at the grid size
+        let mut expect = 0usize;
+        for s in &set.shards {
+            let Shard::Range { start, end, .. } = s.manifest.shard else { unreachable!() };
+            anyhow::ensure!(
+                start == expect,
+                "sweep {name}: shard {} starts at cell {start}, expected {expect} — \
+                 the ranges do not contiguously cover the grid",
+                s.manifest.shard
+            );
+            expect = end;
+        }
+        anyhow::ensure!(
+            expect == set.total_cells,
+            "sweep {name}: range shards cover cells 0..{expect} but the grid has {} — \
+             a trailing range is missing",
+            set.total_cells
+        );
+    }
     Ok(())
 }
 

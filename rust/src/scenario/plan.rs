@@ -10,9 +10,14 @@
 //!   the cell's RNG streams, orders every output stream, and is what
 //!   `hfl merge` keys on, so any partition of the id space reassembles
 //!   into exactly the single-host bytes.
-//! * **[`Shard`]** — an `i/N` selector. A shard owns the cells with
-//!   `idx % N == i` (round-robin, so H/seed axes spread evenly across
-//!   hosts), in ascending id order.
+//! * **[`Shard`]** — a selector over the id space, in two shapes. The
+//!   round-robin `i/N` ([`Shard::Mod`]) owns the cells with
+//!   `idx % N == i`, so H/seed axes spread evenly across equal hosts.
+//!   The contiguous `i/N:a-b` ([`Shard::Range`]) owns `a..b` (end
+//!   exclusive) — what `hfl fleet` hands heterogeneous hosts after a
+//!   weighted split ([`Shard::split_weighted`]). Both enumerate in
+//!   ascending id order, and any partition of the id space (all-Mod or
+//!   a contiguous all-Range cover) merges back to single-host bytes.
 //! * **Streaming + reorder buffer** — cells stream to a
 //!   [`RecordSink`](super::sink::RecordSink) as they finish instead of
 //!   accumulating in memory; a reorder buffer delays out-of-order
@@ -54,42 +59,157 @@ use super::sweep::{run_cell, CellResult, SweepResult};
 /// and identical on every host that loads the same spec.
 pub type CellId = usize;
 
-/// An `i/N` shard selector over the cell id space.
+/// A shard selector over the cell id space.
+///
+/// The `Display`/[`Shard::parse`] grammar round-trips through manifests:
+/// `"i/N"` is round-robin, `"i/N:a-b"` is the contiguous range `a..b`
+/// (end exclusive). Pre-range manifests parse unchanged as [`Shard::Mod`].
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub struct Shard {
-    pub index: usize,
-    pub count: usize,
+pub enum Shard {
+    /// Round-robin `i/N`: owns the cells with `id % count == index`.
+    Mod { index: usize, count: usize },
+    /// Contiguous `i/N:a-b`: the `index`-th of `count` workers, owning
+    /// cell ids `start..end` (end exclusive; `start == end` is a valid
+    /// empty shard — a zero-weight host on a tiny grid). Produced by
+    /// [`Shard::split_weighted`] for heterogeneous fleet hosts.
+    Range { index: usize, count: usize, start: usize, end: usize },
 }
 
 impl Shard {
     /// The whole grid (`0/1`).
     pub fn solo() -> Shard {
-        Shard { index: 0, count: 1 }
+        Shard::Mod { index: 0, count: 1 }
     }
 
-    /// Parse `"i/N"` (e.g. `--shard 2/3`).
+    /// Parse `"i/N"` (e.g. `--shard 2/3`) or `"i/N:a-b"` (`--shard
+    /// 1/3:4-9` = the second of three workers, owning cells 4..9).
     pub fn parse(s: &str) -> anyhow::Result<Shard> {
-        let (i, n) = s
+        let (i, rest) = s
             .split_once('/')
-            .ok_or_else(|| anyhow::anyhow!("shard {s:?}: expected i/N (e.g. 0/3)"))?;
-        let index: usize =
-            i.trim().parse().map_err(|_| anyhow::anyhow!("shard {s:?}: bad index"))?;
-        let count: usize =
-            n.trim().parse().map_err(|_| anyhow::anyhow!("shard {s:?}: bad count"))?;
-        anyhow::ensure!(count >= 1, "shard {s:?}: count must be >= 1");
-        anyhow::ensure!(index < count, "shard {s:?}: index must be < count");
-        Ok(Shard { index, count })
+            .ok_or_else(|| anyhow::anyhow!("shard {s:?}: expected i/N or i/N:a-b (e.g. 0/3)"))?;
+        let index: usize = i
+            .trim()
+            .parse()
+            .map_err(|_| anyhow::anyhow!("shard {s:?}: bad index (want an integer)"))?;
+        let (n, range) = match rest.split_once(':') {
+            None => (rest, None),
+            Some((n, r)) => (n, Some(r)),
+        };
+        let count: usize = n
+            .trim()
+            .parse()
+            .map_err(|_| anyhow::anyhow!("shard {s:?}: bad count (want an integer)"))?;
+        anyhow::ensure!(count >= 1, "shard {s:?}: count must be >= 1 (0/1 is the whole grid)");
+        anyhow::ensure!(
+            index < count,
+            "shard {s:?}: index {index} out of range — must be < count {count}"
+        );
+        match range {
+            None => Ok(Shard::Mod { index, count }),
+            Some(r) => {
+                let (a, b) = r.split_once('-').ok_or_else(|| {
+                    anyhow::anyhow!("shard {s:?}: bad range — want a-b (end exclusive)")
+                })?;
+                let start: usize = a
+                    .trim()
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("shard {s:?}: bad range start"))?;
+                let end: usize = b
+                    .trim()
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("shard {s:?}: bad range end"))?;
+                anyhow::ensure!(
+                    start <= end,
+                    "shard {s:?}: range start {start} must be <= end {end}"
+                );
+                Ok(Shard::Range { index, count, start, end })
+            }
+        }
+    }
+
+    /// Worker position within its fleet/partition.
+    pub fn index(&self) -> usize {
+        match *self {
+            Shard::Mod { index, .. } | Shard::Range { index, .. } => index,
+        }
+    }
+
+    /// Workers in the fleet/partition this shard belongs to.
+    pub fn count(&self) -> usize {
+        match *self {
+            Shard::Mod { count, .. } | Shard::Range { count, .. } => count,
+        }
     }
 
     /// Does this shard own the cell with the given id?
     pub fn owns(&self, id: CellId) -> bool {
-        id % self.count == self.index
+        match *self {
+            Shard::Mod { index, count } => id % count == index,
+            Shard::Range { start, end, .. } => start <= id && id < end,
+        }
+    }
+
+    /// Output-stem suffix distinguishing real shards of the same sweep
+    /// (`""` for the whole grid, `"_shard1of3"` otherwise).
+    pub fn stem_suffix(&self) -> String {
+        if self.count() == 1 {
+            String::new()
+        } else {
+            format!("_shard{}of{}", self.index(), self.count())
+        }
+    }
+
+    /// Split `total` cells into `weights.len()` contiguous [`Shard::Range`]s
+    /// sized proportionally to the (positive) weights, covering `0..total`
+    /// exactly. Deterministic largest-remainder rounding: floor quotas
+    /// first, then one extra cell each to the largest fractional parts
+    /// (ties go to the lower index) — so heterogeneous hosts get cell
+    /// counts matching their weight with no cell lost or duplicated.
+    pub fn split_weighted(total: usize, weights: &[f64]) -> anyhow::Result<Vec<Shard>> {
+        anyhow::ensure!(!weights.is_empty(), "weighted split needs at least one worker");
+        for (i, w) in weights.iter().enumerate() {
+            anyhow::ensure!(
+                w.is_finite() && *w > 0.0,
+                "worker #{i}: weight {w} must be a positive finite number"
+            );
+        }
+        let sum: f64 = weights.iter().sum();
+        let count = weights.len();
+        let mut sizes = Vec::with_capacity(count);
+        let mut fracs = Vec::with_capacity(count);
+        let mut assigned = 0usize;
+        for w in weights {
+            let quota = total as f64 * w / sum;
+            let base = quota.floor() as usize;
+            sizes.push(base);
+            fracs.push(quota - base as f64);
+            assigned += base;
+        }
+        let mut order: Vec<usize> = (0..count).collect();
+        // largest fractional part first; ties break to the lower index
+        order.sort_by(|&a, &b| fracs[b].total_cmp(&fracs[a]).then(a.cmp(&b)));
+        for &i in order.iter().take(total - assigned) {
+            sizes[i] += 1;
+        }
+        let mut shards = Vec::with_capacity(count);
+        let mut start = 0usize;
+        for (index, size) in sizes.into_iter().enumerate() {
+            shards.push(Shard::Range { index, count, start, end: start + size });
+            start += size;
+        }
+        debug_assert_eq!(start, total);
+        Ok(shards)
     }
 }
 
 impl std::fmt::Display for Shard {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        write!(f, "{}/{}", self.index, self.count)
+        match *self {
+            Shard::Mod { index, count } => write!(f, "{index}/{count}"),
+            Shard::Range { index, count, start, end } => {
+                write!(f, "{index}/{count}:{start}-{end}")
+            }
+        }
     }
 }
 
@@ -187,6 +307,13 @@ impl SweepPlan {
         }
         let all = spec.cells();
         let total = all.len();
+        if let Shard::Range { end, .. } = shard {
+            anyhow::ensure!(
+                end <= total,
+                "shard {shard}: range end {end} exceeds the grid ({total} cells) — \
+                 was the range split computed for a different spec?"
+            );
+        }
         let cells: Vec<SweepCell> = all.into_iter().filter(|c| shard.owns(c.idx)).collect();
         Ok(SweepPlan { spec, shard, cells, total, ckpt_digest })
     }
@@ -205,11 +332,7 @@ impl SweepPlan {
     /// outputs of the same sweep never collide in a shared directory
     /// (`grid` → `grid_shard1of3`).
     pub fn output_stem(&self) -> String {
-        if self.shard.count == 1 {
-            self.spec.name.clone()
-        } else {
-            format!("{}_shard{}of{}", self.spec.name, self.shard.index, self.shard.count)
-        }
+        format!("{}{}", self.spec.name, self.shard.stem_suffix())
     }
 
     /// Shard-independent fingerprint of the result-defining spec fields —
@@ -783,14 +906,101 @@ mod tests {
     #[test]
     fn shard_parse_and_ownership() {
         let s = Shard::parse("1/3").unwrap();
-        assert_eq!(s, Shard { index: 1, count: 3 });
+        assert_eq!(s, Shard::Mod { index: 1, count: 3 });
         assert!(s.owns(1) && s.owns(4) && !s.owns(0) && !s.owns(2));
         assert_eq!(s.to_string(), "1/3");
-        assert!(Shard::parse("3/3").is_err());
-        assert!(Shard::parse("0/0").is_err());
         assert!(Shard::parse("2").is_err());
         assert!(Shard::parse("a/b").is_err());
         assert_eq!(Shard::solo(), Shard::parse("0/1").unwrap());
+    }
+
+    #[test]
+    fn shard_parse_rejects_out_of_range_with_clear_errors() {
+        let e = Shard::parse("3/3").unwrap_err().to_string();
+        assert!(e.contains("index 3 out of range"), "unhelpful error: {e}");
+        let e = Shard::parse("0/0").unwrap_err().to_string();
+        assert!(e.contains("count must be >= 1"), "unhelpful error: {e}");
+        let e = Shard::parse("5/2").unwrap_err().to_string();
+        assert!(e.contains("must be < count 2"), "unhelpful error: {e}");
+    }
+
+    #[test]
+    fn shard_range_parse_display_and_ownership() {
+        let s = Shard::parse("1/3:4-9").unwrap();
+        assert_eq!(s, Shard::Range { index: 1, count: 3, start: 4, end: 9 });
+        assert_eq!(s.to_string(), "1/3:4-9");
+        assert_eq!(Shard::parse(&s.to_string()).unwrap(), s, "Display/parse round-trip");
+        assert!(!s.owns(3) && s.owns(4) && s.owns(8) && !s.owns(9));
+        // empty range (zero cells for this worker) is valid
+        let empty = Shard::parse("2/3:9-9").unwrap();
+        assert!((0..20).all(|id| !empty.owns(id)));
+        // error paths of the range grammar
+        for bad in ["1/3:9-4", "1/3:4", "1/3:a-b", "1/3:4-", "3/3:0-4", "1/0:0-4"] {
+            assert!(Shard::parse(bad).is_err(), "{bad:?} should be rejected");
+        }
+        let e = Shard::parse("1/3:9-4").unwrap_err().to_string();
+        assert!(e.contains("start 9 must be <= end 4"), "unhelpful error: {e}");
+    }
+
+    #[test]
+    fn split_weighted_partitions_proportionally() {
+        // 2:1:1 over 12 cells → 6,3,3 contiguous
+        let s = Shard::split_weighted(12, &[2.0, 1.0, 1.0]).unwrap();
+        assert_eq!(
+            s,
+            vec![
+                Shard::Range { index: 0, count: 3, start: 0, end: 6 },
+                Shard::Range { index: 1, count: 3, start: 6, end: 9 },
+                Shard::Range { index: 2, count: 3, start: 9, end: 12 },
+            ]
+        );
+        // remainder goes to the largest fractional parts, ties to the
+        // lower index: equal weights over 10 cells → 4,3,3
+        let s = Shard::split_weighted(10, &[1.0, 1.0, 1.0]).unwrap();
+        let sizes: Vec<usize> = s
+            .iter()
+            .map(|sh| match sh {
+                Shard::Range { start, end, .. } => end - start,
+                _ => unreachable!(),
+            })
+            .collect();
+        assert_eq!(sizes, vec![4, 3, 3]);
+        // every id owned exactly once, any total/weights
+        for (total, weights) in
+            [(0usize, vec![1.0, 2.0]), (7, vec![0.5, 0.25]), (100, vec![3.0, 1.0, 2.0, 1.0])]
+        {
+            let shards = Shard::split_weighted(total, &weights).unwrap();
+            for id in 0..total {
+                assert_eq!(shards.iter().filter(|s| s.owns(id)).count(), 1, "id {id}");
+            }
+        }
+        // invalid weights fail loudly
+        assert!(Shard::split_weighted(4, &[]).is_err());
+        assert!(Shard::split_weighted(4, &[1.0, 0.0]).is_err());
+        assert!(Shard::split_weighted(4, &[1.0, -2.0]).is_err());
+        assert!(Shard::split_weighted(4, &[f64::NAN]).is_err());
+    }
+
+    #[test]
+    fn range_shards_plan_contiguous_cells() {
+        let spec = small_spec(); // 6 cells
+        let shards = Shard::split_weighted(6, &[2.0, 1.0]).unwrap();
+        let mut seen = vec![0usize; 6];
+        for sh in &shards {
+            let p = SweepPlan::sharded(spec.clone(), *sh).unwrap();
+            for c in p.cells() {
+                seen[c.idx] += 1;
+            }
+            // contiguity: the shard's cells are one dense id run
+            let ids: Vec<usize> = p.cells().iter().map(|c| c.idx).collect();
+            for w in ids.windows(2) {
+                assert_eq!(w[1], w[0] + 1);
+            }
+        }
+        assert!(seen.iter().all(|&n| n == 1), "{seen:?}");
+        // a range past the grid end is rejected at plan time
+        let bad = Shard::Range { index: 0, count: 1, start: 0, end: 7 };
+        assert!(SweepPlan::sharded(spec, bad).is_err());
     }
 
     #[test]
@@ -801,7 +1011,7 @@ mod tests {
         assert_eq!(full.total_cells(), 6);
         let mut seen = vec![0usize; full.total_cells()];
         for i in 0..3 {
-            let p = SweepPlan::sharded(spec.clone(), Shard { index: i, count: 3 }).unwrap();
+            let p = SweepPlan::sharded(spec.clone(), Shard::Mod { index: i, count: 3 }).unwrap();
             assert_eq!(p.total_cells(), 6);
             for c in p.cells() {
                 seen[c.idx] += 1;
@@ -818,7 +1028,7 @@ mod tests {
     fn fingerprint_tracks_grid_shape_not_shard() {
         let spec = small_spec();
         let a = SweepPlan::new(spec.clone()).unwrap();
-        let b = SweepPlan::sharded(spec.clone(), Shard { index: 1, count: 2 }).unwrap();
+        let b = SweepPlan::sharded(spec.clone(), Shard::Mod { index: 1, count: 2 }).unwrap();
         assert_eq!(a.fingerprint(), b.fingerprint(), "shard must not change the fingerprint");
         let mut other = spec.clone();
         other.seeds = 4;
@@ -876,7 +1086,7 @@ mod tests {
         let spec = small_spec();
         assert_eq!(SweepPlan::new(spec.clone()).unwrap().output_stem(), "plan_test");
         assert_eq!(
-            SweepPlan::sharded(spec, Shard { index: 2, count: 3 }).unwrap().output_stem(),
+            SweepPlan::sharded(spec, Shard::Mod { index: 2, count: 3 }).unwrap().output_stem(),
             "plan_test_shard2of3"
         );
     }

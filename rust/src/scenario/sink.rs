@@ -65,6 +65,18 @@ pub trait RecordSink {
     /// Flush and return a position cookie marking a consistent cut (file
     /// byte offsets for file sinks). Recorded in the shard manifest after
     /// every cell.
+    ///
+    /// **Flush-at-cell-boundary contract.** The runner calls this after
+    /// every `cell_done`, BEFORE appending the cell's manifest line — so a
+    /// durable sink must have pushed every byte of the cell to the OS by
+    /// the time `checkpoint` returns (the file sinks flush inside
+    /// `OffsetFile::position`). Two things depend on that ordering: a
+    /// `--resume` truncating to a recorded cookie never cuts a cell that
+    /// the manifest claims finished, and an external reader (`hfl top`)
+    /// that sees a manifest entry for cell N can read ALL of cell N's
+    /// bytes from the sink files — manifest progress never runs ahead of
+    /// sink contents. Regression-tested by `tests/fleet_tail.rs`
+    /// (`flush_precedes_manifest_record`).
     fn checkpoint(&mut self) -> anyhow::Result<Vec<u64>> {
         Ok(Vec::new())
     }

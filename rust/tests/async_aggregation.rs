@@ -111,7 +111,7 @@ fn async_sweep_is_byte_identical_across_threads_and_shards() {
     for i in (0..2usize).rev() {
         let p = SweepPlan::sharded(
             async_spec("asyncs", Some(AsyncCfg::default())),
-            Shard { index: i, count: 2 },
+            Shard::Mod { index: i, count: 2 },
         )
         .unwrap();
         run_plan(&p, &shard_dir, if i == 0 { 4 } else { 1 });

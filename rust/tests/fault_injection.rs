@@ -104,7 +104,7 @@ fn lossy_fault_traces_are_byte_identical_across_threads_and_shards() {
     // 2 shards run out of order, then merged
     let shard_dir = tmp("lossy_shards");
     for i in (0..2usize).rev() {
-        let p = SweepPlan::sharded(lossy_spec("lossy"), Shard { index: i, count: 2 }).unwrap();
+        let p = SweepPlan::sharded(lossy_spec("lossy"), Shard::Mod { index: i, count: 2 }).unwrap();
         run_plan(&p, &shard_dir, if i == 0 { 4 } else { 1 });
     }
     let merged_dir = tmp("lossy_merged");

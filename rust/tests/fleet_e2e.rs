@@ -1,0 +1,154 @@
+//! ISSUE 10 end-to-end: the REAL `hfl` binary running `hfl fleet` with
+//! local subprocess workers — one killed mid-run via `--abort-worker` —
+//! must re-dispatch, resume, and merge to bytes identical to a plain
+//! single-host `hfl sweep`; `hfl top --once` must render the finished
+//! sweep's progress and survive a torn JSONL tail.
+
+use std::path::{Path, PathBuf};
+use std::process::Command;
+
+fn hfl() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_hfl"))
+}
+
+fn tmp(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("hfl_fleete2e_{tag}_{}", std::process::id()));
+    std::fs::remove_dir_all(&d).ok();
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// Run `hfl` with args, assert success, return stdout.
+fn run(args: &[&str]) -> String {
+    let out = hfl().args(args).output().expect("failed to spawn hfl");
+    assert!(
+        out.status.success(),
+        "hfl {args:?} failed ({}):\n--- stdout ---\n{}\n--- stderr ---\n{}",
+        out.status,
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    String::from_utf8_lossy(&out.stdout).into_owned()
+}
+
+/// The tiny shaped grid both runs share: 2×2×1×1 = 4 cost-mode cells.
+const SHAPE: [&str; 14] = [
+    "grid",
+    "--mode",
+    "cost",
+    "--schedulers",
+    "fedavg,channel",
+    "--assigners",
+    "greedy,round-robin",
+    "--h-values",
+    "8",
+    "--seeds",
+    "1",
+    "--iters",
+    "2",
+    "--sink",
+];
+
+const SUFFIXES: [&str; 4] = [".csv", "_summary.csv", ".jsonl", "_summary.jsonl"];
+
+fn read(dir: &Path, suffix: &str) -> Vec<u8> {
+    let p = dir.join(format!("sweep_grid{suffix}"));
+    std::fs::read(&p).unwrap_or_else(|e| panic!("missing {}: {e}", p.display()))
+}
+
+#[test]
+fn fleet_with_killed_worker_matches_single_host_and_top_renders_it() {
+    // 1. single-host reference
+    let single = tmp("single");
+    let mut args = vec!["sweep"];
+    args.extend(SHAPE);
+    args.extend(["csv,jsonl", "--out", single.to_str().unwrap()]);
+    run(&args);
+
+    // 2. three local workers; worker 0 exits cleanly after 1 of its 2
+    //    cells on the first attempt → death by incomplete manifest →
+    //    re-dispatch with --resume
+    let fdir = tmp("fleet");
+    let mut args = vec!["fleet"];
+    args.extend(SHAPE);
+    args.extend([
+        "csv,jsonl",
+        "--out",
+        fdir.to_str().unwrap(),
+        "--workers",
+        "local:3",
+        "--abort-worker",
+        "0:1",
+    ]);
+    let stdout = run(&args);
+    assert!(stdout.contains("re-dispatched local0"), "no re-dispatch in:\n{stdout}");
+    assert!(stdout.contains("fleet complete: 3 workers, 1 re-dispatches"), "{stdout}");
+    assert!(stdout.contains("merged sweep grid"), "{stdout}");
+
+    // 3. merged bytes == single-host bytes, all four files
+    for suffix in SUFFIXES {
+        assert_eq!(
+            read(&fdir, suffix),
+            read(&single, suffix),
+            "sweep_grid{suffix}: fleet output differs from single-host"
+        );
+    }
+
+    // 4. `hfl top --once` renders the finished sweep from its artifacts
+    // (positional dir first: a flag followed by a bare token would parse
+    // as an option value under the `--key value` grammar)
+    let top = run(&["top", fdir.to_str().unwrap(), "--once"]);
+    assert!(top.contains("sweep grid [cost]"), "{top}");
+    assert!(top.contains("cells 4/4"), "{top}");
+    assert!(top.contains("shard 0/3"), "{top}");
+    assert!(top.contains("shard 2/3"), "{top}");
+    assert!(top.contains("complete"), "{top}");
+    // per-cell metric lines from the tailed JSONL
+    assert!(top.contains("fedavg"), "{top}");
+    assert!(top.contains("round-robin"), "{top}");
+
+    // 5. a torn JSONL tail (mid-record, as a crashed writer leaves it)
+    //    must not break the next `hfl top` poll or leak into the frame
+    let torn = fdir.join("sweep_grid_shard1of3.jsonl");
+    let mut bytes = std::fs::read(&torn).unwrap();
+    bytes.extend_from_slice(b"{\"cell\":7,\"scheduler\":\"TORNMARKER");
+    std::fs::write(&torn, bytes).unwrap();
+    let top = run(&["top", fdir.to_str().unwrap(), "--once"]);
+    assert!(top.contains("cells 4/4"), "{top}");
+    assert!(!top.contains("TORNMARKER"), "torn tail leaked: {top}");
+
+    std::fs::remove_dir_all(&single).ok();
+    std::fs::remove_dir_all(&fdir).ok();
+}
+
+#[test]
+fn fleet_rejects_bad_worker_args() {
+    let dir = tmp("badargs");
+    let out = hfl()
+        .args(["fleet", "grid", "--out", dir.to_str().unwrap(), "--workers", "k8s:3"])
+        .output()
+        .expect("failed to spawn hfl");
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("local:K"), "unhelpful error: {err}");
+
+    let out = hfl()
+        .args(["fleet", "grid", "--out", dir.to_str().unwrap()])
+        .output()
+        .expect("failed to spawn hfl");
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(
+        err.contains("--workers") && err.contains("--workers-file"),
+        "unhelpful error: {err}"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn top_once_on_an_empty_dir_says_so() {
+    let dir = tmp("empty");
+    let top = run(&["top", dir.to_str().unwrap(), "--once"]);
+    assert!(top.contains("no sweep manifests found"), "{top}");
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -1,0 +1,291 @@
+//! ISSUE 10 tentpole acceptance (in-process): the fleet supervisor
+//! drives crash → re-dispatch → resume → merge to bytes identical to a
+//! single-host run, without spawning real subprocesses — workers run as
+//! threads behind a fake [`Launcher`], so the test exercises exactly the
+//! supervision logic (death detection, retry budget, resume argv).
+
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use hfl::fleet::{
+    supervise, FleetEvent, FleetOpts, Launcher, WorkerCmd, WorkerHandle, WorkerPlan,
+};
+use hfl::runtime::NativeBackend;
+use hfl::scenario::{
+    merge_dirs, CsvSink, JsonlSink, MultiSink, RecordSink, RunOpts, ScenarioSpec, Shard,
+    SweepMode, SweepPlan,
+};
+use hfl::policy::{assign, sched};
+use hfl::system::SystemParams;
+
+fn spec(name: &str) -> ScenarioSpec {
+    let mut system = SystemParams::default();
+    system.n_devices = 24;
+    ScenarioSpec {
+        name: name.into(),
+        mode: SweepMode::Cost,
+        schedulers: vec![sched("fedavg"), sched("channel")],
+        assigners: vec![assign("greedy"), assign("round-robin"), assign("geographic")],
+        h_values: vec![8, 12],
+        seeds: 1,
+        iters: 2,
+        seed: 31,
+        system,
+        ..ScenarioSpec::default()
+    }
+}
+
+fn tmp(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("hfl_fleetsup_{tag}_{}", std::process::id()));
+    std::fs::remove_dir_all(&d).ok();
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// Run one shard of `name` into `dir` exactly like `hfl sweep` would.
+fn run_shard(name: &str, dir: &Path, shard: Shard, resume: bool, abort_after: Option<usize>) {
+    let plan = SweepPlan::sharded(spec(name), shard).unwrap();
+    let stem = plan.output_stem();
+    let resuming = resume && dir.join(format!("sweep_{stem}.manifest")).exists();
+    let mut csv = if resuming {
+        CsvSink::append(dir, &stem).unwrap()
+    } else {
+        CsvSink::create(dir, &stem).unwrap()
+    };
+    let mut jsonl = if resuming {
+        JsonlSink::append(dir, &stem).unwrap()
+    } else {
+        JsonlSink::create(dir, &stem).unwrap()
+    };
+    let mut sink = MultiSink::new(vec![
+        &mut csv as &mut dyn RecordSink,
+        &mut jsonl as &mut dyn RecordSink,
+    ]);
+    let opts = RunOpts {
+        manifest: Some(dir.join(format!("sweep_{stem}.manifest"))),
+        resume,
+        abort_after,
+    };
+    let backend = NativeBackend::new();
+    plan.run_serial(Some(&backend), &mut sink, &opts).unwrap();
+}
+
+struct ThreadHandle(Option<std::thread::JoinHandle<i32>>);
+
+impl WorkerHandle for ThreadHandle {
+    fn poll(&mut self) -> anyhow::Result<Option<i32>> {
+        match &self.0 {
+            Some(h) if !h.is_finished() => Ok(None),
+            _ => Ok(Some(self.0.take().map_or(0, |h| h.join().unwrap_or(101)))),
+        }
+    }
+
+    fn kill(&mut self) {
+        // threads can't be killed; the fake workers all terminate on
+        // their own, so kill only needs to not block
+    }
+}
+
+/// Interpret the worker argv the way the real `hfl` binary would —
+/// `--shard`, `--resume`, `--abort-after` — and run the shard in a thread.
+struct InprocLauncher {
+    name: String,
+    dir: PathBuf,
+    /// When set, EVERY attempt aborts mid-shard (for retry-exhaustion).
+    abort_every_attempt: Option<usize>,
+}
+
+impl Launcher for InprocLauncher {
+    fn launch(&mut self, cmd: &WorkerCmd) -> anyhow::Result<Box<dyn WorkerHandle>> {
+        let argv = cmd.argv.clone();
+        let name = self.name.clone();
+        let dir = self.dir.clone();
+        let forced_abort = self.abort_every_attempt;
+        let h = std::thread::spawn(move || {
+            let grab = |key: &str| {
+                argv.iter()
+                    .position(|a| a == key)
+                    .map(|i| argv[i + 1].clone())
+            };
+            let shard = Shard::parse(&grab("--shard").expect("worker argv lost --shard"))
+                .expect("bad --shard in worker argv");
+            let resume = argv.iter().any(|a| a == "--resume");
+            let abort_after = forced_abort
+                .or_else(|| grab("--abort-after").map(|n| n.parse().unwrap()));
+            run_shard(&name, &dir, shard, resume, abort_after);
+            0
+        });
+        Ok(Box::new(ThreadHandle(Some(h))))
+    }
+
+    fn progress(&mut self, cmd: &WorkerCmd) -> Option<u64> {
+        std::fs::metadata(&cmd.manifest).map(|m| m.len()).ok()
+    }
+}
+
+fn plans_for(name: &str, dir: &Path, n: usize, abort_worker: Option<(usize, usize)>) -> Vec<WorkerPlan> {
+    (0..n)
+        .map(|i| {
+            let shard = Shard::Mod { index: i, count: n };
+            let stem = format!("{name}_shard{i}of{n}");
+            let base = vec![
+                "sweep".to_string(),
+                name.to_string(),
+                "--shard".to_string(),
+                shard.to_string(),
+            ];
+            let mut launch_argv = base.clone();
+            if let Some((wi, cells)) = abort_worker {
+                if wi == i {
+                    launch_argv.push("--abort-after".to_string());
+                    launch_argv.push(cells.to_string());
+                }
+            }
+            let mut resume_argv = base;
+            resume_argv.push("--resume".to_string());
+            let cmd = |argv: Vec<String>| WorkerCmd {
+                worker: format!("local{i}"),
+                argv,
+                host: None,
+                local_out: dir.to_path_buf(),
+                manifest: dir.join(format!("sweep_{stem}.manifest")),
+                log: dir.join(format!("fleet_local{i}.log")),
+            };
+            WorkerPlan { launch: cmd(launch_argv), resume: cmd(resume_argv), shard }
+        })
+        .collect()
+}
+
+const SUFFIXES: [&str; 4] = [".csv", "_summary.csv", ".jsonl", "_summary.jsonl"];
+
+#[test]
+fn crashed_worker_is_redispatched_and_merge_is_byte_identical() {
+    // single-host reference
+    let single = tmp("ref");
+    run_shard("fleet", &single, Shard::solo(), false, None);
+
+    // 3 fake workers; worker 1 exits cleanly after 1 cell on its first
+    // attempt (an incomplete manifest = death), then resumes
+    let fdir = tmp("fleet");
+    let plans = plans_for("fleet", &fdir, 3, Some((1, 1)));
+    let events: Arc<Mutex<Vec<FleetEvent>>> = Arc::new(Mutex::new(Vec::new()));
+    let sink = events.clone();
+    let mut launcher =
+        InprocLauncher { name: "fleet".into(), dir: fdir.clone(), abort_every_attempt: None };
+    let outcome = supervise(&plans, &mut launcher, &FleetOpts::default(), |e| {
+        sink.lock().unwrap().push(e.clone())
+    })
+    .unwrap();
+    assert_eq!(outcome.workers, 3);
+    assert_eq!(outcome.redispatches, 1, "exactly the aborted worker re-dispatches");
+
+    let events = events.lock().unwrap();
+    assert!(
+        events.iter().any(|e| matches!(e,
+            FleetEvent::Dead { worker, reason }
+                if worker == "local1" && reason.contains("incomplete manifest"))),
+        "{events:?}"
+    );
+    assert!(
+        events.iter().any(|e| matches!(e,
+            FleetEvent::Redispatched { worker, attempt: 1 } if worker == "local1")),
+        "{events:?}"
+    );
+    let finished = events
+        .iter()
+        .filter(|e| matches!(e, FleetEvent::Finished { .. }))
+        .count();
+    assert_eq!(finished, 3, "{events:?}");
+
+    // the merged bytes equal the single-host run despite the crash
+    let merged = tmp("merged");
+    let reports = merge_dirs(&[fdir.clone()], Some("fleet"), &merged).unwrap();
+    assert_eq!(reports.len(), 1);
+    for suffix in SUFFIXES {
+        let want = std::fs::read(single.join(format!("sweep_fleet{suffix}"))).unwrap();
+        let got = std::fs::read(merged.join(format!("sweep_fleet{suffix}"))).unwrap();
+        assert!(!want.is_empty());
+        assert_eq!(got, want, "sweep_fleet{suffix}: fleet bytes differ from single-host");
+    }
+    for d in [single, fdir, merged] {
+        std::fs::remove_dir_all(&d).ok();
+    }
+}
+
+#[test]
+fn retry_budget_exhaustion_is_a_clear_error() {
+    let fdir = tmp("exhaust");
+    let plans = plans_for("exhaust", &fdir, 2, None);
+    // every attempt of every worker aborts after 1 cell → never completes
+    let mut launcher = InprocLauncher {
+        name: "exhaust".into(),
+        dir: fdir.clone(),
+        abort_every_attempt: Some(1),
+    };
+    let opts = FleetOpts { retries: 1, ..FleetOpts::default() };
+    let mut deaths = 0usize;
+    let err = supervise(&plans, &mut launcher, &opts, |e| {
+        if matches!(e, FleetEvent::Dead { .. }) {
+            deaths += 1;
+        }
+    })
+    .unwrap_err()
+    .to_string();
+    assert!(err.contains("after 1 re-dispatches"), "{err}");
+    assert!(err.contains("see its log"), "{err}");
+    assert!(deaths >= 2, "initial death + the failed re-dispatch, got {deaths}");
+    std::fs::remove_dir_all(&fdir).ok();
+}
+
+#[test]
+fn weighted_range_fleet_merges_to_single_host_bytes() {
+    // heterogeneous hosts: contiguous ranges from a 2:1:1 weighted split
+    let single = tmp("w_ref");
+    run_shard("wfleet", &single, Shard::solo(), false, None);
+
+    let total = SweepPlan::new(spec("wfleet")).unwrap().total_cells();
+    let shards = Shard::split_weighted(total, &[2.0, 1.0, 1.0]).unwrap();
+    let fdir = tmp("w_fleet");
+    let plans: Vec<WorkerPlan> = shards
+        .iter()
+        .enumerate()
+        .map(|(i, &shard)| {
+            let argv = vec![
+                "sweep".to_string(),
+                "wfleet".to_string(),
+                "--shard".to_string(),
+                shard.to_string(),
+            ];
+            let mut resume_argv = argv.clone();
+            resume_argv.push("--resume".to_string());
+            let stem = format!("wfleet{}", shard.stem_suffix());
+            let cmd = |argv: Vec<String>| WorkerCmd {
+                worker: format!("host{i}"),
+                argv,
+                host: None,
+                local_out: fdir.clone(),
+                manifest: fdir.join(format!("sweep_{stem}.manifest")),
+                log: fdir.join(format!("fleet_host{i}.log")),
+            };
+            WorkerPlan { launch: cmd(argv), resume: cmd(resume_argv), shard }
+        })
+        .collect();
+    let mut launcher =
+        InprocLauncher { name: "wfleet".into(), dir: fdir.clone(), abort_every_attempt: None };
+    let outcome =
+        supervise(&plans, &mut launcher, &FleetOpts::default(), |_| {}).unwrap();
+    assert_eq!(outcome.redispatches, 0);
+
+    let merged = tmp("w_merged");
+    merge_dirs(&[fdir.clone()], Some("wfleet"), &merged).unwrap();
+    for suffix in SUFFIXES {
+        assert_eq!(
+            std::fs::read(merged.join(format!("sweep_wfleet{suffix}"))).unwrap(),
+            std::fs::read(single.join(format!("sweep_wfleet{suffix}"))).unwrap(),
+            "sweep_wfleet{suffix}: range-sharded fleet differs from single-host"
+        );
+    }
+    for d in [single, fdir, merged] {
+        std::fs::remove_dir_all(&d).ok();
+    }
+}

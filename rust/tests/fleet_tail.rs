@@ -1,0 +1,213 @@
+//! ISSUE 10 satellites: the torn-write-safe tailer against a REAL
+//! JsonlSink byte stream under adversarial chunk splits, and the
+//! flush-at-cell-boundary contract `hfl top` depends on.
+
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use hfl::fleet::Tailer;
+use hfl::runtime::NativeBackend;
+use hfl::scenario::{
+    CellSummary, JsonlSink, RecordSink, RunOpts, ScenarioSpec, SweepMode, SweepPlan,
+};
+use hfl::policy::{assign, sched};
+use hfl::system::SystemParams;
+use hfl::util::json::Json;
+
+fn spec(name: &str) -> ScenarioSpec {
+    let mut system = SystemParams::default();
+    system.n_devices = 24;
+    ScenarioSpec {
+        name: name.into(),
+        mode: SweepMode::Cost,
+        schedulers: vec![sched("fedavg"), sched("channel")],
+        assigners: vec![assign("greedy"), assign("round-robin")],
+        h_values: vec![8],
+        seeds: 2,
+        iters: 3,
+        seed: 31,
+        system,
+        ..ScenarioSpec::default()
+    }
+}
+
+fn tmp(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("hfl_fleettail_{tag}_{}", std::process::id()));
+    std::fs::remove_dir_all(&d).ok();
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// Run the spec once with a JsonlSink (+ manifest), return the rows file.
+fn write_jsonl_stream(dir: &Path, name: &str) -> PathBuf {
+    let plan = SweepPlan::new(spec(name)).unwrap();
+    let mut sink = JsonlSink::create(dir, name).unwrap();
+    let rows = sink.paths().0.to_path_buf();
+    let opts = RunOpts {
+        manifest: Some(dir.join(format!("sweep_{name}.manifest"))),
+        resume: false,
+        abort_after: None,
+    };
+    let backend = NativeBackend::new();
+    plan.run_serial(Some(&backend), &mut sink, &opts).unwrap();
+    rows
+}
+
+/// Property: replaying a real sink byte stream in ANY chunking — one byte
+/// at a time, odd sizes, splits landing mid-line and between cells — the
+/// tailer (a) never yields a partial line, (b) yields every line exactly
+/// once, in order, and (c) every yielded line parses as JSON.
+#[test]
+fn adversarial_chunk_splits_never_tear_lines() {
+    let dir = tmp("chunks");
+    let full = std::fs::read(&write_jsonl_stream(&dir, "torn")).unwrap();
+    assert!(full.len() > 200, "stream too small to exercise splits");
+    let want: Vec<String> =
+        String::from_utf8(full.clone()).unwrap().lines().map(str::to_string).collect();
+
+    // deterministic adversarial chunk schedule: fixed sizes cycling
+    // through primes (hits every alignment), plus the degenerate 1-byte
+    // writer
+    for sizes in [vec![1usize], vec![2, 3, 5, 7, 11], vec![13, 1, 97]] {
+        let path = dir.join(format!("replay_{}.jsonl", sizes.len()));
+        std::fs::write(&path, b"").unwrap();
+        let mut t = Tailer::new(&path);
+        let mut got: Vec<String> = Vec::new();
+        let mut f = std::fs::OpenOptions::new().append(true).open(&path).unwrap();
+        let mut i = 0usize;
+        let mut si = 0usize;
+        while i < full.len() {
+            let n = sizes[si % sizes.len()].min(full.len() - i);
+            si += 1;
+            f.write_all(&full[i..i + n]).unwrap();
+            f.flush().unwrap();
+            i += n;
+            let p = t.poll().unwrap();
+            assert!(!p.rewound);
+            for line in p.lines {
+                Json::parse(&line).unwrap_or_else(|e| {
+                    panic!("tailer yielded a torn/unparseable line {line:?}: {e}")
+                });
+                got.push(line);
+            }
+        }
+        assert_eq!(got, want, "chunk schedule {sizes:?} dropped or reordered lines");
+        assert_eq!(t.offset(), full.len() as u64, "offset must land on the final newline");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// A sink wrapper proving the flush-at-cell-boundary contract from the
+/// OUTSIDE: at every `checkpoint` (which the runner calls after each
+/// `cell_done`, before appending the manifest line), an independent
+/// reader must find the rows file flushed exactly to the cookie offset,
+/// newline-terminated, with every line parseable.
+struct FlushProbe {
+    inner: JsonlSink,
+    rows_path: PathBuf,
+    cells: usize,
+    checkpoints: usize,
+}
+
+impl RecordSink for FlushProbe {
+    fn iter_row(
+        &mut self,
+        cell: &hfl::scenario::SweepCell,
+        row: &hfl::scenario::SweepRow,
+    ) -> anyhow::Result<()> {
+        self.inner.iter_row(cell, row)
+    }
+
+    fn cell_done(&mut self, summary: &CellSummary) -> anyhow::Result<()> {
+        self.cells += 1;
+        self.inner.cell_done(summary)
+    }
+
+    fn checkpoint(&mut self) -> anyhow::Result<Vec<u64>> {
+        let cookie = self.inner.checkpoint()?;
+        self.checkpoints += 1;
+        // cookie = [tag, rows_offset, summary_offset]
+        let rows_off = cookie[1];
+        let on_disk = std::fs::read(&self.rows_path)?;
+        anyhow::ensure!(
+            on_disk.len() as u64 == rows_off,
+            "cell {}: disk has {} bytes but the cookie records {rows_off} — \
+             the sink did not flush before checkpointing",
+            self.cells,
+            on_disk.len()
+        );
+        anyhow::ensure!(
+            on_disk.ends_with(b"\n"),
+            "cell {}: flushed bytes end mid-line",
+            self.cells
+        );
+        for line in std::str::from_utf8(&on_disk)?.lines() {
+            Json::parse(line)
+                .map_err(|e| anyhow::anyhow!("unparseable flushed line {line:?}: {e}"))?;
+        }
+        Ok(cookie)
+    }
+
+    fn restore(&mut self, cookie: &[u64]) -> anyhow::Result<()> {
+        self.inner.restore(cookie)
+    }
+
+    fn finish(&mut self) -> anyhow::Result<()> {
+        self.inner.finish()
+    }
+}
+
+#[test]
+fn flush_precedes_manifest_record() {
+    let dir = tmp("flush");
+    let plan = SweepPlan::new(spec("flush")).unwrap();
+    let inner = JsonlSink::create(&dir, "flush").unwrap();
+    let rows_path = inner.paths().0.to_path_buf();
+    let mut probe = FlushProbe { inner, rows_path, cells: 0, checkpoints: 0 };
+    let opts = RunOpts {
+        manifest: Some(dir.join("sweep_flush.manifest")),
+        resume: false,
+        abort_after: None,
+    };
+    let backend = NativeBackend::new();
+    plan.run_serial(Some(&backend), &mut probe, &opts).unwrap();
+    assert_eq!(probe.cells, plan.total_cells());
+    // one checkpoint when the manifest opens + one per delivered cell —
+    // the contract is per-cell, not per-run
+    assert_eq!(probe.checkpoints, plan.total_cells() + 1);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// `hfl top`'s full read path over a half-written sweep: an incomplete
+/// manifest plus a torn JSONL tail must render progress, not error, and
+/// the torn trailing record must not be counted.
+#[test]
+fn top_session_tolerates_in_progress_shards() {
+    let dir = tmp("topsession");
+    write_jsonl_stream(&dir, "live");
+    // tear the rows file: append a deliberately unterminated record
+    let rows = dir.join("sweep_live.jsonl");
+    let mut f = std::fs::OpenOptions::new().append(true).open(&rows).unwrap();
+    f.write_all(b"{\"cell\":999,\"scheduler\":\"torn").unwrap();
+    drop(f);
+
+    let mut session = hfl::fleet::TopSession::new(vec![dir.clone()], None);
+    let views = session.refresh().unwrap();
+    assert_eq!(views.len(), 1);
+    let v = &views[0];
+    assert_eq!(v.name, "live");
+    assert_eq!(v.done, v.total_cells, "completed manifest must show all cells done");
+    assert!(!v.cells.contains_key(&999), "torn trailing record leaked into the view");
+    let frame = hfl::fleet::view::render(&views, None);
+    assert!(frame.contains(&format!("cells {}/{}", v.done, v.total_cells)), "{frame}");
+    assert!(!frame.contains("torn"), "{frame}");
+
+    // the torn tail completes later → the record appears on re-poll
+    let mut f = std::fs::OpenOptions::new().append(true).open(&rows).unwrap();
+    f.write_all(b"\",\"assigner\":\"x\",\"h\":8,\"seed\":0,\"iter\":0,\"objective\":1.0}\n")
+        .unwrap();
+    drop(f);
+    let views = session.refresh().unwrap();
+    assert!(views[0].cells.contains_key(&999), "completed record never surfaced");
+    std::fs::remove_dir_all(&dir).ok();
+}

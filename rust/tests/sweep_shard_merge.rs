@@ -97,7 +97,7 @@ fn any_shard_partition_merges_to_the_single_shot_bytes() {
         let shard_dir = tmp(&format!("shards{n}"));
         // shards run with different thread counts and out of order
         for i in (0..n).rev() {
-            let p = SweepPlan::sharded(spec("prop"), Shard { index: i, count: n }).unwrap();
+            let p = SweepPlan::sharded(spec("prop"), Shard::Mod { index: i, count: n }).unwrap();
             let threads = if i % 2 == 0 { 4 } else { 1 };
             run_plan(&p, &shard_dir, threads, false, None);
         }
@@ -129,7 +129,7 @@ fn interrupted_then_resumed_shard_merges_identically() {
 
     let shard_dir = tmp("res_shards");
     for i in 0..3usize {
-        let p = SweepPlan::sharded(spec("resume"), Shard { index: i, count: 3 }).unwrap();
+        let p = SweepPlan::sharded(spec("resume"), Shard::Mod { index: i, count: 3 }).unwrap();
         if i == 1 {
             // interrupt shard 1 mid-grid, then resume it (parallel)
             run_plan(&p, &shard_dir, 1, false, Some(3));
@@ -183,9 +183,9 @@ fn crash_tail_is_truncated_on_resume() {
 #[test]
 fn merge_refuses_incomplete_shards() {
     let dir = tmp("incomplete");
-    let p = SweepPlan::sharded(spec("part"), Shard { index: 0, count: 2 }).unwrap();
+    let p = SweepPlan::sharded(spec("part"), Shard::Mod { index: 0, count: 2 }).unwrap();
     run_plan(&p, &dir, 1, false, Some(2)); // aborted shard 0
-    let p1 = SweepPlan::sharded(spec("part"), Shard { index: 1, count: 2 }).unwrap();
+    let p1 = SweepPlan::sharded(spec("part"), Shard::Mod { index: 1, count: 2 }).unwrap();
     run_plan(&p1, &dir, 1, false, None);
     let out = tmp("incomplete_out");
     let err = merge_dirs(&[dir.clone()], None, &out).unwrap_err().to_string();
@@ -201,10 +201,10 @@ fn name_filtered_merge_ignores_unrelated_incomplete_sweeps() {
     // a finished one when --name selects the finished set
     let dir = tmp("mixed");
     for i in 0..2usize {
-        let p = SweepPlan::sharded(spec("done"), Shard { index: i, count: 2 }).unwrap();
+        let p = SweepPlan::sharded(spec("done"), Shard::Mod { index: i, count: 2 }).unwrap();
         run_plan(&p, &dir, 1, false, None);
     }
-    let p = SweepPlan::sharded(spec("wip"), Shard { index: 0, count: 2 }).unwrap();
+    let p = SweepPlan::sharded(spec("wip"), Shard::Mod { index: 0, count: 2 }).unwrap();
     run_plan(&p, &dir, 1, false, Some(1)); // aborted, incomplete
     let out = tmp("mixed_out");
     let reports = merge_dirs(&[dir.clone()], Some("done"), &out).unwrap();
@@ -213,6 +213,72 @@ fn name_filtered_merge_ignores_unrelated_incomplete_sweeps() {
     // unfiltered, the incomplete sweep still fails loudly
     let err = merge_dirs(&[dir.clone()], None, &out).unwrap_err().to_string();
     assert!(err.contains("wip") && err.contains("incomplete"), "{err}");
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::remove_dir_all(&out).ok();
+}
+
+#[test]
+fn range_partition_merges_to_the_single_shot_bytes() {
+    // the contiguous-range scheme `hfl fleet` hands weighted hosts: any
+    // contiguous cover of the id space — including an empty middle range —
+    // must merge to the single-shot bytes, exactly like round-robin
+    let single_dir = tmp("range_single");
+    let plan = SweepPlan::new(spec("range")).unwrap();
+    let total = plan.total_cells();
+    run_plan(&plan, &single_dir, 1, false, None);
+
+    let shard_dir = tmp("range_shards");
+    let cuts = [0, total / 3, total / 3, total]; // middle range is empty
+    for i in 0..3usize {
+        let shard =
+            Shard::Range { index: i, count: 3, start: cuts[i], end: cuts[i + 1] };
+        let p = SweepPlan::sharded(spec("range"), shard).unwrap();
+        run_plan(&p, &shard_dir, if i == 0 { 4 } else { 1 }, false, None);
+    }
+    let merged_dir = tmp("range_merged");
+    let reports = merge_dirs(&[shard_dir.clone()], Some("range"), &merged_dir).unwrap();
+    assert_eq!(reports[0].cells, total);
+    for suffix in SUFFIXES {
+        assert_eq!(
+            read(&merged_dir, "range", suffix),
+            read(&single_dir, "range", suffix),
+            "sweep_range{suffix}: range-shard merge differs from the single-shot run"
+        );
+    }
+    std::fs::remove_dir_all(&single_dir).ok();
+    std::fs::remove_dir_all(&shard_dir).ok();
+    std::fs::remove_dir_all(&merged_dir).ok();
+}
+
+#[test]
+fn merge_rejects_gapped_or_mixed_shard_schemes() {
+    // a non-contiguous range cover (gap between the shards) must fail
+    let dir = tmp("gap");
+    let total = SweepPlan::new(spec("gap")).unwrap().total_cells();
+    for (i, (s, e)) in [(0, total / 2 - 1), (total / 2, total)].into_iter().enumerate() {
+        let shard = Shard::Range { index: i, count: 2, start: s, end: e };
+        let p = SweepPlan::sharded(spec("gap"), shard).unwrap();
+        run_plan(&p, &dir, 1, false, None);
+    }
+    let out = tmp("gap_out");
+    let err = merge_dirs(&[dir.clone()], None, &out).unwrap_err().to_string();
+    assert!(err.contains("contiguously"), "unexpected error: {err}");
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::remove_dir_all(&out).ok();
+
+    // mixing round-robin and range shards in one set must fail loudly
+    let dir = tmp("mixed_scheme");
+    let p = SweepPlan::sharded(
+        spec("mix"),
+        Shard::Range { index: 0, count: 2, start: 0, end: total / 2 },
+    )
+    .unwrap();
+    run_plan(&p, &dir, 1, false, None);
+    let p = SweepPlan::sharded(spec("mix"), Shard::Mod { index: 1, count: 2 }).unwrap();
+    run_plan(&p, &dir, 1, false, None);
+    let out = tmp("mixed_scheme_out");
+    let err = merge_dirs(&[dir.clone()], None, &out).unwrap_err().to_string();
+    assert!(err.contains("mixes range and round-robin"), "unexpected error: {err}");
     std::fs::remove_dir_all(&dir).ok();
     std::fs::remove_dir_all(&out).ok();
 }
